@@ -1,0 +1,110 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + a manifest.
+
+Run once at build time (`make artifacts`); Rust loads the artifacts via
+`HloModuleProto::from_text_file` and never touches Python again.
+
+Why HLO text and not `lowered.compile().serialize()` / serialized protos:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+`xla` crate's bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The HLO text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps one tuple, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {
+        "uint8": "u8",
+        "uint32": "u32",
+        "int32": "i32",
+        "int64": "i64",
+        "float32": "f32",
+        "float64": "f64",
+    }[str(dt)]
+
+
+def emit(out_dir: str, cfg: model.ModelConfig = model.DEFAULT_CONFIG) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/1",
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "param_count": int(model.param_count(cfg)),
+            "param_shapes": [
+                {"name": n, "shape": list(s)} for n, s in model.param_shapes(cfg)
+            ],
+        },
+        "vision": {
+            "batch": model.VISION_BATCH,
+            "height": model.VISION_HW,
+            "width": model.VISION_HW,
+            "channels": model.VISION_C,
+        },
+        "nlp": {"batch": model.NLP_BATCH, "seq": model.NLP_SEQ},
+        "artifacts": {},
+    }
+    for name, (fn, args) in model.aot_entries(cfg).items():
+        lowered = fn.lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(lowered.out_info) if hasattr(lowered, "out_info") else None
+        inputs = [
+            {"dtype": _dtype_name(a.dtype), "shape": list(a.shape)} for a in args
+        ]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars, {len(inputs)} inputs -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored single-file path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # legacy Makefile target passed a single file path
+        out_dir = os.path.dirname(args.out) or "."
+    jax.config.update("jax_platforms", "cpu")
+    emit(out_dir)
+
+
+if __name__ == "__main__":
+    main()

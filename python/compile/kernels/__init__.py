@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the service's compute hot-spots.
+
+- augment: fused image augmentation (worker-side vision preprocessing).
+- ffn: fused transformer FFN block (client-side train step).
+- ref: pure-jnp oracles for both (correctness ground truth).
+"""
+
+from . import augment, ffn, ref  # noqa: F401

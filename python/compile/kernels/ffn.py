@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: fused transformer FFN block (matmul + GELU + matmul).
+
+This is the MXU-facing hot-spot of the L2 train step: the position-wise
+feed-forward block  y = gelu(x @ W1 + b1) @ W2 + b2.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid tiles the row
+dimension (batch*seq) into blocks of `row_block`; each grid step stages one
+(row_block, D) activation tile plus both weight matrices into VMEM and runs
+two MXU matmuls back to back, keeping the (row_block, F) intermediate
+entirely in VMEM — the intermediate never touches HBM, which is the fusion
+win over the unfused jnp version (saves 2*rows*F*4 bytes of HBM traffic per
+block). For the e2e model (D=128, F=512, row_block=128) the working set is
+
+    x tile   128*128*4 = 64 KB
+    W1       128*512*4 = 256 KB
+    W2       512*128*4 = 256 KB
+    h tile   128*512*4 = 256 KB
+    out tile 128*128*4 = 64 KB          total ~0.9 MB << 16 MB VMEM
+
+so double-buffering the x tile is trivially affordable, and both matmuls
+land on the 128x128 MXU with full tiles (D and row_block are multiples of
+128 by construction; F is a multiple of 128).
+
+`interpret=True` for CPU-PJRT executability; see augment.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    x = x_ref[...]
+    # First matmul + bias on the MXU; accumulate in f32.
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = h + b1_ref[...]
+    h = ref.gelu_ref(h)
+    # Second matmul + bias; (row_block, F) stays resident in VMEM.
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = y + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def ffn(x, w1, b1, w2, b2, row_block: int = 128):
+    """Fused FFN over row-tiled activations.
+
+    Args:
+      x:  (N, D) float32; N need not divide row_block (padded internally).
+      w1: (D, F), b1: (F,), w2: (F, D), b2: (D,).
+      row_block: rows per grid step (MXU-friendly multiple of 8).
+
+    Returns:
+      (N, D) float32, allclose to ref.ffn_ref.
+    """
+    n, d = x.shape
+    f = w1.shape[1]
+    rb = min(row_block, max(8, n))
+    n_pad = (n + rb - 1) // rb * rb
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0))) if n_pad != n else x
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=(n_pad // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
+        interpret=True,
+    )(xp, w1, b1, w2, b2)
+    return out[:n] if n_pad != n else out
+
+
+def _gelu_grad(z):
+    """d/dz of the tanh-approximation GELU (matches ref.gelu_ref)."""
+    k = 0.7978845608028654
+    u = k * (z + 0.044715 * z * z * z)
+    t = jnp.tanh(u)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * k * (1.0 + 3 * 0.044715 * z * z)
+
+
+@jax.custom_vjp
+def ffn_trainable(x, w1, b1, w2, b2):
+    """Differentiable wrapper: Pallas kernel forward, analytic backward.
+
+    Interpret-mode pallas_call has no reverse-mode rule, so the L2 train
+    step uses this wrapper: the forward pass runs the fused kernel, the
+    backward pass is closed-form jnp (it lowers into the same train-step
+    HLO artifact, so Rust still executes a single fused module).
+    """
+    return ffn(x, w1, b1, w2, b2)
+
+
+def _ffn_fwd(x, w1, b1, w2, b2):
+    return ffn(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd(saved, dy):
+    # Residuals may arrive as raw host arrays when the caller passed numpy;
+    # normalize to jnp so matmul works under every tracing mode.
+    x, w1, b1, w2, b2 = (jnp.asarray(t) for t in saved)
+    dy = jnp.asarray(dy)
+    z = x @ w1 + b1
+    h = ref.gelu_ref(z)
+    dw2 = h.T @ dy
+    db2 = jnp.sum(dy, axis=0)
+    dh = dy @ w2.T
+    dz = dh * _gelu_grad(z)
+    dw1 = x.T @ dz
+    db1 = jnp.sum(dz, axis=0)
+    dx = dz @ w1.T
+    return dx, dw1, db1, dw2, db2
+
+
+ffn_trainable.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+def vmem_bytes(row_block: int, d: int, f: int) -> int:
+    """Estimated VMEM working set per grid step (for DESIGN.md §Perf)."""
+    return 4 * (row_block * d + d * f + f + f * d + d + row_block * f + row_block * d)
+
+
+def mxu_flops(n: int, d: int, f: int) -> int:
+    """MXU FLOPs for one call (both matmuls)."""
+    return 2 * n * d * f * 2

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between kernel and
+oracle. The oracles are also what the L2 model *would* use if the L1 kernels
+did not exist, so they double as the baseline for the §Perf L1 comparison.
+"""
+
+import jax.numpy as jnp
+
+
+# ImageNet-style per-channel normalization constants, scaled to [0,1] input.
+NORM_MEAN = jnp.array([0.485, 0.456, 0.406], dtype=jnp.float32)
+NORM_STD = jnp.array([0.229, 0.224, 0.225], dtype=jnp.float32)
+
+
+def augment_ref(images_u8, flip, brightness, contrast):
+    """Fused image augmentation oracle.
+
+    Args:
+      images_u8: (B, H, W, C) uint8 raw pixels.
+      flip:       (B,) float32 in {0, 1}; 1 => horizontal flip.
+      brightness: (B,) float32 additive delta (post-normalization units).
+      contrast:   (B,) float32 multiplicative scale around the per-image mean.
+
+    Returns:
+      (B, H, W, C) float32 augmented, normalized images.
+    """
+    x = images_u8.astype(jnp.float32) / 255.0
+    c = images_u8.shape[-1]
+    mean = NORM_MEAN[:c]
+    std = NORM_STD[:c]
+    x = (x - mean) / std
+    # Horizontal flip (width axis), per sample.
+    flipped = x[:, :, ::-1, :]
+    f = flip[:, None, None, None]
+    x = f * flipped + (1.0 - f) * x
+    # Contrast around per-image mean, then brightness.
+    img_mean = jnp.mean(x, axis=(1, 2, 3), keepdims=True)
+    x = contrast[:, None, None, None] * (x - img_mean) + img_mean
+    x = x + brightness[:, None, None, None]
+    return x
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the Pallas kernel exactly)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused transformer FFN block oracle: gelu(x @ w1 + b1) @ w2 + b2.
+
+    Args:
+      x:  (N, D) float32 activations (N = batch*seq rows).
+      w1: (D, F), b1: (F,), w2: (F, D), b2: (D,).
+
+    Returns:
+      (N, D) float32.
+    """
+    h = gelu_ref(x @ w1 + b1)
+    return h @ w2 + b2

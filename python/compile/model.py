@@ -1,0 +1,265 @@
+"""L2: JAX compute graphs AOT-compiled for the Rust runtime.
+
+Three graphs, each lowered once by aot.py to HLO text and executed from
+Rust via PJRT (python never runs on the request path):
+
+  * preprocess_vision — the vision map-fn the service's *workers* run on
+    every batch. Calls the L1 fused augmentation Pallas kernel.
+  * preprocess_nlp    — the NLP featurization map-fn (clip + padding mask +
+    length stats) workers run for sequence workloads.
+  * train_step        — byte-level transformer-LM forward + backward + SGD,
+    the ML computation the service's *clients* (accelerator hosts) run.
+    The position-wise FFN is the L1 fused Pallas kernel via its custom-vjp
+    wrapper.
+  * params_init       — deterministic parameter initialization, so Rust can
+    bootstrap training without any Python at runtime.
+
+Scale substitution (DESIGN.md §2): the paper trains production models on
+TPU v4 pods; our e2e example must train for a few hundred steps on one CPU
+core, so the default config is a ~1.7M-parameter byte-level LM. The
+architecture (pre-LN transformer, causal MHA, tied embeddings) matches the
+shape of the paper's NLP workloads; the accelerator *demand rate* used in
+experiments is modeled separately (sim/models.rs), calibrated to the
+paper's reported batches/s.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import augment as augment_kernel
+from .kernels import ffn as ffn_kernel
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Byte-level transformer LM hyperparameters."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+# Fixed preprocessing shapes for the AOT artifacts (workers feed batches of
+# exactly these shapes; the Rust pipeline pads/crops to match).
+VISION_BATCH = 32
+VISION_HW = 32
+VISION_C = 3
+NLP_BATCH = 32
+NLP_SEQ = 128
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flat calling convention shared with
+    Rust. The manifest (aot.py) serializes this so the Rust runtime knows
+    how to slot literals into train_step."""
+    shapes = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"l{i}_"
+        shapes += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic init; returns the flat tuple of arrays."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", "b1", "b2")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in)
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (b,h,s,hd)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Logits for next-token prediction. tokens: (B, S) int32."""
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    x = embed[tokens] + pos[None, : tokens.shape[1]]
+    for _ in range(cfg.n_layers):
+        ln1_g, ln1_b = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_g, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+        x = x + _attention(_layer_norm(x, ln1_g, ln1_b), wq, wk, wv, wo, cfg)
+        h = _layer_norm(x, ln2_g, ln2_b)
+        b, s, d = h.shape
+        # L1 fused FFN kernel over (B*S, D) rows; custom-vjp so the train
+        # step's backward pass lowers into the same artifact.
+        hf = ffn_kernel.ffn_trainable(
+            h.reshape(b * s, d), w1, b1, w2, b2
+        ).reshape(b, s, d)
+        x = x + hf
+    lnf_g, lnf_b = next(it), next(it)
+    x = _layer_norm(x, lnf_g, lnf_b)
+    return x @ embed.T  # tied unembedding
+
+
+def loss_fn(params, tokens_io, cfg: ModelConfig):
+    """Mean next-token cross-entropy. tokens_io: (B, S+1) int32."""
+    inputs, targets = tokens_io[:, :-1], tokens_io[:, 1:]
+    logits = forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(params, tokens_io, lr, cfg: ModelConfig):
+    """One SGD step. Returns (new_params..., loss) as a flat tuple."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens_io, cfg)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing graphs (worker-side map fns)
+# ---------------------------------------------------------------------------
+
+
+def preprocess_vision(images_u8, flip, brightness, contrast):
+    """Vision worker map-fn: fused augmentation via the L1 Pallas kernel.
+
+    images_u8: (B, H, W, C) uint8; per-sample params (B,) float32.
+    Returns (B, H, W, C) float32.
+    """
+    return augment_kernel.augment(images_u8, flip, brightness, contrast)
+
+
+def preprocess_nlp(tokens_u32):
+    """NLP worker map-fn: clip to vocab, padding mask, unpadded lengths.
+
+    tokens_u32: (B, S) uint32, 0 = PAD.
+    Returns (tokens_i32 (B,S), mask_f32 (B,S), lengths_i32 (B,)).
+    """
+    toks = jnp.clip(tokens_u32.astype(jnp.int32), 0, 255)
+    mask = (toks > 0).astype(jnp.float32)
+    lengths = jnp.sum(toks > 0, axis=-1).astype(jnp.int32)
+    return toks, mask, lengths
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points for AOT lowering (fixed shapes)
+# ---------------------------------------------------------------------------
+
+
+def aot_entries(cfg: ModelConfig = DEFAULT_CONFIG):
+    """Returns {artifact_name: (jitted_fn, example_args)} for aot.py."""
+    shapes = param_shapes(cfg)
+    params_spec = tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes
+    )
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def train_step_flat(*args):
+        params = args[: len(shapes)]
+        tokens_io, lr = args[len(shapes)], args[len(shapes) + 1]
+        return train_step(params, tokens_io, lr, cfg)
+
+    def loss_flat(*args):
+        params = args[: len(shapes)]
+        tokens_io = args[len(shapes)]
+        return (loss_fn(params, tokens_io, cfg),)
+
+    def params_init_fn():
+        return init_params(cfg, seed=0)
+
+    vis_spec = (
+        jax.ShapeDtypeStruct((VISION_BATCH, VISION_HW, VISION_HW, VISION_C), jnp.uint8),
+        jax.ShapeDtypeStruct((VISION_BATCH,), jnp.float32),
+        jax.ShapeDtypeStruct((VISION_BATCH,), jnp.float32),
+        jax.ShapeDtypeStruct((VISION_BATCH,), jnp.float32),
+    )
+    nlp_spec = (jax.ShapeDtypeStruct((NLP_BATCH, NLP_SEQ), jnp.uint32),)
+
+    return {
+        "params_init": (jax.jit(params_init_fn), ()),
+        "train_step": (
+            jax.jit(train_step_flat),
+            params_spec + (tokens_spec, lr_spec),
+        ),
+        "eval_loss": (jax.jit(loss_flat), params_spec + (tokens_spec,)),
+        "preprocess_vision": (
+            jax.jit(lambda *a: (preprocess_vision(*a),)),
+            vis_spec,
+        ),
+        "preprocess_nlp": (jax.jit(preprocess_nlp), nlp_spec),
+    }

@@ -1,0 +1,81 @@
+"""AOT pipeline: artifacts emit, manifest is consistent, HLO text is sane."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = model.ModelConfig(
+        vocab=256, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=16, batch=2
+    )
+    manifest = aot.emit(out, cfg)
+    return out, manifest, cfg
+
+
+def test_all_artifact_files_exist(emitted):
+    out, manifest, _ = emitted
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) == meta["bytes"]
+
+
+def test_hlo_text_has_entry_computation(emitted):
+    out, manifest, _ = emitted
+    for meta in manifest["artifacts"].values():
+        text = open(os.path.join(out, meta["file"])).read()
+        assert "ENTRY" in text
+        assert "HloModule" in text
+
+
+def test_manifest_roundtrips_as_json(emitted):
+    out, manifest, _ = emitted
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert loaded == manifest
+
+
+def test_train_step_input_arity(emitted):
+    _, manifest, cfg = emitted
+    n_params = len(model.param_shapes(cfg))
+    # params + tokens + lr
+    assert len(manifest["artifacts"]["train_step"]["inputs"]) == n_params + 2
+
+
+def test_params_init_has_no_inputs(emitted):
+    _, manifest, _ = emitted
+    assert manifest["artifacts"]["params_init"]["inputs"] == []
+
+
+def test_manifest_declares_param_shapes_in_order(emitted):
+    _, manifest, cfg = emitted
+    declared = [
+        (e["name"], tuple(e["shape"])) for e in manifest["model"]["param_shapes"]
+    ]
+    assert declared == [(n, tuple(s)) for n, s in model.param_shapes(cfg)]
+
+
+def test_vision_artifact_shapes_match_constants(emitted):
+    _, manifest, _ = emitted
+    vis = manifest["artifacts"]["preprocess_vision"]["inputs"]
+    assert vis[0]["dtype"] == "u8"
+    assert vis[0]["shape"] == [
+        model.VISION_BATCH,
+        model.VISION_HW,
+        model.VISION_HW,
+        model.VISION_C,
+    ]
+
+
+def test_pallas_kernel_lowered_without_custom_calls(emitted):
+    """interpret=True must lower to plain HLO the CPU PJRT client can run —
+    a mosaic/tpu custom-call here would break the Rust runtime."""
+    out, manifest, _ = emitted
+    for name in ("preprocess_vision", "train_step"):
+        text = open(os.path.join(out, manifest["artifacts"][name]["file"])).read()
+        assert "mosaic" not in text.lower(), name

@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+hypothesis sweeps shapes and parameter ranges; every property asserts
+allclose against kernels/ref.py. This is the CORE correctness signal for
+the compute layer — if these pass, the HLO artifacts the Rust workers and
+clients execute are numerically trustworthy.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import augment, ffn, ref
+
+jax.config.update("jax_platforms", "cpu")
+
+SET = settings(deadline=None, max_examples=25, derandomize=True)
+
+
+def _imgs(rng, b, h, w, c):
+    return rng.integers(0, 256, (b, h, w, c), dtype=np.uint8)
+
+
+def _aug_params(rng, b):
+    flip = rng.integers(0, 2, b).astype(np.float32)
+    brightness = rng.normal(0.0, 0.2, b).astype(np.float32)
+    contrast = rng.normal(1.0, 0.2, b).astype(np.float32)
+    return flip, brightness, contrast
+
+
+# ---------------------------------------------------------------------------
+# augment
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    b=st.integers(1, 9),
+    h=st.sampled_from([1, 3, 4, 8, 16]),
+    w=st.sampled_from([1, 2, 5, 8, 16]),
+    c=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_augment_matches_ref(b, h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    img = _imgs(rng, b, h, w, c)
+    flip, br, ct = _aug_params(rng, b)
+    got = augment.augment(img, flip, br, ct)
+    want = ref.augment_ref(jnp.asarray(img), jnp.asarray(flip), jnp.asarray(br), jnp.asarray(ct))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_augment_flip_is_involution():
+    rng = np.random.default_rng(0)
+    img = _imgs(rng, 4, 8, 8, 3)
+    zeros = np.zeros(4, np.float32)
+    ones = np.ones(4, np.float32)
+    unit = np.ones(4, np.float32)
+    plain = augment.augment(img, zeros, zeros, unit)
+    flipped = augment.augment(img, ones, zeros, unit)
+    np.testing.assert_allclose(np.asarray(flipped)[:, :, ::-1, :], plain, rtol=1e-5, atol=1e-6)
+
+
+def test_augment_identity_params_is_pure_normalize():
+    rng = np.random.default_rng(1)
+    img = _imgs(rng, 2, 4, 4, 3)
+    zeros = np.zeros(2, np.float32)
+    unit = np.ones(2, np.float32)
+    got = augment.augment(img, zeros, zeros, unit)
+    x = img.astype(np.float32) / 255.0
+    want = (x - np.asarray(ref.NORM_MEAN)) / np.asarray(ref.NORM_STD)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_augment_brightness_shifts_mean():
+    rng = np.random.default_rng(2)
+    img = _imgs(rng, 2, 8, 8, 3)
+    zeros = np.zeros(2, np.float32)
+    unit = np.ones(2, np.float32)
+    base = np.asarray(augment.augment(img, zeros, zeros, unit))
+    shifted = np.asarray(augment.augment(img, zeros, 0.5 * unit, unit))
+    np.testing.assert_allclose(shifted, base + 0.5, rtol=1e-4, atol=1e-5)
+
+
+def test_augment_zero_contrast_collapses_to_mean():
+    rng = np.random.default_rng(3)
+    img = _imgs(rng, 1, 8, 8, 3)
+    zeros = np.zeros(1, np.float32)
+    got = np.asarray(augment.augment(img, zeros, zeros, zeros))
+    assert np.std(got) < 1e-5
+
+
+def test_augment_output_dtype_and_shape():
+    img = np.zeros((2, 4, 4, 3), np.uint8)
+    z = np.zeros(2, np.float32)
+    o = np.ones(2, np.float32)
+    out = augment.augment(img, z, z, o)
+    assert out.shape == img.shape and out.dtype == jnp.float32
+
+
+def test_augment_per_sample_params_are_independent():
+    rng = np.random.default_rng(4)
+    img = _imgs(rng, 2, 4, 4, 3)
+    # Sample 0 flipped, sample 1 not: sample 1 must equal the unflipped run.
+    flip = np.array([1.0, 0.0], np.float32)
+    z = np.zeros(2, np.float32)
+    o = np.ones(2, np.float32)
+    mixed = np.asarray(augment.augment(img, flip, z, o))
+    plain = np.asarray(augment.augment(img, z, z, o))
+    np.testing.assert_allclose(mixed[1], plain[1], rtol=1e-6)
+    assert not np.allclose(mixed[0], plain[0])
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    n=st.integers(1, 70),
+    d=st.sampled_from([4, 8, 16, 32]),
+    f=st.sampled_from([8, 16, 64]),
+    rb=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(n, d, f, rb, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w1 = rng.normal(0, 0.2, (d, f)).astype(np.float32)
+    b1 = rng.normal(0, 0.1, f).astype(np.float32)
+    w2 = rng.normal(0, 0.2, (f, d)).astype(np.float32)
+    b2 = rng.normal(0, 0.1, d).astype(np.float32)
+    got = ffn.ffn(x, w1, b1, w2, b2, row_block=rb)
+    want = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_ffn_gelu_grad_matches_autodiff():
+    x = jnp.linspace(-4, 4, 101)
+    got = ffn._gelu_grad(x)
+    want = jax.vmap(jax.grad(ref.gelu_ref))(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_ffn_trainable_grads_match_ref_grads():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, (16, 8)).astype(np.float32)
+    w1 = rng.normal(0, 0.3, (8, 16)).astype(np.float32)
+    b1 = rng.normal(0, 0.1, 16).astype(np.float32)
+    w2 = rng.normal(0, 0.3, (16, 8)).astype(np.float32)
+    b2 = rng.normal(0, 0.1, 8).astype(np.float32)
+
+    def loss_kernel(args):
+        return jnp.sum(ffn.ffn_trainable(*args) ** 2)
+
+    def loss_ref(args):
+        return jnp.sum(ref.ffn_ref(*args) ** 2)
+
+    args = (x, w1, b1, w2, b2)
+    gk = jax.grad(loss_kernel)(args)
+    gr = jax.grad(loss_ref)(args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-4)
+
+
+def test_ffn_row_padding_does_not_leak():
+    # n not a multiple of row_block: padded rows must not affect real rows.
+    rng = np.random.default_rng(8)
+    d, f = 8, 16
+    w1 = rng.normal(0, 0.2, (d, f)).astype(np.float32)
+    b1 = np.zeros(f, np.float32)
+    w2 = rng.normal(0, 0.2, (f, d)).astype(np.float32)
+    b2 = np.zeros(d, np.float32)
+    x = rng.normal(0, 1, (10, d)).astype(np.float32)
+    whole = np.asarray(ffn.ffn(x, w1, b1, w2, b2, row_block=8))
+    for i in range(10):
+        row = np.asarray(ffn.ffn(x[i : i + 1], w1, b1, w2, b2, row_block=8))
+        np.testing.assert_allclose(whole[i : i + 1], row, rtol=1e-4, atol=1e-5)
+
+
+def test_ffn_vmem_estimate_is_positive_and_monotone():
+    small = ffn.vmem_bytes(8, 16, 32)
+    big = ffn.vmem_bytes(128, 128, 512)
+    assert 0 < small < big
+    # e2e config must fit VMEM (~16 MB) with 2x double-buffer headroom.
+    assert ffn.vmem_bytes(128, 128, 512) * 2 < 16 * 1024 * 1024
+
+
+def test_augment_vmem_estimate_fits_vmem_for_imagenet_tile():
+    assert augment.vmem_bytes(224, 224, 3) * 2 < 16 * 1024 * 1024

@@ -1,0 +1,133 @@
+"""L2 model correctness: shapes, determinism, and trainability.
+
+The train step must actually learn (loss decreases on a repeated batch) —
+this is the same computation the Rust e2e example drives through PJRT, so
+if it learns here it learns there (identical HLO).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platforms", "cpu")
+
+CFG = model.ModelConfig(
+    vocab=256, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=16, batch=4
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def test_param_shapes_match_declared(params):
+    declared = model.param_shapes(CFG)
+    assert len(params) == len(declared)
+    for p, (name, shape) in zip(params, declared):
+        assert p.shape == shape, name
+
+
+def test_param_count_consistent(params):
+    assert model.param_count(CFG) == sum(int(np.prod(p.shape)) for p in params)
+
+
+def test_init_is_deterministic():
+    a = model.init_params(CFG, seed=0)
+    b = model.init_params(CFG, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_init_seed_changes_weights():
+    a = model.init_params(CFG, seed=0)
+    b = model.init_params(CFG, seed=1)
+    assert any(not np.allclose(x, y) for x, y in zip(a, b))
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((CFG.batch, CFG.seq_len), jnp.int32)
+    logits = model.forward(params, toks, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+def test_loss_is_near_uniform_at_init(params):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len + 1)).astype(np.int32)
+    loss = model.loss_fn(params, jnp.asarray(toks), CFG)
+    # CE of a near-uniform predictor over 256 classes is ~ln(256) = 5.55.
+    assert 4.5 < float(loss) < 6.5
+
+
+def test_causality_future_tokens_do_not_affect_logits(params):
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 256, (1, CFG.seq_len)).astype(np.int32)
+    b = a.copy()
+    b[0, -1] = (b[0, -1] + 17) % 256  # change only the last input token
+    la = model.forward(params, jnp.asarray(a), CFG)
+    lb = model.forward(params, jnp.asarray(b), CFG)
+    # All positions before the changed one are unchanged.
+    np.testing.assert_allclose(la[0, :-1], lb[0, :-1], rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_reduces_loss_on_fixed_batch(params):
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(
+        rng.integers(0, 64, (CFG.batch, CFG.seq_len + 1)).astype(np.int32)
+    )
+    step = jax.jit(lambda p, t: model.train_step(p, t, jnp.float32(0.1), CFG))
+    p = params
+    first = float(model.loss_fn(p, toks, CFG))
+    for _ in range(30):
+        out = step(p, toks)
+        p, loss = out[:-1], out[-1]
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_train_step_returns_all_params_plus_loss(params):
+    toks = jnp.zeros((CFG.batch, CFG.seq_len + 1), jnp.int32)
+    out = model.train_step(params, toks, jnp.float32(0.01), CFG)
+    assert len(out) == len(params) + 1
+    assert out[-1].shape == ()
+
+
+def test_train_step_zero_lr_is_identity(params):
+    toks = jnp.zeros((CFG.batch, CFG.seq_len + 1), jnp.int32)
+    out = model.train_step(params, toks, jnp.float32(0.0), CFG)
+    for p, q in zip(params, out[:-1]):
+        np.testing.assert_array_equal(p, q)
+
+
+def test_preprocess_nlp_mask_and_lengths():
+    toks = np.array([[3, 5, 0, 0], [1, 2, 3, 4]], np.uint32)
+    out_toks, mask, lengths = model.preprocess_nlp(jnp.asarray(toks))
+    np.testing.assert_array_equal(np.asarray(lengths), [2, 4])
+    np.testing.assert_array_equal(np.asarray(mask), [[1, 1, 0, 0], [1, 1, 1, 1]])
+    assert out_toks.dtype == jnp.int32
+
+
+def test_preprocess_vision_matches_kernel_oracle():
+    from compile.kernels import ref as kref
+
+    rng = np.random.default_rng(3)
+    img = rng.integers(0, 256, (4, 8, 8, 3), dtype=np.uint8)
+    flip = np.array([0, 1, 0, 1], np.float32)
+    br = np.zeros(4, np.float32)
+    ct = np.ones(4, np.float32)
+    got = model.preprocess_vision(img, flip, br, ct)
+    want = kref.augment_ref(jnp.asarray(img), jnp.asarray(flip), jnp.asarray(br), jnp.asarray(ct))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_aot_entries_cover_all_artifacts():
+    entries = model.aot_entries(CFG)
+    assert set(entries) == {
+        "params_init",
+        "train_step",
+        "eval_loss",
+        "preprocess_vision",
+        "preprocess_nlp",
+    }

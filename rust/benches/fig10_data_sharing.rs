@@ -1,0 +1,116 @@
+//! Fig. 10: normalized preprocessing cost of hyperparameter-tuning jobs
+//! under deployment modes A (shared + sharing), B (shared, no sharing),
+//! C (dedicated per job), for k in {1,2,4,8,16}.
+//!
+//! Paper: A flat at 1x (tested to 64 jobs); B fine to 4 jobs then job
+//! time grows 1.75x @ 8 and 3x @ 16; C cost grows linearly. Includes a
+//! live sliding-window-cache measurement backing mode A's flatness.
+
+use std::sync::Arc;
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::metrics::write_csv_rows;
+use tfdatasvc::orchestrator::Cell;
+use tfdatasvc::rpc::{call_typed, Pool};
+use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::proto::{worker_methods, ShardingPolicy, WorkerStatusReq, WorkerStatusResp};
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::sim::models::model;
+use tfdatasvc::sim::sharing::{mode_a, mode_b, mode_c, sequential_sharing_cost, SharingConfig};
+use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
+use tfdatasvc::storage::ObjectStore;
+
+fn main() {
+    let m = model("M4");
+    let cfg = SharingConfig::default();
+    println!("=== Fig 10: preprocessing cost by deployment mode ===");
+    println!("{:>4} {:>12} {:>12} {:>12} {:>14}", "k", "A(shared)", "B(no share)", "C(dedicated)", "B slowdown");
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 4, 8, 16] {
+        let a = mode_a(m, &cfg, k);
+        let b = mode_b(m, &cfg, k);
+        let c = mode_c(m, &cfg, k);
+        println!(
+            "{:>4} {:>12.2} {:>12.2} {:>12.2} {:>13.2}x",
+            k,
+            a.preprocessing_cost,
+            b.preprocessing_cost,
+            c.preprocessing_cost,
+            1.0 / b.per_job_throughput_frac
+        );
+        rows.push(vec![
+            k.to_string(),
+            format!("{:.3}", a.preprocessing_cost),
+            format!("{:.3}", b.preprocessing_cost),
+            format!("{:.3}", c.preprocessing_cost),
+        ]);
+    }
+    // Paper anchor points.
+    let b8 = mode_b(m, &cfg, 8);
+    let b16 = mode_b(m, &cfg, 16);
+    assert!((1.0 / b8.per_job_throughput_frac - 1.75).abs() < 0.3);
+    assert!((1.0 / b16.per_job_throughput_frac - 3.0).abs() < 0.35);
+    assert_eq!(mode_a(m, &cfg, 64).preprocessing_cost, 1.0, "A flat to 64 jobs");
+    println!(
+        "worst-case sequential sharing (cache 1% of dataset, k=16): {:.2}x of one job's cost (vs 16x unshared)",
+        sequential_sharing_cost(16, 0.01, 1.0)
+    );
+    write_csv_rows("out/fig10.csv", "k,mode_a_cost,mode_b_cost,mode_c_cost", &rows).unwrap();
+
+    // ---- Live backing measurement: k clients, one shared job ----
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 32, ..Default::default() },
+    );
+    let total = spec.total_samples;
+    let cell = Arc::new(Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap());
+    cell.set_worker_config_mutator(|c| c.cache_window = 4096);
+    cell.scale_to(1).unwrap();
+    let graph = PipelineBuilder::source_vision(spec).batch(8).build();
+    let k = 4;
+    let handles: Vec<_> = (0..k)
+        .map(|_| {
+            let d = cell.dispatcher_addr();
+            let g = graph.clone();
+            std::thread::spawn(move || {
+                let c = ServiceClient::new(&d);
+                let mut it = c
+                    .distribute(
+                        &g,
+                        ServiceClientConfig {
+                            sharding: ShardingPolicy::Dynamic,
+                            job_name: "fig10".into(),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                let mut n = 0;
+                while let Ok(Some(_)) = it.next() {
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+    let consumed: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let pool = Pool::with_defaults();
+    let status: WorkerStatusResp = call_typed(
+        &pool,
+        &cell.worker_addrs()[0],
+        worker_methods::WORKER_STATUS,
+        &WorkerStatusReq {},
+        std::time::Duration::from_secs(5),
+    )
+    .unwrap();
+    println!(
+        "live: {k} clients consumed {consumed} batches; worker produced {} (sharing factor {:.1}x)",
+        status.elements_produced,
+        consumed as f64 / status.elements_produced as f64
+    );
+    assert_eq!(status.elements_produced as usize, total / 8, "produced exactly once");
+    assert_eq!(consumed, k * total / 8, "served k times");
+    println!("fig10 OK -> out/fig10.csv");
+}

@@ -1,0 +1,58 @@
+//! Fig. 11: coordinated-reads speedups for the NLP models.
+//!
+//! Paper rows: M5 1.62x, M6 1.53x, M7 3.5x, M8 2.15x (avg 2.2x), from
+//! dynamic-sequence-length training with bucket boundaries at multiples
+//! of 64 (M5/M7) or 128 (M6/M8).
+
+use tfdatasvc::metrics::write_csv_rows;
+use tfdatasvc::sim::coord::{simulate_coordinated_reads, CoordSimConfig};
+use tfdatasvc::sim::models::model;
+
+fn main() {
+    println!("=== Fig 11: coordinated-reads speedup (NLP models) ===");
+    println!(
+        "{:<6} {:>6} {:>8} {:>9} {:>9} {:>10} {:>8}",
+        "model", "accel", "bucket", "pad un%", "pad co%", "speedup", "paper"
+    );
+    let mut rows = Vec::new();
+    let mut total = 0.0;
+    for name in ["M5", "M6", "M7", "M8"] {
+        let m = model(name);
+        let r = simulate_coordinated_reads(m, &CoordSimConfig::default());
+        println!(
+            "{:<6} {:>6} {:>8} {:>8.1} {:>8.1} {:>9.2}x {:>7.2}x",
+            name,
+            m.accelerators,
+            m.bucket_width,
+            r.uncoordinated_padding_fraction * 100.0,
+            r.coordinated_padding_fraction * 100.0,
+            r.speedup,
+            m.paper_speedup
+        );
+        let rel = (r.speedup - m.paper_speedup).abs() / m.paper_speedup;
+        assert!(rel < 0.3, "{name}: {:.2} vs paper {:.2}", r.speedup, m.paper_speedup);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", r.speedup),
+            format!("{:.3}", m.paper_speedup),
+            format!("{:.3}", r.uncoordinated_padding_fraction),
+            format!("{:.3}", r.coordinated_padding_fraction),
+        ]);
+        total += r.speedup;
+    }
+    let avg = total / 4.0;
+    println!("average speedup: {avg:.2}x (paper: 2.2x)");
+    assert!((avg - 2.2).abs() < 0.5);
+
+    // Ablation the paper implies: finer buckets help more.
+    let mut m = model("M7").clone();
+    let fine = simulate_coordinated_reads(&m, &CoordSimConfig::default()).speedup;
+    m.bucket_width = 256;
+    let coarse = simulate_coordinated_reads(&m, &CoordSimConfig::default()).speedup;
+    println!("ablation (M7): bucket 64 -> {fine:.2}x, bucket 256 -> {coarse:.2}x");
+    assert!(fine > coarse, "finer buckets must help more");
+
+    write_csv_rows("out/fig11.csv", "model,speedup,paper_speedup,pad_uncoord,pad_coord", &rows)
+        .unwrap();
+    println!("fig11 OK -> out/fig11.csv");
+}

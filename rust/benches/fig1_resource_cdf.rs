@@ -1,0 +1,47 @@
+//! Fig. 1: CDFs of normalized ML host CPU & RAM usage across the fleet.
+//!
+//! Paper: 73k colocated jobs over 24 h; heavy-tailed CDFs showing that no
+//! single CPU:RAM provisioning fits. Regenerated from the documented
+//! heavy-tailed fleet generator. Prints both CDFs and writes
+//! `out/fig1_{cpu,ram}.csv`.
+
+use tfdatasvc::metrics::write_csv;
+use tfdatasvc::sim::fleet::generate_fleet;
+use tfdatasvc::util::hist::{format_series, Samples};
+
+fn main() {
+    const N: usize = 73_000;
+    let jobs = generate_fleet(N, 0xf1_6001);
+    let mut cpu = Samples::from_vec(jobs.iter().map(|j| j.cpu).collect());
+    let mut ram = Samples::from_vec(jobs.iter().map(|j| j.ram).collect());
+
+    println!("=== Fig 1: fleet resource-usage CDFs ({N} jobs) ===");
+    for (name, s) in [("CPU", &mut cpu), ("RAM", &mut ram)] {
+        println!(
+            "{name}: p10 {:.4}  p50 {:.4}  p90 {:.4}  p99 {:.4}  (normalized to peak)",
+            s.percentile(10.0),
+            s.percentile(50.0),
+            s.percentile(90.0),
+            s.percentile(99.0)
+        );
+    }
+    let cpu_pts = cpu.cdf_points(50);
+    let ram_pts = ram.cdf_points(50);
+    print!("{}", format_series("CPU CDF (x = normalized usage, y = F(x))", &cpu_pts[..10]));
+    print!("{}", format_series("RAM CDF (x = normalized usage, y = F(x))", &ram_pts[..10]));
+
+    write_csv("out/fig1_cpu.csv", "normalized_cpu,cdf", &cpu_pts).unwrap();
+    write_csv("out/fig1_ram.csv", "normalized_ram,cdf", &ram_pts).unwrap();
+
+    // The figure's takeaway, asserted: any fixed provisioning point p
+    // leaves a large fraction under-provisioned or wasteful.
+    let p = cpu.percentile(50.0);
+    let under = 1.0 - cpu.cdf_at(p);
+    println!(
+        "takeaway: provisioning at the CPU median leaves {:.0}% of jobs short and the rest \
+         over-provisioned by up to {:.0}x",
+        under * 100.0,
+        p / cpu.percentile(10.0)
+    );
+    println!("fig1 OK -> out/fig1_cpu.csv, out/fig1_ram.csv");
+}

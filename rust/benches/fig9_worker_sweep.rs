@@ -1,0 +1,72 @@
+//! Fig. 9: M1 across worker pool sizes {8,16,32,64,128,256,512,640}:
+//! (a) job-time speedup vs colocated with the ideal line, (b) cost
+//! savings. Paper anchors: 8 workers -> 0.55x (slower than colocated!),
+//! 16 -> 1.14x, 64 -> 4.1x, 128 -> 8.6x, 512 -> 12.3x (ideal), 640 ->
+//! same time, slightly higher cost.
+
+use tfdatasvc::metrics::write_csv_rows;
+use tfdatasvc::sim::cost::CostModel;
+use tfdatasvc::sim::des::{simulate_job, JobSimConfig};
+use tfdatasvc::sim::models::model;
+
+fn main() {
+    let m = model("M1");
+    let colo = simulate_job(m, &JobSimConfig::default());
+    let ideal_speedup = m.ideal_bps / colo.throughput_bps;
+    let cm = CostModel::production_like();
+    let clients = m.accelerators as f64 / 8.0;
+    let t_colo = 10.0;
+    let colo_cost = cm.job_cost(t_colo, 0.0, 0.0, 0.0, clients, 96.0, 335.0, 8.0).total;
+
+    println!("=== Fig 9: M1 worker-count sweep (colocated: {:.2} b/s; ideal {ideal_speedup:.1}x) ===", colo.throughput_bps);
+    println!("{:>8} {:>10} {:>9} {:>11} {:>10} {:>10}", "workers", "b/s", "speedup", "worker util", "cost", "saving");
+    let mut rows = Vec::new();
+    let mut prev_bps = 0.0;
+    for n in [8usize, 16, 32, 64, 128, 256, 512, 640] {
+        let r = simulate_job(m, &JobSimConfig { n_workers: n, ..Default::default() });
+        let speedup = r.throughput_bps / colo.throughput_bps;
+        let t_dis = t_colo / speedup;
+        let cost = cm
+            .job_cost(
+                t_dis,
+                n as f64,
+                m.worker_cpu_cores * r.worker_utilization,
+                8.0,
+                clients,
+                96.0,
+                335.0,
+                8.0,
+            )
+            .total;
+        let saving = colo_cost / cost;
+        println!(
+            "{:>8} {:>10.2} {:>8.2}x {:>10.0}% {:>10.1} {:>9.2}x",
+            n,
+            r.throughput_bps,
+            speedup,
+            r.worker_utilization * 100.0,
+            cost,
+            saving
+        );
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.3}", r.throughput_bps),
+            format!("{speedup:.3}"),
+            format!("{saving:.3}"),
+        ]);
+        assert!(r.throughput_bps >= prev_bps - 1e-6, "throughput must be monotone");
+        prev_bps = r.throughput_bps;
+    }
+    // Shape assertions from the paper.
+    let at = |n: usize| {
+        simulate_job(m, &JobSimConfig { n_workers: n, ..Default::default() }).throughput_bps
+            / colo.throughput_bps
+    };
+    assert!(at(8) < 1.0, "8 workers slower than colocated");
+    assert!(at(16) > 1.0, "16 workers faster than colocated");
+    assert!(at(512) > 0.95 * ideal_speedup, "512 workers reach ideal");
+    let (s512, s640) = (at(512), at(640));
+    assert!((s640 - s512).abs() / s512 < 0.02, "over-provisioning does not change job time");
+    write_csv_rows("out/fig9.csv", "workers,bps,speedup,cost_saving", &rows).unwrap();
+    println!("fig9 OK -> out/fig9.csv");
+}

@@ -1,0 +1,168 @@
+//! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md).
+//!
+//! Measures the real components on this machine:
+//!   * wire encode/decode of a batch-sized Element,
+//!   * RPC round-trip latency and streaming throughput (loopback),
+//!   * pipeline executor throughput (map / parallel map / batch),
+//!   * sliding-window cache serve rate,
+//!   * end-to-end service GetElement throughput,
+//!   * PJRT preprocess + train-step latency (if artifacts exist).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tfdatasvc::data::element::{Element, Tensor};
+use tfdatasvc::data::exec::{ElemIter, Executor, ExecutorConfig};
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::orchestrator::Cell;
+use tfdatasvc::rpc::{Client, Server};
+use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::proto::ShardingPolicy;
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
+use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::wire::{Decode, Encode};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.1} µs/op {:>12.0} op/s", per * 1e6, 1.0 / per);
+    per
+}
+
+fn batch_element() -> Element {
+    // A 16x32x32x3 f32 batch + labels: ~196 KiB, typical demo batch.
+    Element::with_ids(
+        vec![
+            Tensor::from_f32(vec![16, 32, 32, 3], &vec![0.5; 16 * 32 * 32 * 3]),
+            Tensor::from_u32(vec![16], &[7; 16]),
+        ],
+        (0..16).collect(),
+    )
+}
+
+fn main() {
+    println!("=== micro_hotpath ===");
+
+    // ---- wire ----
+    let elem = batch_element();
+    let bytes = elem.to_bytes();
+    println!("element size on wire: {} KiB", bytes.len() / 1024);
+    bench("wire: encode batch element", 2000, || {
+        std::hint::black_box(elem.to_bytes());
+    });
+    bench("wire: decode batch element", 2000, || {
+        std::hint::black_box(Element::from_bytes(&bytes).unwrap());
+    });
+
+    // ---- rpc ----
+    let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+    let client = Client::connect(&srv.local_addr().to_string(), Duration::from_secs(2)).unwrap();
+    bench("rpc: 64 B round-trip (loopback)", 2000, || {
+        client.call(1, b"ping64bytes_ping64bytes_ping64bytes_ping64bytes_ping64.", Duration::from_secs(2)).unwrap();
+    });
+    let payload = vec![0u8; 1 << 20];
+    let per = bench("rpc: 1 MiB echo (loopback)", 300, || {
+        client.call(1, &payload, Duration::from_secs(5)).unwrap();
+    });
+    println!("{:<44} {:>10.2} Gbit/s", "rpc: implied loopback throughput", 2.0 * 8.0 / (per * 1e9) * 1e6 * (payload.len() as f64 / 1e6));
+
+    // ---- pipeline executor ----
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "bench",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 64, ..Default::default() },
+    );
+    let n_shards = spec.num_shards();
+    let mk_exec = || {
+        Executor::new(ExecutorConfig::local(store.clone(), UdfRegistry::with_builtins(), n_shards))
+    };
+    for (name, graph) in [
+        ("pipeline: source+batch(16)", PipelineBuilder::source_vision(spec.clone()).batch(16).build()),
+        (
+            "pipeline: +normalize+augment map x1",
+            PipelineBuilder::source_vision(spec.clone())
+                .map("vision.normalize+vision.augment")
+                .batch(16)
+                .build(),
+        ),
+        (
+            "pipeline: +normalize+augment pmap x8",
+            PipelineBuilder::source_vision(spec.clone())
+                .map_parallel("vision.normalize+vision.augment", 8)
+                .batch(16)
+                .build(),
+        ),
+    ] {
+        let ex = mk_exec();
+        let t0 = Instant::now();
+        let mut total = 0usize;
+        const REPS: usize = 8;
+        for _ in 0..REPS {
+            let mut it = ex.iterate(&graph).unwrap();
+            while let Ok(Some(e)) = it.next() {
+                total += e.ids.len();
+            }
+        }
+        let eps = total as f64 / t0.elapsed().as_secs_f64();
+        println!("{name:<44} {eps:>10.0} samples/s");
+    }
+
+    // ---- end-to-end service GetElement ----
+    let cell = Arc::new(
+        Cell::new(store.clone(), UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap(),
+    );
+    cell.scale_to(2).unwrap();
+    let graph = PipelineBuilder::source_vision(spec).repeat(0).batch(16).take(200).build();
+    let svc = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = svc
+        .distribute(&graph, ServiceClientConfig { sharding: ShardingPolicy::Off, ..Default::default() })
+        .unwrap();
+    let t0 = Instant::now();
+    let mut batches = 0;
+    let mut bytes_total = 0usize;
+    while let Ok(Some(e)) = it.next() {
+        batches += 1;
+        bytes_total += e.byte_len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>10.0} batches/s {:>8.0} MiB/s",
+        "service: e2e GetElement (2 workers)",
+        batches as f64 / dt,
+        bytes_total as f64 / dt / (1 << 20) as f64
+    );
+
+    // ---- PJRT (optional) ----
+    if let Ok(engine) = tfdatasvc::runtime::Engine::load(tfdatasvc::runtime::default_artifacts_dir()) {
+        let m = engine.manifest().clone();
+        engine.warm("preprocess_vision").unwrap();
+        let (b, h, c) = (m.vision_batch, m.vision_hw, m.vision_c);
+        let inputs = vec![
+            Tensor::from_u8(vec![b, h, h, c], vec![100; b * h * h * c]),
+            Tensor::from_f32(vec![b], &vec![0.0; b]),
+            Tensor::from_f32(vec![b], &vec![0.0; b]),
+            Tensor::from_f32(vec![b], &vec![1.0; b]),
+        ];
+        bench("pjrt: preprocess_vision (Pallas fused aug)", 100, || {
+            std::hint::black_box(engine.execute("preprocess_vision", inputs.clone()).unwrap());
+        });
+        let mut trainer = tfdatasvc::train::PjrtTrainStep::new(engine, 0.05).unwrap();
+        let toks: Vec<i32> = (0..m.model_batch * (m.model_seq + 1)).map(|i| (i % 250) as i32).collect();
+        let tok_t = Tensor::from_i32(vec![m.model_batch, m.model_seq + 1], &toks);
+        bench("pjrt: transformer train_step (fwd+bwd+sgd)", 50, || {
+            trainer.step(tok_t.clone()).unwrap();
+        });
+    } else {
+        println!("(artifacts not built; skipping PJRT benches)");
+    }
+    println!("micro_hotpath OK");
+}

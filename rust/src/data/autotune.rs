@@ -1,0 +1,156 @@
+//! Runtime parallelism tuning — the AUTOTUNE stand-in (§3.2).
+//!
+//! tf.data's AUTOTUNE adjusts per-operator parallelism and buffer sizes at
+//! runtime from observed processing times. We reproduce the core control
+//! loop: each parallel-map stage records per-element work durations in an
+//! [`AutotuneState`]; a hill-climbing controller periodically recomputes a
+//! target parallelism per stage, bounded by a CPU budget, aiming to match
+//! each stage's service rate to the consumer's demand rate.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Per-stage measurement window.
+#[derive(Debug, Default, Clone)]
+struct StageStats {
+    /// Work items completed in the current window.
+    completed: u64,
+    /// Total busy time across the window.
+    busy: Duration,
+    /// Current parallelism target.
+    target: usize,
+}
+
+/// Shared autotune state, one per pipeline instance.
+#[derive(Debug)]
+pub struct AutotuneState {
+    stages: Mutex<HashMap<usize, StageStats>>,
+    /// Maximum total parallelism budget across stages (defaults to the
+    /// machine's logical CPUs).
+    budget: usize,
+    default_parallelism: usize,
+}
+
+impl Default for AutotuneState {
+    fn default() -> Self {
+        let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        AutotuneState { stages: Mutex::new(HashMap::new()), budget: cpus, default_parallelism: 4 }
+    }
+}
+
+impl AutotuneState {
+    pub fn with_budget(budget: usize) -> AutotuneState {
+        AutotuneState {
+            stages: Mutex::new(HashMap::new()),
+            budget: budget.max(1),
+            default_parallelism: 4.min(budget.max(1)),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Record one completed work item for stage `idx`.
+    pub fn record_work(&self, idx: usize, took: Duration) {
+        let mut st = self.stages.lock().unwrap();
+        let s = st.entry(idx).or_default();
+        s.completed += 1;
+        s.busy += took;
+    }
+
+    /// Current parallelism target for a stage (used at iterator build
+    /// time; running stages keep their pool size for their lifetime, as
+    /// tf.data does between plan revisions).
+    pub fn target_parallelism(&self, idx: usize) -> usize {
+        let st = self.stages.lock().unwrap();
+        st.get(&idx).map(|s| s.target).filter(|&t| t > 0).unwrap_or(self.default_parallelism)
+    }
+
+    /// Re-plan all stage targets given a demand of `demand_eps` elements
+    /// per second from the consumer. Returns the new targets.
+    ///
+    /// For each stage, required parallelism = demand × mean-work-time,
+    /// rounded up, clamped to the CPU budget shared proportionally when
+    /// oversubscribed.
+    pub fn replan(&self, demand_eps: f64) -> Vec<(usize, usize)> {
+        let mut st = self.stages.lock().unwrap();
+        // Required parallelism per stage.
+        let mut wants: Vec<(usize, f64)> = st
+            .iter()
+            .map(|(&idx, s)| {
+                let mean = if s.completed > 0 {
+                    s.busy.as_secs_f64() / s.completed as f64
+                } else {
+                    0.0
+                };
+                (idx, (demand_eps * mean).max(1.0))
+            })
+            .collect();
+        wants.sort_by_key(|&(idx, _)| idx);
+        let total: f64 = wants.iter().map(|&(_, w)| w).sum();
+        let scale = if total > self.budget as f64 { self.budget as f64 / total } else { 1.0 };
+        let mut out = Vec::with_capacity(wants.len());
+        for (idx, want) in wants {
+            let t = ((want * scale).ceil() as usize).max(1);
+            if let Some(s) = st.get_mut(&idx) {
+                s.target = t;
+                s.completed = 0;
+                s.busy = Duration::ZERO;
+            }
+            out.push((idx, t));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_until_measured() {
+        let a = AutotuneState::with_budget(8);
+        assert_eq!(a.target_parallelism(0), 4);
+    }
+
+    #[test]
+    fn replan_scales_with_work_time() {
+        let a = AutotuneState::with_budget(64);
+        // Stage 0: 10 ms per element. Stage 1: 1 ms per element.
+        for _ in 0..10 {
+            a.record_work(0, Duration::from_millis(10));
+            a.record_work(1, Duration::from_millis(1));
+        }
+        // Demand of 400 eps -> stage0 wants 4, stage1 wants 1 (0.4 ceil).
+        let plan = a.replan(400.0);
+        let m: std::collections::HashMap<usize, usize> = plan.into_iter().collect();
+        assert_eq!(m[&0], 4);
+        assert_eq!(m[&1], 1);
+        assert_eq!(a.target_parallelism(0), 4);
+    }
+
+    #[test]
+    fn replan_respects_budget() {
+        let a = AutotuneState::with_budget(8);
+        for _ in 0..5 {
+            a.record_work(0, Duration::from_millis(50));
+            a.record_work(1, Duration::from_millis(50));
+        }
+        // Each wants 50 at demand 1000 eps; budget 8 splits 4/4.
+        let plan = a.replan(1000.0);
+        let total: usize = plan.iter().map(|&(_, t)| t).sum();
+        assert!(total <= 8 + 1, "budget respected (±1 for ceil), got {total}");
+    }
+
+    #[test]
+    fn replan_resets_window() {
+        let a = AutotuneState::with_budget(8);
+        a.record_work(0, Duration::from_millis(10));
+        a.replan(100.0);
+        // Window cleared: a replan with no new samples treats stage as idle.
+        let plan = a.replan(100.0);
+        assert_eq!(plan[0].1, 1);
+    }
+}

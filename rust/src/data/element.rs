@@ -1,0 +1,388 @@
+//! Tensors and elements: the values flowing through pipelines.
+//!
+//! An [`Element`] is a tuple of named-free tensors — one sample before
+//! batching, one batch after. Tensors carry dtype + shape + raw
+//! little-endian bytes, matching what the PJRT runtime consumes.
+
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+
+/// Supported dtypes (matches the artifact manifest's dtype names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    U8,
+    U32,
+    I32,
+    I64,
+    F32,
+}
+
+impl DType {
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::U32 | DType::I32 | DType::F32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::U8 => "u8",
+            DType::U32 => "u32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::F32 => "f32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "u8" => DType::U8,
+            "u32" => DType::U32,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "f32" => DType::F32,
+            _ => return None,
+        })
+    }
+
+    fn to_tag(self) -> u8 {
+        match self {
+            DType::U8 => 0,
+            DType::U32 => 1,
+            DType::I32 => 2,
+            DType::I64 => 3,
+            DType::F32 => 4,
+        }
+    }
+
+    fn from_tag(t: u8) -> WireResult<DType> {
+        Ok(match t {
+            0 => DType::U8,
+            1 => DType::U32,
+            2 => DType::I32,
+            3 => DType::I64,
+            4 => DType::F32,
+            tag => return Err(WireError::BadTag { tag, ty: "DType" }),
+        })
+    }
+}
+
+/// A dense tensor: dtype, shape, and little-endian packed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Tensor {
+        debug_assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>() * dtype.size_of(),
+            "tensor data length mismatch"
+        );
+        Tensor { dtype, shape, data }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    // ----- constructors -----
+
+    pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(vals.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, vals: &[i32]) -> Tensor {
+        assert_eq!(vals.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape, data }
+    }
+
+    pub fn from_u32(shape: Vec<usize>, vals: &[u32]) -> Tensor {
+        assert_eq!(vals.len(), shape.iter().product::<usize>());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::U32, shape, data }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, vals: Vec<u8>) -> Tensor {
+        assert_eq!(vals.len(), shape.iter().product::<usize>());
+        Tensor { dtype: DType::U8, shape, data: vals }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(vec![], &[v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(vec![], &[v])
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::from_u32(vec![], &[v])
+    }
+
+    // ----- typed views -----
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_u32(&self) -> Vec<u32> {
+        assert_eq!(self.dtype, DType::U32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn as_u8(&self) -> &[u8] {
+        assert_eq!(self.dtype, DType::U8);
+        &self.data
+    }
+
+    pub fn f32_at(&self, idx: usize) -> f32 {
+        assert_eq!(self.dtype, DType::F32);
+        f32::from_le_bytes(self.data[idx * 4..idx * 4 + 4].try_into().unwrap())
+    }
+
+    /// Stack `n` same-shaped tensors into one with a leading batch dim.
+    pub fn stack(tensors: &[Tensor]) -> Result<Tensor, String> {
+        let first = tensors.first().ok_or("cannot stack zero tensors")?;
+        let mut data = Vec::with_capacity(first.data.len() * tensors.len());
+        for t in tensors {
+            if t.dtype != first.dtype || t.shape != first.shape {
+                return Err(format!(
+                    "stack mismatch: {:?}{:?} vs {:?}{:?}",
+                    first.dtype, first.shape, t.dtype, t.shape
+                ));
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![tensors.len()];
+        shape.extend_from_slice(&first.shape);
+        Ok(Tensor { dtype: first.dtype, shape, data })
+    }
+
+    /// Stack variable-length rank-1 tensors, padding each to the longest
+    /// with `pad_byte`-filled elements (the padded-batch primitive).
+    pub fn stack_padded(tensors: &[Tensor], pad_value_le: &[u8]) -> Result<Tensor, String> {
+        let first = tensors.first().ok_or("cannot stack zero tensors")?;
+        let esz = first.dtype.size_of();
+        assert_eq!(pad_value_le.len(), esz);
+        let max_len = tensors.iter().map(|t| t.shape[0]).max().unwrap();
+        let mut data = Vec::with_capacity(tensors.len() * max_len * esz);
+        for t in tensors {
+            if t.dtype != first.dtype || t.rank() != 1 {
+                return Err("stack_padded wants same-dtype rank-1 tensors".into());
+            }
+            data.extend_from_slice(&t.data);
+            for _ in t.shape[0]..max_len {
+                data.extend_from_slice(pad_value_le);
+            }
+        }
+        Ok(Tensor { dtype: first.dtype, shape: vec![tensors.len(), max_len], data })
+    }
+}
+
+impl Encode for Tensor {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.dtype.to_tag());
+        w.put_u32(self.shape.len() as u32);
+        for d in &self.shape {
+            w.put_u64(*d as u64);
+        }
+        w.put_bytes(&self.data);
+    }
+}
+
+impl Decode for Tensor {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        let dtype = DType::from_tag(r.get_u8()?)?;
+        let rank = r.get_u32()? as usize;
+        r.check_count(rank, 8)?;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.get_u64()? as usize);
+        }
+        let data = r.get_bytes()?;
+        if data.len() != shape.iter().product::<usize>() * dtype.size_of() {
+            return Err(WireError::Other(format!(
+                "tensor bytes {} inconsistent with shape {:?} dtype {}",
+                data.len(),
+                shape,
+                dtype.name()
+            )));
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+}
+
+/// An element: a tuple of tensors (e.g. `(image, label)` or
+/// `(tokens, label)`), plus bookkeeping used by tests and the coordinated
+/// reads scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Element {
+    pub tensors: Vec<Tensor>,
+    /// Source-sample ids contributing to this element (1 before batching,
+    /// `batch_size` after). Lets tests verify visitation guarantees.
+    pub ids: Vec<u64>,
+    /// Sequence-length bucket assigned by `bucket_by_sequence_length`;
+    /// the coordinated-reads scheduler groups batches by this key.
+    pub bucket: Option<u32>,
+}
+
+impl Element {
+    pub fn new(tensors: Vec<Tensor>) -> Element {
+        Element { tensors, ids: vec![], bucket: None }
+    }
+
+    pub fn with_ids(tensors: Vec<Tensor>, ids: Vec<u64>) -> Element {
+        Element { tensors, ids, bucket: None }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Leading dimension of the first tensor, if any — the batch size for
+    /// batched elements.
+    pub fn batch_dim(&self) -> Option<usize> {
+        self.tensors.first().and_then(|t| t.shape.first().copied())
+    }
+}
+
+impl Encode for Element {
+    fn encode(&self, w: &mut Writer) {
+        crate::wire::encode_vec(&self.tensors, w);
+        self.ids.encode(w);
+        self.bucket.encode(w);
+    }
+}
+
+impl Decode for Element {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        let tensors = crate::wire::decode_vec(r)?;
+        let ids = Vec::<u64>::decode(r)?;
+        let bucket = Option::<u32>::decode(r)?;
+        Ok(Element { tensors, ids, bucket })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_constructors_and_views() {
+        let t = Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.num_elements(), 4);
+        assert_eq!(t.byte_len(), 16);
+        assert_eq!(t.as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.f32_at(2), 3.0);
+        let u = Tensor::from_u32(vec![3], &[7, 8, 9]);
+        assert_eq!(u.as_u32(), vec![7, 8, 9]);
+        let s = Tensor::scalar_i32(-5);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.as_i32(), vec![-5]);
+    }
+
+    #[test]
+    fn tensor_wire_roundtrip() {
+        for t in [
+            Tensor::from_f32(vec![2, 3], &[0.5; 6]),
+            Tensor::from_u8(vec![4], vec![1, 2, 3, 4]),
+            Tensor::scalar_u32(9),
+        ] {
+            let back = Tensor::from_bytes(&t.to_bytes()).unwrap();
+            assert_eq!(t, back);
+        }
+    }
+
+    #[test]
+    fn tensor_decode_validates_length() {
+        let t = Tensor::from_f32(vec![2], &[1.0, 2.0]);
+        let mut bytes = t.to_bytes();
+        // Corrupt the declared shape (first dim 2 -> 3).
+        bytes[5] = 3;
+        assert!(Tensor::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn stack_same_shape() {
+        let a = Tensor::from_f32(vec![2], &[1.0, 2.0]);
+        let b = Tensor::from_f32(vec![2], &[3.0, 4.0]);
+        let s = Tensor::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn stack_rejects_mismatch() {
+        let a = Tensor::from_f32(vec![2], &[1.0, 2.0]);
+        let b = Tensor::from_f32(vec![3], &[3.0, 4.0, 5.0]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn stack_padded_pads_to_longest() {
+        let a = Tensor::from_u32(vec![2], &[1, 2]);
+        let b = Tensor::from_u32(vec![4], &[3, 4, 5, 6]);
+        let s = Tensor::stack_padded(&[a, b], &0u32.to_le_bytes()).unwrap();
+        assert_eq!(s.shape, vec![2, 4]);
+        assert_eq!(s.as_u32(), vec![1, 2, 0, 0, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn element_roundtrip_with_ids() {
+        let e = Element::with_ids(
+            vec![Tensor::from_f32(vec![1], &[1.0]), Tensor::scalar_u32(3)],
+            vec![42],
+        );
+        let back = Element::from_bytes(&e.to_bytes()).unwrap();
+        assert_eq!(e, back);
+        assert_eq!(back.batch_dim(), Some(1));
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for d in [DType::U8, DType::U32, DType::I32, DType::I64, DType::F32] {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("f64"), None);
+    }
+}

@@ -1,0 +1,440 @@
+//! Serializable dataset graphs.
+//!
+//! A pipeline is a linear chain of [`Node`]s rooted at a source — the same
+//! shape tf.data graphs take after functionalization. Clients serialize a
+//! [`GraphDef`] and register it with the dispatcher; the dispatcher ships
+//! it to every worker (§3.1). UDFs are referenced *by name* and resolved
+//! against the worker's [`super::udf::UdfRegistry`].
+
+use crate::storage::dataset::DatasetSpec;
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+
+/// One pipeline stage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    /// Sharded vision dataset source (yields `(pixels u8[H,W,C], label u32)`).
+    SourceVision { spec: DatasetSpec },
+    /// Sharded text dataset source (yields `(tokens u32[len], label u32)`).
+    SourceText { spec: DatasetSpec },
+    /// Synthetic integer range source for tests (yields `(i64 scalar,)`).
+    SourceRange { n: u64 },
+    /// Apply a named UDF to each element. `parallelism` 0 means AUTOTUNE.
+    Map { udf: String, parallelism: u32 },
+    /// Keep elements for which the named predicate UDF returns nonzero.
+    Filter { udf: String },
+    /// Uniform shuffle over a sliding buffer.
+    Shuffle { buffer: u32, seed: u64 },
+    /// Fixed-size batch by stacking same-shaped tensors.
+    Batch { size: u32, drop_remainder: bool },
+    /// Batch of variable-length rank-1 tensors, padded to the longest
+    /// sample in the batch (the paper's NLP batching mode).
+    PaddedBatch { size: u32, drop_remainder: bool },
+    /// Background prefetch buffer.
+    Prefetch { n: u32 },
+    /// Repeat the upstream `n` times; 0 = indefinitely.
+    Repeat { n: u32 },
+    /// At most `n` elements.
+    Take { n: u64 },
+    /// Drop the first `n` elements.
+    Skip { n: u64 },
+    /// Materialize upstream on first pass, replay thereafter.
+    Cache,
+    /// Read `cycle` source shards round-robin (file-level interleave).
+    Interleave { cycle: u32 },
+    /// Group samples into per-length-bucket batches (Fig. 7 line 1).
+    /// Bucket `i` holds lengths in `(boundaries[i-1], boundaries[i]]`;
+    /// a final bucket catches everything above the last boundary.
+    BucketBySequenceLength { boundaries: Vec<u32>, batch_size: u32 },
+    /// Emit `window_size` consecutive elements sharing a bucket key
+    /// (Fig. 7 line 2; the subsequent `flat_map` is folded in).
+    GroupByWindow { window_size: u32 },
+    /// Identity marker kept for API fidelity with Fig. 7 line 3.
+    FlatMap,
+}
+
+impl Node {
+    pub fn is_source(&self) -> bool {
+        matches!(
+            self,
+            Node::SourceVision { .. } | Node::SourceText { .. } | Node::SourceRange { .. }
+        )
+    }
+
+    /// Short operator name for logs and metrics.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Node::SourceVision { .. } => "source_vision",
+            Node::SourceText { .. } => "source_text",
+            Node::SourceRange { .. } => "source_range",
+            Node::Map { .. } => "map",
+            Node::Filter { .. } => "filter",
+            Node::Shuffle { .. } => "shuffle",
+            Node::Batch { .. } => "batch",
+            Node::PaddedBatch { .. } => "padded_batch",
+            Node::Prefetch { .. } => "prefetch",
+            Node::Repeat { .. } => "repeat",
+            Node::Take { .. } => "take",
+            Node::Skip { .. } => "skip",
+            Node::Cache => "cache",
+            Node::Interleave { .. } => "interleave",
+            Node::BucketBySequenceLength { .. } => "bucket_by_sequence_length",
+            Node::GroupByWindow { .. } => "group_by_window",
+            Node::FlatMap => "flat_map",
+        }
+    }
+}
+
+impl Encode for Node {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Node::SourceVision { spec } => {
+                w.put_u8(0);
+                spec.encode(w);
+            }
+            Node::SourceText { spec } => {
+                w.put_u8(1);
+                spec.encode(w);
+            }
+            Node::SourceRange { n } => {
+                w.put_u8(2);
+                w.put_u64(*n);
+            }
+            Node::Map { udf, parallelism } => {
+                w.put_u8(3);
+                udf.encode(w);
+                w.put_u32(*parallelism);
+            }
+            Node::Filter { udf } => {
+                w.put_u8(4);
+                udf.encode(w);
+            }
+            Node::Shuffle { buffer, seed } => {
+                w.put_u8(5);
+                w.put_u32(*buffer);
+                w.put_u64(*seed);
+            }
+            Node::Batch { size, drop_remainder } => {
+                w.put_u8(6);
+                w.put_u32(*size);
+                drop_remainder.encode(w);
+            }
+            Node::PaddedBatch { size, drop_remainder } => {
+                w.put_u8(7);
+                w.put_u32(*size);
+                drop_remainder.encode(w);
+            }
+            Node::Prefetch { n } => {
+                w.put_u8(8);
+                w.put_u32(*n);
+            }
+            Node::Repeat { n } => {
+                w.put_u8(9);
+                w.put_u32(*n);
+            }
+            Node::Take { n } => {
+                w.put_u8(10);
+                w.put_u64(*n);
+            }
+            Node::Skip { n } => {
+                w.put_u8(11);
+                w.put_u64(*n);
+            }
+            Node::Cache => w.put_u8(12),
+            Node::Interleave { cycle } => {
+                w.put_u8(13);
+                w.put_u32(*cycle);
+            }
+            Node::BucketBySequenceLength { boundaries, batch_size } => {
+                w.put_u8(14);
+                boundaries.encode(w);
+                w.put_u32(*batch_size);
+            }
+            Node::GroupByWindow { window_size } => {
+                w.put_u8(15);
+                w.put_u32(*window_size);
+            }
+            Node::FlatMap => w.put_u8(16),
+        }
+    }
+}
+
+impl Decode for Node {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => Node::SourceVision { spec: DatasetSpec::decode(r)? },
+            1 => Node::SourceText { spec: DatasetSpec::decode(r)? },
+            2 => Node::SourceRange { n: r.get_u64()? },
+            3 => Node::Map { udf: String::decode(r)?, parallelism: r.get_u32()? },
+            4 => Node::Filter { udf: String::decode(r)? },
+            5 => Node::Shuffle { buffer: r.get_u32()?, seed: r.get_u64()? },
+            6 => Node::Batch { size: r.get_u32()?, drop_remainder: bool::decode(r)? },
+            7 => Node::PaddedBatch { size: r.get_u32()?, drop_remainder: bool::decode(r)? },
+            8 => Node::Prefetch { n: r.get_u32()? },
+            9 => Node::Repeat { n: r.get_u32()? },
+            10 => Node::Take { n: r.get_u64()? },
+            11 => Node::Skip { n: r.get_u64()? },
+            12 => Node::Cache,
+            13 => Node::Interleave { cycle: r.get_u32()? },
+            14 => Node::BucketBySequenceLength {
+                boundaries: Vec::<u32>::decode(r)?,
+                batch_size: r.get_u32()?,
+            },
+            15 => Node::GroupByWindow { window_size: r.get_u32()? },
+            16 => Node::FlatMap,
+            tag => return Err(WireError::BadTag { tag, ty: "Node" }),
+        })
+    }
+}
+
+/// A complete pipeline definition: a source followed by transformations.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GraphDef {
+    pub nodes: Vec<Node>,
+}
+
+impl Encode for GraphDef {
+    fn encode(&self, w: &mut Writer) {
+        crate::wire::encode_vec(&self.nodes, w);
+    }
+}
+
+impl Decode for GraphDef {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(GraphDef { nodes: crate::wire::decode_vec(r)? })
+    }
+}
+
+impl GraphDef {
+    /// Validate structural invariants: exactly one source, at the front.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.nodes.first() {
+            Some(n) if n.is_source() => {}
+            Some(n) => return Err(format!("first node must be a source, got {}", n.op_name())),
+            None => return Err("empty graph".into()),
+        }
+        if self.nodes.iter().skip(1).any(|n| n.is_source()) {
+            return Err("multiple sources".into());
+        }
+        for n in &self.nodes {
+            match n {
+                Node::Batch { size, .. } | Node::PaddedBatch { size, .. } if *size == 0 => {
+                    return Err("batch size 0".into())
+                }
+                Node::BucketBySequenceLength { boundaries, batch_size } => {
+                    if *batch_size == 0 {
+                        return Err("bucket batch size 0".into());
+                    }
+                    if boundaries.windows(2).any(|w| w[0] >= w[1]) {
+                        return Err("bucket boundaries must be strictly increasing".into());
+                    }
+                }
+                Node::GroupByWindow { window_size } if *window_size == 0 => {
+                    return Err("window size 0".into())
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Content fingerprint: jobs sharing a fingerprint can share ephemeral
+    /// data (§3.5 requires "identical input pipelines").
+    pub fn fingerprint(&self) -> u64 {
+        use sha2::{Digest, Sha256};
+        let bytes = self.to_bytes();
+        let digest = Sha256::digest(&bytes);
+        u64::from_le_bytes(digest[..8].try_into().unwrap())
+    }
+}
+
+/// Fluent builder mirroring the Python tf.data API (Fig. 4 / Fig. 7).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineBuilder {
+    nodes: Vec<Node>,
+}
+
+impl PipelineBuilder {
+    pub fn source_vision(spec: DatasetSpec) -> Self {
+        PipelineBuilder { nodes: vec![Node::SourceVision { spec }] }
+    }
+
+    pub fn source_text(spec: DatasetSpec) -> Self {
+        PipelineBuilder { nodes: vec![Node::SourceText { spec }] }
+    }
+
+    pub fn source_range(n: u64) -> Self {
+        PipelineBuilder { nodes: vec![Node::SourceRange { n }] }
+    }
+
+    pub fn map(mut self, udf: &str) -> Self {
+        self.nodes.push(Node::Map { udf: udf.into(), parallelism: 1 });
+        self
+    }
+
+    pub fn map_parallel(mut self, udf: &str, parallelism: u32) -> Self {
+        self.nodes.push(Node::Map { udf: udf.into(), parallelism });
+        self
+    }
+
+    /// AUTOTUNE parallelism.
+    pub fn map_autotune(mut self, udf: &str) -> Self {
+        self.nodes.push(Node::Map { udf: udf.into(), parallelism: 0 });
+        self
+    }
+
+    pub fn filter(mut self, udf: &str) -> Self {
+        self.nodes.push(Node::Filter { udf: udf.into() });
+        self
+    }
+
+    pub fn shuffle(mut self, buffer: u32, seed: u64) -> Self {
+        self.nodes.push(Node::Shuffle { buffer, seed });
+        self
+    }
+
+    pub fn batch(mut self, size: u32) -> Self {
+        self.nodes.push(Node::Batch { size, drop_remainder: true });
+        self
+    }
+
+    pub fn batch_partial(mut self, size: u32) -> Self {
+        self.nodes.push(Node::Batch { size, drop_remainder: false });
+        self
+    }
+
+    pub fn padded_batch(mut self, size: u32) -> Self {
+        self.nodes.push(Node::PaddedBatch { size, drop_remainder: true });
+        self
+    }
+
+    pub fn prefetch(mut self, n: u32) -> Self {
+        self.nodes.push(Node::Prefetch { n });
+        self
+    }
+
+    pub fn repeat(mut self, n: u32) -> Self {
+        self.nodes.push(Node::Repeat { n });
+        self
+    }
+
+    pub fn take(mut self, n: u64) -> Self {
+        self.nodes.push(Node::Take { n });
+        self
+    }
+
+    pub fn skip(mut self, n: u64) -> Self {
+        self.nodes.push(Node::Skip { n });
+        self
+    }
+
+    pub fn cache(mut self) -> Self {
+        self.nodes.push(Node::Cache);
+        self
+    }
+
+    pub fn interleave(mut self, cycle: u32) -> Self {
+        self.nodes.push(Node::Interleave { cycle });
+        self
+    }
+
+    pub fn bucket_by_sequence_length(mut self, boundaries: Vec<u32>, batch_size: u32) -> Self {
+        self.nodes.push(Node::BucketBySequenceLength { boundaries, batch_size });
+        self
+    }
+
+    pub fn group_by_window(mut self, window_size: u32) -> Self {
+        self.nodes.push(Node::GroupByWindow { window_size });
+        self
+    }
+
+    pub fn flat_map(mut self) -> Self {
+        self.nodes.push(Node::FlatMap);
+        self
+    }
+
+    pub fn build(self) -> GraphDef {
+        GraphDef { nodes: self.nodes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> DatasetSpec {
+        DatasetSpec {
+            prefix: "d".into(),
+            shards: vec!["d/shard-00000".into()],
+            samples_per_shard: 4,
+            total_samples: 4,
+        }
+    }
+
+    #[test]
+    fn builder_produces_valid_graph() {
+        let g = PipelineBuilder::source_vision(demo_spec())
+            .map_parallel("vision.normalize", 4)
+            .shuffle(128, 7)
+            .batch(32)
+            .prefetch(2)
+            .build();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 5);
+    }
+
+    #[test]
+    fn graph_wire_roundtrip_all_nodes() {
+        let g = GraphDef {
+            nodes: vec![
+                Node::SourceText { spec: demo_spec() },
+                Node::Map { udf: "a".into(), parallelism: 0 },
+                Node::Filter { udf: "p".into() },
+                Node::Shuffle { buffer: 16, seed: 3 },
+                Node::Batch { size: 4, drop_remainder: true },
+                Node::PaddedBatch { size: 8, drop_remainder: false },
+                Node::Prefetch { n: 2 },
+                Node::Repeat { n: 0 },
+                Node::Take { n: 100 },
+                Node::Skip { n: 5 },
+                Node::Cache,
+                Node::Interleave { cycle: 4 },
+                Node::BucketBySequenceLength { boundaries: vec![64, 128], batch_size: 16 },
+                Node::GroupByWindow { window_size: 2 },
+                Node::FlatMap,
+            ],
+        };
+        let back = GraphDef::from_bytes(&g.to_bytes()).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn validate_rejects_bad_graphs() {
+        assert!(GraphDef::default().validate().is_err());
+        let no_source = GraphDef { nodes: vec![Node::Cache] };
+        assert!(no_source.validate().is_err());
+        let two_sources = GraphDef {
+            nodes: vec![Node::SourceRange { n: 1 }, Node::SourceRange { n: 2 }],
+        };
+        assert!(two_sources.validate().is_err());
+        let zero_batch = GraphDef {
+            nodes: vec![Node::SourceRange { n: 1 }, Node::Batch { size: 0, drop_remainder: true }],
+        };
+        assert!(zero_batch.validate().is_err());
+        let bad_bounds = GraphDef {
+            nodes: vec![
+                Node::SourceRange { n: 1 },
+                Node::BucketBySequenceLength { boundaries: vec![128, 64], batch_size: 4 },
+            ],
+        };
+        assert!(bad_bounds.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_pipelines() {
+        let a = PipelineBuilder::source_range(10).batch(2).build();
+        let b = PipelineBuilder::source_range(10).batch(4).build();
+        let a2 = PipelineBuilder::source_range(10).batch(2).build();
+        assert_eq!(a.fingerprint(), a2.fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

@@ -1,0 +1,58 @@
+//! The tf.data-like input pipeline framework.
+//!
+//! tf.data service distributes *serialized pipeline graphs* from clients to
+//! workers (§3.1: "The dispatcher distributes a tf.data computation graph
+//! representing the input data pipeline to all available workers"), so the
+//! service is only meaningful on top of a real pipeline framework. This
+//! module provides one:
+//!
+//! * [`element`] — [`element::Tensor`] / [`element::Element`]: the unit of
+//!   data flowing through pipelines (a sample or a batch).
+//! * [`graph`] — the serializable dataset graph ([`graph::GraphDef`]) with
+//!   the standard operator set: source, map, filter, shuffle, batch,
+//!   padded-batch, prefetch, repeat, take, cache, interleave, plus the
+//!   NLP operators from Fig. 7 (`bucket_by_sequence_length`,
+//!   `group_by_window`, `flat_map`).
+//! * [`udf`] — user-defined function registry. UDFs are referenced by name
+//!   in the graph (they execute on whichever worker the graph lands on);
+//!   the registry holds native Rust UDFs and XLA-artifact UDFs backed by
+//!   the AOT-compiled Pallas/JAX preprocessing kernels.
+//! * [`exec`] — pull-based executor: builds an iterator tree from a graph,
+//!   with parallel map (worker thread pool) and background prefetch.
+//! * [`optimize`] — static graph rewrites (map fusion, dead transform
+//!   elimination, prefetch injection), mirroring tf.data's pre-execution
+//!   optimization passes (§3.2).
+//! * [`autotune`] — runtime parallelism tuning (the AUTOTUNE stand-in).
+
+pub mod autotune;
+pub mod element;
+pub mod exec;
+pub mod graph;
+pub mod optimize;
+pub mod udf;
+
+pub use element::{DType, Element, Tensor};
+pub use exec::{Executor, ExecutorConfig, SplitProvider};
+pub use graph::{GraphDef, Node};
+pub use udf::UdfRegistry;
+
+/// Pipeline-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum DataError {
+    #[error("storage: {0}")]
+    Storage(#[from] crate::storage::StorageError),
+    #[error("wire: {0}")]
+    Wire(#[from] crate::wire::WireError),
+    #[error("unknown udf: {0}")]
+    UnknownUdf(String),
+    #[error("udf {name} failed: {msg}")]
+    UdfFailed { name: String, msg: String },
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("invalid graph: {0}")]
+    InvalidGraph(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type DataResult<T> = Result<T, DataError>;

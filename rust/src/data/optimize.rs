@@ -1,0 +1,208 @@
+//! Static graph optimizations (§3.2).
+//!
+//! Before a client registers a pipeline with the dispatcher, the graph
+//! passes through rewrite stages mirroring tf.data's: dead transform
+//! elimination, map fusion, and transparent prefetch injection. Rewrites
+//! are semantics-preserving: the optimized graph yields the same element
+//! sequence (prefetch only overlaps execution; fusion composes UDFs in
+//! order).
+
+use super::graph::{GraphDef, Node};
+
+/// Which passes to run; `Default` enables everything.
+#[derive(Debug, Clone)]
+pub struct OptimizeOptions {
+    pub dead_elimination: bool,
+    pub map_fusion: bool,
+    pub prefetch_injection: bool,
+    /// Depth of the injected terminal prefetch buffer.
+    pub injected_prefetch_depth: u32,
+}
+
+impl Default for OptimizeOptions {
+    fn default() -> Self {
+        OptimizeOptions {
+            dead_elimination: true,
+            map_fusion: true,
+            prefetch_injection: true,
+            injected_prefetch_depth: 2,
+        }
+    }
+}
+
+/// Run all enabled passes until fixpoint, then inject prefetch.
+pub fn optimize(graph: &GraphDef, opts: &OptimizeOptions) -> GraphDef {
+    let mut nodes = graph.nodes.clone();
+    loop {
+        let before = nodes.len();
+        if opts.dead_elimination {
+            nodes = eliminate_dead(nodes);
+        }
+        if opts.map_fusion {
+            nodes = fuse_maps(nodes);
+        }
+        if nodes.len() == before {
+            break;
+        }
+    }
+    if opts.prefetch_injection {
+        nodes = inject_prefetch(nodes, opts.injected_prefetch_depth);
+    }
+    GraphDef { nodes }
+}
+
+/// Remove transformations that cannot affect the element stream:
+/// `repeat(1)`, `take(u64::MAX)`, `skip(0)`, `shuffle(buffer<=1)`,
+/// `prefetch(0)`, `map(identity)`, and `FlatMap` markers.
+fn eliminate_dead(nodes: Vec<Node>) -> Vec<Node> {
+    nodes
+        .into_iter()
+        .filter(|n| {
+            !matches!(
+                n,
+                Node::Repeat { n: 1 }
+                    | Node::Take { n: u64::MAX }
+                    | Node::Skip { n: 0 }
+                    | Node::Shuffle { buffer: 0..=1, .. }
+                    | Node::Prefetch { n: 0 }
+                    | Node::FlatMap
+            ) && !matches!(n, Node::Map { udf, .. } if udf == "identity")
+        })
+        .collect()
+}
+
+/// Fuse adjacent `map(a) . map(b)` into `map("a+b")`, keeping the max of
+/// the two parallelism settings (AUTOTUNE = 0 wins if either side asks).
+fn fuse_maps(nodes: Vec<Node>) -> Vec<Node> {
+    let mut out: Vec<Node> = Vec::with_capacity(nodes.len());
+    for n in nodes {
+        match (out.last_mut(), &n) {
+            (
+                Some(Node::Map { udf: prev_udf, parallelism: prev_p }),
+                Node::Map { udf, parallelism },
+            ) => {
+                *prev_udf = format!("{prev_udf}+{udf}");
+                *prev_p = if *prev_p == 0 || *parallelism == 0 {
+                    0
+                } else {
+                    (*prev_p).max(*parallelism)
+                };
+            }
+            _ => out.push(n),
+        }
+    }
+    out
+}
+
+/// Ensure the pipeline ends with a prefetch so downstream consumption
+/// overlaps production (tf.data injects the same).
+fn inject_prefetch(mut nodes: Vec<Node>, depth: u32) -> Vec<Node> {
+    match nodes.last() {
+        Some(Node::Prefetch { .. }) | None => nodes,
+        _ => {
+            nodes.push(Node::Prefetch { n: depth });
+            nodes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::exec::{Executor, ExecutorConfig};
+    use crate::data::graph::PipelineBuilder;
+    use crate::data::udf::UdfRegistry;
+    use crate::storage::ObjectStore;
+
+    #[test]
+    fn dead_nodes_removed() {
+        let g = GraphDef {
+            nodes: vec![
+                Node::SourceRange { n: 10 },
+                Node::Repeat { n: 1 },
+                Node::Take { n: u64::MAX },
+                Node::Skip { n: 0 },
+                Node::Shuffle { buffer: 1, seed: 0 },
+                Node::Map { udf: "identity".into(), parallelism: 1 },
+                Node::Prefetch { n: 0 },
+                Node::Batch { size: 2, drop_remainder: true },
+            ],
+        };
+        let o = optimize(&g, &OptimizeOptions { prefetch_injection: false, ..Default::default() });
+        assert_eq!(
+            o.nodes,
+            vec![Node::SourceRange { n: 10 }, Node::Batch { size: 2, drop_remainder: true }]
+        );
+    }
+
+    #[test]
+    fn maps_fuse_pairwise_and_transitively() {
+        let g = PipelineBuilder::source_range(4)
+            .map_parallel("a", 2)
+            .map_parallel("b", 8)
+            .map("c")
+            .build();
+        let o = optimize(&g, &OptimizeOptions { prefetch_injection: false, ..Default::default() });
+        assert_eq!(o.nodes.len(), 2);
+        assert_eq!(o.nodes[1], Node::Map { udf: "a+b+c".into(), parallelism: 8 });
+    }
+
+    #[test]
+    fn autotune_parallelism_dominates_fusion() {
+        let g = PipelineBuilder::source_range(4).map_parallel("a", 2).map_autotune("b").build();
+        let o = optimize(&g, &OptimizeOptions { prefetch_injection: false, ..Default::default() });
+        assert_eq!(o.nodes[1], Node::Map { udf: "a+b".into(), parallelism: 0 });
+    }
+
+    #[test]
+    fn prefetch_injected_only_when_missing() {
+        let g = PipelineBuilder::source_range(4).batch(2).build();
+        let o = optimize(&g, &OptimizeOptions::default());
+        assert_eq!(*o.nodes.last().unwrap(), Node::Prefetch { n: 2 });
+        let g2 = PipelineBuilder::source_range(4).batch(2).prefetch(8).build();
+        let o2 = optimize(&g2, &OptimizeOptions::default());
+        assert_eq!(*o2.nodes.last().unwrap(), Node::Prefetch { n: 8 });
+        assert_eq!(o2.nodes.len(), 3);
+    }
+
+    #[test]
+    fn fixpoint_chains_passes() {
+        // identity maps removed, then the two surviving maps fuse.
+        let g = PipelineBuilder::source_range(4)
+            .map("a")
+            .map("identity")
+            .map("b")
+            .build();
+        let o = optimize(&g, &OptimizeOptions { prefetch_injection: false, ..Default::default() });
+        assert_eq!(o.nodes[1], Node::Map { udf: "a+b".into(), parallelism: 1 });
+    }
+
+    #[test]
+    fn optimized_graph_is_semantically_equal() {
+        let store = ObjectStore::in_memory();
+        let udfs = UdfRegistry::with_builtins();
+        udfs.register_fn("x2", |mut e: crate::data::Element| {
+            let v = e.tensors[0].as_i32()[0] * 2;
+            e.tensors[0] = crate::data::Tensor::scalar_i32(v);
+            Ok(e)
+        });
+        udfs.register_fn("plus1", |mut e: crate::data::Element| {
+            let v = e.tensors[0].as_i32()[0] + 1;
+            e.tensors[0] = crate::data::Tensor::scalar_i32(v);
+            Ok(e)
+        });
+        let ex = Executor::new(ExecutorConfig::local(store, udfs, 0));
+        let g = PipelineBuilder::source_range(10)
+            .map("x2")
+            .map("plus1")
+            .map("identity")
+            .take(u64::MAX)
+            .batch(2)
+            .build();
+        let o = optimize(&g, &OptimizeOptions::default());
+        let a: Vec<_> = ex.collect(&g).unwrap().iter().map(|e| e.tensors[0].as_i32()).collect();
+        let b: Vec<_> = ex.collect(&o).unwrap().iter().map(|e| e.tensors[0].as_i32()).collect();
+        assert_eq!(a, b);
+        assert!(o.nodes.len() < g.nodes.len());
+    }
+}

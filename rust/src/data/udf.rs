@@ -1,0 +1,313 @@
+//! User-defined functions, referenced by name from pipeline graphs.
+//!
+//! The paper's data transformations are "user-defined functions" executing
+//! on general-purpose CPUs (§2). Here a UDF is any
+//! `Fn(Element) -> Result<Element, String>`; graphs carry only the *name*,
+//! and each worker resolves names against its local registry — exactly how
+//! serialized tf.data graphs reference captured functions.
+//!
+//! Composite names `"a+b"` apply `a` then `b`; the map-fusion optimization
+//! (see [`super::optimize`]) rewrites `map(a).map(b)` into `map("a+b")`.
+//!
+//! The registry ships with native preprocessing UDFs for the synthetic
+//! vision/NLP corpora plus a calibrated `synthetic.burn:<µs>` UDF used by
+//! benches to dial in the paper's per-model preprocessing costs. The XLA
+//! UDFs (running the AOT Pallas kernels) are registered by
+//! [`crate::runtime`] at worker startup.
+
+use super::element::{DType, Element, Tensor};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// A named element transformation. Predicate UDFs (for `filter`) signal
+/// "keep" by returning an element whose first tensor's first byte is
+/// nonzero.
+pub trait Udf: Send + Sync {
+    fn call(&self, elem: Element) -> Result<Element, String>;
+}
+
+impl<F> Udf for F
+where
+    F: Fn(Element) -> Result<Element, String> + Send + Sync,
+{
+    fn call(&self, elem: Element) -> Result<Element, String> {
+        self(elem)
+    }
+}
+
+/// Thread-safe name → UDF registry.
+#[derive(Clone, Default)]
+pub struct UdfRegistry {
+    inner: Arc<RwLock<HashMap<String, Arc<dyn Udf>>>>,
+}
+
+impl UdfRegistry {
+    pub fn empty() -> UdfRegistry {
+        UdfRegistry::default()
+    }
+
+    /// Registry pre-populated with the native preprocessing UDFs.
+    pub fn with_builtins() -> UdfRegistry {
+        let r = UdfRegistry::default();
+        register_builtins(&r);
+        r
+    }
+
+    pub fn register(&self, name: &str, udf: Arc<dyn Udf>) {
+        self.inner.write().unwrap().insert(name.to_string(), udf);
+    }
+
+    pub fn register_fn<F>(&self, name: &str, f: F)
+    where
+        F: Fn(Element) -> Result<Element, String> + Send + Sync + 'static,
+    {
+        self.register(name, Arc::new(f));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_some()
+    }
+
+    /// Resolve a (possibly composite `a+b`) name to a callable.
+    pub fn resolve(&self, name: &str) -> Option<Arc<dyn Udf>> {
+        if let Some(u) = self.resolve_simple(name) {
+            return Some(u);
+        }
+        // Composite chain.
+        if name.contains('+') {
+            let mut parts = Vec::new();
+            for p in name.split('+') {
+                parts.push(self.resolve_simple(p)?);
+            }
+            return Some(Arc::new(move |mut e: Element| {
+                for p in &parts {
+                    e = p.call(e)?;
+                }
+                Ok(e)
+            }));
+        }
+        None
+    }
+
+    fn resolve_simple(&self, name: &str) -> Option<Arc<dyn Udf>> {
+        if let Some(u) = self.inner.read().unwrap().get(name) {
+            return Some(u.clone());
+        }
+        if let Some(us) = name.strip_prefix("synthetic.burn:") {
+            let us: u64 = us.parse().ok()?;
+            return Some(Arc::new(move |e| Ok(burn_cpu(e, us))));
+        }
+        None
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Spin the CPU for ~`us` microseconds (calibrated load stand-in for
+/// expensive augmentations; benches use this to make jobs input-bound).
+fn burn_cpu(elem: Element, us: u64) -> Element {
+    let start = std::time::Instant::now();
+    let mut acc = 0u64;
+    while start.elapsed().as_micros() < us as u128 {
+        // Real work so the optimizer cannot elide the loop.
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        std::hint::black_box(acc);
+    }
+    elem
+}
+
+/// Register the native UDF set.
+fn register_builtins(r: &UdfRegistry) {
+    // -- generic --
+    r.register_fn("identity", Ok);
+
+    // -- vision: u8 HWC pixels -> f32 normalized to [0,1] --
+    r.register_fn("vision.normalize", |e: Element| {
+        let mut out = Vec::with_capacity(e.tensors.len());
+        for t in &e.tensors {
+            if t.dtype == DType::U8 {
+                let vals: Vec<f32> = t.as_u8().iter().map(|&b| b as f32 / 255.0).collect();
+                out.push(Tensor::from_f32(t.shape.clone(), &vals));
+            } else {
+                out.push(t.clone());
+            }
+        }
+        Ok(Element { tensors: out, ids: e.ids, bucket: e.bucket })
+    });
+
+    // -- vision: deterministic per-sample flip + brightness (AutoAugment
+    // stand-in; randomness keyed by the sample id so it is reproducible) --
+    r.register_fn("vision.augment", |e: Element| {
+        let seed = e.ids.first().copied().unwrap_or(0);
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x0a06_5eed);
+        let flip = rng.chance(0.5);
+        let brightness = rng.uniform(0.8, 1.2) as f32;
+        let mut out = Vec::with_capacity(e.tensors.len());
+        for t in &e.tensors {
+            if t.dtype == DType::F32 && t.rank() == 3 {
+                let (h, w_, c) = (t.shape[0], t.shape[1], t.shape[2]);
+                let vals = t.as_f32();
+                let mut new = vec![0f32; vals.len()];
+                for y in 0..h {
+                    for x in 0..w_ {
+                        let sx = if flip { w_ - 1 - x } else { x };
+                        for ch in 0..c {
+                            let v = vals[(y * w_ + sx) * c + ch] * brightness;
+                            new[(y * w_ + x) * c + ch] = v.clamp(0.0, 1.0);
+                        }
+                    }
+                }
+                out.push(Tensor::from_f32(t.shape.clone(), &new));
+            } else {
+                out.push(t.clone());
+            }
+        }
+        Ok(Element { tensors: out, ids: e.ids, bucket: e.bucket })
+    });
+
+    // -- nlp: clamp token sequences to 512 and convert u32 -> i32 ids --
+    r.register_fn("nlp.truncate", |e: Element| {
+        let mut out = Vec::with_capacity(e.tensors.len());
+        for t in &e.tensors {
+            if t.dtype == DType::U32 && t.rank() == 1 {
+                let toks = t.as_u32();
+                let n = toks.len().min(512);
+                out.push(Tensor::from_u32(vec![n], &toks[..n]));
+            } else {
+                out.push(t.clone());
+            }
+        }
+        Ok(Element { tensors: out, ids: e.ids, bucket: e.bucket })
+    });
+
+    // -- filters --
+    // keep samples whose first tensor has even length (test predicate)
+    r.register_fn("filter.even_len", |e: Element| {
+        let keep = e.tensors.first().map(|t| t.shape.first().copied().unwrap_or(1) % 2 == 0).unwrap_or(false);
+        predicate_result(e, keep)
+    });
+    // keep nonzero-labeled samples (expects a u32 scalar as 2nd tensor)
+    r.register_fn("filter.label_nonzero", |e: Element| {
+        let keep = e.tensors.get(1).map(|t| t.as_u32()[0] != 0).unwrap_or(true);
+        predicate_result(e, keep)
+    });
+}
+
+/// Encode a filter verdict: element passes through with a marker tensor
+/// prepended? No — predicates return the *original* element plus the
+/// verdict in `bucket` (0 = drop, 1 = keep); the filter iterator strips it.
+pub(crate) fn predicate_result(mut e: Element, keep: bool) -> Result<Element, String> {
+    e.bucket = Some(keep as u32);
+    Ok(e)
+}
+
+/// Read a predicate verdict produced by [`predicate_result`].
+pub(crate) fn predicate_verdict(e: &Element) -> bool {
+    e.bucket == Some(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vision_elem() -> Element {
+        Element::with_ids(
+            vec![
+                Tensor::from_u8(vec![2, 2, 1], vec![0, 64, 128, 255]),
+                Tensor::scalar_u32(3),
+            ],
+            vec![11],
+        )
+    }
+
+    #[test]
+    fn normalize_scales_to_unit() {
+        let r = UdfRegistry::with_builtins();
+        let out = r.resolve("vision.normalize").unwrap().call(vision_elem()).unwrap();
+        let px = out.tensors[0].as_f32();
+        assert!((px[3] - 1.0).abs() < 1e-6);
+        assert!((px[1] - 64.0 / 255.0).abs() < 1e-6);
+        // label untouched, ids preserved
+        assert_eq!(out.tensors[1].as_u32(), vec![3]);
+        assert_eq!(out.ids, vec![11]);
+    }
+
+    #[test]
+    fn augment_is_deterministic_per_id() {
+        let r = UdfRegistry::with_builtins();
+        let norm = r.resolve("vision.normalize").unwrap();
+        let aug = r.resolve("vision.augment").unwrap();
+        let a = aug.call(norm.call(vision_elem()).unwrap()).unwrap();
+        let b = aug.call(norm.call(vision_elem()).unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn truncate_clamps_length() {
+        let r = UdfRegistry::with_builtins();
+        let toks: Vec<u32> = (0..600).collect();
+        let e = Element::new(vec![Tensor::from_u32(vec![600], &toks)]);
+        let out = r.resolve("nlp.truncate").unwrap().call(e).unwrap();
+        assert_eq!(out.tensors[0].shape, vec![512]);
+    }
+
+    #[test]
+    fn composite_resolution_chains() {
+        let r = UdfRegistry::with_builtins();
+        let chained = r.resolve("vision.normalize+vision.augment").unwrap();
+        let direct = {
+            let n = r.resolve("vision.normalize").unwrap();
+            let a = r.resolve("vision.augment").unwrap();
+            a.call(n.call(vision_elem()).unwrap()).unwrap()
+        };
+        assert_eq!(chained.call(vision_elem()).unwrap(), direct);
+    }
+
+    #[test]
+    fn composite_with_missing_part_fails() {
+        let r = UdfRegistry::with_builtins();
+        assert!(r.resolve("vision.normalize+nope").is_none());
+    }
+
+    #[test]
+    fn burn_udf_parses_and_burns() {
+        let r = UdfRegistry::with_builtins();
+        let u = r.resolve("synthetic.burn:2000").unwrap();
+        let t0 = std::time::Instant::now();
+        u.call(Element::new(vec![])).unwrap();
+        assert!(t0.elapsed().as_micros() >= 2000);
+        assert!(r.resolve("synthetic.burn:notanumber").is_none());
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        let r = UdfRegistry::with_builtins();
+        assert!(r.resolve("no.such.udf").is_none());
+    }
+
+    #[test]
+    fn custom_registration_wins() {
+        let r = UdfRegistry::with_builtins();
+        r.register_fn("double", |mut e: Element| {
+            let v = e.tensors[0].as_f32().iter().map(|x| x * 2.0).collect::<Vec<_>>();
+            e.tensors[0] = Tensor::from_f32(e.tensors[0].shape.clone(), &v);
+            Ok(e)
+        });
+        let e = Element::new(vec![Tensor::from_f32(vec![1], &[21.0])]);
+        let out = r.resolve("double").unwrap().call(e).unwrap();
+        assert_eq!(out.tensors[0].as_f32(), vec![42.0]);
+    }
+
+    #[test]
+    fn predicate_verdict_roundtrip() {
+        let e = Element::new(vec![]);
+        let kept = predicate_result(e.clone(), true).unwrap();
+        assert!(predicate_verdict(&kept));
+        let dropped = predicate_result(e, false).unwrap();
+        assert!(!predicate_verdict(&dropped));
+    }
+}

@@ -1,0 +1,12 @@
+//! tf.data service reproduction: disaggregated ML input data processing.
+pub mod data;
+pub mod metrics;
+pub mod orchestrator;
+pub mod rpc;
+pub mod runtime;
+pub mod service;
+pub mod sim;
+pub mod storage;
+pub mod train;
+pub mod util;
+pub mod wire;

@@ -1,0 +1,259 @@
+//! Metrics: counters, gauges, time series, and CSV emitters for figures.
+//!
+//! Every component (dispatcher, worker, client, trainer) owns a
+//! [`Registry`]; benches snapshot registries and print the paper-figure
+//! series. Counters are lock-free; time series take a short lock.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (signed).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Timestamped series of (t_seconds, value) points relative to creation.
+#[derive(Debug)]
+pub struct TimeSeries {
+    start: Instant,
+    points: Mutex<Vec<(f64, f64)>>,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries { start: Instant::now(), points: Mutex::new(Vec::new()) }
+    }
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, value: f64) {
+        let t = self.start.elapsed().as_secs_f64();
+        self.points.lock().unwrap().push((t, value));
+    }
+
+    /// Record with an explicit x (e.g. a simulated clock or step number).
+    pub fn record_at(&self, x: f64, value: f64) {
+        self.points.lock().unwrap().push((x, value));
+    }
+
+    pub fn snapshot(&self) -> Vec<(f64, f64)> {
+        self.points.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Named metric registry shared across threads.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    series: Mutex<BTreeMap<String, Arc<TimeSeries>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn series(&self, name: &str) -> Arc<TimeSeries> {
+        self.inner
+            .series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Flat snapshot of all counters and gauges.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, c) in self.inner.counters.lock().unwrap().iter() {
+            out.insert(format!("counter/{k}"), c.get() as f64);
+        }
+        for (k, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.insert(format!("gauge/{k}"), g.get() as f64);
+        }
+        out
+    }
+
+    /// Render all series as CSV blocks: `# name\nx,y\n...` — the format the
+    /// figure benches write next to their stdout tables.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        for (k, ts) in self.inner.series.lock().unwrap().iter() {
+            s.push_str(&format!("# series {k}\n"));
+            for (x, y) in ts.snapshot() {
+                s.push_str(&format!("{x:.6},{y:.6}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Write a CSV file of (x, y) series under `out/` for plotting; creates the
+/// directory if needed. Benches use this to persist figure data.
+pub fn write_csv(path: &str, header: &str, rows: &[(f64, f64)]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut body = String::with_capacity(rows.len() * 24 + header.len() + 1);
+    body.push_str(header);
+    body.push('\n');
+    for (x, y) in rows {
+        body.push_str(&format!("{x},{y}\n"));
+    }
+    std::fs::write(path, body)
+}
+
+/// Multi-column CSV variant for tables.
+pub fn write_csv_rows(path: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut body = String::new();
+    body.push_str(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(&r.join(","));
+        body.push('\n');
+    }
+    std::fs::write(path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").add(4);
+        r.gauge("b").set(7);
+        r.gauge("b").add(-2);
+        assert_eq!(r.counter("a").get(), 5);
+        assert_eq!(r.gauge("b").get(), 5);
+        let snap = r.snapshot();
+        assert_eq!(snap["counter/a"], 5.0);
+        assert_eq!(snap["gauge/b"], 5.0);
+    }
+
+    #[test]
+    fn registry_shares_handles() {
+        let r = Registry::new();
+        let c1 = r.counter("x");
+        let r2 = r.clone();
+        let c2 = r2.counter("x");
+        c1.inc();
+        c2.inc();
+        assert_eq!(r.counter("x").get(), 2);
+    }
+
+    #[test]
+    fn series_records_in_order() {
+        let ts = TimeSeries::new();
+        ts.record_at(1.0, 10.0);
+        ts.record_at(2.0, 20.0);
+        let snap = ts.snapshot();
+        assert_eq!(snap, vec![(1.0, 10.0), (2.0, 20.0)]);
+    }
+
+    #[test]
+    fn counters_threadsafe() {
+        let r = Registry::new();
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let c = r.counter("n");
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("n").get(), 8000);
+    }
+
+    #[test]
+    fn csv_rendering() {
+        let r = Registry::new();
+        let ts = r.series("loss");
+        ts.record_at(0.0, 3.5);
+        ts.record_at(1.0, 2.5);
+        let csv = r.to_csv();
+        assert!(csv.contains("# series loss"));
+        assert!(csv.contains("0.000000,3.500000"));
+    }
+}

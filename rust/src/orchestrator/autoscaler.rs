@@ -1,0 +1,200 @@
+//! Autopilot-like horizontal autoscaler (§3.1).
+//!
+//! Borg's Autopilot scales worker pools from "user hints and CPU
+//! utilization"; Cachew-style policies additionally watch client batch
+//! times. This controller combines both signals:
+//!
+//! * scale **up** when mean worker CPU utilization exceeds `hi_util` *or*
+//!   clients report input stalls (starvation fraction above threshold);
+//! * scale **down** when utilization falls below `lo_util` and no client
+//!   is starved;
+//! * hysteresis via a cooldown between actions, bounded by min/max.
+//!
+//! The controller is deployment-agnostic: callers feed it [`Signals`] and
+//! apply the returned [`Decision`] (the [`super::Cell`] does this in its
+//! control loop; the DES applies it analytically).
+
+use std::time::{Duration, Instant};
+
+/// Autoscaler policy knobs.
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Scale up above this mean CPU utilization (0..1).
+    pub hi_util: f64,
+    /// Scale down below this mean CPU utilization (0..1).
+    pub lo_util: f64,
+    /// Scale up when the fraction of client fetches that stalled exceeds
+    /// this.
+    pub starvation_threshold: f64,
+    /// Workers added per scale-up action (multiplicative growth: the
+    /// worker-sweep experiment shows diminishing marginal gains, so we
+    /// grow geometrically then settle).
+    pub growth_factor: f64,
+    pub cooldown: Duration,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 1024,
+            hi_util: 0.8,
+            lo_util: 0.3,
+            starvation_threshold: 0.05,
+            growth_factor: 2.0,
+            cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Inputs sampled from the running deployment.
+#[derive(Debug, Clone, Copy)]
+pub struct Signals {
+    pub current_workers: usize,
+    /// Mean worker CPU utilization in [0, 1].
+    pub mean_worker_util: f64,
+    /// Fraction of client GetElement calls that found no data ready.
+    pub client_starvation: f64,
+}
+
+/// What to do now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    ScaleTo(usize),
+}
+
+/// Stateful controller (owns the cooldown clock).
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    last_action: Option<Instant>,
+    /// History for tests/inspection.
+    pub decisions: Vec<(f64, usize)>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler { cfg, last_action: None, decisions: Vec::new() }
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Pure policy: desired size given signals (no cooldown).
+    pub fn desired(&self, s: Signals) -> usize {
+        let n = s.current_workers.max(1);
+        let starved = s.client_starvation > self.cfg.starvation_threshold;
+        if starved || s.mean_worker_util > self.cfg.hi_util {
+            let grown = ((n as f64) * self.cfg.growth_factor).ceil() as usize;
+            grown.clamp(self.cfg.min_workers, self.cfg.max_workers)
+        } else if s.mean_worker_util < self.cfg.lo_util && !starved {
+            // Shrink proportionally to spare capacity, one notch at a time.
+            let shrunk = ((n as f64) * 0.75).floor() as usize;
+            shrunk.clamp(self.cfg.min_workers, self.cfg.max_workers)
+        } else {
+            n.clamp(self.cfg.min_workers, self.cfg.max_workers)
+        }
+    }
+
+    /// Policy + cooldown: `Hold` while within the cooldown window or when
+    /// the desired size equals the current size.
+    pub fn evaluate(&mut self, s: Signals) -> Decision {
+        if let Some(t) = self.last_action {
+            if t.elapsed() < self.cfg.cooldown {
+                return Decision::Hold;
+            }
+        }
+        let want = self.desired(s);
+        if want == s.current_workers {
+            return Decision::Hold;
+        }
+        self.last_action = Some(Instant::now());
+        self.decisions.push((s.mean_worker_util, want));
+        Decision::ScaleTo(want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig { cooldown: Duration::ZERO, ..Default::default() }
+    }
+
+    fn sig(workers: usize, util: f64, starve: f64) -> Signals {
+        Signals { current_workers: workers, mean_worker_util: util, client_starvation: starve }
+    }
+
+    #[test]
+    fn scales_up_on_high_util() {
+        let a = Autoscaler::new(cfg());
+        assert_eq!(a.desired(sig(4, 0.95, 0.0)), 8);
+    }
+
+    #[test]
+    fn scales_up_on_starvation_even_at_low_util() {
+        let a = Autoscaler::new(cfg());
+        // Workers idle but clients starve (e.g. network-bound): still grow.
+        assert_eq!(a.desired(sig(4, 0.2, 0.5)), 8);
+    }
+
+    #[test]
+    fn scales_down_when_idle() {
+        let a = Autoscaler::new(cfg());
+        assert_eq!(a.desired(sig(8, 0.1, 0.0)), 6);
+    }
+
+    #[test]
+    fn holds_in_band() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.evaluate(sig(4, 0.5, 0.0)), Decision::Hold);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let a = Autoscaler::new(AutoscalerConfig {
+            min_workers: 2,
+            max_workers: 6,
+            cooldown: Duration::ZERO,
+            ..Default::default()
+        });
+        assert_eq!(a.desired(sig(6, 0.99, 0.0)), 6, "capped at max");
+        assert_eq!(a.desired(sig(2, 0.0, 0.0)), 2, "floored at min");
+    }
+
+    #[test]
+    fn cooldown_throttles_actions() {
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            cooldown: Duration::from_secs(60),
+            ..Default::default()
+        });
+        assert_eq!(a.evaluate(sig(4, 0.95, 0.0)), Decision::ScaleTo(8));
+        // Immediately after: held despite pressure.
+        assert_eq!(a.evaluate(sig(8, 0.95, 0.0)), Decision::Hold);
+    }
+
+    #[test]
+    fn converges_to_fixed_point_under_constant_load() {
+        // With util inversely proportional to workers, repeated evaluation
+        // settles inside the [lo, hi] band.
+        let mut a = Autoscaler::new(cfg());
+        let mut workers = 1usize;
+        let demand = 10.0; // total CPU-seconds per second of demand
+        for _ in 0..32 {
+            let util = (demand / workers as f64).min(1.0);
+            match a.evaluate(sig(workers, util, 0.0)) {
+                Decision::ScaleTo(n) => workers = n,
+                Decision::Hold => break,
+            }
+        }
+        let final_util = demand / workers as f64;
+        assert!(
+            (0.3..=0.8).contains(&final_util),
+            "settled at {workers} workers, util {final_util}"
+        );
+    }
+}

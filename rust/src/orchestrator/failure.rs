@@ -1,0 +1,135 @@
+//! Failure injection: preemptions on multi-tenant machines.
+//!
+//! The paper's workers "run on multi-tenant machines with fungible
+//! resources" — preemption is routine, which is why the relaxed-visitation
+//! fault-tolerance design matters. The injector kills a random worker at a
+//! configurable rate and (optionally) restarts a replacement after a
+//! delay, exercising the §3.4 recovery paths end to end.
+
+use super::Cell;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Injection policy.
+#[derive(Debug, Clone)]
+pub struct FailureConfig {
+    /// Probability a kill fires at each tick.
+    pub kill_probability: f64,
+    pub tick: Duration,
+    /// Restart a replacement this long after each kill (None = never).
+    pub restart_after: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for FailureConfig {
+    fn default() -> Self {
+        FailureConfig {
+            kill_probability: 0.5,
+            tick: Duration::from_millis(100),
+            restart_after: Some(Duration::from_millis(200)),
+            seed: 0xdead_beef,
+        }
+    }
+}
+
+/// Handle to a running injector; dropping stops it.
+pub struct FailureInjector {
+    stop: Arc<AtomicBool>,
+    pub kills: Arc<AtomicU64>,
+    pub restarts: Arc<AtomicU64>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FailureInjector {
+    /// Start injecting failures into `cell`.
+    pub fn start(cell: Arc<Cell>, cfg: FailureConfig) -> FailureInjector {
+        let stop = Arc::new(AtomicBool::new(false));
+        let kills = Arc::new(AtomicU64::new(0));
+        let restarts = Arc::new(AtomicU64::new(0));
+        let (s2, k2, r2) = (stop.clone(), kills.clone(), restarts.clone());
+        let thread = std::thread::Builder::new()
+            .name("failure-injector".into())
+            .spawn(move || {
+                let mut rng = Rng::new(cfg.seed);
+                let mut pending_restarts: Vec<std::time::Instant> = Vec::new();
+                while !s2.load(Ordering::SeqCst) {
+                    std::thread::sleep(cfg.tick);
+                    // Due restarts.
+                    let now = std::time::Instant::now();
+                    pending_restarts.retain(|t| {
+                        if *t <= now {
+                            if cell.add_worker().is_ok() {
+                                r2.fetch_add(1, Ordering::SeqCst);
+                            }
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    // Maybe kill.
+                    if rng.chance(cfg.kill_probability) {
+                        let handles = cell.worker_handles();
+                        if handles.len() > 1 {
+                            let victim = *rng.choice(&handles);
+                            if cell.kill_worker(victim) {
+                                k2.fetch_add(1, Ordering::SeqCst);
+                                if let Some(d) = cfg.restart_after {
+                                    pending_restarts.push(now + d);
+                                }
+                            }
+                        }
+                    }
+                    cell.tick();
+                }
+            })
+            .ok();
+        FailureInjector { stop, kills, restarts, thread }
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for FailureInjector {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::udf::UdfRegistry;
+    use crate::service::dispatcher::DispatcherConfig;
+    use crate::storage::ObjectStore;
+
+    #[test]
+    fn injector_kills_and_restarts() {
+        let store = ObjectStore::in_memory();
+        let cell = Arc::new(
+            Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap(),
+        );
+        cell.scale_to(4).unwrap();
+        let inj = FailureInjector::start(
+            cell.clone(),
+            FailureConfig {
+                kill_probability: 1.0,
+                tick: Duration::from_millis(20),
+                restart_after: Some(Duration::from_millis(40)),
+                seed: 7,
+            },
+        );
+        std::thread::sleep(Duration::from_millis(400));
+        inj.stop();
+        assert!(inj.kills.load(Ordering::SeqCst) >= 2, "kills happened");
+        assert!(inj.restarts.load(Ordering::SeqCst) >= 1, "restarts happened");
+        // Never drops to zero workers (injector keeps >= 1).
+        assert!(cell.worker_count() >= 1);
+    }
+}

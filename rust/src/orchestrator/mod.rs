@@ -1,0 +1,185 @@
+//! Orchestrator: the Borg/Kubernetes stand-in.
+//!
+//! The paper deploys dispatcher, workers, and clients as containers
+//! managed by Borg, horizontally scaled by Autopilot from CPU-utilization
+//! signals (§3.1 "Orchestrator"). This module reproduces the control
+//! surface in-process:
+//!
+//! * [`Cell`] — a "cell" that deploys the dispatcher and a dynamic pool of
+//!   workers as managed threads, with add/remove/kill operations.
+//! * [`autoscaler`] — an Autopilot-like horizontal autoscaler driven by
+//!   worker CPU utilization and client-starvation signals, with hysteresis
+//!   and cooldown.
+//! * [`failure`] — a failure injector that preempts and later restarts
+//!   workers, driving the §3.4 fault-tolerance paths.
+
+pub mod autoscaler;
+pub mod failure;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig};
+
+use crate::data::udf::UdfRegistry;
+use crate::service::dispatcher::{Dispatcher, DispatcherConfig};
+use crate::service::worker::{Worker, WorkerConfig};
+use crate::service::ServiceResult;
+use crate::storage::ObjectStore;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// An in-process cell hosting one tf.data service deployment.
+pub struct Cell {
+    store: Arc<ObjectStore>,
+    udfs: UdfRegistry,
+    dispatcher: Dispatcher,
+    workers: Mutex<HashMap<u64, Worker>>,
+    next_handle: Mutex<u64>,
+    worker_cfg_mutator: Mutex<Option<Box<dyn Fn(&mut WorkerConfig) + Send>>>,
+}
+
+impl Cell {
+    /// Deploy a dispatcher and return the cell.
+    pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry, cfg: DispatcherConfig) -> ServiceResult<Cell> {
+        let dispatcher = Dispatcher::start("127.0.0.1:0", cfg)?;
+        Ok(Cell {
+            store,
+            udfs,
+            dispatcher,
+            workers: Mutex::new(HashMap::new()),
+            next_handle: Mutex::new(1),
+            worker_cfg_mutator: Mutex::new(None),
+        })
+    }
+
+    /// Customize future workers' configs (cache window, buffer sizes…).
+    pub fn set_worker_config_mutator(&self, f: impl Fn(&mut WorkerConfig) + Send + 'static) {
+        *self.worker_cfg_mutator.lock().unwrap() = Some(Box::new(f));
+    }
+
+    pub fn dispatcher(&self) -> &Dispatcher {
+        &self.dispatcher
+    }
+
+    pub fn dispatcher_addr(&self) -> String {
+        self.dispatcher.addr()
+    }
+
+    /// Deploy one more worker ("container"); returns its cell handle.
+    pub fn add_worker(&self) -> ServiceResult<u64> {
+        let mut cfg = WorkerConfig::new(self.store.clone(), self.udfs.clone());
+        if let Some(f) = self.worker_cfg_mutator.lock().unwrap().as_ref() {
+            f(&mut cfg);
+        }
+        let w = Worker::start("127.0.0.1:0", &self.dispatcher.addr(), cfg)?;
+        let mut handles = self.next_handle.lock().unwrap();
+        let handle = *handles;
+        *handles += 1;
+        self.workers.lock().unwrap().insert(handle, w);
+        Ok(handle)
+    }
+
+    /// Deploy `n` workers.
+    pub fn scale_to(&self, n: usize) -> ServiceResult<()> {
+        loop {
+            let count = self.worker_count();
+            if count == n {
+                return Ok(());
+            }
+            if count < n {
+                self.add_worker()?;
+            } else {
+                self.remove_any_worker();
+            }
+        }
+    }
+
+    /// Gracefully remove one worker (scale-down), if any.
+    pub fn remove_any_worker(&self) -> bool {
+        let mut ws = self.workers.lock().unwrap();
+        if let Some(&h) = ws.keys().next() {
+            ws.remove(&h); // Drop shuts the worker down
+            return true;
+        }
+        false
+    }
+
+    /// Preempt a specific worker (abrupt kill, no draining).
+    pub fn kill_worker(&self, handle: u64) -> bool {
+        self.workers.lock().unwrap().remove(&handle).is_some()
+    }
+
+    pub fn worker_handles(&self) -> Vec<u64> {
+        self.workers.lock().unwrap().keys().copied().collect()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Aggregate worker status (buffered elements, cache stats) by RPC.
+    pub fn worker_addrs(&self) -> Vec<String> {
+        self.workers.lock().unwrap().values().map(|w| w.addr()).collect()
+    }
+
+    /// Drive dispatcher liveness checks.
+    pub fn tick(&self) -> Vec<u64> {
+        self.dispatcher.tick()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::exec::ElemIter;
+    use crate::data::graph::PipelineBuilder;
+    use crate::service::proto::ShardingPolicy;
+    use crate::service::{ServiceClient, ServiceClientConfig};
+    use crate::storage::dataset::{generate_vision, VisionGenConfig};
+
+    fn mk_cell() -> (Cell, crate::storage::dataset::DatasetSpec) {
+        let store = ObjectStore::in_memory();
+        let spec = generate_vision(
+            &store,
+            "ds",
+            &VisionGenConfig { num_shards: 4, samples_per_shard: 4, ..Default::default() },
+        );
+        let cell = Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap();
+        (cell, spec)
+    }
+
+    #[test]
+    fn scale_up_and_down() {
+        let (cell, _) = mk_cell();
+        cell.scale_to(3).unwrap();
+        assert_eq!(cell.worker_count(), 3);
+        cell.scale_to(1).unwrap();
+        assert_eq!(cell.worker_count(), 1);
+    }
+
+    #[test]
+    fn kill_specific_worker() {
+        let (cell, _) = mk_cell();
+        let h = cell.add_worker().unwrap();
+        assert!(cell.kill_worker(h));
+        assert!(!cell.kill_worker(h));
+        assert_eq!(cell.worker_count(), 0);
+    }
+
+    #[test]
+    fn job_runs_through_cell() {
+        let (cell, spec) = mk_cell();
+        cell.scale_to(2).unwrap();
+        let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+        let client = ServiceClient::new(&cell.dispatcher_addr());
+        let mut it = client
+            .distribute(
+                &graph,
+                ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+            )
+            .unwrap();
+        let mut n = 0;
+        while let Some(_) = it.next().unwrap() {
+            n += 1;
+        }
+        assert_eq!(n, 4);
+    }
+}

@@ -1,0 +1,291 @@
+//! RPC client: multiplexed calls over one connection, plus a reconnecting
+//! connection pool.
+
+use super::frame::{Frame, FrameKind};
+use super::{RpcError, RpcResult};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Slot for a pending call's response.
+#[derive(Default)]
+struct PendingSlot {
+    done: bool,
+    result: Option<RpcResult<Vec<u8>>>,
+}
+
+struct Inner {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, Arc<(Mutex<PendingSlot>, Condvar)>>>,
+    next_call_id: AtomicU64,
+    closed: AtomicBool,
+}
+
+/// A single multiplexed RPC connection. Clone-free: wrap in `Arc` to share
+/// across threads (all methods take `&self`).
+pub struct Client {
+    inner: Arc<Inner>,
+    peer: String,
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // Shut the socket down so the background reader (which holds its
+        // own clone of the fd) unblocks and exits; otherwise the TCP
+        // connection would linger until process exit.
+        self.inner.closed.store(true, Ordering::SeqCst);
+        if let Ok(w) = self.inner.writer.lock() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Client {
+    /// Connect with a timeout; spawns a background reader thread that
+    /// matches responses to pending calls by call id.
+    pub fn connect(addr: &str, timeout: Duration) -> RpcResult<Client> {
+        let sock_addr = addr
+            .parse()
+            .map_err(|e| RpcError::Connect { addr: addr.into(), err: std::io::Error::new(std::io::ErrorKind::InvalidInput, format!("{e}")) })?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .map_err(|err| RpcError::Connect { addr: addr.into(), err })?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone().map_err(RpcError::Io)?;
+
+        let inner = Arc::new(Inner {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            next_call_id: AtomicU64::new(1),
+            closed: AtomicBool::new(false),
+        });
+
+        let weak = Arc::downgrade(&inner);
+        std::thread::Builder::new()
+            .name(format!("rpc-client-read-{addr}"))
+            .spawn(move || {
+                let mut reader = BufReader::with_capacity(256 << 10, read_half);
+                loop {
+                    let frame = match Frame::read_from(&mut reader) {
+                        Ok(f) => f,
+                        Err(_) => break,
+                    };
+                    let Some(inner) = weak.upgrade() else { break };
+                    let slot = inner.pending.lock().unwrap().remove(&frame.call_id);
+                    if let Some(slot) = slot {
+                        let result = match frame.kind {
+                            FrameKind::Response => Ok(frame.payload),
+                            FrameKind::Error => {
+                                Err(RpcError::Remote(String::from_utf8_lossy(&frame.payload).into_owned()))
+                            }
+                            FrameKind::Request => continue, // clients never serve
+                        };
+                        let (m, cv) = &*slot;
+                        let mut g = m.lock().unwrap();
+                        g.done = true;
+                        g.result = Some(result);
+                        cv.notify_all();
+                    }
+                }
+                // Connection died: fail everything still pending.
+                if let Some(inner) = weak.upgrade() {
+                    inner.closed.store(true, Ordering::SeqCst);
+                    let mut pend = inner.pending.lock().unwrap();
+                    for (_, slot) in pend.drain() {
+                        let (m, cv) = &*slot;
+                        let mut g = m.lock().unwrap();
+                        g.done = true;
+                        g.result = Some(Err(RpcError::ConnectionClosed));
+                        cv.notify_all();
+                    }
+                }
+            })
+            .ok();
+
+        Ok(Client { inner, peer: addr.to_string() })
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+
+    /// Issue a call and block until the response arrives or the deadline
+    /// passes. The call id is abandoned on deadline; a late response is
+    /// dropped by the reader.
+    pub fn call(&self, method: u16, payload: &[u8], deadline: Duration) -> RpcResult<Vec<u8>> {
+        if self.is_closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        let call_id = self.inner.next_call_id.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::new((Mutex::new(PendingSlot::default()), Condvar::new()));
+        self.inner.pending.lock().unwrap().insert(call_id, slot.clone());
+
+        let frame = Frame::request(call_id, method, payload.to_vec());
+        {
+            let mut w = self.inner.writer.lock().unwrap();
+            if let Err(e) = frame.write_to(&mut *w) {
+                self.inner.pending.lock().unwrap().remove(&call_id);
+                return Err(RpcError::Io(e));
+            }
+        }
+
+        let (m, cv) = &*slot;
+        let start = Instant::now();
+        let mut g = m.lock().unwrap();
+        while !g.done {
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                drop(g);
+                self.inner.pending.lock().unwrap().remove(&call_id);
+                return Err(RpcError::DeadlineExceeded(deadline));
+            }
+            let (next, timeout) = cv.wait_timeout(g, deadline - elapsed).unwrap();
+            g = next;
+            if timeout.timed_out() && !g.done {
+                drop(g);
+                self.inner.pending.lock().unwrap().remove(&call_id);
+                return Err(RpcError::DeadlineExceeded(deadline));
+            }
+        }
+        g.result.take().unwrap_or(Err(RpcError::ConnectionClosed))
+    }
+}
+
+/// Reconnecting connection pool keyed by address, with retry/backoff.
+///
+/// One [`Client`] per address (gRPC-style channel sharing); transport
+/// failures evict the connection and retry with exponential backoff up to
+/// `max_retries` attempts.
+pub struct Pool {
+    conns: Mutex<HashMap<String, Arc<Client>>>,
+    connect_timeout: Duration,
+    max_retries: usize,
+}
+
+impl Pool {
+    pub fn new(connect_timeout: Duration, max_retries: usize) -> Pool {
+        Pool { conns: Mutex::new(HashMap::new()), connect_timeout, max_retries }
+    }
+
+    /// Pool with defaults suitable for tests and examples.
+    pub fn with_defaults() -> Pool {
+        Pool::new(Duration::from_secs(2), 5)
+    }
+
+    fn get_or_connect(&self, addr: &str) -> RpcResult<Arc<Client>> {
+        let mut conns = self.conns.lock().unwrap();
+        if let Some(c) = conns.get(addr) {
+            if !c.is_closed() {
+                return Ok(c.clone());
+            }
+            conns.remove(addr);
+        }
+        let c = Arc::new(Client::connect(addr, self.connect_timeout)?);
+        conns.insert(addr.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Drop the cached connection for `addr` (e.g. after a worker is
+    /// removed from a job).
+    pub fn evict(&self, addr: &str) {
+        self.conns.lock().unwrap().remove(addr);
+    }
+
+    pub fn connection_count(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    /// Call with retries on retryable (transport) errors. Remote errors and
+    /// deadline expiries surface immediately.
+    pub fn call(&self, addr: &str, method: u16, payload: &[u8], deadline: Duration) -> RpcResult<Vec<u8>> {
+        let mut backoff = Duration::from_millis(10);
+        let mut last: Option<RpcError> = None;
+        for attempt in 0..self.max_retries.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+            match self.get_or_connect(addr) {
+                Ok(client) => match client.call(method, payload, deadline) {
+                    Ok(v) => return Ok(v),
+                    Err(e) if e.is_retryable() => {
+                        self.evict(addr);
+                        last = Some(e);
+                    }
+                    Err(e) => return Err(e),
+                },
+                Err(e) if e.is_retryable() => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(RpcError::RetriesExhausted(
+            last.map(|e| e.to_string()).unwrap_or_else(|| "unknown".into()),
+        ))
+    }
+}
+
+/// Typed call helper: encode the request, call through the pool, decode the
+/// response. All service RPCs go through this.
+pub fn call_typed<Req, Resp>(
+    pool: &Pool,
+    addr: &str,
+    method: u16,
+    req: &Req,
+    deadline: Duration,
+) -> RpcResult<Resp>
+where
+    Req: crate::wire::Encode,
+    Resp: crate::wire::Decode,
+{
+    let bytes = pool.call(addr, method, &req.to_bytes(), deadline)?;
+    Ok(Resp::from_bytes(&bytes)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_refused_reports_connect_error() {
+        // Port 1 is essentially never listening.
+        match Client::connect("127.0.0.1:1", Duration::from_millis(200)) {
+            Err(err) => assert!(matches!(err, RpcError::Connect { .. })),
+            Ok(_) => panic!("connect to port 1 unexpectedly succeeded"),
+        }
+    }
+
+    #[test]
+    fn pool_retries_then_exhausts() {
+        let pool = Pool::new(Duration::from_millis(50), 2);
+        let err = pool
+            .call("127.0.0.1:1", 1, b"", Duration::from_millis(100))
+            .unwrap_err();
+        assert!(matches!(err, RpcError::RetriesExhausted(_)), "{err:?}");
+    }
+
+    #[test]
+    fn call_on_closed_client_fails_fast() {
+        let srv = super::super::Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        let addr = srv.local_addr().to_string();
+        let client = Client::connect(&addr, Duration::from_secs(1)).unwrap();
+        client.call(1, b"x", Duration::from_secs(1)).unwrap();
+        drop(srv);
+        // Wait for the reader thread to observe the close.
+        for _ in 0..100 {
+            if client.is_closed() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(matches!(
+            client.call(1, b"x", Duration::from_secs(1)),
+            Err(RpcError::ConnectionClosed) | Err(RpcError::Io(_))
+        ));
+    }
+}

@@ -1,0 +1,166 @@
+//! Wire framing for the RPC transport.
+//!
+//! One frame per logical message, in both directions:
+//!
+//! ```text
+//! +----------+----------+---------+-----------+------------------+
+//! | len: u32 | call: u64| kind: u8| method:u16| payload: len-11 B|
+//! +----------+----------+---------+-----------+------------------+
+//! ```
+//!
+//! `len` counts everything after itself. `kind` distinguishes requests,
+//! successful responses, and error responses (whose payload is a UTF-8
+//! message). `method` is only meaningful on requests; responses echo it.
+
+use crate::wire::{Reader, Writer};
+use std::io::{self, Read, Write};
+
+/// Hard cap on a single frame: a 64 MiB batch is far beyond any payload the
+/// service produces; anything larger indicates corruption.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Bytes of header following the length word.
+const HEADER_LEN: usize = 8 + 1 + 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Request = 0,
+    Response = 1,
+    Error = 2,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> io::Result<Self> {
+        match v {
+            0 => Ok(FrameKind::Request),
+            1 => Ok(FrameKind::Response),
+            2 => Ok(FrameKind::Error),
+            _ => Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad frame kind {v}"))),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub call_id: u64,
+    pub kind: FrameKind,
+    pub method: u16,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn request(call_id: u64, method: u16, payload: Vec<u8>) -> Self {
+        Frame { call_id, kind: FrameKind::Request, method, payload }
+    }
+
+    pub fn response(call_id: u64, method: u16, payload: Vec<u8>) -> Self {
+        Frame { call_id, kind: FrameKind::Response, method, payload }
+    }
+
+    pub fn error(call_id: u64, method: u16, msg: &str) -> Self {
+        Frame { call_id, kind: FrameKind::Error, method, payload: msg.as_bytes().to_vec() }
+    }
+
+    /// Serialize and write the frame, then flush. A single `write_all` keeps
+    /// the frame contiguous even when multiple threads share the socket via
+    /// a mutex around the writer.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let mut hdr = Writer::with_capacity(4 + HEADER_LEN);
+        hdr.put_u32((HEADER_LEN + self.payload.len()) as u32);
+        hdr.put_u64(self.call_id);
+        hdr.put_u8(self.kind as u8);
+        hdr.put_u16(self.method);
+        // Two writes (header, payload) avoid copying multi-MiB payloads.
+        w.write_all(hdr.as_slice())?;
+        w.write_all(&self.payload)?;
+        w.flush()
+    }
+
+    /// Blocking read of one complete frame.
+    pub fn read_from<R: Read>(r: &mut R) -> io::Result<Frame> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len < HEADER_LEN || len > MAX_FRAME_LEN {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad frame length {len}")));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        let mut rd = Reader::new(&body);
+        let call_id = rd.get_u64().map_err(to_io)?;
+        let kind = FrameKind::from_u8(rd.get_u8().map_err(to_io)?)?;
+        let method = rd.get_u16().map_err(to_io)?;
+        let payload = body[rd.position()..].to_vec();
+        Ok(Frame { call_id, kind, method, payload })
+    }
+}
+
+fn to_io(e: crate::wire::WireError) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        for f in [
+            Frame::request(7, 3, b"abc".to_vec()),
+            Frame::response(8, 3, vec![]),
+            Frame::error(9, 0, "oops"),
+        ] {
+            let mut buf = Vec::new();
+            f.write_to(&mut buf).unwrap();
+            let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(f, back);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_length() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        assert!(Frame::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_undersized_length() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&[0, 0, 0]);
+        assert!(Frame::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let f = Frame::request(1, 1, vec![]);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        buf[4 + 8] = 9; // corrupt kind byte
+        assert!(Frame::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_eof() {
+        let f = Frame::request(1, 1, b"payload".to_vec());
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 2);
+        let err = Frame::read_from(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let a = Frame::request(1, 2, b"a".to_vec());
+        let b = Frame::response(1, 2, b"bb".to_vec());
+        let mut buf = Vec::new();
+        a.write_to(&mut buf).unwrap();
+        b.write_to(&mut buf).unwrap();
+        let mut cur = buf.as_slice();
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), a);
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), b);
+        assert!(cur.is_empty());
+    }
+}

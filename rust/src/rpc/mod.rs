@@ -1,0 +1,229 @@
+//! Framed TCP RPC: the gRPC stand-in.
+//!
+//! The paper's deployment uses gRPC over HTTP/2, multiplexing many logical
+//! calls on a single TCP connection. We reproduce the architectural
+//! properties that matter to the system — one connection per peer pair,
+//! call-id multiplexing, deadlines, retries with backoff — on a compact
+//! length-prefixed binary framing (see [`frame`]).
+//!
+//! * [`server::Server`] — accept loop + per-connection reader threads,
+//!   handler dispatch by method id, concurrent responses on one socket.
+//! * [`client::Client`] — one background reader per connection, blocking
+//!   `call()` with deadline, out-of-order response matching by call id.
+//! * [`client::Pool`] — connection pool keyed by address with automatic
+//!   reconnect and call retries.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{call_typed, Client, Pool};
+pub use frame::{Frame, FrameKind, MAX_FRAME_LEN};
+pub use server::{Handler, Server};
+
+use std::io;
+use std::time::Duration;
+
+/// RPC-layer errors. `Remote` carries an application error string returned
+/// by the peer handler; everything else is transport-level.
+#[derive(Debug, thiserror::Error)]
+pub enum RpcError {
+    #[error("connect to {addr} failed: {err}")]
+    Connect { addr: String, err: io::Error },
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("wire: {0}")]
+    Wire(#[from] crate::wire::WireError),
+    #[error("deadline exceeded after {0:?}")]
+    DeadlineExceeded(Duration),
+    #[error("connection closed")]
+    ConnectionClosed,
+    #[error("remote error: {0}")]
+    Remote(String),
+    #[error("frame too large: {0} bytes")]
+    FrameTooLarge(usize),
+    #[error("retries exhausted: {0}")]
+    RetriesExhausted(String),
+}
+
+pub type RpcResult<T> = Result<T, RpcError>;
+
+impl RpcError {
+    /// Transport errors are retryable (the peer may have restarted);
+    /// application (`Remote`) errors and deadline expiries are not.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            RpcError::Connect { .. }
+                | RpcError::Io(_)
+                | RpcError::ConnectionClosed
+                | RpcError::FrameTooLarge(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{Decode, Encode};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Echo handler: method 1 echoes, method 2 errors, method 3 sleeps.
+    fn spawn_echo() -> (Server, String) {
+        let srv = Server::bind("127.0.0.1:0", move |method, payload: &[u8]| match method {
+            1 => Ok(payload.to_vec()),
+            2 => Err("boom".to_string()),
+            3 => {
+                std::thread::sleep(Duration::from_millis(200));
+                Ok(vec![])
+            }
+            m => Err(format!("no such method {m}")),
+        })
+        .unwrap();
+        let addr = srv.local_addr().to_string();
+        (srv, addr)
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let (_srv, addr) = spawn_echo();
+        let client = Client::connect(&addr, Duration::from_secs(2)).unwrap();
+        let out = client.call(1, b"hello", Duration::from_secs(2)).unwrap();
+        assert_eq!(out, b"hello");
+    }
+
+    #[test]
+    fn remote_error_propagates() {
+        let (_srv, addr) = spawn_echo();
+        let client = Client::connect(&addr, Duration::from_secs(2)).unwrap();
+        match client.call(2, b"", Duration::from_secs(2)) {
+            Err(RpcError::Remote(msg)) => assert_eq!(msg, "boom"),
+            other => panic!("expected remote error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_enforced() {
+        let (_srv, addr) = spawn_echo();
+        let client = Client::connect(&addr, Duration::from_secs(2)).unwrap();
+        match client.call(3, b"", Duration::from_millis(30)) {
+            Err(RpcError::DeadlineExceeded(_)) => {}
+            other => panic!("expected deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn multiplexed_concurrent_calls() {
+        let (_srv, addr) = spawn_echo();
+        let client = Arc::new(Client::connect(&addr, Duration::from_secs(2)).unwrap());
+        let mut handles = vec![];
+        for i in 0..32u32 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                let msg = i.to_le_bytes();
+                let out = c.call(1, &msg, Duration::from_secs(5)).unwrap();
+                assert_eq!(out, msg);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn slow_call_does_not_block_fast_call() {
+        let (_srv, addr) = spawn_echo();
+        let client = Arc::new(Client::connect(&addr, Duration::from_secs(2)).unwrap());
+        let slow = {
+            let c = client.clone();
+            std::thread::spawn(move || c.call(3, b"", Duration::from_secs(5)))
+        };
+        // The fast echo must complete while the slow call is in flight.
+        let t0 = std::time::Instant::now();
+        client.call(1, b"fast", Duration::from_secs(5)).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(150), "fast call was serialized behind slow one");
+        slow.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pool_reconnects_after_server_restart() {
+        let (srv, addr) = spawn_echo();
+        let pool = Pool::new(Duration::from_millis(500), 5);
+        assert_eq!(pool.call(&addr, 1, b"a", Duration::from_secs(2)).unwrap(), b"a");
+        let port_addr = addr.clone();
+        drop(srv);
+        // Restart a fresh server on the same port. Retry binds briefly: the
+        // OS may hold the port for a moment.
+        let srv2 = loop {
+            match Server::bind(&port_addr, |_, p: &[u8]| Ok(p.to_vec())) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        };
+        let out = pool.call(&addr, 1, b"b", Duration::from_secs(2)).unwrap();
+        assert_eq!(out, b"b");
+        drop(srv2);
+    }
+
+    #[test]
+    fn pool_call_counts_connections() {
+        let (_srv, addr) = spawn_echo();
+        let pool = Pool::new(Duration::from_millis(500), 3);
+        for _ in 0..10 {
+            pool.call(&addr, 1, b"x", Duration::from_secs(2)).unwrap();
+        }
+        assert_eq!(pool.connection_count(), 1, "pool must reuse one connection per addr");
+    }
+
+    #[test]
+    fn typed_rpc_call_helper() {
+        #[derive(Debug, PartialEq)]
+        struct Ping {
+            n: u64,
+        }
+        crate::wire_struct!(Ping { n });
+        let (_srv, addr) = {
+            let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| {
+                let ping = Ping::from_bytes(p).map_err(|e| e.to_string())?;
+                Ok(Ping { n: ping.n + 1 }.to_bytes())
+            })
+            .unwrap();
+            let a = srv.local_addr().to_string();
+            (srv, a)
+        };
+        let pool = Pool::new(Duration::from_millis(500), 3);
+        let out: Ping = call_typed(&pool, &addr, 9, &Ping { n: 41 }, Duration::from_secs(2)).unwrap();
+        assert_eq!(out, Ping { n: 42 });
+    }
+
+    #[test]
+    fn handler_panics_are_contained() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = calls.clone();
+        let srv = Server::bind("127.0.0.1:0", move |m, p: &[u8]| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            if m == 7 {
+                panic!("handler bug");
+            }
+            Ok(p.to_vec())
+        })
+        .unwrap();
+        let addr = srv.local_addr().to_string();
+        let client = Client::connect(&addr, Duration::from_secs(2)).unwrap();
+        // Panic in handler => Remote error, connection survives.
+        assert!(matches!(client.call(7, b"", Duration::from_secs(2)), Err(RpcError::Remote(_))));
+        assert_eq!(client.call(1, b"ok", Duration::from_secs(2)).unwrap(), b"ok");
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let (_srv, addr) = spawn_echo();
+        let client = Client::connect(&addr, Duration::from_secs(2)).unwrap();
+        let big = vec![0xabu8; 4 << 20]; // 4 MiB batch-sized payload
+        let out = client.call(1, &big, Duration::from_secs(10)).unwrap();
+        assert_eq!(out.len(), big.len());
+        assert_eq!(out, big);
+    }
+}

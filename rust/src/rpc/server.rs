@@ -1,0 +1,211 @@
+//! RPC server: accept loop, per-connection reader, handler dispatch.
+//!
+//! Each accepted connection gets a reader thread; each request is handled on
+//! a small per-connection worker pool so a slow handler does not serialize
+//! the connection (mirrors gRPC's concurrent streams per HTTP/2 connection).
+//! Responses from concurrent handlers interleave on the socket, serialized
+//! by a write-side mutex; the client re-associates them by call id.
+
+use super::frame::{Frame, FrameKind};
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A request handler: `(method, payload) -> Ok(response bytes) | Err(message)`.
+/// Must be cheap to clone-share across connections (we wrap it in an `Arc`).
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>, String>;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(u16, &[u8]) -> Result<Vec<u8>, String> + Send + Sync + 'static,
+{
+    fn handle(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>, String> {
+        self(method, payload)
+    }
+}
+
+/// Listening RPC server. Dropping the server stops the accept loop and
+/// closes all live connections.
+pub struct Server {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    active_connections: Arc<AtomicUsize>,
+    live_streams: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port) and start serving
+    /// `handler` on a background accept thread.
+    pub fn bind<H: Handler>(addr: &str, handler: H) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let handler = Arc::new(handler);
+
+        let sd = shutdown.clone();
+        let act = active.clone();
+        let live2 = live.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rpc-accept-{local_addr}"))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if sd.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            if let Ok(clone) = s.try_clone() {
+                                live2.lock().unwrap().push(clone);
+                            }
+                            let h = handler.clone();
+                            let sd2 = sd.clone();
+                            let act2 = act.clone();
+                            act2.fetch_add(1, Ordering::SeqCst);
+                            std::thread::Builder::new()
+                                .name("rpc-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(s, h, sd2);
+                                    act2.fetch_sub(1, Ordering::SeqCst);
+                                })
+                                .ok();
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+
+        Ok(Server {
+            local_addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            active_connections: active,
+            live_streams: live,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn active_connections(&self) -> usize {
+        self.active_connections.load(Ordering::SeqCst)
+    }
+
+    /// Request shutdown: stop accepting and sever live connections so
+    /// clients observe `ConnectionClosed` promptly (the paper's worker
+    /// preemption path relies on fast failure detection).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for s in self.live_streams.lock().unwrap().drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        // Poke the accept loop so `incoming()` returns.
+        let _ = TcpStream::connect(self.local_addr);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Per-connection loop: read frames, dispatch each request on its own
+/// thread (cheap on Linux; request concurrency is bounded by the client's
+/// in-flight window), write responses under a shared write lock.
+fn serve_connection(
+    stream: TcpStream,
+    handler: Arc<dyn Handler>,
+    shutdown: Arc<AtomicBool>,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::with_capacity(256 << 10, stream);
+
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()), // peer closed
+            Err(e) => return Err(e),
+        };
+        if frame.kind != FrameKind::Request {
+            // Ignore stray non-request frames rather than killing the link.
+            continue;
+        }
+        let h = handler.clone();
+        let w = writer.clone();
+        std::thread::Builder::new()
+            .name("rpc-handler".into())
+            .spawn(move || {
+                let Frame { call_id, method, payload, .. } = frame;
+                // Contain handler panics: report as a Remote error so one
+                // buggy request cannot poison the connection.
+                let result = std::panic::catch_unwind(AssertUnwindSafe(|| h.handle(method, &payload)))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| p.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "handler panicked".into());
+                        Err(format!("panic: {msg}"))
+                    });
+                let resp = match result {
+                    Ok(bytes) => Frame::response(call_id, method, bytes),
+                    Err(msg) => Frame::error(call_id, method, &msg),
+                };
+                if let Ok(mut guard) = w.lock() {
+                    let _ = resp.write_to(&mut *guard);
+                }
+            })
+            .ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn ephemeral_bind_and_shutdown() {
+        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        let addr = srv.local_addr();
+        assert_ne!(addr.port(), 0);
+        srv.shutdown();
+        // After shutdown new connections are not served.
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    #[test]
+    fn connection_counter_tracks() {
+        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        assert_eq!(srv.active_connections(), 0);
+        let c = super::super::Client::connect(&srv.local_addr().to_string(), Duration::from_secs(1)).unwrap();
+        c.call(1, b"x", Duration::from_secs(1)).unwrap();
+        assert_eq!(srv.active_connections(), 1);
+        drop(c);
+        // reader thread notices EOF and decrements
+        for _ in 0..100 {
+            if srv.active_connections() == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("connection never drained");
+    }
+}

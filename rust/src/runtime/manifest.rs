@@ -1,0 +1,185 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::data::element::DType;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One expected input of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub sha256: String,
+    pub bytes: usize,
+}
+
+/// Named parameter shape of the training model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed manifest: model hyperparameters + artifact table.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub model_vocab: usize,
+    pub model_d_model: usize,
+    pub model_seq: usize,
+    pub model_batch: usize,
+    pub param_count: usize,
+    pub param_shapes: Vec<ParamShape>,
+    pub vision_batch: usize,
+    pub vision_hw: usize,
+    pub vision_c: usize,
+    pub nlp_batch: usize,
+    pub nlp_seq: usize,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| format!("missing numeric field {key}"))
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>, String> {
+    j.as_arr()
+        .ok_or("shape must be an array")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or("missing format")?
+            .to_string();
+        if format != "hlo-text/1" {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let model = j.get("model").ok_or("missing model")?;
+        let vision = j.get("vision").ok_or("missing vision")?;
+        let nlp = j.get("nlp").ok_or("missing nlp")?;
+
+        let param_shapes = model
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .ok_or("missing param_shapes")?
+            .iter()
+            .map(|p| {
+                Ok(ParamShape {
+                    name: p.get("name").and_then(Json::as_str).ok_or("param name")?.to_string(),
+                    shape: shape_of(p.get("shape").ok_or("param shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts").and_then(Json::as_obj).ok_or("missing artifacts")? {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or("missing inputs")?
+                .iter()
+                .map(|i| {
+                    let dname = i.get("dtype").and_then(Json::as_str).ok_or("dtype")?;
+                    Ok(InputSpec {
+                        dtype: DType::from_name(dname).ok_or_else(|| format!("bad dtype {dname}"))?,
+                        shape: shape_of(i.get("shape").ok_or("shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: a.get("file").and_then(Json::as_str).ok_or("file")?.to_string(),
+                    inputs,
+                    sha256: a.get("sha256").and_then(Json::as_str).unwrap_or("").to_string(),
+                    bytes: a.get("bytes").and_then(Json::as_usize).unwrap_or(0),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            format,
+            model_vocab: usize_field(model, "vocab")?,
+            model_d_model: usize_field(model, "d_model")?,
+            model_seq: usize_field(model, "seq_len")?,
+            model_batch: usize_field(model, "batch")?,
+            param_count: usize_field(model, "param_count")?,
+            param_shapes,
+            vision_batch: usize_field(vision, "batch")?,
+            vision_hw: usize_field(vision, "height")?,
+            vision_c: usize_field(vision, "channels")?,
+            nlp_batch: usize_field(nlp, "batch")?,
+            nlp_seq: usize_field(nlp, "seq")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format": "hlo-text/1",
+      "model": {"vocab": 256, "d_model": 8, "n_layers": 1, "n_heads": 2,
+                "d_ff": 16, "seq_len": 4, "batch": 2, "param_count": 10,
+                "param_shapes": [{"name": "embed", "shape": [256, 8]}]},
+      "vision": {"batch": 4, "height": 8, "width": 8, "channels": 3},
+      "nlp": {"batch": 4, "seq": 16},
+      "artifacts": {
+        "x": {"file": "x.hlo.txt",
+              "inputs": [{"dtype": "f32", "shape": [2, 3]},
+                         {"dtype": "i32", "shape": []}],
+              "sha256": "ab", "bytes": 10}
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model_vocab, 256);
+        assert_eq!(m.param_shapes[0].name, "embed");
+        assert_eq!(m.param_shapes[0].shape, vec![256, 8]);
+        let a = &m.artifacts["x"];
+        assert_eq!(a.inputs[0], InputSpec { dtype: DType::F32, shape: vec![2, 3] });
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(m.nlp_seq, 16);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = MINI.replace("hlo-text/1", "hlo-text/999");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = MINI.replace("\"f32\"", "\"q7\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = super::super::default_artifacts_dir().join("manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.contains_key("train_step"));
+            assert!(m.artifacts.contains_key("preprocess_vision"));
+            assert_eq!(m.param_shapes.len(), m.artifacts["train_step"].inputs.len() - 2);
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! PJRT runtime: load and execute the AOT artifacts from the L3 hot path.
+//!
+//! `make artifacts` lowers the L2 JAX graphs (which call the L1 Pallas
+//! kernels) to HLO *text* (see `python/compile/aot.py` for why text, not
+//! serialized protos). This module loads those artifacts into a PJRT CPU
+//! client, compiles each once, and exposes a thread-safe [`Engine`]
+//! handle for executing them with [`crate::data::Tensor`] inputs.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so the engine runs a
+//! dedicated runtime thread owning the client; callers submit work over a
+//! channel. Executions serialize on that thread — matching a single
+//! accelerator executing one step at a time, and keeping worker CPU (L3)
+//! clearly separated from "device" compute.
+
+pub mod manifest;
+pub mod udfs;
+
+pub use manifest::{ArtifactInfo, InputSpec, Manifest};
+
+use crate::data::element::{DType, Tensor};
+use crate::util::chan;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact dir error: {0}")]
+    Dir(String),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("unknown artifact: {0}")]
+    UnknownArtifact(String),
+    #[error("input mismatch for {artifact}: {msg}")]
+    InputMismatch { artifact: String, msg: String },
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("integrity: artifact {0} does not match manifest sha256")]
+    Integrity(String),
+    #[error("runtime thread died")]
+    ThreadDead,
+}
+
+pub type RuntimeResult<T> = Result<T, RuntimeError>;
+
+enum Cmd {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: chan::Sender<RuntimeResult<Vec<Tensor>>>,
+    },
+    /// Compile (warm) an artifact without running it.
+    Warm { name: String, reply: chan::Sender<RuntimeResult<()>> },
+}
+
+/// Thread-safe handle to the PJRT runtime thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: chan::Sender<Cmd>,
+    manifest: Arc<Manifest>,
+}
+
+impl Engine {
+    /// Load `artifacts/` (manifest + HLO text files), start the runtime
+    /// thread, and verify artifact integrity against the manifest.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> RuntimeResult<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| RuntimeError::Dir(format!("{}: {e}", manifest_path.display())))?;
+        let manifest = Arc::new(Manifest::parse(&text).map_err(RuntimeError::Manifest)?);
+
+        // Integrity check before starting the thread.
+        for (name, art) in &manifest.artifacts {
+            let body = std::fs::read(dir.join(&art.file))
+                .map_err(|e| RuntimeError::Dir(format!("{}: {e}", art.file)))?;
+            let digest = sha256_hex(&body);
+            if digest != art.sha256 {
+                return Err(RuntimeError::Integrity(name.clone()));
+            }
+        }
+
+        let (tx, rx) = chan::bounded::<Cmd>(64);
+        let m2 = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || runtime_thread(dir, m2, rx))
+            .map_err(|e| RuntimeError::Dir(e.to_string()))?;
+
+        Ok(Engine { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Validate inputs against the manifest, then execute the artifact.
+    /// Returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> RuntimeResult<Vec<Tensor>> {
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        validate_inputs(name, art, &inputs)?;
+        let (rtx, rrx) = chan::bounded(1);
+        self.tx
+            .send(Cmd::Execute { name: name.to_string(), inputs, reply: rtx })
+            .map_err(|_| RuntimeError::ThreadDead)?;
+        rrx.recv().map_err(|_| RuntimeError::ThreadDead)?
+    }
+
+    /// Pre-compile an artifact so first-use latency doesn't hit the hot
+    /// path (workers warm their preprocess artifact at startup).
+    pub fn warm(&self, name: &str) -> RuntimeResult<()> {
+        if !self.manifest.artifacts.contains_key(name) {
+            return Err(RuntimeError::UnknownArtifact(name.to_string()));
+        }
+        let (rtx, rrx) = chan::bounded(1);
+        self.tx
+            .send(Cmd::Warm { name: name.to_string(), reply: rtx })
+            .map_err(|_| RuntimeError::ThreadDead)?;
+        rrx.recv().map_err(|_| RuntimeError::ThreadDead)?
+    }
+}
+
+fn validate_inputs(name: &str, art: &ArtifactInfo, inputs: &[Tensor]) -> RuntimeResult<()> {
+    if inputs.len() != art.inputs.len() {
+        return Err(RuntimeError::InputMismatch {
+            artifact: name.to_string(),
+            msg: format!("want {} inputs, got {}", art.inputs.len(), inputs.len()),
+        });
+    }
+    for (i, (spec, t)) in art.inputs.iter().zip(inputs).enumerate() {
+        if spec.dtype != t.dtype || spec.shape != t.shape {
+            return Err(RuntimeError::InputMismatch {
+                artifact: name.to_string(),
+                msg: format!(
+                    "input {i}: want {}{:?}, got {}{:?}",
+                    spec.dtype.name(),
+                    spec.shape,
+                    t.dtype.name(),
+                    t.shape
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn runtime_thread(dir: PathBuf, manifest: Arc<Manifest>, rx: chan::Receiver<Cmd>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the same error.
+            while let Ok(cmd) = rx.recv() {
+                let msg = RuntimeError::Xla(format!("client init failed: {e}"));
+                match cmd {
+                    Cmd::Execute { reply, .. } => {
+                        let _ = reply.send(Err(msg));
+                    }
+                    Cmd::Warm { reply, .. } => {
+                        let _ = reply.send(Err(msg));
+                    }
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    let compile = |cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+                   name: &str|
+     -> RuntimeResult<()> {
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::Dir("non-utf8 path".into()))?,
+        )
+        .map_err(|e| RuntimeError::Xla(format!("parse {name}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| RuntimeError::Xla(format!("compile {name}: {e}")))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Warm { name, reply } => {
+                let _ = reply.send(compile(&mut cache, &name));
+            }
+            Cmd::Execute { name, inputs, reply } => {
+                let result = (|| -> RuntimeResult<Vec<Tensor>> {
+                    compile(&mut cache, &name)?;
+                    let exe = cache.get(&name).unwrap();
+                    let literals: Vec<xla::Literal> = inputs
+                        .iter()
+                        .map(tensor_to_literal)
+                        .collect::<RuntimeResult<_>>()?;
+                    let out = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| RuntimeError::Xla(format!("execute {name}: {e}")))?;
+                    let lit = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| RuntimeError::Xla(format!("fetch {name}: {e}")))?;
+                    // aot.py lowers with return_tuple=True: always a tuple.
+                    let parts = lit
+                        .to_tuple()
+                        .map_err(|e| RuntimeError::Xla(format!("untuple {name}: {e}")))?;
+                    parts.iter().map(literal_to_tensor).collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn dtype_to_element_type(d: DType) -> xla::ElementType {
+    match d {
+        DType::U8 => xla::ElementType::U8,
+        DType::U32 => xla::ElementType::U32,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+        DType::F32 => xla::ElementType::F32,
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> RuntimeResult<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(dtype_to_element_type(t.dtype), &t.shape, &t.data)
+        .map_err(|e| RuntimeError::Xla(format!("literal: {e}")))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> RuntimeResult<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| RuntimeError::Xla(format!("shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let (dtype, data) = match shape.ty() {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            (DType::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>())
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            (DType::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::U32 => {
+            let v: Vec<u32> = lit.to_vec().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            (DType::U32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::S64 => {
+            let v: Vec<i64> = lit.to_vec().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            (DType::I64, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::U8 => {
+            let v: Vec<u8> = lit.to_vec().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            (DType::U8, v)
+        }
+        other => return Err(RuntimeError::Xla(format!("unsupported output dtype {other:?}"))),
+    };
+    Ok(Tensor::new(dtype, dims, data))
+}
+
+fn sha256_hex(bytes: &[u8]) -> String {
+    use sha2::{Digest, Sha256};
+    let d = Sha256::digest(bytes);
+    d.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Default artifacts directory: `$TFDATASVC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TFDATASVC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Engine::load(dir).expect("engine load"))
+    }
+
+    #[test]
+    fn loads_manifest_and_warms() {
+        let Some(e) = engine() else { return };
+        assert!(e.manifest().artifacts.contains_key("train_step"));
+        e.warm("preprocess_nlp").unwrap();
+        assert!(matches!(e.warm("nope"), Err(RuntimeError::UnknownArtifact(_))));
+    }
+
+    #[test]
+    fn preprocess_nlp_executes() {
+        let Some(e) = engine() else { return };
+        let (b, s) = (e.manifest().nlp_batch, e.manifest().nlp_seq);
+        let toks: Vec<u32> = (0..b * s).map(|i| (i % 300) as u32).collect();
+        let out = e.execute("preprocess_nlp", vec![Tensor::from_u32(vec![b, s], &toks)]).unwrap();
+        assert_eq!(out.len(), 3, "(tokens, mask, lengths)");
+        assert_eq!(out[0].dtype, DType::I32);
+        assert_eq!(out[0].shape, vec![b, s]);
+        // Tokens clipped to [0, 255].
+        assert!(out[0].as_i32().iter().all(|&t| (0..=255).contains(&t)));
+        // Mask is 0/1 and lengths = row-sums of mask.
+        assert_eq!(out[1].shape, vec![b, s]);
+        let mask = out[1].as_f32();
+        assert!(mask.iter().all(|&m| m == 0.0 || m == 1.0));
+        let lens = out[2].as_i32();
+        for r in 0..b {
+            let sum: f32 = mask[r * s..(r + 1) * s].iter().sum();
+            assert_eq!(lens[r], sum as i32);
+        }
+    }
+
+    #[test]
+    fn preprocess_vision_matches_reference_shape() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let (b, h, w, c) = (m.vision_batch, m.vision_hw, m.vision_hw, m.vision_c);
+        let pixels: Vec<u8> = (0..b * h * w * c).map(|i| (i % 251) as u8).collect();
+        // Neutral augmentation: no flip, zero brightness shift, unit
+        // contrast — the output must equal plain (x/255 - mean)/std.
+        let flip = vec![0.0f32; b];
+        let brightness = vec![0.0f32; b];
+        let contrast = vec![1.0f32; b];
+        let out = e
+            .execute(
+                "preprocess_vision",
+                vec![
+                    Tensor::from_u8(vec![b, h, w, c], pixels.clone()),
+                    Tensor::from_f32(vec![b], &flip),
+                    Tensor::from_f32(vec![b], &brightness),
+                    Tensor::from_f32(vec![b], &contrast),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![b, h, w, c]);
+        assert_eq!(out[0].dtype, DType::F32);
+        // Check a handful of pixels against the reference normalization.
+        const MEAN: [f32; 3] = [0.485, 0.456, 0.406];
+        const STD: [f32; 3] = [0.229, 0.224, 0.225];
+        let vals = out[0].as_f32();
+        for idx in [0usize, 17, 1000, b * h * w * c - 1] {
+            let ch = idx % c;
+            let expect = (pixels[idx] as f32 / 255.0 - MEAN[ch]) / STD[ch];
+            assert!((vals[idx] - expect).abs() < 1e-4, "pixel {idx}: {} vs {expect}", vals[idx]);
+        }
+    }
+
+    #[test]
+    fn execute_validates_inputs() {
+        let Some(e) = engine() else { return };
+        let bad = e.execute("preprocess_nlp", vec![Tensor::from_u32(vec![1, 1], &[0])]);
+        assert!(matches!(bad, Err(RuntimeError::InputMismatch { .. })));
+        let missing = e.execute("does_not_exist", vec![]);
+        assert!(matches!(missing, Err(RuntimeError::UnknownArtifact(_))));
+    }
+
+    #[test]
+    fn params_init_then_train_step_reduces_loss() {
+        let Some(e) = engine() else { return };
+        let params = e.execute("params_init", vec![]).unwrap();
+        let m = e.manifest();
+        assert_eq!(params.len(), m.param_shapes.len());
+        // Tokens: simple repeating pattern the model can learn.
+        let (b, s) = (m.model_batch, m.model_seq + 1);
+        let toks: Vec<i32> = (0..b * s).map(|i| ((i % 7) + 1) as i32).collect();
+        let tok_t = Tensor::from_i32(vec![b, s], &toks);
+        let lr = Tensor::scalar_f32(0.05);
+
+        let mut inputs = params.clone();
+        inputs.push(tok_t.clone());
+        let loss0 = {
+            let out = e.execute("eval_loss", inputs).unwrap();
+            out[0].as_f32()[0]
+        };
+        // A few SGD steps.
+        let mut p = params;
+        for _ in 0..5 {
+            let mut inputs = p.clone();
+            inputs.push(tok_t.clone());
+            inputs.push(lr.clone());
+            let out = e.execute("train_step", inputs).unwrap();
+            // train_step returns (params'..., loss)
+            p = out[..out.len() - 1].to_vec();
+        }
+        let mut inputs = p;
+        inputs.push(tok_t);
+        let loss1 = e.execute("eval_loss", inputs).unwrap()[0].as_f32()[0];
+        assert!(loss1 < loss0, "loss should drop: {loss0} -> {loss1}");
+    }
+}

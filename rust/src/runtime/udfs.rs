@@ -1,0 +1,203 @@
+//! XLA-artifact UDFs: pipeline map functions backed by the AOT-compiled
+//! L1/L2 preprocessing graphs.
+//!
+//! Workers call these via the normal UDF mechanism; the heavy math (fused
+//! augmentation Pallas kernel, NLP featurization) runs inside PJRT on the
+//! lowered HLO, proving the three-layer composition on the request path.
+//!
+//! Both UDFs operate on *batched* elements (apply them after `batch`/
+//! `padded_batch` with the artifact's batch size):
+//!
+//! * `xla.preprocess_vision`: `(u8[B,H,W,C] pixels, u32[B] labels)` →
+//!   `(f32[B,H,W,C] augmented, u32[B] labels)`. Per-sample augmentation
+//!   parameters (flip/brightness/contrast) derive deterministically from
+//!   sample ids, so results are reproducible across workers.
+//! * `xla.preprocess_nlp`: `(u32[B,L] tokens, u32[B] labels)` →
+//!   `(i32[B,S] tokens, f32[B,S] mask, i32[B] lengths, u32[B] labels)`,
+//!   padding or cropping `L` to the artifact's fixed `S`.
+
+use super::Engine;
+use crate::data::element::{DType, Element, Tensor};
+use crate::data::udf::UdfRegistry;
+use crate::util::rng::Rng;
+
+/// Register the XLA UDFs against `registry`. Call once per worker after
+/// loading the engine.
+pub fn register_xla_udfs(registry: &UdfRegistry, engine: &Engine) {
+    let m = engine.manifest();
+    let (vb, vh, vc) = (m.vision_batch, m.vision_hw, m.vision_c);
+    let (nb, ns) = (m.nlp_batch, m.nlp_seq);
+
+    let e = engine.clone();
+    registry.register_fn("xla.preprocess_vision", move |elem: Element| {
+        let pixels = elem.tensors.first().ok_or("vision: missing pixels tensor")?;
+        if pixels.dtype != DType::U8 || pixels.shape != vec![vb, vh, vh, vc] {
+            return Err(format!(
+                "xla.preprocess_vision wants u8[{vb},{vh},{vh},{vc}], got {}{:?} (batch to {vb} first)",
+                pixels.dtype.name(),
+                pixels.shape
+            ));
+        }
+        // Deterministic per-sample augmentation params from sample ids.
+        let mut flip = Vec::with_capacity(vb);
+        let mut brightness = Vec::with_capacity(vb);
+        let mut contrast = Vec::with_capacity(vb);
+        for i in 0..vb {
+            let id = elem.ids.get(i).copied().unwrap_or(i as u64);
+            let mut rng = Rng::new(id ^ 0x00c0_ffee);
+            flip.push(if rng.chance(0.5) { 1.0 } else { 0.0 });
+            brightness.push(rng.uniform(0.8, 1.2) as f32);
+            contrast.push(rng.uniform(0.9, 1.1) as f32);
+        }
+        let out = e
+            .execute(
+                "preprocess_vision",
+                vec![
+                    pixels.clone(),
+                    Tensor::from_f32(vec![vb], &flip),
+                    Tensor::from_f32(vec![vb], &brightness),
+                    Tensor::from_f32(vec![vb], &contrast),
+                ],
+            )
+            .map_err(|err| err.to_string())?;
+        let mut tensors = out;
+        tensors.extend(elem.tensors.into_iter().skip(1)); // carry labels etc.
+        Ok(Element { tensors, ids: elem.ids, bucket: elem.bucket })
+    });
+
+    let e = engine.clone();
+    registry.register_fn("xla.preprocess_nlp", move |elem: Element| {
+        let toks = elem.tensors.first().ok_or("nlp: missing tokens tensor")?;
+        if toks.dtype != DType::U32 || toks.rank() != 2 || toks.shape[0] != nb {
+            return Err(format!(
+                "xla.preprocess_nlp wants u32[{nb},*], got {}{:?} (padded_batch to {nb} first)",
+                toks.dtype.name(),
+                toks.shape
+            ));
+        }
+        // Pad/crop the variable batch length L to the fixed artifact S.
+        let l = toks.shape[1];
+        let vals = toks.as_u32();
+        let mut fixed = vec![0u32; nb * ns];
+        for r in 0..nb {
+            let n = l.min(ns);
+            fixed[r * ns..r * ns + n].copy_from_slice(&vals[r * l..r * l + n]);
+        }
+        let out = e
+            .execute("preprocess_nlp", vec![Tensor::from_u32(vec![nb, ns], &fixed)])
+            .map_err(|err| err.to_string())?;
+        let mut tensors = out;
+        tensors.extend(elem.tensors.into_iter().skip(1));
+        Ok(Element { tensors, ids: elem.ids, bucket: elem.bucket })
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::exec::{Executor, ExecutorConfig};
+    use crate::data::graph::PipelineBuilder;
+    use crate::storage::dataset::{generate_text, generate_vision, TextGenConfig, VisionGenConfig};
+    use crate::storage::ObjectStore;
+
+    fn engine() -> Option<Engine> {
+        let dir = super::super::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::load(dir).unwrap())
+    }
+
+    #[test]
+    fn vision_pipeline_through_xla() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let store = ObjectStore::in_memory();
+        let spec = generate_vision(
+            &store,
+            "v",
+            &VisionGenConfig {
+                num_shards: 2,
+                samples_per_shard: m.vision_batch,
+                height: m.vision_hw as u32,
+                width: m.vision_hw as u32,
+                channels: m.vision_c as u32,
+                ..Default::default()
+            },
+        );
+        let udfs = UdfRegistry::with_builtins();
+        register_xla_udfs(&udfs, &e);
+        let n = spec.num_shards();
+        let ex = Executor::new(ExecutorConfig::local(store, udfs, n));
+        let g = PipelineBuilder::source_vision(spec)
+            .batch(m.vision_batch as u32)
+            .map("xla.preprocess_vision")
+            .build();
+        let out = ex.collect(&g).unwrap();
+        assert_eq!(out.len(), 2);
+        let b = &out[0];
+        assert_eq!(b.tensors[0].dtype, DType::F32);
+        assert_eq!(b.tensors[0].shape, vec![m.vision_batch, m.vision_hw, m.vision_hw, m.vision_c]);
+        // labels preserved as the trailing tensor
+        assert_eq!(b.tensors.last().unwrap().shape, vec![m.vision_batch]);
+        assert_eq!(b.ids.len(), m.vision_batch);
+    }
+
+    #[test]
+    fn vision_xla_is_deterministic() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let udfs = UdfRegistry::with_builtins();
+        register_xla_udfs(&udfs, &e);
+        let f = udfs.resolve("xla.preprocess_vision").unwrap();
+        let (b, h, c) = (m.vision_batch, m.vision_hw, m.vision_c);
+        let elem = Element::with_ids(
+            vec![Tensor::from_u8(vec![b, h, h, c], vec![100; b * h * h * c])],
+            (0..b as u64).collect(),
+        );
+        let a = f.call(elem.clone()).unwrap();
+        let bb = f.call(elem).unwrap();
+        assert_eq!(a, bb);
+    }
+
+    #[test]
+    fn nlp_pipeline_through_xla() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let store = ObjectStore::in_memory();
+        let spec = generate_text(
+            &store,
+            "t",
+            &TextGenConfig {
+                num_shards: 1,
+                samples_per_shard: m.nlp_batch * 2,
+                max_len: 200,
+                ..Default::default()
+            },
+        );
+        let udfs = UdfRegistry::with_builtins();
+        register_xla_udfs(&udfs, &e);
+        let ex = Executor::new(ExecutorConfig::local(store, udfs, 1));
+        let g = PipelineBuilder::source_text(spec)
+            .padded_batch(m.nlp_batch as u32)
+            .map("xla.preprocess_nlp")
+            .build();
+        let out = ex.collect(&g).unwrap();
+        assert_eq!(out.len(), 2);
+        let b = &out[0];
+        assert_eq!(b.tensors[0].shape, vec![m.nlp_batch, m.nlp_seq]);
+        assert_eq!(b.tensors[0].dtype, DType::I32);
+        assert_eq!(b.tensors[1].shape, vec![m.nlp_batch, m.nlp_seq]); // mask
+        assert_eq!(b.tensors[2].shape, vec![m.nlp_batch]); // lengths
+    }
+
+    #[test]
+    fn xla_udf_rejects_unbatched_input() {
+        let Some(e) = engine() else { return };
+        let udfs = UdfRegistry::with_builtins();
+        register_xla_udfs(&udfs, &e);
+        let f = udfs.resolve("xla.preprocess_vision").unwrap();
+        let elem = Element::new(vec![Tensor::from_u8(vec![2, 2, 1], vec![0; 4])]);
+        assert!(f.call(elem).is_err());
+    }
+}

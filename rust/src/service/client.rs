@@ -1,0 +1,490 @@
+//! The service client: accelerator-host side of tf.data service.
+//!
+//! [`ServiceClient::distribute`] is the Rust analogue of Fig. 4's
+//! `ds.distribute(...)`: it optimizes and registers the pipeline with the
+//! dispatcher, joins (or creates) a job, discovers workers via heartbeats,
+//! and returns an iterator that fetches preprocessed batches over RPC.
+//!
+//! * Independent mode: one fetcher thread per worker pulls into a bounded
+//!   client-side buffer ("clients can request data from multiple workers
+//!   in parallel", §3.1).
+//! * Coordinated mode: the client walks rounds 0, 1, 2, …, asking the
+//!   worker that owns each round for its `consumer_index` slot (§3.6).
+
+use super::proto::*;
+use super::worker::inflate;
+use super::{ServiceError, ServiceResult};
+use crate::data::exec::ElemIter;
+use crate::data::graph::GraphDef;
+use crate::data::optimize::{optimize, OptimizeOptions};
+use crate::data::{DataResult, Element};
+use crate::metrics::Registry;
+use crate::rpc::{call_typed, Pool};
+use crate::util::chan;
+use crate::wire::Decode;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-job client configuration (the `distribute(...)` kwargs).
+#[derive(Debug, Clone)]
+pub struct ServiceClientConfig {
+    pub sharding: ShardingPolicy,
+    pub mode: ProcessingMode,
+    /// Shared job name; empty = dedicated anonymous job.
+    pub job_name: String,
+    /// Coordinated mode: total consumers and this client's slot.
+    pub num_consumers: u32,
+    pub consumer_index: u32,
+    pub compression: CompressionMode,
+    /// Client-side buffer depth (elements).
+    pub buffer_size: usize,
+    /// Max parallel fetchers (one per worker up to this cap).
+    pub max_fetchers: usize,
+    pub request_timeout: Duration,
+    /// How often to refresh the worker list from the dispatcher.
+    pub heartbeat_interval: Duration,
+}
+
+impl Default for ServiceClientConfig {
+    fn default() -> Self {
+        ServiceClientConfig {
+            sharding: ShardingPolicy::Off,
+            mode: ProcessingMode::Independent,
+            job_name: String::new(),
+            num_consumers: 0,
+            consumer_index: 0,
+            compression: CompressionMode::None,
+            buffer_size: 16,
+            max_fetchers: 8,
+            request_timeout: Duration::from_secs(10),
+            heartbeat_interval: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Handle for talking to one tf.data service deployment.
+pub struct ServiceClient {
+    dispatcher_addr: String,
+    pool: Arc<Pool>,
+    metrics: Registry,
+}
+
+impl ServiceClient {
+    pub fn new(dispatcher_addr: &str) -> ServiceClient {
+        ServiceClient {
+            dispatcher_addr: dispatcher_addr.to_string(),
+            pool: Arc::new(Pool::with_defaults()),
+            metrics: Registry::new(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Register `graph` (after static optimization, §3.2) and return the
+    /// dataset id.
+    pub fn register_dataset(&self, graph: &GraphDef) -> ServiceResult<u64> {
+        let optimized = optimize(graph, &OptimizeOptions::default());
+        let resp: RegisterDatasetResp = call_typed(
+            &self.pool,
+            &self.dispatcher_addr,
+            dispatcher_methods::REGISTER_DATASET,
+            &RegisterDatasetReq { graph: optimized },
+            Duration::from_secs(10),
+        )?;
+        Ok(resp.dataset_id)
+    }
+
+    /// The full `distribute` flow: register + join job + start fetching.
+    pub fn distribute(&self, graph: &GraphDef, cfg: ServiceClientConfig) -> ServiceResult<DistributedIter> {
+        let dataset_id = self.register_dataset(graph)?;
+        self.distribute_dataset(dataset_id, cfg)
+    }
+
+    /// Join (or create) a job over an already-registered dataset.
+    pub fn distribute_dataset(
+        &self,
+        dataset_id: u64,
+        cfg: ServiceClientConfig,
+    ) -> ServiceResult<DistributedIter> {
+        let job: GetOrCreateJobResp = call_typed(
+            &self.pool,
+            &self.dispatcher_addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &GetOrCreateJobReq {
+                dataset_id,
+                job_name: cfg.job_name.clone(),
+                sharding: cfg.sharding,
+                mode: cfg.mode,
+                num_consumers: cfg.num_consumers,
+            },
+            Duration::from_secs(10),
+        )?;
+        DistributedIter::start(
+            self.dispatcher_addr.clone(),
+            self.pool.clone(),
+            job.job_id,
+            job.client_id,
+            cfg,
+            self.metrics.clone(),
+        )
+    }
+}
+
+/// Iterator over a distributed job's elements.
+pub struct DistributedIter {
+    mode: ProcessingMode,
+    // Independent mode:
+    rx: Option<chan::Receiver<ServiceResult<Element>>>,
+    // Coordinated mode:
+    coord: Option<CoordFetcher>,
+    // Common:
+    job_id: u64,
+    client_id: u64,
+    dispatcher_addr: String,
+    pool: Arc<Pool>,
+    stop: Arc<AtomicBool>,
+    released: bool,
+}
+
+struct CoordFetcher {
+    workers: Arc<Mutex<Vec<String>>>,
+    round: u64,
+    consumer_index: u32,
+    compression: CompressionMode,
+    timeout: Duration,
+}
+
+struct FetchShared {
+    job_id: u64,
+    client_id: u64,
+    compression: CompressionMode,
+    timeout: Duration,
+    pool: Arc<Pool>,
+    tx: chan::Sender<ServiceResult<Element>>,
+    stop: Arc<AtomicBool>,
+    metrics: Registry,
+    /// Workers that reported end_of_sequence.
+    finished_workers: Mutex<HashSet<String>>,
+    active_fetchers: AtomicU64,
+}
+
+impl DistributedIter {
+    fn start(
+        dispatcher_addr: String,
+        pool: Arc<Pool>,
+        job_id: u64,
+        client_id: u64,
+        cfg: ServiceClientConfig,
+        metrics: Registry,
+    ) -> ServiceResult<DistributedIter> {
+        let stop = Arc::new(AtomicBool::new(false));
+        match cfg.mode {
+            ProcessingMode::Coordinated => {
+                // Discover workers once (the order is fixed per job); keep
+                // refreshing in the background for late joiners.
+                let workers = Arc::new(Mutex::new(Vec::new()));
+                let w2 = workers.clone();
+                let pool2 = pool.clone();
+                let da = dispatcher_addr.clone();
+                let stop2 = stop.clone();
+                let hb = cfg.heartbeat_interval;
+                std::thread::Builder::new()
+                    .name("svc-client-hb".into())
+                    .spawn(move || {
+                        while !stop2.load(Ordering::SeqCst) {
+                            if let Ok(resp) = heartbeat(&pool2, &da, job_id, client_id) {
+                                *w2.lock().unwrap() = resp.worker_addrs;
+                            }
+                            std::thread::sleep(hb);
+                        }
+                    })
+                    .ok();
+                // Wait for at least one worker to appear.
+                let deadline = Instant::now() + Duration::from_secs(10);
+                loop {
+                    if !workers.lock().unwrap().is_empty() {
+                        break;
+                    }
+                    if Instant::now() > deadline {
+                        return Err(ServiceError::Other("no workers for coordinated job".into()));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Ok(DistributedIter {
+                    mode: cfg.mode,
+                    rx: None,
+                    coord: Some(CoordFetcher {
+                        workers,
+                        round: 0,
+                        consumer_index: cfg.consumer_index,
+                        compression: cfg.compression,
+                        timeout: cfg.request_timeout,
+                    }),
+                    job_id,
+                    client_id,
+                    dispatcher_addr,
+                    pool,
+                    stop,
+                    released: false,
+                })
+            }
+            ProcessingMode::Independent => {
+                let (tx, rx) = chan::bounded::<ServiceResult<Element>>(cfg.buffer_size);
+                let shared = Arc::new(FetchShared {
+                    job_id,
+                    client_id,
+                    compression: cfg.compression,
+                    timeout: cfg.request_timeout,
+                    pool: pool.clone(),
+                    tx,
+                    stop: stop.clone(),
+                    metrics: metrics.clone(),
+                    finished_workers: Mutex::new(HashSet::new()),
+                    active_fetchers: AtomicU64::new(0),
+                });
+                // Supervisor: heartbeat the dispatcher, spawn a fetcher per
+                // (newly discovered) worker, close the channel when done.
+                let da = dispatcher_addr.clone();
+                let max_fetchers = cfg.max_fetchers;
+                let hb = cfg.heartbeat_interval;
+                std::thread::Builder::new()
+                    .name("svc-client-supervisor".into())
+                    .spawn(move || {
+                        let mut known: HashSet<String> = HashSet::new();
+                        loop {
+                            if shared.stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            match heartbeat(&shared.pool, &da, job_id, client_id) {
+                                Ok(resp) => {
+                                    for addr in resp.worker_addrs {
+                                        if known.len() >= max_fetchers {
+                                            break;
+                                        }
+                                        if known.insert(addr.clone()) {
+                                            spawn_fetcher(shared.clone(), addr);
+                                        }
+                                    }
+                                    let all_finished = !known.is_empty()
+                                        && shared.finished_workers.lock().unwrap().len() == known.len();
+                                    if resp.job_finished || all_finished {
+                                        break;
+                                    }
+                                }
+                                Err(_) => {
+                                    // Dispatcher down: keep fetching from
+                                    // known workers (§3.4).
+                                }
+                            }
+                            std::thread::sleep(hb);
+                        }
+                        // Wait for fetchers to drain, then close.
+                        while shared.active_fetchers.load(Ordering::SeqCst) > 0 {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        shared.tx.close();
+                    })
+                    .ok();
+                Ok(DistributedIter {
+                    mode: cfg.mode,
+                    rx: Some(rx),
+                    coord: None,
+                    job_id,
+                    client_id,
+                    dispatcher_addr,
+                    pool,
+                    stop,
+                    released: false,
+                })
+            }
+        }
+    }
+
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Tell the dispatcher this client is done (job GC'd when the last
+    /// client releases).
+    pub fn release(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        self.stop.store(true, Ordering::SeqCst);
+        let _: Result<ReleaseJobResp, _> = call_typed(
+            &self.pool,
+            &self.dispatcher_addr,
+            dispatcher_methods::RELEASE_JOB,
+            &ReleaseJobReq { job_id: self.job_id, client_id: self.client_id },
+            Duration::from_secs(5),
+        );
+    }
+}
+
+impl Drop for DistributedIter {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+fn heartbeat(pool: &Pool, dispatcher: &str, job_id: u64, client_id: u64) -> ServiceResult<ClientHeartbeatResp> {
+    Ok(call_typed(
+        pool,
+        dispatcher,
+        dispatcher_methods::CLIENT_HEARTBEAT,
+        &ClientHeartbeatReq { job_id, client_id },
+        Duration::from_secs(5),
+    )?)
+}
+
+fn spawn_fetcher(shared: Arc<FetchShared>, addr: String) {
+    shared.active_fetchers.fetch_add(1, Ordering::SeqCst);
+    std::thread::Builder::new()
+        .name(format!("svc-fetch-{addr}"))
+        .spawn(move || {
+            // Transient-failure budget: the worker may not have received
+            // the task yet (it arrives on its next heartbeat), or may be
+            // restarting. Only after sustained failure do we give up.
+            let mut consecutive_errors = 0u32;
+            const MAX_CONSECUTIVE_ERRORS: u32 = 25;
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let req = GetElementReq {
+                    job_id: shared.job_id,
+                    client_id: shared.client_id,
+                    consumer_index: None,
+                    round: None,
+                    compression: shared.compression,
+                };
+                let resp: Result<GetElementResp, _> = call_typed(
+                    &shared.pool,
+                    &addr,
+                    worker_methods::GET_ELEMENT,
+                    &req,
+                    shared.timeout,
+                );
+                match resp {
+                    Ok(r) => {
+                        consecutive_errors = 0;
+                        if r.end_of_sequence {
+                            shared.finished_workers.lock().unwrap().insert(addr.clone());
+                            break;
+                        }
+                        match r.element {
+                            Some(bytes) => {
+                                let decoded = decode_element(&bytes, r.compressed);
+                                shared.metrics.counter("client/elements_fetched").inc();
+                                shared
+                                    .metrics
+                                    .counter("client/bytes_fetched")
+                                    .add(bytes.len() as u64);
+                                if shared.tx.send(decoded).is_err() {
+                                    break;
+                                }
+                            }
+                            None => {
+                                // Worker had nothing ready: brief backoff.
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Transient: the task may not have reached the
+                        // worker yet, or the worker is restarting. Retry
+                        // with backoff; give up only after sustained
+                        // failure (preemption). The supervisor keeps the
+                        // job going on surviving workers.
+                        shared.metrics.counter("client/fetch_errors").inc();
+                        let _ = e;
+                        consecutive_errors += 1;
+                        if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                            shared.finished_workers.lock().unwrap().insert(addr.clone());
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            shared.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+        })
+        .ok();
+}
+
+fn decode_element(bytes: &[u8], compressed: bool) -> ServiceResult<Element> {
+    let plain;
+    let slice = if compressed {
+        plain = inflate(bytes)?;
+        &plain[..]
+    } else {
+        bytes
+    };
+    Ok(Element::from_bytes(slice)?)
+}
+
+impl ElemIter for DistributedIter {
+    fn next(&mut self) -> DataResult<Option<Element>> {
+        match self.mode {
+            ProcessingMode::Independent => {
+                let rx = self.rx.as_ref().expect("independent iter has rx");
+                match rx.recv() {
+                    Ok(Ok(e)) => Ok(Some(e)),
+                    Ok(Err(e)) => Err(crate::data::DataError::Other(e.to_string())),
+                    Err(_) => Ok(None),
+                }
+            }
+            ProcessingMode::Coordinated => {
+                let coord = self.coord.as_mut().expect("coordinated iter");
+                let deadline = Instant::now() + coord.timeout;
+                loop {
+                    let workers = coord.workers.lock().unwrap().clone();
+                    if workers.is_empty() {
+                        return Ok(None);
+                    }
+                    let owner = &workers[(coord.round % workers.len() as u64) as usize];
+                    let req = GetElementReq {
+                        job_id: self.job_id,
+                        client_id: self.client_id,
+                        consumer_index: Some(coord.consumer_index),
+                        round: Some(coord.round),
+                        compression: coord.compression,
+                    };
+                    let resp: Result<GetElementResp, _> =
+                        call_typed(&self.pool, owner, worker_methods::GET_ELEMENT, &req, coord.timeout);
+                    match resp {
+                        Ok(r) if r.end_of_sequence => return Ok(None),
+                        Ok(r) => match r.element {
+                            Some(bytes) => {
+                                coord.round += 1;
+                                let e = decode_element(&bytes, r.compressed)
+                                    .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
+                                return Ok(Some(e));
+                            }
+                            None => {
+                                if Instant::now() > deadline {
+                                    return Err(crate::data::DataError::Other(format!(
+                                        "coordinated round {} timed out",
+                                        coord.round
+                                    )));
+                                }
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                        },
+                        Err(e) => {
+                            if Instant::now() > deadline {
+                                return Err(crate::data::DataError::Other(e.to_string()));
+                            }
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

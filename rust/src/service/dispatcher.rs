@@ -1,0 +1,811 @@
+//! The dispatcher: tf.data service's metadata plane (§3.1).
+//!
+//! Tracks registered datasets, workers, clients, and jobs; assigns
+//! dataset-processing tasks to workers; distributes dynamic splits; and
+//! notifies clients of the current worker set. The dispatcher never
+//! touches element data — all bytes flow worker → client.
+//!
+//! Fault tolerance (§3.4): every state change is journaled before being
+//! acknowledged; [`Dispatcher::restore`] replays the journal. Worker
+//! liveness is heartbeat-based: a worker silent for `worker_timeout` is
+//! declared failed and its in-flight splits are recorded lost
+//! (at-most-once visitation).
+
+use super::journal::{Journal, JournalRecord};
+use super::proto::*;
+use super::sharding::{static_assignment, SplitTracker};
+use super::{ServiceError, ServiceResult};
+use crate::data::graph::GraphDef;
+use crate::metrics::Registry;
+use crate::rpc::Server;
+use crate::wire::{Decode, Encode};
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Dispatcher tuning knobs.
+#[derive(Debug, Clone)]
+pub struct DispatcherConfig {
+    /// Write-ahead journal path; `None` = in-memory only (tests).
+    pub journal_path: Option<PathBuf>,
+    /// A worker silent this long is declared failed.
+    pub worker_timeout: Duration,
+    /// Shuffle seed for dynamic split handout.
+    pub split_seed: u64,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        DispatcherConfig {
+            journal_path: None,
+            worker_timeout: Duration::from_secs(10),
+            split_seed: 0x5317_d15b,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct WorkerInfo {
+    addr: String,
+    last_heartbeat: Instant,
+    /// Tasks created while the worker wasn't heartbeating, delivered on
+    /// its next heartbeat.
+    pending_tasks: Vec<TaskDef>,
+    /// Task (job) ids this worker should currently be running.
+    assigned: HashSet<u64>,
+    alive: bool,
+}
+
+#[derive(Debug)]
+struct JobState {
+    dataset_id: u64,
+    job_name: String,
+    sharding: ShardingPolicy,
+    mode: ProcessingMode,
+    num_consumers: u32,
+    tracker: Option<Arc<SplitTracker>>,
+    clients: HashSet<u64>,
+    finished: bool,
+    /// Worker ordering for coordinated reads, fixed at creation.
+    worker_order: Vec<u64>,
+}
+
+#[derive(Default)]
+struct Meta {
+    datasets: HashMap<u64, GraphDef>,
+    workers: HashMap<u64, WorkerInfo>,
+    jobs: HashMap<u64, JobState>,
+    /// (dataset_id, job_name) -> job_id for named (shared) jobs.
+    named_jobs: HashMap<(u64, String), u64>,
+    next_worker_id: u64,
+    next_job_id: u64,
+    next_client_id: u64,
+}
+
+struct State {
+    cfg: DispatcherConfig,
+    journal: Option<Journal>,
+    meta: Mutex<Meta>,
+    metrics: Registry,
+}
+
+/// A running dispatcher (RPC server + state).
+pub struct Dispatcher {
+    state: Arc<State>,
+    server: Server,
+}
+
+use super::graph_num_shards;
+
+impl Dispatcher {
+    /// Start a dispatcher on `addr` (port 0 = ephemeral), replaying the
+    /// journal if one is configured and present.
+    pub fn start(addr: &str, cfg: DispatcherConfig) -> ServiceResult<Dispatcher> {
+        let journal = match &cfg.journal_path {
+            Some(p) => Some(Journal::open(p).map_err(|e| ServiceError::Journal(e.to_string()))?),
+            None => None,
+        };
+        let mut meta = Meta { next_worker_id: 1, next_job_id: 1, next_client_id: 1, ..Default::default() };
+        if let Some(p) = &cfg.journal_path {
+            let records = Journal::replay(p).map_err(|e| ServiceError::Journal(e.to_string()))?;
+            Self::apply_replay(&mut meta, records, cfg.split_seed);
+        }
+        let state = Arc::new(State { cfg, journal, meta: Mutex::new(meta), metrics: Registry::new() });
+
+        let s2 = state.clone();
+        let server = Server::bind(addr, move |method: u16, payload: &[u8]| {
+            handle(&s2, method, payload).map_err(|e| e.to_string())
+        })
+        .map_err(|e| ServiceError::Other(format!("bind: {e}")))?;
+
+        Ok(Dispatcher { state, server })
+    }
+
+    fn apply_replay(meta: &mut Meta, records: Vec<JournalRecord>, split_seed: u64) {
+        for rec in records {
+            match rec {
+                JournalRecord::RegisterDataset { dataset_id, graph } => {
+                    meta.datasets.insert(dataset_id, graph);
+                }
+                JournalRecord::CreateJob { job_id, dataset_id, job_name, sharding, mode, num_consumers } => {
+                    let shards = meta.datasets.get(&dataset_id).map(graph_num_shards).unwrap_or(1);
+                    let tracker = matches!(sharding, ShardingPolicy::Dynamic)
+                        .then(|| Arc::new(SplitTracker::new(shards, split_seed ^ job_id)));
+                    if !job_name.is_empty() {
+                        meta.named_jobs.insert((dataset_id, job_name.clone()), job_id);
+                    }
+                    meta.jobs.insert(
+                        job_id,
+                        JobState {
+                            dataset_id,
+                            job_name,
+                            sharding,
+                            mode,
+                            num_consumers,
+                            tracker,
+                            clients: HashSet::new(),
+                            finished: false,
+                            worker_order: Vec::new(),
+                        },
+                    );
+                    meta.next_job_id = meta.next_job_id.max(job_id + 1);
+                }
+                JournalRecord::RegisterWorker { worker_id, addr } => {
+                    // Restored workers are stale until they heartbeat again.
+                    meta.workers.insert(
+                        worker_id,
+                        WorkerInfo {
+                            addr,
+                            last_heartbeat: Instant::now() - Duration::from_secs(3600),
+                            pending_tasks: Vec::new(),
+                            assigned: HashSet::new(),
+                            alive: false,
+                        },
+                    );
+                    meta.next_worker_id = meta.next_worker_id.max(worker_id + 1);
+                }
+                JournalRecord::ClientJoined { job_id, client_id } => {
+                    if let Some(j) = meta.jobs.get_mut(&job_id) {
+                        j.clients.insert(client_id);
+                    }
+                    meta.next_client_id = meta.next_client_id.max(client_id + 1);
+                }
+                JournalRecord::ClientReleased { job_id, client_id } => {
+                    if let Some(j) = meta.jobs.get_mut(&job_id) {
+                        j.clients.remove(&client_id);
+                    }
+                }
+                JournalRecord::JobFinished { job_id } => {
+                    if let Some(j) = meta.jobs.get_mut(&job_id) {
+                        j.finished = true;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn addr(&self) -> String {
+        self.server.local_addr().to_string()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.state.metrics
+    }
+
+    /// Declare workers dead whose heartbeat is older than the timeout;
+    /// their in-flight dynamic splits are recorded as lost. Returns the
+    /// failed worker ids. Called by the orchestrator's control loop.
+    pub fn tick(&self) -> Vec<u64> {
+        let mut meta = self.state.meta.lock().unwrap();
+        let timeout = self.state.cfg.worker_timeout;
+        let now = Instant::now();
+        let dead: Vec<u64> = meta
+            .workers
+            .iter()
+            .filter(|(_, w)| w.alive && now.duration_since(w.last_heartbeat) > timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &dead {
+            if let Some(w) = meta.workers.get_mut(id) {
+                w.alive = false;
+                w.assigned.clear();
+                w.pending_tasks.clear();
+            }
+            for job in meta.jobs.values() {
+                if let Some(t) = &job.tracker {
+                    t.worker_failed(*id);
+                }
+            }
+            self.state.metrics.counter("dispatcher/workers_failed").inc();
+        }
+        dead
+    }
+
+    // ---- local (non-RPC) accessors used by tests, benches, examples ----
+
+    pub fn num_live_workers(&self) -> usize {
+        self.state.meta.lock().unwrap().workers.values().filter(|w| w.alive).count()
+    }
+
+    pub fn job_clients(&self, job_id: u64) -> usize {
+        self.state.meta.lock().unwrap().jobs.get(&job_id).map(|j| j.clients.len()).unwrap_or(0)
+    }
+
+    pub fn job_split_stats(&self, job_id: u64) -> Option<(usize, usize, usize)> {
+        let meta = self.state.meta.lock().unwrap();
+        let t = meta.jobs.get(&job_id)?.tracker.as_ref()?;
+        Some((t.remaining(), t.completed().len(), t.lost().len()))
+    }
+}
+
+fn journal_append(state: &State, rec: &JournalRecord) -> ServiceResult<()> {
+    if let Some(j) = &state.journal {
+        j.append(rec).map_err(|e| ServiceError::Journal(e.to_string()))?;
+    }
+    Ok(())
+}
+
+/// RPC demux.
+fn handle(state: &Arc<State>, method: u16, payload: &[u8]) -> ServiceResult<Vec<u8>> {
+    use dispatcher_methods as m;
+    match method {
+        m::REGISTER_DATASET => {
+            let req = RegisterDatasetReq::from_bytes(payload)?;
+            Ok(register_dataset(state, req)?.to_bytes())
+        }
+        m::GET_OR_CREATE_JOB => {
+            let req = GetOrCreateJobReq::from_bytes(payload)?;
+            Ok(get_or_create_job(state, req)?.to_bytes())
+        }
+        m::CLIENT_HEARTBEAT => {
+            let req = ClientHeartbeatReq::from_bytes(payload)?;
+            Ok(client_heartbeat(state, req)?.to_bytes())
+        }
+        m::REGISTER_WORKER => {
+            let req = RegisterWorkerReq::from_bytes(payload)?;
+            Ok(register_worker(state, req)?.to_bytes())
+        }
+        m::WORKER_HEARTBEAT => {
+            let req = WorkerHeartbeatReq::from_bytes(payload)?;
+            Ok(worker_heartbeat(state, req)?.to_bytes())
+        }
+        m::GET_SPLIT => {
+            let req = GetSplitReq::from_bytes(payload)?;
+            Ok(get_split(state, req)?.to_bytes())
+        }
+        m::RELEASE_JOB => {
+            let req = ReleaseJobReq::from_bytes(payload)?;
+            Ok(release_job(state, req)?.to_bytes())
+        }
+        other => Err(ServiceError::Other(format!("dispatcher: unknown method {other}"))),
+    }
+}
+
+fn register_dataset(state: &Arc<State>, req: RegisterDatasetReq) -> ServiceResult<RegisterDatasetResp> {
+    req.graph.validate().map_err(|e| ServiceError::Other(format!("invalid graph: {e}")))?;
+    let dataset_id = req.graph.fingerprint();
+    {
+        let meta = state.meta.lock().unwrap();
+        if meta.datasets.contains_key(&dataset_id) {
+            // Identical pipeline already registered (fingerprint match).
+            return Ok(RegisterDatasetResp { dataset_id });
+        }
+    }
+    journal_append(state, &JournalRecord::RegisterDataset { dataset_id, graph: req.graph.clone() })?;
+    state.meta.lock().unwrap().datasets.insert(dataset_id, req.graph);
+    state.metrics.counter("dispatcher/datasets_registered").inc();
+    Ok(RegisterDatasetResp { dataset_id })
+}
+
+fn make_task(
+    meta: &Meta,
+    job_id: u64,
+    job: &JobState,
+    graph: &GraphDef,
+    worker_id: u64,
+    static_shards: Vec<u64>,
+) -> TaskDef {
+    let worker_index = job.worker_order.iter().position(|&w| w == worker_id).unwrap_or(job.worker_order.len()) as u32;
+    let _ = meta;
+    TaskDef {
+        job_id,
+        dataset_id: job.dataset_id,
+        graph: graph.clone(),
+        sharding: job.sharding,
+        mode: job.mode,
+        num_consumers: job.num_consumers,
+        static_shards,
+        worker_index,
+        num_workers: job.worker_order.len().max(1) as u32,
+    }
+}
+
+fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResult<GetOrCreateJobResp> {
+    let mut meta = state.meta.lock().unwrap();
+    if !meta.datasets.contains_key(&req.dataset_id) {
+        return Err(ServiceError::UnknownDataset(req.dataset_id));
+    }
+
+    // Named job reuse: ephemeral-sharing clients attach to the same job.
+    if !req.job_name.is_empty() {
+        if let Some(&job_id) = meta.named_jobs.get(&(req.dataset_id, req.job_name.clone())) {
+            if meta.jobs.get(&job_id).map(|j| !j.finished).unwrap_or(false) {
+                let client_id = meta.next_client_id;
+                meta.next_client_id += 1;
+                drop(meta);
+                journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
+                state.meta.lock().unwrap().jobs.get_mut(&job_id).unwrap().clients.insert(client_id);
+                return Ok(GetOrCreateJobResp { job_id, client_id });
+            }
+        }
+    }
+
+    let job_id = meta.next_job_id;
+    meta.next_job_id += 1;
+    let client_id = meta.next_client_id;
+    meta.next_client_id += 1;
+
+    let graph = meta.datasets.get(&req.dataset_id).unwrap().clone();
+    let num_shards = graph_num_shards(&graph);
+    let tracker = matches!(req.sharding, ShardingPolicy::Dynamic)
+        .then(|| Arc::new(SplitTracker::new(num_shards, state.cfg.split_seed ^ job_id)));
+
+    // Fix the worker order now (coordinated reads round-robin is stable).
+    let mut worker_order: Vec<u64> =
+        meta.workers.iter().filter(|(_, w)| w.alive).map(|(&id, _)| id).collect();
+    worker_order.sort_unstable();
+
+    let job = JobState {
+        dataset_id: req.dataset_id,
+        job_name: req.job_name.clone(),
+        sharding: req.sharding,
+        mode: req.mode,
+        num_consumers: req.num_consumers,
+        tracker,
+        clients: HashSet::from([client_id]),
+        finished: false,
+        worker_order: worker_order.clone(),
+    };
+
+    // Build per-worker tasks.
+    let static_shards = if matches!(req.sharding, ShardingPolicy::Static) {
+        static_assignment(num_shards, worker_order.len().max(1))
+    } else {
+        vec![Vec::new(); worker_order.len().max(1)]
+    };
+    let tasks: Vec<(u64, TaskDef)> = worker_order
+        .iter()
+        .enumerate()
+        .map(|(i, &wid)| (wid, make_task(&meta, job_id, &job, &graph, wid, static_shards[i].clone())))
+        .collect();
+
+    meta.jobs.insert(job_id, job);
+    if !req.job_name.is_empty() {
+        meta.named_jobs.insert((req.dataset_id, req.job_name.clone()), job_id);
+    }
+    for (wid, task) in tasks {
+        if let Some(w) = meta.workers.get_mut(&wid) {
+            w.pending_tasks.push(task);
+            w.assigned.insert(job_id);
+        }
+    }
+    drop(meta);
+
+    journal_append(
+        state,
+        &JournalRecord::CreateJob {
+            job_id,
+            dataset_id: req.dataset_id,
+            job_name: req.job_name,
+            sharding: req.sharding,
+            mode: req.mode,
+            num_consumers: req.num_consumers,
+        },
+    )?;
+    journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
+    state.metrics.counter("dispatcher/jobs_created").inc();
+    Ok(GetOrCreateJobResp { job_id, client_id })
+}
+
+fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResult<ClientHeartbeatResp> {
+    let meta = state.meta.lock().unwrap();
+    let job = meta.jobs.get(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+    // Workers serving this job, in the job's fixed coordinated order
+    // first, then any later joiners.
+    let mut addrs = Vec::new();
+    for wid in &job.worker_order {
+        if let Some(w) = meta.workers.get(wid) {
+            if w.alive {
+                addrs.push(w.addr.clone());
+            }
+        }
+    }
+    for (wid, w) in meta.workers.iter() {
+        if w.alive && w.assigned.contains(&req.job_id) && !job.worker_order.contains(wid) {
+            addrs.push(w.addr.clone());
+        }
+    }
+    Ok(ClientHeartbeatResp { worker_addrs: addrs, job_finished: job.finished })
+}
+
+fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<RegisterWorkerResp> {
+    let mut meta = state.meta.lock().unwrap();
+    // Re-registration after restart: same address = same logical worker.
+    let existing = meta.workers.iter().find(|(_, w)| w.addr == req.addr).map(|(&id, _)| id);
+    let worker_id = existing.unwrap_or_else(|| {
+        let id = meta.next_worker_id;
+        meta.next_worker_id += 1;
+        id
+    });
+
+    // Stateless worker recovery (§3.4): hand it tasks for every active job.
+    let mut tasks = Vec::new();
+    let job_ids: Vec<u64> = meta.jobs.iter().filter(|(_, j)| !j.finished).map(|(&id, _)| id).collect();
+    for jid in &job_ids {
+        let job = meta.jobs.get(jid).unwrap();
+        let graph = meta.datasets.get(&job.dataset_id).cloned().unwrap_or_default();
+        let task = make_task(&meta, *jid, job, &graph, worker_id, Vec::new());
+        tasks.push(task);
+    }
+    let assigned: HashSet<u64> = job_ids.iter().copied().collect();
+
+    meta.workers.insert(
+        worker_id,
+        WorkerInfo {
+            addr: req.addr.clone(),
+            last_heartbeat: Instant::now(),
+            pending_tasks: Vec::new(),
+            assigned,
+            alive: true,
+        },
+    );
+    drop(meta);
+
+    if existing.is_none() {
+        journal_append(state, &JournalRecord::RegisterWorker { worker_id, addr: req.addr })?;
+        state.metrics.counter("dispatcher/workers_registered").inc();
+    }
+    Ok(RegisterWorkerResp { worker_id, tasks })
+}
+
+fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResult<WorkerHeartbeatResp> {
+    let mut meta = state.meta.lock().unwrap();
+    let finished_jobs: Vec<u64> =
+        meta.jobs.iter().filter(|(_, j)| j.finished).map(|(&id, _)| id).collect();
+    let w = meta.workers.get_mut(&req.worker_id).ok_or(ServiceError::UnknownWorker(req.worker_id))?;
+    w.last_heartbeat = Instant::now();
+    w.alive = true;
+    let new_tasks: Vec<TaskDef> = std::mem::take(&mut w.pending_tasks);
+    let removed: Vec<u64> =
+        req.active_tasks.iter().copied().filter(|t| finished_jobs.contains(t)).collect();
+    for t in &removed {
+        w.assigned.remove(t);
+    }
+    state
+        .metrics
+        .gauge("dispatcher/last_worker_cpu_milli")
+        .set(req.cpu_util_milli as i64);
+    Ok(WorkerHeartbeatResp { new_tasks, removed_tasks: removed })
+}
+
+fn get_split(state: &Arc<State>, req: GetSplitReq) -> ServiceResult<GetSplitResp> {
+    let meta = state.meta.lock().unwrap();
+    let job = meta.jobs.get(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+    let split = match &job.tracker {
+        Some(t) => t.next_split(req.worker_id),
+        None => None, // OFF/static: workers do not ask
+    };
+    Ok(GetSplitResp { split })
+}
+
+fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJobResp> {
+    let mut finished = false;
+    {
+        let mut meta = state.meta.lock().unwrap();
+        let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+        job.clients.remove(&req.client_id);
+        if job.clients.is_empty() && !job.finished {
+            job.finished = true;
+            finished = true;
+            let name_key = (job.dataset_id, job.job_name.clone());
+            if !name_key.1.is_empty() {
+                meta.named_jobs.remove(&name_key);
+            }
+        }
+    }
+    journal_append(state, &JournalRecord::ClientReleased { job_id: req.job_id, client_id: req.client_id })?;
+    if finished {
+        journal_append(state, &JournalRecord::JobFinished { job_id: req.job_id })?;
+        state.metrics.counter("dispatcher/jobs_finished").inc();
+    }
+    Ok(ReleaseJobResp { released: true })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::graph::PipelineBuilder;
+    use crate::rpc::{call_typed, Pool};
+
+    fn disp() -> (Dispatcher, Pool, String) {
+        let d = Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap();
+        let addr = d.addr();
+        (d, Pool::with_defaults(), addr)
+    }
+
+    fn timeout() -> Duration {
+        Duration::from_secs(5)
+    }
+
+    fn register_range_dataset(pool: &Pool, addr: &str) -> u64 {
+        let graph = PipelineBuilder::source_range(10).batch(2).build();
+        let resp: RegisterDatasetResp = call_typed(
+            pool,
+            addr,
+            dispatcher_methods::REGISTER_DATASET,
+            &RegisterDatasetReq { graph },
+            timeout(),
+        )
+        .unwrap();
+        resp.dataset_id
+    }
+
+    #[test]
+    fn dataset_registration_is_idempotent() {
+        let (_d, pool, addr) = disp();
+        let a = register_range_dataset(&pool, &addr);
+        let b = register_range_dataset(&pool, &addr);
+        assert_eq!(a, b, "same graph -> same fingerprint id");
+    }
+
+    #[test]
+    fn job_lifecycle_and_worker_discovery() {
+        let (_d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+
+        // Register a worker first so the job picks it up.
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7001".into() },
+            timeout(),
+        )
+        .unwrap();
+        assert!(w.tasks.is_empty(), "no jobs yet");
+
+        let j: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &GetOrCreateJobReq {
+                dataset_id: ds,
+                job_name: String::new(),
+                sharding: ShardingPolicy::Off,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+            },
+            timeout(),
+        )
+        .unwrap();
+
+        // Worker heartbeat receives the new task.
+        let hb: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb.new_tasks.len(), 1);
+        assert_eq!(hb.new_tasks[0].job_id, j.job_id);
+
+        // Client heartbeat lists the worker.
+        let ch: ClientHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::CLIENT_HEARTBEAT,
+            &ClientHeartbeatReq { job_id: j.job_id, client_id: j.client_id },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(ch.worker_addrs, vec!["127.0.0.1:7001".to_string()]);
+        assert!(!ch.job_finished);
+
+        // Release -> job finished -> heartbeat reports removal.
+        let _: ReleaseJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::RELEASE_JOB,
+            &ReleaseJobReq { job_id: j.job_id, client_id: j.client_id },
+            timeout(),
+        )
+        .unwrap();
+        let hb2: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![j.job_id], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb2.removed_tasks, vec![j.job_id]);
+    }
+
+    #[test]
+    fn named_jobs_are_shared() {
+        let (_d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let req = GetOrCreateJobReq {
+            dataset_id: ds,
+            job_name: "hp".into(),
+            sharding: ShardingPolicy::Off,
+            mode: ProcessingMode::Independent,
+            num_consumers: 0,
+        };
+        let a: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout()).unwrap();
+        let b: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout()).unwrap();
+        assert_eq!(a.job_id, b.job_id, "same name attaches to the same job");
+        assert_ne!(a.client_id, b.client_id);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let (_d, pool, addr) = disp();
+        let r: Result<GetOrCreateJobResp, _> = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &GetOrCreateJobReq {
+                dataset_id: 424242,
+                job_name: String::new(),
+                sharding: ShardingPolicy::Off,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+            },
+            timeout(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dynamic_splits_served_over_rpc() {
+        let (_d, pool, addr) = disp();
+        let graph = crate::data::graph::PipelineBuilder::source_vision(
+            crate::storage::dataset::DatasetSpec {
+                prefix: "p".into(),
+                shards: (0..5).map(|i| format!("p/s{i}")).collect(),
+                samples_per_shard: 1,
+                total_samples: 5,
+            },
+        )
+        .build();
+        let ds: RegisterDatasetResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_DATASET,
+            &RegisterDatasetReq { graph },
+            timeout(),
+        )
+        .unwrap();
+        let j: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &GetOrCreateJobReq {
+                dataset_id: ds.dataset_id,
+                job_name: String::new(),
+                sharding: ShardingPolicy::Dynamic,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+            },
+            timeout(),
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        loop {
+            let s: GetSplitResp = call_typed(
+                &pool,
+                &addr,
+                dispatcher_methods::GET_SPLIT,
+                &GetSplitReq { job_id: j.job_id, worker_id: 1 },
+                timeout(),
+            )
+            .unwrap();
+            match s.split {
+                Some(v) => got.push(v),
+                None => break,
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn journal_restores_state_across_restart() {
+        let dir = std::env::temp_dir().join(format!("tfdatasvc-disp-{}", std::process::id()));
+        let jpath = dir.join("journal");
+        let _ = std::fs::remove_file(&jpath);
+        let cfg = DispatcherConfig { journal_path: Some(jpath.clone()), ..Default::default() };
+
+        let (ds, job_id) = {
+            let d = Dispatcher::start("127.0.0.1:0", cfg.clone()).unwrap();
+            let pool = Pool::with_defaults();
+            let addr = d.addr();
+            let ds = register_range_dataset(&pool, &addr);
+            let j: GetOrCreateJobResp = call_typed(
+                &pool,
+                &addr,
+                dispatcher_methods::GET_OR_CREATE_JOB,
+                &GetOrCreateJobReq {
+                    dataset_id: ds,
+                    job_name: "persistent".into(),
+                    sharding: ShardingPolicy::Dynamic,
+                    mode: ProcessingMode::Independent,
+                    num_consumers: 0,
+                },
+                timeout(),
+            )
+            .unwrap();
+            (ds, j.job_id)
+        };
+
+        // Restart with the same journal.
+        let d2 = Dispatcher::start("127.0.0.1:0", cfg).unwrap();
+        let pool = Pool::with_defaults();
+        let addr = d2.addr();
+        // Named job still resolvable: attaching returns the same job id.
+        let j2: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &GetOrCreateJobReq {
+                dataset_id: ds,
+                job_name: "persistent".into(),
+                sharding: ShardingPolicy::Dynamic,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+            },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(j2.job_id, job_id);
+        std::fs::remove_file(&jpath).ok();
+    }
+
+    #[test]
+    fn tick_declares_silent_workers_dead() {
+        let cfg = DispatcherConfig { worker_timeout: Duration::from_millis(50), ..Default::default() };
+        let d = Dispatcher::start("127.0.0.1:0", cfg).unwrap();
+        let pool = Pool::with_defaults();
+        let addr = d.addr();
+        let _ds = register_range_dataset(&pool, &addr);
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7009".into() },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(d.num_live_workers(), 1);
+        std::thread::sleep(Duration::from_millis(80));
+        let dead = d.tick();
+        assert_eq!(dead, vec![w.worker_id]);
+        assert_eq!(d.num_live_workers(), 0);
+        // Worker heartbeats again -> alive again (stateless recovery).
+        let _: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(d.num_live_workers(), 1);
+    }
+}

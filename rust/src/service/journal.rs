@@ -1,0 +1,277 @@
+//! Dispatcher write-ahead journal (§3.4).
+//!
+//! Every dispatcher state change — dataset registration, job creation,
+//! worker registration, client joins/releases — appends a CRC-framed
+//! record before the change is acknowledged. On restart the dispatcher
+//! replays the journal to restore its metadata. Split-assignment progress
+//! is deliberately *not* journaled: the paper relaxes visitation to
+//! at-most-once, so an epoch's in-flight splits may be lost on recovery.
+
+use crate::data::graph::GraphDef;
+use crate::service::proto::{ProcessingMode, ShardingPolicy};
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+use crc32fast::Hasher;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One replayable state change.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    RegisterDataset { dataset_id: u64, graph: GraphDef },
+    CreateJob {
+        job_id: u64,
+        dataset_id: u64,
+        job_name: String,
+        sharding: ShardingPolicy,
+        mode: ProcessingMode,
+        num_consumers: u32,
+    },
+    RegisterWorker { worker_id: u64, addr: String },
+    ClientJoined { job_id: u64, client_id: u64 },
+    ClientReleased { job_id: u64, client_id: u64 },
+    JobFinished { job_id: u64 },
+}
+
+impl Encode for JournalRecord {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            JournalRecord::RegisterDataset { dataset_id, graph } => {
+                w.put_u8(0);
+                w.put_u64(*dataset_id);
+                graph.encode(w);
+            }
+            JournalRecord::CreateJob { job_id, dataset_id, job_name, sharding, mode, num_consumers } => {
+                w.put_u8(1);
+                w.put_u64(*job_id);
+                w.put_u64(*dataset_id);
+                job_name.encode(w);
+                sharding.encode(w);
+                mode.encode(w);
+                w.put_u32(*num_consumers);
+            }
+            JournalRecord::RegisterWorker { worker_id, addr } => {
+                w.put_u8(2);
+                w.put_u64(*worker_id);
+                addr.encode(w);
+            }
+            JournalRecord::ClientJoined { job_id, client_id } => {
+                w.put_u8(3);
+                w.put_u64(*job_id);
+                w.put_u64(*client_id);
+            }
+            JournalRecord::ClientReleased { job_id, client_id } => {
+                w.put_u8(4);
+                w.put_u64(*job_id);
+                w.put_u64(*client_id);
+            }
+            JournalRecord::JobFinished { job_id } => {
+                w.put_u8(5);
+                w.put_u64(*job_id);
+            }
+        }
+    }
+}
+
+impl Decode for JournalRecord {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => JournalRecord::RegisterDataset { dataset_id: r.get_u64()?, graph: GraphDef::decode(r)? },
+            1 => JournalRecord::CreateJob {
+                job_id: r.get_u64()?,
+                dataset_id: r.get_u64()?,
+                job_name: String::decode(r)?,
+                sharding: ShardingPolicy::decode(r)?,
+                mode: ProcessingMode::decode(r)?,
+                num_consumers: r.get_u32()?,
+            },
+            2 => JournalRecord::RegisterWorker { worker_id: r.get_u64()?, addr: String::decode(r)? },
+            3 => JournalRecord::ClientJoined { job_id: r.get_u64()?, client_id: r.get_u64()? },
+            4 => JournalRecord::ClientReleased { job_id: r.get_u64()?, client_id: r.get_u64()? },
+            5 => JournalRecord::JobFinished { job_id: r.get_u64()? },
+            tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
+        })
+    }
+}
+
+/// Append-only journal file. Thread-safe; every append is flushed before
+/// returning (write-ahead semantics).
+pub struct Journal {
+    path: PathBuf,
+    writer: Mutex<BufWriter<File>>,
+}
+
+impl Journal {
+    /// Open (creating if missing) the journal at `path`.
+    pub fn open(path: impl AsRef<Path>) -> std::io::Result<Journal> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Journal { path, writer: Mutex::new(BufWriter::new(file)) })
+    }
+
+    /// Append one record (length + crc framed) and flush.
+    pub fn append(&self, rec: &JournalRecord) -> std::io::Result<()> {
+        let body = rec.to_bytes();
+        let mut h = Hasher::new();
+        h.update(&body);
+        let crc = h.finalize();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&(body.len() as u32).to_le_bytes())?;
+        w.write_all(&crc.to_le_bytes())?;
+        w.write_all(&body)?;
+        w.flush()
+    }
+
+    /// Replay all intact records. A torn tail (partial final record, e.g.
+    /// crash mid-append) is tolerated and ignored; corruption in the
+    /// middle is an error.
+    pub fn replay(path: impl AsRef<Path>) -> std::io::Result<Vec<JournalRecord>> {
+        let mut bytes = Vec::new();
+        match File::open(path.as_ref()) {
+            Ok(mut f) => {
+                f.read_to_end(&mut bytes)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(vec![]),
+            Err(e) => return Err(e),
+        }
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            if bytes.len() - pos < 8 {
+                break; // torn header at tail
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            if bytes.len() - pos - 8 < len {
+                break; // torn body at tail
+            }
+            let body = &bytes[pos + 8..pos + 8 + len];
+            let mut h = Hasher::new();
+            h.update(body);
+            if h.finalize() != crc {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("journal crc mismatch at byte {pos}"),
+                ));
+            }
+            let rec = JournalRecord::from_bytes(body).map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("journal decode: {e}"))
+            })?;
+            out.push(rec);
+            pos += 8 + len;
+        }
+        Ok(out)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::graph::PipelineBuilder;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tfdatasvc-journal-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample_records() -> Vec<JournalRecord> {
+        vec![
+            JournalRecord::RegisterDataset {
+                dataset_id: 11,
+                graph: PipelineBuilder::source_range(5).batch(2).build(),
+            },
+            JournalRecord::CreateJob {
+                job_id: 1,
+                dataset_id: 11,
+                job_name: "shared".into(),
+                sharding: ShardingPolicy::Dynamic,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+            },
+            JournalRecord::RegisterWorker { worker_id: 5, addr: "127.0.0.1:4000".into() },
+            JournalRecord::ClientJoined { job_id: 1, client_id: 2 },
+            JournalRecord::ClientReleased { job_id: 1, client_id: 2 },
+            JournalRecord::JobFinished { job_id: 1 },
+        ]
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let p = tmpfile("roundtrip");
+        let j = Journal::open(&p).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        assert_eq!(Journal::replay(&p).unwrap(), recs);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn replay_missing_file_is_empty() {
+        assert!(Journal::replay("/nonexistent/journal").unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_tail_tolerated() {
+        let p = tmpfile("torn");
+        let j = Journal::open(&p).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        // Truncate mid-record to simulate a crash during append.
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        let replayed = Journal::replay(&p).unwrap();
+        assert_eq!(replayed, recs[..recs.len() - 1]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mid_file_corruption_is_error() {
+        let p = tmpfile("corrupt");
+        let j = Journal::open(&p).unwrap();
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        drop(j);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[10] ^= 0xff; // flip a byte in the first record's body
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Journal::replay(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reopen_appends_not_truncates() {
+        let p = tmpfile("reopen");
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JournalRecord::JobFinished { job_id: 1 }).unwrap();
+        }
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JournalRecord::JobFinished { job_id: 2 }).unwrap();
+        }
+        let recs = Journal::replay(&p).unwrap();
+        assert_eq!(
+            recs,
+            vec![JournalRecord::JobFinished { job_id: 1 }, JournalRecord::JobFinished { job_id: 2 }]
+        );
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,64 @@
+//! tf.data service: the paper's system contribution.
+//!
+//! A disaggregated input-data-processing service (§3):
+//!
+//! * [`dispatcher`] — metadata plane: dataset registry, worker/client
+//!   registry, task assignment, dynamic split distribution, heartbeats.
+//!   Performs **no data processing** (§3.1).
+//! * [`worker`] — data plane: executes pipeline graphs, buffers batches,
+//!   serves client `GetElement` RPCs. Hosts the **ephemeral sliding-window
+//!   cache** (§3.5) and the **coordinated-reads** round-robin scheduler
+//!   (§3.6).
+//! * [`client`] — accelerator-host side: registers pipelines, discovers
+//!   workers, fetches batches in parallel into a client-side buffer.
+//! * [`sharding`] — OFF / DYNAMIC / STATIC source-data sharding (§3.3).
+//! * [`journal`] — dispatcher write-ahead journal + replay (§3.4).
+//! * [`visitation`] — data-visitation-guarantee trackers used by tests
+//!   (exactly-once / at-most-once / zero-once-or-more).
+//! * [`proto`] — the RPC schema all of the above speak.
+
+pub mod client;
+pub mod dispatcher;
+pub mod journal;
+pub mod proto;
+pub mod sharding;
+pub mod visitation;
+pub mod worker;
+
+pub use client::{ServiceClient, ServiceClientConfig};
+pub use dispatcher::Dispatcher;
+pub use proto::{CompressionMode, ProcessingMode, ShardingPolicy};
+pub use worker::Worker;
+
+/// Number of source shards in a pipeline graph (drives split tracking and
+/// OFF-mode shuffled iteration).
+pub fn graph_num_shards(graph: &crate::data::graph::GraphDef) -> usize {
+    use crate::data::graph::Node;
+    match graph.nodes.first() {
+        Some(Node::SourceVision { spec }) | Some(Node::SourceText { spec }) => spec.shards.len(),
+        _ => 1,
+    }
+}
+
+/// Service-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ServiceError {
+    #[error("rpc: {0}")]
+    Rpc(#[from] crate::rpc::RpcError),
+    #[error("wire: {0}")]
+    Wire(#[from] crate::wire::WireError),
+    #[error("data: {0}")]
+    Data(#[from] crate::data::DataError),
+    #[error("journal: {0}")]
+    Journal(String),
+    #[error("unknown dataset {0}")]
+    UnknownDataset(u64),
+    #[error("unknown job {0}")]
+    UnknownJob(u64),
+    #[error("unknown worker {0}")]
+    UnknownWorker(u64),
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type ServiceResult<T> = Result<T, ServiceError>;

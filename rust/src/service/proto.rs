@@ -1,0 +1,389 @@
+//! RPC schema: method ids and message types for dispatcher and worker.
+//!
+//! Mirrors the tf.data service proto surface: dataset registration,
+//! job creation, worker registration + heartbeats, dynamic split
+//! distribution, and the client-facing `GetElement`.
+
+use crate::data::graph::GraphDef;
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+use crate::wire_struct;
+
+// ------------------------------------------------------------- method ids
+
+/// Dispatcher-served methods.
+pub mod dispatcher_methods {
+    pub const REGISTER_DATASET: u16 = 1;
+    pub const GET_OR_CREATE_JOB: u16 = 2;
+    pub const CLIENT_HEARTBEAT: u16 = 3;
+    pub const REGISTER_WORKER: u16 = 4;
+    pub const WORKER_HEARTBEAT: u16 = 5;
+    pub const GET_SPLIT: u16 = 6;
+    pub const RELEASE_JOB: u16 = 7;
+}
+
+/// Worker-served methods.
+pub mod worker_methods {
+    pub const GET_ELEMENT: u16 = 32;
+    pub const WORKER_STATUS: u16 = 33;
+}
+
+// ------------------------------------------------------------ enum types
+
+/// Source-data sharding policy (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardingPolicy {
+    /// No sharding: every worker processes the whole dataset in its own
+    /// random order (zero-once-or-more visitation).
+    Off,
+    /// Disjoint first-come-first-served splits from the dispatcher
+    /// (at-most-once under failures, exactly-once without).
+    Dynamic,
+    /// Splits pre-assigned round-robin at job start.
+    Static,
+}
+
+impl Encode for ShardingPolicy {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(match self {
+            ShardingPolicy::Off => 0,
+            ShardingPolicy::Dynamic => 1,
+            ShardingPolicy::Static => 2,
+        });
+    }
+}
+
+impl Decode for ShardingPolicy {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => ShardingPolicy::Off,
+            1 => ShardingPolicy::Dynamic,
+            2 => ShardingPolicy::Static,
+            tag => return Err(WireError::BadTag { tag, ty: "ShardingPolicy" }),
+        })
+    }
+}
+
+/// How clients consume the job's output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcessingMode {
+    /// Each client pulls batches from any worker as fast as it can.
+    Independent,
+    /// Coordinated reads (§3.6): per training round, one worker feeds all
+    /// `num_consumers` clients same-bucket batches, round-robin across
+    /// workers.
+    Coordinated,
+}
+
+impl Encode for ProcessingMode {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(match self {
+            ProcessingMode::Independent => 0,
+            ProcessingMode::Coordinated => 1,
+        });
+    }
+}
+
+impl Decode for ProcessingMode {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => ProcessingMode::Independent,
+            1 => ProcessingMode::Coordinated,
+            tag => return Err(WireError::BadTag { tag, ty: "ProcessingMode" }),
+        })
+    }
+}
+
+/// Element payload compression between worker and client (§3.1: useful in
+/// bandwidth-constrained deployments, wasteful otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMode {
+    None,
+    Deflate,
+}
+
+impl Encode for CompressionMode {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(match self {
+            CompressionMode::None => 0,
+            CompressionMode::Deflate => 1,
+        });
+    }
+}
+
+impl Decode for CompressionMode {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => CompressionMode::None,
+            1 => CompressionMode::Deflate,
+            tag => return Err(WireError::BadTag { tag, ty: "CompressionMode" }),
+        })
+    }
+}
+
+// -------------------------------------------------------------- messages
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterDatasetReq {
+    /// Serialized, already-optimized pipeline graph.
+    pub graph: GraphDef,
+}
+wire_struct!(RegisterDatasetReq { graph });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterDatasetResp {
+    /// Dataset id = graph fingerprint (identical pipelines share an id,
+    /// which is what makes ephemeral sharing discoverable).
+    pub dataset_id: u64,
+}
+wire_struct!(RegisterDatasetResp { dataset_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetOrCreateJobReq {
+    pub dataset_id: u64,
+    /// Jobs with the same non-empty name attach to one shared job
+    /// (ephemeral data sharing); empty = anonymous dedicated job.
+    pub job_name: String,
+    pub sharding: ShardingPolicy,
+    pub mode: ProcessingMode,
+    /// Number of coordinated consumers (0 for independent mode).
+    pub num_consumers: u32,
+}
+wire_struct!(GetOrCreateJobReq { dataset_id, job_name, sharding, mode, num_consumers });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetOrCreateJobResp {
+    pub job_id: u64,
+    /// Client handle within the job (used to GC per-client state).
+    pub client_id: u64,
+}
+wire_struct!(GetOrCreateJobResp { job_id, client_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientHeartbeatReq {
+    pub job_id: u64,
+    pub client_id: u64,
+}
+wire_struct!(ClientHeartbeatReq { job_id, client_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientHeartbeatResp {
+    /// Addresses of workers currently running this job's task.
+    pub worker_addrs: Vec<String>,
+    pub job_finished: bool,
+}
+wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReleaseJobReq {
+    pub job_id: u64,
+    pub client_id: u64,
+}
+wire_struct!(ReleaseJobReq { job_id, client_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReleaseJobResp {
+    pub released: bool,
+}
+wire_struct!(ReleaseJobResp { released });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterWorkerReq {
+    /// Address the worker's data server listens on.
+    pub addr: String,
+}
+wire_struct!(RegisterWorkerReq { addr });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterWorkerResp {
+    pub worker_id: u64,
+    /// Tasks for all currently-active jobs.
+    pub tasks: Vec<TaskDef>,
+}
+wire_struct!(RegisterWorkerResp { worker_id, tasks });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerHeartbeatReq {
+    pub worker_id: u64,
+    /// Task (= job) ids the worker is currently running.
+    pub active_tasks: Vec<u64>,
+    /// Mean CPU utilization since last heartbeat, [0, 1] (autoscaler input).
+    pub cpu_util_milli: u32,
+}
+wire_struct!(WorkerHeartbeatReq { worker_id, active_tasks, cpu_util_milli });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerHeartbeatResp {
+    /// Newly-assigned tasks.
+    pub new_tasks: Vec<TaskDef>,
+    /// Jobs that finished / were GC'd: the worker drops their state.
+    pub removed_tasks: Vec<u64>,
+}
+wire_struct!(WorkerHeartbeatResp { new_tasks, removed_tasks });
+
+/// A data-processing task: one job's pipeline on one worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDef {
+    pub job_id: u64,
+    pub dataset_id: u64,
+    pub graph: GraphDef,
+    pub sharding: ShardingPolicy,
+    pub mode: ProcessingMode,
+    pub num_consumers: u32,
+    /// For Static sharding: this worker's pre-assigned shard indices.
+    pub static_shards: Vec<u64>,
+    /// This worker's index among the job's workers at task-creation time
+    /// (drives the coordinated-reads round-robin).
+    pub worker_index: u32,
+    /// Total workers the job had at task-creation time.
+    pub num_workers: u32,
+}
+wire_struct!(TaskDef {
+    job_id,
+    dataset_id,
+    graph,
+    sharding,
+    mode,
+    num_consumers,
+    static_shards,
+    worker_index,
+    num_workers
+});
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetSplitReq {
+    pub job_id: u64,
+    pub worker_id: u64,
+}
+wire_struct!(GetSplitReq { job_id, worker_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetSplitResp {
+    /// Next shard index to process; `None` = end of splits this epoch.
+    pub split: Option<u64>,
+}
+wire_struct!(GetSplitResp { split });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetElementReq {
+    pub job_id: u64,
+    pub client_id: u64,
+    /// Coordinated mode: which consumer slot this client occupies.
+    pub consumer_index: Option<u32>,
+    /// Coordinated mode: the training round being fetched.
+    pub round: Option<u64>,
+    pub compression: CompressionMode,
+}
+wire_struct!(GetElementReq { job_id, client_id, consumer_index, round, compression });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetElementResp {
+    /// Wire-encoded [`crate::data::Element`], possibly deflate-compressed.
+    pub element: Option<Vec<u8>>,
+    pub compressed: bool,
+    /// True when the task has produced everything it ever will.
+    pub end_of_sequence: bool,
+    /// Coordinated mode: this round is not served by this worker — the
+    /// client should ask the worker whose turn it is.
+    pub wrong_worker_for_round: bool,
+}
+wire_struct!(GetElementResp { element, compressed, end_of_sequence, wrong_worker_for_round });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStatusReq {}
+wire_struct!(WorkerStatusReq {});
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStatusResp {
+    pub active_tasks: Vec<u64>,
+    pub buffered_elements: u64,
+    pub elements_produced: u64,
+    pub cache_hits: u64,
+    pub cache_evictions: u64,
+}
+wire_struct!(WorkerStatusResp {
+    active_tasks,
+    buffered_elements,
+    elements_produced,
+    cache_hits,
+    cache_evictions
+});
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::graph::PipelineBuilder;
+    use crate::wire::{Decode, Encode};
+
+    fn rt<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        assert_eq!(T::from_bytes(&v.to_bytes()).unwrap(), v);
+    }
+
+    #[test]
+    fn enums_roundtrip() {
+        rt(ShardingPolicy::Off);
+        rt(ShardingPolicy::Dynamic);
+        rt(ShardingPolicy::Static);
+        rt(ProcessingMode::Independent);
+        rt(ProcessingMode::Coordinated);
+        rt(CompressionMode::Deflate);
+    }
+
+    #[test]
+    fn messages_roundtrip() {
+        let graph = PipelineBuilder::source_range(10).batch(2).build();
+        rt(RegisterDatasetReq { graph: graph.clone() });
+        rt(RegisterDatasetResp { dataset_id: 9 });
+        rt(GetOrCreateJobReq {
+            dataset_id: 9,
+            job_name: "hp-tuning".into(),
+            sharding: ShardingPolicy::Dynamic,
+            mode: ProcessingMode::Coordinated,
+            num_consumers: 4,
+        });
+        rt(GetOrCreateJobResp { job_id: 3, client_id: 8 });
+        rt(ClientHeartbeatReq { job_id: 3, client_id: 8 });
+        rt(ClientHeartbeatResp { worker_addrs: vec!["127.0.0.1:1234".into()], job_finished: false });
+        rt(RegisterWorkerReq { addr: "127.0.0.1:9".into() });
+        rt(RegisterWorkerResp {
+            worker_id: 2,
+            tasks: vec![TaskDef {
+                job_id: 3,
+                dataset_id: 9,
+                graph,
+                sharding: ShardingPolicy::Static,
+                mode: ProcessingMode::Independent,
+                num_consumers: 0,
+                static_shards: vec![0, 2],
+                worker_index: 1,
+                num_workers: 4,
+            }],
+        });
+        rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });
+        rt(WorkerHeartbeatResp { new_tasks: vec![], removed_tasks: vec![3] });
+        rt(GetSplitReq { job_id: 3, worker_id: 2 });
+        rt(GetSplitResp { split: Some(7) });
+        rt(GetSplitResp { split: None });
+        rt(GetElementReq {
+            job_id: 3,
+            client_id: 8,
+            consumer_index: Some(1),
+            round: Some(42),
+            compression: CompressionMode::None,
+        });
+        rt(GetElementResp {
+            element: Some(vec![1, 2, 3]),
+            compressed: false,
+            end_of_sequence: false,
+            wrong_worker_for_round: true,
+        });
+        rt(ReleaseJobReq { job_id: 3, client_id: 8 });
+        rt(ReleaseJobResp { released: true });
+        rt(WorkerStatusResp {
+            active_tasks: vec![1],
+            buffered_elements: 5,
+            elements_produced: 100,
+            cache_hits: 7,
+            cache_evictions: 2,
+        });
+    }
+}

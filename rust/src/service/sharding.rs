@@ -1,0 +1,319 @@
+//! Source-data sharding (§3.3).
+//!
+//! * OFF — no sharding; every worker's pipeline iterates all shards in a
+//!   worker-specific random order (zero-once-or-more visitation).
+//! * DYNAMIC — the dispatcher owns a per-job [`SplitTracker`]; workers
+//!   pull disjoint splits first-come-first-served. Splits lost with a
+//!   failed worker are not redistributed within the epoch (at-most-once).
+//! * STATIC — shard indices dealt round-robin across the worker set at
+//!   task-creation time.
+//!
+//! Worker-side, [`DynamicSplitProvider`] adapts the dispatcher's split RPC
+//! to the pipeline executor's [`SplitProvider`] interface, and
+//! [`ShuffledAllSplits`] provides the OFF-mode random order.
+
+use crate::data::exec::SplitProvider;
+use crate::rpc::Pool;
+use crate::service::proto::{dispatcher_methods, GetSplitReq, GetSplitResp};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Dispatcher-side state for DYNAMIC sharding of one job.
+///
+/// Tracks which worker holds each outstanding split so that a failed
+/// worker's in-flight split is recorded as lost (the at-most-once
+/// accounting the paper describes).
+#[derive(Debug)]
+pub struct SplitTracker {
+    pending: Mutex<SplitTrackerState>,
+}
+
+#[derive(Debug)]
+struct SplitTrackerState {
+    queue: Vec<u64>,
+    /// split -> worker currently processing it.
+    assigned: HashMap<u64, u64>,
+    /// splits irrecoverably lost to worker failures this epoch.
+    lost: Vec<u64>,
+    /// splits fully processed (worker finished or returned for more).
+    completed: Vec<u64>,
+}
+
+impl SplitTracker {
+    /// A tracker over `num_shards` splits, handed out in a shuffled order
+    /// (`seed`-deterministic) for load balancing.
+    pub fn new(num_shards: usize, seed: u64) -> SplitTracker {
+        let mut queue: Vec<u64> = (0..num_shards as u64).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut queue);
+        queue.reverse(); // pop from the back
+        SplitTracker {
+            pending: Mutex::new(SplitTrackerState {
+                queue,
+                assigned: HashMap::new(),
+                lost: Vec::new(),
+                completed: Vec::new(),
+            }),
+        }
+    }
+
+    /// Hand the next split to `worker`. Completes the worker's previous
+    /// split, if any (a worker asks for a new split only after finishing
+    /// the previous one).
+    pub fn next_split(&self, worker: u64) -> Option<u64> {
+        let mut st = self.pending.lock().unwrap();
+        // Worker finished whatever it held.
+        let finished: Vec<u64> = st
+            .assigned
+            .iter()
+            .filter(|&(_, &w)| w == worker)
+            .map(|(&s, _)| s)
+            .collect();
+        for s in finished {
+            st.assigned.remove(&s);
+            st.completed.push(s);
+        }
+        match st.queue.pop() {
+            Some(split) => {
+                st.assigned.insert(split, worker);
+                Some(split)
+            }
+            None => None,
+        }
+    }
+
+    /// Mark a worker dead: its in-flight splits are lost for this epoch
+    /// (at-most-once visitation; §3.4 worker fault tolerance).
+    pub fn worker_failed(&self, worker: u64) -> Vec<u64> {
+        let mut st = self.pending.lock().unwrap();
+        let lost: Vec<u64> = st
+            .assigned
+            .iter()
+            .filter(|&(_, &w)| w == worker)
+            .map(|(&s, _)| s)
+            .collect();
+        for s in &lost {
+            st.assigned.remove(s);
+            st.lost.push(*s);
+        }
+        lost
+    }
+
+    /// Splits not yet handed out.
+    pub fn remaining(&self) -> usize {
+        self.pending.lock().unwrap().queue.len()
+    }
+
+    /// Splits lost to failures.
+    pub fn lost(&self) -> Vec<u64> {
+        self.pending.lock().unwrap().lost.clone()
+    }
+
+    pub fn completed(&self) -> Vec<u64> {
+        self.pending.lock().unwrap().completed.clone()
+    }
+
+    /// Epoch exhausted: nothing queued or in flight.
+    pub fn exhausted(&self) -> bool {
+        let st = self.pending.lock().unwrap();
+        st.queue.is_empty() && st.assigned.is_empty()
+    }
+}
+
+/// Deal `num_shards` shards round-robin across `num_workers` workers;
+/// returns per-worker shard lists (STATIC policy).
+pub fn static_assignment(num_shards: usize, num_workers: usize) -> Vec<Vec<u64>> {
+    let mut out = vec![Vec::new(); num_workers.max(1)];
+    for s in 0..num_shards as u64 {
+        out[(s as usize) % num_workers.max(1)].push(s);
+    }
+    out
+}
+
+/// OFF-mode provider: all shards, in a worker-specific shuffled order that
+/// reshuffles each epoch.
+pub struct ShuffledAllSplits {
+    n: usize,
+    state: Mutex<(Vec<usize>, usize, Rng)>,
+}
+
+impl ShuffledAllSplits {
+    pub fn new(n: usize, seed: u64) -> Arc<ShuffledAllSplits> {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Arc::new(ShuffledAllSplits { n, state: Mutex::new((order, 0, rng)) })
+    }
+}
+
+impl SplitProvider for ShuffledAllSplits {
+    fn next_split(&self) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        if st.1 >= st.0.len() {
+            return None;
+        }
+        let v = st.0[st.1];
+        st.1 += 1;
+        Some(v)
+    }
+
+    fn reset(&self) {
+        let mut st = self.state.lock().unwrap();
+        let (order, pos, rng) = &mut *st;
+        rng.shuffle(order);
+        *pos = 0;
+        let _ = self.n;
+    }
+}
+
+/// Worker-side DYNAMIC provider: pulls splits from the dispatcher over
+/// RPC. `reset` is a no-op — the dispatcher owns epoch boundaries.
+pub struct DynamicSplitProvider {
+    pool: Arc<Pool>,
+    dispatcher_addr: String,
+    job_id: u64,
+    worker_id: u64,
+    deadline: Duration,
+    /// Count of splits obtained (metrics / tests).
+    pub splits_obtained: AtomicUsize,
+}
+
+impl DynamicSplitProvider {
+    pub fn new(pool: Arc<Pool>, dispatcher_addr: String, job_id: u64, worker_id: u64) -> Arc<Self> {
+        Arc::new(DynamicSplitProvider {
+            pool,
+            dispatcher_addr,
+            job_id,
+            worker_id,
+            deadline: Duration::from_secs(10),
+            splits_obtained: AtomicUsize::new(0),
+        })
+    }
+}
+
+impl SplitProvider for DynamicSplitProvider {
+    fn next_split(&self) -> Option<usize> {
+        let req = GetSplitReq { job_id: self.job_id, worker_id: self.worker_id };
+        let resp: GetSplitResp = crate::rpc::call_typed(
+            &self.pool,
+            &self.dispatcher_addr,
+            dispatcher_methods::GET_SPLIT,
+            &req,
+            self.deadline,
+        )
+        .ok()?;
+        let s = resp.split?;
+        self.splits_obtained.fetch_add(1, Ordering::Relaxed);
+        Some(s as usize)
+    }
+
+    fn reset(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn dynamic_splits_are_disjoint_and_complete() {
+        let t = SplitTracker::new(20, 7);
+        let mut seen = HashSet::new();
+        // Two workers pulling interleaved.
+        loop {
+            let a = t.next_split(1);
+            let b = t.next_split(2);
+            for s in [a, b].into_iter().flatten() {
+                assert!(seen.insert(s), "split {s} handed out twice");
+            }
+            if a.is_none() && b.is_none() {
+                break;
+            }
+        }
+        assert_eq!(seen.len(), 20);
+        assert!(t.exhausted());
+    }
+
+    #[test]
+    fn shuffled_handout_differs_from_sequential() {
+        let t = SplitTracker::new(32, 99);
+        let mut order = Vec::new();
+        while let Some(s) = t.next_split(1) {
+            order.push(s);
+        }
+        assert_ne!(order, (0..32).collect::<Vec<u64>>());
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn worker_failure_loses_in_flight_split_only() {
+        let t = SplitTracker::new(4, 1);
+        let s1 = t.next_split(1).unwrap();
+        let _s2 = t.next_split(2).unwrap();
+        let lost = t.worker_failed(1);
+        assert_eq!(lost, vec![s1]);
+        assert_eq!(t.lost(), vec![s1]);
+        // Remaining splits still served; lost split never reappears.
+        let mut rest = Vec::new();
+        while let Some(s) = t.next_split(2) {
+            rest.push(s);
+        }
+        assert!(!rest.contains(&s1));
+        assert!(t.exhausted());
+        // at-most-once: completed + lost + in-flight(0) == total
+        assert_eq!(t.completed().len() + t.lost().len(), 4);
+    }
+
+    #[test]
+    fn next_split_completes_previous() {
+        let t = SplitTracker::new(3, 5);
+        let a = t.next_split(7).unwrap();
+        assert!(t.completed().is_empty());
+        let _b = t.next_split(7).unwrap();
+        assert_eq!(t.completed(), vec![a]);
+    }
+
+    #[test]
+    fn static_assignment_partitions() {
+        let a = static_assignment(10, 3);
+        assert_eq!(a.len(), 3);
+        let mut all: Vec<u64> = a.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<u64>>());
+        // Balanced within 1.
+        let lens: Vec<usize> = a.iter().map(|v| v.len()).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn static_assignment_zero_workers_safe() {
+        let a = static_assignment(3, 0);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shuffled_all_splits_reshuffles_per_epoch() {
+        let p = ShuffledAllSplits::new(16, 3);
+        let mut e1 = Vec::new();
+        while let Some(s) = p.next_split() {
+            e1.push(s);
+        }
+        p.reset();
+        let mut e2 = Vec::new();
+        while let Some(s) = p.next_split() {
+            e2.push(s);
+        }
+        assert_eq!(e1.len(), 16);
+        assert_eq!(e2.len(), 16);
+        assert_ne!(e1, e2, "epochs should reshuffle");
+        let mut s1 = e1.clone();
+        s1.sort_unstable();
+        assert_eq!(s1, (0..16).collect::<Vec<usize>>());
+    }
+}

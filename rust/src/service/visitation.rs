@@ -1,0 +1,145 @@
+//! Data-visitation-guarantee verification (§2, §3.3).
+//!
+//! The paper's central relaxation is trading exactly-once visitation for
+//! at-most-once (dynamic sharding under failures) or zero-once-or-more
+//! (no sharding). Tests and benches feed every consumed element's source
+//! ids into a [`VisitationTracker`] and then assert the guarantee the
+//! active sharding policy promises.
+
+use std::collections::HashMap;
+
+/// Which guarantee to check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Guarantee {
+    /// Every sample seen exactly once.
+    ExactlyOnce,
+    /// No sample seen more than once; misses allowed.
+    AtMostOnce,
+    /// Anything goes (OFF sharding).
+    ZeroOnceOrMore,
+}
+
+/// Accumulates observed sample ids for one epoch.
+#[derive(Debug, Default)]
+pub struct VisitationTracker {
+    counts: HashMap<u64, u64>,
+    total_observations: u64,
+}
+
+/// Verification outcome with enough detail to debug a violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VisitationReport {
+    pub guarantee: Guarantee,
+    pub ok: bool,
+    pub unique_seen: usize,
+    pub duplicates: Vec<u64>,
+    pub missing: Vec<u64>,
+    pub total_observations: u64,
+}
+
+impl VisitationTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one element's contributing sample ids.
+    pub fn observe(&mut self, ids: &[u64]) {
+        for &id in ids {
+            *self.counts.entry(id).or_insert(0) += 1;
+            self.total_observations += 1;
+        }
+    }
+
+    pub fn seen(&self, id: u64) -> u64 {
+        self.counts.get(&id).copied().unwrap_or(0)
+    }
+
+    pub fn unique_seen(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Verify `guarantee` against the universe `0..total_samples`.
+    pub fn verify(&self, guarantee: Guarantee, total_samples: u64) -> VisitationReport {
+        let mut duplicates: Vec<u64> =
+            self.counts.iter().filter(|&(_, &c)| c > 1).map(|(&id, _)| id).collect();
+        duplicates.sort_unstable();
+        let mut missing: Vec<u64> =
+            (0..total_samples).filter(|id| !self.counts.contains_key(id)).collect();
+        missing.sort_unstable();
+        let extraneous = self.counts.keys().any(|&id| id >= total_samples);
+
+        let ok = match guarantee {
+            Guarantee::ExactlyOnce => duplicates.is_empty() && missing.is_empty() && !extraneous,
+            Guarantee::AtMostOnce => duplicates.is_empty() && !extraneous,
+            Guarantee::ZeroOnceOrMore => !extraneous,
+        };
+        VisitationReport {
+            guarantee,
+            ok,
+            unique_seen: self.counts.len(),
+            duplicates,
+            missing,
+            total_observations: self.total_observations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_once_happy_path() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[0, 1, 2]);
+        t.observe(&[3, 4]);
+        let r = t.verify(Guarantee::ExactlyOnce, 5);
+        assert!(r.ok, "{r:?}");
+        assert_eq!(r.unique_seen, 5);
+        assert_eq!(r.total_observations, 5);
+    }
+
+    #[test]
+    fn exactly_once_detects_miss_and_dup() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[0, 1, 1, 3]);
+        let r = t.verify(Guarantee::ExactlyOnce, 4);
+        assert!(!r.ok);
+        assert_eq!(r.duplicates, vec![1]);
+        assert_eq!(r.missing, vec![2]);
+    }
+
+    #[test]
+    fn at_most_once_allows_misses_only() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[0, 2]);
+        assert!(t.verify(Guarantee::AtMostOnce, 4).ok);
+        t.observe(&[2]);
+        let r = t.verify(Guarantee::AtMostOnce, 4);
+        assert!(!r.ok);
+        assert_eq!(r.duplicates, vec![2]);
+    }
+
+    #[test]
+    fn zero_once_or_more_allows_everything_in_range() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[0, 0, 0, 1]);
+        assert!(t.verify(Guarantee::ZeroOnceOrMore, 2).ok);
+    }
+
+    #[test]
+    fn out_of_universe_ids_always_fail() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[99]);
+        assert!(!t.verify(Guarantee::ZeroOnceOrMore, 5).ok);
+        assert!(!t.verify(Guarantee::AtMostOnce, 5).ok);
+    }
+
+    #[test]
+    fn seen_counts() {
+        let mut t = VisitationTracker::new();
+        t.observe(&[7, 7]);
+        assert_eq!(t.seen(7), 2);
+        assert_eq!(t.seen(8), 0);
+    }
+}

@@ -1,0 +1,864 @@
+//! tf.data service worker: the data plane (§3.1).
+//!
+//! A worker registers with the dispatcher, receives dataset-processing
+//! tasks (pipeline graphs), executes them over the storage layer, buffers
+//! results, and serves client `GetElement` RPCs. Workers are stateless
+//! with respect to the dispatcher: a restarted worker re-registers and
+//! receives its tasks again (§3.4).
+//!
+//! Two serving modes per task:
+//!
+//! * **Independent** — results flow into an ephemeral **sliding-window
+//!   cache** ([`SlidingCache`], §3.5) with one cursor per client. Clients
+//!   at the cache front drive production and eviction; laggards that fall
+//!   off the back skip evicted batches (relaxed visitation).
+//! * **Coordinated** ([`CoordinatedState`], §3.6) — the worker serves only
+//!   rounds `r` with `r % num_workers == worker_index`; per round it
+//!   prepares `num_consumers` same-length-bucket batches (the upstream
+//!   graph's `bucket_by_sequence_length` + `group_by_window` produce
+//!   same-bucket runs), one per consumer slot. Coordination never spans
+//!   workers — only rounds do.
+
+use super::proto::*;
+use super::sharding::{DynamicSplitProvider, ShuffledAllSplits};
+use super::{ServiceError, ServiceResult};
+use crate::data::exec::{Executor, ExecutorConfig, SplitProvider};
+use crate::data::udf::UdfRegistry;
+use crate::data::Element;
+use crate::metrics::Registry;
+use crate::rpc::{call_typed, Pool, Server};
+use crate::storage::{ObjectStore, Region};
+use crate::util::chan;
+use crate::wire::{Decode, Encode};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker tuning knobs.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub store: Arc<ObjectStore>,
+    pub udfs: UdfRegistry,
+    /// Region the worker's CPUs live in (storage read costs).
+    pub region: Region,
+    /// Producer output buffer depth (elements) per task.
+    pub buffer_size: usize,
+    /// Sliding-window cache capacity (elements) per task (§3.5).
+    pub cache_window: usize,
+    pub heartbeat_interval: Duration,
+    /// How long GetElement blocks for data before telling the client to
+    /// retry.
+    pub serve_timeout: Duration,
+}
+
+impl WorkerConfig {
+    pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry) -> WorkerConfig {
+        let region = store.region().clone();
+        WorkerConfig {
+            store,
+            udfs,
+            region,
+            buffer_size: 8,
+            cache_window: 16,
+            heartbeat_interval: Duration::from_millis(100),
+            serve_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Ephemeral sliding-window cache with per-client cursors (§3.5, Fig. 5).
+struct SlidingCache {
+    state: Mutex<SlidingCacheState>,
+    cond: Condvar,
+    capacity: usize,
+}
+
+struct SlidingCacheState {
+    /// `window[i]` holds sequence number `base_seq + i`, pre-encoded:
+    /// encoding happens once at production time, so serving the same
+    /// batch to k sharing clients costs k memcpys instead of k deep
+    /// clones + k encodes (§Perf).
+    window: std::collections::VecDeque<Arc<Vec<u8>>>,
+    base_seq: u64,
+    cursors: HashMap<u64, u64>,
+    /// Producer finished (end of dataset).
+    eos: bool,
+    hits: u64,
+    evictions: u64,
+    produced: u64,
+}
+
+enum CacheServe {
+    Bytes(Arc<Vec<u8>>),
+    /// Caller must produce a new element and call `push`.
+    NeedProduce,
+    Eos,
+}
+
+impl SlidingCache {
+    fn new(capacity: usize) -> SlidingCache {
+        SlidingCache {
+            state: Mutex::new(SlidingCacheState {
+                window: Default::default(),
+                base_seq: 0,
+                cursors: HashMap::new(),
+                eos: false,
+                hits: 0,
+                evictions: 0,
+                produced: 0,
+            }),
+            cond: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Try to serve `client` from the cache. Cursor semantics: a new
+    /// client starts at the oldest retained batch; a laggard whose cursor
+    /// was evicted implicitly skips to the oldest retained batch.
+    fn serve(&self, client: u64) -> CacheServe {
+        let mut st = self.state.lock().unwrap();
+        let base = st.base_seq;
+        let cursor = st.cursors.entry(client).or_insert(base);
+        if *cursor < base {
+            *cursor = base; // evicted range skipped (relaxed visitation)
+        }
+        let idx = (*cursor - base) as usize;
+        if idx < st.window.len() {
+            let e = st.window[idx].clone(); // Arc bump, no copy
+            *st.cursors.get_mut(&client).unwrap() += 1;
+            st.hits += 1;
+            return CacheServe::Bytes(e);
+        }
+        if st.eos {
+            return CacheServe::Eos;
+        }
+        CacheServe::NeedProduce
+    }
+
+    /// Front-driven production: append a fresh element (encoded once),
+    /// evicting from the back if over capacity, then wake blocked readers.
+    fn push(&self, e: Element) {
+        let bytes = Arc::new(e.to_bytes());
+        let mut st = self.state.lock().unwrap();
+        st.window.push_back(bytes);
+        st.produced += 1;
+        if st.window.len() > self.capacity {
+            st.window.pop_front();
+            st.base_seq += 1;
+            st.evictions += 1;
+        }
+        self.cond.notify_all();
+    }
+
+    fn set_eos(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.eos = true;
+        self.cond.notify_all();
+    }
+
+    fn stats(&self) -> (u64, u64, u64, usize) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.evictions, st.produced, st.window.len())
+    }
+}
+
+/// Per-round coordinated-read state (§3.6).
+struct CoordinatedState {
+    inner: Mutex<CoordinatedInner>,
+    cond: Condvar,
+    num_consumers: usize,
+    worker_index: u64,
+    num_workers: u64,
+}
+
+struct CoordinatedInner {
+    /// round -> per-consumer slots (None once consumed).
+    rounds: HashMap<u64, Vec<Option<Element>>>,
+    /// Next round this worker will materialize.
+    next_round: u64,
+    eos: bool,
+}
+
+impl CoordinatedState {
+    fn new(num_consumers: usize, worker_index: u64, num_workers: u64) -> CoordinatedState {
+        CoordinatedState {
+            inner: Mutex::new(CoordinatedInner {
+                rounds: HashMap::new(),
+                next_round: worker_index,
+                eos: false,
+            }),
+            cond: Condvar::new(),
+            num_consumers: num_consumers.max(1),
+            worker_index,
+            num_workers: num_workers.max(1),
+        }
+    }
+
+    fn owns_round(&self, round: u64) -> bool {
+        round % self.num_workers == self.worker_index
+    }
+
+    /// Producer side: install the next round's batches (already
+    /// same-bucket thanks to the upstream group_by_window).
+    fn install_round(&self, batches: Vec<Element>) {
+        let mut st = self.inner.lock().unwrap();
+        let round = st.next_round;
+        st.rounds.insert(round, batches.into_iter().map(Some).collect());
+        st.next_round = round + self.num_workers;
+        self.cond.notify_all();
+    }
+
+    fn set_eos(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.eos = true;
+        self.cond.notify_all();
+    }
+
+    /// Consumer side: take `consumer`'s batch for `round`, blocking up to
+    /// `timeout` for the round to materialize.
+    fn take(&self, round: u64, consumer: usize, timeout: Duration) -> ServiceResult<GetElementResp> {
+        if !self.owns_round(round) {
+            return Ok(GetElementResp {
+                element: None,
+                compressed: false,
+                end_of_sequence: false,
+                wrong_worker_for_round: true,
+            });
+        }
+        if consumer >= self.num_consumers {
+            return Err(ServiceError::Other(format!(
+                "consumer index {consumer} out of range ({})",
+                self.num_consumers
+            )));
+        }
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(slots) = st.rounds.get_mut(&round) {
+                let e = slots[consumer].take();
+                let all_taken = slots.iter().all(Option::is_none);
+                if all_taken {
+                    st.rounds.remove(&round);
+                }
+                return match e {
+                    Some(elem) => Ok(GetElementResp {
+                        element: Some(elem.to_bytes()),
+                        compressed: false,
+                        end_of_sequence: false,
+                        wrong_worker_for_round: false,
+                    }),
+                    None => Err(ServiceError::Other(format!(
+                        "consumer {consumer} fetched round {round} twice"
+                    ))),
+                };
+            }
+            if round < st.next_round {
+                // The round was materialized and fully consumed already —
+                // a client asking again is a protocol violation.
+                return Err(ServiceError::Other(format!("round {round} already consumed")));
+            }
+            if st.eos && round >= st.next_round {
+                return Ok(GetElementResp {
+                    element: None,
+                    compressed: false,
+                    end_of_sequence: true,
+                    wrong_worker_for_round: false,
+                });
+            }
+            if st.eos || Instant::now() >= deadline {
+                // Round will never materialize (or timeout): if eos, it's
+                // the end; otherwise ask the client to retry.
+                return Ok(GetElementResp {
+                    element: None,
+                    compressed: false,
+                    end_of_sequence: st.eos,
+                    wrong_worker_for_round: false,
+                });
+            }
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let (next, _) = self.cond.wait_timeout(st, wait).unwrap();
+            st = next;
+        }
+    }
+}
+
+enum TaskState {
+    Independent {
+        cache: Arc<SlidingCache>,
+        /// Producer output channel the serve path drains on demand.
+        rx: chan::Receiver<Element>,
+    },
+    Coordinated(Arc<CoordinatedState>),
+}
+
+struct TaskRunner {
+    #[allow(dead_code)]
+    job_id: u64,
+    state: TaskState,
+    stop: Arc<AtomicBool>,
+    /// Nanoseconds of producer busy time (CPU-utilization signal).
+    busy_ns: Arc<AtomicU64>,
+}
+
+struct WorkerShared {
+    cfg: WorkerConfig,
+    tasks: Mutex<HashMap<u64, Arc<TaskRunner>>>,
+    metrics: Registry,
+    pool: Arc<Pool>,
+    dispatcher_addr: String,
+    worker_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running worker: data server + heartbeat loop.
+pub struct Worker {
+    shared: Arc<WorkerShared>,
+    server: Server,
+    hb_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Start a worker, register with the dispatcher, and begin
+    /// heartbeating. `addr` is the data-server bind address (port 0 ok).
+    pub fn start(addr: &str, dispatcher_addr: &str, cfg: WorkerConfig) -> ServiceResult<Worker> {
+        let pool = Arc::new(Pool::with_defaults());
+        let shared = Arc::new(WorkerShared {
+            cfg,
+            tasks: Mutex::new(HashMap::new()),
+            metrics: Registry::new(),
+            pool,
+            dispatcher_addr: dispatcher_addr.to_string(),
+            worker_id: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+
+        let s2 = shared.clone();
+        let server = Server::bind(addr, move |method: u16, payload: &[u8]| {
+            serve(&s2, method, payload).map_err(|e| e.to_string())
+        })
+        .map_err(|e| ServiceError::Other(format!("bind: {e}")))?;
+        let my_addr = server.local_addr().to_string();
+
+        // Register: returns our id plus tasks for all active jobs.
+        let resp: RegisterWorkerResp = call_typed(
+            &shared.pool,
+            dispatcher_addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: my_addr.clone() },
+            Duration::from_secs(10),
+        )?;
+        shared.worker_id.store(resp.worker_id, Ordering::SeqCst);
+        for task in resp.tasks {
+            start_task(&shared, task);
+        }
+
+        // Heartbeat loop.
+        let s3 = shared.clone();
+        let hb = std::thread::Builder::new()
+            .name(format!("worker-hb-{my_addr}"))
+            .spawn(move || heartbeat_loop(s3))
+            .ok();
+
+        Ok(Worker { shared, server, hb_thread: hb })
+    }
+
+    pub fn addr(&self) -> String {
+        self.server.local_addr().to_string()
+    }
+
+    pub fn worker_id(&self) -> u64 {
+        self.shared.worker_id.load(Ordering::SeqCst)
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.shared.metrics
+    }
+
+    pub fn active_tasks(&self) -> Vec<u64> {
+        self.shared.tasks.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Stop producers, heartbeats, and the data server (worker preemption).
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for t in self.shared.tasks.lock().unwrap().values() {
+            t.stop.store(true, Ordering::SeqCst);
+        }
+        self.server.shutdown();
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.hb_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn heartbeat_loop(shared: Arc<WorkerShared>) {
+    let mut last_busy = 0u64;
+    let mut last_t = Instant::now();
+    while !shared.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(shared.cfg.heartbeat_interval);
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let active: Vec<u64> = shared.tasks.lock().unwrap().keys().copied().collect();
+        // CPU utilization signal: producer busy time per wallclock.
+        let busy_now: u64 = shared
+            .tasks
+            .lock()
+            .unwrap()
+            .values()
+            .map(|t| t.busy_ns.load(Ordering::Relaxed))
+            .sum();
+        let elapsed = last_t.elapsed().as_nanos().max(1) as u64;
+        let util_milli = ((busy_now.saturating_sub(last_busy)) * 1000 / elapsed).min(8000) as u32;
+        last_busy = busy_now;
+        last_t = Instant::now();
+
+        let req = WorkerHeartbeatReq {
+            worker_id: shared.worker_id.load(Ordering::SeqCst),
+            active_tasks: active,
+            cpu_util_milli: util_milli,
+        };
+        let resp: Result<WorkerHeartbeatResp, _> = call_typed(
+            &shared.pool,
+            &shared.dispatcher_addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &req,
+            Duration::from_secs(5),
+        );
+        match resp {
+            Ok(resp) => {
+                for task in resp.new_tasks {
+                    start_task(&shared, task);
+                }
+                if !resp.removed_tasks.is_empty() {
+                    let mut tasks = shared.tasks.lock().unwrap();
+                    for id in resp.removed_tasks {
+                        if let Some(t) = tasks.remove(&id) {
+                            t.stop.store(true, Ordering::SeqCst);
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                // Dispatcher down: keep producing for active jobs (§3.4).
+                shared.metrics.counter("worker/heartbeat_failures").inc();
+            }
+        }
+    }
+}
+
+/// Spawn the producer thread(s) for a task and register its serving state.
+fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
+    let mut tasks = shared.tasks.lock().unwrap();
+    if tasks.contains_key(&task.job_id) {
+        return; // already running (duplicate delivery is fine)
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let busy_ns = Arc::new(AtomicU64::new(0));
+    let worker_id = shared.worker_id.load(Ordering::SeqCst);
+
+    // Split provider per sharding policy.
+    let num_shards = super::graph_num_shards(&task.graph);
+    let splits: Arc<dyn SplitProvider> = match task.sharding {
+        ShardingPolicy::Off => ShuffledAllSplits::new(num_shards, worker_id ^ task.job_id),
+        ShardingPolicy::Dynamic => DynamicSplitProvider::new(
+            shared.pool.clone(),
+            shared.dispatcher_addr.clone(),
+            task.job_id,
+            worker_id,
+        ),
+        ShardingPolicy::Static => {
+            crate::data::exec::FixedSplits::new(task.static_shards.iter().map(|&s| s as usize).collect())
+        }
+    };
+    let exec_cfg = ExecutorConfig {
+        store: shared.cfg.store.clone(),
+        udfs: shared.cfg.udfs.clone(),
+        region: shared.cfg.region.clone(),
+        splits,
+        autotune: Arc::new(crate::data::autotune::AutotuneState::default()),
+    };
+
+    let state = match task.mode {
+        ProcessingMode::Independent => {
+            let cache = Arc::new(SlidingCache::new(shared.cfg.cache_window));
+            let (tx, rx) = chan::bounded::<Element>(shared.cfg.buffer_size);
+            spawn_producer(shared, &task, exec_cfg, stop.clone(), busy_ns.clone(), move |e| {
+                tx.send(e).is_ok()
+            }, {
+                let cache = cache.clone();
+                move || cache.set_eos()
+            });
+            TaskState::Independent { cache, rx }
+        }
+        ProcessingMode::Coordinated => {
+            let coord = Arc::new(CoordinatedState::new(
+                task.num_consumers as usize,
+                task.worker_index as u64,
+                task.num_workers as u64,
+            ));
+            let c2 = coord.clone();
+            let m = task.num_consumers as usize;
+            let pending = Arc::new(Mutex::new(Vec::<Element>::with_capacity(m)));
+            let p2 = pending.clone();
+            spawn_producer(
+                shared,
+                &task,
+                exec_cfg,
+                stop.clone(),
+                busy_ns.clone(),
+                move |e| {
+                    let mut buf = p2.lock().unwrap();
+                    buf.push(e);
+                    if buf.len() == m {
+                        let batches = std::mem::take(&mut *buf);
+                        // Block if too many rounds are queued (backpressure).
+                        loop {
+                            let depth = c2.inner.lock().unwrap().rounds.len();
+                            if depth < 8 {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        c2.install_round(batches);
+                    }
+                    true
+                },
+                {
+                    let coord = coord.clone();
+                    move || coord.set_eos()
+                },
+            );
+            TaskState::Coordinated(coord)
+        }
+    };
+
+    let runner = Arc::new(TaskRunner { job_id: task.job_id, state, stop, busy_ns });
+    tasks.insert(task.job_id, runner);
+    shared.metrics.counter("worker/tasks_started").inc();
+}
+
+/// Producer thread: run the pipeline, handing each element to `sink`
+/// (returns false to stop), then `on_eos`.
+fn spawn_producer(
+    shared: &Arc<WorkerShared>,
+    task: &TaskDef,
+    exec_cfg: ExecutorConfig,
+    stop: Arc<AtomicBool>,
+    busy_ns: Arc<AtomicU64>,
+    mut sink: impl FnMut(Element) -> bool + Send + 'static,
+    on_eos: impl FnOnce() + Send + 'static,
+) {
+    let graph = task.graph.clone();
+    let metrics = shared.metrics.clone();
+    let job_id = task.job_id;
+    std::thread::Builder::new()
+        .name(format!("producer-{job_id}"))
+        .spawn(move || {
+            let ex = Executor::new(exec_cfg);
+            let mut it = match ex.iterate(&graph) {
+                Ok(it) => it,
+                Err(e) => {
+                    metrics.counter("worker/pipeline_errors").inc();
+                    log::error!("job {job_id}: pipeline build failed: {e}");
+                    on_eos();
+                    return;
+                }
+            };
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let t0 = Instant::now();
+                match it.next() {
+                    Ok(Some(e)) => {
+                        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        metrics.counter("worker/elements_produced").inc();
+                        if !sink(e) {
+                            break;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        metrics.counter("worker/pipeline_errors").inc();
+                        log::error!("job {job_id}: pipeline error: {e}");
+                        break;
+                    }
+                }
+            }
+            on_eos();
+        })
+        .ok();
+}
+
+/// Data-server RPC demux.
+fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResult<Vec<u8>> {
+    match method {
+        worker_methods::GET_ELEMENT => {
+            let req = GetElementReq::from_bytes(payload)?;
+            Ok(get_element(shared, req)?.to_bytes())
+        }
+        worker_methods::WORKER_STATUS => {
+            let _ = WorkerStatusReq::from_bytes(payload)?;
+            Ok(status(shared).to_bytes())
+        }
+        other => Err(ServiceError::Other(format!("worker: unknown method {other}"))),
+    }
+}
+
+fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<GetElementResp> {
+    let runner = shared
+        .tasks
+        .lock()
+        .unwrap()
+        .get(&req.job_id)
+        .cloned()
+        .ok_or(ServiceError::UnknownJob(req.job_id))?;
+
+    let mut resp = match (&runner.state, req.consumer_index, req.round) {
+        (TaskState::Coordinated(coord), Some(ci), Some(round)) => {
+            coord.take(round, ci as usize, shared.cfg.serve_timeout)?
+        }
+        (TaskState::Coordinated(_), _, _) => {
+            return Err(ServiceError::Other(
+                "coordinated job requires consumer_index and round".into(),
+            ))
+        }
+        (TaskState::Independent { cache, rx }, _, _) => {
+            serve_independent(cache, rx, req.client_id, shared.cfg.serve_timeout)
+        }
+    };
+
+    if req.compression == CompressionMode::Deflate {
+        if let Some(bytes) = resp.element.take() {
+            resp.element = Some(deflate(&bytes)?);
+            resp.compressed = true;
+        }
+    }
+    shared.metrics.counter("worker/get_element_calls").inc();
+    Ok(resp)
+}
+
+fn serve_independent(
+    cache: &Arc<SlidingCache>,
+    rx: &chan::Receiver<Element>,
+    client_id: u64,
+    timeout: Duration,
+) -> GetElementResp {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match cache.serve(client_id) {
+            CacheServe::Bytes(b) => {
+                return GetElementResp {
+                    element: Some(b.as_ref().clone()),
+                    compressed: false,
+                    end_of_sequence: false,
+                    wrong_worker_for_round: false,
+                }
+            }
+            CacheServe::Eos => {
+                // The producer sets EOS after its last send; elements may
+                // still be sitting in the channel — drain them first.
+                if let Some(e) = rx.try_recv() {
+                    cache.push(e);
+                    continue;
+                }
+                return GetElementResp {
+                    element: None,
+                    compressed: false,
+                    end_of_sequence: true,
+                    wrong_worker_for_round: false,
+                };
+            }
+            CacheServe::NeedProduce => {
+                // Front client: pull a fresh element from the producer.
+                let wait = deadline.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    return GetElementResp {
+                        element: None,
+                        compressed: false,
+                        end_of_sequence: false,
+                        wrong_worker_for_round: false,
+                    };
+                }
+                match rx.recv_timeout(wait.min(Duration::from_millis(100))) {
+                    Ok(Some(e)) => cache.push(e),
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            return GetElementResp {
+                                element: None,
+                                compressed: false,
+                                end_of_sequence: false,
+                                wrong_worker_for_round: false,
+                            };
+                        }
+                    }
+                    Err(_) => cache.set_eos(),
+                }
+            }
+        }
+    }
+}
+
+fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
+    let tasks = shared.tasks.lock().unwrap();
+    let mut buffered = 0u64;
+    let mut hits = 0u64;
+    let mut evictions = 0u64;
+    for t in tasks.values() {
+        if let TaskState::Independent { cache, .. } = &t.state {
+            let (h, ev, _p, window) = cache.stats();
+            hits += h;
+            evictions += ev;
+            buffered += window as u64;
+        }
+    }
+    WorkerStatusResp {
+        active_tasks: tasks.keys().copied().collect(),
+        buffered_elements: buffered,
+        elements_produced: shared.metrics.counter("worker/elements_produced").get(),
+        cache_hits: hits,
+        cache_evictions: evictions,
+    }
+}
+
+fn deflate(bytes: &[u8]) -> ServiceResult<Vec<u8>> {
+    let mut enc = flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+    enc.write_all(bytes).map_err(|e| ServiceError::Other(e.to_string()))?;
+    enc.finish().map_err(|e| ServiceError::Other(e.to_string()))
+}
+
+/// Inverse of [`deflate`] (client side).
+pub fn inflate(bytes: &[u8]) -> ServiceResult<Vec<u8>> {
+    let mut dec = flate2::read::DeflateDecoder::new(bytes);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out).map_err(|e| ServiceError::Other(e.to_string()))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::element::Tensor;
+
+    fn elem(v: i32) -> Element {
+        Element::with_ids(vec![Tensor::scalar_i32(v)], vec![v as u64])
+    }
+
+    #[test]
+    fn sliding_cache_serves_in_order() {
+        let c = SlidingCache::new(4);
+        for i in 0..3 {
+            c.push(elem(i));
+        }
+        for i in 0..3 {
+            match c.serve(1) {
+                CacheServe::Bytes(b) => {
+                    let e = Element::from_bytes(&b).unwrap();
+                    assert_eq!(e.tensors[0].as_i32(), vec![i]);
+                }
+                _ => panic!("expected element"),
+            }
+        }
+        assert!(matches!(c.serve(1), CacheServe::NeedProduce));
+        c.set_eos();
+        assert!(matches!(c.serve(1), CacheServe::Eos));
+    }
+
+    #[test]
+    fn sliding_cache_shares_across_clients() {
+        let c = SlidingCache::new(8);
+        for i in 0..4 {
+            c.push(elem(i));
+        }
+        // Two clients each see all four cached elements: one production,
+        // two consumptions — the §3.5 CPU saving.
+        for client in [1, 2] {
+            for i in 0..4 {
+                match c.serve(client) {
+                    CacheServe::Bytes(b) => {
+                        let e = Element::from_bytes(&b).unwrap();
+                        assert_eq!(e.tensors[0].as_i32(), vec![i]);
+                    }
+                    _ => panic!(),
+                }
+            }
+        }
+        let (hits, evictions, produced, _) = c.stats();
+        assert_eq!(hits, 8);
+        assert_eq!(produced, 4);
+        assert_eq!(evictions, 0);
+    }
+
+    #[test]
+    fn sliding_cache_evicts_and_laggard_skips() {
+        let c = SlidingCache::new(2);
+        for i in 0..5 {
+            c.push(elem(i)); // window holds {3, 4} afterwards
+        }
+        let (_, evictions, _, window) = c.stats();
+        assert_eq!(evictions, 3);
+        assert_eq!(window, 2);
+        // A client that never read anything starts at the oldest retained
+        // element (3), silently skipping 0..2 (Fig. 5's evicted batches).
+        match c.serve(9) {
+            CacheServe::Bytes(b) => {
+                let e = Element::from_bytes(&b).unwrap();
+                assert_eq!(e.tensors[0].as_i32(), vec![3]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn coordinated_round_ownership() {
+        let c = CoordinatedState::new(2, 1, 4);
+        assert!(!c.owns_round(0));
+        assert!(c.owns_round(1));
+        assert!(c.owns_round(5));
+        let r = c.take(0, 0, Duration::from_millis(10)).unwrap();
+        assert!(r.wrong_worker_for_round);
+    }
+
+    #[test]
+    fn coordinated_round_serves_each_consumer_once() {
+        let c = CoordinatedState::new(2, 0, 1);
+        c.install_round(vec![elem(10), elem(11)]);
+        let a = c.take(0, 0, Duration::from_millis(100)).unwrap();
+        let b = c.take(0, 1, Duration::from_millis(100)).unwrap();
+        assert!(a.element.is_some() && b.element.is_some());
+        let ea = Element::from_bytes(&a.element.unwrap()).unwrap();
+        let eb = Element::from_bytes(&b.element.unwrap()).unwrap();
+        assert_eq!(ea.tensors[0].as_i32(), vec![10]);
+        assert_eq!(eb.tensors[0].as_i32(), vec![11]);
+        // Double-fetch is an error.
+        assert!(c.take(0, 0, Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn coordinated_eos_after_last_round() {
+        let c = CoordinatedState::new(1, 0, 1);
+        c.install_round(vec![elem(1)]);
+        c.set_eos();
+        let r = c.take(0, 0, Duration::from_millis(50)).unwrap();
+        assert!(r.element.is_some());
+        let r2 = c.take(1, 0, Duration::from_millis(50)).unwrap();
+        assert!(r2.end_of_sequence);
+    }
+
+    #[test]
+    fn deflate_inflate_roundtrip() {
+        let data = vec![7u8; 10_000];
+        let z = deflate(&data).unwrap();
+        assert!(z.len() < data.len() / 2);
+        assert_eq!(inflate(&z).unwrap(), data);
+    }
+}

@@ -1,0 +1,204 @@
+//! Coordinated-reads straggler model (§3.6, §4.4, Fig. 11).
+//!
+//! Synchronous distributed training: per step, each of `n` clients gets a
+//! padded batch; the step's wall time is the *max* of per-client compute
+//! times (everyone waits for the straggler) plus a sync overhead.
+//! Per-client compute scales with the padded token count.
+//!
+//! * **Uncoordinated**: each client's batch is drawn independently; its
+//!   padded length is the max sample length in the batch — long-tailed,
+//!   so the per-step max across clients is badly skewed.
+//! * **Coordinated**: per step all clients receive batches from the same
+//!   length bucket; padded length ≈ the bucket's bound and is equal
+//!   across clients, eliminating both excess padding and the straggler.
+//!
+//! Speedup = mean uncoordinated step time / mean coordinated step time,
+//! compared at equal *useful* (unpadded) token throughput.
+
+use super::models::ModelSpec;
+use crate::util::rng::Rng;
+
+/// Simulation knobs.
+#[derive(Debug, Clone)]
+pub struct CoordSimConfig {
+    pub batch_size: usize,
+    pub steps: u64,
+    pub seed: u64,
+    /// Fixed per-step synchronization overhead as a fraction of the
+    /// compute time of a full-length batch.
+    pub sync_overhead: f64,
+    /// Override the model's `fixed_compute_fraction` (tests/ablations).
+    pub fixed_compute_override: Option<f64>,
+}
+
+impl Default for CoordSimConfig {
+    fn default() -> Self {
+        CoordSimConfig {
+            batch_size: 32,
+            steps: 300,
+            seed: 0xc0_0d,
+            sync_overhead: 0.05,
+            fixed_compute_override: None,
+        }
+    }
+}
+
+/// Outcome of one comparison.
+#[derive(Debug, Clone)]
+pub struct CoordSimResult {
+    pub uncoordinated_step_time: f64,
+    pub coordinated_step_time: f64,
+    pub speedup: f64,
+    pub uncoordinated_padding_fraction: f64,
+    pub coordinated_padding_fraction: f64,
+}
+
+fn draw_len(rng: &mut Rng, mu: f64, sigma: f64, max: u32) -> u32 {
+    (rng.lognormal(mu, sigma) as u32).clamp(1, max)
+}
+
+/// Compute time of one padded batch, normalized so a full-length batch
+/// costs 1.0: `fixed + (1-fixed) * padded_len/max_len`.
+fn batch_compute(padded_len: u32, max_len: u32, fixed_frac: f64) -> f64 {
+    fixed_frac + (1.0 - fixed_frac) * padded_len as f64 / max_len as f64
+}
+
+/// Run the comparison for one NLP model.
+pub fn simulate_coordinated_reads(model: &ModelSpec, cfg: &CoordSimConfig) -> CoordSimResult {
+    let (mu, sigma, max_len) =
+        model.seq_len_dist.expect("coordinated-reads sim needs an NLP model");
+    let n_clients = model.accelerators.max(1);
+    let bucket = model.bucket_width.max(1);
+    let fixed_frac = cfg.fixed_compute_override.unwrap_or(model.fixed_compute_fraction);
+    let mut rng = Rng::new(cfg.seed);
+
+    // ---- Uncoordinated: independent batches, padded to batch max ----
+    let mut un_time = 0.0;
+    let mut un_tokens_padded = 0u64;
+    let mut un_tokens_real = 0u64;
+    for _ in 0..cfg.steps {
+        let mut worst = 0.0f64;
+        for _ in 0..n_clients {
+            let mut batch_max = 0u32;
+            let mut real = 0u64;
+            for _ in 0..cfg.batch_size {
+                let l = draw_len(&mut rng, mu, sigma, max_len);
+                batch_max = batch_max.max(l);
+                real += l as u64;
+            }
+            un_tokens_padded += (batch_max as u64) * cfg.batch_size as u64;
+            un_tokens_real += real;
+            worst = worst.max(batch_compute(batch_max, max_len, fixed_frac));
+        }
+        un_time += worst + cfg.sync_overhead;
+    }
+
+    // ---- Coordinated: per step, all clients serve the same bucket ----
+    // Build a long sample stream, bucketize, then deal per-bucket batches
+    // round-robin to rounds (the worker-side group_by_window effect).
+    let mut co_time = 0.0;
+    let mut co_tokens_padded = 0u64;
+    let mut co_tokens_real = 0u64;
+    let n_buckets = (max_len as usize).div_ceil(bucket as usize);
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_buckets];
+    // Enough samples for the same number of steps.
+    for _ in 0..cfg.steps as usize * n_clients * cfg.batch_size {
+        let l = draw_len(&mut rng, mu, sigma, max_len);
+        buckets[((l - 1) / bucket) as usize].push(l);
+    }
+    let mut steps_done = 0u64;
+    'outer: loop {
+        for b in 0..n_buckets {
+            // One round = n_clients batches from bucket b.
+            while buckets[b].len() >= n_clients * cfg.batch_size {
+                if steps_done >= cfg.steps {
+                    break 'outer;
+                }
+                let mut worst = 0.0f64;
+                for _ in 0..n_clients {
+                    let drained: Vec<u32> =
+                        buckets[b].drain(..cfg.batch_size).collect();
+                    let batch_max = *drained.iter().max().unwrap();
+                    let real: u64 = drained.iter().map(|&l| l as u64).sum();
+                    co_tokens_padded += (batch_max as u64) * cfg.batch_size as u64;
+                    co_tokens_real += real;
+                    worst = worst.max(batch_compute(batch_max, max_len, fixed_frac));
+                }
+                co_time += worst + cfg.sync_overhead;
+                steps_done += 1;
+            }
+        }
+        if steps_done >= cfg.steps {
+            break;
+        }
+        // Not enough stock left in any bucket: top up.
+        for _ in 0..n_clients * cfg.batch_size * 4 {
+            let l = draw_len(&mut rng, mu, sigma, max_len);
+            buckets[((l - 1) / bucket) as usize].push(l);
+        }
+    }
+
+    // Normalize per *useful token*: both modes must train on the same
+    // data volume for the comparison to be fair.
+    let un_per_token = un_time / un_tokens_real as f64;
+    let co_per_token = co_time / co_tokens_real as f64;
+    CoordSimResult {
+        uncoordinated_step_time: un_time / cfg.steps as f64,
+        coordinated_step_time: co_time / steps_done.max(1) as f64,
+        speedup: un_per_token / co_per_token,
+        uncoordinated_padding_fraction: 1.0 - un_tokens_real as f64 / un_tokens_padded.max(1) as f64,
+        coordinated_padding_fraction: 1.0 - co_tokens_real as f64 / co_tokens_padded.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::models::model;
+
+    #[test]
+    fn coordination_always_helps_nlp() {
+        for name in ["M5", "M6", "M7", "M8"] {
+            let r = simulate_coordinated_reads(model(name), &CoordSimConfig::default());
+            assert!(r.speedup > 1.2, "{name}: speedup {:.2}", r.speedup);
+            assert!(
+                r.coordinated_padding_fraction < r.uncoordinated_padding_fraction,
+                "{name}: padding must shrink"
+            );
+        }
+    }
+
+    #[test]
+    fn speedups_land_near_paper() {
+        // Fig. 11: M5 1.62x, M6 1.53x, M7 3.5x, M8 2.15x. Require the
+        // calibrated sim within 30% of each and the ordering preserved
+        // for the extremes.
+        let mut got = std::collections::HashMap::new();
+        for name in ["M5", "M6", "M7", "M8"] {
+            let m = model(name);
+            let r = simulate_coordinated_reads(m, &CoordSimConfig::default());
+            let rel = (r.speedup - m.paper_speedup).abs() / m.paper_speedup;
+            assert!(rel < 0.3, "{name}: got {:.2}, paper {:.2}", r.speedup, m.paper_speedup);
+            got.insert(name, r.speedup);
+        }
+        assert!(got["M7"] > got["M5"], "M7 (3.5x) must beat M5 (1.62x)");
+        assert!(got["M7"] > got["M6"], "M7 must beat M6");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = model("M5");
+        let a = simulate_coordinated_reads(m, &CoordSimConfig::default());
+        let b = simulate_coordinated_reads(m, &CoordSimConfig::default());
+        assert_eq!(a.speedup, b.speedup);
+    }
+
+    #[test]
+    fn uniform_lengths_gain_little() {
+        // With near-uniform lengths there are no stragglers to remove.
+        let mut m = model("M5").clone();
+        m.seq_len_dist = Some((5.5, 0.05, 512));
+        let r = simulate_coordinated_reads(&m, &CoordSimConfig::default());
+        assert!(r.speedup < 1.25, "no skew => little gain, got {:.2}", r.speedup);
+    }
+}

@@ -1,0 +1,317 @@
+//! Discrete-event simulation of one training job.
+//!
+//! Entities: `n_workers` preprocessing workers (rate-limited batch
+//! producers), one logical client pool consuming batches at accelerator
+//! speed through a bounded buffer with backpressure. Per-worker rates are
+//! calibrated directly from the paper's observables
+//! ([`ModelSpec::per_worker_bps`], from the Fig. 9 sweep for M1 and
+//! `service_bps / paper_workers` otherwise); colocated mode produces at
+//! the measured colocated rate. Per batch,
+//!
+//! ```text
+//! t_batch = max(1 / rate, io_time)                   (pipelined I/O)
+//! ```
+//!
+//! where `io_time` models storage reads (latency + bytes/bandwidth; the
+//! §4.2 cross-region scenario). The client additionally caps throughput
+//! at `service_bps` when disaggregated — the deserialize/copy ingest
+//! bound that left M2 8% short of ideal.
+//!
+//! Outputs: steady-state throughput, accelerator utilization/stall, and
+//! mean worker utilization (the autoscaler signal).
+
+use super::models::ModelSpec;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulation setup for one job.
+#[derive(Debug, Clone)]
+pub struct JobSimConfig {
+    /// Remote preprocessing workers. 0 = colocated mode.
+    pub n_workers: usize,
+    /// Client-side buffer capacity (batches) — backpressure bound.
+    pub buffer_cap: usize,
+    /// Per-batch storage I/O time (seconds) for whoever preprocesses;
+    /// ~0 in-region, dominant cross-region (§4.2).
+    pub io_time_per_batch: f64,
+    /// Steps to simulate (each consumes `accelerators` batches).
+    pub steps: u64,
+}
+
+impl Default for JobSimConfig {
+    fn default() -> Self {
+        JobSimConfig { n_workers: 0, buffer_cap: 64, io_time_per_batch: 0.0, steps: 400 }
+    }
+}
+
+/// Simulation outputs.
+#[derive(Debug, Clone)]
+pub struct JobSimResult {
+    pub throughput_bps: f64,
+    /// Fraction of wall time accelerators were computing.
+    pub accel_utilization: f64,
+    /// Fraction of wall time accelerators waited for data.
+    pub accel_stall_fraction: f64,
+    /// Mean worker busy fraction (CPU utilization signal).
+    pub worker_utilization: f64,
+    pub sim_seconds: f64,
+}
+
+#[derive(Debug, PartialEq)]
+struct Event {
+    time: f64,
+    kind: EventKind,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum EventKind {
+    BatchReady(usize),
+    StepDone,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.partial_cmp(&other.time).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Run the DES.
+pub fn simulate_job(model: &ModelSpec, cfg: &JobSimConfig) -> JobSimResult {
+    let colocated = cfg.n_workers == 0;
+    let producers = if colocated { 1 } else { cfg.n_workers };
+    let base_rate = if colocated { model.colocated_bps } else { model.per_worker_bps };
+    let batch_time = (1.0 / base_rate).max(cfg.io_time_per_batch);
+    // Client ingest bound (deserialize + copies) only applies to remote
+    // batches; it is what keeps M2 8% below ideal.
+    let ingest_floor = if colocated {
+        0.0
+    } else {
+        model.accelerators as f64 / model.service_bps
+    };
+    let step_time = model.accel_step_time().max(ingest_floor);
+    let per_step_batches = model.accelerators.max(1) as u64;
+
+    let mut queue: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    for w in 0..producers {
+        let t = batch_time * (1.0 + w as f64 / producers as f64);
+        queue.push(Reverse(Event { time: t, kind: EventKind::BatchReady(w) }));
+    }
+
+    let mut now = 0.0f64;
+    let mut buffered = 0u64;
+    let mut steps_done = 0u64;
+    let mut accel_busy_until = 0.0f64;
+    let mut accel_busy_total = 0.0f64;
+    let mut batches_produced = 0u64;
+    let mut accel_idle_since: Option<f64> = Some(0.0);
+    let mut stall_total = 0.0f64;
+    // Steady-state measurement starts at the first step (excludes the
+    // pipeline warm-up, which the paper's steady-state batches/s also
+    // excludes).
+    let mut first_step_start: Option<f64> = None;
+    // Workers blocked on a full buffer (backpressure).
+    let mut stalled: Vec<usize> = Vec::new();
+
+    while steps_done < cfg.steps {
+        let Some(Reverse(ev)) = queue.pop() else { break };
+        now = ev.time;
+        match ev.kind {
+            EventKind::BatchReady(w) => {
+                batches_produced += 1;
+                if buffered < cfg.buffer_cap as u64 {
+                    buffered += 1;
+                    queue.push(Reverse(Event { time: now + batch_time, kind: EventKind::BatchReady(w) }));
+                } else {
+                    // Buffer full: worker parks, holding its finished
+                    // batch, until a step drains the buffer.
+                    stalled.push(w);
+                    batches_produced -= 1; // counted on delivery instead
+                }
+                if now >= accel_busy_until && buffered >= per_step_batches {
+                    if let Some(since) = accel_idle_since.take() {
+                        if first_step_start.is_some() {
+                            stall_total += now - since;
+                        }
+                    }
+                    first_step_start.get_or_insert(now);
+                    buffered -= per_step_batches;
+                    accel_busy_until = now + step_time;
+                    accel_busy_total += step_time;
+                    queue.push(Reverse(Event { time: accel_busy_until, kind: EventKind::StepDone }));
+                }
+            }
+            EventKind::StepDone => {
+                steps_done += 1;
+                // Space freed: parked workers deliver their held batch
+                // immediately (worker-side prefetch), then resume
+                // producing.
+                while buffered < cfg.buffer_cap as u64 {
+                    match stalled.pop() {
+                        Some(w) => {
+                            buffered += 1;
+                            batches_produced += 1;
+                            queue.push(Reverse(Event {
+                                time: now + batch_time,
+                                kind: EventKind::BatchReady(w),
+                            }));
+                        }
+                        None => break,
+                    }
+                }
+                if buffered >= per_step_batches {
+                    buffered -= per_step_batches;
+                    accel_busy_until = now + step_time;
+                    accel_busy_total += step_time;
+                    queue.push(Reverse(Event { time: accel_busy_until, kind: EventKind::StepDone }));
+                } else {
+                    accel_idle_since = Some(now);
+                }
+            }
+        }
+    }
+
+    let t0 = first_step_start.unwrap_or(0.0);
+    let wall = (now - t0).max(1e-9);
+    JobSimResult {
+        throughput_bps: (steps_done * per_step_batches) as f64 / wall,
+        accel_utilization: accel_busy_total / wall,
+        accel_stall_fraction: stall_total / wall,
+        worker_utilization: ((batches_produced as f64 * batch_time)
+            / (now.max(1e-9) * producers as f64))
+            .min(1.0),
+        sim_seconds: wall,
+    }
+}
+
+/// Convenience: speedup of `n_workers` disaggregated vs colocated.
+pub fn speedup_vs_colocated(model: &ModelSpec, n_workers: usize, cfg_base: &JobSimConfig) -> f64 {
+    let colo = simulate_job(model, &JobSimConfig { n_workers: 0, ..cfg_base.clone() });
+    let dis = simulate_job(model, &JobSimConfig { n_workers, ..cfg_base.clone() });
+    dis.throughput_bps / colo.throughput_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::models::model;
+
+    #[test]
+    fn colocated_matches_baseline_throughput() {
+        let m = model("M1");
+        let r = simulate_job(m, &JobSimConfig::default());
+        // Colocated M1 must land near the paper's 0.55 b/s.
+        assert!((r.throughput_bps - 0.55).abs() / 0.55 < 0.1, "got {}", r.throughput_bps);
+        assert!(r.accel_stall_fraction > 0.5, "input-bound => mostly stalled");
+    }
+
+    #[test]
+    fn paper_worker_counts_reach_service_throughput() {
+        // For every scale-out model, deploying the paper's worker count
+        // must deliver (approximately) the paper's service throughput.
+        for name in ["M1", "M2", "M3", "ResNet50"] {
+            let m = model(name);
+            let r = simulate_job(
+                m,
+                &JobSimConfig { n_workers: m.paper_workers, steps: 300, ..Default::default() },
+            );
+            let rel = (r.throughput_bps - m.service_bps).abs() / m.service_bps;
+            assert!(rel < 0.1, "{name}: got {:.2}, paper {:.2}", r.throughput_bps, m.service_bps);
+        }
+    }
+
+    #[test]
+    fn speedups_match_fig8a() {
+        for name in ["M1", "M2", "M3", "ResNet50"] {
+            let m = model(name);
+            let s = speedup_vs_colocated(m, m.paper_workers, &JobSimConfig::default());
+            let rel = (s - m.paper_speedup).abs() / m.paper_speedup;
+            assert!(rel < 0.12, "{name}: got {s:.1}x, paper {:.1}x", m.paper_speedup);
+        }
+    }
+
+    #[test]
+    fn tiny_worker_pool_underperforms_colocated() {
+        // Fig. 9: 8 remote workers are slower than colocated (0.3 vs 0.55
+        // b/s) because each remote core also pays RPC/serialization.
+        let m = model("M1");
+        let r = simulate_job(m, &JobSimConfig { n_workers: 8, ..Default::default() });
+        assert!((r.throughput_bps - 0.3).abs() < 0.05, "got {}", r.throughput_bps);
+        let s = r.throughput_bps / 0.55;
+        assert!(s < 1.0, "8 workers lose to colocated, got {s}x");
+    }
+
+    #[test]
+    fn m1_sweep_matches_fig9_points() {
+        // Fig. 9a anchor points: 16 -> 0.64 b/s, 64 -> 2.3, 128 -> 4.77.
+        let m = model("M1");
+        for (n, want) in [(16usize, 0.64), (64, 2.3), (128, 4.77)] {
+            let r = simulate_job(m, &JobSimConfig { n_workers: n, ..Default::default() });
+            let rel = (r.throughput_bps - want).abs() / want;
+            assert!(rel < 0.1, "{n} workers: got {:.2}, paper {want}", r.throughput_bps);
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_and_capped() {
+        let m = model("M3");
+        let mut last = 0.0;
+        for n in [4, 16, 64, 128, 512] {
+            let r = simulate_job(m, &JobSimConfig { n_workers: n, ..Default::default() });
+            assert!(r.throughput_bps >= last - 1e-6, "n={n}");
+            last = r.throughput_bps;
+        }
+        assert!(last <= m.ideal_bps * 1.01);
+    }
+
+    #[test]
+    fn cross_region_io_bound_colocated_but_hidden_by_scaleout() {
+        let m = model("M3");
+        // Calibrate per-batch IO so colocated lands ~13.3x below ideal.
+        let io = 13.3 / m.ideal_bps;
+        let colo = simulate_job(m, &JobSimConfig { io_time_per_batch: io, ..Default::default() });
+        let slowdown = m.ideal_bps / colo.throughput_bps;
+        assert!(slowdown > 8.0, "colocated out-of-region slowdown {slowdown:.1}");
+        // Scale-out hides the latency: many workers fetch in parallel.
+        let dis = simulate_job(
+            m,
+            &JobSimConfig { n_workers: 1024, io_time_per_batch: io, ..Default::default() },
+        );
+        assert!(dis.throughput_bps > 0.9 * m.ideal_bps, "got {}", dis.throughput_bps);
+    }
+
+    #[test]
+    fn worker_utilization_falls_with_overprovisioning() {
+        let m = model("M3");
+        let tight = simulate_job(m, &JobSimConfig { n_workers: 128, ..Default::default() });
+        let over = simulate_job(m, &JobSimConfig { n_workers: 640, ..Default::default() });
+        assert!(over.worker_utilization < tight.worker_utilization);
+        // Throughput unchanged at the plateau (§4.2: over-provisioning
+        // costs money, not time).
+        assert!((over.throughput_bps - tight.throughput_bps).abs() / tight.throughput_bps < 0.05);
+    }
+
+    #[test]
+    fn model_bound_jobs_gain_nothing() {
+        let m = model("M4");
+        let s = speedup_vs_colocated(m, 128, &JobSimConfig::default());
+        assert!((s - 1.0).abs() < 0.05, "model-bound job speedup {s}");
+    }
+
+    #[test]
+    fn m2_falls_short_of_ideal_from_ingest_pressure() {
+        let m = model("M2");
+        let r = simulate_job(m, &JobSimConfig { n_workers: 1000, ..Default::default() });
+        // Even with unlimited workers, ingest caps at service_bps (~8%
+        // below ideal) — the §4.2 observation.
+        assert!(r.throughput_bps < 0.95 * m.ideal_bps);
+        assert!(r.throughput_bps > 0.88 * m.ideal_bps);
+    }
+}

@@ -1,0 +1,175 @@
+//! Heavy-tailed fleet generators (Fig. 1, Fig. 2, Fig. 12).
+//!
+//! Fig. 1's takeaway is that per-job CPU/RAM needs for input processing
+//! are wildly heterogeneous (heavy-tailed CDFs over 73k jobs). Fig. 12a
+//! shows deployment sizes from 2 to >5000 workers; Fig. 12b shows the top
+//! jobs using up to 25× the client hosts' CPU. We regenerate all of these
+//! from documented distributions, plus the Fig. 2 bursty colocated
+//! CPU-usage timeline.
+
+use crate::util::rng::Rng;
+
+/// One fleet job's normalized resource demands.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetJob {
+    /// CPU demand normalized to fleet peak (0, 1].
+    pub cpu: f64,
+    /// RAM demand normalized to fleet peak (0, 1].
+    pub ram: f64,
+}
+
+/// Generate `n` jobs with lognormal, positively-correlated CPU/RAM
+/// demands, normalized to the observed peak (Fig. 1's axes).
+pub fn generate_fleet(n: usize, seed: u64) -> Vec<FleetJob> {
+    let mut rng = Rng::new(seed);
+    let mut raw: Vec<(f64, f64)> = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Shared factor induces CPU/RAM correlation; idiosyncratic noise
+        // keeps the ratio heterogeneous (the paper's core observation).
+        let shared = rng.normal();
+        let cpu = (0.8 * shared + 0.6 * rng.normal()) * 1.6 - 1.0;
+        let ram = (0.8 * shared + 0.6 * rng.normal()) * 1.4 - 1.2;
+        raw.push((cpu.exp(), ram.exp()));
+    }
+    let cpu_peak = raw.iter().map(|r| r.0).fold(f64::MIN, f64::max);
+    let ram_peak = raw.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+    raw.into_iter().map(|(c, m)| FleetJob { cpu: c / cpu_peak, ram: m / ram_peak }).collect()
+}
+
+/// Fig. 12a: per-job tf.data service worker counts. Most jobs use 2–32
+/// workers; the tail reaches past 5000.
+pub fn generate_worker_counts(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            // Mixture: the bulk is log2(workers) ~ N(3, 1.7) (median 8,
+            // most mass in 2..32); a 0.05% sliver of giant jobs reaches
+            // past 5000 workers (Fig. 12a: "the largest model uses more
+            // than 5K workers").
+            if rng.chance(0.0005) {
+                rng.range_u64(4000, 8000)
+            } else {
+                let log2 = rng.normal_ms(3.0, 1.7);
+                (log2.exp2().round() as u64).clamp(1, 2048)
+            }
+        })
+        .collect()
+}
+
+/// Fig. 12b: for the top-`k` most CPU-intensive jobs, the ratio of
+/// tf.data-worker CPU usage to the client hosts' CPU limit (up to ~25×).
+pub fn generate_top_job_cpu_ratios(k: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut ratios: Vec<f64> = (0..k.max(1) * 40)
+        .map(|_| rng.lognormal(0.5, 1.1))
+        .collect();
+    ratios.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut top: Vec<f64> = ratios.into_iter().take(k).collect();
+    // Normalize the very top toward the paper's ~25x.
+    if let Some(&max) = top.first() {
+        if max > 0.0 {
+            for r in &mut top {
+                *r = (*r / max) * 25.0;
+            }
+        }
+    }
+    top
+}
+
+/// Fig. 2: colocated-training CPU-utilization timeline. Preprocessing
+/// bursts to near-full utilization while preparing the next batches, then
+/// drops while the accelerator computes; memory climbs slowly (buffered
+/// batches) and plateaus.
+#[derive(Debug, Clone, Copy)]
+pub struct UsagePoint {
+    pub t: f64,
+    pub cpu: f64,
+    pub mem: f64,
+}
+
+pub fn burstiness_timeline(
+    duration_s: f64,
+    step_time_s: f64,
+    preprocess_fraction: f64,
+    seed: u64,
+) -> Vec<UsagePoint> {
+    let mut rng = Rng::new(seed);
+    let dt = step_time_s / 20.0;
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut mem = 0.25f64;
+    while t < duration_s {
+        let phase = (t % step_time_s) / step_time_s;
+        let burst = phase < preprocess_fraction;
+        let cpu = if burst {
+            0.75 + 0.2 * rng.f64()
+        } else {
+            0.08 + 0.07 * rng.f64()
+        };
+        mem = (mem + 0.002 * (1.0 - mem)).min(0.62) + 0.01 * (rng.f64() - 0.5);
+        out.push(UsagePoint { t, cpu, mem: mem.clamp(0.0, 1.0) });
+        t += dt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hist::Samples;
+
+    #[test]
+    fn fleet_is_heavy_tailed_and_normalized() {
+        let jobs = generate_fleet(20_000, 42);
+        assert_eq!(jobs.len(), 20_000);
+        let mut cpu = Samples::from_vec(jobs.iter().map(|j| j.cpu).collect());
+        // Normalized to peak.
+        assert!(cpu.max() <= 1.0 + 1e-12);
+        assert!(cpu.min() > 0.0);
+        // Heavy tail: median tiny relative to peak (paper Fig. 1 shape:
+        // most jobs need a small fraction of the max).
+        assert!(cpu.median() < 0.05, "median {}", cpu.median());
+        assert!(cpu.percentile(99.0) > 10.0 * cpu.median());
+    }
+
+    #[test]
+    fn fleet_cpu_ram_ratios_vary() {
+        // The figure's takeaway: no single CPU:RAM ratio fits. Check the
+        // ratio spread spans >10x between p10 and p90.
+        let jobs = generate_fleet(20_000, 7);
+        let mut ratios = Samples::from_vec(jobs.iter().map(|j| j.cpu / j.ram).collect());
+        assert!(ratios.percentile(90.0) / ratios.percentile(10.0) > 10.0);
+    }
+
+    #[test]
+    fn worker_counts_match_fig12a_shape() {
+        let counts = generate_worker_counts(50_000, 3);
+        let mut s = Samples::from_vec(counts.iter().map(|&c| c as f64).collect());
+        // Most deployments between 2 and 32 workers.
+        let frac_2_32 = s.cdf_at(32.0) - s.cdf_at(1.9);
+        assert!(frac_2_32 > 0.5, "2..32 fraction {frac_2_32}");
+        // Tail exceeds 5000.
+        assert!(s.max() > 5000.0, "max {}", s.max());
+    }
+
+    #[test]
+    fn top_job_ratios_reach_25x() {
+        let top = generate_top_job_cpu_ratios(10, 5);
+        assert_eq!(top.len(), 10);
+        assert!((top[0] - 25.0).abs() < 1e-9);
+        assert!(top.windows(2).all(|w| w[0] >= w[1]), "sorted descending");
+        assert!(top.iter().all(|&r| r > 1.0), "top jobs all exceed local CPU");
+    }
+
+    #[test]
+    fn burstiness_alternates() {
+        let tl = burstiness_timeline(60.0, 2.0, 0.4, 1);
+        assert!(!tl.is_empty());
+        let high = tl.iter().filter(|p| p.cpu > 0.7).count() as f64 / tl.len() as f64;
+        let low = tl.iter().filter(|p| p.cpu < 0.2).count() as f64 / tl.len() as f64;
+        // Bimodal: both phases well represented.
+        assert!(high > 0.25 && low > 0.4, "high {high} low {low}");
+        // Memory bounded.
+        assert!(tl.iter().all(|p| (0.0..=1.0).contains(&p.mem)));
+    }
+}

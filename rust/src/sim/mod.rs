@@ -1,0 +1,33 @@
+//! Fleet-scale evaluation substrate.
+//!
+//! The paper's evaluation runs production models (M1–M8) on TPU-v4 pods
+//! against a multi-tenant worker fleet — hardware we do not have. Per the
+//! substitution rule (DESIGN.md §2) we rebuild the evaluation as a
+//! calibrated simulation:
+//!
+//! * [`models`] — the model zoo: per-model resource profiles pinned to
+//!   every observable the paper reports (baseline/ideal batches/s, worker
+//!   counts, speedups).
+//! * [`des`] — a discrete-event simulator of one training job: workers
+//!   produce batches (CPU + storage I/O + RPC overhead), clients consume
+//!   at accelerator speed through a bounded buffer; reports throughput,
+//!   stall fractions, and utilization.
+//! * [`coord`] — the coordinated-reads straggler model (§4.4): padded-
+//!   batch step times with and without same-bucket rounds.
+//! * [`sharing`] — the ephemeral-sharing cost model (§4.3, Fig. 10).
+//! * [`fleet`] — heavy-tailed fleet generators for Fig. 1 and Fig. 12.
+//! * [`cost`] — Equation (1) verbatim, with the paper's public prices.
+//!
+//! The claim reproduced is the *shape* — who wins and by roughly what
+//! factor — not the authors' absolute numbers.
+
+pub mod coord;
+pub mod cost;
+pub mod des;
+pub mod fleet;
+pub mod models;
+pub mod sharing;
+
+pub use cost::{CostModel, JobCost};
+pub use des::{simulate_job, JobSimConfig, JobSimResult};
+pub use models::{Domain, ModelSpec, MODEL_ZOO};

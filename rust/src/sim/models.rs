@@ -1,0 +1,320 @@
+//! The calibrated model zoo.
+//!
+//! The paper reports, per model: accelerator count, baseline (colocated)
+//! and ideal training throughput, the worker count the service scaled to,
+//! and the resulting speedup. Those observables pin each model's resource
+//! profile:
+//!
+//! * accelerator step time  = accelerators / ideal_bps (sync data-parallel:
+//!   one step produces one batch per accelerator),
+//! * preprocessing cost per batch = client CPU cores / colocated_bps
+//!   (input-bound baselines saturate the client host's CPU),
+//! * per-batch worker-side overhead (serialization + RPC) explains why 8
+//!   remote workers underperform colocated processing (§4.2 sweep).
+//!
+//! Paper numbers (Fig. 8, §4.2): M1 0.55→6.47 b/s @442 workers (11.7×),
+//! M2 4.7→518.4 @421 (110.3×, 8% short of ideal), M3 22.2→63.8 @128
+//! (2.9×), ResNet50 1.75→4.5 @16 (2.57×). Fig. 11: M5 1.62×, M6 1.53×,
+//! M7 3.5×, M8 2.15×.
+
+/// Workload domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Vision,
+    Nlp,
+}
+
+/// One evaluated model's calibrated profile.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub domain: Domain,
+    /// Accelerators used in the paper's experiment.
+    pub accelerators: usize,
+    /// Colocated-baseline training throughput (batches/s, aggregate).
+    pub colocated_bps: f64,
+    /// Ideal throughput with an infinitely fast input pipeline.
+    pub ideal_bps: f64,
+    /// Worker count the service scaled to in the paper.
+    pub paper_workers: usize,
+    /// Throughput the service actually delivered (batches/s): equals
+    /// `ideal_bps` except M2, which fell 8% short of ideal due to
+    /// client-side deserialization/copy pressure (§4.2).
+    pub service_bps: f64,
+    /// Per-remote-worker production rate (batches/s/worker). For M1 this
+    /// comes straight from the Fig. 9 sweep (0.3 b/s at 8 workers, 2.3
+    /// at 64, 4.77 at 128 => ~0.0375 b/s/worker); for the others it is
+    /// service_bps / paper_workers x 1.18 headroom (deployed pools run
+    /// below full utilization; an exactly-balanced queue cannot sustain
+    /// the measured throughput).
+    pub per_worker_bps: f64,
+    /// Paper-reported speedup (Fig. 8a / Fig. 11) — the target our sim
+    /// must land near.
+    pub paper_speedup: f64,
+    /// Paper-reported cost saving (Fig. 8b), 0.0 if not reported.
+    pub paper_cost_saving: f64,
+    /// CPU cores available on the client host(s) for colocated
+    /// preprocessing (aggregate across hosts).
+    pub client_cpu_cores: f64,
+    /// Cores per remote worker (fleet VMs are n2-standard-8-like).
+    pub worker_cpu_cores: f64,
+    /// Preprocessed batch size on the wire, bytes.
+    pub batch_bytes: usize,
+    /// NLP only: lognormal(mu, sigma) sequence-length distribution and
+    /// the max (padded) sequence length.
+    pub seq_len_dist: Option<(f64, f64, u32)>,
+    /// NLP only: coordinated-reads bucket width (64 for M5/M7, 128 for
+    /// M6/M8; §4.4).
+    pub bucket_width: u32,
+    /// Fraction of a training step's compute that does NOT scale with the
+    /// padded token count (optimizer, collectives, fixed kernels). Low
+    /// values mean step time tracks padding closely — M7's 3.5x gain
+    /// implies an almost fully token-proportional step.
+    pub fixed_compute_fraction: f64,
+}
+
+impl ModelSpec {
+    /// Accelerator step time (seconds): one sync step produces
+    /// `accelerators` batches.
+    pub fn accel_step_time(&self) -> f64 {
+        self.accelerators as f64 / self.ideal_bps
+    }
+
+    /// CPU-seconds of preprocessing per batch, derived from the
+    /// input-bound colocated baseline saturating the client host CPU.
+    pub fn preprocess_cpu_per_batch(&self) -> f64 {
+        self.client_cpu_cores / self.colocated_bps
+    }
+
+    /// Whether the job is input-bound with colocated preprocessing.
+    pub fn input_bound(&self) -> bool {
+        self.colocated_bps < 0.99 * self.ideal_bps
+    }
+}
+
+/// Per-batch worker-side CPU overhead (serialization, RPC framing, data
+/// copies) as a fraction of each worker's cores — the §4.2 explanation
+/// for why 8 remote workers lose to colocated processing. Calibrated
+/// from the Fig. 9 sweep: 8 workers produce 0.3 b/s for M1 while the
+/// colocated host's larger CPU reaches 0.55 b/s.
+pub const WORKER_OVERHEAD_FRACTION: f64 = 0.18;
+
+/// The model zoo. M1–M3 + ResNet50 drive the horizontal-scale-out
+/// experiments; M4 drives ephemeral sharing; M5–M8 drive coordinated
+/// reads (not input-bound: colocated == ideal).
+pub const MODEL_ZOO: &[ModelSpec] = &[
+    ModelSpec {
+        name: "M1",
+        domain: Domain::Vision,
+        accelerators: 32,
+        colocated_bps: 0.55,
+        ideal_bps: 6.47,
+        paper_workers: 442,
+        service_bps: 6.47,
+        per_worker_bps: 0.0375,
+        paper_speedup: 11.7,
+        paper_cost_saving: 10.8,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 64 << 20,
+        seq_len_dist: None,
+        bucket_width: 0,
+        fixed_compute_fraction: 0.0,
+    },
+    ModelSpec {
+        name: "M2",
+        domain: Domain::Vision,
+        accelerators: 8,
+        colocated_bps: 4.7,
+        ideal_bps: 563.0, // ideal; service reached 518.4 (8% short)
+        paper_workers: 421,
+        service_bps: 518.4,
+        per_worker_bps: 1.453,
+        paper_speedup: 110.3,
+        paper_cost_saving: 89.3,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 2 << 20,
+        seq_len_dist: None,
+        bucket_width: 0,
+        fixed_compute_fraction: 0.0,
+    },
+    ModelSpec {
+        name: "M3",
+        domain: Domain::Vision,
+        accelerators: 16,
+        colocated_bps: 22.2,
+        ideal_bps: 63.8,
+        paper_workers: 128,
+        service_bps: 63.8,
+        per_worker_bps: 0.588,
+        paper_speedup: 2.9,
+        paper_cost_saving: 2.8,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 8 << 20,
+        seq_len_dist: None,
+        bucket_width: 0,
+        fixed_compute_fraction: 0.0,
+    },
+    ModelSpec {
+        name: "ResNet50",
+        domain: Domain::Vision,
+        accelerators: 1,
+        colocated_bps: 1.75,
+        ideal_bps: 4.5,
+        paper_workers: 16,
+        service_bps: 4.5,
+        per_worker_bps: 0.332,
+        paper_speedup: 2.57,
+        paper_cost_saving: 1.97,
+        client_cpu_cores: 96.0, // TPU v2-8 VM
+        worker_cpu_cores: 8.0,  // n2-standard-8
+        batch_bytes: 1024 * 224 * 224 * 3 / 2,
+        seq_len_dist: None,
+        bucket_width: 0,
+        fixed_compute_fraction: 0.0,
+    },
+    ModelSpec {
+        name: "M4", // ephemeral-sharing model: not input-bound at >=128 workers
+        domain: Domain::Vision,
+        accelerators: 16,
+        colocated_bps: 1.92,
+        ideal_bps: 1.92,
+        paper_workers: 128,
+        service_bps: 1.92,
+        per_worker_bps: 0.0177,
+        paper_speedup: 1.0,
+        paper_cost_saving: 0.0,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 16 << 20,
+        seq_len_dist: None,
+        bucket_width: 0,
+        fixed_compute_fraction: 0.0,
+    },
+    // NLP models: colocated == ideal (not input-bound); the §4.4 gains
+    // come from straggler removal. seq dists calibrated to land near the
+    // paper's speedups: more skew + finer buckets => larger gains.
+    ModelSpec {
+        name: "M5",
+        domain: Domain::Nlp,
+        accelerators: 64,
+        colocated_bps: 3.18,
+        ideal_bps: 3.18,
+        paper_workers: 4,
+        service_bps: 5.15,
+        per_worker_bps: 1.2875,
+        paper_speedup: 1.62,
+        paper_cost_saving: 1.62,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 4 << 20,
+        seq_len_dist: Some((4.3, 0.35, 512)),
+        bucket_width: 64,
+        fixed_compute_fraction: 0.15,
+    },
+    ModelSpec {
+        name: "M6",
+        domain: Domain::Nlp,
+        accelerators: 8,
+        colocated_bps: 11.9,
+        ideal_bps: 11.9,
+        paper_workers: 1,
+        service_bps: 18.3,
+        per_worker_bps: 18.3,
+        paper_speedup: 1.53,
+        paper_cost_saving: 1.53,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 2 << 20,
+        seq_len_dist: Some((4.4, 0.45, 512)),
+        bucket_width: 128,
+        fixed_compute_fraction: 0.15,
+    },
+    ModelSpec {
+        name: "M7",
+        domain: Domain::Nlp,
+        accelerators: 64,
+        colocated_bps: 2.0,
+        ideal_bps: 2.0,
+        paper_workers: 4,
+        service_bps: 7.0,
+        per_worker_bps: 1.75,
+        paper_speedup: 3.5,
+        paper_cost_saving: 3.5,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 4 << 20,
+        seq_len_dist: Some((3.5, 1.2, 512)),
+        bucket_width: 64,
+        fixed_compute_fraction: 0.05,
+    },
+    ModelSpec {
+        name: "M8",
+        domain: Domain::Nlp,
+        accelerators: 4,
+        colocated_bps: 5.9,
+        ideal_bps: 5.9,
+        paper_workers: 1,
+        service_bps: 12.7,
+        per_worker_bps: 12.7,
+        paper_speedup: 2.15,
+        paper_cost_saving: 2.15,
+        client_cpu_cores: 480.0,
+        worker_cpu_cores: 8.0,
+        batch_bytes: 2 << 20,
+        seq_len_dist: Some((3.8, 1.0, 512)),
+        bucket_width: 128,
+        fixed_compute_fraction: 0.15,
+    },
+];
+
+/// Look up a model by name.
+pub fn model(name: &str) -> &'static ModelSpec {
+    MODEL_ZOO.iter().find(|m| m.name == name).unwrap_or_else(|| panic!("no model {name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_contains_all_paper_models() {
+        let names: Vec<&str> = MODEL_ZOO.iter().map(|m| m.name).collect();
+        for n in ["M1", "M2", "M3", "M4", "M5", "M6", "M7", "M8", "ResNet50"] {
+            assert!(names.contains(&n), "missing {n}");
+        }
+    }
+
+    #[test]
+    fn derived_quantities_are_consistent() {
+        let m1 = model("M1");
+        assert!(m1.input_bound());
+        // Paper: M1 ideal is 11.7x colocated.
+        assert!((m1.ideal_bps / m1.colocated_bps - 11.76).abs() < 0.1);
+        // Step time positive and sane.
+        assert!(m1.accel_step_time() > 0.0);
+        assert!(m1.preprocess_cpu_per_batch() > 100.0, "M1 is very preprocessing-heavy");
+    }
+
+    #[test]
+    fn nlp_models_are_not_input_bound() {
+        for n in ["M5", "M6", "M7", "M8"] {
+            assert!(!model(n).input_bound(), "{n} must be model-bound");
+            assert!(model(n).seq_len_dist.is_some());
+        }
+    }
+
+    #[test]
+    fn speedups_match_paper_table() {
+        assert_eq!(model("M2").paper_speedup, 110.3);
+        assert_eq!(model("ResNet50").paper_cost_saving, 1.97);
+        let avg: f64 = ["M1", "M2", "M3", "ResNet50"]
+            .iter()
+            .map(|n| model(n).paper_speedup)
+            .sum::<f64>()
+            / 4.0;
+        assert!((avg - 31.7).abs() < 0.3, "paper: 31.7x average, got {avg}");
+    }
+}

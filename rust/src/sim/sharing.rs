@@ -1,0 +1,144 @@
+//! Ephemeral data sharing cost model (§3.5, §4.3, Fig. 10).
+//!
+//! Three deployment modes for `k` concurrent hyperparameter-tuning jobs
+//! running the *same* input pipeline:
+//!
+//! * **A** — one shared deployment, sharing enabled: each batch is
+//!   produced once and served to all jobs from the sliding-window cache.
+//! * **B** — one shared deployment, no sharing: the worker pool splits
+//!   its capacity across `k` independent productions.
+//! * **C** — `k` dedicated deployments: full speed for everyone, `k`× the
+//!   preprocessing resources.
+//!
+//! Also models the worst-case sequential-sharing cost formula from §3.5:
+//! `k·C − (k−1)·(cache/dataset)·C`.
+
+use super::models::ModelSpec;
+
+/// Inputs for the Fig. 10 experiment.
+#[derive(Debug, Clone)]
+pub struct SharingConfig {
+    /// Workers per deployment (128 in the paper).
+    pub workers: usize,
+    /// Max concurrent jobs one deployment can feed at full speed without
+    /// sharing (paper: preprocessing capacity supports 4 M4 jobs).
+    pub capacity_jobs: f64,
+}
+
+impl Default for SharingConfig {
+    fn default() -> Self {
+        SharingConfig { workers: 128, capacity_jobs: 4.0 }
+    }
+}
+
+/// Results for one (mode, k) cell of Fig. 10.
+#[derive(Debug, Clone, Copy)]
+pub struct SharingResult {
+    /// Throughput each job achieves, as a fraction of its ideal.
+    pub per_job_throughput_frac: f64,
+    /// Total preprocessing cost, normalized to one dedicated deployment
+    /// serving one job (the figure's y-axis).
+    pub preprocessing_cost: f64,
+    /// Storage-read connections (scales bandwidth usage; §4.3).
+    pub storage_reads_rel: f64,
+}
+
+/// Mode A: shared deployment, sharing on.
+pub fn mode_a(_model: &ModelSpec, _cfg: &SharingConfig, k: usize) -> SharingResult {
+    // One production stream feeds all k jobs; no slowdown observed up to
+    // 64 jobs in the paper.
+    let _ = k;
+    SharingResult { per_job_throughput_frac: 1.0, preprocessing_cost: 1.0, storage_reads_rel: 1.0 }
+}
+
+/// Mode B: shared deployment, sharing off — capacity splits across jobs.
+///
+/// Degradation is mildly sublinear in the overload factor (paper: 8 jobs
+/// → 1.75× slower, 16 → 3×, vs the naive 2×/4×): oversubscribed workers
+/// overlap I/O across the independent productions and batch RPC work,
+/// recovering some throughput. We model slowdown = (k/capacity)^0.8,
+/// which reproduces both reported points.
+pub fn mode_b(_model: &ModelSpec, cfg: &SharingConfig, k: usize) -> SharingResult {
+    let frac = (cfg.capacity_jobs / k as f64).min(1.0).powf(0.8);
+    // Jobs run 1/frac longer; the deployment is fully busy the whole
+    // time, so cost scales with job time (same pool, longer occupancy).
+    SharingResult {
+        per_job_throughput_frac: frac,
+        preprocessing_cost: 1.0 / frac,
+        storage_reads_rel: k as f64,
+    }
+}
+
+/// Mode C: k dedicated deployments.
+pub fn mode_c(_model: &ModelSpec, _cfg: &SharingConfig, k: usize) -> SharingResult {
+    SharingResult {
+        per_job_throughput_frac: 1.0,
+        preprocessing_cost: k as f64,
+        storage_reads_rel: k as f64,
+    }
+}
+
+/// §3.5 worst-case sequential sharing: each job only reuses the final
+/// cache window of its predecessor.
+pub fn sequential_sharing_cost(k: usize, cache_size: f64, dataset_size: f64) -> f64 {
+    let k = k as f64;
+    k - (k - 1.0) * (cache_size / dataset_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::models::model;
+
+    #[test]
+    fn mode_a_is_flat_in_k() {
+        let m = model("M4");
+        let cfg = SharingConfig::default();
+        for k in [1, 2, 4, 8, 16, 64] {
+            let r = mode_a(m, &cfg, k);
+            assert_eq!(r.per_job_throughput_frac, 1.0);
+            assert_eq!(r.preprocessing_cost, 1.0);
+        }
+    }
+
+    #[test]
+    fn mode_b_degrades_beyond_capacity() {
+        let m = model("M4");
+        let cfg = SharingConfig::default();
+        assert_eq!(mode_b(m, &cfg, 4).per_job_throughput_frac, 1.0);
+        // Paper: 8 jobs -> 1.92 -> 1.09 b/s (1.75x slower); 16 -> 0.64 (3x).
+        let r8 = mode_b(m, &cfg, 8);
+        assert!((1.0 / r8.per_job_throughput_frac - 1.75).abs() < 0.3, "8 jobs ~1.75x slower");
+        let r16 = mode_b(m, &cfg, 16);
+        assert!((1.0 / r16.per_job_throughput_frac - 3.0).abs() < 0.3, "16 jobs ~3x slower");
+    }
+
+    #[test]
+    fn mode_c_cost_linear() {
+        let m = model("M4");
+        let cfg = SharingConfig::default();
+        for k in [1, 2, 4, 8, 16] {
+            let r = mode_c(m, &cfg, k);
+            assert_eq!(r.preprocessing_cost, k as f64);
+            assert_eq!(r.per_job_throughput_frac, 1.0);
+        }
+    }
+
+    #[test]
+    fn sharing_reads_storage_once() {
+        let m = model("M4");
+        let cfg = SharingConfig::default();
+        assert_eq!(mode_a(m, &cfg, 16).storage_reads_rel, 1.0);
+        assert_eq!(mode_c(m, &cfg, 16).storage_reads_rel, 16.0);
+    }
+
+    #[test]
+    fn sequential_worst_case_formula() {
+        // cache == dataset: everything reused, cost 1.
+        assert!((sequential_sharing_cost(5, 1.0, 1.0) - 1.0).abs() < 1e-9);
+        // cache << dataset: no reuse, cost k.
+        assert!((sequential_sharing_cost(5, 0.0, 1.0) - 5.0).abs() < 1e-9);
+        // halfway
+        assert!((sequential_sharing_cost(3, 0.5, 1.0) - 2.0).abs() < 1e-9);
+    }
+}

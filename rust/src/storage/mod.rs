@@ -1,0 +1,293 @@
+//! Storage substrate: the Colossus/GCS stand-in.
+//!
+//! The paper's workers all read source data from a shared distributed
+//! store (Colossus internally, GCS for the open-source experiments), and
+//! one experiment (§4.2 "Cross-region Scenario") depends on the store
+//! being in a *different region* than preprocessing and training. We
+//! reproduce both properties:
+//!
+//! * [`ObjectStore`] — a process-wide object store shared by all workers,
+//!   with an explicit region + network model ([`NetModel`]) that injects
+//!   per-read latency and bandwidth delays when the reader's region
+//!   differs from the store's.
+//! * [`record`] — a TFRecord-like CRC-framed record file format; datasets
+//!   are directories of sharded record files, one file per source shard
+//!   (matching §3.3 "each file constitutes a source data shard").
+//! * [`dataset`] — synthetic dataset generators (images, token sequences)
+//!   standing in for COCO/ImageNet and the production NLP corpora.
+
+pub mod dataset;
+pub mod record;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Geographical region tag. Cheap to clone and compare.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Region(pub String);
+
+impl Region {
+    pub fn new(name: &str) -> Region {
+        Region(name.to_string())
+    }
+}
+
+impl std::fmt::Display for Region {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Network model between a reader and the store. Latencies are per
+/// request; bandwidth converts object size into transfer time.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    /// Round-trip latency when reader and store share a region.
+    pub same_region_latency: Duration,
+    /// Round-trip latency when they do not (paper: different continent).
+    pub cross_region_latency: Duration,
+    /// Reader-observed bandwidth within a region (bytes/second).
+    pub same_region_bw: f64,
+    /// Reader-observed bandwidth across regions.
+    pub cross_region_bw: f64,
+    /// When false, delays are computed (for the simulator / accounting)
+    /// but not slept, keeping unit tests fast.
+    pub inject_delays: bool,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // Same-region numbers loosely follow intra-zone GCP: sub-ms RTT,
+        // multi-GB/s effective throughput. Cross-region follows the
+        // paper's "different continent": ~150 ms RTT, constrained BW.
+        NetModel {
+            same_region_latency: Duration::from_micros(500),
+            cross_region_latency: Duration::from_millis(150),
+            same_region_bw: 2e9,
+            cross_region_bw: 50e6,
+            inject_delays: false,
+        }
+    }
+}
+
+impl NetModel {
+    /// Transfer delay for `bytes` read by `reader` from a store in
+    /// `store_region`.
+    pub fn read_delay(&self, reader: &Region, store_region: &Region, bytes: usize) -> Duration {
+        let (lat, bw) = if reader == store_region {
+            (self.same_region_latency, self.same_region_bw)
+        } else {
+            (self.cross_region_latency, self.cross_region_bw)
+        };
+        lat + Duration::from_secs_f64(bytes as f64 / bw)
+    }
+}
+
+/// Errors from the storage layer.
+#[derive(Debug, thiserror::Error)]
+pub enum StorageError {
+    #[error("object not found: {0}")]
+    NotFound(String),
+    #[error("record corrupt: {0}")]
+    Corrupt(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type StorageResult<T> = Result<T, StorageError>;
+
+/// Cumulative read-side statistics, used by the Fig-10 "bytes read from
+/// storage stays constant with sharing" analysis.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub reads: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub cross_region_reads: AtomicU64,
+    pub simulated_delay_us: AtomicU64,
+}
+
+/// Shared in-process object store with region-aware read costs.
+///
+/// Keys are `/`-separated paths; `list` is prefix-ordered (BTreeMap), so
+/// shard enumeration is deterministic.
+pub struct ObjectStore {
+    region: Region,
+    net: NetModel,
+    objects: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    pub stats: StoreStats,
+}
+
+impl ObjectStore {
+    pub fn new(region: Region, net: NetModel) -> Arc<ObjectStore> {
+        Arc::new(ObjectStore {
+            region,
+            net,
+            objects: Mutex::new(BTreeMap::new()),
+            stats: StoreStats::default(),
+        })
+    }
+
+    /// In-region store with no injected delays: the default for tests.
+    pub fn in_memory() -> Arc<ObjectStore> {
+        Self::new(Region::new("local"), NetModel::default())
+    }
+
+    pub fn region(&self) -> &Region {
+        &self.region
+    }
+
+    pub fn put(&self, key: &str, bytes: Vec<u8>) {
+        self.objects.lock().unwrap().insert(key.to_string(), Arc::new(bytes));
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes stored (capacity accounting).
+    pub fn stored_bytes(&self) -> usize {
+        self.objects.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+
+    /// Read an object from `reader_region`, paying the modeled network
+    /// cost. `Arc` return avoids copying multi-MB shards per read.
+    pub fn get_from(&self, reader_region: &Region, key: &str) -> StorageResult<Arc<Vec<u8>>> {
+        let obj = self
+            .objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))?;
+        self.stats.reads.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(obj.len() as u64, Ordering::Relaxed);
+        if reader_region != &self.region {
+            self.stats.cross_region_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let delay = self.net.read_delay(reader_region, &self.region, obj.len());
+        self.stats
+            .simulated_delay_us
+            .fetch_add(delay.as_micros() as u64, Ordering::Relaxed);
+        if self.net.inject_delays {
+            std::thread::sleep(delay);
+        }
+        Ok(obj)
+    }
+
+    /// Convenience in-region read.
+    pub fn get(&self, key: &str) -> StorageResult<Arc<Vec<u8>>> {
+        let region = self.region.clone();
+        self.get_from(&region, key)
+    }
+
+    /// Keys with the given prefix, in lexicographic order.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.objects
+            .lock()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = ObjectStore::in_memory();
+        s.put("a/b", vec![1, 2, 3]);
+        assert_eq!(*s.get("a/b").unwrap(), vec![1, 2, 3]);
+        assert!(matches!(s.get("missing"), Err(StorageError::NotFound(_))));
+    }
+
+    #[test]
+    fn list_prefix_ordered() {
+        let s = ObjectStore::in_memory();
+        for k in ["ds/shard-002", "ds/shard-000", "other/x", "ds/shard-001"] {
+            s.put(k, vec![]);
+        }
+        assert_eq!(
+            s.list("ds/"),
+            vec!["ds/shard-000", "ds/shard-001", "ds/shard-002"]
+        );
+        assert_eq!(s.list("nope/"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn delete_and_len() {
+        let s = ObjectStore::in_memory();
+        s.put("k", vec![0; 10]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stored_bytes(), 10);
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn read_stats_accumulate() {
+        let s = ObjectStore::in_memory();
+        s.put("k", vec![0; 100]);
+        s.get("k").unwrap();
+        s.get("k").unwrap();
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 200);
+        assert_eq!(s.stats.cross_region_reads.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn cross_region_costs_more() {
+        let net = NetModel::default();
+        let us = Region::new("us-central1");
+        let eu = Region::new("europe-west4");
+        let near = net.read_delay(&us, &us, 1 << 20);
+        let far = net.read_delay(&eu, &us, 1 << 20);
+        assert!(far > near * 10, "near={near:?} far={far:?}");
+    }
+
+    #[test]
+    fn cross_region_read_counted() {
+        let s = ObjectStore::new(Region::new("us"), NetModel::default());
+        s.put("k", vec![0; 8]);
+        s.get_from(&Region::new("eu"), "k").unwrap();
+        assert_eq!(s.stats.cross_region_reads.load(Ordering::Relaxed), 1);
+        assert!(s.stats.simulated_delay_us.load(Ordering::Relaxed) >= 150_000);
+    }
+
+    #[test]
+    fn concurrent_readers() {
+        let s = ObjectStore::in_memory();
+        s.put("k", (0..=255u8).collect());
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let s2 = s.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    assert_eq!(s2.get("k").unwrap().len(), 256);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.stats.reads.load(Ordering::Relaxed), 800);
+    }
+}

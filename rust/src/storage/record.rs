@@ -1,0 +1,173 @@
+//! CRC-framed record files (the TFRecord stand-in).
+//!
+//! Layout per record:
+//!
+//! ```text
+//! +----------+---------------+---------------+
+//! | len: u32 | crc32(data)   | data: len B   |
+//! +----------+---------------+---------------+
+//! ```
+//!
+//! A dataset is a set of such files, one per source shard. CRCs catch
+//! corruption at read time; a corrupt record surfaces as
+//! [`StorageError::Corrupt`](super::StorageError::Corrupt) rather than
+//! silently feeding garbage into training.
+
+use super::{StorageError, StorageResult};
+use crc32fast::Hasher;
+
+/// Serializes records into an in-memory file body.
+#[derive(Debug, Default)]
+pub struct RecordWriter {
+    buf: Vec<u8>,
+    count: usize,
+}
+
+impl RecordWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, record: &[u8]) {
+        let mut h = Hasher::new();
+        h.update(record);
+        let crc = h.finalize();
+        self.buf.extend_from_slice(&(record.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&crc.to_le_bytes());
+        self.buf.extend_from_slice(record);
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Iterates records out of a file body, verifying CRCs.
+pub struct RecordReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RecordReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        RecordReader { buf, pos: 0 }
+    }
+
+    /// Next record, `Ok(None)` at clean EOF, `Err` on corruption.
+    pub fn next_record(&mut self) -> StorageResult<Option<&'a [u8]>> {
+        if self.pos == self.buf.len() {
+            return Ok(None);
+        }
+        if self.buf.len() - self.pos < 8 {
+            return Err(StorageError::Corrupt("truncated record header".into()));
+        }
+        let len = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(self.buf[self.pos + 4..self.pos + 8].try_into().unwrap());
+        let start = self.pos + 8;
+        if self.buf.len() - start < len {
+            return Err(StorageError::Corrupt(format!(
+                "truncated record body: want {len}, have {}",
+                self.buf.len() - start
+            )));
+        }
+        let data = &self.buf[start..start + len];
+        let mut h = Hasher::new();
+        h.update(data);
+        if h.finalize() != crc {
+            return Err(StorageError::Corrupt("crc mismatch".into()));
+        }
+        self.pos = start + len;
+        Ok(Some(data))
+    }
+
+    /// Eagerly read all records.
+    pub fn read_all(mut self) -> StorageResult<Vec<Vec<u8>>> {
+        let mut out = Vec::new();
+        while let Some(r) = self.next_record()? {
+            out.push(r.to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Count records without copying.
+    pub fn count(mut self) -> StorageResult<usize> {
+        let mut n = 0;
+        while self.next_record()?.is_some() {
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_records() {
+        let mut w = RecordWriter::new();
+        w.push(b"alpha");
+        w.push(b"");
+        w.push(&[0u8; 1024]);
+        assert_eq!(w.count(), 3);
+        let body = w.finish();
+        let records = RecordReader::new(&body).read_all().unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0], b"alpha");
+        assert_eq!(records[1], b"");
+        assert_eq!(records[2], vec![0u8; 1024]);
+    }
+
+    #[test]
+    fn empty_file_is_empty() {
+        assert_eq!(RecordReader::new(&[]).read_all().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn crc_corruption_detected() {
+        let mut w = RecordWriter::new();
+        w.push(b"payload");
+        let mut body = w.finish();
+        let last = body.len() - 1;
+        body[last] ^= 0xff;
+        let mut r = RecordReader::new(&body);
+        assert!(matches!(r.next_record(), Err(StorageError::Corrupt(_))));
+    }
+
+    #[test]
+    fn truncated_header_detected() {
+        let mut w = RecordWriter::new();
+        w.push(b"payload");
+        let body = w.finish();
+        let mut r = RecordReader::new(&body[..4]);
+        assert!(matches!(r.next_record(), Err(StorageError::Corrupt(_))));
+    }
+
+    #[test]
+    fn truncated_body_detected() {
+        let mut w = RecordWriter::new();
+        w.push(b"payload");
+        let body = w.finish();
+        let mut r = RecordReader::new(&body[..body.len() - 2]);
+        assert!(matches!(r.next_record(), Err(StorageError::Corrupt(_))));
+    }
+
+    #[test]
+    fn count_matches() {
+        let mut w = RecordWriter::new();
+        for i in 0..57u32 {
+            w.push(&i.to_le_bytes());
+        }
+        let body = w.finish();
+        assert_eq!(RecordReader::new(&body).count().unwrap(), 57);
+    }
+}

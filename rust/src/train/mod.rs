@@ -1,0 +1,306 @@
+//! Trainer harness: the "client" side ML computation.
+//!
+//! Consumes pipeline output (local or distributed) and models — or really
+//! runs — the accelerator step:
+//!
+//! * [`StepModel`] — a calibrated accelerator step-time model. For NLP
+//!   models the step time scales with the *padded* token count, which is
+//!   precisely what makes unpadded-size imbalance cause stragglers (§3.6).
+//! * [`SyncTrainer`] — synchronous data-parallel training across N client
+//!   iterators with a per-step barrier: the step time is the *max* over
+//!   clients (the straggler effect), plus a synchronization overhead.
+//! * [`PjrtTrainStep`] — the real thing: the AOT transformer train step
+//!   executed through [`crate::runtime::Engine`] (used by
+//!   `examples/e2e_train.rs`).
+
+use crate::data::element::{DType, Element, Tensor};
+use crate::data::exec::ElemIter;
+use crate::data::DataResult;
+use crate::metrics::Registry;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+/// Accelerator step-time model.
+#[derive(Debug, Clone)]
+pub struct StepModel {
+    /// Fixed per-step cost (kernel launch, optimizer, collectives).
+    pub base: Duration,
+    /// Additional cost per padded token in the batch (NLP compute scales
+    /// with padded size; 0 for fixed-shape vision models).
+    pub per_token: Duration,
+    /// Whether to actually sleep (live harness) or just account (sim).
+    pub realtime: bool,
+}
+
+impl StepModel {
+    pub fn fixed(base: Duration) -> StepModel {
+        StepModel { base, per_token: Duration::ZERO, realtime: true }
+    }
+
+    pub fn tokens_scaled(base: Duration, per_token: Duration) -> StepModel {
+        StepModel { base, per_token, realtime: true }
+    }
+
+    /// Padded token count of a batched element (batch × padded length).
+    pub fn padded_tokens(elem: &Element) -> u64 {
+        match elem.tensors.first() {
+            Some(t) if t.rank() >= 2 => (t.shape[0] * t.shape[1]) as u64,
+            Some(t) if t.rank() == 1 => t.shape[0] as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn step_time(&self, elem: &Element) -> Duration {
+        self.base + self.per_token * Self::padded_tokens(elem) as u32
+    }
+
+    fn run(&self, elem: &Element) -> Duration {
+        let d = self.step_time(elem);
+        if self.realtime {
+            std::thread::sleep(d);
+        }
+        d
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: u64,
+    pub wall: Duration,
+    /// Sum over clients of accelerator-busy time.
+    pub accel_busy: Duration,
+    /// Wall-clock time accelerators spent waiting on input or the barrier.
+    pub stall: Duration,
+    pub batches_per_sec: f64,
+    /// Mean fraction of each step that was padding (NLP waste metric).
+    pub mean_padding_fraction: f64,
+}
+
+/// Synchronous data-parallel trainer over N client iterators.
+///
+/// Each client thread: fetch batch → barrier → "compute" (max over clients
+/// is implicit: the barrier makes everyone wait for the slowest fetch, and
+/// compute times differ only through batch shapes).
+pub struct SyncTrainer {
+    pub step_model: StepModel,
+    pub max_steps: u64,
+    pub metrics: Registry,
+}
+
+impl SyncTrainer {
+    pub fn new(step_model: StepModel, max_steps: u64) -> SyncTrainer {
+        SyncTrainer { step_model, max_steps, metrics: Registry::new() }
+    }
+
+    /// Run all client iterators to completion (or `max_steps`), returning
+    /// the aggregate report. Blocks until done.
+    pub fn run(&self, clients: Vec<Box<dyn ElemIter>>) -> DataResult<TrainReport> {
+        let n = clients.len().max(1);
+        let barrier = Arc::new(Barrier::new(n));
+        let stop_step = Arc::new(AtomicUsize::new(usize::MAX));
+        let stats = Arc::new(Mutex::new((Duration::ZERO, Duration::ZERO, 0f64, 0u64))); // (busy, stall, pad_frac_sum, steps)
+        let t0 = Instant::now();
+
+        let mut handles = Vec::new();
+        for (ci, mut it) in clients.into_iter().enumerate() {
+            let barrier = barrier.clone();
+            let model = self.step_model.clone();
+            let stats = stats.clone();
+            let stop_step = stop_step.clone();
+            let max_steps = self.max_steps;
+            let series = self.metrics.series(&format!("trainer/client{ci}/step_time"));
+            handles.push(std::thread::spawn(move || -> DataResult<()> {
+                let mut step = 0u64;
+                loop {
+                    if step >= max_steps || step >= stop_step.load(Ordering::SeqCst) as u64 {
+                        barrier.wait();
+                        break;
+                    }
+                    let fetch_t0 = Instant::now();
+                    let elem = it.next()?;
+                    let fetch = fetch_t0.elapsed();
+                    match elem {
+                        Some(e) => {
+                            // Synchronous step: all clients align here.
+                            let wait_t0 = Instant::now();
+                            barrier.wait();
+                            let sync = wait_t0.elapsed();
+                            let busy = model.run(&e);
+                            let pad_frac = padding_fraction(&e);
+                            series.record_at(step as f64, busy.as_secs_f64());
+                            let mut st = stats.lock().unwrap();
+                            st.0 += busy;
+                            st.1 += fetch + sync;
+                            st.2 += pad_frac;
+                            st.3 += 1;
+                            step += 1;
+                        }
+                        None => {
+                            // Source exhausted: everyone stops at this step.
+                            stop_step.fetch_min(step as usize, Ordering::SeqCst);
+                            barrier.wait();
+                            break;
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or(Some(crate::data::DataError::Other("client thread panicked".into())))
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let wall = t0.elapsed();
+        let (busy, stall, pad_sum, steps) = {
+            let st = stats.lock().unwrap();
+            (st.0, st.1, st.2, st.3)
+        };
+        let per_client_steps = steps / n as u64;
+        Ok(TrainReport {
+            steps: per_client_steps,
+            wall,
+            accel_busy: busy,
+            stall,
+            batches_per_sec: steps as f64 / wall.as_secs_f64(),
+            mean_padding_fraction: if steps > 0 { pad_sum / steps as f64 } else { 0.0 },
+        })
+    }
+}
+
+/// Fraction of a padded NLP batch that is padding (zeros) — the waste
+/// coordinated reads exists to reduce. 0 for non-2D or non-integer
+/// batches.
+pub fn padding_fraction(e: &Element) -> f64 {
+    let Some(t) = e.tensors.first() else { return 0.0 };
+    if t.rank() != 2 {
+        return 0.0;
+    }
+    let total = t.num_elements();
+    if total == 0 {
+        return 0.0;
+    }
+    let zeros = match t.dtype {
+        DType::U32 => t.as_u32().iter().filter(|&&v| v == 0).count(),
+        DType::I32 => t.as_i32().iter().filter(|&&v| v == 0).count(),
+        _ => return 0.0,
+    };
+    zeros as f64 / total as f64
+}
+
+/// The real PJRT-backed train step for the e2e example: holds the model
+/// parameters and advances them one SGD step per batch.
+pub struct PjrtTrainStep {
+    engine: crate::runtime::Engine,
+    params: Vec<Tensor>,
+    pub losses: Vec<f32>,
+    lr: f32,
+}
+
+impl PjrtTrainStep {
+    /// Initialize parameters via the `params_init` artifact.
+    pub fn new(engine: crate::runtime::Engine, lr: f32) -> Result<PjrtTrainStep, String> {
+        let params = engine.execute("params_init", vec![]).map_err(|e| e.to_string())?;
+        Ok(PjrtTrainStep { engine, params, losses: Vec::new(), lr })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|t| t.num_elements()).sum()
+    }
+
+    /// One SGD step on an `i32[batch, seq+1]` token batch. Returns loss.
+    pub fn step(&mut self, tokens: Tensor) -> Result<f32, String> {
+        let mut inputs = self.params.clone();
+        inputs.push(tokens);
+        inputs.push(Tensor::scalar_f32(self.lr));
+        let out = self.engine.execute("train_step", inputs).map_err(|e| e.to_string())?;
+        let loss = out.last().unwrap().as_f32()[0];
+        self.params = out[..out.len() - 1].to_vec();
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Loss without updating parameters.
+    pub fn eval(&self, tokens: Tensor) -> Result<f32, String> {
+        let mut inputs = self.params.clone();
+        inputs.push(tokens);
+        let out = self.engine.execute("eval_loss", inputs).map_err(|e| e.to_string())?;
+        Ok(out[0].as_f32()[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::exec::{Executor, ExecutorConfig};
+    use crate::data::graph::PipelineBuilder;
+    use crate::data::udf::UdfRegistry;
+    use crate::storage::ObjectStore;
+
+    fn local_iter(n: u64, batch: u32) -> Box<dyn ElemIter> {
+        let ex = Executor::new(ExecutorConfig::local(
+            ObjectStore::in_memory(),
+            UdfRegistry::with_builtins(),
+            0,
+        ));
+        let g = PipelineBuilder::source_range(n).batch(batch).build();
+        ex.iterate(&g).unwrap()
+    }
+
+    #[test]
+    fn single_client_runs_all_steps() {
+        let trainer = SyncTrainer::new(StepModel::fixed(Duration::from_micros(100)), 100);
+        let report = trainer.run(vec![local_iter(20, 2)]).unwrap();
+        assert_eq!(report.steps, 10);
+        assert!(report.batches_per_sec > 0.0);
+        assert!(report.accel_busy >= Duration::from_micros(900));
+    }
+
+    #[test]
+    fn max_steps_caps_run() {
+        let trainer = SyncTrainer::new(StepModel::fixed(Duration::ZERO), 3);
+        let report = trainer.run(vec![local_iter(100, 1)]).unwrap();
+        assert_eq!(report.steps, 3);
+    }
+
+    #[test]
+    fn two_clients_stay_in_lockstep() {
+        let trainer = SyncTrainer::new(StepModel::fixed(Duration::from_micros(50)), 5);
+        let report = trainer.run(vec![local_iter(10, 1), local_iter(10, 1)]).unwrap();
+        assert_eq!(report.steps, 5);
+    }
+
+    #[test]
+    fn step_model_scales_with_tokens() {
+        let m = StepModel {
+            base: Duration::from_millis(1),
+            per_token: Duration::from_micros(10),
+            realtime: false,
+        };
+        let small = Element::new(vec![Tensor::from_u32(vec![2, 4], &[1; 8])]);
+        let big = Element::new(vec![Tensor::from_u32(vec![2, 64], &[1; 128])]);
+        assert!(m.step_time(&big) > m.step_time(&small));
+        assert_eq!(m.step_time(&small), Duration::from_micros(1000 + 80));
+    }
+
+    #[test]
+    fn padding_fraction_counts_zeros() {
+        let half = Element::new(vec![Tensor::from_u32(vec![2, 4], &[1, 1, 0, 0, 1, 1, 0, 0])]);
+        assert!((padding_fraction(&half) - 0.5).abs() < 1e-9);
+        let none = Element::new(vec![Tensor::from_u32(vec![1, 2], &[3, 4])]);
+        assert_eq!(padding_fraction(&none), 0.0);
+        let scalar = Element::new(vec![Tensor::scalar_u32(0)]);
+        assert_eq!(padding_fraction(&scalar), 0.0);
+    }
+}

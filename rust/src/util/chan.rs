@@ -1,0 +1,313 @@
+//! Bounded MPMC channel and a small thread pool (no tokio offline).
+//!
+//! The service's hot paths are thread-based: worker pipeline parallelism,
+//! client-side parallel fetchers, RPC server connection handlers. The
+//! bounded channel doubles as the backpressure primitive the paper's
+//! workers rely on (a full output buffer stalls production, not memory).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Error returned when the channel is closed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+/// Sending half. Cloneable (MPMC).
+pub struct Sender<T>(Arc<Shared<T>>);
+
+/// Receiving half. Cloneable (MPMC).
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// Create a bounded channel with capacity `cap` (>= 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1);
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner { queue: VecDeque::new(), cap, closed: false, senders: 1 }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.inner.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.inner.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            g.closed = true;
+            drop(g);
+            self.0.not_empty.notify_all();
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; returns Err(Closed) if the channel was closed.
+    pub fn send(&self, v: T) -> Result<(), Closed> {
+        let mut g = self.0.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(Closed);
+            }
+            if g.queue.len() < g.cap {
+                g.queue.push_back(v);
+                drop(g);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.0.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(v) back if full/closed.
+    pub fn try_send(&self, v: T) -> Result<(), T> {
+        let mut g = self.0.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= g.cap {
+            return Err(v);
+        }
+        g.queue.push_back(v);
+        drop(g);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel explicitly (receivers drain then get Err).
+    pub fn close(&self) {
+        self.0.inner.lock().unwrap().closed = true;
+        self.0.not_empty.notify_all();
+        self.0.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; Err(Closed) when closed *and* drained.
+    pub fn recv(&self) -> Result<T, Closed> {
+        let mut g = self.0.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.queue.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if g.closed {
+                return Err(Closed);
+            }
+            g = self.0.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Receive with timeout; Ok(None) on timeout.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Option<T>, Closed> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut g = self.0.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.queue.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(Some(v));
+            }
+            if g.closed {
+                return Err(Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self.0.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.queue.is_empty() {
+                return if g.closed { Err(Closed) } else { Ok(None) };
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut g = self.0.inner.lock().unwrap();
+        let v = g.queue.pop_front();
+        if v.is_some() {
+            drop(g);
+            self.0.not_full.notify_one();
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Fixed-size thread pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Box<dyn FnOnce() + Send>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads >= 1);
+        let (tx, rx) = bounded::<Box<dyn FnOnce() + Send>>(threads * 4);
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || while let Ok(job) = rx.recv() { job() })
+                    .expect("spawn pool thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles }
+    }
+
+    /// Submit a job; blocks if the queue is full (backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Drain and join all workers.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            drop(tx);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err());
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(tx.try_send(3).is_ok());
+    }
+
+    #[test]
+    fn close_on_last_sender_drop() {
+        let (tx, rx) = bounded(4);
+        tx.send(9).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(9));
+        assert_eq!(rx.recv(), Err(Closed));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(16);
+        let n = 1000;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let rx = rx.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                while rx.recv().is_ok() {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..n / 4 {
+                    tx.send(i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn recv_timeout_returns_none() {
+        let (_tx, rx) = bounded::<u32>(1);
+        let got = rx.recv_timeout(Duration::from_millis(20)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn thread_pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = c.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 100);
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value`; everything else is
+//! a positional. Used by the launcher binary and the examples.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in binaries.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = iter.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--workers", "8", "--mode=dynamic"]);
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("mode"), Some("dynamic"));
+        assert_eq!(a.u64_or("workers", 0), 8);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["--verbose", "--workers", "4"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.u64_or("workers", 0), 4);
+    }
+
+    #[test]
+    fn trailing_flag_and_positionals() {
+        let a = parse(&["run", "--fast", "input.txt"]);
+        // "--fast input.txt" binds as kv by the grammar; positional is "run".
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("fast"), Some("input.txt"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_or("x", 7), 7);
+        assert_eq!(a.f64_or("y", 1.5), 1.5);
+        assert_eq!(a.str_or("z", "d"), "d");
+    }
+
+    #[test]
+    fn bad_number_falls_back() {
+        let a = parse(&["--n", "abc"]);
+        assert_eq!(a.u64_or("n", 3), 3);
+    }
+}

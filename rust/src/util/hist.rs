@@ -1,0 +1,219 @@
+//! Histogram / CDF / percentile utilities for metrics and figure output.
+//!
+//! The benches print paper-figure series (CDFs for Fig 1 and Fig 12a,
+//! percentiles for latency tables) using these helpers.
+
+/// A simple sample accumulator with percentile/CDF queries.
+#[derive(Debug, Default, Clone)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_vec(xs: Vec<f64>) -> Self {
+        Samples { xs, sorted: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100], linear interpolation between order stats.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Empirical CDF evaluated at `q` points equally spaced over the data
+    /// range; returns (x, F(x)) pairs. Used to print Fig-1/Fig-12a series.
+    pub fn cdf_points(&mut self, q: usize) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        if self.xs.is_empty() || q == 0 {
+            return vec![];
+        }
+        let (lo, hi) = (self.xs[0], *self.xs.last().unwrap());
+        let n = self.xs.len() as f64;
+        (0..=q)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / q as f64;
+                let cnt = self.xs.partition_point(|&v| v <= x);
+                (x, cnt as f64 / n)
+            })
+            .collect()
+    }
+
+    /// Fraction of samples <= x.
+    pub fn cdf_at(&mut self, x: f64) -> f64 {
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.partition_point(|&v| v <= x) as f64 / self.xs.len() as f64
+    }
+}
+
+/// Fixed-bin histogram (for burstiness timelines and worker-size dists).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+}
+
+/// Format a (x, y) series as an aligned two-column table for bench output.
+pub fn format_series(name: &str, pts: &[(f64, f64)]) -> String {
+    let mut s = format!("# {name}\n");
+    for (x, y) in pts {
+        s.push_str(&format!("{x:>12.4}  {y:>8.4}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let mut s = Samples::from_vec((1..=100).map(|i| i as f64).collect());
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn mean_std() {
+        let s = Samples::from_vec(vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.std() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let mut s = Samples::from_vec(vec![1.0, 2.0, 2.0, 3.0, 10.0]);
+        let pts = s.cdf_points(20);
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-9);
+        assert!((s.cdf_at(2.0) - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Samples::from_vec(vec![42.0]);
+        assert_eq!(s.percentile(37.0), 42.0);
+        assert_eq!(s.median(), 42.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.counts(), &[1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+pub mod chan;
+pub mod cli;
+pub mod hist;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,282 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline crate set has no `rand`, so we ship a small PCG-XSH-RR-64/32
+//! generator seeded through SplitMix64, plus the distributions the
+//! simulator and workload generators need (uniform, normal, lognormal,
+//! exponential, zipf) and Fisher-Yates shuffling. Everything is seeded and
+//! reproducible: every experiment records its seed.
+
+/// SplitMix64: used to expand a user seed into PCG state/stream.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32 with a SplitMix64-derived stream. Deterministic,
+/// fast, and statistically solid for simulation purposes.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MUL: u64 = 6_364_136_223_846_793_005;
+
+impl Rng {
+    /// Create a generator from a seed. Two generators with different seeds
+    /// produce independent-looking streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let init_state = splitmix64(&mut sm);
+        let init_inc = splitmix64(&mut sm) | 1;
+        let mut rng = Rng { state: 0, inc: init_inc };
+        rng.state = init_state.wrapping_add(rng.inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator (stable under reordering of other draws).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let s = splitmix64(&mut sm);
+        Rng::new(s)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli with probability p.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal with the given parameters of the underlying normal.
+    /// Heavy-tailed — used to model the fleet resource-usage CDFs (Fig 1).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / lambda
+    }
+
+    /// Zipf-distributed rank in [1, n] with exponent s (approximate inverse
+    /// CDF sampling; exact enough for workload skew modeling).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        // Inverse-transform on the generalized harmonic CDF via the
+        // integral approximation: H(k) ≈ (k^(1-s) - 1)/(1-s) for s != 1.
+        if (s - 1.0).abs() < 1e-9 {
+            let hn = (n as f64).ln() + 0.5772156649;
+            let target = self.f64() * hn;
+            let k = target.exp() as u64;
+            return k.clamp(1, n);
+        }
+        let one_minus = 1.0 - s;
+        let hn = ((n as f64).powf(one_minus) - 1.0) / one_minus;
+        let target = self.f64() * hn;
+        let k = (target * one_minus + 1.0).powf(1.0 / one_minus);
+        (k as u64).clamp(1, n)
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below_usize(xs.len())]
+    }
+
+    /// Random alphanumeric string (ids, tokens).
+    pub fn ident(&mut self, len: usize) -> String {
+        const A: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+        (0..len).map(|_| A[self.below_usize(A.len())] as char).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(6);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_is_heavy_tailed() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.lognormal(0.0, 1.5)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[xs.len() / 2];
+        assert!(mean > 1.8 * median, "mean={mean} median={median}");
+    }
+
+    #[test]
+    fn zipf_rank1_most_popular() {
+        let mut r = Rng::new(8);
+        let mut counts = [0u32; 11];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.2) as usize] += 1;
+        }
+        assert!(counts[1] > counts[2], "{counts:?}");
+        assert!(counts[2] > counts[5], "{counts:?}");
+        assert_eq!(counts[0], 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(10);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn range_inclusive_bounds() {
+        let mut r = Rng::new(11);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2_000 {
+            let v = r.range_u64(3, 6);
+            assert!((3..=6).contains(&v));
+            saw_lo |= v == 3;
+            saw_hi |= v == 6;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

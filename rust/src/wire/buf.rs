@@ -1,0 +1,233 @@
+//! Growable write buffer and bounds-checked read cursor.
+
+use super::{WireError, WireResult};
+
+/// Append-only little-endian write buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed byte string.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Raw append, no length prefix (for pre-framed payloads).
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Overwrite 4 bytes at `at` (used to back-patch frame lengths).
+    pub fn patch_u32(&mut self, at: usize, v: u32) {
+        self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked read cursor over a byte slice.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Eof { wanted: n, remaining: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Guard against hostile counts: a count-prefixed sequence of `n`
+    /// elements each at least `min_elem_size` bytes cannot exceed the
+    /// remaining buffer.
+    pub fn check_count(&self, n: usize, min_elem_size: usize) -> WireResult<()> {
+        if n.saturating_mul(min_elem_size) > self.remaining() {
+            return Err(WireError::TooLong { len: n, limit: self.remaining() });
+        }
+        Ok(())
+    }
+
+    pub fn get_u8(&mut self) -> WireResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> WireResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> WireResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> WireResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i32(&mut self) -> WireResult<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> WireResult<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> WireResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> WireResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bytes(&mut self) -> WireResult<Vec<u8>> {
+        let n = self.get_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Borrowed variant of [`Reader::get_bytes`] (zero-copy hot path).
+    pub fn get_bytes_ref(&mut self) -> WireResult<&'a [u8]> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+
+    /// Raw read of exactly `n` bytes.
+    pub fn get_raw(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u8(1);
+        w.put_u16(2);
+        w.put_u32(3);
+        w.put_u64(4);
+        w.put_i32(-5);
+        w.put_i64(-6);
+        w.put_f32(7.5);
+        w.put_f64(-8.25);
+        w.put_bytes(b"abc");
+        let b = w.into_bytes();
+        let mut r = Reader::new(&b);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        assert_eq!(r.get_u16().unwrap(), 2);
+        assert_eq!(r.get_u32().unwrap(), 3);
+        assert_eq!(r.get_u64().unwrap(), 4);
+        assert_eq!(r.get_i32().unwrap(), -5);
+        assert_eq!(r.get_i64().unwrap(), -6);
+        assert_eq!(r.get_f32().unwrap(), 7.5);
+        assert_eq!(r.get_f64().unwrap(), -8.25);
+        assert_eq!(r.get_bytes().unwrap(), b"abc");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn eof_detected() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.get_u32().is_err());
+        // failed read must not consume
+        assert_eq!(r.remaining(), 2);
+        assert_eq!(r.get_u16().unwrap(), 0x0201);
+    }
+
+    #[test]
+    fn patch_u32() {
+        let mut w = Writer::new();
+        w.put_u32(0); // placeholder
+        w.put_raw(b"xyz");
+        let at = 0;
+        w.patch_u32(at, 3);
+        let b = w.into_bytes();
+        let mut r = Reader::new(&b);
+        assert_eq!(r.get_u32().unwrap(), 3);
+        assert_eq!(r.get_raw(3).unwrap(), b"xyz");
+    }
+
+    #[test]
+    fn zero_copy_bytes_ref() {
+        let mut w = Writer::new();
+        w.put_bytes(b"hello");
+        let b = w.into_bytes();
+        let mut r = Reader::new(&b);
+        assert_eq!(r.get_bytes_ref().unwrap(), b"hello");
+    }
+}

@@ -1,0 +1,335 @@
+//! Binary wire format: `Encode`/`Decode` for every protocol and pipeline
+//! graph type.
+//!
+//! The repo builds fully offline (no serde), so we define a small,
+//! deterministic, little-endian, length-prefixed format:
+//!
+//! * fixed-width integers and floats are little-endian,
+//! * `String` / `Vec<u8>` are `u32` length + bytes,
+//! * `Vec<T>` is `u32` count + elements,
+//! * `Option<T>` is a `u8` tag (0/1) + payload,
+//! * enums encode a `u8` discriminant + per-variant payload (implemented
+//!   by hand in the types that need it).
+//!
+//! All protocol messages in [`crate::service::proto`], the dataset graph in
+//! [`crate::data::graph`], and the journal records in
+//! [`crate::service::journal`] ride on these traits.
+
+mod buf;
+
+pub use buf::{Reader, Writer};
+
+use std::io;
+
+/// Errors surfaced while decoding a wire buffer.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("unexpected end of buffer: wanted {wanted} more bytes, had {remaining}")]
+    Eof { wanted: usize, remaining: usize },
+    #[error("invalid utf-8 in string field")]
+    Utf8,
+    #[error("invalid enum tag {tag} for {ty}")]
+    BadTag { tag: u8, ty: &'static str },
+    #[error("length {len} exceeds limit {limit}")]
+    TooLong { len: usize, limit: usize },
+    #[error("checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")]
+    Checksum { stored: u32, computed: u32 },
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type WireResult<T> = Result<T, WireError>;
+
+/// Serialize `self` into the writer. Infallible by construction: encoding
+/// only appends to a growable buffer.
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+
+    /// Convenience: encode into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+}
+
+/// Deserialize a value from the reader.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader) -> WireResult<Self>;
+
+    /// Convenience: decode from a complete buffer, requiring full consumption.
+    fn from_bytes(bytes: &[u8]) -> WireResult<Self> {
+        let mut r = Reader::new(bytes);
+        let v = Self::decode(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(WireError::Other(format!(
+                "{} trailing bytes after decode",
+                r.remaining()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+macro_rules! impl_prim {
+    ($ty:ty, $put:ident, $get:ident) => {
+        impl Encode for $ty {
+            fn encode(&self, w: &mut Writer) {
+                w.$put(*self);
+            }
+        }
+        impl Decode for $ty {
+            fn decode(r: &mut Reader) -> WireResult<Self> {
+                r.$get()
+            }
+        }
+    };
+}
+
+impl_prim!(u8, put_u8, get_u8);
+impl_prim!(u16, put_u16, get_u16);
+impl_prim!(u32, put_u32, get_u32);
+impl_prim!(u64, put_u64, get_u64);
+impl_prim!(i32, put_i32, get_i32);
+impl_prim!(i64, put_i64, get_i64);
+impl_prim!(f32, put_f32, get_f32);
+impl_prim!(f64, put_f64, get_f64);
+
+impl Encode for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(*self as u8);
+    }
+}
+
+impl Decode for bool {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            tag => Err(WireError::BadTag { tag, ty: "bool" }),
+        }
+    }
+}
+
+impl Encode for usize {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(*self as u64);
+    }
+}
+
+impl Decode for usize {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(r.get_u64()? as usize)
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.put_bytes(self.as_bytes());
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        let b = r.get_bytes()?;
+        String::from_utf8(b).map_err(|_| WireError::Utf8)
+    }
+}
+
+/// `Vec<T>`: count-prefixed elements. Note for `Vec<u8>` this layout is
+/// byte-identical to [`Writer::put_bytes`] (u32 length + raw bytes), so
+/// bulk byte fields may use either form; hot paths (e.g. tensor data)
+/// call `put_bytes`/`get_bytes` directly for the memcpy fast path.
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.len() as u32);
+        for x in self {
+            x.encode(w);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        let n = r.get_u32()? as usize;
+        r.check_count(n, 1)?;
+        let mut v = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+/// Helper used by derived-by-hand composite types to encode a `Vec<T>` of
+/// any `Encode` type (use when the macro list above doesn't cover `T`).
+pub fn encode_vec<T: Encode>(v: &[T], w: &mut Writer) {
+    w.put_u32(v.len() as u32);
+    for x in v {
+        x.encode(w);
+    }
+}
+
+/// Counterpart of [`encode_vec`].
+pub fn decode_vec<T: Decode>(r: &mut Reader) -> WireResult<Vec<T>> {
+    let n = r.get_u32()? as usize;
+    r.check_count(n, 1)?;
+    let mut v = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        v.push(T::decode(r)?);
+    }
+    Ok(v)
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.encode(w);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            tag => Err(WireError::BadTag { tag, ty: "Option" }),
+        }
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+        self.1.encode(w);
+    }
+}
+
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+/// Derive-style macro for plain structs: `wire_struct!(Foo { a, b, c });`
+/// encodes fields in declaration order.
+#[macro_export]
+macro_rules! wire_struct {
+    ($name:ident { $($field:ident),* $(,)? }) => {
+        impl $crate::wire::Encode for $name {
+            fn encode(&self, #[allow(unused_variables)] w: &mut $crate::wire::Writer) {
+                $( $crate::wire::Encode::encode(&self.$field, w); )*
+            }
+        }
+        impl $crate::wire::Decode for $name {
+            fn decode(#[allow(unused_variables)] r: &mut $crate::wire::Reader) -> $crate::wire::WireResult<Self> {
+                Ok($name {
+                    $( $field: $crate::wire::Decode::decode(r)?, )*
+                })
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let b = v.to_bytes();
+        let back = T::from_bytes(&b).expect("decode");
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(0xdeadu16);
+        roundtrip(0xdead_beefu32);
+        roundtrip(u64::MAX);
+        roundtrip(-42i32);
+        roundtrip(i64::MIN);
+        roundtrip(3.5f32);
+        roundtrip(-2.75f64);
+        roundtrip(true);
+        roundtrip(false);
+    }
+
+    #[test]
+    fn strings_and_bytes() {
+        roundtrip(String::from("héllo wörld"));
+        roundtrip(String::new());
+        roundtrip(vec![1u8, 2, 3]);
+        roundtrip(Vec::<u8>::new());
+    }
+
+    #[test]
+    fn vecs_and_options() {
+        roundtrip(vec![1u64, 2, 3]);
+        roundtrip(vec![String::from("a"), String::from("b")]);
+        roundtrip(Option::<u32>::None);
+        roundtrip(Some(77u32));
+        roundtrip(vec![vec![1u8, 2], vec![3u8]]);
+        roundtrip((42u32, String::from("x")));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut b = 5u32.to_bytes();
+        b.push(0);
+        assert!(u32::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let b = 5u64.to_bytes();
+        assert!(u64::from_bytes(&b[..7]).is_err());
+        assert!(String::from_bytes(&[3, 0, 0, 0, b'a']).is_err());
+    }
+
+    #[test]
+    fn bad_bool_tag() {
+        assert!(matches!(
+            bool::from_bytes(&[2]),
+            Err(WireError::BadTag { tag: 2, ty: "bool" })
+        ));
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut w = Writer::new();
+        w.put_bytes(&[0xff, 0xfe]);
+        assert!(matches!(
+            String::from_bytes(&w.into_bytes()),
+            Err(WireError::Utf8)
+        ));
+    }
+
+    #[test]
+    fn wire_struct_macro() {
+        #[derive(Debug, PartialEq)]
+        struct Demo {
+            a: u32,
+            b: String,
+            c: Vec<u64>,
+        }
+        wire_struct!(Demo { a, b, c });
+        roundtrip(Demo { a: 7, b: "x".into(), c: vec![1, 2] });
+    }
+
+    #[test]
+    fn hostile_count_rejected() {
+        // A 4-billion-element vec header on a 6-byte buffer must error,
+        // not attempt allocation.
+        let bytes = [0xff, 0xff, 0xff, 0xff, 0, 0];
+        assert!(Vec::<u64>::from_bytes(&bytes).is_err());
+    }
+}

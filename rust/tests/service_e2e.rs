@@ -1,0 +1,375 @@
+//! End-to-end integration: dispatcher + workers + clients over real TCP.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
+use tfdatasvc::service::proto::{CompressionMode, ProcessingMode, ShardingPolicy};
+use tfdatasvc::service::visitation::{Guarantee, VisitationTracker};
+use tfdatasvc::service::worker::{Worker, WorkerConfig};
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::storage::dataset::{generate_text, generate_vision, TextGenConfig, VisionGenConfig};
+use tfdatasvc::storage::ObjectStore;
+
+fn start_dispatcher() -> Dispatcher {
+    Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap()
+}
+
+fn start_worker(dispatcher: &Dispatcher, store: Arc<ObjectStore>) -> Worker {
+    let cfg = WorkerConfig::new(store, UdfRegistry::with_builtins());
+    Worker::start("127.0.0.1:0", &dispatcher.addr(), cfg).unwrap()
+}
+
+#[test]
+fn single_worker_dynamic_sharding_exactly_once() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec)
+        .map("vision.normalize")
+        .batch(4)
+        .build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    let mut batches = 0;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        batches += 1;
+    }
+    assert_eq!(batches, 8);
+    // No failures: dynamic sharding gives exactly-once.
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+}
+
+#[test]
+fn multi_worker_dynamic_sharding_disjoint() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 8, samples_per_shard: 4, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store.clone());
+    let _w3 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec).batch(2).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+    }
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+}
+
+#[test]
+fn off_sharding_every_worker_full_dataset() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 2, samples_per_shard: 4, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec).batch(1).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(&graph, ServiceClientConfig { sharding: ShardingPolicy::Off, ..Default::default() })
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+    }
+    // OFF sharding with two workers: each sample seen twice overall.
+    let report = tracker.verify(Guarantee::ZeroOnceOrMore, total);
+    assert!(report.ok, "{report:?}");
+    assert_eq!(report.total_observations, 2 * total);
+    assert_eq!(report.unique_seen as u64, total);
+}
+
+#[test]
+fn compression_roundtrips_through_service() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 1, samples_per_shard: 6, ..Default::default() },
+    );
+    let _w = start_worker(&d, store);
+    let graph = PipelineBuilder::source_vision(spec).batch(3).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Dynamic,
+                compression: CompressionMode::Deflate,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut n = 0;
+    while let Some(e) = it.next().unwrap() {
+        assert_eq!(e.tensors[0].shape, vec![3, 32, 32, 3]);
+        n += 1;
+    }
+    assert_eq!(n, 2);
+}
+
+#[test]
+fn ephemeral_sharing_two_clients_one_named_job() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 2, samples_per_shard: 8, ..Default::default() },
+    );
+    let _w = start_worker(&d, store);
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+
+    let cfg = || ServiceClientConfig {
+        sharding: ShardingPolicy::Dynamic,
+        job_name: "hp-tuning".into(),
+        ..Default::default()
+    };
+    let c1 = ServiceClient::new(&d.addr());
+    let c2 = ServiceClient::new(&d.addr());
+    let mut it1 = c1.distribute(&graph, cfg()).unwrap();
+    let mut it2 = c2.distribute(&graph, cfg()).unwrap();
+    assert_eq!(it1.job_id(), it2.job_id(), "named job shared");
+
+    // Both clients consume the full stream: 4 batches each (shared cache,
+    // per-client cursors).
+    let drain = |it: &mut dyn ElemIter| {
+        let mut ids = Vec::new();
+        while let Some(e) = it.next().unwrap() {
+            ids.extend(e.ids);
+        }
+        ids
+    };
+    let t1 = std::thread::spawn({
+        let mut it = it1;
+        move || {
+            let ids = drain(&mut it);
+            it.release();
+            ids
+        }
+    });
+    let ids2 = drain(&mut it2);
+    let ids1 = t1.join().unwrap();
+    // Each client saw every sample exactly once (window large enough).
+    let mut s1 = ids1.clone();
+    s1.sort_unstable();
+    let mut s2 = ids2.clone();
+    s2.sort_unstable();
+    assert_eq!(s1, (0..16).collect::<Vec<u64>>());
+    assert_eq!(s2, (0..16).collect::<Vec<u64>>());
+}
+
+#[test]
+fn coordinated_reads_two_consumers_same_bucket_per_round() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_text(
+        &store,
+        "txt",
+        &TextGenConfig { num_shards: 2, samples_per_shard: 64, ..Default::default() },
+    );
+    let _w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store);
+
+    let num_consumers = 2u32;
+    // Fig. 7 pipeline: bucket by length, group into windows of
+    // num_consumers, flat_map.
+    let graph = PipelineBuilder::source_text(spec)
+        .bucket_by_sequence_length(vec![64, 128, 256], 4)
+        .group_by_window(num_consumers)
+        .flat_map()
+        .take(24) // 12 rounds
+        .build();
+
+    let mk = |ci: u32| ServiceClientConfig {
+        sharding: ShardingPolicy::Off,
+        mode: ProcessingMode::Coordinated,
+        job_name: "coord".into(),
+        num_consumers,
+        consumer_index: ci,
+        ..Default::default()
+    };
+    let c0 = ServiceClient::new(&d.addr());
+    let c1 = ServiceClient::new(&d.addr());
+    let mut it0 = c0.distribute(&graph, mk(0)).unwrap();
+    let mut it1 = c1.distribute(&graph, mk(1)).unwrap();
+    assert_eq!(it0.job_id(), it1.job_id());
+
+    let h1 = std::thread::spawn(move || {
+        let mut rounds = Vec::new();
+        for _ in 0..8 {
+            match it1.next() {
+                Ok(Some(e)) => rounds.push((e.bucket, e.tensors[0].shape[1])),
+                _ => break,
+            }
+        }
+        rounds
+    });
+    let mut rounds0 = Vec::new();
+    for _ in 0..8 {
+        match it0.next() {
+            Ok(Some(e)) => rounds0.push((e.bucket, e.tensors[0].shape[1])),
+            _ => break,
+        }
+    }
+    let rounds1 = h1.join().unwrap();
+    assert!(!rounds0.is_empty());
+    assert_eq!(rounds0.len(), rounds1.len());
+    // The §3.6 property: per round, both consumers get batches from the
+    // same sequence-length bucket.
+    for (a, b) in rounds0.iter().zip(&rounds1) {
+        assert_eq!(a.0, b.0, "same bucket per round: {rounds0:?} vs {rounds1:?}");
+    }
+}
+
+#[test]
+fn worker_failure_midstream_at_most_once() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 16, samples_per_shard: 4, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec)
+        .map("synthetic.burn:3000") // slow it down so the kill lands mid-stream
+        .batch(4)
+        .build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    let mut consumed = 0;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        consumed += 1;
+        if consumed == 2 {
+            w1.shutdown(); // preempt one worker mid-stream
+        }
+    }
+    // At-most-once must hold; some samples may be lost with the worker.
+    let report = tracker.verify(Guarantee::AtMostOnce, total);
+    assert!(report.ok, "{report:?}");
+    assert!(report.unique_seen > 0);
+}
+
+#[test]
+fn late_worker_joins_running_job() {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 8, samples_per_shard: 4, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w1 = start_worker(&d, store.clone());
+
+    let graph = PipelineBuilder::source_vision(spec)
+        .map("synthetic.burn:2000")
+        .batch(4)
+        .build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    // Scale out while the job runs (the paper's horizontal scaling story).
+    let mut tracker = VisitationTracker::new();
+    let mut late: Option<Worker> = None;
+    let mut batches = 0;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        batches += 1;
+        if batches == 1 {
+            late = Some(start_worker(&d, store.clone()));
+        }
+    }
+    assert!(late.is_some());
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+}
+
+#[test]
+fn dispatcher_is_not_on_the_data_path() {
+    // §3.1: the dispatcher performs no data processing — it does not even
+    // implement the GetElement method; element bytes flow client<->worker.
+    use tfdatasvc::rpc::Pool;
+    use tfdatasvc::service::proto::{worker_methods, CompressionMode, GetElementReq};
+    use tfdatasvc::wire::Encode;
+    let d = start_dispatcher();
+    let pool = Pool::with_defaults();
+    let req = GetElementReq {
+        job_id: 1,
+        client_id: 1,
+        consumer_index: None,
+        round: None,
+        compression: CompressionMode::None,
+    };
+    let resp = pool.call(
+        &d.addr(),
+        worker_methods::GET_ELEMENT,
+        &req.to_bytes(),
+        Duration::from_secs(2),
+    );
+    match resp {
+        Err(tfdatasvc::rpc::RpcError::Remote(msg)) => {
+            assert!(msg.contains("unknown method"), "{msg}");
+        }
+        other => panic!("dispatcher must reject data-path RPCs, got {other:?}"),
+    }
+}
