@@ -69,6 +69,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("consumed {batches} batches / {samples} samples through the service");
     assert_eq!(samples, 256, "dynamic sharding delivers every sample exactly once");
+
+    // The batched data plane amortizes RPC overhead: far fewer wire calls
+    // than elements (each GetElements response carries a whole frame).
+    let rpcs = client.metrics().counter("client/rpcs").get();
+    let fetched = client.metrics().counter("client/elements_fetched").get();
+    println!(
+        "data plane: {fetched} elements over {rpcs} RPCs ({:.2} elements/RPC)",
+        fetched as f64 / rpcs.max(1) as f64
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -4,6 +4,9 @@ hypothesis sweeps shapes and parameter ranges; every property asserts
 allclose against kernels/ref.py. This is the CORE correctness signal for
 the compute layer — if these pass, the HLO artifacts the Rust workers and
 clients execute are numerically trustworthy.
+
+(Absorbed the former test_kernel.py stub, which only restated this
+docstring; kernel-vs-ref allclose coverage lives here.)
 """
 
 import numpy as np

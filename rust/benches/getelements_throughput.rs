@@ -1,0 +1,126 @@
+//! Batched streaming data plane (`GetElements`) vs the single-element
+//! `GetElement` RPC, on the two shapes that bracket the design space:
+//!
+//! * small elements (~100 B on the wire): per-RPC overhead dominates,
+//!   which is exactly what batching amortizes;
+//! * large elements (~196 KiB): byte throughput dominates, batching
+//!   should at least not hurt.
+//!
+//! Prints elements/s, RPCs issued, and RPCs-per-element for both paths,
+//! plus the speedup and RPC-amplification drop. Acceptance targets:
+//! >= 2x element throughput and >= 8x fewer RPCs per element on the
+//! small shape at default settings.
+
+use std::sync::Arc;
+use std::time::Instant;
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::{GraphDef, PipelineBuilder};
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::orchestrator::Cell;
+use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::proto::ShardingPolicy;
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
+use tfdatasvc::storage::ObjectStore;
+
+struct RunStats {
+    elements: u64,
+    secs: f64,
+    rpcs: u64,
+    bytes: u64,
+}
+
+fn run(cell: &Cell, graph: &GraphDef, batching: bool) -> RunStats {
+    let client = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = client
+        .distribute(
+            graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Off,
+                batching,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    let mut elements = 0u64;
+    while let Ok(Some(_)) = it.next() {
+        elements += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    it.release();
+    RunStats {
+        elements,
+        secs,
+        rpcs: client.metrics().counter("client/rpcs").get(),
+        bytes: client.metrics().counter("client/bytes_fetched").get(),
+    }
+}
+
+fn main() {
+    let store = ObjectStore::in_memory();
+    let cell = Arc::new(
+        Cell::new(store.clone(), UdfRegistry::with_builtins(), DispatcherConfig::default())
+            .unwrap(),
+    );
+    // Deep worker buffers so the data plane, not production, is measured.
+    cell.set_worker_config_mutator(|c| {
+        c.buffer_size = 256;
+        c.cache_window = 1024;
+    });
+    cell.scale_to(1).unwrap();
+
+    // Small shape: 8 range rows per element, ~100 B on the wire.
+    let small = PipelineBuilder::source_range(4096).batch(8).build();
+    // Large shape: 16-image vision batches, ~196 KiB on the wire.
+    let spec = generate_vision(
+        &store,
+        "bench",
+        &VisionGenConfig { num_shards: 2, samples_per_shard: 256, ..Default::default() },
+    );
+    let large = PipelineBuilder::source_vision(spec).batch(16).build();
+
+    println!("=== getelements_throughput (1 worker, loopback) ===");
+    println!(
+        "{:<18} {:>10} {:>12} {:>8} {:>12}",
+        "shape/path", "elements", "elements/s", "rpcs", "rpcs/element"
+    );
+    for (name, graph) in [("small", &small), ("large", &large)] {
+        let single = run(&cell, graph, false);
+        let batched = run(&cell, graph, true);
+        assert_eq!(
+            single.elements, batched.elements,
+            "both paths must deliver the same stream"
+        );
+        for (path, s) in [("single", &single), ("batched", &batched)] {
+            println!(
+                "{:<18} {:>10} {:>12.0} {:>8} {:>12.3}",
+                format!("{name}/{path}"),
+                s.elements,
+                s.elements as f64 / s.secs,
+                s.rpcs,
+                s.rpcs as f64 / s.elements as f64
+            );
+        }
+        let speedup = single.secs / batched.secs;
+        let rpc_drop = (single.rpcs as f64 / single.elements as f64)
+            / (batched.rpcs as f64 / batched.elements as f64);
+        println!(
+            "{name}: batched speedup {speedup:.2}x, rpc amplification drop {rpc_drop:.1}x, \
+             bytes fetched {} -> {}",
+            single.bytes, batched.bytes
+        );
+        if name == "small" {
+            assert!(
+                speedup >= 2.0,
+                "acceptance: batched must sustain >= 2x element throughput on small \
+                 elements (got {speedup:.2}x)"
+            );
+            assert!(
+                rpc_drop >= 8.0,
+                "acceptance: client/rpcs per element must drop >= 8x (got {rpc_drop:.1}x)"
+            );
+        }
+    }
+    println!("getelements_throughput OK");
+}

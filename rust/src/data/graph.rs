@@ -240,9 +240,8 @@ impl GraphDef {
     /// Content fingerprint: jobs sharing a fingerprint can share ephemeral
     /// data (§3.5 requires "identical input pipelines").
     pub fn fingerprint(&self) -> u64 {
-        use sha2::{Digest, Sha256};
         let bytes = self.to_bytes();
-        let digest = Sha256::digest(&bytes);
+        let digest = crate::util::sha256::sha256(&bytes);
         u64::from_le_bytes(digest[..8].try_into().unwrap())
     }
 }

@@ -37,22 +37,43 @@ pub use graph::{GraphDef, Node};
 pub use udf::UdfRegistry;
 
 /// Pipeline-level errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DataError {
-    #[error("storage: {0}")]
-    Storage(#[from] crate::storage::StorageError),
-    #[error("wire: {0}")]
-    Wire(#[from] crate::wire::WireError),
-    #[error("unknown udf: {0}")]
+    Storage(crate::storage::StorageError),
+    Wire(crate::wire::WireError),
     UnknownUdf(String),
-    #[error("udf {name} failed: {msg}")]
     UdfFailed { name: String, msg: String },
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("invalid graph: {0}")]
     InvalidGraph(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataError::Storage(e) => write!(f, "storage: {e}"),
+            DataError::Wire(e) => write!(f, "wire: {e}"),
+            DataError::UnknownUdf(name) => write!(f, "unknown udf: {name}"),
+            DataError::UdfFailed { name, msg } => write!(f, "udf {name} failed: {msg}"),
+            DataError::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            DataError::InvalidGraph(msg) => write!(f, "invalid graph: {msg}"),
+            DataError::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+impl From<crate::storage::StorageError> for DataError {
+    fn from(e: crate::storage::StorageError) -> DataError {
+        DataError::Storage(e)
+    }
+}
+
+impl From<crate::wire::WireError> for DataError {
+    fn from(e: crate::wire::WireError) -> DataError {
+        DataError::Wire(e)
+    }
 }
 
 pub type DataResult<T> = Result<T, DataError>;

@@ -26,24 +26,45 @@ use std::time::Duration;
 
 /// RPC-layer errors. `Remote` carries an application error string returned
 /// by the peer handler; everything else is transport-level.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RpcError {
-    #[error("connect to {addr} failed: {err}")]
     Connect { addr: String, err: io::Error },
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("wire: {0}")]
-    Wire(#[from] crate::wire::WireError),
-    #[error("deadline exceeded after {0:?}")]
+    Io(io::Error),
+    Wire(crate::wire::WireError),
     DeadlineExceeded(Duration),
-    #[error("connection closed")]
     ConnectionClosed,
-    #[error("remote error: {0}")]
     Remote(String),
-    #[error("frame too large: {0} bytes")]
     FrameTooLarge(usize),
-    #[error("retries exhausted: {0}")]
     RetriesExhausted(String),
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcError::Connect { addr, err } => write!(f, "connect to {addr} failed: {err}"),
+            RpcError::Io(e) => write!(f, "io: {e}"),
+            RpcError::Wire(e) => write!(f, "wire: {e}"),
+            RpcError::DeadlineExceeded(d) => write!(f, "deadline exceeded after {d:?}"),
+            RpcError::ConnectionClosed => write!(f, "connection closed"),
+            RpcError::Remote(msg) => write!(f, "remote error: {msg}"),
+            RpcError::FrameTooLarge(n) => write!(f, "frame too large: {n} bytes"),
+            RpcError::RetriesExhausted(msg) => write!(f, "retries exhausted: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RpcError {}
+
+impl From<io::Error> for RpcError {
+    fn from(e: io::Error) -> RpcError {
+        RpcError::Io(e)
+    }
+}
+
+impl From<crate::wire::WireError> for RpcError {
+    fn from(e: crate::wire::WireError) -> RpcError {
+        RpcError::Wire(e)
+    }
 }
 
 pub type RpcResult<T> = Result<T, RpcError>;

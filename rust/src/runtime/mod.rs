@@ -17,30 +17,46 @@ pub mod udfs;
 
 pub use manifest::{ArtifactInfo, InputSpec, Manifest};
 
-use crate::data::element::{DType, Tensor};
+#[cfg(any(feature = "xla", test))]
+use crate::data::element::DType;
+use crate::data::element::Tensor;
 use crate::util::chan;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact dir error: {0}")]
     Dir(String),
-    #[error("manifest: {0}")]
     Manifest(String),
-    #[error("unknown artifact: {0}")]
     UnknownArtifact(String),
-    #[error("input mismatch for {artifact}: {msg}")]
     InputMismatch { artifact: String, msg: String },
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("integrity: artifact {0} does not match manifest sha256")]
     Integrity(String),
-    #[error("runtime thread died")]
     ThreadDead,
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Dir(msg) => write!(f, "artifact dir error: {msg}"),
+            RuntimeError::Manifest(msg) => write!(f, "manifest: {msg}"),
+            RuntimeError::UnknownArtifact(name) => write!(f, "unknown artifact: {name}"),
+            RuntimeError::InputMismatch { artifact, msg } => {
+                write!(f, "input mismatch for {artifact}: {msg}")
+            }
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::Integrity(name) => {
+                write!(f, "integrity: artifact {name} does not match manifest sha256")
+            }
+            RuntimeError::ThreadDead => write!(f, "runtime thread died"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 pub type RuntimeResult<T> = Result<T, RuntimeError>;
 
@@ -149,6 +165,28 @@ fn validate_inputs(name: &str, art: &ArtifactInfo, inputs: &[Tensor]) -> Runtime
     Ok(())
 }
 
+/// Without the `xla` feature there is no PJRT client to run against: fail
+/// every request with a clear error. Engine loading, manifest parsing,
+/// input validation, and artifact integrity checks all still work, so the
+/// rest of the system (and its tests) is unaffected by the gate.
+#[cfg(not(feature = "xla"))]
+fn runtime_thread(_dir: PathBuf, _manifest: Arc<Manifest>, rx: chan::Receiver<Cmd>) {
+    while let Ok(cmd) = rx.recv() {
+        let msg = RuntimeError::Xla(
+            "built without the `xla` feature: PJRT execution unavailable".into(),
+        );
+        match cmd {
+            Cmd::Execute { reply, .. } => {
+                let _ = reply.send(Err(msg));
+            }
+            Cmd::Warm { reply, .. } => {
+                let _ = reply.send(Err(msg));
+            }
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
 fn runtime_thread(dir: PathBuf, manifest: Arc<Manifest>, rx: chan::Receiver<Cmd>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -222,6 +260,7 @@ fn runtime_thread(dir: PathBuf, manifest: Arc<Manifest>, rx: chan::Receiver<Cmd>
     }
 }
 
+#[cfg(feature = "xla")]
 fn dtype_to_element_type(d: DType) -> xla::ElementType {
     match d {
         DType::U8 => xla::ElementType::U8,
@@ -232,11 +271,13 @@ fn dtype_to_element_type(d: DType) -> xla::ElementType {
     }
 }
 
+#[cfg(feature = "xla")]
 fn tensor_to_literal(t: &Tensor) -> RuntimeResult<xla::Literal> {
     xla::Literal::create_from_shape_and_untyped_data(dtype_to_element_type(t.dtype), &t.shape, &t.data)
         .map_err(|e| RuntimeError::Xla(format!("literal: {e}")))
 }
 
+#[cfg(feature = "xla")]
 fn literal_to_tensor(lit: &xla::Literal) -> RuntimeResult<Tensor> {
     let shape = lit
         .array_shape()
@@ -268,11 +309,7 @@ fn literal_to_tensor(lit: &xla::Literal) -> RuntimeResult<Tensor> {
     Ok(Tensor::new(dtype, dims, data))
 }
 
-fn sha256_hex(bytes: &[u8]) -> String {
-    use sha2::{Digest, Sha256};
-    let d = Sha256::digest(bytes);
-    d.iter().map(|b| format!("{b:02x}")).collect()
-}
+use crate::util::sha256::sha256_hex;
 
 /// Default artifacts directory: `$TFDATASVC_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {

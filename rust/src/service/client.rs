@@ -45,6 +45,19 @@ pub struct ServiceClientConfig {
     pub request_timeout: Duration,
     /// How often to refresh the worker list from the dispatcher.
     pub heartbeat_interval: Duration,
+    /// Fetch via the batched streaming `GetElements` RPC (default). Only
+    /// applies to independent mode; coordinated reads always use the
+    /// single-element round protocol. Set false to force the legacy
+    /// one-element-per-RPC path.
+    pub batching: bool,
+    /// Max elements per batched response; 0 = worker default.
+    pub batch_max_elements: u32,
+    /// Per-response byte budget (flow control: bounds per-worker client
+    /// memory to ~2x this with the request pipeline); 0 = worker default.
+    pub batch_max_bytes: u64,
+    /// Worker-side long-poll window when its buffer is empty; 0 = worker
+    /// default.
+    pub batch_poll_ms: u32,
 }
 
 impl Default for ServiceClientConfig {
@@ -60,6 +73,10 @@ impl Default for ServiceClientConfig {
             max_fetchers: 8,
             request_timeout: Duration::from_secs(10),
             heartbeat_interval: Duration::from_millis(100),
+            batching: true,
+            batch_max_elements: 0,
+            batch_max_bytes: 1 << 20,
+            batch_poll_ms: 0,
         }
     }
 }
@@ -139,6 +156,10 @@ pub struct DistributedIter {
     mode: ProcessingMode,
     // Independent mode:
     rx: Option<chan::Receiver<ServiceResult<Element>>>,
+    /// Sender handle used only to force-close the buffer on release, so
+    /// fetchers blocked on a full buffer unwedge when the consumer stops
+    /// mid-stream instead of leaking.
+    tx_close: Option<chan::Sender<ServiceResult<Element>>>,
     // Coordinated mode:
     coord: Option<CoordFetcher>,
     // Common:
@@ -170,6 +191,11 @@ struct FetchShared {
     /// Workers that reported end_of_sequence.
     finished_workers: Mutex<HashSet<String>>,
     active_fetchers: AtomicU64,
+    // Batched-path knobs (see ServiceClientConfig).
+    batching: bool,
+    batch_max_elements: u32,
+    batch_max_bytes: u64,
+    batch_poll_ms: u32,
 }
 
 impl DistributedIter {
@@ -217,6 +243,7 @@ impl DistributedIter {
                 Ok(DistributedIter {
                     mode: cfg.mode,
                     rx: None,
+                    tx_close: None,
                     coord: Some(CoordFetcher {
                         workers,
                         round: 0,
@@ -234,6 +261,7 @@ impl DistributedIter {
             }
             ProcessingMode::Independent => {
                 let (tx, rx) = chan::bounded::<ServiceResult<Element>>(cfg.buffer_size);
+                let tx_close = tx.clone();
                 let shared = Arc::new(FetchShared {
                     job_id,
                     client_id,
@@ -245,6 +273,10 @@ impl DistributedIter {
                     metrics: metrics.clone(),
                     finished_workers: Mutex::new(HashSet::new()),
                     active_fetchers: AtomicU64::new(0),
+                    batching: cfg.batching,
+                    batch_max_elements: cfg.batch_max_elements,
+                    batch_max_bytes: cfg.batch_max_bytes,
+                    batch_poll_ms: cfg.batch_poll_ms,
                 });
                 // Supervisor: heartbeat the dispatcher, spawn a fetcher per
                 // (newly discovered) worker, close the channel when done.
@@ -266,7 +298,11 @@ impl DistributedIter {
                                             break;
                                         }
                                         if known.insert(addr.clone()) {
-                                            spawn_fetcher(shared.clone(), addr);
+                                            if shared.batching {
+                                                spawn_batched_fetcher(shared.clone(), addr);
+                                            } else {
+                                                spawn_fetcher(shared.clone(), addr);
+                                            }
                                         }
                                     }
                                     let all_finished = !known.is_empty()
@@ -292,6 +328,7 @@ impl DistributedIter {
                 Ok(DistributedIter {
                     mode: cfg.mode,
                     rx: Some(rx),
+                    tx_close: Some(tx_close),
                     coord: None,
                     job_id,
                     client_id,
@@ -316,6 +353,11 @@ impl DistributedIter {
         }
         self.released = true;
         self.stop.store(true, Ordering::SeqCst);
+        // Unwedge fetchers blocked on a full buffer: a consumer stopping
+        // mid-stream must not leak fetcher threads.
+        if let Some(tx) = &self.tx_close {
+            tx.close();
+        }
         let _: Result<ReleaseJobResp, _> = call_typed(
             &self.pool,
             &self.dispatcher_addr,
@@ -344,7 +386,8 @@ fn heartbeat(pool: &Pool, dispatcher: &str, job_id: u64, client_id: u64) -> Serv
 
 fn spawn_fetcher(shared: Arc<FetchShared>, addr: String) {
     shared.active_fetchers.fetch_add(1, Ordering::SeqCst);
-    std::thread::Builder::new()
+    let outer = shared.clone();
+    let spawned = std::thread::Builder::new()
         .name(format!("svc-fetch-{addr}"))
         .spawn(move || {
             // Transient-failure budget: the worker may not have received
@@ -370,6 +413,7 @@ fn spawn_fetcher(shared: Arc<FetchShared>, addr: String) {
                     &req,
                     shared.timeout,
                 );
+                shared.metrics.counter("client/rpcs").inc();
                 match resp {
                     Ok(r) => {
                         consecutive_errors = 0;
@@ -413,8 +457,153 @@ fn spawn_fetcher(shared: Arc<FetchShared>, addr: String) {
                 }
             }
             shared.active_fetchers.fetch_sub(1, Ordering::SeqCst);
-        })
-        .ok();
+        });
+    if spawned.is_err() {
+        // Spawn failure must not wedge the supervisor's drain wait.
+        outer.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Batched streaming fetcher: one pipeline per worker. A dedicated
+/// requester thread keeps the next `GetElements` RPC in flight while this
+/// thread decodes the previous response frame and drains it into the
+/// bounded client buffer — so RPC latency overlaps decode + consumption.
+/// The internal depth-1 channel plus the request byte budget bound
+/// per-worker client memory to roughly two response frames.
+fn spawn_batched_fetcher(shared: Arc<FetchShared>, addr: String) {
+    shared.active_fetchers.fetch_add(1, Ordering::SeqCst);
+    let s2 = shared.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("svc-fetchb-{addr}"))
+        .spawn(move || {
+            batched_fetch_loop(&s2, &addr);
+            s2.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+        });
+    if spawned.is_err() {
+        // Spawn failure must not wedge the supervisor's drain wait.
+        shared.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn batched_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
+    let (btx, brx) = chan::bounded::<GetElementsResp>(1);
+    // Kept by the drain side solely to force-close the pipeline if it
+    // exits early (consumer gone): the blocked requester then unblocks.
+    let pipeline_close = btx.clone();
+
+    let req_shared = shared.clone();
+    let req_addr = addr.to_string();
+    let requester = std::thread::Builder::new()
+        .name(format!("svc-fetchb-req-{addr}"))
+        .spawn(move || {
+            let mut consecutive_errors = 0u32;
+            const MAX_CONSECUTIVE_ERRORS: u32 = 25;
+            loop {
+                if req_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let req = GetElementsReq {
+                    job_id: req_shared.job_id,
+                    client_id: req_shared.client_id,
+                    max_elements: req_shared.batch_max_elements,
+                    max_bytes: req_shared.batch_max_bytes,
+                    poll_ms: req_shared.batch_poll_ms,
+                    compression: req_shared.compression,
+                };
+                let resp: Result<GetElementsResp, _> = call_typed(
+                    &req_shared.pool,
+                    &req_addr,
+                    worker_methods::GET_ELEMENTS,
+                    &req,
+                    req_shared.timeout,
+                );
+                req_shared.metrics.counter("client/rpcs").inc();
+                match resp {
+                    Ok(r) => {
+                        consecutive_errors = 0;
+                        req_shared.metrics.counter("client/batched_rpcs").inc();
+                        let eos = r.end_of_sequence;
+                        if btx.send(r).is_err() {
+                            break; // drain side gone
+                        }
+                        if eos {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        // Transient: the task may not have reached the
+                        // worker yet, or the worker is restarting. Retry
+                        // with backoff; give up only after sustained
+                        // failure (preemption).
+                        req_shared.metrics.counter("client/fetch_errors").inc();
+                        let _ = e;
+                        consecutive_errors += 1;
+                        if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                            req_shared
+                                .finished_workers
+                                .lock()
+                                .unwrap()
+                                .insert(req_addr.clone());
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            // Unblock the drain side whichever way this loop exited.
+            btx.close();
+        });
+
+    while let Ok(resp) = brx.recv() {
+        let eos = resp.end_of_sequence;
+        shared.metrics.counter("client/bytes_fetched").add(resp.frame.len() as u64);
+        match decode_batch(resp) {
+            Ok(elements) => {
+                let mut consumer_gone = false;
+                for e in elements {
+                    shared.metrics.counter("client/elements_fetched").inc();
+                    if shared.tx.send(Ok(e)).is_err() {
+                        consumer_gone = true;
+                        break;
+                    }
+                }
+                if consumer_gone {
+                    break;
+                }
+            }
+            Err(e) => {
+                if shared.tx.send(Err(e)).is_err() {
+                    break;
+                }
+            }
+        }
+        if eos {
+            shared.finished_workers.lock().unwrap().insert(addr.to_string());
+            break;
+        }
+    }
+    pipeline_close.close();
+    if let Ok(h) = requester {
+        let _ = h.join();
+    }
+}
+
+/// Client side of the frame contract: decompress (if needed), split the
+/// frame into element payloads, decode each.
+fn decode_batch(resp: GetElementsResp) -> ServiceResult<Vec<Element>> {
+    let plain = if resp.compressed { inflate(&resp.frame)? } else { resp.frame };
+    let payloads = Vec::<Vec<u8>>::from_bytes(&plain)?;
+    if payloads.len() != resp.num_elements as usize {
+        return Err(ServiceError::Other(format!(
+            "batched frame carried {} elements, header said {}",
+            payloads.len(),
+            resp.num_elements
+        )));
+    }
+    payloads
+        .iter()
+        .map(|b| Element::from_bytes(b).map_err(ServiceError::from))
+        .collect()
 }
 
 fn decode_element(bytes: &[u8], compressed: bool) -> ServiceResult<Element> {

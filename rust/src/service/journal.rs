@@ -10,7 +10,7 @@
 use crate::data::graph::GraphDef;
 use crate::service::proto::{ProcessingMode, ShardingPolicy};
 use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
-use crc32fast::Hasher;
+use crate::util::crc32::Hasher;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};

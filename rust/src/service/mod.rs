@@ -6,11 +6,31 @@
 //!   registry, task assignment, dynamic split distribution, heartbeats.
 //!   Performs **no data processing** (§3.1).
 //! * [`worker`] — data plane: executes pipeline graphs, buffers batches,
-//!   serves client `GetElement` RPCs. Hosts the **ephemeral sliding-window
+//!   serves client fetch RPCs. Hosts the **ephemeral sliding-window
 //!   cache** (§3.5) and the **coordinated-reads** round-robin scheduler
 //!   (§3.6).
 //! * [`client`] — accelerator-host side: registers pipelines, discovers
 //!   workers, fetches batches in parallel into a client-side buffer.
+//!
+//! ## The wire data plane
+//!
+//! Two fetch paths exist between client and worker:
+//!
+//! * **Batched streaming (`GetElements`)** — the default for
+//!   independent-mode jobs. Each RPC drains up to
+//!   `max_elements`/`max_bytes` of the task's ready queue in one
+//!   worker-side lock acquisition, long-polls briefly when the buffer is
+//!   empty instead of bouncing empty responses, and compresses the whole
+//!   response frame at once so the codec overhead amortizes across the
+//!   batch. The client pipelines requests: the next `GetElements` call is
+//!   in flight while the previous batch drains into the bounded client
+//!   buffer, with the byte budget bounding per-worker memory. This is
+//!   what keeps per-element RPC overhead off the hot path (the paper's
+//!   line-rate requirement, §3.1).
+//! * **Single-element (`GetElement`)** — retained for coordinated-reads
+//!   rounds (§3.6, where one round slot moves per call by design) and
+//!   for old clients; also reachable by setting
+//!   `ServiceClientConfig::batching = false`.
 //! * [`sharding`] — OFF / DYNAMIC / STATIC source-data sharding (§3.3).
 //! * [`journal`] — dispatcher write-ahead journal + replay (§3.4).
 //! * [`visitation`] — data-visitation-guarantee trackers used by tests
@@ -41,24 +61,51 @@ pub fn graph_num_shards(graph: &crate::data::graph::GraphDef) -> usize {
 }
 
 /// Service-level errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ServiceError {
-    #[error("rpc: {0}")]
-    Rpc(#[from] crate::rpc::RpcError),
-    #[error("wire: {0}")]
-    Wire(#[from] crate::wire::WireError),
-    #[error("data: {0}")]
-    Data(#[from] crate::data::DataError),
-    #[error("journal: {0}")]
+    Rpc(crate::rpc::RpcError),
+    Wire(crate::wire::WireError),
+    Data(crate::data::DataError),
     Journal(String),
-    #[error("unknown dataset {0}")]
     UnknownDataset(u64),
-    #[error("unknown job {0}")]
     UnknownJob(u64),
-    #[error("unknown worker {0}")]
     UnknownWorker(u64),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Rpc(e) => write!(f, "rpc: {e}"),
+            ServiceError::Wire(e) => write!(f, "wire: {e}"),
+            ServiceError::Data(e) => write!(f, "data: {e}"),
+            ServiceError::Journal(msg) => write!(f, "journal: {msg}"),
+            ServiceError::UnknownDataset(id) => write!(f, "unknown dataset {id}"),
+            ServiceError::UnknownJob(id) => write!(f, "unknown job {id}"),
+            ServiceError::UnknownWorker(id) => write!(f, "unknown worker {id}"),
+            ServiceError::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<crate::rpc::RpcError> for ServiceError {
+    fn from(e: crate::rpc::RpcError) -> ServiceError {
+        ServiceError::Rpc(e)
+    }
+}
+
+impl From<crate::wire::WireError> for ServiceError {
+    fn from(e: crate::wire::WireError) -> ServiceError {
+        ServiceError::Wire(e)
+    }
+}
+
+impl From<crate::data::DataError> for ServiceError {
+    fn from(e: crate::data::DataError) -> ServiceError {
+        ServiceError::Data(e)
+    }
 }
 
 pub type ServiceResult<T> = Result<T, ServiceError>;

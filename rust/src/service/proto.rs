@@ -25,6 +25,8 @@ pub mod dispatcher_methods {
 pub mod worker_methods {
     pub const GET_ELEMENT: u16 = 32;
     pub const WORKER_STATUS: u16 = 33;
+    /// Batched streaming fetch (the default independent-mode data plane).
+    pub const GET_ELEMENTS: u16 = 34;
 }
 
 // ------------------------------------------------------------ enum types
@@ -288,6 +290,42 @@ pub struct GetElementResp {
 }
 wire_struct!(GetElementResp { element, compressed, end_of_sequence, wrong_worker_for_round });
 
+/// Batched streaming fetch (independent mode only): one RPC drains up to
+/// `max_elements` / `max_bytes` of the task's ready queue, amortizing
+/// per-element RPC overhead. Coordinated-reads rounds keep using
+/// [`GetElementReq`] (one round slot per call is the §3.6 contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetElementsReq {
+    pub job_id: u64,
+    pub client_id: u64,
+    /// Max elements per response; 0 = worker default.
+    pub max_elements: u32,
+    /// Soft response byte budget (pre-compression); 0 = worker default.
+    /// At least one element is returned even if it alone exceeds this.
+    pub max_bytes: u64,
+    /// How long the worker may hold the request open waiting for data
+    /// before returning an empty frame (long-poll); 0 = worker default.
+    pub poll_ms: u32,
+    pub compression: CompressionMode,
+}
+wire_struct!(GetElementsReq { job_id, client_id, max_elements, max_bytes, poll_ms, compression });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetElementsResp {
+    /// Response frame: a wire-encoded `Vec<Vec<u8>>` of element payloads
+    /// (`u32` count, then length-prefixed entries). When `compressed`,
+    /// the whole frame is compressed as one unit so codec overhead
+    /// amortizes across the batch.
+    pub frame: Vec<u8>,
+    /// Element count inside `frame` (sanity check for the decoder).
+    pub num_elements: u32,
+    pub compressed: bool,
+    /// True when the task has produced everything it ever will *and*
+    /// this client has consumed it all; may accompany a non-empty frame.
+    pub end_of_sequence: bool,
+}
+wire_struct!(GetElementsResp { frame, num_elements, compressed, end_of_sequence });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStatusReq {}
 wire_struct!(WorkerStatusReq {});
@@ -378,6 +416,14 @@ mod tests {
         });
         rt(ReleaseJobReq { job_id: 3, client_id: 8 });
         rt(ReleaseJobResp { released: true });
+        rt(GetElementsReq {
+            job_id: 3,
+            client_id: 8,
+            max_elements: 64,
+            max_bytes: 1 << 20,
+            poll_ms: 50,
+            compression: CompressionMode::Deflate,
+        });
         rt(WorkerStatusResp {
             active_tasks: vec![1],
             buffered_elements: 5,
@@ -385,5 +431,53 @@ mod tests {
             cache_hits: 7,
             cache_evictions: 2,
         });
+    }
+
+    #[test]
+    fn get_elements_resp_roundtrip_variants() {
+        // Plain frame carrying two elements.
+        let frame = vec![vec![1u8, 2, 3], vec![4u8, 5]].to_bytes();
+        rt(GetElementsResp {
+            frame: frame.clone(),
+            num_elements: 2,
+            compressed: false,
+            end_of_sequence: false,
+        });
+        // Compressed variant: the frame bytes are a compressed blob.
+        let z = crate::wire::compress(&frame);
+        rt(GetElementsResp { frame: z, num_elements: 2, compressed: true, end_of_sequence: false });
+        // End-of-sequence variant: empty frame (count 0), eos set.
+        let empty = Vec::<Vec<u8>>::new().to_bytes();
+        rt(GetElementsResp { frame: empty, num_elements: 0, compressed: false, end_of_sequence: true });
+    }
+
+    #[test]
+    fn get_elements_frame_decodes_through_compression() {
+        use crate::data::element::Tensor;
+        use crate::data::Element;
+        // Worker-side assembly: encode each element, frame them, compress
+        // the whole frame; client-side: decompress, split, decode.
+        let elems: Vec<Element> = (0..4)
+            .map(|i| Element::with_ids(vec![Tensor::scalar_i32(i)], vec![i as u64]))
+            .collect();
+        let payloads: Vec<Vec<u8>> = elems.iter().map(|e| e.to_bytes()).collect();
+        let frame = payloads.to_bytes();
+        let resp = GetElementsResp {
+            frame: crate::wire::compress(&frame),
+            num_elements: 4,
+            compressed: true,
+            end_of_sequence: true,
+        };
+        let wire = resp.to_bytes();
+        let back = GetElementsResp::from_bytes(&wire).unwrap();
+        assert!(back.compressed && back.end_of_sequence);
+        let plain = crate::wire::decompress(&back.frame).unwrap();
+        let parts = Vec::<Vec<u8>>::from_bytes(&plain).unwrap();
+        assert_eq!(parts.len(), back.num_elements as usize);
+        for (i, p) in parts.iter().enumerate() {
+            let e = Element::from_bytes(p).unwrap();
+            assert_eq!(e.tensors[0].as_i32(), vec![i as i32]);
+            assert_eq!(e.ids, vec![i as u64]);
+        }
     }
 }

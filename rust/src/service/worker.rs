@@ -29,9 +29,8 @@ use crate::metrics::Registry;
 use crate::rpc::{call_typed, Pool, Server};
 use crate::storage::{ObjectStore, Region};
 use crate::util::chan;
-use crate::wire::{Decode, Encode};
+use crate::wire::{BufPool, Decode, Encode, Writer};
 use std::collections::HashMap;
-use std::io::{Read, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -49,9 +48,14 @@ pub struct WorkerConfig {
     pub cache_window: usize,
     pub heartbeat_interval: Duration,
     /// How long GetElement blocks for data before telling the client to
-    /// retry.
+    /// retry; also the upper bound on a GetElements long-poll.
     pub serve_timeout: Duration,
 }
+
+/// GetElements defaults applied when a request leaves a knob at 0.
+pub const DEFAULT_BATCH_MAX_ELEMENTS: u32 = 64;
+pub const DEFAULT_BATCH_MAX_BYTES: u64 = 4 << 20;
+pub const DEFAULT_BATCH_POLL_MS: u32 = 50;
 
 impl WorkerConfig {
     pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry) -> WorkerConfig {
@@ -150,6 +154,79 @@ impl SlidingCache {
             st.evictions += 1;
         }
         self.cond.notify_all();
+    }
+
+    /// Batched variant of [`SlidingCache::push`]: install several
+    /// pre-encoded elements under one lock acquisition (the GetElements
+    /// drain path encodes outside the lock, then bulk-inserts).
+    fn push_encoded(&self, encoded: Vec<Arc<Vec<u8>>>) {
+        if encoded.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for bytes in encoded {
+            st.window.push_back(bytes);
+            st.produced += 1;
+            if st.window.len() > self.capacity {
+                st.window.pop_front();
+                st.base_seq += 1;
+                st.evictions += 1;
+            }
+        }
+        self.cond.notify_all();
+    }
+
+    /// Batched variant of [`SlidingCache::serve`]: advance `client`'s
+    /// cursor through up to `max_elements` / `max_bytes` of retained
+    /// window in a single lock acquisition. Always returns at least one
+    /// element if any is visible to the cursor, even when it alone
+    /// exceeds the byte budget.
+    ///
+    /// The second return is the end-of-sequence verdict, decided inside
+    /// the critical section: producer finished (`eos`), cursor consumed
+    /// the whole window, *and* `in_flight` is zero. The last condition is
+    /// what makes the verdict safe under sharing: a concurrent handler
+    /// that popped the producer channel keeps `in_flight` non-zero until
+    /// its `push_encoded` (which serializes with this lock) completes, so
+    /// a true verdict can never race past an unpublished element. Once
+    /// `eos` is set no new increments happen, so a zero reading inside
+    /// the lock is terminal.
+    fn serve_batch(
+        &self,
+        client: u64,
+        max_elements: usize,
+        max_bytes: usize,
+        in_flight: &AtomicU64,
+    ) -> (Vec<Arc<Vec<u8>>>, bool) {
+        let mut st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        let mut bytes = 0usize;
+        loop {
+            if out.len() >= max_elements {
+                break;
+            }
+            let base = st.base_seq;
+            let cursor = *st.cursors.entry(client).or_insert(base);
+            let cursor = cursor.max(base); // evicted range skipped
+            let idx = (cursor - base) as usize;
+            if idx >= st.window.len() {
+                st.cursors.insert(client, cursor);
+                break;
+            }
+            let e = st.window[idx].clone(); // Arc bump, no copy
+            if !out.is_empty() && bytes + e.len() > max_bytes {
+                st.cursors.insert(client, cursor);
+                break;
+            }
+            bytes += e.len();
+            st.cursors.insert(client, cursor + 1);
+            st.hits += 1;
+            out.push(e);
+        }
+        let cursor = st.cursors.get(&client).copied().unwrap_or(st.base_seq);
+        let drained = (cursor.saturating_sub(st.base_seq)) as usize >= st.window.len();
+        let end = st.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
+        (out, end)
     }
 
     fn set_eos(&self) {
@@ -289,6 +366,15 @@ enum TaskState {
         cache: Arc<SlidingCache>,
         /// Producer output channel the serve path drains on demand.
         rx: chan::Receiver<Element>,
+        /// Elements the producer has committed to the channel that have
+        /// not yet been published to the cache. Incremented before the
+        /// producer's send, decremented by serve paths *after* pushing
+        /// into the cache — so a concurrent handler that popped the last
+        /// element but has not published it yet keeps this non-zero, and
+        /// no other handler can falsely declare end-of-sequence (which
+        /// would silently truncate the stream for one client of a shared
+        /// job).
+        in_flight: Arc<AtomicU64>,
     },
     Coordinated(Arc<CoordinatedState>),
 }
@@ -310,6 +396,8 @@ struct WorkerShared {
     dispatcher_addr: String,
     worker_id: AtomicU64,
     stop: AtomicBool,
+    /// Recycled encode buffers for GetElements frame assembly.
+    frame_bufs: BufPool,
 }
 
 /// A running worker: data server + heartbeat loop.
@@ -332,6 +420,7 @@ impl Worker {
             dispatcher_addr: dispatcher_addr.to_string(),
             worker_id: AtomicU64::new(0),
             stop: AtomicBool::new(false),
+            frame_bufs: BufPool::new(8),
         });
 
         let s2 = shared.clone();
@@ -491,13 +580,23 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
         ProcessingMode::Independent => {
             let cache = Arc::new(SlidingCache::new(shared.cfg.cache_window));
             let (tx, rx) = chan::bounded::<Element>(shared.cfg.buffer_size);
+            let in_flight = Arc::new(AtomicU64::new(0));
+            let inflight_tx = in_flight.clone();
             spawn_producer(shared, &task, exec_cfg, stop.clone(), busy_ns.clone(), move |e| {
-                tx.send(e).is_ok()
+                // Count before the send so a popped-but-unpublished
+                // element is never unaccounted (see TaskState docs).
+                inflight_tx.fetch_add(1, Ordering::SeqCst);
+                if tx.send(e).is_ok() {
+                    true
+                } else {
+                    inflight_tx.fetch_sub(1, Ordering::SeqCst);
+                    false
+                }
             }, {
                 let cache = cache.clone();
                 move || cache.set_eos()
             });
-            TaskState::Independent { cache, rx }
+            TaskState::Independent { cache, rx, in_flight }
         }
         ProcessingMode::Coordinated => {
             let coord = Arc::new(CoordinatedState::new(
@@ -568,7 +667,7 @@ fn spawn_producer(
                 Ok(it) => it,
                 Err(e) => {
                     metrics.counter("worker/pipeline_errors").inc();
-                    log::error!("job {job_id}: pipeline build failed: {e}");
+                    eprintln!("job {job_id}: pipeline build failed: {e}");
                     on_eos();
                     return;
                 }
@@ -589,7 +688,7 @@ fn spawn_producer(
                     Ok(None) => break,
                     Err(e) => {
                         metrics.counter("worker/pipeline_errors").inc();
-                        log::error!("job {job_id}: pipeline error: {e}");
+                        eprintln!("job {job_id}: pipeline error: {e}");
                         break;
                     }
                 }
@@ -605,6 +704,10 @@ fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResu
         worker_methods::GET_ELEMENT => {
             let req = GetElementReq::from_bytes(payload)?;
             Ok(get_element(shared, req)?.to_bytes())
+        }
+        worker_methods::GET_ELEMENTS => {
+            let req = GetElementsReq::from_bytes(payload)?;
+            Ok(get_elements(shared, req)?.to_bytes())
         }
         worker_methods::WORKER_STATUS => {
             let _ = WorkerStatusReq::from_bytes(payload)?;
@@ -632,8 +735,8 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
                 "coordinated job requires consumer_index and round".into(),
             ))
         }
-        (TaskState::Independent { cache, rx }, _, _) => {
-            serve_independent(cache, rx, req.client_id, shared.cfg.serve_timeout)
+        (TaskState::Independent { cache, rx, in_flight }, _, _) => {
+            serve_independent(cache, rx, in_flight, req.client_id, shared.cfg.serve_timeout)
         }
     };
 
@@ -647,9 +750,132 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
     Ok(resp)
 }
 
+/// Batched streaming drain (§3.1 line-rate data plane): move everything
+/// the producer has ready into the cache, then advance this client's
+/// cursor through up to `max_elements`/`max_bytes` of window in one lock
+/// acquisition. When nothing is ready, long-poll up to `poll_ms` instead
+/// of bouncing an empty response straight back.
+fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResult<GetElementsResp> {
+    let runner = shared
+        .tasks
+        .lock()
+        .unwrap()
+        .get(&req.job_id)
+        .cloned()
+        .ok_or(ServiceError::UnknownJob(req.job_id))?;
+    let (cache, rx, in_flight) = match &runner.state {
+        TaskState::Independent { cache, rx, in_flight } => {
+            (cache.clone(), rx.clone(), in_flight.clone())
+        }
+        TaskState::Coordinated(_) => {
+            return Err(ServiceError::Other(
+                "GetElements requires an independent-mode job; coordinated reads use GetElement"
+                    .into(),
+            ))
+        }
+    };
+    let max_elements =
+        (if req.max_elements == 0 { DEFAULT_BATCH_MAX_ELEMENTS } else { req.max_elements }) as usize;
+    let max_bytes =
+        (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes }) as usize;
+    let poll_ms = if req.poll_ms == 0 { DEFAULT_BATCH_POLL_MS } else { req.poll_ms };
+    let poll = Duration::from_millis(poll_ms as u64).min(shared.cfg.serve_timeout);
+    let deadline = Instant::now() + poll;
+
+    let mut end_of_sequence = false;
+    let batch: Vec<Arc<Vec<u8>>> = loop {
+        // Drain the producer channel into the cache: encode outside the
+        // lock, bulk-insert under one acquisition, and only then release
+        // the in-flight accounting (publish before decrement).
+        let mut fresh = Vec::new();
+        while fresh.len() < max_elements {
+            match rx.try_recv() {
+                Some(e) => fresh.push(Arc::new(e.to_bytes())),
+                None => break,
+            }
+        }
+        let drained = fresh.len() as u64;
+        if drained > 0 {
+            cache.push_encoded(fresh);
+            in_flight.fetch_sub(drained, Ordering::SeqCst);
+        }
+
+        let (batch, end) = cache.serve_batch(req.client_id, max_elements, max_bytes, &in_flight);
+        if !batch.is_empty() {
+            end_of_sequence = end;
+            break batch;
+        }
+        if end {
+            end_of_sequence = true;
+            break Vec::new();
+        }
+        // Not the end: production is pending, or a concurrent handler
+        // still holds popped-but-unpublished elements. Long-poll on the
+        // producer channel instead of bouncing an empty response.
+        let wait = deadline.saturating_duration_since(Instant::now());
+        if wait.is_zero() {
+            break Vec::new(); // empty long-poll window expired
+        }
+        match rx.recv_timeout(wait.min(Duration::from_millis(50))) {
+            Ok(Some(e)) => {
+                cache.push_encoded(vec![Arc::new(e.to_bytes())]);
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            Ok(None) => {}
+            Err(_) => {
+                // Channel closed: recv returns instantly, so pace the
+                // loop while a concurrent handler finishes publishing.
+                cache.set_eos();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    };
+
+    // Assemble the frame in a recycled buffer; compress the whole frame
+    // at once so codec overhead amortizes across the batch.
+    let mut w = Writer::from_vec(shared.frame_bufs.take());
+    w.put_u32(batch.len() as u32);
+    for bytes in &batch {
+        w.put_bytes(bytes);
+    }
+    let raw_len = w.len();
+    let mut compressed = false;
+    let frame = if req.compression == CompressionMode::Deflate && !batch.is_empty() {
+        let z = crate::wire::compress(w.as_slice());
+        if z.len() < raw_len {
+            shared
+                .metrics
+                .counter("worker/compression_bytes_saved")
+                .add((raw_len - z.len()) as u64);
+            compressed = true;
+            z
+        } else {
+            w.as_slice().to_vec()
+        }
+    } else {
+        // One exact-size copy out of the recycled buffer beats handing
+        // the buffer away: assembly then never re-pays the doubling
+        // reallocation chain, which dominates for multi-MiB frames.
+        w.as_slice().to_vec()
+    };
+    shared.frame_bufs.put(w.into_bytes());
+
+    let calls = shared.metrics.counter("worker/get_elements_calls");
+    calls.inc();
+    let served = shared.metrics.counter("worker/batched_elements_served");
+    served.add(batch.len() as u64);
+    shared
+        .metrics
+        .gauge("worker/elements_per_rpc")
+        .set((served.get() / calls.get().max(1)) as i64);
+
+    Ok(GetElementsResp { frame, num_elements: batch.len() as u32, compressed, end_of_sequence })
+}
+
 fn serve_independent(
     cache: &Arc<SlidingCache>,
     rx: &chan::Receiver<Element>,
+    in_flight: &Arc<AtomicU64>,
     client_id: u64,
     timeout: Duration,
 ) -> GetElementResp {
@@ -669,14 +895,45 @@ fn serve_independent(
                 // still be sitting in the channel — drain them first.
                 if let Some(e) = rx.try_recv() {
                     cache.push(e);
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
                     continue;
                 }
-                return GetElementResp {
-                    element: None,
-                    compressed: false,
-                    end_of_sequence: true,
-                    wrong_worker_for_round: false,
-                };
+                if in_flight.load(Ordering::SeqCst) != 0 {
+                    // A concurrent handler popped but has not published
+                    // yet; declaring EOS now would truncate the stream.
+                    if Instant::now() >= deadline {
+                        return GetElementResp {
+                            element: None,
+                            compressed: false,
+                            end_of_sequence: false,
+                            wrong_worker_for_round: false,
+                        };
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                // Quiescent (eos observed, nothing unpublished — and no
+                // new elements can appear after eos). The Eos verdict
+                // above may predate a concurrent publish, so take one
+                // authoritative re-look at the final cache state.
+                match cache.serve(client_id) {
+                    CacheServe::Bytes(b) => {
+                        return GetElementResp {
+                            element: Some(b.as_ref().clone()),
+                            compressed: false,
+                            end_of_sequence: false,
+                            wrong_worker_for_round: false,
+                        }
+                    }
+                    _ => {
+                        return GetElementResp {
+                            element: None,
+                            compressed: false,
+                            end_of_sequence: true,
+                            wrong_worker_for_round: false,
+                        }
+                    }
+                }
             }
             CacheServe::NeedProduce => {
                 // Front client: pull a fresh element from the producer.
@@ -690,7 +947,10 @@ fn serve_independent(
                     };
                 }
                 match rx.recv_timeout(wait.min(Duration::from_millis(100))) {
-                    Ok(Some(e)) => cache.push(e),
+                    Ok(Some(e)) => {
+                        cache.push(e);
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                    }
                     Ok(None) => {
                         if Instant::now() >= deadline {
                             return GetElementResp {
@@ -730,18 +990,16 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
     }
 }
 
+/// Compress an element payload with the in-tree wire codec (the format is
+/// internal to the service — both ends are this crate — so there is no
+/// deflate-compat requirement; see [`crate::wire::compress`]).
 fn deflate(bytes: &[u8]) -> ServiceResult<Vec<u8>> {
-    let mut enc = flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
-    enc.write_all(bytes).map_err(|e| ServiceError::Other(e.to_string()))?;
-    enc.finish().map_err(|e| ServiceError::Other(e.to_string()))
+    Ok(crate::wire::compress(bytes))
 }
 
 /// Inverse of [`deflate`] (client side).
 pub fn inflate(bytes: &[u8]) -> ServiceResult<Vec<u8>> {
-    let mut dec = flate2::read::DeflateDecoder::new(bytes);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out).map_err(|e| ServiceError::Other(e.to_string()))?;
-    Ok(out)
+    Ok(crate::wire::decompress(bytes)?)
 }
 
 #[cfg(test)]
@@ -816,6 +1074,73 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn serve_batch_drains_window_in_one_call() {
+        let quiet = AtomicU64::new(0);
+        let c = SlidingCache::new(16);
+        c.push_encoded((0..10).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        assert_eq!(batch.len(), 10);
+        assert!(!eos, "producer not finished");
+        for (i, b) in batch.iter().enumerate() {
+            let e = Element::from_bytes(b).unwrap();
+            assert_eq!(e.tensors[0].as_i32(), vec![i as i32]);
+        }
+        // Cursor advanced: nothing left, still not EOS.
+        let (rest, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        assert!(rest.is_empty() && !eos);
+        c.set_eos();
+        let (_, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        assert!(eos);
+        // A second client replays the shared window independently.
+        let (batch2, _) = c.serve_batch(2, 4, usize::MAX, &quiet);
+        assert_eq!(batch2.len(), 4);
+    }
+
+    #[test]
+    fn serve_batch_withholds_eos_while_elements_unpublished() {
+        // A concurrent handler popped the channel but has not published:
+        // in_flight > 0 must veto the end-of-sequence verdict even when
+        // the producer finished and this cursor drained the window.
+        let in_flight = AtomicU64::new(1);
+        let c = SlidingCache::new(4);
+        c.set_eos();
+        let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &in_flight);
+        assert!(batch.is_empty());
+        assert!(!eos, "unpublished element must block EOS");
+        in_flight.store(0, Ordering::SeqCst);
+        let (_, eos) = c.serve_batch(1, 64, usize::MAX, &in_flight);
+        assert!(eos);
+    }
+
+    #[test]
+    fn serve_batch_respects_element_and_byte_budgets() {
+        let quiet = AtomicU64::new(0);
+        let c = SlidingCache::new(32);
+        c.push_encoded((0..8).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        let (batch, _) = c.serve_batch(1, 3, usize::MAX, &quiet);
+        assert_eq!(batch.len(), 3, "element cap");
+        let elem_len = batch[0].len();
+        // Byte budget allows exactly two more.
+        let (batch, _) = c.serve_batch(1, 64, 2 * elem_len, &quiet);
+        assert_eq!(batch.len(), 2, "byte cap");
+        // A budget smaller than one element still returns one (progress).
+        let (batch, _) = c.serve_batch(1, 64, 1, &quiet);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn serve_batch_laggard_skips_evicted_range() {
+        let quiet = AtomicU64::new(0);
+        let c = SlidingCache::new(2);
+        c.push_encoded((0..5).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        // Window retains {3, 4}; a fresh client starts there.
+        let (batch, _) = c.serve_batch(9, 64, usize::MAX, &quiet);
+        assert_eq!(batch.len(), 2);
+        let e = Element::from_bytes(&batch[0]).unwrap();
+        assert_eq!(e.tensors[0].as_i32(), vec![3]);
     }
 
     #[test]

@@ -86,14 +86,29 @@ impl NetModel {
 }
 
 /// Errors from the storage layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum StorageError {
-    #[error("object not found: {0}")]
     NotFound(String),
-    #[error("record corrupt: {0}")]
     Corrupt(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for StorageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageError::NotFound(key) => write!(f, "object not found: {key}"),
+            StorageError::Corrupt(msg) => write!(f, "record corrupt: {msg}"),
+            StorageError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+impl From<std::io::Error> for StorageError {
+    fn from(e: std::io::Error) -> StorageError {
+        StorageError::Io(e)
+    }
 }
 
 pub type StorageResult<T> = Result<T, StorageError>;

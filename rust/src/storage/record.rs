@@ -14,7 +14,7 @@
 //! silently feeding garbage into training.
 
 use super::{StorageError, StorageResult};
-use crc32fast::Hasher;
+use crate::util::crc32::Hasher;
 
 /// Serializes records into an in-memory file body.
 #[derive(Debug, Default)]

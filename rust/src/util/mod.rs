@@ -1,5 +1,7 @@
 pub mod chan;
 pub mod cli;
+pub mod crc32;
 pub mod hist;
 pub mod json;
 pub mod rng;
+pub mod sha256;

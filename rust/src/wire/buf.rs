@@ -1,6 +1,8 @@
-//! Growable write buffer and bounds-checked read cursor.
+//! Growable write buffer, bounds-checked read cursor, and a reusable
+//! encode-buffer pool for batched response frames.
 
 use super::{WireError, WireResult};
+use std::sync::Mutex;
 
 /// Append-only little-endian write buffer.
 #[derive(Debug, Default)]
@@ -15,6 +17,13 @@ impl Writer {
 
     pub fn with_capacity(cap: usize) -> Self {
         Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Wrap a recycled buffer (cleared, capacity kept) — the
+    /// [`BufPool`] fast path, so batched encodes reuse allocations.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Writer { buf }
     }
 
     pub fn len(&self) -> usize {
@@ -79,6 +88,62 @@ impl Writer {
     /// Overwrite 4 bytes at `at` (used to back-patch frame lengths).
     pub fn patch_u32(&mut self, at: usize, v: u32) {
         self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Pool of reusable encode buffers for the batched data plane.
+///
+/// A multi-megabyte `GetElements` frame encoded into a fresh `Vec` pays
+/// a chain of doubling reallocations per response; taking a recycled
+/// buffer (or a fresh one pre-sized to the pool's high-water capacity)
+/// makes frame assembly a single allocation at steady state. Buffers
+/// that leave with the response are simply not returned; the pool
+/// refills from paths that finish with the scratch buffer (e.g. the
+/// compressed path, which copies the compressed frame out).
+#[derive(Debug, Default)]
+pub struct BufPool {
+    inner: Mutex<BufPoolInner>,
+    max_pooled: usize,
+}
+
+#[derive(Debug, Default)]
+struct BufPoolInner {
+    bufs: Vec<Vec<u8>>,
+    /// Largest capacity ever returned; fresh buffers pre-size to this.
+    cap_hint: usize,
+}
+
+impl BufPool {
+    /// A pool retaining at most `max_pooled` idle buffers.
+    pub fn new(max_pooled: usize) -> BufPool {
+        BufPool { inner: Mutex::new(BufPoolInner::default()), max_pooled: max_pooled.max(1) }
+    }
+
+    /// Take a cleared buffer: recycled if available, else freshly
+    /// allocated at the observed high-water capacity.
+    pub fn take(&self) -> Vec<u8> {
+        let mut g = self.inner.lock().unwrap();
+        match g.bufs.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::with_capacity(g.cap_hint),
+        }
+    }
+
+    /// Return a buffer for reuse. Keeps at most `max_pooled`.
+    pub fn put(&self, buf: Vec<u8>) {
+        let mut g = self.inner.lock().unwrap();
+        g.cap_hint = g.cap_hint.max(buf.capacity());
+        if g.bufs.len() < self.max_pooled {
+            g.bufs.push(buf);
+        }
+    }
+
+    /// Idle buffers currently held.
+    pub fn idle(&self) -> usize {
+        self.inner.lock().unwrap().bufs.len()
     }
 }
 
@@ -220,6 +285,45 @@ mod tests {
         let mut r = Reader::new(&b);
         assert_eq!(r.get_u32().unwrap(), 3);
         assert_eq!(r.get_raw(3).unwrap(), b"xyz");
+    }
+
+    #[test]
+    fn buf_pool_recycles_and_caps() {
+        let pool = BufPool::new(2);
+        let mut a = pool.take();
+        assert_eq!(a.capacity(), 0, "no hint yet");
+        a.extend_from_slice(&[1, 2, 3]);
+        a.reserve(1024);
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        // Recycled buffer comes back cleared with its capacity intact.
+        let b = pool.take();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(pool.idle(), 0);
+        // Fresh takes pre-size to the high-water capacity.
+        let c = pool.take();
+        assert!(c.capacity() >= cap);
+        // The pool never holds more than max_pooled buffers.
+        pool.put(b);
+        pool.put(c);
+        pool.put(Vec::new());
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn writer_from_vec_clears_and_reuses() {
+        let mut v = Vec::with_capacity(64);
+        v.extend_from_slice(b"stale");
+        let cap = v.capacity();
+        let mut w = Writer::from_vec(v);
+        assert!(w.is_empty());
+        w.put_bytes(b"fresh");
+        let out = w.into_bytes();
+        assert_eq!(out.capacity(), cap, "allocation reused");
+        let mut r = Reader::new(&out);
+        assert_eq!(r.get_bytes().unwrap(), b"fresh");
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Wire-frame compression: a small self-contained LZ77 codec.
+//!
+//! In-tree replacement for the `flate2` dependency (the build is fully
+//! offline). The worker compresses whole `GetElements` response frames —
+//! amortizing the codec's token overhead across every element in the
+//! batch — and single `GetElement` payloads with the same codec. The
+//! format is internal to the service (both sides of the wire are this
+//! crate), so there is no need for deflate compatibility:
+//!
+//! ```text
+//! | raw_len: u32 LE | token* |
+//! token := 0x00 | run_len: u16 LE | run_len literal bytes
+//!        | 0x01 | match_len: u16 LE | distance: u16 LE
+//! ```
+//!
+//! Matches are at least [`MIN_MATCH`] bytes and may overlap their own
+//! output (distance < length encodes a repeating pattern), which is what
+//! makes constant-filled tensors collapse to a few tokens.
+
+use super::{WireError, WireResult};
+
+/// Shortest match worth a 5-byte token.
+const MIN_MATCH: usize = 6;
+/// Token length fields are u16.
+const MAX_CHUNK: usize = u16::MAX as usize;
+/// Match distances are u16 (64 KiB window).
+const MAX_DISTANCE: usize = u16::MAX as usize;
+
+const TAG_LITERAL: u8 = 0;
+const TAG_MATCH: u8 = 1;
+
+fn hash3(d: &[u8], mask: usize) -> usize {
+    let v = (d[0] as u32) | ((d[1] as u32) << 8) | ((d[2] as u32) << 16);
+    (v.wrapping_mul(2654435761) >> 16) as usize & mask
+}
+
+fn emit_literals(out: &mut Vec<u8>, data: &[u8]) {
+    for chunk in data.chunks(MAX_CHUNK) {
+        out.push(TAG_LITERAL);
+        out.extend_from_slice(&(chunk.len() as u16).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Compress `data`. Output is never much larger than the input
+/// (3 bytes of framing per 64 KiB literal run, plus the 4-byte header).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    // Last position each 3-byte hash was seen at. Sized to the input so
+    // small payloads (the single-element GetElement path) don't pay a
+    // fixed 64 Ki-entry table fill per call; extra collisions on small
+    // inputs only cost missed matches, never correctness.
+    let table_len = n.next_power_of_two().clamp(1 << 8, 1 << 16);
+    let mask = table_len - 1;
+    let mut table = vec![usize::MAX; table_len];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + 3 <= n {
+        let h = hash3(&data[i..], mask);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX
+            && i - cand <= MAX_DISTANCE
+            && data[cand..cand + 3] == data[i..i + 3]
+        {
+            let mut len = 3;
+            while i + len < n && len < MAX_CHUNK && data[cand + len] == data[i + len] {
+                len += 1;
+            }
+            if len >= MIN_MATCH {
+                emit_literals(&mut out, &data[lit_start..i]);
+                out.push(TAG_MATCH);
+                out.extend_from_slice(&(len as u16).to_le_bytes());
+                out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+                i += len;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_literals(&mut out, &data[lit_start..n]);
+    out
+}
+
+/// Decompress a [`compress`]-produced buffer, validating framing.
+pub fn decompress(bytes: &[u8]) -> WireResult<Vec<u8>> {
+    if bytes.len() < 4 {
+        return Err(WireError::Eof { wanted: 4, remaining: bytes.len() });
+    }
+    let raw_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(raw_len.min(1 << 24));
+    let mut pos = 4usize;
+    while pos < bytes.len() {
+        let tag = bytes[pos];
+        pos += 1;
+        match tag {
+            TAG_LITERAL => {
+                if bytes.len() - pos < 2 {
+                    return Err(WireError::Eof { wanted: 2, remaining: bytes.len() - pos });
+                }
+                let len = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+                pos += 2;
+                if bytes.len() - pos < len {
+                    return Err(WireError::Eof { wanted: len, remaining: bytes.len() - pos });
+                }
+                out.extend_from_slice(&bytes[pos..pos + len]);
+                pos += len;
+            }
+            TAG_MATCH => {
+                if bytes.len() - pos < 4 {
+                    return Err(WireError::Eof { wanted: 4, remaining: bytes.len() - pos });
+                }
+                let len = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+                let dist = u16::from_le_bytes(bytes[pos + 2..pos + 4].try_into().unwrap()) as usize;
+                pos += 4;
+                if dist == 0 || dist > out.len() {
+                    return Err(WireError::Other(format!(
+                        "lz match distance {dist} exceeds output length {}",
+                        out.len()
+                    )));
+                }
+                // Byte-wise copy: overlapping matches (dist < len) are the
+                // run-length-encoding case and must see their own output.
+                for _ in 0..len {
+                    let b = out[out.len() - dist];
+                    out.push(b);
+                }
+            }
+            other => {
+                return Err(WireError::BadTag { tag: other, ty: "lz token" });
+            }
+        }
+        if out.len() > raw_len {
+            return Err(WireError::TooLong { len: out.len(), limit: raw_len });
+        }
+    }
+    if out.len() != raw_len {
+        return Err(WireError::Other(format!(
+            "lz frame decoded {} bytes, header said {raw_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(data: &[u8]) {
+        let z = compress(data);
+        assert_eq!(decompress(&z).unwrap(), data, "len {}", data.len());
+    }
+
+    #[test]
+    fn roundtrips() {
+        rt(b"");
+        rt(b"a");
+        rt(b"hello");
+        rt(b"abcabcabcabcabcabcabcabcabc");
+        rt(&vec![7u8; 10_000]);
+        let mixed: Vec<u8> = (0..5000u32)
+            .map(|i| (i.wrapping_mul(2654435761) >> 13) as u8)
+            .collect();
+        rt(&mixed);
+        // Structured data like tensor frames: repeating 128-byte rows.
+        let row: Vec<u8> = (0..128u8).collect();
+        let frame: Vec<u8> = row.iter().cycle().take(64 * 128).copied().collect();
+        rt(&frame);
+    }
+
+    #[test]
+    fn constant_data_compresses_hard() {
+        let data = vec![42u8; 100_000];
+        let z = compress(&data);
+        assert!(z.len() < data.len() / 50, "{} vs {}", z.len(), data.len());
+    }
+
+    #[test]
+    fn incompressible_data_bounded_expansion() {
+        let data: Vec<u8> = (0..70_000u32)
+            .map(|i| {
+                let x = i.wrapping_mul(0x9E37_79B9).rotate_left(11).wrapping_add(i);
+                (x ^ (x >> 7)) as u8
+            })
+            .collect();
+        let z = compress(&data);
+        assert!(z.len() < data.len() + data.len() / 100 + 64);
+        assert_eq!(decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn hostile_inputs_rejected() {
+        assert!(decompress(&[]).is_err());
+        assert!(decompress(&[1, 0, 0]).is_err());
+        // Match with distance beyond output.
+        let mut bad = 4u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[TAG_MATCH, 4, 0, 9, 0]);
+        assert!(decompress(&bad).is_err());
+        // Bad token tag.
+        let mut bad = 1u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[7, 0, 0]);
+        assert!(decompress(&bad).is_err());
+        // Output longer than the header claims.
+        let mut bad = 1u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[TAG_LITERAL, 2, 0, b'a', b'b']);
+        assert!(decompress(&bad).is_err());
+        // Truncated literal body.
+        let mut bad = 8u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[TAG_LITERAL, 8, 0, b'a']);
+        assert!(decompress(&bad).is_err());
+    }
+}

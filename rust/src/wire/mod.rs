@@ -16,28 +16,49 @@
 //! [`crate::service::journal`] ride on these traits.
 
 mod buf;
+pub mod compress;
 
-pub use buf::{Reader, Writer};
+pub use buf::{BufPool, Reader, Writer};
+pub use compress::{compress, decompress};
 
 use std::io;
 
 /// Errors surfaced while decoding a wire buffer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("unexpected end of buffer: wanted {wanted} more bytes, had {remaining}")]
     Eof { wanted: usize, remaining: usize },
-    #[error("invalid utf-8 in string field")]
     Utf8,
-    #[error("invalid enum tag {tag} for {ty}")]
     BadTag { tag: u8, ty: &'static str },
-    #[error("length {len} exceeds limit {limit}")]
     TooLong { len: usize, limit: usize },
-    #[error("checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")]
     Checksum { stored: u32, computed: u32 },
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("{0}")]
+    Io(io::Error),
     Other(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof { wanted, remaining } => {
+                write!(f, "unexpected end of buffer: wanted {wanted} more bytes, had {remaining}")
+            }
+            WireError::Utf8 => write!(f, "invalid utf-8 in string field"),
+            WireError::BadTag { tag, ty } => write!(f, "invalid enum tag {tag} for {ty}"),
+            WireError::TooLong { len, limit } => write!(f, "length {len} exceeds limit {limit}"),
+            WireError::Checksum { stored, computed } => {
+                write!(f, "checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
 }
 
 pub type WireResult<T> = Result<T, WireError>;

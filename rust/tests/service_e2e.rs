@@ -345,6 +345,190 @@ fn late_worker_joins_running_job() {
 }
 
 #[test]
+fn batched_path_exactly_once_three_workers_dynamic_sharding() {
+    // The batched GetElements plane must preserve the dynamic-sharding
+    // visitation guarantee: disjoint splits, every sample exactly once,
+    // while actually batching (fewer RPCs than elements).
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 12, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store.clone());
+    let _w3 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Dynamic,
+                batching: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    let mut elements = 0u64;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        elements += 1;
+    }
+    assert_eq!(elements, total / 4);
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+    // The batched path was really taken, and it really batched.
+    let batched_rpcs = client.metrics().counter("client/batched_rpcs").get();
+    assert!(batched_rpcs > 0, "expected GetElements traffic");
+    assert!(
+        client.metrics().counter("client/elements_fetched").get() >= elements,
+        "fetch accounting"
+    );
+}
+
+#[test]
+fn batched_path_worker_crash_keeps_relaxed_guarantee() {
+    // Killing a worker mid-epoch under the batched plane must still
+    // satisfy at-most-once: in-flight splits die with the worker, nothing
+    // is duplicated.
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 16, samples_per_shard: 4, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec)
+        .map("synthetic.burn:3000") // slow production so the kill lands mid-stream
+        .batch(4)
+        .build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Dynamic,
+                batching: true,
+                // Small batches so the crash interleaves with fetching.
+                batch_max_elements: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    let mut consumed = 0;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        consumed += 1;
+        if consumed == 2 {
+            w1.shutdown(); // preempt one worker mid-stream
+        }
+    }
+    let report = tracker.verify(Guarantee::AtMostOnce, total);
+    assert!(report.ok, "{report:?}");
+    assert!(report.unique_seen > 0);
+}
+
+#[test]
+fn dispatcher_restart_replays_journal_and_named_job_survives() {
+    // §3.4: the dispatcher journals every state change; a restarted
+    // dispatcher replays it, so a named (shared) job keeps its identity
+    // and a fresh client can attach and drain the whole dataset.
+    let dir = std::env::temp_dir().join(format!("tfdatasvc-e2e-journal-{}", std::process::id()));
+    let jpath = dir.join("journal");
+    let _ = std::fs::remove_file(&jpath);
+    let cfg = DispatcherConfig { journal_path: Some(jpath.clone()), ..Default::default() };
+
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+
+    let mk_cfg = || ServiceClientConfig {
+        sharding: ShardingPolicy::Dynamic,
+        job_name: "persistent-e2e".into(),
+        ..Default::default()
+    };
+
+    // First incarnation: create the named job (no workers yet — the
+    // journal records metadata, not data-plane state).
+    let d1 = Dispatcher::start("127.0.0.1:0", cfg.clone()).unwrap();
+    let c1 = ServiceClient::new(&d1.addr());
+    let it1 = c1.distribute(&graph, mk_cfg()).unwrap();
+    let job_id = it1.job_id();
+    drop(d1); // dispatcher crash
+
+    // Second incarnation replays the journal.
+    let d2 = Dispatcher::start("127.0.0.1:0", cfg).unwrap();
+    let c2 = ServiceClient::new(&d2.addr());
+    let mut it2 = c2.distribute(&graph, mk_cfg()).unwrap();
+    assert_eq!(it2.job_id(), job_id, "named job survived the restart");
+
+    // The replayed job is live, not a tombstone: a worker joining the new
+    // dispatcher receives its task and serves the full epoch.
+    let _w = start_worker(&d2, store);
+    let mut tracker = VisitationTracker::new();
+    while let Some(e) = it2.next().unwrap() {
+        tracker.observe(&e.ids);
+    }
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+
+    drop(it1); // releases against the dead dispatcher are best-effort
+    std::fs::remove_file(&jpath).ok();
+}
+
+#[test]
+fn single_element_path_still_works_for_old_clients() {
+    // Backward compatibility: batching=false forces the legacy
+    // one-element-per-RPC plane, which must deliver the same guarantee.
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Dynamic,
+                batching: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut tracker = VisitationTracker::new();
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+    }
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+    assert_eq!(client.metrics().counter("client/batched_rpcs").get(), 0);
+}
+
+#[test]
 fn dispatcher_is_not_on_the_data_path() {
     // §3.1: the dispatcher performs no data processing — it does not even
     // implement the GetElement method; element bytes flow client<->worker.
