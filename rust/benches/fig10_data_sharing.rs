@@ -3,8 +3,18 @@
 //! C (dedicated per job), for k in {1,2,4,8,16}.
 //!
 //! Paper: A flat at 1x (tested to 64 jobs); B fine to 4 jobs then job
-//! time grows 1.75x @ 8 and 3x @ 16; C cost grows linearly. Includes a
-//! live sliding-window-cache measurement backing mode A's flatness.
+//! time grows 1.75x @ 8 and 3x @ 16; C cost grows linearly.
+//!
+//! Two halves:
+//! 1. the `sim::sharing` cost model reproducing the figure, and
+//! 2. a **real-service cross-check**: k in-process jobs against a live
+//!    dispatcher/worker, once with `sharing: auto` (mode A — all k attach
+//!    to one fingerprint-matched job) and once with `sharing: off`
+//!    (mode B — k dedicated productions on the same pool), printing
+//!    measured production cost next to the sim prediction so the model
+//!    and the implementation keep each other honest.
+//!
+//! `--smoke` shrinks the dataset and k for CI.
 
 use std::sync::Arc;
 use tfdatasvc::data::exec::ElemIter;
@@ -14,17 +24,92 @@ use tfdatasvc::metrics::write_csv_rows;
 use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::rpc::{call_typed, Pool};
 use tfdatasvc::service::dispatcher::DispatcherConfig;
-use tfdatasvc::service::proto::{worker_methods, ShardingPolicy, WorkerStatusReq, WorkerStatusResp};
+use tfdatasvc::service::proto::{
+    worker_methods, SharingMode, ShardingPolicy, WorkerStatusReq, WorkerStatusResp,
+};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::sim::models::model;
 use tfdatasvc::sim::sharing::{mode_a, mode_b, mode_c, sequential_sharing_cost, SharingConfig};
 use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
 use tfdatasvc::storage::ObjectStore;
 
+struct RealRun {
+    /// Elements the worker pool produced, total.
+    produced: u64,
+    /// Elements all clients consumed, total.
+    consumed: u64,
+    /// How many clients attached to an existing job.
+    attaches: usize,
+    distinct_jobs: usize,
+}
+
+/// Run k concurrent anonymous clients over one identical pipeline on a
+/// fresh single-worker cell, with the given sharing policy.
+fn run_real(k: usize, sharing: SharingMode, shards: usize, samples_per_shard: usize) -> RealRun {
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: shards, samples_per_shard, ..Default::default() },
+    );
+    let cell =
+        Arc::new(Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap());
+    cell.set_worker_config_mutator(|c| c.cache_window = 4096);
+    cell.scale_to(1).unwrap();
+    let graph = PipelineBuilder::source_vision(spec).batch(8).build();
+
+    // Join all k clients first (so every attach targets a live job), then
+    // drain concurrently.
+    let iters: Vec<_> = (0..k)
+        .map(|_| {
+            let c = ServiceClient::new(&cell.dispatcher_addr());
+            c.distribute(
+                &graph,
+                ServiceClientConfig {
+                    sharding: ShardingPolicy::Dynamic,
+                    sharing,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = iters
+        .into_iter()
+        .map(|mut it| {
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                while let Ok(Some(_)) = it.next() {
+                    n += 1;
+                }
+                (n, it.job_id(), it.attached())
+            })
+        })
+        .collect();
+    let results: Vec<(u64, u64, bool)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let consumed = results.iter().map(|r| r.0).sum();
+    let attaches = results.iter().filter(|r| r.2).count();
+    let mut jobs: Vec<u64> = results.iter().map(|r| r.1).collect();
+    jobs.sort_unstable();
+    jobs.dedup();
+
+    let pool = Pool::with_defaults();
+    let status: WorkerStatusResp = call_typed(
+        &pool,
+        &cell.worker_addrs()[0],
+        worker_methods::WORKER_STATUS,
+        &WorkerStatusReq {},
+        std::time::Duration::from_secs(5),
+    )
+    .unwrap();
+    RealRun { produced: status.elements_produced, consumed, attaches, distinct_jobs: jobs.len() }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let m = model("M4");
     let cfg = SharingConfig::default();
-    println!("=== Fig 10: preprocessing cost by deployment mode ===");
+    println!("=== Fig 10: preprocessing cost by deployment mode (sim) ===");
     println!("{:>4} {:>12} {:>12} {:>12} {:>14}", "k", "A(shared)", "B(no share)", "C(dedicated)", "B slowdown");
     let mut rows = Vec::new();
     for k in [1usize, 2, 4, 8, 16] {
@@ -58,59 +143,58 @@ fn main() {
     );
     write_csv_rows("out/fig10.csv", "k,mode_a_cost,mode_b_cost,mode_c_cost", &rows).unwrap();
 
-    // ---- Live backing measurement: k clients, one shared job ----
-    let store = ObjectStore::in_memory();
-    let spec = generate_vision(
-        &store,
-        "ds",
-        &VisionGenConfig { num_shards: 4, samples_per_shard: 32, ..Default::default() },
+    // ---- Real-service cross-check: fingerprint sharing vs dedicated ----
+    let (shards, samples, k) = if smoke { (2, 16, 2) } else { (4, 32, 4) };
+    let epoch = (shards * samples / 8) as u64; // batches per epoch
+
+    let shared = run_real(k, SharingMode::Auto, shards, samples);
+    assert_eq!(shared.distinct_jobs, 1, "auto sharing converged on one job");
+    assert_eq!(shared.attaches, k - 1, "k-1 clients attached");
+    assert_eq!(shared.consumed, k as u64 * epoch, "every client drained the epoch");
+    assert!(
+        shared.produced as f64 <= 1.1 * epoch as f64,
+        "mode A single production: produced {} vs epoch {epoch}",
+        shared.produced
     );
-    let total = spec.total_samples;
-    let cell = Arc::new(Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap());
-    cell.set_worker_config_mutator(|c| c.cache_window = 4096);
-    cell.scale_to(1).unwrap();
-    let graph = PipelineBuilder::source_vision(spec).batch(8).build();
-    let k = 4;
-    let handles: Vec<_> = (0..k)
-        .map(|_| {
-            let d = cell.dispatcher_addr();
-            let g = graph.clone();
-            std::thread::spawn(move || {
-                let c = ServiceClient::new(&d);
-                let mut it = c
-                    .distribute(
-                        &g,
-                        ServiceClientConfig {
-                            sharding: ShardingPolicy::Dynamic,
-                            job_name: "fig10".into(),
-                            ..Default::default()
-                        },
-                    )
-                    .unwrap();
-                let mut n = 0;
-                while let Ok(Some(_)) = it.next() {
-                    n += 1;
-                }
-                n
-            })
-        })
-        .collect();
-    let consumed: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
-    let pool = Pool::with_defaults();
-    let status: WorkerStatusResp = call_typed(
-        &pool,
-        &cell.worker_addrs()[0],
-        worker_methods::WORKER_STATUS,
-        &WorkerStatusReq {},
-        std::time::Duration::from_secs(5),
+
+    let dedicated = run_real(k, SharingMode::Off, shards, samples);
+    assert_eq!(dedicated.distinct_jobs, k, "opt-out keeps k dedicated jobs");
+    assert_eq!(dedicated.attaches, 0);
+    assert_eq!(dedicated.consumed, k as u64 * epoch);
+    assert!(
+        dedicated.produced as f64 >= 0.9 * (k as u64 * epoch) as f64,
+        "mode B k productions: produced {} vs k*epoch {}",
+        dedicated.produced,
+        k as u64 * epoch
+    );
+
+    let measured_a = shared.produced as f64 / epoch as f64;
+    let measured_b = dedicated.produced as f64 / epoch as f64;
+    let sim_a = mode_a(m, &cfg, k).preprocessing_cost;
+    let sim_b_reads = mode_b(m, &cfg, k).storage_reads_rel;
+    println!("=== Fig 10: real-service cross-check (k={k}, epoch={epoch} batches) ===");
+    println!(
+        "mode A (sharing auto): measured production cost {measured_a:.2}x, sim predicts {sim_a:.2}x"
+    );
+    println!(
+        "mode B (sharing off):  measured production cost {measured_b:.2}x, sim predicts {sim_b_reads:.0}x productions"
+    );
+    write_csv_rows(
+        "out/fig10_real.csv",
+        "k,measured_a_cost,sim_a_cost,measured_b_cost,sim_b_productions",
+        &[vec![
+            k.to_string(),
+            format!("{measured_a:.3}"),
+            format!("{sim_a:.3}"),
+            format!("{measured_b:.3}"),
+            format!("{sim_b_reads:.3}"),
+        ]],
     )
     .unwrap();
-    println!(
-        "live: {k} clients consumed {consumed} batches; worker produced {} (sharing factor {:.1}x)",
-        status.elements_produced,
-        consumed as f64 / status.elements_produced as f64
+    assert!((measured_a - sim_a).abs() <= 0.1, "sim and implementation agree on mode A");
+    assert!(
+        (measured_b - sim_b_reads).abs() <= 0.1 * sim_b_reads,
+        "sim and implementation agree on mode B production count"
     );
-    assert_eq!(status.elements_produced as usize, total / 8, "produced exactly once");
-    assert_eq!(consumed, k * total / 8, "served k times");
-    println!("fig10 OK -> out/fig10.csv");
+    println!("fig10 OK -> out/fig10.csv, out/fig10_real.csv");
 }

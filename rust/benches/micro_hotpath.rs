@@ -63,7 +63,7 @@ fn main() {
     });
 
     // ---- rpc ----
-    let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+    let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec().into())).unwrap();
     let client = Client::connect(&srv.local_addr().to_string(), Duration::from_secs(2)).unwrap();
     bench("rpc: 64 B round-trip (loopback)", 2000, || {
         client.call(1, b"ping64bytes_ping64bytes_ping64bytes_ping64bytes_ping64.", Duration::from_secs(2)).unwrap();

@@ -237,12 +237,99 @@ impl GraphDef {
         Ok(())
     }
 
-    /// Content fingerprint: jobs sharing a fingerprint can share ephemeral
-    /// data (§3.5 requires "identical input pipelines").
+    /// Canonical structural fingerprint: jobs sharing a fingerprint can
+    /// share ephemeral data (§3.5 requires "identical input pipelines").
+    ///
+    /// Truncation of [`GraphDef::fingerprint_full`]; see there for the
+    /// canonicalization rules.
     pub fn fingerprint(&self) -> u64 {
-        let bytes = self.to_bytes();
-        let digest = crate::util::sha256::sha256(&bytes);
+        self.fingerprint_with_udfs(&|_| None)
+    }
+
+    /// [`GraphDef::fingerprint`] with UDF *body* digests mixed in: a
+    /// referenced UDF name resolving to a digest contributes
+    /// `name ++ digest`, so re-implementing a UDF under the same name
+    /// changes the fingerprint and blocks accidental sharing.
+    pub fn fingerprint_with_udfs(&self, digest_of: &dyn Fn(&str) -> Option<u64>) -> u64 {
+        let digest = self.fingerprint_full(digest_of);
         u64::from_le_bytes(digest[..8].try_into().unwrap())
+    }
+
+    /// Full 256-bit canonical fingerprint.
+    ///
+    /// The hash walks the graph and feeds each node's *semantic identity*
+    /// — operator name plus data-affecting parameters — through the
+    /// in-tree SHA-256, with explicit domain separation (version prefix,
+    /// per-node framing, length-prefixed fields). Deliberately **not** a
+    /// hash of the wire encoding, so:
+    ///
+    /// * it is stable across wire-format evolution and registration
+    ///   order (two clients registering the same pipeline always collide),
+    /// * purely *performance* attributes are excluded: `Map.parallelism`
+    ///   and `Prefetch` tune throughput without changing the produced
+    ///   stream, so pipelines differing only in tuning still share data,
+    /// * it stays sensitive to everything that changes the data: op
+    ///   parameters (batch sizes, shuffle seed, bucket boundaries…), UDF
+    ///   names (and bodies, via `digest_of`), and the source file list.
+    pub fn fingerprint_full(&self, digest_of: &dyn Fn(&str) -> Option<u64>) -> [u8; 32] {
+        let mut w = Writer::new();
+        w.put_bytes(b"tfdatasvc.pipeline-fingerprint.v1");
+        let hash_udf = |w: &mut Writer, name: &str| {
+            w.put_bytes(name.as_bytes());
+            match digest_of(name) {
+                Some(d) => {
+                    w.put_u8(1);
+                    w.put_u64(d);
+                }
+                None => w.put_u8(0),
+            }
+        };
+        let hash_spec = |w: &mut Writer, spec: &DatasetSpec| {
+            w.put_bytes(spec.prefix.as_bytes());
+            w.put_u32(spec.shards.len() as u32);
+            for s in &spec.shards {
+                w.put_bytes(s.as_bytes());
+            }
+            w.put_u64(spec.samples_per_shard as u64);
+            w.put_u64(spec.total_samples as u64);
+        };
+        for node in &self.nodes {
+            // Performance-only: no effect on the element stream.
+            if matches!(node, Node::Prefetch { .. }) {
+                continue;
+            }
+            w.put_bytes(node.op_name().as_bytes());
+            match node {
+                Node::SourceVision { spec } | Node::SourceText { spec } => hash_spec(&mut w, spec),
+                Node::SourceRange { n } => w.put_u64(*n),
+                // `parallelism` reorders in-flight execution, not output
+                // content (maps are element-wise): excluded.
+                Node::Map { udf, parallelism: _ } => hash_udf(&mut w, udf),
+                Node::Filter { udf } => hash_udf(&mut w, udf),
+                Node::Shuffle { buffer, seed } => {
+                    w.put_u32(*buffer);
+                    w.put_u64(*seed);
+                }
+                Node::Batch { size, drop_remainder } | Node::PaddedBatch { size, drop_remainder } => {
+                    w.put_u32(*size);
+                    w.put_u8(*drop_remainder as u8);
+                }
+                Node::Prefetch { .. } => unreachable!("skipped above"),
+                Node::Repeat { n } => w.put_u32(*n),
+                Node::Take { n } | Node::Skip { n } => w.put_u64(*n),
+                Node::Cache | Node::FlatMap => {}
+                Node::Interleave { cycle } => w.put_u32(*cycle),
+                Node::BucketBySequenceLength { boundaries, batch_size } => {
+                    w.put_u32(boundaries.len() as u32);
+                    for b in boundaries {
+                        w.put_u32(*b);
+                    }
+                    w.put_u32(*batch_size);
+                }
+                Node::GroupByWindow { window_size } => w.put_u32(*window_size),
+            }
+        }
+        crate::util::sha256::sha256(w.as_slice())
     }
 }
 
@@ -435,5 +522,94 @@ mod tests {
         let a2 = PipelineBuilder::source_range(10).batch(2).build();
         assert_eq!(a.fingerprint(), a2.fingerprint());
         assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_ignores_performance_attrs() {
+        // Map parallelism and prefetch depth tune throughput, not content:
+        // pipelines differing only there must share a fingerprint (§3.5
+        // sharing should not be defeated by per-job autotune settings).
+        let a = PipelineBuilder::source_range(100)
+            .map_parallel("vision.normalize", 4)
+            .batch(8)
+            .prefetch(2)
+            .build();
+        let b = PipelineBuilder::source_range(100)
+            .map_autotune("vision.normalize")
+            .batch(8)
+            .prefetch(64)
+            .build();
+        let c = PipelineBuilder::source_range(100)
+            .map_parallel("vision.normalize", 4)
+            .batch(8)
+            .build(); // no prefetch at all
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_semantic_params() {
+        let base = || PipelineBuilder::source_range(100).shuffle(64, 7).batch(8);
+        let a = base().build();
+        // One op param changed -> different hash.
+        let other_seed = PipelineBuilder::source_range(100).shuffle(64, 8).batch(8).build();
+        assert_ne!(a.fingerprint(), other_seed.fingerprint());
+        let other_buf = PipelineBuilder::source_range(100).shuffle(32, 7).batch(8).build();
+        assert_ne!(a.fingerprint(), other_buf.fingerprint());
+        assert_ne!(a.fingerprint(), base().take(5).build().fingerprint());
+        // UDF name changes the hash.
+        let m1 = base().map("vision.normalize").build();
+        let m2 = base().map("vision.augment").build();
+        assert_ne!(m1.fingerprint(), m2.fingerprint());
+        // drop_remainder is semantic (partial batch present or not).
+        let p = PipelineBuilder::source_range(100).batch_partial(8).build();
+        let f = PipelineBuilder::source_range(100).batch(8).build();
+        assert_ne!(p.fingerprint(), f.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_source_file_list() {
+        let mk = |shards: Vec<String>| {
+            let total = shards.len() * 4;
+            PipelineBuilder::source_vision(DatasetSpec {
+                prefix: "d".into(),
+                shards,
+                samples_per_shard: 4,
+                total_samples: total,
+            })
+            .batch(2)
+            .build()
+        };
+        let a = mk(vec!["d/s0".into(), "d/s1".into()]);
+        let b = mk(vec!["d/s0".into(), "d/s2".into()]);
+        let c = mk(vec!["d/s0".into(), "d/s1".into(), "d/s2".into()]);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "different file");
+        assert_ne!(a.fingerprint(), c.fingerprint(), "extra file");
+        assert_eq!(a.fingerprint(), mk(vec!["d/s0".into(), "d/s1".into()]).fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_udf_body_digest() {
+        let g = PipelineBuilder::source_range(10).map("custom.op").batch(2).build();
+        let plain = g.fingerprint();
+        let v1 = g.fingerprint_with_udfs(&|name| (name == "custom.op").then_some(0x1111));
+        let v2 = g.fingerprint_with_udfs(&|name| (name == "custom.op").then_some(0x2222));
+        assert_ne!(v1, v2, "UDF body change must change the hash");
+        assert_ne!(plain, v1, "digested vs undigested differ");
+        // Digests for names the graph never references are inert.
+        let unrelated = g.fingerprint_with_udfs(&|name| (name == "other.op").then_some(0x3333));
+        assert_eq!(plain, unrelated);
+    }
+
+    #[test]
+    fn fingerprint_stable_across_wire_roundtrip() {
+        let g = PipelineBuilder::source_range(50)
+            .map("vision.normalize")
+            .shuffle(16, 3)
+            .batch(4)
+            .build();
+        let back = GraphDef::from_bytes(&g.to_bytes()).unwrap();
+        assert_eq!(g.fingerprint(), back.fingerprint());
+        assert_eq!(g.fingerprint_full(&|_| None), back.fingerprint_full(&|_| None));
     }
 }

@@ -39,6 +39,10 @@ where
 #[derive(Clone, Default)]
 pub struct UdfRegistry {
     inner: Arc<RwLock<HashMap<String, Arc<dyn Udf>>>>,
+    /// Optional body digests, mixed into pipeline fingerprints (§3.5): a
+    /// re-implemented UDF under the same name gets a new digest, so jobs
+    /// running the old and new bodies never share ephemeral data.
+    digests: Arc<RwLock<HashMap<String, u64>>>,
 }
 
 impl UdfRegistry {
@@ -62,6 +66,40 @@ impl UdfRegistry {
         F: Fn(Element) -> Result<Element, String> + Send + Sync + 'static,
     {
         self.register(name, Arc::new(f));
+    }
+
+    /// Register alongside a body digest (any stable hash of the UDF's
+    /// implementation — version tag, source hash, artifact checksum).
+    pub fn register_fn_digest<F>(&self, name: &str, digest: u64, f: F)
+    where
+        F: Fn(Element) -> Result<Element, String> + Send + Sync + 'static,
+    {
+        self.register_fn(name, f);
+        self.set_digest(name, digest);
+    }
+
+    /// Attach (or replace) the body digest for an already-registered name.
+    pub fn set_digest(&self, name: &str, digest: u64) {
+        self.digests.write().unwrap().insert(name.to_string(), digest);
+    }
+
+    /// Body digest for a (possibly composite `a+b`) name. A composite has
+    /// a digest only when every part does; parts are combined
+    /// order-sensitively so `a+b` and `b+a` differ.
+    pub fn digest(&self, name: &str) -> Option<u64> {
+        let map = self.digests.read().unwrap();
+        if let Some(&d) = map.get(name) {
+            return Some(d);
+        }
+        if name.contains('+') {
+            let mut acc = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+            for p in name.split('+') {
+                let d = map.get(p)?;
+                acc = (acc ^ d).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            return Some(acc);
+        }
+        None
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -195,6 +233,21 @@ fn register_builtins(r: &UdfRegistry) {
         let keep = e.tensors.get(1).map(|t| t.as_u32()[0] != 0).unwrap_or(true);
         predicate_result(e, keep)
     });
+
+    // Body digests for every builtin: the version tag stands in for a
+    // source hash. Bump a UDF's tag when its behavior changes so pipelines
+    // running old and new bodies stop fingerprint-colliding.
+    for (name, version) in [
+        ("identity", "v1"),
+        ("vision.normalize", "v1"),
+        ("vision.augment", "v1"),
+        ("nlp.truncate", "v1"),
+        ("filter.even_len", "v1"),
+        ("filter.label_nonzero", "v1"),
+    ] {
+        let h = crate::util::sha256::sha256(format!("{name}:{version}").as_bytes());
+        r.set_digest(name, u64::from_le_bytes(h[..8].try_into().unwrap()));
+    }
 }
 
 /// Encode a filter verdict: element passes through with a marker tensor
@@ -300,6 +353,24 @@ mod tests {
         let e = Element::new(vec![Tensor::from_f32(vec![1], &[21.0])]);
         let out = r.resolve("double").unwrap().call(e).unwrap();
         assert_eq!(out.tensors[0].as_f32(), vec![42.0]);
+    }
+
+    #[test]
+    fn digests_cover_builtins_and_composites() {
+        let r = UdfRegistry::with_builtins();
+        let n = r.digest("vision.normalize").expect("builtin digest");
+        let a = r.digest("vision.augment").expect("builtin digest");
+        assert_ne!(n, a);
+        // Composite digest exists and is order-sensitive.
+        let na = r.digest("vision.normalize+vision.augment").unwrap();
+        let an = r.digest("vision.augment+vision.normalize").unwrap();
+        assert_ne!(na, an);
+        // Unknown part -> no digest; custom registration gets one.
+        assert!(r.digest("vision.normalize+nope").is_none());
+        r.register_fn_digest("custom", 42, Ok);
+        assert_eq!(r.digest("custom"), Some(42));
+        r.set_digest("custom", 43); // body changed
+        assert_eq!(r.digest("custom"), Some(43));
     }
 
     #[test]

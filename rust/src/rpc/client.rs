@@ -271,7 +271,7 @@ mod tests {
 
     #[test]
     fn call_on_closed_client_fails_fast() {
-        let srv = super::super::Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        let srv = super::super::Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec().into())).unwrap();
         let addr = srv.local_addr().to_string();
         let client = Client::connect(&addr, Duration::from_secs(1)).unwrap();
         client.call(1, b"x", Duration::from_secs(1)).unwrap();

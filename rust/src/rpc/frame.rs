@@ -76,6 +76,33 @@ impl Frame {
         w.flush()
     }
 
+    /// Scatter-gather frame write: serialize a frame whose payload is the
+    /// concatenation of `parts`, without ever copying the parts into one
+    /// contiguous buffer. This is the zero-copy half of the batched data
+    /// plane: the worker passes `[response head, element frame]` and the
+    /// multi-megabyte frame goes from its assembly buffer straight to the
+    /// socket (one gathered write), instead of through an intermediate
+    /// payload copy in `to_bytes` + `write_to`.
+    pub fn write_parts_to<W: Write>(
+        w: &mut W,
+        call_id: u64,
+        kind: FrameKind,
+        method: u16,
+        parts: &[&[u8]],
+    ) -> io::Result<()> {
+        let payload_len: usize = parts.iter().map(|p| p.len()).sum();
+        let mut hdr = Writer::with_capacity(4 + HEADER_LEN);
+        hdr.put_u32((HEADER_LEN + payload_len) as u32);
+        hdr.put_u64(call_id);
+        hdr.put_u8(kind as u8);
+        hdr.put_u16(method);
+        let mut slices: Vec<&[u8]> = Vec::with_capacity(1 + parts.len());
+        slices.push(hdr.as_slice());
+        slices.extend_from_slice(parts);
+        write_all_vectored(w, &slices)?;
+        w.flush()
+    }
+
     /// Blocking read of one complete frame.
     pub fn read_from<R: Read>(r: &mut R) -> io::Result<Frame> {
         let mut len4 = [0u8; 4];
@@ -97,6 +124,45 @@ impl Frame {
 
 fn to_io(e: crate::wire::WireError) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// `write_all` for a list of slices via `write_vectored`, tracking partial
+/// progress across slice boundaries. Falls back gracefully on writers
+/// whose `write_vectored` only consumes the first buffer (the default
+/// impl): the loop simply re-enters with the remainder.
+fn write_all_vectored<W: Write>(w: &mut W, slices: &[&[u8]]) -> io::Result<()> {
+    let mut idx = 0usize; // first slice with unwritten bytes
+    let mut off = 0usize; // progress within that slice
+    while idx < slices.len() {
+        if off >= slices[idx].len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let bufs: Vec<io::IoSlice> = std::iter::once(io::IoSlice::new(&slices[idx][off..]))
+            .chain(slices[idx + 1..].iter().map(|s| io::IoSlice::new(s)))
+            .collect();
+        let mut n = match w.write_vectored(&bufs) {
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::WriteZero, "gathered frame write stalled"))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 && idx < slices.len() {
+            let rem = slices[idx].len() - off;
+            if n < rem {
+                off += n;
+                n = 0;
+            } else {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -149,6 +215,62 @@ mod tests {
         buf.truncate(buf.len() - 2);
         let err = Frame::read_from(&mut buf.as_slice()).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn write_parts_matches_contiguous_write() {
+        let head = vec![1u8, 2, 3];
+        let tail = vec![4u8, 5, 6, 7, 8];
+        let mut joined = head.clone();
+        joined.extend_from_slice(&tail);
+        let expect = Frame::response(42, 9, joined);
+        let mut contiguous = Vec::new();
+        expect.write_to(&mut contiguous).unwrap();
+
+        let mut gathered = Vec::new();
+        Frame::write_parts_to(&mut gathered, 42, FrameKind::Response, 9, &[&head, &tail]).unwrap();
+        assert_eq!(gathered, contiguous, "scatter-gather bytes identical");
+        assert_eq!(Frame::read_from(&mut gathered.as_slice()).unwrap(), expect);
+    }
+
+    #[test]
+    fn write_parts_handles_empty_and_many_slices() {
+        let parts: Vec<Vec<u8>> = vec![vec![], vec![1], vec![], vec![2, 3], vec![]];
+        let refs: Vec<&[u8]> = parts.iter().map(|p| p.as_slice()).collect();
+        let mut buf = Vec::new();
+        Frame::write_parts_to(&mut buf, 1, FrameKind::Response, 2, &refs).unwrap();
+        let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.payload, vec![1u8, 2, 3]);
+        // Zero parts = empty payload.
+        let mut buf2 = Vec::new();
+        Frame::write_parts_to(&mut buf2, 1, FrameKind::Response, 2, &[]).unwrap();
+        assert!(Frame::read_from(&mut buf2.as_slice()).unwrap().payload.is_empty());
+    }
+
+    /// A writer that accepts at most 3 bytes per call and ignores all but
+    /// the first buffer of a vectored write — the worst legal behavior —
+    /// must still receive the complete frame.
+    #[test]
+    fn write_parts_survives_short_writes() {
+        struct Dribble(Vec<u8>);
+        impl Write for Dribble {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                let n = buf.len().min(3);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let head = vec![9u8; 5];
+        let tail: Vec<u8> = (0..23u8).collect();
+        let mut d = Dribble(Vec::new());
+        Frame::write_parts_to(&mut d, 7, FrameKind::Response, 1, &[&head, &tail]).unwrap();
+        let back = Frame::read_from(&mut d.0.as_slice()).unwrap();
+        let mut joined = head;
+        joined.extend_from_slice(&tail);
+        assert_eq!(back.payload, joined);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod server;
 
 pub use client::{call_typed, Client, Pool};
 pub use frame::{Frame, FrameKind, MAX_FRAME_LEN};
-pub use server::{Handler, Server};
+pub use server::{Handler, RespBody, Server};
 
 use std::io;
 use std::time::Duration;
@@ -93,11 +93,11 @@ mod tests {
     /// Echo handler: method 1 echoes, method 2 errors, method 3 sleeps.
     fn spawn_echo() -> (Server, String) {
         let srv = Server::bind("127.0.0.1:0", move |method, payload: &[u8]| match method {
-            1 => Ok(payload.to_vec()),
+            1 => Ok(payload.to_vec().into()),
             2 => Err("boom".to_string()),
             3 => {
                 std::thread::sleep(Duration::from_millis(200));
-                Ok(vec![])
+                Ok(RespBody::default())
             }
             m => Err(format!("no such method {m}")),
         })
@@ -177,7 +177,7 @@ mod tests {
         // Restart a fresh server on the same port. Retry binds briefly: the
         // OS may hold the port for a moment.
         let srv2 = loop {
-            match Server::bind(&port_addr, |_, p: &[u8]| Ok(p.to_vec())) {
+            match Server::bind(&port_addr, |_, p: &[u8]| Ok(p.to_vec().into())) {
                 Ok(s) => break s,
                 Err(_) => std::thread::sleep(Duration::from_millis(20)),
             }
@@ -207,7 +207,7 @@ mod tests {
         let (_srv, addr) = {
             let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| {
                 let ping = Ping::from_bytes(p).map_err(|e| e.to_string())?;
-                Ok(Ping { n: ping.n + 1 }.to_bytes())
+                Ok(Ping { n: ping.n + 1 }.to_bytes().into())
             })
             .unwrap();
             let a = srv.local_addr().to_string();
@@ -227,7 +227,7 @@ mod tests {
             if m == 7 {
                 panic!("handler bug");
             }
-            Ok(p.to_vec())
+            Ok(p.to_vec().into())
         })
         .unwrap();
         let addr = srv.local_addr().to_string();

@@ -14,17 +14,41 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A request handler: `(method, payload) -> Ok(response bytes) | Err(message)`.
+/// Response body as write slices. `head ++ tail` is the logical payload;
+/// handlers serving bulk data (the batched `GetElements` plane) put the
+/// fixed-size message head in `head` and move the multi-megabyte frame
+/// into `tail`, and the server writes both with one scatter-gather frame
+/// write — the bulk bytes are never copied into a contiguous response.
+/// Plain handlers just convert their encoded message via `From<Vec<u8>>`.
+#[derive(Debug, Default)]
+pub struct RespBody {
+    pub head: Vec<u8>,
+    pub tail: Vec<u8>,
+}
+
+impl From<Vec<u8>> for RespBody {
+    fn from(head: Vec<u8>) -> RespBody {
+        RespBody { head, tail: Vec::new() }
+    }
+}
+
+impl RespBody {
+    pub fn parts(head: Vec<u8>, tail: Vec<u8>) -> RespBody {
+        RespBody { head, tail }
+    }
+}
+
+/// A request handler: `(method, payload) -> Ok(response body) | Err(message)`.
 /// Must be cheap to clone-share across connections (we wrap it in an `Arc`).
 pub trait Handler: Send + Sync + 'static {
-    fn handle(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>, String>;
+    fn handle(&self, method: u16, payload: &[u8]) -> Result<RespBody, String>;
 }
 
 impl<F> Handler for F
 where
-    F: Fn(u16, &[u8]) -> Result<Vec<u8>, String> + Send + Sync + 'static,
+    F: Fn(u16, &[u8]) -> Result<RespBody, String> + Send + Sync + 'static,
 {
-    fn handle(&self, method: u16, payload: &[u8]) -> Result<Vec<u8>, String> {
+    fn handle(&self, method: u16, payload: &[u8]) -> Result<RespBody, String> {
         self(method, payload)
     }
 }
@@ -164,12 +188,20 @@ fn serve_connection(
                             .unwrap_or_else(|| "handler panicked".into());
                         Err(format!("panic: {msg}"))
                     });
-                let resp = match result {
-                    Ok(bytes) => Frame::response(call_id, method, bytes),
-                    Err(msg) => Frame::error(call_id, method, &msg),
-                };
                 if let Ok(mut guard) = w.lock() {
-                    let _ = resp.write_to(&mut *guard);
+                    let _ = match result {
+                        // Gathered write: head and tail go to the socket
+                        // as separate slices of one frame (zero-copy for
+                        // bulk-data responses).
+                        Ok(body) => Frame::write_parts_to(
+                            &mut *guard,
+                            call_id,
+                            FrameKind::Response,
+                            method,
+                            &[&body.head, &body.tail],
+                        ),
+                        Err(msg) => Frame::error(call_id, method, &msg).write_to(&mut *guard),
+                    };
                 }
             })
             .ok();
@@ -183,7 +215,7 @@ mod tests {
 
     #[test]
     fn ephemeral_bind_and_shutdown() {
-        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec().into())).unwrap();
         let addr = srv.local_addr();
         assert_ne!(addr.port(), 0);
         srv.shutdown();
@@ -193,7 +225,7 @@ mod tests {
 
     #[test]
     fn connection_counter_tracks() {
-        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec())).unwrap();
+        let srv = Server::bind("127.0.0.1:0", |_m, p: &[u8]| Ok(p.to_vec().into())).unwrap();
         assert_eq!(srv.active_connections(), 0);
         let c = super::super::Client::connect(&srv.local_addr().to_string(), Duration::from_secs(1)).unwrap();
         c.call(1, b"x", Duration::from_secs(1)).unwrap();

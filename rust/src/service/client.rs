@@ -32,8 +32,17 @@ use std::time::{Duration, Instant};
 pub struct ServiceClientConfig {
     pub sharding: ShardingPolicy,
     pub mode: ProcessingMode,
-    /// Shared job name; empty = dedicated anonymous job.
+    /// Shared job name; empty = anonymous job (subject to `sharing`).
     pub job_name: String,
+    /// Cross-job ephemeral sharing (§3.5). `Auto`: an anonymous
+    /// independent-mode job attaches to a live job running the exact same
+    /// pipeline (by structural fingerprint) instead of re-producing it —
+    /// note this trades the visitation guarantee for cost: a client
+    /// attaching mid-stream starts at the oldest *retained* window
+    /// element (relaxed visitation), so opt in only when that is
+    /// acceptable (e.g. hyperparameter sweeps). `Off` (default): always
+    /// create a dedicated production with the full guarantee.
+    pub sharing: SharingMode,
     /// Coordinated mode: total consumers and this client's slot.
     pub num_consumers: u32,
     pub consumer_index: u32,
@@ -66,6 +75,7 @@ impl Default for ServiceClientConfig {
             sharding: ShardingPolicy::Off,
             mode: ProcessingMode::Independent,
             job_name: String::new(),
+            sharing: SharingMode::Off,
             num_consumers: 0,
             consumer_index: 0,
             compression: CompressionMode::None,
@@ -86,6 +96,11 @@ pub struct ServiceClient {
     dispatcher_addr: String,
     pool: Arc<Pool>,
     metrics: Registry,
+    /// When set, every registration resolves referenced UDF names against
+    /// this registry and ships their body digests, so the one-call
+    /// `distribute` flow gets fingerprint protection against same-name /
+    /// different-body UDFs without the explicit two-step API.
+    udfs: Option<crate::data::udf::UdfRegistry>,
 }
 
 impl ServiceClient {
@@ -94,7 +109,14 @@ impl ServiceClient {
             dispatcher_addr: dispatcher_addr.to_string(),
             pool: Arc::new(Pool::with_defaults()),
             metrics: Registry::new(),
+            udfs: None,
         }
+    }
+
+    /// A client that mixes UDF body digests from `udfs` into every
+    /// pipeline fingerprint it registers (see `RegisterDatasetReq`).
+    pub fn with_udfs(dispatcher_addr: &str, udfs: crate::data::udf::UdfRegistry) -> ServiceClient {
+        ServiceClient { udfs: Some(udfs), ..ServiceClient::new(dispatcher_addr) }
     }
 
     pub fn metrics(&self) -> &Registry {
@@ -102,14 +124,41 @@ impl ServiceClient {
     }
 
     /// Register `graph` (after static optimization, §3.2) and return the
-    /// dataset id.
+    /// dataset id (= canonical pipeline fingerprint). Uses the client's
+    /// UDF registry (if constructed via [`ServiceClient::with_udfs`]) for
+    /// body digests.
     pub fn register_dataset(&self, graph: &GraphDef) -> ServiceResult<u64> {
+        self.register_dataset_with_udfs(graph, self.udfs.as_ref())
+    }
+
+    /// [`ServiceClient::register_dataset`] carrying body digests for the
+    /// UDFs the graph references, resolved from `udfs`: two clients whose
+    /// registries hold different implementations under one name then get
+    /// different fingerprints and never share ephemeral data.
+    pub fn register_dataset_with_udfs(
+        &self,
+        graph: &GraphDef,
+        udfs: Option<&crate::data::udf::UdfRegistry>,
+    ) -> ServiceResult<u64> {
         let optimized = optimize(graph, &OptimizeOptions::default());
+        let mut udf_digests = Vec::new();
+        if let Some(reg) = udfs {
+            for node in &optimized.nodes {
+                use crate::data::graph::Node;
+                let name = match node {
+                    Node::Map { udf, .. } | Node::Filter { udf } => udf,
+                    _ => continue,
+                };
+                if let Some(digest) = reg.digest(name) {
+                    udf_digests.push(UdfDigest { name: name.clone(), digest });
+                }
+            }
+        }
         let resp: RegisterDatasetResp = call_typed(
             &self.pool,
             &self.dispatcher_addr,
             dispatcher_methods::REGISTER_DATASET,
-            &RegisterDatasetReq { graph: optimized },
+            &RegisterDatasetReq { graph: optimized, udf_digests },
             Duration::from_secs(10),
         )?;
         Ok(resp.dataset_id)
@@ -137,14 +186,21 @@ impl ServiceClient {
                 sharding: cfg.sharding,
                 mode: cfg.mode,
                 num_consumers: cfg.num_consumers,
+                sharing: cfg.sharing,
             },
             Duration::from_secs(10),
         )?;
+        // Anonymous attaches are fingerprint (§3.5) sharing; named joins
+        // are explicit grouping — mirror the dispatcher's counter split.
+        if job.attached && cfg.job_name.is_empty() {
+            self.metrics.counter("client/shared_attaches").inc();
+        }
         DistributedIter::start(
             self.dispatcher_addr.clone(),
             self.pool.clone(),
             job.job_id,
             job.client_id,
+            job.attached,
             cfg,
             self.metrics.clone(),
         )
@@ -165,6 +221,9 @@ pub struct DistributedIter {
     // Common:
     job_id: u64,
     client_id: u64,
+    /// Whether this client attached to an already-live job (§3.5 sharing)
+    /// instead of creating a new production.
+    attached: bool,
     dispatcher_addr: String,
     pool: Arc<Pool>,
     stop: Arc<AtomicBool>,
@@ -204,6 +263,7 @@ impl DistributedIter {
         pool: Arc<Pool>,
         job_id: u64,
         client_id: u64,
+        attached: bool,
         cfg: ServiceClientConfig,
         metrics: Registry,
     ) -> ServiceResult<DistributedIter> {
@@ -253,6 +313,7 @@ impl DistributedIter {
                     }),
                     job_id,
                     client_id,
+                    attached,
                     dispatcher_addr,
                     pool,
                     stop,
@@ -332,6 +393,7 @@ impl DistributedIter {
                     coord: None,
                     job_id,
                     client_id,
+                    attached,
                     dispatcher_addr,
                     pool,
                     stop,
@@ -343,6 +405,19 @@ impl DistributedIter {
 
     pub fn job_id(&self) -> u64 {
         self.job_id
+    }
+
+    /// This client's consumer identity within the job (the cursor key on
+    /// the worker's multi-consumer cache).
+    pub fn client_id(&self) -> u64 {
+        self.client_id
+    }
+
+    /// True when `distribute` attached to an already-live job — via the
+    /// §3.5 fingerprint match (anonymous + `sharing: auto`) or an
+    /// explicit job-name join — instead of starting a new production.
+    pub fn attached(&self) -> bool {
+        self.attached
     }
 
     /// Tell the dispatcher this client is done (job GC'd when the last

@@ -17,7 +17,7 @@ use super::sharding::{static_assignment, SplitTracker};
 use super::{ServiceError, ServiceResult};
 use crate::data::graph::GraphDef;
 use crate::metrics::Registry;
-use crate::rpc::Server;
+use crate::rpc::{RespBody, Server};
 use crate::wire::{Decode, Encode};
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -52,9 +52,28 @@ struct WorkerInfo {
     /// Tasks created while the worker wasn't heartbeating, delivered on
     /// its next heartbeat.
     pending_tasks: Vec<TaskDef>,
+    /// Consumers that attached to (resp. released from) one of this
+    /// worker's jobs since its last heartbeat: the worker registers /
+    /// drops the matching multi-consumer cache cursors (§3.5).
+    pending_attach: Vec<ConsumerUpdate>,
+    pending_detach: Vec<ConsumerUpdate>,
     /// Task (job) ids this worker should currently be running.
     assigned: HashSet<u64>,
     alive: bool,
+}
+
+impl WorkerInfo {
+    fn new(addr: String, last_heartbeat: Instant, alive: bool, assigned: HashSet<u64>) -> WorkerInfo {
+        WorkerInfo {
+            addr,
+            last_heartbeat,
+            pending_tasks: Vec::new(),
+            pending_attach: Vec::new(),
+            pending_detach: Vec::new(),
+            assigned,
+            alive,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -64,6 +83,8 @@ struct JobState {
     sharding: ShardingPolicy,
     mode: ProcessingMode,
     num_consumers: u32,
+    /// Whether later `sharing: auto` requests may attach to this job.
+    sharing: SharingMode,
     tracker: Option<Arc<SplitTracker>>,
     clients: HashSet<u64>,
     finished: bool,
@@ -115,7 +136,7 @@ impl Dispatcher {
 
         let s2 = state.clone();
         let server = Server::bind(addr, move |method: u16, payload: &[u8]| {
-            handle(&s2, method, payload).map_err(|e| e.to_string())
+            handle(&s2, method, payload).map(RespBody::from).map_err(|e| e.to_string())
         })
         .map_err(|e| ServiceError::Other(format!("bind: {e}")))?;
 
@@ -128,7 +149,15 @@ impl Dispatcher {
                 JournalRecord::RegisterDataset { dataset_id, graph } => {
                     meta.datasets.insert(dataset_id, graph);
                 }
-                JournalRecord::CreateJob { job_id, dataset_id, job_name, sharding, mode, num_consumers } => {
+                JournalRecord::CreateJob {
+                    job_id,
+                    dataset_id,
+                    job_name,
+                    sharding,
+                    mode,
+                    num_consumers,
+                    sharing,
+                } => {
                     let shards = meta.datasets.get(&dataset_id).map(graph_num_shards).unwrap_or(1);
                     let tracker = matches!(sharding, ShardingPolicy::Dynamic)
                         .then(|| Arc::new(SplitTracker::new(shards, split_seed ^ job_id)));
@@ -143,6 +172,7 @@ impl Dispatcher {
                             sharding,
                             mode,
                             num_consumers,
+                            sharing,
                             tracker,
                             clients: HashSet::new(),
                             finished: false,
@@ -155,13 +185,12 @@ impl Dispatcher {
                     // Restored workers are stale until they heartbeat again.
                     meta.workers.insert(
                         worker_id,
-                        WorkerInfo {
+                        WorkerInfo::new(
                             addr,
-                            last_heartbeat: Instant::now() - Duration::from_secs(3600),
-                            pending_tasks: Vec::new(),
-                            assigned: HashSet::new(),
-                            alive: false,
-                        },
+                            Instant::now() - Duration::from_secs(3600),
+                            false,
+                            HashSet::new(),
+                        ),
                     );
                     meta.next_worker_id = meta.next_worker_id.max(worker_id + 1);
                 }
@@ -211,6 +240,8 @@ impl Dispatcher {
                 w.alive = false;
                 w.assigned.clear();
                 w.pending_tasks.clear();
+                w.pending_attach.clear();
+                w.pending_detach.clear();
             }
             for job in meta.jobs.values() {
                 if let Some(t) = &job.tracker {
@@ -284,18 +315,26 @@ fn handle(state: &Arc<State>, method: u16, payload: &[u8]) -> ServiceResult<Vec<
 
 fn register_dataset(state: &Arc<State>, req: RegisterDatasetReq) -> ServiceResult<RegisterDatasetResp> {
     req.graph.validate().map_err(|e| ServiceError::Other(format!("invalid graph: {e}")))?;
-    let dataset_id = req.graph.fingerprint();
+    // Canonical structural fingerprint, with client-supplied UDF body
+    // digests mixed in: this IS the dataset id, so identical pipelines
+    // collide regardless of who registers them, in what order, or with
+    // what performance tuning — the discovery mechanism behind §3.5.
+    let digest_of = |name: &str| {
+        req.udf_digests.iter().find(|d| d.name == name).map(|d| d.digest)
+    };
+    let full = req.graph.fingerprint_full(&digest_of);
+    let dataset_id = u64::from_le_bytes(full[..8].try_into().unwrap());
     {
         let meta = state.meta.lock().unwrap();
         if meta.datasets.contains_key(&dataset_id) {
             // Identical pipeline already registered (fingerprint match).
-            return Ok(RegisterDatasetResp { dataset_id });
+            return Ok(RegisterDatasetResp { dataset_id, fingerprint: full.to_vec() });
         }
     }
     journal_append(state, &JournalRecord::RegisterDataset { dataset_id, graph: req.graph.clone() })?;
     state.meta.lock().unwrap().datasets.insert(dataset_id, req.graph);
     state.metrics.counter("dispatcher/datasets_registered").inc();
-    Ok(RegisterDatasetResp { dataset_id })
+    Ok(RegisterDatasetResp { dataset_id, fingerprint: full.to_vec() })
 }
 
 fn make_task(
@@ -308,6 +347,8 @@ fn make_task(
 ) -> TaskDef {
     let worker_index = job.worker_order.iter().position(|&w| w == worker_id).unwrap_or(job.worker_order.len()) as u32;
     let _ = meta;
+    let mut consumers: Vec<u64> = job.clients.iter().copied().collect();
+    consumers.sort_unstable();
     TaskDef {
         job_id,
         dataset_id: job.dataset_id,
@@ -318,7 +359,74 @@ fn make_task(
         static_shards,
         worker_index,
         num_workers: job.worker_order.len().max(1) as u32,
+        consumers,
     }
+}
+
+/// Pick the live job a `sharing: auto` request may attach to: same
+/// pipeline fingerprint (= dataset id) and identical processing settings,
+/// itself created with `sharing: auto`. Lowest job id wins so concurrent
+/// requests converge on one production. Auto sharing is independent-mode
+/// only — coordinated consumers occupy fixed slots and group explicitly
+/// via job names.
+fn find_shareable_job(meta: &Meta, req: &GetOrCreateJobReq) -> Option<u64> {
+    if req.sharing != SharingMode::Auto || req.mode != ProcessingMode::Independent {
+        return None;
+    }
+    meta.jobs
+        .iter()
+        .filter(|(_, j)| {
+            !j.finished
+                && j.dataset_id == req.dataset_id
+                && j.sharing == SharingMode::Auto
+                && j.sharding == req.sharding
+                && j.mode == req.mode
+                && j.num_consumers == req.num_consumers
+        })
+        .map(|(&id, _)| id)
+        .min()
+}
+
+/// Attach `client_id` to the live job `job_id`: journal the join, then —
+/// under one lock, re-validating that the job is still live — record the
+/// membership and queue a consumer update for every worker running the
+/// job so the multi-consumer cache registers the new cursor.
+///
+/// Returns `None` if the job finished between the caller's lookup and
+/// this call (its last client released in the gap): the caller must fall
+/// back to creating a fresh job instead of joining a dead one, which
+/// would silently end the new client's stream with zero elements. The
+/// already-journaled `ClientJoined` replays harmlessly against the
+/// finished job.
+fn attach_client(
+    state: &Arc<State>,
+    job_id: u64,
+    client_id: u64,
+    auto: bool,
+) -> ServiceResult<Option<GetOrCreateJobResp>> {
+    journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
+    let mut meta = state.meta.lock().unwrap();
+    match meta.jobs.get_mut(&job_id) {
+        Some(job) if !job.finished => {
+            job.clients.insert(client_id);
+        }
+        _ => return Ok(None), // finished in the gap: caller re-creates
+    }
+    let update = ConsumerUpdate { job_id, client_id };
+    for w in meta.workers.values_mut() {
+        if w.assigned.contains(&job_id) {
+            w.pending_attach.push(update.clone());
+        }
+    }
+    drop(meta);
+    // Fingerprint-matched (auto) attaches and explicit named-job joins
+    // are separate signals: only the former measures §3.5 auto sharing.
+    if auto {
+        state.metrics.counter("dispatcher/sharing_attaches").inc();
+    } else {
+        state.metrics.counter("dispatcher/named_job_joins").inc();
+    }
+    Ok(Some(GetOrCreateJobResp { job_id, client_id, attached: true }))
 }
 
 fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResult<GetOrCreateJobResp> {
@@ -327,18 +435,31 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         return Err(ServiceError::UnknownDataset(req.dataset_id));
     }
 
-    // Named job reuse: ephemeral-sharing clients attach to the same job.
+    // Named job reuse: explicitly grouped clients attach to the same job.
     if !req.job_name.is_empty() {
         if let Some(&job_id) = meta.named_jobs.get(&(req.dataset_id, req.job_name.clone())) {
             if meta.jobs.get(&job_id).map(|j| !j.finished).unwrap_or(false) {
                 let client_id = meta.next_client_id;
                 meta.next_client_id += 1;
                 drop(meta);
-                journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
-                state.meta.lock().unwrap().jobs.get_mut(&job_id).unwrap().clients.insert(client_id);
-                return Ok(GetOrCreateJobResp { job_id, client_id });
+                if let Some(resp) = attach_client(state, job_id, client_id, false)? {
+                    return Ok(resp);
+                }
+                // Job finished in the gap: create a fresh one below.
+                meta = state.meta.lock().unwrap();
             }
         }
+    } else if let Some(job_id) = find_shareable_job(&meta, &req) {
+        // Ephemeral sharing (§3.5): a live job is already producing this
+        // exact pipeline — attach instead of creating a k-th production.
+        let client_id = meta.next_client_id;
+        meta.next_client_id += 1;
+        drop(meta);
+        if let Some(resp) = attach_client(state, job_id, client_id, true)? {
+            return Ok(resp);
+        }
+        // Job finished in the gap: create a fresh one below.
+        meta = state.meta.lock().unwrap();
     }
 
     let job_id = meta.next_job_id;
@@ -362,13 +483,35 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         sharding: req.sharding,
         mode: req.mode,
         num_consumers: req.num_consumers,
+        sharing: req.sharing,
         tracker,
         clients: HashSet::from([client_id]),
         finished: false,
         worker_order: worker_order.clone(),
     };
 
-    // Build per-worker tasks.
+    // Write-ahead, *before* publication: a concurrent sharing attach can
+    // only discover this job once it appears in `meta.jobs`, and
+    // attach_client journals its ClientJoined immediately — so CreateJob
+    // must already be durable or replay would drop that join (and the
+    // job would later be GC'd with the attached client still streaming).
+    // The journal has its own lock and never takes `meta`, so appending
+    // while holding `meta` cannot deadlock.
+    journal_append(
+        state,
+        &JournalRecord::CreateJob {
+            job_id,
+            dataset_id: req.dataset_id,
+            job_name: req.job_name.clone(),
+            sharding: req.sharding,
+            mode: req.mode,
+            num_consumers: req.num_consumers,
+            sharing: req.sharing,
+        },
+    )?;
+    journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
+
+    // Publish: build per-worker tasks and expose the job.
     let static_shards = if matches!(req.sharding, ShardingPolicy::Static) {
         static_assignment(num_shards, worker_order.len().max(1))
     } else {
@@ -392,20 +535,8 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
     }
     drop(meta);
 
-    journal_append(
-        state,
-        &JournalRecord::CreateJob {
-            job_id,
-            dataset_id: req.dataset_id,
-            job_name: req.job_name,
-            sharding: req.sharding,
-            mode: req.mode,
-            num_consumers: req.num_consumers,
-        },
-    )?;
-    journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
     state.metrics.counter("dispatcher/jobs_created").inc();
-    Ok(GetOrCreateJobResp { job_id, client_id })
+    Ok(GetOrCreateJobResp { job_id, client_id, attached: false })
 }
 
 fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResult<ClientHeartbeatResp> {
@@ -450,16 +581,7 @@ fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<
     }
     let assigned: HashSet<u64> = job_ids.iter().copied().collect();
 
-    meta.workers.insert(
-        worker_id,
-        WorkerInfo {
-            addr: req.addr.clone(),
-            last_heartbeat: Instant::now(),
-            pending_tasks: Vec::new(),
-            assigned,
-            alive: true,
-        },
-    );
+    meta.workers.insert(worker_id, WorkerInfo::new(req.addr.clone(), Instant::now(), true, assigned));
     drop(meta);
 
     if existing.is_none() {
@@ -473,10 +595,25 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
     let mut meta = state.meta.lock().unwrap();
     let finished_jobs: Vec<u64> =
         meta.jobs.iter().filter(|(_, j)| j.finished).map(|(&id, _)| id).collect();
+    // The worker's own task report is authoritative for live jobs: after
+    // a dispatcher restart, replayed workers come back with an empty
+    // `assigned` set even though they kept running their tasks (§3.4
+    // stateless recovery is worker-driven). Re-learning assignments here
+    // keeps client heartbeats and sharing attach/detach updates flowing
+    // to those workers.
+    let live_reported: Vec<u64> = req
+        .active_tasks
+        .iter()
+        .copied()
+        .filter(|t| meta.jobs.get(t).map(|j| !j.finished).unwrap_or(false))
+        .collect();
     let w = meta.workers.get_mut(&req.worker_id).ok_or(ServiceError::UnknownWorker(req.worker_id))?;
     w.last_heartbeat = Instant::now();
     w.alive = true;
+    w.assigned.extend(live_reported);
     let new_tasks: Vec<TaskDef> = std::mem::take(&mut w.pending_tasks);
+    let attached_clients = std::mem::take(&mut w.pending_attach);
+    let released_clients = std::mem::take(&mut w.pending_detach);
     let removed: Vec<u64> =
         req.active_tasks.iter().copied().filter(|t| finished_jobs.contains(t)).collect();
     for t in &removed {
@@ -486,7 +623,7 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         .metrics
         .gauge("dispatcher/last_worker_cpu_milli")
         .set(req.cpu_util_milli as i64);
-    Ok(WorkerHeartbeatResp { new_tasks, removed_tasks: removed })
+    Ok(WorkerHeartbeatResp { new_tasks, removed_tasks: removed, attached_clients, released_clients })
 }
 
 fn get_split(state: &Arc<State>, req: GetSplitReq) -> ServiceResult<GetSplitResp> {
@@ -511,6 +648,17 @@ fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJ
             let name_key = (job.dataset_id, job.job_name.clone());
             if !name_key.1.is_empty() {
                 meta.named_jobs.remove(&name_key);
+            }
+        }
+        // Tell workers to drop the departed consumer's cursor so it never
+        // pins the shared sliding window (§3.5); pointless when the whole
+        // job is finished — workers then drop the task wholesale.
+        if !finished {
+            let update = ConsumerUpdate { job_id: req.job_id, client_id: req.client_id };
+            for w in meta.workers.values_mut() {
+                if w.assigned.contains(&req.job_id) {
+                    w.pending_detach.push(update.clone());
+                }
             }
         }
     }
@@ -544,11 +692,22 @@ mod tests {
             pool,
             addr,
             dispatcher_methods::REGISTER_DATASET,
-            &RegisterDatasetReq { graph },
+            &RegisterDatasetReq { graph, udf_digests: vec![] },
             timeout(),
         )
         .unwrap();
         resp.dataset_id
+    }
+
+    fn job_req(dataset_id: u64, job_name: &str, sharing: SharingMode) -> GetOrCreateJobReq {
+        GetOrCreateJobReq {
+            dataset_id,
+            job_name: job_name.into(),
+            sharding: ShardingPolicy::Off,
+            mode: ProcessingMode::Independent,
+            num_consumers: 0,
+            sharing,
+        }
     }
 
     #[test]
@@ -557,6 +716,32 @@ mod tests {
         let a = register_range_dataset(&pool, &addr);
         let b = register_range_dataset(&pool, &addr);
         assert_eq!(a, b, "same graph -> same fingerprint id");
+    }
+
+    #[test]
+    fn udf_body_digest_separates_dataset_ids() {
+        let (_d, pool, addr) = disp();
+        let graph = PipelineBuilder::source_range(10).map("custom.op").batch(2).build();
+        let register = |digest: Option<u64>| -> RegisterDatasetResp {
+            let udf_digests = digest
+                .map(|d| vec![UdfDigest { name: "custom.op".into(), digest: d }])
+                .unwrap_or_default();
+            call_typed(
+                &pool,
+                &addr,
+                dispatcher_methods::REGISTER_DATASET,
+                &RegisterDatasetReq { graph: graph.clone(), udf_digests },
+                timeout(),
+            )
+            .unwrap()
+        };
+        let v1 = register(Some(1));
+        let v2 = register(Some(2));
+        let plain = register(None);
+        assert_ne!(v1.dataset_id, v2.dataset_id, "different UDF bodies never share");
+        assert_ne!(v1.dataset_id, plain.dataset_id);
+        assert_eq!(register(Some(1)).dataset_id, v1.dataset_id, "digest registration idempotent");
+        assert_eq!(v1.fingerprint.len(), 32, "full fingerprint carried in the response");
     }
 
     #[test]
@@ -579,16 +764,11 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::GET_OR_CREATE_JOB,
-            &GetOrCreateJobReq {
-                dataset_id: ds,
-                job_name: String::new(),
-                sharding: ShardingPolicy::Off,
-                mode: ProcessingMode::Independent,
-                num_consumers: 0,
-            },
+            &job_req(ds, "", SharingMode::Off),
             timeout(),
         )
         .unwrap();
+        assert!(!j.attached);
 
         // Worker heartbeat receives the new task.
         let hb: WorkerHeartbeatResp = call_typed(
@@ -636,21 +816,206 @@ mod tests {
 
     #[test]
     fn named_jobs_are_shared() {
-        let (_d, pool, addr) = disp();
+        let (d, pool, addr) = disp();
         let ds = register_range_dataset(&pool, &addr);
-        let req = GetOrCreateJobReq {
-            dataset_id: ds,
-            job_name: "hp".into(),
-            sharding: ShardingPolicy::Off,
-            mode: ProcessingMode::Independent,
-            num_consumers: 0,
-        };
+        let req = job_req(ds, "hp", SharingMode::Off);
         let a: GetOrCreateJobResp =
             call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout()).unwrap();
         let b: GetOrCreateJobResp =
             call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout()).unwrap();
         assert_eq!(a.job_id, b.job_id, "same name attaches to the same job");
         assert_ne!(a.client_id, b.client_id);
+        assert!(!a.attached && b.attached);
+        // Explicit grouping is not the §3.5 auto-sharing signal.
+        assert_eq!(d.metrics().counter("dispatcher/named_job_joins").get(), 1);
+        assert_eq!(d.metrics().counter("dispatcher/sharing_attaches").get(), 0);
+    }
+
+    #[test]
+    fn auto_sharing_attaches_by_fingerprint() {
+        let (d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let a: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        // Anonymous request over the same pipeline fingerprint attaches.
+        let b: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(a.job_id, b.job_id, "same fingerprint shares the production");
+        assert!(!a.attached && b.attached);
+        assert_eq!(d.job_clients(a.job_id), 2);
+        // Incompatible settings (different sharding) do NOT share.
+        let mut other = job_req(ds, "", SharingMode::Auto);
+        other.sharding = ShardingPolicy::Dynamic;
+        let c: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &other, timeout()).unwrap();
+        assert_ne!(c.job_id, a.job_id, "sharding mismatch is not compatible");
+        assert_eq!(d.metrics().counter("dispatcher/sharing_attaches").get(), 1);
+    }
+
+    #[test]
+    fn sharing_opt_out_creates_dedicated_jobs() {
+        let (_d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let a: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Off),
+            timeout(),
+        )
+        .unwrap();
+        // Opt-out on the new request: never attach.
+        let b: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Off),
+            timeout(),
+        )
+        .unwrap();
+        assert_ne!(a.job_id, b.job_id, "explicit opt-out stays dedicated");
+        // Opt-out on the existing job: an Auto request must not join it.
+        let c: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert_ne!(c.job_id, a.job_id);
+        assert_ne!(c.job_id, b.job_id);
+        assert!(!c.attached);
+    }
+
+    #[test]
+    fn auto_sharing_survives_dispatcher_restart() {
+        let dir = std::env::temp_dir().join(format!("tfdatasvc-disp-share-{}", std::process::id()));
+        let jpath = dir.join("journal");
+        let _ = std::fs::remove_file(&jpath);
+        let cfg = DispatcherConfig { journal_path: Some(jpath.clone()), ..Default::default() };
+
+        let (ds, job_id) = {
+            let d = Dispatcher::start("127.0.0.1:0", cfg.clone()).unwrap();
+            let pool = Pool::with_defaults();
+            let addr = d.addr();
+            let ds = register_range_dataset(&pool, &addr);
+            let j: GetOrCreateJobResp = call_typed(
+                &pool,
+                &addr,
+                dispatcher_methods::GET_OR_CREATE_JOB,
+                &job_req(ds, "", SharingMode::Auto),
+                timeout(),
+            )
+            .unwrap();
+            (ds, j.job_id)
+        };
+
+        // The replayed job is still discoverable by fingerprint: a new
+        // anonymous auto client attaches to it instead of re-producing.
+        let d2 = Dispatcher::start("127.0.0.1:0", cfg).unwrap();
+        let pool = Pool::with_defaults();
+        let j2: GetOrCreateJobResp = call_typed(
+            &pool,
+            &d2.addr(),
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(j2.job_id, job_id, "sharing registry survived the restart");
+        assert!(j2.attached);
+        std::fs::remove_file(&jpath).ok();
+    }
+
+    #[test]
+    fn attach_and_release_propagate_consumer_updates_to_workers() {
+        let (_d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7501".into() },
+            timeout(),
+        )
+        .unwrap();
+        let a: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        // Task delivery carries the creating client as initial consumer.
+        let hb: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb.new_tasks.len(), 1);
+        assert_eq!(hb.new_tasks[0].consumers, vec![a.client_id]);
+
+        let b: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert!(b.attached);
+        let hb2: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(
+            hb2.attached_clients,
+            vec![ConsumerUpdate { job_id: a.job_id, client_id: b.client_id }]
+        );
+
+        // Releasing one of two clients -> detach update, job stays live.
+        let _: ReleaseJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::RELEASE_JOB,
+            &ReleaseJobReq { job_id: a.job_id, client_id: b.client_id },
+            timeout(),
+        )
+        .unwrap();
+        let hb3: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(
+            hb3.released_clients,
+            vec![ConsumerUpdate { job_id: a.job_id, client_id: b.client_id }]
+        );
+        assert!(hb3.removed_tasks.is_empty(), "job still has a live client");
     }
 
     #[test]
@@ -660,13 +1025,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::GET_OR_CREATE_JOB,
-            &GetOrCreateJobReq {
-                dataset_id: 424242,
-                job_name: String::new(),
-                sharding: ShardingPolicy::Off,
-                mode: ProcessingMode::Independent,
-                num_consumers: 0,
-            },
+            &job_req(424242, "", SharingMode::Off),
             timeout(),
         );
         assert!(r.is_err());
@@ -688,24 +1047,15 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::REGISTER_DATASET,
-            &RegisterDatasetReq { graph },
+            &RegisterDatasetReq { graph, udf_digests: vec![] },
             timeout(),
         )
         .unwrap();
-        let j: GetOrCreateJobResp = call_typed(
-            &pool,
-            &addr,
-            dispatcher_methods::GET_OR_CREATE_JOB,
-            &GetOrCreateJobReq {
-                dataset_id: ds.dataset_id,
-                job_name: String::new(),
-                sharding: ShardingPolicy::Dynamic,
-                mode: ProcessingMode::Independent,
-                num_consumers: 0,
-            },
-            timeout(),
-        )
-        .unwrap();
+        let mut req = job_req(ds.dataset_id, "", SharingMode::Off);
+        req.sharding = ShardingPolicy::Dynamic;
+        let j: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout())
+                .unwrap();
         let mut got = Vec::new();
         loop {
             let s: GetSplitResp = call_typed(
@@ -737,20 +1087,11 @@ mod tests {
             let pool = Pool::with_defaults();
             let addr = d.addr();
             let ds = register_range_dataset(&pool, &addr);
-            let j: GetOrCreateJobResp = call_typed(
-                &pool,
-                &addr,
-                dispatcher_methods::GET_OR_CREATE_JOB,
-                &GetOrCreateJobReq {
-                    dataset_id: ds,
-                    job_name: "persistent".into(),
-                    sharding: ShardingPolicy::Dynamic,
-                    mode: ProcessingMode::Independent,
-                    num_consumers: 0,
-                },
-                timeout(),
-            )
-            .unwrap();
+            let mut req = job_req(ds, "persistent", SharingMode::Off);
+            req.sharding = ShardingPolicy::Dynamic;
+            let j: GetOrCreateJobResp =
+                call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout())
+                    .unwrap();
             (ds, j.job_id)
         };
 
@@ -759,20 +1100,11 @@ mod tests {
         let pool = Pool::with_defaults();
         let addr = d2.addr();
         // Named job still resolvable: attaching returns the same job id.
-        let j2: GetOrCreateJobResp = call_typed(
-            &pool,
-            &addr,
-            dispatcher_methods::GET_OR_CREATE_JOB,
-            &GetOrCreateJobReq {
-                dataset_id: ds,
-                job_name: "persistent".into(),
-                sharding: ShardingPolicy::Dynamic,
-                mode: ProcessingMode::Independent,
-                num_consumers: 0,
-            },
-            timeout(),
-        )
-        .unwrap();
+        let mut req = job_req(ds, "persistent", SharingMode::Off);
+        req.sharding = ShardingPolicy::Dynamic;
+        let j2: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout())
+                .unwrap();
         assert_eq!(j2.job_id, job_id);
         std::fs::remove_file(&jpath).ok();
     }

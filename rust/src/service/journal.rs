@@ -8,7 +8,7 @@
 //! at-most-once, so an epoch's in-flight splits may be lost on recovery.
 
 use crate::data::graph::GraphDef;
-use crate::service::proto::{ProcessingMode, ShardingPolicy};
+use crate::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
 use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
 use crate::util::crc32::Hasher;
 use std::fs::{File, OpenOptions};
@@ -27,6 +27,9 @@ pub enum JournalRecord {
         sharding: ShardingPolicy,
         mode: ProcessingMode,
         num_consumers: u32,
+        /// Ephemeral-sharing policy: replayed so fingerprint-matched
+        /// attach keeps working across a dispatcher restart (§3.4 + §3.5).
+        sharing: SharingMode,
     },
     RegisterWorker { worker_id: u64, addr: String },
     ClientJoined { job_id: u64, client_id: u64 },
@@ -42,7 +45,15 @@ impl Encode for JournalRecord {
                 w.put_u64(*dataset_id);
                 graph.encode(w);
             }
-            JournalRecord::CreateJob { job_id, dataset_id, job_name, sharding, mode, num_consumers } => {
+            JournalRecord::CreateJob {
+                job_id,
+                dataset_id,
+                job_name,
+                sharding,
+                mode,
+                num_consumers,
+                sharing,
+            } => {
                 w.put_u8(1);
                 w.put_u64(*job_id);
                 w.put_u64(*dataset_id);
@@ -50,6 +61,7 @@ impl Encode for JournalRecord {
                 sharding.encode(w);
                 mode.encode(w);
                 w.put_u32(*num_consumers);
+                sharing.encode(w);
             }
             JournalRecord::RegisterWorker { worker_id, addr } => {
                 w.put_u8(2);
@@ -85,6 +97,7 @@ impl Decode for JournalRecord {
                 sharding: ShardingPolicy::decode(r)?,
                 mode: ProcessingMode::decode(r)?,
                 num_consumers: r.get_u32()?,
+                sharing: SharingMode::decode(r)?,
             },
             2 => JournalRecord::RegisterWorker { worker_id: r.get_u64()?, addr: String::decode(r)? },
             3 => JournalRecord::ClientJoined { job_id: r.get_u64()?, client_id: r.get_u64()? },
@@ -198,6 +211,7 @@ mod tests {
                 sharding: ShardingPolicy::Dynamic,
                 mode: ProcessingMode::Independent,
                 num_consumers: 0,
+                sharing: SharingMode::Auto,
             },
             JournalRecord::RegisterWorker { worker_id: 5, addr: "127.0.0.1:4000".into() },
             JournalRecord::ClientJoined { job_id: 1, client_id: 2 },

@@ -31,6 +31,46 @@
 //!   rounds (§3.6, where one round slot moves per call by design) and
 //!   for old clients; also reachable by setting
 //!   `ServiceClientConfig::batching = false`.
+//!
+//! Both paths are **one-copy end to end** on the worker: elements are
+//! encoded once into the sliding window, batched frames are assembled in
+//! a pooled buffer, and the RPC server writes `(head, frame)` with a
+//! scatter-gather frame write ([`crate::rpc::Frame::write_parts_to`])
+//! instead of copying the frame into a contiguous response payload.
+//!
+//! ## Ephemeral data sharing (§3.5)
+//!
+//! The paper's second headline result: concurrent jobs running the
+//! *same* input pipeline can be fed from one preprocessed stream,
+//! cutting preprocessing cost from `k×` to ~`1×`. The subsystem spans
+//! all three roles:
+//!
+//! * **Pipeline fingerprinting** — `RegisterDataset` assigns the dataset
+//!   id from a canonical structural hash of the graph
+//!   ([`crate::data::graph::GraphDef::fingerprint_full`]): stable across
+//!   registration order and wire-format changes, blind to
+//!   performance-only attributes (map parallelism, prefetch depth), and
+//!   sensitive to op params, source file lists, and UDF names *and
+//!   bodies* (clients may attach per-UDF body digests). Identical
+//!   pipelines therefore collide on one id, which is what makes sharing
+//!   discoverable.
+//! * **Dispatcher sharing registry** — `GetOrCreateJob` with
+//!   `sharing: auto` attaches the client to a live job with the same
+//!   fingerprint and compatible settings instead of creating a k-th
+//!   production; `sharing: off` (the client-side default — attaching
+//!   mid-stream relaxes the visitation guarantee, so sharing is opt-in)
+//!   always creates a dedicated job, and named jobs remain the explicit
+//!   grouping mechanism. Joins and releases are journaled, so the
+//!   sharing registry survives a dispatcher restart, and are pushed to
+//!   workers as consumer updates on heartbeats.
+//! * **Worker multi-consumer cache** — each independent-mode task owns a
+//!   sliding window over its produced stream; N consumers hold
+//!   independent cursors, elements are produced and encoded once, and
+//!   the window is trimmed to an element capacity and a byte budget. A
+//!   consumer that falls outside the window skips ahead (the paper's
+//!   relaxed-visitation escape hatch) rather than stalling production;
+//!   skips and shared productions are counted
+//!   (`worker/relaxed_visitation_skips`, `worker/shared_elements_served`).
 //! * [`sharding`] — OFF / DYNAMIC / STATIC source-data sharding (§3.3).
 //! * [`journal`] — dispatcher write-ahead journal + replay (§3.4).
 //! * [`visitation`] — data-visitation-guarantee trackers used by tests
@@ -47,7 +87,7 @@ pub mod worker;
 
 pub use client::{ServiceClient, ServiceClientConfig};
 pub use dispatcher::Dispatcher;
-pub use proto::{CompressionMode, ProcessingMode, ShardingPolicy};
+pub use proto::{CompressionMode, ProcessingMode, SharingMode, ShardingPolicy};
 pub use worker::Worker;
 
 /// Number of source shards in a pipeline graph (drives split tracking and

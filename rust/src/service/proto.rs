@@ -95,6 +95,39 @@ impl Decode for ProcessingMode {
     }
 }
 
+/// Cross-job ephemeral data sharing policy (§3.5).
+///
+/// With `Auto`, `GetOrCreateJob` may attach the client to an already-live
+/// job whose dataset has the same pipeline fingerprint and compatible
+/// processing settings, so k identical jobs consume one production stream.
+/// `Off` is the explicit opt-out: always create a dedicated job even when
+/// an identical pipeline is live (e.g. the job mutates per-epoch RNG state
+/// it must own, or isolation is required for benchmarking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharingMode {
+    Auto,
+    Off,
+}
+
+impl Encode for SharingMode {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(match self {
+            SharingMode::Auto => 0,
+            SharingMode::Off => 1,
+        });
+    }
+}
+
+impl Decode for SharingMode {
+    fn decode(r: &mut Reader) -> WireResult<Self> {
+        Ok(match r.get_u8()? {
+            0 => SharingMode::Auto,
+            1 => SharingMode::Off,
+            tag => return Err(WireError::BadTag { tag, ty: "SharingMode" }),
+        })
+    }
+}
+
 /// Element payload compression between worker and client (§3.1: useful in
 /// bandwidth-constrained deployments, wasteful otherwise).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -124,41 +157,63 @@ impl Decode for CompressionMode {
 
 // -------------------------------------------------------------- messages
 
+/// Digest of one UDF *body* the client expects workers to run, mixed into
+/// the pipeline fingerprint at registration time: two pipelines that map
+/// the same UDF *name* over different implementations must not share data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UdfDigest {
+    pub name: String,
+    pub digest: u64,
+}
+wire_struct!(UdfDigest { name, digest });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegisterDatasetReq {
     /// Serialized, already-optimized pipeline graph.
     pub graph: GraphDef,
+    /// Body digests for UDFs referenced by the graph (may be empty; names
+    /// without a digest contribute only their name to the fingerprint).
+    pub udf_digests: Vec<UdfDigest>,
 }
-wire_struct!(RegisterDatasetReq { graph });
+wire_struct!(RegisterDatasetReq { graph, udf_digests });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegisterDatasetResp {
-    /// Dataset id = graph fingerprint (identical pipelines share an id,
-    /// which is what makes ephemeral sharing discoverable).
+    /// Dataset id = canonical pipeline fingerprint (identical pipelines
+    /// share an id, which is what makes ephemeral sharing discoverable).
     pub dataset_id: u64,
+    /// Full 256-bit structural fingerprint the id was truncated from.
+    pub fingerprint: Vec<u8>,
 }
-wire_struct!(RegisterDatasetResp { dataset_id });
+wire_struct!(RegisterDatasetResp { dataset_id, fingerprint });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetOrCreateJobReq {
     pub dataset_id: u64,
     /// Jobs with the same non-empty name attach to one shared job
-    /// (ephemeral data sharing); empty = anonymous dedicated job.
+    /// (explicit grouping); empty = anonymous job, eligible for
+    /// fingerprint-based auto sharing when `sharing` is `Auto`.
     pub job_name: String,
     pub sharding: ShardingPolicy,
     pub mode: ProcessingMode,
     /// Number of coordinated consumers (0 for independent mode).
     pub num_consumers: u32,
+    /// Cross-job ephemeral sharing policy (§3.5).
+    pub sharing: SharingMode,
 }
-wire_struct!(GetOrCreateJobReq { dataset_id, job_name, sharding, mode, num_consumers });
+wire_struct!(GetOrCreateJobReq { dataset_id, job_name, sharding, mode, num_consumers, sharing });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetOrCreateJobResp {
     pub job_id: u64,
-    /// Client handle within the job (used to GC per-client state).
+    /// Client handle within the job (used to GC per-client state); doubles
+    /// as the consumer/cursor identity on the worker data plane.
     pub client_id: u64,
+    /// True when the client was attached to an already-live job (named or
+    /// fingerprint-matched) instead of creating a new production.
+    pub attached: bool,
 }
-wire_struct!(GetOrCreateJobResp { job_id, client_id });
+wire_struct!(GetOrCreateJobResp { job_id, client_id, attached });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClientHeartbeatReq {
@@ -213,14 +268,30 @@ pub struct WorkerHeartbeatReq {
 }
 wire_struct!(WorkerHeartbeatReq { worker_id, active_tasks, cpu_util_milli });
 
+/// One consumer joining or leaving a job's shared stream, pushed to
+/// workers on their next heartbeat so the multi-consumer cache registers
+/// (or drops) the matching cursor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConsumerUpdate {
+    pub job_id: u64,
+    pub client_id: u64,
+}
+wire_struct!(ConsumerUpdate { job_id, client_id });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerHeartbeatResp {
     /// Newly-assigned tasks.
     pub new_tasks: Vec<TaskDef>,
     /// Jobs that finished / were GC'd: the worker drops their state.
     pub removed_tasks: Vec<u64>,
+    /// Clients that attached to an existing job since the last heartbeat
+    /// (ephemeral sharing): register their cache cursors.
+    pub attached_clients: Vec<ConsumerUpdate>,
+    /// Clients that released since the last heartbeat: drop their cursors
+    /// so a departed consumer cannot pin the sliding window.
+    pub released_clients: Vec<ConsumerUpdate>,
 }
-wire_struct!(WorkerHeartbeatResp { new_tasks, removed_tasks });
+wire_struct!(WorkerHeartbeatResp { new_tasks, removed_tasks, attached_clients, released_clients });
 
 /// A data-processing task: one job's pipeline on one worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -238,6 +309,10 @@ pub struct TaskDef {
     pub worker_index: u32,
     /// Total workers the job had at task-creation time.
     pub num_workers: u32,
+    /// Client ids attached to the job at task-creation time (the initial
+    /// cursor set of the multi-consumer cache; later joins/leaves arrive
+    /// via [`WorkerHeartbeatResp`] consumer updates).
+    pub consumers: Vec<u64>,
 }
 wire_struct!(TaskDef {
     job_id,
@@ -248,7 +323,8 @@ wire_struct!(TaskDef {
     num_consumers,
     static_shards,
     worker_index,
-    num_workers
+    num_workers,
+    consumers
 });
 
 #[derive(Debug, Clone, PartialEq)]
@@ -312,19 +388,43 @@ wire_struct!(GetElementsReq { job_id, client_id, max_elements, max_bytes, poll_m
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetElementsResp {
-    /// Response frame: a wire-encoded `Vec<Vec<u8>>` of element payloads
-    /// (`u32` count, then length-prefixed entries). When `compressed`,
-    /// the whole frame is compressed as one unit so codec overhead
-    /// amortizes across the batch.
-    pub frame: Vec<u8>,
     /// Element count inside `frame` (sanity check for the decoder).
     pub num_elements: u32,
     pub compressed: bool,
     /// True when the task has produced everything it ever will *and*
     /// this client has consumed it all; may accompany a non-empty frame.
     pub end_of_sequence: bool,
+    /// Response frame: a wire-encoded `Vec<Vec<u8>>` of element payloads
+    /// (`u32` count, then length-prefixed entries). When `compressed`,
+    /// the whole frame is compressed as one unit so codec overhead
+    /// amortizes across the batch.
+    ///
+    /// Declared *last* so the worker can emit the fixed-size head and the
+    /// multi-megabyte frame as separate slices of one scatter-gather RPC
+    /// write ([`crate::rpc::frame::Frame::write_parts_to`]) instead of
+    /// copying the frame into a contiguous response buffer.
+    pub frame: Vec<u8>,
 }
-wire_struct!(GetElementsResp { frame, num_elements, compressed, end_of_sequence });
+wire_struct!(GetElementsResp { num_elements, compressed, end_of_sequence, frame });
+
+/// Encode a [`GetElementsResp`] as `(head, frame)` write slices for the
+/// scatter-gather RPC path: `head ++ frame` is byte-identical to
+/// `GetElementsResp::to_bytes`, but the (possibly multi-megabyte) frame
+/// buffer is moved, never copied. Keep in lockstep with the
+/// `wire_struct!` field order above.
+pub fn encode_get_elements_resp_parts(
+    num_elements: u32,
+    compressed: bool,
+    end_of_sequence: bool,
+    frame: Vec<u8>,
+) -> (Vec<u8>, Vec<u8>) {
+    let mut head = Writer::with_capacity(4 + 1 + 1 + 4);
+    head.put_u32(num_elements);
+    compressed.encode(&mut head);
+    end_of_sequence.encode(&mut head);
+    head.put_u32(frame.len() as u32); // Vec<u8> length prefix
+    (head.into_bytes(), frame)
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStatusReq {}
@@ -337,13 +437,22 @@ pub struct WorkerStatusResp {
     pub elements_produced: u64,
     pub cache_hits: u64,
     pub cache_evictions: u64,
+    /// Elements produced once into a stream that had ≥ 2 registered
+    /// consumers at production time (the §3.5 "1× production" half of the
+    /// sharing ledger; the k× half is `client/elements_fetched`).
+    pub shared_elements_served: u64,
+    /// Elements a lagging consumer skipped because they were evicted
+    /// before it arrived (the relaxed-visitation escape hatch).
+    pub relaxed_skips: u64,
 }
 wire_struct!(WorkerStatusResp {
     active_tasks,
     buffered_elements,
     elements_produced,
     cache_hits,
-    cache_evictions
+    cache_evictions,
+    shared_elements_served,
+    relaxed_skips
 });
 
 #[cfg(test)]
@@ -364,21 +473,27 @@ mod tests {
         rt(ProcessingMode::Independent);
         rt(ProcessingMode::Coordinated);
         rt(CompressionMode::Deflate);
+        rt(SharingMode::Auto);
+        rt(SharingMode::Off);
     }
 
     #[test]
     fn messages_roundtrip() {
         let graph = PipelineBuilder::source_range(10).batch(2).build();
-        rt(RegisterDatasetReq { graph: graph.clone() });
-        rt(RegisterDatasetResp { dataset_id: 9 });
+        rt(RegisterDatasetReq {
+            graph: graph.clone(),
+            udf_digests: vec![UdfDigest { name: "vision.augment".into(), digest: 0xfeed }],
+        });
+        rt(RegisterDatasetResp { dataset_id: 9, fingerprint: vec![7u8; 32] });
         rt(GetOrCreateJobReq {
             dataset_id: 9,
             job_name: "hp-tuning".into(),
             sharding: ShardingPolicy::Dynamic,
             mode: ProcessingMode::Coordinated,
             num_consumers: 4,
+            sharing: SharingMode::Auto,
         });
-        rt(GetOrCreateJobResp { job_id: 3, client_id: 8 });
+        rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true });
         rt(ClientHeartbeatReq { job_id: 3, client_id: 8 });
         rt(ClientHeartbeatResp { worker_addrs: vec!["127.0.0.1:1234".into()], job_finished: false });
         rt(RegisterWorkerReq { addr: "127.0.0.1:9".into() });
@@ -394,10 +509,16 @@ mod tests {
                 static_shards: vec![0, 2],
                 worker_index: 1,
                 num_workers: 4,
+                consumers: vec![8, 9],
             }],
         });
         rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });
-        rt(WorkerHeartbeatResp { new_tasks: vec![], removed_tasks: vec![3] });
+        rt(WorkerHeartbeatResp {
+            new_tasks: vec![],
+            removed_tasks: vec![3],
+            attached_clients: vec![ConsumerUpdate { job_id: 3, client_id: 11 }],
+            released_clients: vec![ConsumerUpdate { job_id: 3, client_id: 8 }],
+        });
         rt(GetSplitReq { job_id: 3, worker_id: 2 });
         rt(GetSplitResp { split: Some(7) });
         rt(GetSplitResp { split: None });
@@ -430,6 +551,8 @@ mod tests {
             elements_produced: 100,
             cache_hits: 7,
             cache_evictions: 2,
+            shared_elements_served: 60,
+            relaxed_skips: 3,
         });
     }
 
@@ -449,6 +572,25 @@ mod tests {
         // End-of-sequence variant: empty frame (count 0), eos set.
         let empty = Vec::<Vec<u8>>::new().to_bytes();
         rt(GetElementsResp { frame: empty, num_elements: 0, compressed: false, end_of_sequence: true });
+    }
+
+    /// The worker's scatter-gather path hand-encodes the response head and
+    /// appends the frame as a separate write slice; the concatenation must
+    /// stay byte-identical to the `wire_struct!` layout clients decode.
+    #[test]
+    fn get_elements_resp_parts_match_struct_encoding() {
+        let frame = vec![vec![9u8, 8, 7], vec![6u8]].to_bytes();
+        let resp = GetElementsResp {
+            num_elements: 2,
+            compressed: false,
+            end_of_sequence: true,
+            frame: frame.clone(),
+        };
+        let (head, tail) = encode_get_elements_resp_parts(2, false, true, frame);
+        let mut joined = head;
+        joined.extend_from_slice(&tail);
+        assert_eq!(joined, resp.to_bytes());
+        assert_eq!(GetElementsResp::from_bytes(&joined).unwrap(), resp);
     }
 
     #[test]

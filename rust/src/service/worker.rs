@@ -26,7 +26,7 @@ use crate::data::exec::{Executor, ExecutorConfig, SplitProvider};
 use crate::data::udf::UdfRegistry;
 use crate::data::Element;
 use crate::metrics::Registry;
-use crate::rpc::{call_typed, Pool, Server};
+use crate::rpc::{call_typed, Pool, RespBody, Server};
 use crate::storage::{ObjectStore, Region};
 use crate::util::chan;
 use crate::wire::{BufPool, Decode, Encode, Writer};
@@ -46,6 +46,12 @@ pub struct WorkerConfig {
     pub buffer_size: usize,
     /// Sliding-window cache capacity (elements) per task (§3.5).
     pub cache_window: usize,
+    /// Byte budget for the sliding window (§3.5): the retained span is
+    /// bounded by bytes as well as element count, so large batches cannot
+    /// blow worker memory. A consumer whose cursor falls behind the
+    /// budgeted window skips ahead (relaxed visitation) rather than
+    /// stalling production.
+    pub cache_window_bytes: usize,
     pub heartbeat_interval: Duration,
     /// How long GetElement blocks for data before telling the client to
     /// retry; also the upper bound on a GetElements long-poll.
@@ -66,17 +72,33 @@ impl WorkerConfig {
             region,
             buffer_size: 8,
             cache_window: 16,
+            cache_window_bytes: 64 << 20,
             heartbeat_interval: Duration::from_millis(100),
             serve_timeout: Duration::from_secs(5),
         }
     }
 }
 
-/// Ephemeral sliding-window cache with per-client cursors (§3.5, Fig. 5).
+/// Ephemeral multi-consumer sliding-window cache (§3.5, Fig. 5).
+///
+/// N consumers hold independent cursors over one produced stream:
+/// elements are produced (and encoded) once, each consumer's cursor walks
+/// the retained window at its own pace, and the window is trimmed from
+/// the back when it exceeds the element capacity or the byte budget. A
+/// consumer whose cursor falls off the trimmed back skips ahead to the
+/// oldest retained element instead of stalling production — the paper's
+/// relaxed-visitation escape hatch — and every skipped element is
+/// counted.
 struct SlidingCache {
     state: Mutex<SlidingCacheState>,
     cond: Condvar,
     capacity: usize,
+    byte_budget: usize,
+    /// Registry counters fed directly by the cache (single source of
+    /// truth for the §3.5 sharing ledger — call sites cannot forget the
+    /// bump and diverge from the cache-internal stats).
+    shared_ctr: Arc<crate::metrics::Counter>,
+    skip_ctr: Arc<crate::metrics::Counter>,
 }
 
 struct SlidingCacheState {
@@ -85,13 +107,47 @@ struct SlidingCacheState {
     /// batch to k sharing clients costs k memcpys instead of k deep
     /// clones + k encodes (§Perf).
     window: std::collections::VecDeque<Arc<Vec<u8>>>,
+    /// Total payload bytes currently retained in `window`.
+    window_bytes: usize,
     base_seq: u64,
+    /// Consumer -> next sequence number it will read. Entries appear via
+    /// explicit registration (task creation / sharing attach) or lazily
+    /// on first fetch, and leave when the dispatcher reports a release.
     cursors: HashMap<u64, u64>,
+    /// Consumers the dispatcher has released. A straggler fetch RPC that
+    /// raced the detach must not lazily resurrect its cursor (a phantom
+    /// consumer would permanently inflate the sharing ledger): tombstoned
+    /// consumers are answered with end-of-sequence instead. Client ids
+    /// are never reused, so tombstones never block a real newcomer.
+    removed: std::collections::HashSet<u64>,
     /// Producer finished (end of dataset).
     eos: bool,
     hits: u64,
     evictions: u64,
     produced: u64,
+    /// Elements produced while >= 2 consumers were registered (the "1x
+    /// production" half of the §3.5 sharing ledger).
+    shared_produced: u64,
+    /// Elements consumers skipped because they were evicted before being
+    /// read (relaxed visitation).
+    skipped: u64,
+}
+
+/// Counter snapshot for status reporting and tests. The per-cache
+/// `produced`/`shared_produced`/`skipped` are read by unit tests;
+/// `WORKER_STATUS` reports the cumulative registry counters for those
+/// quantities instead, so the sharing ledger outlives finished tasks.
+#[derive(Debug, Clone, Copy, Default)]
+struct CacheStats {
+    hits: u64,
+    evictions: u64,
+    #[allow(dead_code)]
+    produced: u64,
+    window: usize,
+    #[allow(dead_code)]
+    shared_produced: u64,
+    #[allow(dead_code)]
+    skipped: u64,
 }
 
 enum CacheServe {
@@ -102,36 +158,86 @@ enum CacheServe {
 }
 
 impl SlidingCache {
-    fn new(capacity: usize) -> SlidingCache {
+    fn new(capacity: usize, byte_budget: usize, metrics: &Registry) -> SlidingCache {
         SlidingCache {
             state: Mutex::new(SlidingCacheState {
                 window: Default::default(),
+                window_bytes: 0,
                 base_seq: 0,
                 cursors: HashMap::new(),
+                removed: Default::default(),
                 eos: false,
                 hits: 0,
                 evictions: 0,
                 produced: 0,
+                shared_produced: 0,
+                skipped: 0,
             }),
             cond: Condvar::new(),
             capacity: capacity.max(1),
+            byte_budget: byte_budget.max(1),
+            shared_ctr: metrics.counter("worker/shared_elements_served"),
+            skip_ctr: metrics.counter("worker/relaxed_visitation_skips"),
         }
+    }
+
+    /// Register a consumer's cursor at the oldest retained element. Done
+    /// eagerly when the dispatcher announces the consumer (task creation
+    /// or sharing attach), and lazily on first fetch as a fallback.
+    fn register_consumer(&self, client: u64) {
+        let mut st = self.state.lock().unwrap();
+        if st.removed.contains(&client) {
+            return;
+        }
+        let base = st.base_seq;
+        st.cursors.entry(client).or_insert(base);
+    }
+
+    /// Drop a released consumer's cursor (and tombstone the id) so it no
+    /// longer counts toward the stream's consumer set. Returns whether
+    /// the cursor existed.
+    fn remove_consumer(&self, client: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.removed.insert(client);
+        st.cursors.remove(&client).is_some()
+    }
+
+    /// Registered consumer count (shared streams have >= 2).
+    fn num_consumers(&self) -> usize {
+        self.state.lock().unwrap().cursors.len()
+    }
+
+    /// Clamp a cursor into the retained window, counting skipped
+    /// elements in both the cache stats and the registry counter.
+    /// Returns the effective cursor.
+    fn clamp_cursor(&self, st: &mut SlidingCacheState, client: u64) -> u64 {
+        let base = st.base_seq;
+        let cursor = *st.cursors.entry(client).or_insert(base);
+        if cursor < base {
+            // Evicted range skipped (relaxed visitation escape hatch).
+            st.skipped += base - cursor;
+            self.skip_ctr.add(base - cursor);
+            st.cursors.insert(client, base);
+            return base;
+        }
+        cursor
     }
 
     /// Try to serve `client` from the cache. Cursor semantics: a new
     /// client starts at the oldest retained batch; a laggard whose cursor
-    /// was evicted implicitly skips to the oldest retained batch.
+    /// was evicted implicitly skips to the oldest retained batch (counted
+    /// by [`SlidingCache::clamp_cursor`]).
     fn serve(&self, client: u64) -> CacheServe {
         let mut st = self.state.lock().unwrap();
-        let base = st.base_seq;
-        let cursor = st.cursors.entry(client).or_insert(base);
-        if *cursor < base {
-            *cursor = base; // evicted range skipped (relaxed visitation)
+        if st.removed.contains(&client) {
+            // Straggler RPC from a released consumer: its stream is over.
+            return CacheServe::Eos;
         }
-        let idx = (*cursor - base) as usize;
+        let cursor = self.clamp_cursor(&mut st, client);
+        let idx = (cursor - st.base_seq) as usize;
         if idx < st.window.len() {
             let e = st.window[idx].clone(); // Arc bump, no copy
-            *st.cursors.get_mut(&client).unwrap() += 1;
+            st.cursors.insert(client, cursor + 1);
             st.hits += 1;
             return CacheServe::Bytes(e);
         }
@@ -141,39 +247,50 @@ impl SlidingCache {
         CacheServe::NeedProduce
     }
 
-    /// Front-driven production: append a fresh element (encoded once),
-    /// evicting from the back if over capacity, then wake blocked readers.
-    fn push(&self, e: Element) {
-        let bytes = Arc::new(e.to_bytes());
-        let mut st = self.state.lock().unwrap();
-        st.window.push_back(bytes);
-        st.produced += 1;
-        if st.window.len() > self.capacity {
-            st.window.pop_front();
-            st.base_seq += 1;
-            st.evictions += 1;
-        }
-        self.cond.notify_all();
+    /// Front-driven production: append a fresh element (already encoded
+    /// once), then trim the back to the capacity/byte budget and wake
+    /// blocked readers. Returns the registered consumer count at push
+    /// time; the sharing ledger (cache stats + registry counter) is fed
+    /// internally.
+    fn push(&self, e: Element) -> usize {
+        self.push_encoded(vec![Arc::new(e.to_bytes())])
     }
 
     /// Batched variant of [`SlidingCache::push`]: install several
     /// pre-encoded elements under one lock acquisition (the GetElements
     /// drain path encodes outside the lock, then bulk-inserts).
-    fn push_encoded(&self, encoded: Vec<Arc<Vec<u8>>>) {
-        if encoded.is_empty() {
-            return;
-        }
+    fn push_encoded(&self, encoded: Vec<Arc<Vec<u8>>>) -> usize {
         let mut st = self.state.lock().unwrap();
+        let consumers = st.cursors.len();
+        if encoded.is_empty() {
+            return consumers;
+        }
+        if consumers >= 2 {
+            self.shared_ctr.add(encoded.len() as u64);
+        }
         for bytes in encoded {
+            st.window_bytes += bytes.len();
             st.window.push_back(bytes);
             st.produced += 1;
-            if st.window.len() > self.capacity {
-                st.window.pop_front();
-                st.base_seq += 1;
-                st.evictions += 1;
+            if consumers >= 2 {
+                st.shared_produced += 1;
+            }
+            // Trim: the window slides forward when it outgrows either
+            // budget. Eviction does not wait for slow cursors — they skip
+            // ahead on their next fetch — but always keeps the newest
+            // element so every consumer can make progress.
+            while st.window.len() > self.capacity
+                || (st.window_bytes > self.byte_budget && st.window.len() > 1)
+            {
+                if let Some(old) = st.window.pop_front() {
+                    st.window_bytes -= old.len();
+                    st.base_seq += 1;
+                    st.evictions += 1;
+                }
             }
         }
         self.cond.notify_all();
+        consumers
     }
 
     /// Batched variant of [`SlidingCache::serve`]: advance `client`'s
@@ -190,7 +307,8 @@ impl SlidingCache {
     /// its `push_encoded` (which serializes with this lock) completes, so
     /// a true verdict can never race past an unpublished element. Once
     /// `eos` is set no new increments happen, so a zero reading inside
-    /// the lock is terminal.
+    /// the lock is terminal. (Laggard skips are counted by
+    /// [`SlidingCache::clamp_cursor`].)
     fn serve_batch(
         &self,
         client: u64,
@@ -199,32 +317,30 @@ impl SlidingCache {
         in_flight: &AtomicU64,
     ) -> (Vec<Arc<Vec<u8>>>, bool) {
         let mut st = self.state.lock().unwrap();
+        if st.removed.contains(&client) {
+            // Straggler RPC from a released consumer: its stream is over.
+            return (Vec::new(), true);
+        }
+        let mut cursor = self.clamp_cursor(&mut st, client);
+        let base = st.base_seq;
         let mut out = Vec::new();
         let mut bytes = 0usize;
-        loop {
-            if out.len() >= max_elements {
-                break;
-            }
-            let base = st.base_seq;
-            let cursor = *st.cursors.entry(client).or_insert(base);
-            let cursor = cursor.max(base); // evicted range skipped
+        while out.len() < max_elements {
             let idx = (cursor - base) as usize;
             if idx >= st.window.len() {
-                st.cursors.insert(client, cursor);
                 break;
             }
             let e = st.window[idx].clone(); // Arc bump, no copy
             if !out.is_empty() && bytes + e.len() > max_bytes {
-                st.cursors.insert(client, cursor);
                 break;
             }
             bytes += e.len();
-            st.cursors.insert(client, cursor + 1);
+            cursor += 1;
             st.hits += 1;
             out.push(e);
         }
-        let cursor = st.cursors.get(&client).copied().unwrap_or(st.base_seq);
-        let drained = (cursor.saturating_sub(st.base_seq)) as usize >= st.window.len();
+        st.cursors.insert(client, cursor);
+        let drained = (cursor - base) as usize >= st.window.len();
         let end = st.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
         (out, end)
     }
@@ -235,9 +351,16 @@ impl SlidingCache {
         self.cond.notify_all();
     }
 
-    fn stats(&self) -> (u64, u64, u64, usize) {
+    fn stats(&self) -> CacheStats {
         let st = self.state.lock().unwrap();
-        (st.hits, st.evictions, st.produced, st.window.len())
+        CacheStats {
+            hits: st.hits,
+            evictions: st.evictions,
+            produced: st.produced,
+            window: st.window.len(),
+            shared_produced: st.shared_produced,
+            skipped: st.skipped,
+        }
     }
 }
 
@@ -527,6 +650,29 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                 for task in resp.new_tasks {
                     start_task(&shared, task);
                 }
+                // Consumer churn on shared streams (§3.5): register the
+                // cursors of newly-attached clients, drop those of
+                // released ones so a departed consumer never pins (or
+                // counts toward) the shared window. Tasks were started
+                // above, so an attach delivered alongside its task lands
+                // on a live cache.
+                for cu in &resp.attached_clients {
+                    if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
+                        if let TaskState::Independent { cache, .. } = &t.state {
+                            cache.register_consumer(cu.client_id);
+                            shared.metrics.counter("worker/consumers_attached").inc();
+                        }
+                    }
+                }
+                for cu in &resp.released_clients {
+                    if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
+                        if let TaskState::Independent { cache, .. } = &t.state {
+                            if cache.remove_consumer(cu.client_id) {
+                                shared.metrics.counter("worker/consumers_detached").inc();
+                            }
+                        }
+                    }
+                }
                 if !resp.removed_tasks.is_empty() {
                     let mut tasks = shared.tasks.lock().unwrap();
                     for id in resp.removed_tasks {
@@ -578,7 +724,18 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
 
     let state = match task.mode {
         ProcessingMode::Independent => {
-            let cache = Arc::new(SlidingCache::new(shared.cfg.cache_window));
+            let cache = Arc::new(SlidingCache::new(
+                shared.cfg.cache_window,
+                shared.cfg.cache_window_bytes,
+                &shared.metrics,
+            ));
+            // Register the consumers attached at task-creation time so
+            // they count toward the stream's consumer set (and anchor at
+            // the stream head) before their first fetch arrives; later
+            // joins/leaves come via heartbeat consumer updates.
+            for c in &task.consumers {
+                cache.register_consumer(*c);
+            }
             let (tx, rx) = chan::bounded::<Element>(shared.cfg.buffer_size);
             let in_flight = Arc::new(AtomicU64::new(0));
             let inflight_tx = in_flight.clone();
@@ -698,20 +855,22 @@ fn spawn_producer(
         .ok();
 }
 
-/// Data-server RPC demux.
-fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResult<Vec<u8>> {
+/// Data-server RPC demux. `GetElements` responses come back as
+/// `(head, frame)` write slices so the element frame flows to the socket
+/// without an intermediate payload copy; everything else is head-only.
+fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResult<RespBody> {
     match method {
         worker_methods::GET_ELEMENT => {
             let req = GetElementReq::from_bytes(payload)?;
-            Ok(get_element(shared, req)?.to_bytes())
+            Ok(get_element(shared, req)?.to_bytes().into())
         }
         worker_methods::GET_ELEMENTS => {
             let req = GetElementsReq::from_bytes(payload)?;
-            Ok(get_elements(shared, req)?.to_bytes())
+            get_elements(shared, req)
         }
         worker_methods::WORKER_STATUS => {
             let _ = WorkerStatusReq::from_bytes(payload)?;
-            Ok(status(shared).to_bytes())
+            Ok(status(shared).to_bytes().into())
         }
         other => Err(ServiceError::Other(format!("worker: unknown method {other}"))),
     }
@@ -755,7 +914,7 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
 /// cursor through up to `max_elements`/`max_bytes` of window in one lock
 /// acquisition. When nothing is ready, long-poll up to `poll_ms` instead
 /// of bouncing an empty response straight back.
-fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResult<GetElementsResp> {
+fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResult<RespBody> {
     let runner = shared
         .tasks
         .lock()
@@ -776,8 +935,13 @@ fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResul
     };
     let max_elements =
         (if req.max_elements == 0 { DEFAULT_BATCH_MAX_ELEMENTS } else { req.max_elements }) as usize;
-    let max_bytes =
-        (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes }) as usize;
+    // Clamp the byte budget well under the transport frame cap: the cursor
+    // advances under the cache lock *before* the response is written, so a
+    // frame rejected for exceeding `MAX_FRAME_LEN` would silently lose the
+    // batch. Half the cap leaves ample headroom for per-element length
+    // prefixes and the response head.
+    let max_bytes = (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes })
+        .min(crate::rpc::MAX_FRAME_LEN as u64 / 2) as usize;
     let poll_ms = if req.poll_ms == 0 { DEFAULT_BATCH_POLL_MS } else { req.poll_ms };
     let poll = Duration::from_millis(poll_ms as u64).min(shared.cfg.serve_timeout);
     let deadline = Instant::now() + poll;
@@ -832,33 +996,43 @@ fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResul
     };
 
     // Assemble the frame in a recycled buffer; compress the whole frame
-    // at once so codec overhead amortizes across the batch.
-    let mut w = Writer::from_vec(shared.frame_bufs.take());
-    w.put_u32(batch.len() as u32);
-    for bytes in &batch {
-        w.put_bytes(bytes);
-    }
-    let raw_len = w.len();
-    let mut compressed = false;
-    let frame = if req.compression == CompressionMode::Deflate && !batch.is_empty() {
-        let z = crate::wire::compress(w.as_slice());
-        if z.len() < raw_len {
-            shared
-                .metrics
-                .counter("worker/compression_bytes_saved")
-                .add((raw_len - z.len()) as u64);
-            compressed = true;
-            z
-        } else {
-            w.as_slice().to_vec()
-        }
+    // at once so codec overhead amortizes across the batch. Empty frames
+    // (expired long-polls, bare end-of-sequence) skip the pool: taking a
+    // high-water-sized buffer for a 4-byte count would waste a large
+    // allocation per empty response.
+    let (frame, compressed) = if batch.is_empty() {
+        (0u32.to_le_bytes().to_vec(), false)
     } else {
-        // One exact-size copy out of the recycled buffer beats handing
-        // the buffer away: assembly then never re-pays the doubling
-        // reallocation chain, which dominates for multi-MiB frames.
-        w.as_slice().to_vec()
+        let mut w = Writer::from_vec(shared.frame_bufs.take());
+        w.put_u32(batch.len() as u32);
+        for bytes in &batch {
+            w.put_bytes(bytes);
+        }
+        let raw_len = w.len();
+        let z = (req.compression == CompressionMode::Deflate)
+            .then(|| crate::wire::compress(w.as_slice()))
+            .filter(|z| z.len() < raw_len);
+        match z {
+            Some(z) => {
+                shared
+                    .metrics
+                    .counter("worker/compression_bytes_saved")
+                    .add((raw_len - z.len()) as u64);
+                // The scratch buffer's job is done: recycle it.
+                shared.frame_bufs.put(w.into_bytes());
+                (z, true)
+            }
+            None => {
+                // Zero-copy: the frame leaves as the response tail and
+                // cannot come back to the pool — record the frame *size*
+                // (not the buffer's possibly-doubled capacity) so future
+                // takes pre-size to real frames and assembly stays one
+                // allocation.
+                shared.frame_bufs.record_capacity(raw_len);
+                (w.into_bytes(), false)
+            }
+        }
     };
-    shared.frame_bufs.put(w.into_bytes());
 
     let calls = shared.metrics.counter("worker/get_elements_calls");
     calls.inc();
@@ -869,7 +1043,11 @@ fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResul
         .gauge("worker/elements_per_rpc")
         .set((served.get() / calls.get().max(1)) as i64);
 
-    Ok(GetElementsResp { frame, num_elements: batch.len() as u32, compressed, end_of_sequence })
+    // (head, frame) write slices: the frame is moved, not copied, and the
+    // RPC server writes both with one scatter-gather frame write.
+    let (head, tail) =
+        encode_get_elements_resp_parts(batch.len() as u32, compressed, end_of_sequence, frame);
+    Ok(RespBody::parts(head, tail))
 }
 
 fn serve_independent(
@@ -880,6 +1058,10 @@ fn serve_independent(
     timeout: Duration,
 ) -> GetElementResp {
     let deadline = Instant::now() + timeout;
+    let push_one = |e: Element| {
+        cache.push(e);
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+    };
     loop {
         match cache.serve(client_id) {
             CacheServe::Bytes(b) => {
@@ -894,8 +1076,7 @@ fn serve_independent(
                 // The producer sets EOS after its last send; elements may
                 // still be sitting in the channel — drain them first.
                 if let Some(e) = rx.try_recv() {
-                    cache.push(e);
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    push_one(e);
                     continue;
                 }
                 if in_flight.load(Ordering::SeqCst) != 0 {
@@ -947,10 +1128,7 @@ fn serve_independent(
                     };
                 }
                 match rx.recv_timeout(wait.min(Duration::from_millis(100))) {
-                    Ok(Some(e)) => {
-                        cache.push(e);
-                        in_flight.fetch_sub(1, Ordering::SeqCst);
-                    }
+                    Ok(Some(e)) => push_one(e),
                     Ok(None) => {
                         if Instant::now() >= deadline {
                             return GetElementResp {
@@ -975,10 +1153,10 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
     let mut evictions = 0u64;
     for t in tasks.values() {
         if let TaskState::Independent { cache, .. } = &t.state {
-            let (h, ev, _p, window) = cache.stats();
-            hits += h;
-            evictions += ev;
-            buffered += window as u64;
+            let s = cache.stats();
+            hits += s.hits;
+            evictions += s.evictions;
+            buffered += s.window as u64;
         }
     }
     WorkerStatusResp {
@@ -987,6 +1165,11 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
         elements_produced: shared.metrics.counter("worker/elements_produced").get(),
         cache_hits: hits,
         cache_evictions: evictions,
+        // Cumulative (registry-fed) like elements_produced, so the §3.5
+        // sharing ledger survives a finished job's task being dropped —
+        // unlike the live-cache sums above, which reflect current tasks.
+        shared_elements_served: shared.metrics.counter("worker/shared_elements_served").get(),
+        relaxed_skips: shared.metrics.counter("worker/relaxed_visitation_skips").get(),
     }
 }
 
@@ -1011,9 +1194,20 @@ mod tests {
         Element::with_ids(vec![Tensor::scalar_i32(v)], vec![v as u64])
     }
 
+    /// Fresh cache over a throwaway registry; returns both so tests can
+    /// assert the registry-side ledger the cache feeds.
+    fn cache(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
+        let m = Registry::new();
+        (SlidingCache::new(capacity, byte_budget, &m), m)
+    }
+
+    fn skips_of(m: &Registry) -> u64 {
+        m.counter("worker/relaxed_visitation_skips").get()
+    }
+
     #[test]
     fn sliding_cache_serves_in_order() {
-        let c = SlidingCache::new(4);
+        let (c, _m) = cache(4, usize::MAX);
         for i in 0..3 {
             c.push(elem(i));
         }
@@ -1033,7 +1227,7 @@ mod tests {
 
     #[test]
     fn sliding_cache_shares_across_clients() {
-        let c = SlidingCache::new(8);
+        let (c, _m) = cache(8, usize::MAX);
         for i in 0..4 {
             c.push(elem(i));
         }
@@ -1050,21 +1244,21 @@ mod tests {
                 }
             }
         }
-        let (hits, evictions, produced, _) = c.stats();
-        assert_eq!(hits, 8);
-        assert_eq!(produced, 4);
-        assert_eq!(evictions, 0);
+        let s = c.stats();
+        assert_eq!(s.hits, 8);
+        assert_eq!(s.produced, 4);
+        assert_eq!(s.evictions, 0);
     }
 
     #[test]
     fn sliding_cache_evicts_and_laggard_skips() {
-        let c = SlidingCache::new(2);
+        let (c, m) = cache(2, usize::MAX);
         for i in 0..5 {
             c.push(elem(i)); // window holds {3, 4} afterwards
         }
-        let (_, evictions, _, window) = c.stats();
-        assert_eq!(evictions, 3);
-        assert_eq!(window, 2);
+        let s = c.stats();
+        assert_eq!(s.evictions, 3);
+        assert_eq!(s.window, 2);
         // A client that never read anything starts at the oldest retained
         // element (3), silently skipping 0..2 (Fig. 5's evicted batches).
         match c.serve(9) {
@@ -1074,12 +1268,111 @@ mod tests {
             }
             _ => panic!(),
         }
+        // A brand-new cursor is not a laggard: nothing counted skipped.
+        assert_eq!(c.stats().skipped, 0);
+        assert_eq!(skips_of(&m), 0);
+        // A cursor that existed before the eviction IS a laggard.
+        c.register_consumer(7); // anchors at base (3) — reads 3, 4
+        let _ = c.serve(7);
+        let _ = c.serve(7);
+        c.push(elem(5));
+        c.push(elem(6)); // window {5, 6}: cursor 7 (at seq 5) unaffected
+        c.push(elem(7)); // window {6, 7}: seq 5 evicted under cursor 7
+        match c.serve(7) {
+            CacheServe::Bytes(b) => {
+                let e = Element::from_bytes(&b).unwrap();
+                assert_eq!(e.tensors[0].as_i32(), vec![6]);
+            }
+            _ => panic!(),
+        }
+        // Element 5 was evicted unread: one skip, in both ledgers.
+        assert_eq!(c.stats().skipped, 1);
+        assert_eq!(skips_of(&m), 1);
+    }
+
+    #[test]
+    fn sliding_cache_byte_budget_bounds_window() {
+        let one = Arc::new(elem(0).to_bytes());
+        let sz = one.len();
+        // Budget fits ~3 encoded elements; element capacity is generous.
+        let (c, _m) = cache(100, 3 * sz);
+        c.push_encoded((0..10).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        let s = c.stats();
+        assert!(s.window <= 3, "byte budget trims the window, got {}", s.window);
+        assert_eq!(s.evictions as usize + s.window, 10);
+        // A single element larger than the whole budget is still retained
+        // (progress guarantee: the newest element never gets evicted).
+        let (c2, _m2) = cache(100, 1);
+        c2.push(elem(7));
+        assert_eq!(c2.stats().window, 1);
+    }
+
+    #[test]
+    fn registered_laggard_skip_is_counted() {
+        let (c, m) = cache(2, usize::MAX);
+        c.register_consumer(5); // cursor pinned at seq 0
+        c.push_encoded((0..6).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        // Window retains {4, 5}; consumer 5 fell off the back and must
+        // skip 0..=3 (4 elements) — the relaxed-visitation escape hatch.
+        let (batch, _) = c.serve_batch(5, 64, usize::MAX, &AtomicU64::new(0));
+        assert_eq!(batch.len(), 2);
+        let e = Element::from_bytes(&batch[0]).unwrap();
+        assert_eq!(e.tensors[0].as_i32(), vec![4]);
+        assert_eq!(c.stats().skipped, 4);
+        assert_eq!(skips_of(&m), 4, "registry ledger matches cache stats");
+    }
+
+    #[test]
+    fn consumer_registration_drives_shared_accounting() {
+        let (c, m) = cache(16, usize::MAX);
+        let shared = m.counter("worker/shared_elements_served");
+        assert_eq!(c.push(elem(0)), 0, "no consumers yet");
+        c.register_consumer(1);
+        assert_eq!(c.push(elem(1)), 1);
+        c.register_consumer(2);
+        assert_eq!(c.push(elem(2)), 2, "now shared");
+        assert_eq!(c.num_consumers(), 2);
+        let s = c.stats();
+        assert_eq!(s.produced, 3);
+        assert_eq!(s.shared_produced, 1, "only the push with >=2 consumers");
+        assert_eq!(shared.get(), 1, "registry ledger matches cache stats");
+        // Release one consumer: back to dedicated accounting.
+        assert!(c.remove_consumer(2));
+        assert!(!c.remove_consumer(2), "double release is a no-op");
+        assert_eq!(c.push(elem(3)), 1);
+        assert_eq!(c.stats().shared_produced, 1);
+        assert_eq!(shared.get(), 1);
+        // Registration is idempotent and anchors at the stream head.
+        c.register_consumer(1);
+        assert_eq!(c.num_consumers(), 1);
+    }
+
+    #[test]
+    fn removed_consumer_is_tombstoned() {
+        let (c, _m) = cache(16, usize::MAX);
+        c.register_consumer(1);
+        for i in 0..4 {
+            c.push(elem(i));
+        }
+        // Consumer 1 reads two, then releases mid-stream.
+        let (batch, _) = c.serve_batch(1, 2, usize::MAX, &AtomicU64::new(0));
+        assert_eq!(batch.len(), 2);
+        assert!(c.remove_consumer(1));
+        assert!(!c.remove_consumer(1), "double release is a no-op");
+        // A straggler RPC racing the detach gets end-of-sequence; it must
+        // not resurrect the cursor (a phantom consumer would permanently
+        // inflate the sharing ledger).
+        let (batch, end) = c.serve_batch(1, 64, usize::MAX, &AtomicU64::new(0));
+        assert!(batch.is_empty() && end);
+        assert!(matches!(c.serve(1), CacheServe::Eos));
+        c.register_consumer(1);
+        assert_eq!(c.num_consumers(), 0, "tombstoned id cannot re-register");
     }
 
     #[test]
     fn serve_batch_drains_window_in_one_call() {
         let quiet = AtomicU64::new(0);
-        let c = SlidingCache::new(16);
+        let (c, _m) = cache(16, usize::MAX);
         c.push_encoded((0..10).map(|i| Arc::new(elem(i).to_bytes())).collect());
         let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
         assert_eq!(batch.len(), 10);
@@ -1105,7 +1398,7 @@ mod tests {
         // in_flight > 0 must veto the end-of-sequence verdict even when
         // the producer finished and this cursor drained the window.
         let in_flight = AtomicU64::new(1);
-        let c = SlidingCache::new(4);
+        let (c, _m) = cache(4, usize::MAX);
         c.set_eos();
         let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &in_flight);
         assert!(batch.is_empty());
@@ -1118,7 +1411,7 @@ mod tests {
     #[test]
     fn serve_batch_respects_element_and_byte_budgets() {
         let quiet = AtomicU64::new(0);
-        let c = SlidingCache::new(32);
+        let (c, _m) = cache(32, usize::MAX);
         c.push_encoded((0..8).map(|i| Arc::new(elem(i).to_bytes())).collect());
         let (batch, _) = c.serve_batch(1, 3, usize::MAX, &quiet);
         assert_eq!(batch.len(), 3, "element cap");
@@ -1134,11 +1427,12 @@ mod tests {
     #[test]
     fn serve_batch_laggard_skips_evicted_range() {
         let quiet = AtomicU64::new(0);
-        let c = SlidingCache::new(2);
+        let (c, m) = cache(2, usize::MAX);
         c.push_encoded((0..5).map(|i| Arc::new(elem(i).to_bytes())).collect());
         // Window retains {3, 4}; a fresh client starts there.
         let (batch, _) = c.serve_batch(9, 64, usize::MAX, &quiet);
         assert_eq!(batch.len(), 2);
+        assert_eq!(skips_of(&m), 0, "fresh cursor, not a laggard");
         let e = Element::from_bytes(&batch[0]).unwrap();
         assert_eq!(e.tensors[0].as_i32(), vec![3]);
     }

@@ -141,6 +141,16 @@ impl BufPool {
         }
     }
 
+    /// Record the capacity of a buffer that is about to leave with a
+    /// response (zero-copy tail) instead of coming back via `put`: future
+    /// fresh takes still pre-size to the high-water mark, so frame
+    /// assembly stays a single allocation even when no buffer is ever
+    /// returned.
+    pub fn record_capacity(&self, cap: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.cap_hint = g.cap_hint.max(cap);
+    }
+
     /// Idle buffers currently held.
     pub fn idle(&self) -> usize {
         self.inner.lock().unwrap().bufs.len()

@@ -7,7 +7,7 @@ use tfdatasvc::data::exec::ElemIter;
 use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
 use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
-use tfdatasvc::service::proto::{CompressionMode, ProcessingMode, ShardingPolicy};
+use tfdatasvc::service::proto::{CompressionMode, ProcessingMode, SharingMode, ShardingPolicy};
 use tfdatasvc::service::visitation::{Guarantee, VisitationTracker};
 use tfdatasvc::service::worker::{Worker, WorkerConfig};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
@@ -199,6 +199,137 @@ fn ephemeral_sharing_two_clients_one_named_job() {
     s2.sort_unstable();
     assert_eq!(s1, (0..16).collect::<Vec<u64>>());
     assert_eq!(s2, (0..16).collect::<Vec<u64>>());
+}
+
+#[test]
+fn auto_sharing_k_jobs_one_shared_production() {
+    // §3.5 end to end: k anonymous jobs running the *same* pipeline (by
+    // structural fingerprint, no job name) converge on one shared stream.
+    // Elements are produced once; every client drains the full epoch
+    // exactly-once from its own cursor; one client releasing mid-epoch
+    // leaves the others untouched.
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 4, samples_per_shard: 16, ..Default::default() },
+    );
+    let total = spec.total_samples as u64; // 64 samples, 16 batches of 4
+    let epoch = total / 4;
+    let mut wcfg = WorkerConfig::new(store, UdfRegistry::with_builtins());
+    wcfg.cache_window = 4096; // retain the whole epoch: no eviction
+    let w = Worker::start("127.0.0.1:0", &d.addr(), wcfg).unwrap();
+
+    // ~3 ms of preprocessing per sample slows production enough that all
+    // attaches land while the stream is still being produced.
+    let graph = PipelineBuilder::source_vision(spec)
+        .map("synthetic.burn:3000")
+        .batch(4)
+        .build();
+    let mk = || ServiceClientConfig {
+        sharding: ShardingPolicy::Dynamic,
+        sharing: SharingMode::Auto,
+        ..Default::default()
+    };
+
+    let clients: Vec<ServiceClient> = (0..4).map(|_| ServiceClient::new(&d.addr())).collect();
+    let mut iters: Vec<_> = clients.iter().map(|c| c.distribute(&graph, mk()).unwrap()).collect();
+    let job_id = iters[0].job_id();
+    assert!(iters.iter().all(|it| it.job_id() == job_id), "one shared job for all k clients");
+    assert!(!iters[0].attached(), "first client created the job");
+    assert!(iters[1..].iter().all(|it| it.attached()), "later clients attached");
+    assert_eq!(d.metrics().counter("dispatcher/sharing_attaches").get(), 3);
+
+    // One consumer leaves mid-epoch...
+    let mut quitter = iters.pop().unwrap();
+    // ...while the remaining three drain the full epoch concurrently.
+    let drainers: Vec<_> = iters
+        .into_iter()
+        .map(|mut it| {
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                while let Some(e) = it.next().unwrap() {
+                    ids.extend(e.ids);
+                }
+                it.release();
+                ids
+            })
+        })
+        .collect();
+    for _ in 0..2 {
+        assert!(quitter.next().unwrap().is_some(), "quitter got its two batches");
+    }
+    quitter.release(); // mid-epoch departure
+
+    for h in drainers {
+        let mut ids = h.join().unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..total).collect::<Vec<u64>>(), "full epoch exactly-once per client");
+    }
+
+    // The sharing ledger: produced once, fetched ~3x (plus the quitter's
+    // partial drain).
+    let produced = w.metrics().counter("worker/elements_produced").get();
+    assert!(
+        produced <= epoch + epoch / 10,
+        "single production for k clients: produced {produced}, epoch {epoch}"
+    );
+    // Most pushes see >= 2 registered cursors. Loose lower bound: if an
+    // unluckily-timed heartbeat delivers the task before the other
+    // attaches, the first ~2 batches can be pushed before the remaining
+    // clients' first fetches lazily register their cursors.
+    let shared = w.metrics().counter("worker/shared_elements_served").get();
+    assert!(
+        shared * 4 >= epoch && shared <= produced,
+        "bulk of the stream produced shared: {shared}/{produced}"
+    );
+    let fetched: u64 =
+        clients.iter().map(|c| c.metrics().counter("client/elements_fetched").get()).sum();
+    assert!(
+        fetched >= 3 * epoch + 2 && fetched <= 4 * epoch,
+        "k-fold consumption of one production: fetched {fetched}, epoch {epoch}"
+    );
+    // Window held the whole epoch: nobody was forced to skip.
+    assert_eq!(w.metrics().counter("worker/relaxed_visitation_skips").get(), 0);
+}
+
+#[test]
+fn sharing_opt_out_runs_dedicated_productions() {
+    // Explicit opt-out (§3.5): identical pipelines, sharing disabled —
+    // two dedicated jobs, two productions.
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 2, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let w = start_worker(&d, store);
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+    let mk = || ServiceClientConfig {
+        sharding: ShardingPolicy::Dynamic,
+        sharing: SharingMode::Off,
+        ..Default::default()
+    };
+    let c1 = ServiceClient::new(&d.addr());
+    let c2 = ServiceClient::new(&d.addr());
+    let mut it1 = c1.distribute(&graph, mk()).unwrap();
+    let mut it2 = c2.distribute(&graph, mk()).unwrap();
+    assert_ne!(it1.job_id(), it2.job_id(), "opt-out keeps jobs dedicated");
+    let mut n = 0u64;
+    while let Some(_e) = it1.next().unwrap() {
+        n += 1;
+    }
+    while let Some(_e) = it2.next().unwrap() {
+        n += 1;
+    }
+    assert_eq!(n, 2 * total / 4, "both clients drained their own epoch");
+    drop(it1);
+    drop(it2);
+    let produced = w.metrics().counter("worker/elements_produced").get();
+    assert_eq!(produced, 2 * total / 4, "two dedicated productions");
 }
 
 #[test]
