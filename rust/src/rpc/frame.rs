@@ -91,6 +91,17 @@ impl Frame {
         parts: &[&[u8]],
     ) -> io::Result<()> {
         let payload_len: usize = parts.iter().map(|p| p.len()).sum();
+        // Refuse to emit a frame the peer's reader will reject: writing it
+        // would not "fail fast", it would desynchronize nothing visible
+        // here and kill the peer's whole connection (taking every other
+        // in-flight call with it). Serving paths are expected to chunk or
+        // error before this point; this is the transport backstop.
+        if HEADER_LEN + payload_len > MAX_FRAME_LEN {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame payload {payload_len} B exceeds MAX_FRAME_LEN {MAX_FRAME_LEN} B"),
+            ));
+        }
         let mut hdr = Writer::with_capacity(4 + HEADER_LEN);
         hdr.put_u32((HEADER_LEN + payload_len) as u32);
         hdr.put_u64(call_id);
@@ -271,6 +282,32 @@ mod tests {
         let mut joined = head;
         joined.extend_from_slice(&tail);
         assert_eq!(back.payload, joined);
+    }
+
+    /// The writer must refuse a frame the peer's reader would reject
+    /// (reader-side rejection kills the whole connection; writer-side is
+    /// a per-call error).
+    #[test]
+    fn write_parts_rejects_over_cap_payload() {
+        struct NullSink;
+        impl Write for NullSink {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        // Claim an over-cap total without allocating 64 MiB: many refs to
+        // one 1 MiB slice.
+        let chunk = vec![0u8; 1 << 20];
+        let parts: Vec<&[u8]> = (0..65).map(|_| chunk.as_slice()).collect();
+        let err =
+            Frame::write_parts_to(&mut NullSink, 1, FrameKind::Response, 2, &parts).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Exactly at the cap minus header is fine.
+        let ok_parts: Vec<&[u8]> = (0..63).map(|_| chunk.as_slice()).collect();
+        Frame::write_parts_to(&mut NullSink, 1, FrameKind::Response, 2, &ok_parts).unwrap();
     }
 
     #[test]

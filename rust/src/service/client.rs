@@ -54,19 +54,40 @@ pub struct ServiceClientConfig {
     pub request_timeout: Duration,
     /// How often to refresh the worker list from the dispatcher.
     pub heartbeat_interval: Duration,
-    /// Fetch via the batched streaming `GetElements` RPC (default). Only
-    /// applies to independent mode; coordinated reads always use the
-    /// single-element round protocol. Set false to force the legacy
-    /// one-element-per-RPC path.
+    /// Legacy-plane selector, consulted only when the session plane is
+    /// not in use — `stream_sessions` is false, or the worker rejected
+    /// the handshake: true = batched `GetElements`, false = the
+    /// one-element-per-RPC `GetElement` path. To actually force
+    /// one-element-per-RPC, set `stream_sessions: false` as well.
+    /// Independent mode only; coordinated reads always move one round
+    /// slot per call.
     pub batching: bool,
-    /// Max elements per batched response; 0 = worker default.
+    /// Max elements per batched response; 0 = worker default. With
+    /// adaptive batching this is the AIMD starting point, not a constant.
     pub batch_max_elements: u32,
     /// Per-response byte budget (flow control: bounds per-worker client
     /// memory to ~2x this with the request pipeline); 0 = worker default.
+    /// With adaptive batching this is the AIMD starting point.
     pub batch_max_bytes: u64,
     /// Worker-side long-poll window when its buffer is empty; 0 = worker
     /// default.
     pub batch_poll_ms: u32,
+    /// Use the versioned stream-session data plane (`OpenStream`/`Fetch`,
+    /// the default): capability negotiation, chunked transfer of
+    /// oversized elements, and adaptive batching. The client downgrades
+    /// automatically to the legacy RPCs against an old worker that does
+    /// not implement the handshake.
+    pub stream_sessions: bool,
+    /// Run an AIMD loop on `batch_max_elements`/`batch_max_bytes` per
+    /// worker, driven by the backpressure hints in `Fetch` responses,
+    /// instead of using the static config values. Requires
+    /// `stream_sessions` and the worker granting
+    /// [`proto::stream_caps::ADAPTIVE_BATCHING`].
+    pub adaptive_batching: bool,
+    /// Largest response frame this client accepts (advertised in the
+    /// handshake; elements over the negotiated value arrive as
+    /// continuation frames). 0 = the transport cap.
+    pub max_frame_len: u64,
 }
 
 impl Default for ServiceClientConfig {
@@ -87,9 +108,23 @@ impl Default for ServiceClientConfig {
             batch_max_elements: 0,
             batch_max_bytes: 1 << 20,
             batch_poll_ms: 0,
+            stream_sessions: true,
+            adaptive_batching: true,
+            max_frame_len: 0,
         }
     }
 }
+
+// AIMD bounds for adaptive batching: additive increase while responses
+// come back full and the worker reports more data ready, multiplicative
+// decrease when a long-poll expires empty (production is the bottleneck,
+// so small requests keep latency low).
+const AIMD_MIN_ELEMENTS: u32 = 16;
+const AIMD_MAX_ELEMENTS: u32 = 1024;
+const AIMD_ELEMENTS_STEP: u32 = 32;
+const AIMD_MIN_BYTES: u64 = 64 << 10;
+const AIMD_MAX_BYTES: u64 = 8 << 20;
+const AIMD_BYTES_STEP: u64 = 256 << 10;
 
 /// Handle for talking to one tf.data service deployment.
 pub struct ServiceClient {
@@ -236,6 +271,17 @@ struct CoordFetcher {
     consumer_index: u32,
     compression: CompressionMode,
     timeout: Duration,
+    /// Whether to try the stream-session plane at all.
+    stream_sessions: bool,
+    max_frame_len: u64,
+    /// Per-worker negotiated session; `None` marks a legacy worker that
+    /// rejected the handshake (downgrade is sticky per address).
+    sessions: std::collections::HashMap<String, Option<OpenStreamResp>>,
+    /// Per-worker continuation-frame reassembly + release-ack state for
+    /// chunked round slots (see [`ChunkReassembler`]). Persistent across
+    /// `next()` calls so a transport retry resumes mid-element instead of
+    /// desyncing.
+    chunks: std::collections::HashMap<String, ChunkReassembler>,
 }
 
 struct FetchShared {
@@ -255,6 +301,10 @@ struct FetchShared {
     batch_max_elements: u32,
     batch_max_bytes: u64,
     batch_poll_ms: u32,
+    // Stream-session knobs (see ServiceClientConfig).
+    stream_sessions: bool,
+    adaptive_batching: bool,
+    max_frame_len: u64,
 }
 
 impl DistributedIter {
@@ -310,6 +360,10 @@ impl DistributedIter {
                         consumer_index: cfg.consumer_index,
                         compression: cfg.compression,
                         timeout: cfg.request_timeout,
+                        stream_sessions: cfg.stream_sessions,
+                        max_frame_len: cfg.max_frame_len,
+                        sessions: std::collections::HashMap::new(),
+                        chunks: std::collections::HashMap::new(),
                     }),
                     job_id,
                     client_id,
@@ -338,6 +392,9 @@ impl DistributedIter {
                     batch_max_elements: cfg.batch_max_elements,
                     batch_max_bytes: cfg.batch_max_bytes,
                     batch_poll_ms: cfg.batch_poll_ms,
+                    stream_sessions: cfg.stream_sessions,
+                    adaptive_batching: cfg.adaptive_batching,
+                    max_frame_len: cfg.max_frame_len,
                 });
                 // Supervisor: heartbeat the dispatcher, spawn a fetcher per
                 // (newly discovered) worker, close the channel when done.
@@ -359,7 +416,9 @@ impl DistributedIter {
                                             break;
                                         }
                                         if known.insert(addr.clone()) {
-                                            if shared.batching {
+                                            if shared.stream_sessions {
+                                                spawn_session_fetcher(shared.clone(), addr);
+                                            } else if shared.batching {
                                                 spawn_batched_fetcher(shared.clone(), addr);
                                             } else {
                                                 spawn_fetcher(shared.clone(), addr);
@@ -465,77 +524,85 @@ fn spawn_fetcher(shared: Arc<FetchShared>, addr: String) {
     let spawned = std::thread::Builder::new()
         .name(format!("svc-fetch-{addr}"))
         .spawn(move || {
-            // Transient-failure budget: the worker may not have received
-            // the task yet (it arrives on its next heartbeat), or may be
-            // restarting. Only after sustained failure do we give up.
-            let mut consecutive_errors = 0u32;
-            const MAX_CONSECUTIVE_ERRORS: u32 = 25;
-            loop {
-                if shared.stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let req = GetElementReq {
-                    job_id: shared.job_id,
-                    client_id: shared.client_id,
-                    consumer_index: None,
-                    round: None,
-                    compression: shared.compression,
-                };
-                let resp: Result<GetElementResp, _> = call_typed(
-                    &shared.pool,
-                    &addr,
-                    worker_methods::GET_ELEMENT,
-                    &req,
-                    shared.timeout,
-                );
-                shared.metrics.counter("client/rpcs").inc();
-                match resp {
-                    Ok(r) => {
-                        consecutive_errors = 0;
-                        if r.end_of_sequence {
-                            shared.finished_workers.lock().unwrap().insert(addr.clone());
-                            break;
-                        }
-                        match r.element {
-                            Some(bytes) => {
-                                let decoded = decode_element(&bytes, r.compressed);
-                                shared.metrics.counter("client/elements_fetched").inc();
-                                shared
-                                    .metrics
-                                    .counter("client/bytes_fetched")
-                                    .add(bytes.len() as u64);
-                                if shared.tx.send(decoded).is_err() {
-                                    break;
-                                }
-                            }
-                            None => {
-                                // Worker had nothing ready: brief backoff.
-                                std::thread::sleep(Duration::from_millis(1));
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        // Transient: the task may not have reached the
-                        // worker yet, or the worker is restarting. Retry
-                        // with backoff; give up only after sustained
-                        // failure (preemption). The supervisor keeps the
-                        // job going on surviving workers.
-                        shared.metrics.counter("client/fetch_errors").inc();
-                        let _ = e;
-                        consecutive_errors += 1;
-                        if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
-                            shared.finished_workers.lock().unwrap().insert(addr.clone());
-                            break;
-                        }
-                        std::thread::sleep(Duration::from_millis(20));
-                    }
-                }
-            }
+            single_fetch_loop(&shared, &addr);
             shared.active_fetchers.fetch_sub(1, Ordering::SeqCst);
         });
     if spawned.is_err() {
         // Spawn failure must not wedge the supervisor's drain wait.
         outer.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Legacy one-element-per-RPC fetch loop (`batching: false`, or the
+/// downgrade path against a pre-session worker).
+fn single_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
+    // Transient-failure budget: the worker may not have received
+    // the task yet (it arrives on its next heartbeat), or may be
+    // restarting. Only after sustained failure do we give up.
+    let mut consecutive_errors = 0u32;
+    const MAX_CONSECUTIVE_ERRORS: u32 = 25;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let req = GetElementReq {
+            job_id: shared.job_id,
+            client_id: shared.client_id,
+            consumer_index: None,
+            round: None,
+            compression: shared.compression,
+        };
+        let resp: Result<GetElementResp, _> =
+            call_typed(&shared.pool, addr, worker_methods::GET_ELEMENT, &req, shared.timeout);
+        shared.metrics.counter("client/rpcs").inc();
+        match resp {
+            Ok(r) => {
+                consecutive_errors = 0;
+                if r.end_of_sequence {
+                    shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                    break;
+                }
+                match r.element {
+                    Some(bytes) => {
+                        let decoded = decode_element(&bytes, r.compressed);
+                        shared.metrics.counter("client/elements_fetched").inc();
+                        shared.metrics.counter("client/bytes_fetched").add(bytes.len() as u64);
+                        if shared.tx.send(decoded).is_err() {
+                            break;
+                        }
+                    }
+                    None => {
+                        // Worker had nothing ready: brief backoff.
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            Err(crate::rpc::RpcError::Remote(msg))
+                if msg.contains(super::ELEMENT_TOO_LARGE_PREFIX) =>
+            {
+                // Terminal, not transient: the stream contains an element
+                // the single-element frame cannot carry. Surface the
+                // explicit error instead of burning the retry budget.
+                let _ = shared.tx.send(Err(ServiceError::Other(msg)));
+                shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                break;
+            }
+            Err(e) => {
+                // Transient: the task may not have reached the
+                // worker yet, or the worker is restarting. Retry
+                // with backoff; give up only after sustained
+                // failure (preemption). The supervisor keeps the
+                // job going on surviving workers.
+                shared.metrics.counter("client/fetch_errors").inc();
+                let _ = e;
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                    shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
     }
 }
 
@@ -605,6 +672,17 @@ fn batched_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
                             break;
                         }
                     }
+                    Err(crate::rpc::RpcError::Remote(msg))
+                        if msg.contains(super::ELEMENT_TOO_LARGE_PREFIX) =>
+                    {
+                        // Terminal, not transient: the legacy batched
+                        // plane cannot chunk; surface the explicit error
+                        // (satellite of the session redesign — the old
+                        // behavior silently skipped the element).
+                        let _ = req_shared.tx.send(Err(ServiceError::Other(msg)));
+                        req_shared.finished_workers.lock().unwrap().insert(req_addr.clone());
+                        break;
+                    }
                     Err(e) => {
                         // Transient: the task may not have reached the
                         // worker yet, or the worker is restarting. Retry
@@ -663,22 +741,553 @@ fn batched_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
     }
 }
 
+/// Outcome of the stream-session handshake against one worker.
+enum Handshake {
+    /// Negotiated: fetch through the session plane.
+    Session(OpenStreamResp),
+    /// The worker predates `OpenStream` (it answered "unknown method"):
+    /// downgrade to the legacy RPCs.
+    Legacy,
+    /// Sustained failure (preemption): give up on this worker.
+    Failed,
+}
+
+/// Open a stream session with retries. The worker may not have received
+/// the task yet (it arrives on its next heartbeat), so "unknown job" and
+/// transport errors retry with backoff; only the protocol-level "unknown
+/// method" answer is a downgrade signal.
+#[allow(clippy::too_many_arguments)]
+fn open_stream(
+    pool: &Pool,
+    addr: &str,
+    job_id: u64,
+    client_id: u64,
+    max_frame_len: u64,
+    consumer_index: Option<u32>,
+    timeout: Duration,
+    stop: &AtomicBool,
+) -> Handshake {
+    let mut consecutive_errors = 0u32;
+    const MAX_CONSECUTIVE_ERRORS: u32 = 25;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Handshake::Failed;
+        }
+        let req = OpenStreamReq {
+            job_id,
+            client_id,
+            protocol_version: STREAM_PROTOCOL_VERSION,
+            capabilities: stream_caps::ALL,
+            max_frame_len,
+            consumer_index,
+        };
+        let resp: Result<OpenStreamResp, _> =
+            call_typed(pool, addr, worker_methods::OPEN_STREAM, &req, timeout);
+        match resp {
+            Ok(r) => return Handshake::Session(r),
+            Err(crate::rpc::RpcError::Remote(msg)) if msg.contains("unknown method") => {
+                return Handshake::Legacy
+            }
+            Err(_) => {
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                    return Handshake::Failed;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Stream-session fetcher: handshake first, then the pipelined `Fetch`
+/// loop; downgrades to the legacy fetchers against an old worker.
+fn spawn_session_fetcher(shared: Arc<FetchShared>, addr: String) {
+    shared.active_fetchers.fetch_add(1, Ordering::SeqCst);
+    let s2 = shared.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("svc-fetchs-{addr}"))
+        .spawn(move || {
+            match open_stream(
+                &s2.pool,
+                &addr,
+                s2.job_id,
+                s2.client_id,
+                s2.max_frame_len,
+                None,
+                s2.timeout,
+                &s2.stop,
+            ) {
+                Handshake::Session(info) => {
+                    s2.metrics.counter("client/stream_sessions").inc();
+                    session_fetch_loop(&s2, &addr, info);
+                }
+                Handshake::Legacy => {
+                    // new-client <-> old-worker downgrade path.
+                    s2.metrics.counter("client/stream_handshake_downgrades").inc();
+                    if s2.batching {
+                        batched_fetch_loop(&s2, &addr);
+                    } else {
+                        single_fetch_loop(&s2, &addr);
+                    }
+                }
+                Handshake::Failed => {
+                    s2.finished_workers.lock().unwrap().insert(addr.clone());
+                }
+            }
+            s2.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+        });
+    if spawned.is_err() {
+        // Spawn failure must not wedge the supervisor's drain wait.
+        shared.active_fetchers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// What the session requester hands to the drain thread.
+enum SessionItem {
+    /// A regular batch response (decode the frame).
+    Batch(FetchResp),
+    /// A fully-reassembled oversized element's encoding.
+    Huge(Vec<u8>),
+}
+
+/// Client half of the continuation-frame state machine, shared by the
+/// independent session requester and the coordinated round fetcher:
+/// reassembles one oversized element from seq-tagged frames and holds the
+/// release ack the next request must echo. The worker releases its parked
+/// element only on an offset tagged with the *matching* seq reaching its
+/// length, so a retried (stale) ack can never release or corrupt the next
+/// element — the worker just restarts that element's delivery from 0,
+/// which `absorb` handles as a fresh buffer.
+#[derive(Default)]
+struct ChunkReassembler {
+    /// `(chunk_seq, bytes received so far)` of the element being rebuilt.
+    buf: Option<(u64, Vec<u8>)>,
+    /// `(chunk_seq, total len)` of a just-completed element. Kept until
+    /// replaced or reset: once the worker has moved on, the seq tag makes
+    /// re-sending it a no-op.
+    ack: Option<(u64, u64)>,
+}
+
+/// Outcome of feeding one continuation frame to [`ChunkReassembler`].
+enum ChunkStep {
+    /// Frame absorbed; keep fetching.
+    Partial,
+    /// Element complete: the full encoding, ready to decode. The release
+    /// ack is armed for the next request.
+    Complete(Vec<u8>),
+    /// The worker's frame does not line up with our buffer.
+    Desync(String),
+}
+
+impl ChunkReassembler {
+    /// `(chunk_seq, chunk_offset)` for the next `FetchReq`.
+    fn request_fields(&self) -> (u64, u64) {
+        if let Some((seq, b)) = &self.buf {
+            (*seq, b.len() as u64)
+        } else if let Some((seq, len)) = self.ack {
+            (seq, len)
+        } else {
+            (0, 0)
+        }
+    }
+
+    /// Absorb a continuation frame (caller checked `chunk_total_len > 0`).
+    fn absorb(&mut self, r: &FetchResp) -> ChunkStep {
+        if r.chunk_offset == 0 {
+            // (Re)start: a new element, or the worker restarting delivery
+            // after seeing an offset tagged with a stale seq.
+            self.buf = Some((r.chunk_seq, Vec::with_capacity(r.chunk_total_len as usize)));
+        }
+        let Some((seq, buf)) = self.buf.as_mut() else {
+            return ChunkStep::Desync(format!(
+                "chunked transfer desync: continuation at offset {} with no buffer",
+                r.chunk_offset
+            ));
+        };
+        if *seq != r.chunk_seq || r.chunk_offset as usize != buf.len() {
+            return ChunkStep::Desync(format!(
+                "chunked transfer desync: have {} bytes of element seq {}, worker sent offset \
+                 {} of seq {}",
+                buf.len(),
+                seq,
+                r.chunk_offset,
+                r.chunk_seq
+            ));
+        }
+        buf.extend_from_slice(&r.frame);
+        if (buf.len() as u64) < r.chunk_total_len {
+            return ChunkStep::Partial;
+        }
+        let (seq, done) = self.buf.take().expect("buffer present");
+        self.ack = Some((seq, done.len() as u64));
+        ChunkStep::Complete(done)
+    }
+
+    /// Drop all state (the worker restarted; its parked element is gone).
+    fn reset(&mut self) {
+        self.buf = None;
+        self.ack = None;
+    }
+}
+
+/// The session `Fetch` pipeline: a requester thread keeps the next RPC in
+/// flight (running the AIMD budget loop and reassembling continuation
+/// frames) while this thread decodes responses into the bounded client
+/// buffer. Mirrors [`batched_fetch_loop`]'s two-thread structure.
+fn session_fetch_loop(shared: &Arc<FetchShared>, addr: &str, info: OpenStreamResp) {
+    let (btx, brx) = chan::bounded::<SessionItem>(1);
+    let pipeline_close = btx.clone();
+
+    let req_shared = shared.clone();
+    let req_addr = addr.to_string();
+    let requester = std::thread::Builder::new()
+        .name(format!("svc-fetchs-req-{addr}"))
+        .spawn(move || {
+            session_request_loop(&req_shared, &req_addr, info, &btx);
+            // Unblock the drain side whichever way the loop exited.
+            btx.close();
+        });
+
+    while let Ok(item) = brx.recv() {
+        match item {
+            SessionItem::Batch(resp) => {
+                let eos = resp.end_of_sequence;
+                shared.metrics.counter("client/bytes_fetched").add(resp.frame.len() as u64);
+                match decode_frame(resp.frame, resp.compressed, resp.num_elements) {
+                    Ok(elements) => {
+                        let mut consumer_gone = false;
+                        for e in elements {
+                            shared.metrics.counter("client/elements_fetched").inc();
+                            if shared.tx.send(Ok(e)).is_err() {
+                                consumer_gone = true;
+                                break;
+                            }
+                        }
+                        if consumer_gone {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        if shared.tx.send(Err(e)).is_err() {
+                            break;
+                        }
+                    }
+                }
+                if eos {
+                    shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                    break;
+                }
+            }
+            SessionItem::Huge(bytes) => {
+                shared.metrics.counter("client/bytes_fetched").add(bytes.len() as u64);
+                shared.metrics.counter("client/chunked_elements_fetched").inc();
+                let decoded = Element::from_bytes(&bytes).map_err(ServiceError::from);
+                shared.metrics.counter("client/elements_fetched").inc();
+                if shared.tx.send(decoded).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    pipeline_close.close();
+    if let Ok(h) = requester {
+        let _ = h.join();
+    }
+}
+
+/// Requester half of the session pipeline: issues `Fetch` RPCs, runs the
+/// AIMD budget loop off the responses' backpressure hints, reassembles
+/// continuation frames, and re-handshakes if the worker lost the session
+/// (restart). Exits on end-of-sequence, sustained failure, or stop.
+fn session_request_loop(
+    shared: &Arc<FetchShared>,
+    addr: &str,
+    mut info: OpenStreamResp,
+    btx: &chan::Sender<SessionItem>,
+) {
+    let adaptive = shared.adaptive_batching
+        && info.capabilities & stream_caps::ADAPTIVE_BATCHING != 0;
+    // AIMD state starts at the static config (or worker defaults), so
+    // adaptive can only improve on the static budgets it would have used.
+    let mut cur_elements =
+        if shared.batch_max_elements == 0 { 64 } else { shared.batch_max_elements };
+    let mut cur_bytes = if shared.batch_max_bytes == 0 { 1 << 20 } else { shared.batch_max_bytes };
+    let bytes_cap = AIMD_MAX_BYTES.min(info.max_frame_len);
+    // Continuation-frame reassembly + release-ack state.
+    let mut chunks = ChunkReassembler::default();
+
+    let mut consecutive_errors = 0u32;
+    const MAX_CONSECUTIVE_ERRORS: u32 = 25;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let (chunk_seq, chunk_offset) = chunks.request_fields();
+        let req = FetchReq {
+            session_id: info.session_id,
+            max_elements: cur_elements,
+            max_bytes: cur_bytes,
+            poll_ms: shared.batch_poll_ms,
+            compression: shared.compression,
+            round: None,
+            chunk_seq,
+            chunk_offset,
+        };
+        let resp: Result<FetchResp, _> =
+            call_typed(&shared.pool, addr, worker_methods::FETCH, &req, shared.timeout);
+        shared.metrics.counter("client/rpcs").inc();
+        match resp {
+            Ok(r) => {
+                consecutive_errors = 0;
+                shared.metrics.counter("client/fetch_rpcs").inc();
+                if r.chunk_total_len > 0 {
+                    shared.metrics.counter("client/chunk_frames").inc();
+                    match chunks.absorb(&r) {
+                        ChunkStep::Partial => {}
+                        ChunkStep::Complete(done) => {
+                            if btx.send(SessionItem::Huge(done)).is_err() {
+                                break; // drain side gone
+                            }
+                        }
+                        ChunkStep::Desync(msg) => {
+                            let _ = shared.tx.send(Err(ServiceError::Other(msg)));
+                            shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                            break;
+                        }
+                    }
+                    continue;
+                }
+                if adaptive {
+                    aimd_update(&mut cur_elements, &mut cur_bytes, &r, bytes_cap);
+                    shared.metrics.gauge("client/adaptive_max_elements").set(cur_elements as i64);
+                    shared.metrics.gauge("client/adaptive_max_bytes").set(cur_bytes as i64);
+                }
+                let eos = r.end_of_sequence;
+                if btx.send(SessionItem::Batch(r)).is_err() {
+                    break; // drain side gone
+                }
+                if eos {
+                    break;
+                }
+            }
+            Err(crate::rpc::RpcError::Remote(msg))
+                if msg.contains("unknown stream session") || msg.contains("unknown job") =>
+            {
+                // The worker restarted (sessions are worker-local soft
+                // state): re-handshake. A partially-reassembled element
+                // died with the worker — drop the buffer; the stream
+                // keeps its usual worker-failure semantics (at-most-once
+                // under preemption).
+                chunks.reset();
+                match open_stream(
+                    &shared.pool,
+                    addr,
+                    shared.job_id,
+                    shared.client_id,
+                    shared.max_frame_len,
+                    None,
+                    shared.timeout,
+                    &shared.stop,
+                ) {
+                    Handshake::Session(next) => {
+                        shared.metrics.counter("client/stream_rehandshakes").inc();
+                        info = next;
+                    }
+                    _ => {
+                        shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                        break;
+                    }
+                }
+            }
+            Err(crate::rpc::RpcError::Remote(msg))
+                if msg.contains(super::ELEMENT_TOO_LARGE_PREFIX) =>
+            {
+                // Terminal: the stream contains an element this session
+                // cannot carry (chunking not negotiated). Surface it, and
+                // mark this worker done so the supervisor can close the
+                // consumer channel instead of leaving next() blocked.
+                let _ = shared.tx.send(Err(ServiceError::Other(msg)));
+                shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                break;
+            }
+            Err(e) => {
+                shared.metrics.counter("client/fetch_errors").inc();
+                let _ = e;
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                    shared.finished_workers.lock().unwrap().insert(addr.to_string());
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    // Best-effort session teardown (the worker also GCs on release).
+    let _: Result<CloseStreamResp, _> = call_typed(
+        &shared.pool,
+        addr,
+        worker_methods::CLOSE_STREAM,
+        &CloseStreamReq { session_id: info.session_id },
+        Duration::from_secs(2),
+    );
+}
+
+/// One AIMD step: grow additively while the worker keeps filling our
+/// budgets and reports more data ready; halve when a long-poll came back
+/// empty (production-bound — small requests keep latency low).
+fn aimd_update(cur_elements: &mut u32, cur_bytes: &mut u64, r: &FetchResp, bytes_cap: u64) {
+    let hit_element_cap = r.num_elements >= *cur_elements;
+    // Compressed frames under-report raw bytes; treat >= 90% as full.
+    let hit_byte_cap = (r.frame.len() as u64) * 10 >= *cur_bytes * 9;
+    if (hit_element_cap || hit_byte_cap) && r.ready_elements > 0 {
+        *cur_elements = (*cur_elements + AIMD_ELEMENTS_STEP).min(AIMD_MAX_ELEMENTS);
+        *cur_bytes = (*cur_bytes + AIMD_BYTES_STEP).min(bytes_cap.max(AIMD_MIN_BYTES));
+    } else if r.num_elements == 0 && !r.end_of_sequence {
+        *cur_elements = (*cur_elements / 2).max(AIMD_MIN_ELEMENTS);
+        *cur_bytes = (*cur_bytes / 2).max(AIMD_MIN_BYTES);
+    }
+}
+
 /// Client side of the frame contract: decompress (if needed), split the
 /// frame into element payloads, decode each.
-fn decode_batch(resp: GetElementsResp) -> ServiceResult<Vec<Element>> {
-    let plain = if resp.compressed { inflate(&resp.frame)? } else { resp.frame };
+fn decode_frame(frame: Vec<u8>, compressed: bool, num_elements: u32) -> ServiceResult<Vec<Element>> {
+    let plain = if compressed { inflate(&frame)? } else { frame };
     let payloads = Vec::<Vec<u8>>::from_bytes(&plain)?;
-    if payloads.len() != resp.num_elements as usize {
+    if payloads.len() != num_elements as usize {
         return Err(ServiceError::Other(format!(
             "batched frame carried {} elements, header said {}",
             payloads.len(),
-            resp.num_elements
+            num_elements
         )));
     }
     payloads
         .iter()
         .map(|b| Element::from_bytes(b).map_err(ServiceError::from))
         .collect()
+}
+
+fn decode_batch(resp: GetElementsResp) -> ServiceResult<Vec<Element>> {
+    decode_frame(resp.frame, resp.compressed, resp.num_elements)
+}
+
+/// Outcome of one coordinated-read attempt through the session plane.
+enum CoordOutcome {
+    Element(Element),
+    /// Nothing this attempt (round not materialized / stale session /
+    /// transient error): retry after a brief backoff.
+    Empty,
+    Eos,
+    /// The owner is a pre-session worker: use the legacy `GetElement`
+    /// round protocol (sticky per address).
+    Legacy,
+}
+
+impl CoordFetcher {
+    /// One attempt to fetch the current round's slot from `owner` via
+    /// `OpenStream`/`Fetch` (§3.6 one-slot-per-call discipline preserved:
+    /// `max_elements` is pinned to 1 by the round read). Advances
+    /// `self.round` on success.
+    fn try_fetch_session(
+        &mut self,
+        pool: &Pool,
+        job_id: u64,
+        client_id: u64,
+        owner: &str,
+    ) -> Result<CoordOutcome, crate::data::DataError> {
+        let info = match self.sessions.get(owner) {
+            Some(None) => return Ok(CoordOutcome::Legacy),
+            Some(Some(info)) => info.clone(),
+            None => {
+                let req = OpenStreamReq {
+                    job_id,
+                    client_id,
+                    protocol_version: STREAM_PROTOCOL_VERSION,
+                    capabilities: stream_caps::ALL,
+                    max_frame_len: self.max_frame_len,
+                    consumer_index: Some(self.consumer_index),
+                };
+                match call_typed::<_, OpenStreamResp>(
+                    pool,
+                    owner,
+                    worker_methods::OPEN_STREAM,
+                    &req,
+                    self.timeout,
+                ) {
+                    Ok(resp) => {
+                        self.sessions.insert(owner.to_string(), Some(resp.clone()));
+                        resp
+                    }
+                    Err(crate::rpc::RpcError::Remote(msg)) if msg.contains("unknown method") => {
+                        self.sessions.insert(owner.to_string(), None);
+                        return Ok(CoordOutcome::Legacy);
+                    }
+                    Err(_) => return Ok(CoordOutcome::Empty), // task not there yet / restarting
+                }
+            }
+        };
+        // Continuation-frame state for this worker: persistent, so a
+        // transport retry resumes a chunked round slot mid-element.
+        let chunks = self.chunks.entry(owner.to_string()).or_default();
+        loop {
+            let (chunk_seq, chunk_offset) = chunks.request_fields();
+            let req = FetchReq {
+                session_id: info.session_id,
+                max_elements: 1,
+                max_bytes: 0,
+                poll_ms: 0,
+                compression: self.compression,
+                round: Some(self.round),
+                chunk_seq,
+                chunk_offset,
+            };
+            match call_typed::<_, FetchResp>(pool, owner, worker_methods::FETCH, &req, self.timeout)
+            {
+                Ok(r) => {
+                    if r.wrong_worker_for_round {
+                        return Ok(CoordOutcome::Empty); // stale worker list
+                    }
+                    if r.chunk_total_len > 0 {
+                        match chunks.absorb(&r) {
+                            ChunkStep::Partial => continue,
+                            ChunkStep::Complete(bytes) => {
+                                let e = Element::from_bytes(&bytes)
+                                    .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
+                                self.round += 1;
+                                return Ok(CoordOutcome::Element(e));
+                            }
+                            ChunkStep::Desync(msg) => {
+                                // Clean slate so a caller that retries
+                                // next() can restart the element from 0.
+                                chunks.reset();
+                                return Err(crate::data::DataError::Other(msg));
+                            }
+                        }
+                    }
+                    if r.num_elements > 0 {
+                        let mut elems = decode_frame(r.frame, r.compressed, r.num_elements)
+                            .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
+                        self.round += 1;
+                        return Ok(CoordOutcome::Element(elems.remove(0)));
+                    }
+                    if r.end_of_sequence {
+                        return Ok(CoordOutcome::Eos);
+                    }
+                    return Ok(CoordOutcome::Empty); // round not materialized yet
+                }
+                Err(crate::rpc::RpcError::Remote(msg))
+                    if msg.contains("unknown stream session") || msg.contains("unknown job") =>
+                {
+                    // Worker restarted: forget the session (and any
+                    // half-rebuilt element that died with it),
+                    // re-handshake on the next attempt.
+                    self.sessions.remove(owner);
+                    chunks.reset();
+                    return Ok(CoordOutcome::Empty);
+                }
+                Err(_) => return Ok(CoordOutcome::Empty),
+            }
+        }
+    }
 }
 
 fn decode_element(bytes: &[u8], compressed: bool) -> ServiceResult<Element> {
@@ -712,6 +1321,31 @@ impl ElemIter for DistributedIter {
                         return Ok(None);
                     }
                     let owner = &workers[(coord.round % workers.len() as u64) as usize];
+                    if coord.stream_sessions {
+                        let owner = owner.clone();
+                        match coord.try_fetch_session(
+                            &self.pool,
+                            self.job_id,
+                            self.client_id,
+                            &owner,
+                        )? {
+                            CoordOutcome::Element(e) => return Ok(Some(e)),
+                            CoordOutcome::Eos => return Ok(None),
+                            CoordOutcome::Empty => {
+                                if Instant::now() > deadline {
+                                    return Err(crate::data::DataError::Other(format!(
+                                        "coordinated round {} timed out",
+                                        coord.round
+                                    )));
+                                }
+                                std::thread::sleep(Duration::from_millis(2));
+                                continue;
+                            }
+                            // Old worker: fall through to the legacy
+                            // GetElement round protocol below.
+                            CoordOutcome::Legacy => {}
+                        }
+                    }
                     let req = GetElementReq {
                         job_id: self.job_id,
                         client_id: self.client_id,
@@ -750,5 +1384,206 @@ impl ElemIter for DistributedIter {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::Server;
+    use crate::wire::Encode;
+
+    fn probe(addr: &str) -> Handshake {
+        let pool = Pool::with_defaults();
+        let stop = AtomicBool::new(false);
+        open_stream(&pool, addr, 1, 2, 0, None, Duration::from_secs(2), &stop)
+    }
+
+    /// new-client <-> old-worker: a worker that predates the session
+    /// protocol answers its method demux's "unknown method" error, and
+    /// the client must downgrade to the legacy RPCs, not retry.
+    #[test]
+    fn handshake_downgrades_against_pre_session_worker() {
+        let srv = Server::bind("127.0.0.1:0", |method: u16, _p: &[u8]| {
+            Err(format!("worker: unknown method {method}"))
+        })
+        .unwrap();
+        assert!(matches!(probe(&srv.local_addr().to_string()), Handshake::Legacy));
+    }
+
+    /// The handshake against a session worker returns the worker's
+    /// negotiated answer verbatim.
+    #[test]
+    fn handshake_accepts_negotiated_session() {
+        let srv = Server::bind("127.0.0.1:0", |method: u16, p: &[u8]| {
+            assert_eq!(method, worker_methods::OPEN_STREAM);
+            let req = OpenStreamReq::from_bytes(p).map_err(|e| e.to_string())?;
+            assert_eq!(req.protocol_version, STREAM_PROTOCOL_VERSION);
+            assert_eq!(req.capabilities, stream_caps::ALL);
+            Ok(OpenStreamResp {
+                session_id: 7,
+                protocol_version: req.protocol_version.min(STREAM_PROTOCOL_VERSION),
+                capabilities: req.capabilities & stream_caps::DEFLATE,
+                max_frame_len: 1 << 20,
+                mode: ProcessingMode::Independent,
+            }
+            .to_bytes()
+            .into())
+        })
+        .unwrap();
+        match probe(&srv.local_addr().to_string()) {
+            Handshake::Session(info) => {
+                assert_eq!(info.session_id, 7);
+                assert_eq!(info.capabilities, stream_caps::DEFLATE);
+            }
+            _ => panic!("expected a negotiated session"),
+        }
+    }
+
+    /// A worker that keeps answering "unknown job" (task not delivered)
+    /// is retried, and the handshake aborts promptly once stop is set.
+    #[test]
+    fn handshake_respects_stop() {
+        let srv =
+            Server::bind("127.0.0.1:0", |_m: u16, _p: &[u8]| Err("unknown job 1".to_string()))
+                .unwrap();
+        let pool = Pool::with_defaults();
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            s2.store(true, Ordering::SeqCst);
+        });
+        let t0 = Instant::now();
+        let h = open_stream(
+            &pool,
+            &srv.local_addr().to_string(),
+            1,
+            2,
+            0,
+            None,
+            Duration::from_secs(2),
+            &stop,
+        );
+        assert!(matches!(h, Handshake::Failed));
+        assert!(t0.elapsed() < Duration::from_secs(2), "stop cut the retry loop short");
+    }
+
+    fn full_resp(num: u32, frame_len: usize, ready: u32) -> FetchResp {
+        FetchResp {
+            num_elements: num,
+            compressed: false,
+            end_of_sequence: false,
+            wrong_worker_for_round: false,
+            chunk_seq: 0,
+            chunk_offset: 0,
+            chunk_total_len: 0,
+            ready_elements: ready,
+            window_elements: ready,
+            window_bytes: 0,
+            frame: vec![0u8; frame_len],
+        }
+    }
+
+    fn chunk_resp(seq: u64, offset: u64, total: u64, frame: Vec<u8>) -> FetchResp {
+        FetchResp {
+            chunk_seq: seq,
+            chunk_offset: offset,
+            chunk_total_len: total,
+            frame,
+            ..full_resp(0, 0, 0)
+        }
+    }
+
+    /// The reassembler's seq-tagged state machine: normal reassembly,
+    /// ack arming, a stale-ack-triggered restart (the worker re-serving
+    /// a *new* element from 0 while we still echo the old ack), and the
+    /// desync verdicts.
+    #[test]
+    fn chunk_reassembler_state_machine() {
+        let mut c = ChunkReassembler::default();
+        assert_eq!(c.request_fields(), (0, 0));
+        // Element seq 1, total 5, in frames of 2/2/1.
+        assert!(matches!(c.absorb(&chunk_resp(1, 0, 5, vec![1, 2])), ChunkStep::Partial));
+        assert_eq!(c.request_fields(), (1, 2));
+        assert!(matches!(c.absorb(&chunk_resp(1, 2, 5, vec![3, 4])), ChunkStep::Partial));
+        match c.absorb(&chunk_resp(1, 4, 5, vec![5])) {
+            ChunkStep::Complete(done) => assert_eq!(done, vec![1, 2, 3, 4, 5]),
+            _ => panic!("expected completion"),
+        }
+        // Ack armed: the next request echoes (seq, total).
+        assert_eq!(c.request_fields(), (1, 5));
+        // The worker parked a NEW element and answered our (stale) ack by
+        // starting it from 0: a fresh buffer, no misattribution.
+        assert!(matches!(c.absorb(&chunk_resp(2, 0, 4, vec![9, 9])), ChunkStep::Partial));
+        assert_eq!(c.request_fields(), (2, 2));
+        // A frame for a different element mid-buffer is a desync...
+        assert!(matches!(c.absorb(&chunk_resp(3, 2, 4, vec![8])), ChunkStep::Desync(_)));
+        // ...as is a non-contiguous offset for the right element.
+        assert!(matches!(c.absorb(&chunk_resp(2, 3, 4, vec![8])), ChunkStep::Desync(_)));
+        c.reset();
+        assert_eq!(c.request_fields(), (0, 0));
+        // A continuation frame at a non-zero offset with no buffer (e.g.
+        // after a reset) is a desync, not a crash.
+        assert!(matches!(c.absorb(&chunk_resp(2, 2, 4, vec![8])), ChunkStep::Desync(_)));
+    }
+
+    #[test]
+    fn chunk_reassembler_handles_worker_restarting_delivery() {
+        let mut c = ChunkReassembler::default();
+        assert!(matches!(c.absorb(&chunk_resp(1, 0, 4, vec![1, 2])), ChunkStep::Partial));
+        // Worker restarted delivery from 0 (it saw a stale seq from us):
+        // offset 0 always starts a fresh buffer, even mid-element.
+        assert!(matches!(c.absorb(&chunk_resp(1, 0, 4, vec![1, 2])), ChunkStep::Partial));
+        match c.absorb(&chunk_resp(1, 2, 4, vec![3, 4])) {
+            ChunkStep::Complete(done) => assert_eq!(done, vec![1, 2, 3, 4]),
+            _ => panic!("expected completion"),
+        }
+    }
+
+    #[test]
+    fn aimd_grows_on_full_responses_and_halves_on_empty() {
+        let mut e = 64u32;
+        let mut b = 1u64 << 20;
+        // Full response + more ready: additive increase on both axes.
+        aimd_update(&mut e, &mut b, &full_resp(64, 1 << 20, 10), AIMD_MAX_BYTES);
+        assert_eq!(e, 64 + AIMD_ELEMENTS_STEP);
+        assert_eq!(b, (1 << 20) + AIMD_BYTES_STEP);
+        // Full but nothing more ready: hold (growing would just wait).
+        let (e0, b0) = (e, b);
+        aimd_update(&mut e, &mut b, &full_resp(e0, 1 << 20, 0), AIMD_MAX_BYTES);
+        assert_eq!((e, b), (e0, b0));
+        // Partial response: hold.
+        aimd_update(&mut e, &mut b, &full_resp(1, 128, 5), AIMD_MAX_BYTES);
+        assert_eq!((e, b), (e0, b0));
+        // Empty long-poll expiry: multiplicative decrease.
+        aimd_update(&mut e, &mut b, &full_resp(0, 4, 0), AIMD_MAX_BYTES);
+        assert_eq!(e, e0 / 2);
+        assert_eq!(b, b0 / 2);
+        // Bounds hold under sustained pressure in both directions.
+        for _ in 0..100 {
+            aimd_update(&mut e, &mut b, &full_resp(0, 4, 0), AIMD_MAX_BYTES);
+        }
+        assert_eq!((e, b), (AIMD_MIN_ELEMENTS, AIMD_MIN_BYTES));
+        for _ in 0..100 {
+            let full = full_resp(e, 0, 99); // element cap hit; frame size immaterial
+            aimd_update(&mut e, &mut b, &full, AIMD_MAX_BYTES);
+        }
+        assert_eq!((e, b), (AIMD_MAX_ELEMENTS, AIMD_MAX_BYTES));
+        // A capped byte budget (small negotiated frame) is respected.
+        let mut b2 = 256u64 << 10;
+        let mut e2 = 64u32;
+        aimd_update(&mut e2, &mut b2, &full_resp(64, 256 << 10, 9), 300 << 10);
+        assert_eq!(b2, 300 << 10);
+    }
+
+    #[test]
+    fn aimd_empty_eos_does_not_decay() {
+        let mut e = 64u32;
+        let mut b = 1u64 << 20;
+        let mut r = full_resp(0, 4, 0);
+        r.end_of_sequence = true;
+        aimd_update(&mut e, &mut b, &r, AIMD_MAX_BYTES);
+        assert_eq!((e, b), (64, 1 << 20));
     }
 }

@@ -12,27 +12,57 @@
 //! * [`client`] — accelerator-host side: registers pipelines, discovers
 //!   workers, fetches batches in parallel into a client-side buffer.
 //!
-//! ## The wire data plane
+//! ## The wire data plane: versioned stream sessions
 //!
-//! Two fetch paths exist between client and worker:
+//! The canonical client<->worker fetch path is a **negotiated stream
+//! session** (`OpenStream` + session-scoped `Fetch`), with the older
+//! RPCs retained as shims over the same serving machinery:
 //!
-//! * **Batched streaming (`GetElements`)** — the default for
-//!   independent-mode jobs. Each RPC drains up to
-//!   `max_elements`/`max_bytes` of the task's ready queue in one
-//!   worker-side lock acquisition, long-polls briefly when the buffer is
-//!   empty instead of bouncing empty responses, and compresses the whole
-//!   response frame at once so the codec overhead amortizes across the
-//!   batch. The client pipelines requests: the next `GetElements` call is
-//!   in flight while the previous batch drains into the bounded client
-//!   buffer, with the byte budget bounding per-worker memory. This is
-//!   what keeps per-element RPC overhead off the hot path (the paper's
-//!   line-rate requirement, §3.1).
-//! * **Single-element (`GetElement`)** — retained for coordinated-reads
-//!   rounds (§3.6, where one round slot moves per call by design) and
-//!   for old clients; also reachable by setting
-//!   `ServiceClientConfig::batching = false`.
+//! * **Session lifecycle** — `OpenStream(job, client)` negotiates a
+//!   protocol version (`min(client, worker)`, floor 1), a capability set
+//!   (bitwise intersection of [`proto::stream_caps`]), and a response
+//!   frame budget (`min` of both sides' `max_frame_len`), registers the
+//!   consumer's cache cursor, and returns a session id. Sessions are
+//!   worker-local soft state: they die with the task, with the
+//!   consumer's dispatcher-reported release, or via `CloseStream`; a
+//!   `Fetch` on a dead session errors and the client re-handshakes
+//!   (worker restart therefore self-heals).
+//! * **Capability matrix** — `DEFLATE`: whole-frame response
+//!   compression; `CHUNKED_TRANSFER`: elements larger than the
+//!   negotiated frame budget stream as continuation frames;
+//!   `ADAPTIVE_BATCHING`: responses carry backpressure hints
+//!   (ready-queue depth, window occupancy) and the client AIMD-tunes its
+//!   `max_elements`/`max_bytes` per worker (additive increase while
+//!   responses come back full with more ready, halve on empty
+//!   long-polls) instead of static config. Dropping any bit degrades
+//!   gracefully: no chunking -> explicit `element too large` errors, no
+//!   deflate -> plain frames, no adaptive -> static budgets.
+//! * **Fetch discipline** — independent mode: one `Fetch` drains up to
+//!   the negotiated budgets from the task's ready queue under one lock,
+//!   long-polling briefly when empty (the paper's §3.1 line-rate
+//!   requirement); coordinated mode (§3.6): one `Fetch` carries exactly
+//!   one round slot (`round = Some(r)`), preserving the
+//!   one-slot-per-call contract.
+//! * **Chunked transfer** — an element whose encoding exceeds the frame
+//!   budget is popped from the cache into the session's chunk slot
+//!   (tagged with a session-unique `chunk_seq`) and streamed as raw
+//!   continuation frames; the client echoes its received offset, tagged
+//!   with the element's seq, in each `Fetch`, making delivery idempotent
+//!   under RPC retries, and the worker releases the element only when a
+//!   matching-seq offset reaches its total length — an offset tagged
+//!   with any other seq (e.g. a retried ack from the previous element)
+//!   just restarts delivery from 0. This closes the historical
+//!   silent-skip hole (cursor advancing before an over-cap write).
+//! * **Legacy shims** — `GetElements` (old batched clients) and
+//!   `GetElement` (old single-element clients; also
+//!   `ServiceClientConfig::batching = false`) route into the same drain
+//!   loop with fixed conservative budgets and no chunking: an over-cap
+//!   element yields an explicit [`ServiceError::ElementTooLarge`] with
+//!   the cursor untouched. A new client talking to an old worker
+//!   downgrades automatically when `OpenStream` answers "unknown
+//!   method". Coordinated rounds keep `GetElement` as their legacy shim.
 //!
-//! Both paths are **one-copy end to end** on the worker: elements are
+//! All paths are **one-copy end to end** on the worker: elements are
 //! encoded once into the sliding window, batched frames are assembled in
 //! a pooled buffer, and the RPC server writes `(head, frame)` with a
 //! scatter-gather frame write ([`crate::rpc::Frame::write_parts_to`])
@@ -110,8 +140,21 @@ pub enum ServiceError {
     UnknownDataset(u64),
     UnknownJob(u64),
     UnknownWorker(u64),
+    /// A single encoded element exceeds the response-frame budget and the
+    /// fetch path cannot chunk it (legacy RPCs, or a session that did not
+    /// negotiate [`proto::stream_caps::CHUNKED_TRANSFER`]). The serving
+    /// cursor is *not* advanced, so the failure is explicit and repeatable
+    /// instead of a silent skip. The `Display` text is part of the wire
+    /// contract: clients recognize the condition by the
+    /// `"element too large"` prefix in the remote error string.
+    ElementTooLarge { bytes: usize, cap: usize },
     Other(String),
 }
+
+/// Stable prefix of [`ServiceError::ElementTooLarge`]'s remote error
+/// string; the client matches on it to surface a terminal error instead
+/// of retrying.
+pub const ELEMENT_TOO_LARGE_PREFIX: &str = "element too large";
 
 impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -123,6 +166,11 @@ impl std::fmt::Display for ServiceError {
             ServiceError::UnknownDataset(id) => write!(f, "unknown dataset {id}"),
             ServiceError::UnknownJob(id) => write!(f, "unknown job {id}"),
             ServiceError::UnknownWorker(id) => write!(f, "unknown worker {id}"),
+            ServiceError::ElementTooLarge { bytes, cap } => write!(
+                f,
+                "{ELEMENT_TOO_LARGE_PREFIX}: {bytes} byte element exceeds the {cap} byte frame \
+                 budget; use a chunked stream session (OpenStream with CHUNKED_TRANSFER)"
+            ),
             ServiceError::Other(msg) => write!(f, "{msg}"),
         }
     }

@@ -25,8 +25,43 @@ pub mod dispatcher_methods {
 pub mod worker_methods {
     pub const GET_ELEMENT: u16 = 32;
     pub const WORKER_STATUS: u16 = 33;
-    /// Batched streaming fetch (the default independent-mode data plane).
+    /// Batched streaming fetch (legacy shim; see [`OPEN_STREAM`]).
     pub const GET_ELEMENTS: u16 = 34;
+    /// Stream-session handshake: protocol version + capability
+    /// negotiation, returns a session id for [`FETCH`].
+    pub const OPEN_STREAM: u16 = 35;
+    /// Session-scoped fetch: the canonical data-plane RPC (batch drain in
+    /// independent mode, one round slot in coordinated mode, continuation
+    /// frames for oversized elements).
+    pub const FETCH: u16 = 36;
+    /// Tear down a stream session (best-effort; sessions also die with
+    /// their task or a consumer release).
+    pub const CLOSE_STREAM: u16 = 37;
+}
+
+// ------------------------------------------------- stream-session protocol
+
+/// Highest stream-session protocol version this build speaks. The
+/// handshake negotiates `min(client, worker)`; version 1 is the floor, so
+/// any two builds that both know `OpenStream` can interoperate.
+pub const STREAM_PROTOCOL_VERSION: u32 = 1;
+
+/// Capability bits exchanged in the [`OpenStreamReq`]/[`OpenStreamResp`]
+/// handshake. The negotiated set is the bitwise intersection: either side
+/// may unilaterally drop a capability and the wire contract degrades
+/// gracefully (no chunking -> explicit `element too large` errors, no
+/// deflate -> plain frames, no adaptive batching -> static budgets).
+pub mod stream_caps {
+    /// Whole-frame deflate compression of fetch responses.
+    pub const DEFLATE: u64 = 1 << 0;
+    /// Oversized elements stream as continuation frames (chunked
+    /// transfer) instead of erroring.
+    pub const CHUNKED_TRANSFER: u64 = 1 << 1;
+    /// Responses carry backpressure hints and the client may vary its
+    /// per-fetch budgets (AIMD) instead of using static config.
+    pub const ADAPTIVE_BATCHING: u64 = 1 << 2;
+    /// Everything this build implements.
+    pub const ALL: u64 = DEFLATE | CHUNKED_TRANSFER | ADAPTIVE_BATCHING;
 }
 
 // ------------------------------------------------------------ enum types
@@ -426,9 +461,190 @@ pub fn encode_get_elements_resp_parts(
     (head.into_bytes(), frame)
 }
 
+/// Stream-session handshake (client -> worker). The client declares the
+/// highest protocol version it speaks, its capability set, and the
+/// largest response frame it will accept; the worker answers with the
+/// negotiated (min / intersection) values and a session id that scopes
+/// every subsequent [`FetchReq`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenStreamReq {
+    pub job_id: u64,
+    pub client_id: u64,
+    /// Highest protocol version the client speaks (>= 1).
+    pub protocol_version: u32,
+    /// [`stream_caps`] bitmask the client supports.
+    pub capabilities: u64,
+    /// Largest response frame the client will accept; 0 = transport cap
+    /// ([`crate::rpc::MAX_FRAME_LEN`]). Elements whose encoding exceeds
+    /// the negotiated value stream as continuation frames when
+    /// [`stream_caps::CHUNKED_TRANSFER`] is negotiated.
+    pub max_frame_len: u64,
+    /// Coordinated mode: which consumer slot this session reads for.
+    pub consumer_index: Option<u32>,
+}
+wire_struct!(OpenStreamReq {
+    job_id,
+    client_id,
+    protocol_version,
+    capabilities,
+    max_frame_len,
+    consumer_index
+});
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenStreamResp {
+    /// Scope for all [`FetchReq`]s on this stream. Sessions die with the
+    /// task, with the consumer's release, or via [`CloseStreamReq`];
+    /// a fetch on a dead session errors and the client re-handshakes.
+    pub session_id: u64,
+    /// Negotiated version: `min(client, worker)`.
+    pub protocol_version: u32,
+    /// Negotiated capabilities: the intersection of both sides' sets.
+    pub capabilities: u64,
+    /// Negotiated response-frame budget: `min(client, worker)` bytes.
+    pub max_frame_len: u64,
+    /// The job's mode, so the client picks the right fetch discipline
+    /// (batch drain vs one-slot round reads).
+    pub mode: ProcessingMode,
+}
+wire_struct!(OpenStreamResp { session_id, protocol_version, capabilities, max_frame_len, mode });
+
+/// Session-scoped fetch: the canonical data-plane request. Independent
+/// mode drains a batch; coordinated mode reads one round slot
+/// (`round = Some(..)`); a pending oversized element resumes from
+/// `chunk_offset`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FetchReq {
+    pub session_id: u64,
+    /// Max elements per response; 0 = worker default.
+    pub max_elements: u32,
+    /// Soft response byte budget; 0 = worker default. Clamped to the
+    /// negotiated frame budget.
+    pub max_bytes: u64,
+    /// Long-poll window when no data is ready; 0 = worker default.
+    pub poll_ms: u32,
+    pub compression: CompressionMode,
+    /// Coordinated mode: the training round being fetched.
+    pub round: Option<u64>,
+    /// Chunked transfer: the [`FetchResp::chunk_seq`] of the oversized
+    /// element `chunk_offset` refers to (0 = none). The worker ignores
+    /// offsets tagged with a different seq than its parked element, so a
+    /// retried ack from an already-released element can never release or
+    /// corrupt the next one.
+    pub chunk_seq: u64,
+    /// Chunked transfer: bytes of the pending oversized element already
+    /// received. The worker serves the next continuation frame from this
+    /// offset (making chunk delivery idempotent under RPC retries) and
+    /// releases the element only once the client's offset — tagged with
+    /// the matching `chunk_seq` — reaches its total length, so a lost
+    /// response can never skip data.
+    pub chunk_offset: u64,
+}
+wire_struct!(FetchReq {
+    session_id,
+    max_elements,
+    max_bytes,
+    poll_ms,
+    compression,
+    round,
+    chunk_seq,
+    chunk_offset
+});
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FetchResp {
+    /// Element count inside `frame` (0 for continuation frames and empty
+    /// long-poll expiries).
+    pub num_elements: u32,
+    pub compressed: bool,
+    /// True when the stream has produced everything it ever will *and*
+    /// this session's cursor has consumed it all.
+    pub end_of_sequence: bool,
+    /// Coordinated mode: this round belongs to another worker.
+    pub wrong_worker_for_round: bool,
+    /// Chunked transfer: when `chunk_total_len > 0`, `frame` is the raw
+    /// byte range `[chunk_offset, chunk_offset + frame.len())` of one
+    /// oversized element's encoding; the client reassembles and decodes
+    /// once its buffer reaches `chunk_total_len`. `chunk_seq` identifies
+    /// the element within the session (monotonically increasing from 1):
+    /// continuation frames of one element all carry the same seq, and the
+    /// client echoes it back with its offsets.
+    pub chunk_seq: u64,
+    pub chunk_offset: u64,
+    pub chunk_total_len: u64,
+    /// Backpressure hints for adaptive batching: elements immediately
+    /// available to this cursor (producer backlog + unread window).
+    pub ready_elements: u32,
+    /// Sliding-window occupancy at serve time.
+    pub window_elements: u32,
+    pub window_bytes: u64,
+    /// Response frame: a wire-encoded `Vec<Vec<u8>>` of element payloads
+    /// (possibly whole-frame compressed), or a raw element byte range in
+    /// chunk mode. Declared last for the scatter-gather write path, like
+    /// [`GetElementsResp::frame`].
+    pub frame: Vec<u8>,
+}
+wire_struct!(FetchResp {
+    num_elements,
+    compressed,
+    end_of_sequence,
+    wrong_worker_for_round,
+    chunk_seq,
+    chunk_offset,
+    chunk_total_len,
+    ready_elements,
+    window_elements,
+    window_bytes,
+    frame
+});
+
+/// Encode a [`FetchResp`] as `(head, frame)` write slices for the
+/// scatter-gather RPC path: `head ++ frame` is byte-identical to
+/// `FetchResp::to_bytes`, but the (possibly multi-megabyte) frame buffer
+/// is moved, never copied (see [`encode_get_elements_resp_parts`]). Keep
+/// in lockstep with the `wire_struct!` field order above.
+pub fn encode_fetch_resp_parts(resp: FetchResp) -> (Vec<u8>, Vec<u8>) {
+    let mut head = Writer::with_capacity(4 + 1 + 1 + 1 + 8 + 8 + 8 + 4 + 4 + 8 + 4);
+    head.put_u32(resp.num_elements);
+    resp.compressed.encode(&mut head);
+    resp.end_of_sequence.encode(&mut head);
+    resp.wrong_worker_for_round.encode(&mut head);
+    head.put_u64(resp.chunk_seq);
+    head.put_u64(resp.chunk_offset);
+    head.put_u64(resp.chunk_total_len);
+    head.put_u32(resp.ready_elements);
+    head.put_u32(resp.window_elements);
+    head.put_u64(resp.window_bytes);
+    head.put_u32(resp.frame.len() as u32); // Vec<u8> length prefix
+    (head.into_bytes(), resp.frame)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CloseStreamReq {
+    pub session_id: u64,
+}
+wire_struct!(CloseStreamReq { session_id });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CloseStreamResp {
+    /// False when the session was already gone (idempotent close).
+    pub closed: bool,
+}
+wire_struct!(CloseStreamResp { closed });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStatusReq {}
 wire_struct!(WorkerStatusReq {});
+
+/// Per-job sliding-window occupancy (ROADMAP window-sizing follow-up):
+/// how much of the shared stream each task currently retains.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobWindowStat {
+    pub job_id: u64,
+    pub elements: u64,
+    pub bytes: u64,
+}
+wire_struct!(JobWindowStat { job_id, elements, bytes });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStatusResp {
@@ -444,6 +660,9 @@ pub struct WorkerStatusResp {
     /// Elements a lagging consumer skipped because they were evicted
     /// before it arrived (the relaxed-visitation escape hatch).
     pub relaxed_skips: u64,
+    /// Per-job sliding-window occupancy (elements + bytes) for the
+    /// currently-live independent-mode tasks.
+    pub window_stats: Vec<JobWindowStat>,
 }
 wire_struct!(WorkerStatusResp {
     active_tasks,
@@ -452,7 +671,8 @@ wire_struct!(WorkerStatusResp {
     cache_hits,
     cache_evictions,
     shared_elements_served,
-    relaxed_skips
+    relaxed_skips,
+    window_stats
 });
 
 #[cfg(test)]
@@ -553,7 +773,130 @@ mod tests {
             cache_evictions: 2,
             shared_elements_served: 60,
             relaxed_skips: 3,
+            window_stats: vec![JobWindowStat { job_id: 1, elements: 5, bytes: 4096 }],
         });
+    }
+
+    #[test]
+    fn stream_session_messages_roundtrip() {
+        rt(OpenStreamReq {
+            job_id: 3,
+            client_id: 8,
+            protocol_version: STREAM_PROTOCOL_VERSION,
+            capabilities: stream_caps::ALL,
+            max_frame_len: 4 << 20,
+            consumer_index: None,
+        });
+        rt(OpenStreamReq {
+            job_id: 3,
+            client_id: 8,
+            protocol_version: 99,
+            capabilities: 0,
+            max_frame_len: 0,
+            consumer_index: Some(1),
+        });
+        rt(OpenStreamResp {
+            session_id: 17,
+            protocol_version: 1,
+            capabilities: stream_caps::DEFLATE | stream_caps::CHUNKED_TRANSFER,
+            max_frame_len: 1 << 20,
+            mode: ProcessingMode::Coordinated,
+        });
+        rt(FetchReq {
+            session_id: 17,
+            max_elements: 64,
+            max_bytes: 1 << 20,
+            poll_ms: 50,
+            compression: CompressionMode::Deflate,
+            round: Some(7),
+            chunk_seq: 0,
+            chunk_offset: 0,
+        });
+        rt(FetchReq {
+            session_id: 17,
+            max_elements: 0,
+            max_bytes: 0,
+            poll_ms: 0,
+            compression: CompressionMode::None,
+            round: None,
+            chunk_seq: 3,
+            chunk_offset: 9 << 20,
+        });
+        rt(CloseStreamReq { session_id: 17 });
+        rt(CloseStreamResp { closed: true });
+    }
+
+    #[test]
+    fn fetch_resp_roundtrip_variants() {
+        // Plain batch frame.
+        let frame = vec![vec![1u8, 2, 3], vec![4u8, 5]].to_bytes();
+        rt(FetchResp {
+            num_elements: 2,
+            compressed: false,
+            end_of_sequence: false,
+            wrong_worker_for_round: false,
+            chunk_seq: 0,
+            chunk_offset: 0,
+            chunk_total_len: 0,
+            ready_elements: 12,
+            window_elements: 7,
+            window_bytes: 9000,
+            frame,
+        });
+        // Continuation frame: raw byte range of an oversized element.
+        rt(FetchResp {
+            num_elements: 0,
+            compressed: false,
+            end_of_sequence: false,
+            wrong_worker_for_round: false,
+            chunk_seq: 2,
+            chunk_offset: 1 << 20,
+            chunk_total_len: 80 << 20,
+            ready_elements: 0,
+            window_elements: 1,
+            window_bytes: 80 << 20,
+            frame: vec![0xab; 64],
+        });
+        // Bare end-of-sequence.
+        rt(FetchResp {
+            num_elements: 0,
+            compressed: false,
+            end_of_sequence: true,
+            wrong_worker_for_round: false,
+            chunk_seq: 0,
+            chunk_offset: 0,
+            chunk_total_len: 0,
+            ready_elements: 0,
+            window_elements: 0,
+            window_bytes: 0,
+            frame: Vec::<Vec<u8>>::new().to_bytes(),
+        });
+    }
+
+    /// The worker's scatter-gather path hand-encodes the fetch-response
+    /// head; the concatenation must stay byte-identical to the
+    /// `wire_struct!` layout clients decode.
+    #[test]
+    fn fetch_resp_parts_match_struct_encoding() {
+        let frame = vec![vec![9u8, 8, 7], vec![6u8]].to_bytes();
+        let resp = FetchResp {
+            num_elements: 2,
+            compressed: true,
+            end_of_sequence: true,
+            wrong_worker_for_round: false,
+            chunk_seq: 4,
+            chunk_offset: 5,
+            chunk_total_len: 6,
+            ready_elements: 3,
+            window_elements: 2,
+            window_bytes: 1 << 30,
+            frame,
+        };
+        let (head, tail) = encode_fetch_resp_parts(resp.clone());
+        let mut joined = head;
+        joined.extend_from_slice(&tail);
+        assert_eq!(joined, resp.to_bytes());
+        assert_eq!(FetchResp::from_bytes(&joined).unwrap(), resp);
     }
 
     #[test]

@@ -58,10 +58,19 @@ pub struct WorkerConfig {
     pub serve_timeout: Duration,
 }
 
-/// GetElements defaults applied when a request leaves a knob at 0.
+/// GetElements/Fetch defaults applied when a request leaves a knob at 0.
 pub const DEFAULT_BATCH_MAX_ELEMENTS: u32 = 64;
 pub const DEFAULT_BATCH_MAX_BYTES: u64 = 4 << 20;
 pub const DEFAULT_BATCH_POLL_MS: u32 = 50;
+
+/// Slack reserved under a response-frame budget for the fixed-size
+/// response head, the RPC frame header, and per-element length prefixes.
+/// An element (or batch) may fill the negotiated budget minus this.
+pub const FRAME_HEADROOM: usize = 64 << 10;
+
+/// Smallest negotiable response-frame budget: below this, chunked
+/// transfer would degenerate into thousands of tiny continuation frames.
+pub const MIN_STREAM_FRAME_LEN: usize = 128 << 10;
 
 impl WorkerConfig {
     pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry) -> WorkerConfig {
@@ -99,6 +108,10 @@ struct SlidingCache {
     /// bump and diverge from the cache-internal stats).
     shared_ctr: Arc<crate::metrics::Counter>,
     skip_ctr: Arc<crate::metrics::Counter>,
+    /// Per-job window-occupancy gauges, updated on every push/trim so the
+    /// registry tracks live occupancy, not just status-poll snapshots.
+    win_elems_gauge: Arc<crate::metrics::Gauge>,
+    win_bytes_gauge: Arc<crate::metrics::Gauge>,
 }
 
 struct SlidingCacheState {
@@ -144,12 +157,18 @@ struct CacheStats {
     #[allow(dead_code)]
     produced: u64,
     window: usize,
+    window_bytes: usize,
     #[allow(dead_code)]
     shared_produced: u64,
     #[allow(dead_code)]
     skipped: u64,
 }
 
+/// Single-element cache read. The production paths all serve through
+/// [`SlidingCache::serve_batch`] now (the legacy RPCs are shims over the
+/// same machinery); this narrow probe survives for unit tests of cursor
+/// semantics.
+#[cfg(test)]
 enum CacheServe {
     Bytes(Arc<Vec<u8>>),
     /// Caller must produce a new element and call `push`.
@@ -157,8 +176,24 @@ enum CacheServe {
     Eos,
 }
 
+/// Outcome of a batched cache read ([`SlidingCache::serve_batch`]).
+enum BatchServe {
+    /// Up-to-budget batch (possibly empty) plus the end-of-sequence
+    /// verdict decided inside the critical section.
+    Batch(Vec<Arc<Vec<u8>>>, bool),
+    /// The first visible element exceeds the hard frame cap and the
+    /// caller can chunk: the cursor has advanced past it and the caller
+    /// now owns delivery (it must hold the bytes until the consumer
+    /// confirms receipt — see the stream-session chunk state).
+    Oversized(Arc<Vec<u8>>),
+    /// The first visible element exceeds the hard frame cap and the
+    /// caller cannot chunk: the cursor is NOT advanced, so the condition
+    /// is explicit and repeatable instead of a silent skip.
+    TooLarge(usize),
+}
+
 impl SlidingCache {
-    fn new(capacity: usize, byte_budget: usize, metrics: &Registry) -> SlidingCache {
+    fn new(capacity: usize, byte_budget: usize, job_id: u64, metrics: &Registry) -> SlidingCache {
         SlidingCache {
             state: Mutex::new(SlidingCacheState {
                 window: Default::default(),
@@ -178,6 +213,8 @@ impl SlidingCache {
             byte_budget: byte_budget.max(1),
             shared_ctr: metrics.counter("worker/shared_elements_served"),
             skip_ctr: metrics.counter("worker/relaxed_visitation_skips"),
+            win_elems_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_elements")),
+            win_bytes_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_bytes")),
         }
     }
 
@@ -203,6 +240,7 @@ impl SlidingCache {
     }
 
     /// Registered consumer count (shared streams have >= 2).
+    #[cfg(test)]
     fn num_consumers(&self) -> usize {
         self.state.lock().unwrap().cursors.len()
     }
@@ -227,6 +265,7 @@ impl SlidingCache {
     /// client starts at the oldest retained batch; a laggard whose cursor
     /// was evicted implicitly skips to the oldest retained batch (counted
     /// by [`SlidingCache::clamp_cursor`]).
+    #[cfg(test)]
     fn serve(&self, client: u64) -> CacheServe {
         let mut st = self.state.lock().unwrap();
         if st.removed.contains(&client) {
@@ -252,6 +291,7 @@ impl SlidingCache {
     /// blocked readers. Returns the registered consumer count at push
     /// time; the sharing ledger (cache stats + registry counter) is fed
     /// internally.
+    #[cfg(test)]
     fn push(&self, e: Element) -> usize {
         self.push_encoded(vec![Arc::new(e.to_bytes())])
     }
@@ -289,23 +329,43 @@ impl SlidingCache {
                 }
             }
         }
+        self.win_elems_gauge.set(st.window.len() as i64);
+        self.win_bytes_gauge.set(st.window_bytes as i64);
         self.cond.notify_all();
         consumers
+    }
+
+    /// Occupancy snapshot for backpressure hints: elements still unread
+    /// by `client`'s cursor, plus total window occupancy.
+    fn occupancy(&self, client: u64) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        let unread = match st.cursors.get(&client) {
+            Some(&cursor) => {
+                let idx = cursor.saturating_sub(st.base_seq) as usize;
+                st.window.len().saturating_sub(idx)
+            }
+            None => st.window.len(),
+        };
+        (unread, st.window.len(), st.window_bytes)
     }
 
     /// Batched variant of [`SlidingCache::serve`]: advance `client`'s
     /// cursor through up to `max_elements` / `max_bytes` of retained
     /// window in a single lock acquisition. Always returns at least one
     /// element if any is visible to the cursor, even when it alone
-    /// exceeds the byte budget.
+    /// exceeds the soft byte budget — *unless* it also exceeds
+    /// `hard_cap` (the response-frame ceiling), in which case the
+    /// outcome depends on `chunk_oversized`: the element is handed to
+    /// the caller for continuation-frame delivery (cursor advanced), or
+    /// reported [`BatchServe::TooLarge`] with the cursor untouched.
     ///
-    /// The second return is the end-of-sequence verdict, decided inside
-    /// the critical section: producer finished (`eos`), cursor consumed
-    /// the whole window, *and* `in_flight` is zero. The last condition is
-    /// what makes the verdict safe under sharing: a concurrent handler
-    /// that popped the producer channel keeps `in_flight` non-zero until
-    /// its `push_encoded` (which serializes with this lock) completes, so
-    /// a true verdict can never race past an unpublished element. Once
+    /// The end-of-sequence verdict is decided inside the critical
+    /// section: producer finished (`eos`), cursor consumed the whole
+    /// window, *and* `in_flight` is zero. The last condition is what
+    /// makes the verdict safe under sharing: a concurrent handler that
+    /// popped the producer channel keeps `in_flight` non-zero until its
+    /// `push_encoded` (which serializes with this lock) completes, so a
+    /// true verdict can never race past an unpublished element. Once
     /// `eos` is set no new increments happen, so a zero reading inside
     /// the lock is terminal. (Laggard skips are counted by
     /// [`SlidingCache::clamp_cursor`].)
@@ -314,12 +374,14 @@ impl SlidingCache {
         client: u64,
         max_elements: usize,
         max_bytes: usize,
+        hard_cap: usize,
+        chunk_oversized: bool,
         in_flight: &AtomicU64,
-    ) -> (Vec<Arc<Vec<u8>>>, bool) {
+    ) -> BatchServe {
         let mut st = self.state.lock().unwrap();
         if st.removed.contains(&client) {
             // Straggler RPC from a released consumer: its stream is over.
-            return (Vec::new(), true);
+            return BatchServe::Batch(Vec::new(), true);
         }
         let mut cursor = self.clamp_cursor(&mut st, client);
         let base = st.base_seq;
@@ -331,6 +393,21 @@ impl SlidingCache {
                 break;
             }
             let e = st.window[idx].clone(); // Arc bump, no copy
+            if e.len() > hard_cap {
+                // A single element no response frame can carry.
+                if !out.is_empty() {
+                    // Serve what fits; the oversized element leads the
+                    // next call, where the first-element handling below
+                    // chunks it (or errors).
+                    break;
+                }
+                if !chunk_oversized {
+                    return BatchServe::TooLarge(e.len());
+                }
+                st.cursors.insert(client, cursor + 1);
+                st.hits += 1;
+                return BatchServe::Oversized(e);
+            }
             if !out.is_empty() && bytes + e.len() > max_bytes {
                 break;
             }
@@ -342,7 +419,7 @@ impl SlidingCache {
         st.cursors.insert(client, cursor);
         let drained = (cursor - base) as usize >= st.window.len();
         let end = st.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
-        (out, end)
+        BatchServe::Batch(out, end)
     }
 
     fn set_eos(&self) {
@@ -358,6 +435,7 @@ impl SlidingCache {
             evictions: st.evictions,
             produced: st.produced,
             window: st.window.len(),
+            window_bytes: st.window_bytes,
             shared_produced: st.shared_produced,
             skipped: st.skipped,
         }
@@ -511,15 +589,59 @@ struct TaskRunner {
     busy_ns: Arc<AtomicU64>,
 }
 
+/// One negotiated client<->worker stream (the tentpole of the versioned
+/// data plane). Created by `OpenStream`, scoped to a (job, client) pair,
+/// and the unit of chunked-transfer state: an oversized element popped
+/// from the cache parks here until the consumer's acknowledged offset
+/// reaches its length, so the cache cursor advancing can never lose data.
+struct StreamSession {
+    job_id: u64,
+    client_id: u64,
+    /// Negotiated [`stream_caps`] intersection.
+    caps: u64,
+    /// Negotiated response-frame budget (bytes, <= `rpc::MAX_FRAME_LEN`).
+    max_frame: usize,
+    /// Coordinated mode: the consumer slot this session reads for.
+    consumer_index: Option<u32>,
+    /// Pending oversized element mid chunked transfer (independent and
+    /// coordinated alike), tagged with its session-unique `chunk_seq`:
+    /// progress lives client-side as the `(chunk_seq, chunk_offset)` it
+    /// sends back, and the seq tag keeps a retried ack from a previous,
+    /// already-released element from touching this one. The second field
+    /// is the next seq to assign.
+    chunk: Mutex<(Option<(u64, Arc<Vec<u8>>)>, u64)>,
+}
+
+impl StreamSession {
+    /// Largest element-byte payload a response frame may carry.
+    fn frame_budget(&self) -> usize {
+        self.max_frame.min(crate::rpc::MAX_FRAME_LEN).saturating_sub(FRAME_HEADROOM)
+    }
+
+    /// Park an oversized element for continuation-frame delivery and
+    /// return its freshly-assigned chunk seq.
+    fn park_chunk(&self, bytes: Arc<Vec<u8>>) -> u64 {
+        let mut st = self.chunk.lock().unwrap();
+        let seq = st.1;
+        st.1 += 1;
+        st.0 = Some((seq, bytes));
+        seq
+    }
+}
+
 struct WorkerShared {
     cfg: WorkerConfig,
     tasks: Mutex<HashMap<u64, Arc<TaskRunner>>>,
+    /// Live stream sessions by id; entries die with their task, with the
+    /// consumer's release, or via an explicit `CloseStream`.
+    sessions: Mutex<HashMap<u64, Arc<StreamSession>>>,
+    next_session_id: AtomicU64,
     metrics: Registry,
     pool: Arc<Pool>,
     dispatcher_addr: String,
     worker_id: AtomicU64,
     stop: AtomicBool,
-    /// Recycled encode buffers for GetElements frame assembly.
+    /// Recycled encode buffers for GetElements/Fetch frame assembly.
     frame_bufs: BufPool,
 }
 
@@ -538,6 +660,8 @@ impl Worker {
         let shared = Arc::new(WorkerShared {
             cfg,
             tasks: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            next_session_id: AtomicU64::new(1),
             metrics: Registry::new(),
             pool,
             dispatcher_addr: dispatcher_addr.to_string(),
@@ -672,14 +796,33 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                             }
                         }
                     }
+                    // A released consumer's stream sessions die with it; a
+                    // straggler Fetch then errors instead of resurrecting
+                    // chunk state for a departed client.
+                    shared
+                        .sessions
+                        .lock()
+                        .unwrap()
+                        .retain(|_, s| !(s.job_id == cu.job_id && s.client_id == cu.client_id));
                 }
                 if !resp.removed_tasks.is_empty() {
                     let mut tasks = shared.tasks.lock().unwrap();
-                    for id in resp.removed_tasks {
-                        if let Some(t) = tasks.remove(&id) {
+                    for id in &resp.removed_tasks {
+                        if let Some(t) = tasks.remove(id) {
                             t.stop.store(true, Ordering::SeqCst);
+                            if let TaskState::Independent { cache, .. } = &t.state {
+                                // The job is gone: zero its occupancy
+                                // gauges so the registry doesn't report a
+                                // phantom window forever.
+                                cache.win_elems_gauge.set(0);
+                                cache.win_bytes_gauge.set(0);
+                            }
                         }
                     }
+                    drop(tasks);
+                    let removed: std::collections::HashSet<u64> =
+                        resp.removed_tasks.iter().copied().collect();
+                    shared.sessions.lock().unwrap().retain(|_, s| !removed.contains(&s.job_id));
                 }
             }
             Err(_) => {
@@ -727,6 +870,7 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
             let cache = Arc::new(SlidingCache::new(
                 shared.cfg.cache_window,
                 shared.cfg.cache_window_bytes,
+                task.job_id,
                 &shared.metrics,
             ));
             // Register the consumers attached at task-creation time so
@@ -855,7 +999,7 @@ fn spawn_producer(
         .ok();
 }
 
-/// Data-server RPC demux. `GetElements` responses come back as
+/// Data-server RPC demux. `Fetch`/`GetElements` responses come back as
 /// `(head, frame)` write slices so the element frame flows to the socket
 /// without an intermediate payload copy; everything else is head-only.
 fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResult<RespBody> {
@@ -868,11 +1012,173 @@ fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResu
             let req = GetElementsReq::from_bytes(payload)?;
             get_elements(shared, req)
         }
+        worker_methods::OPEN_STREAM => {
+            let req = OpenStreamReq::from_bytes(payload)?;
+            Ok(open_stream(shared, req)?.to_bytes().into())
+        }
+        worker_methods::FETCH => {
+            let req = FetchReq::from_bytes(payload)?;
+            fetch(shared, req)
+        }
+        worker_methods::CLOSE_STREAM => {
+            let req = CloseStreamReq::from_bytes(payload)?;
+            let closed = shared.sessions.lock().unwrap().remove(&req.session_id).is_some();
+            if closed {
+                shared.metrics.counter("worker/stream_sessions_closed").inc();
+            }
+            Ok(CloseStreamResp { closed }.to_bytes().into())
+        }
         worker_methods::WORKER_STATUS => {
             let _ = WorkerStatusReq::from_bytes(payload)?;
             Ok(status(shared).to_bytes().into())
         }
         other => Err(ServiceError::Other(format!("worker: unknown method {other}"))),
+    }
+}
+
+/// Stream-session handshake (the tentpole's entry point): validate the
+/// job, negotiate `min(version)` / capability intersection / frame
+/// budget, register the consumer's cursor, and mint a session id.
+fn open_stream(shared: &Arc<WorkerShared>, req: OpenStreamReq) -> ServiceResult<OpenStreamResp> {
+    if req.protocol_version == 0 {
+        return Err(ServiceError::Other(
+            "unsupported stream protocol version 0 (this worker speaks >= 1)".into(),
+        ));
+    }
+    let runner = shared
+        .tasks
+        .lock()
+        .unwrap()
+        .get(&req.job_id)
+        .cloned()
+        .ok_or(ServiceError::UnknownJob(req.job_id))?;
+    let mode = match &runner.state {
+        TaskState::Independent { cache, .. } => {
+            // The handshake is the session-plane consumer registration
+            // (the legacy lazy-on-first-fetch path still exists for old
+            // clients).
+            cache.register_consumer(req.client_id);
+            ProcessingMode::Independent
+        }
+        TaskState::Coordinated(_) => ProcessingMode::Coordinated,
+    };
+    let client_max = if req.max_frame_len == 0 {
+        crate::rpc::MAX_FRAME_LEN
+    } else {
+        req.max_frame_len as usize
+    };
+    let session = Arc::new(StreamSession {
+        job_id: req.job_id,
+        client_id: req.client_id,
+        caps: req.capabilities & stream_caps::ALL,
+        max_frame: client_max.clamp(MIN_STREAM_FRAME_LEN, crate::rpc::MAX_FRAME_LEN),
+        consumer_index: req.consumer_index,
+        chunk: Mutex::new((None, 1)),
+    });
+    let session_id = shared.next_session_id.fetch_add(1, Ordering::SeqCst);
+    let resp = OpenStreamResp {
+        session_id,
+        protocol_version: req.protocol_version.min(STREAM_PROTOCOL_VERSION),
+        capabilities: session.caps,
+        max_frame_len: session.max_frame as u64,
+        mode,
+    };
+    shared.sessions.lock().unwrap().insert(session_id, session);
+    shared.metrics.counter("worker/stream_sessions_opened").inc();
+    Ok(resp)
+}
+
+/// Budget/behavior knobs for one pass through the unified drain loop
+/// ([`drain_and_serve`]). The legacy RPCs and the session `Fetch` differ
+/// only in these values — they share the machinery.
+struct FetchParams {
+    max_elements: usize,
+    max_bytes: usize,
+    poll: Duration,
+    /// Response-frame ceiling a single element may not exceed.
+    hard_cap: usize,
+    /// Whether an over-cap element is handed back for chunked delivery
+    /// (sessions with `CHUNKED_TRANSFER`) or errors (legacy paths).
+    chunk_oversized: bool,
+}
+
+/// Outcome of one drain pass.
+enum Drained {
+    Batch { batch: Vec<Arc<Vec<u8>>>, eos: bool },
+    /// Over-cap element popped for continuation-frame delivery.
+    Oversized(Arc<Vec<u8>>),
+}
+
+/// The canonical independent-mode serve path (§3.1 line-rate data
+/// plane), shared by `Fetch`, `GetElements`, and independent
+/// `GetElement`: move everything the producer has ready into the cache,
+/// then advance this client's cursor through up to
+/// `max_elements`/`max_bytes` of window in one lock acquisition. When
+/// nothing is ready, long-poll up to `poll` instead of bouncing an empty
+/// response straight back.
+fn drain_and_serve(
+    cache: &Arc<SlidingCache>,
+    rx: &chan::Receiver<Element>,
+    in_flight: &Arc<AtomicU64>,
+    client_id: u64,
+    p: &FetchParams,
+) -> ServiceResult<Drained> {
+    let deadline = Instant::now() + p.poll;
+    loop {
+        // Drain the producer channel into the cache: encode outside the
+        // lock, bulk-insert under one acquisition, and only then release
+        // the in-flight accounting (publish before decrement).
+        let mut fresh = Vec::new();
+        while fresh.len() < p.max_elements {
+            match rx.try_recv() {
+                Some(e) => fresh.push(Arc::new(e.to_bytes())),
+                None => break,
+            }
+        }
+        let drained = fresh.len() as u64;
+        if drained > 0 {
+            cache.push_encoded(fresh);
+            in_flight.fetch_sub(drained, Ordering::SeqCst);
+        }
+
+        match cache.serve_batch(
+            client_id,
+            p.max_elements,
+            p.max_bytes,
+            p.hard_cap,
+            p.chunk_oversized,
+            in_flight,
+        ) {
+            BatchServe::Oversized(bytes) => return Ok(Drained::Oversized(bytes)),
+            BatchServe::TooLarge(bytes) => {
+                return Err(ServiceError::ElementTooLarge { bytes, cap: p.hard_cap })
+            }
+            BatchServe::Batch(batch, end) => {
+                if !batch.is_empty() || end {
+                    return Ok(Drained::Batch { batch, eos: end });
+                }
+            }
+        }
+        // Not the end: production is pending, or a concurrent handler
+        // still holds popped-but-unpublished elements. Long-poll on the
+        // producer channel instead of bouncing an empty response.
+        let wait = deadline.saturating_duration_since(Instant::now());
+        if wait.is_zero() {
+            return Ok(Drained::Batch { batch: Vec::new(), eos: false }); // poll window expired
+        }
+        match rx.recv_timeout(wait.min(Duration::from_millis(50))) {
+            Ok(Some(e)) => {
+                cache.push_encoded(vec![Arc::new(e.to_bytes())]);
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            Ok(None) => {}
+            Err(_) => {
+                // Channel closed: recv returns instantly, so pace the
+                // loop while a concurrent handler finishes publishing.
+                cache.set_eos();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
     }
 }
 
@@ -895,10 +1201,34 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
             ))
         }
         (TaskState::Independent { cache, rx, in_flight }, _, _) => {
-            serve_independent(cache, rx, in_flight, req.client_id, shared.cfg.serve_timeout)
+            // Legacy single-element shim: the same drain loop as the
+            // session plane, with a one-element budget.
+            let p = FetchParams {
+                max_elements: 1,
+                max_bytes: usize::MAX,
+                poll: shared.cfg.serve_timeout,
+                // Same conservative cap as the legacy batched shim: the
+                // response wraps the element (and may deflate it, which
+                // can expand), so leave the transport cap real margin.
+                hard_cap: crate::rpc::MAX_FRAME_LEN / 2,
+                chunk_oversized: false,
+            };
+            match drain_and_serve(cache, rx, in_flight, req.client_id, &p)? {
+                Drained::Batch { mut batch, eos } => {
+                    let element = batch.pop().map(|b| b.as_ref().clone());
+                    GetElementResp {
+                        // Deliver a final element before announcing the
+                        // end: the contract is "eos implies no element".
+                        end_of_sequence: eos && element.is_none(),
+                        element,
+                        compressed: false,
+                        wrong_worker_for_round: false,
+                    }
+                }
+                Drained::Oversized(_) => unreachable!("chunk_oversized = false"),
+            }
         }
     };
-
     if req.compression == CompressionMode::Deflate {
         if let Some(bytes) = resp.element.take() {
             resp.element = Some(deflate(&bytes)?);
@@ -909,11 +1239,50 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
     Ok(resp)
 }
 
-/// Batched streaming drain (§3.1 line-rate data plane): move everything
-/// the producer has ready into the cache, then advance this client's
-/// cursor through up to `max_elements`/`max_bytes` of window in one lock
-/// acquisition. When nothing is ready, long-poll up to `poll_ms` instead
-/// of bouncing an empty response straight back.
+/// Assemble a batch into a response frame (a wire-encoded `Vec<Vec<u8>>`)
+/// in a recycled buffer; compress the whole frame at once (when asked)
+/// so codec overhead amortizes across the batch. Empty frames skip the
+/// pool: taking a high-water-sized buffer for a 4-byte count would waste
+/// a large allocation per empty response. Returns `(frame, compressed)`.
+fn assemble_batch_frame(
+    shared: &Arc<WorkerShared>,
+    batch: &[Arc<Vec<u8>>],
+    want_compress: bool,
+) -> (Vec<u8>, bool) {
+    if batch.is_empty() {
+        return (0u32.to_le_bytes().to_vec(), false);
+    }
+    let mut w = Writer::from_vec(shared.frame_bufs.take());
+    w.put_u32(batch.len() as u32);
+    for bytes in batch {
+        w.put_bytes(bytes);
+    }
+    let raw_len = w.len();
+    let z = want_compress.then(|| crate::wire::compress(w.as_slice())).filter(|z| z.len() < raw_len);
+    match z {
+        Some(z) => {
+            shared.metrics.counter("worker/compression_bytes_saved").add((raw_len - z.len()) as u64);
+            // The scratch buffer's job is done: recycle it.
+            shared.frame_bufs.put(w.into_bytes());
+            (z, true)
+        }
+        None => {
+            // Zero-copy: the frame leaves as the response tail and cannot
+            // come back to the pool — record the frame *size* (not the
+            // buffer's possibly-doubled capacity) so future takes
+            // pre-size to real frames and assembly stays one allocation.
+            shared.frame_bufs.record_capacity(raw_len);
+            (w.into_bytes(), false)
+        }
+    }
+}
+
+/// Legacy batched shim: routes into the same drain machinery as the
+/// session `Fetch`, minus negotiation — so it cannot chunk, and an
+/// element over the (conservative, half-transport-cap) frame budget
+/// returns an explicit `element too large` error with the cursor
+/// untouched instead of silently skipping (ROADMAP "oversized single
+/// elements").
 fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResult<RespBody> {
     let runner = shared
         .tasks
@@ -933,106 +1302,28 @@ fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResul
             ))
         }
     };
-    let max_elements =
-        (if req.max_elements == 0 { DEFAULT_BATCH_MAX_ELEMENTS } else { req.max_elements }) as usize;
-    // Clamp the byte budget well under the transport frame cap: the cursor
-    // advances under the cache lock *before* the response is written, so a
-    // frame rejected for exceeding `MAX_FRAME_LEN` would silently lose the
-    // batch. Half the cap leaves ample headroom for per-element length
-    // prefixes and the response head.
-    let max_bytes = (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes })
-        .min(crate::rpc::MAX_FRAME_LEN as u64 / 2) as usize;
+    // Budget clamped well under the transport frame cap: the cursor
+    // advances under the cache lock *before* the response is written, so
+    // an over-cap frame must be impossible by construction here.
+    let hard_cap = crate::rpc::MAX_FRAME_LEN / 2;
     let poll_ms = if req.poll_ms == 0 { DEFAULT_BATCH_POLL_MS } else { req.poll_ms };
-    let poll = Duration::from_millis(poll_ms as u64).min(shared.cfg.serve_timeout);
-    let deadline = Instant::now() + poll;
-
-    let mut end_of_sequence = false;
-    let batch: Vec<Arc<Vec<u8>>> = loop {
-        // Drain the producer channel into the cache: encode outside the
-        // lock, bulk-insert under one acquisition, and only then release
-        // the in-flight accounting (publish before decrement).
-        let mut fresh = Vec::new();
-        while fresh.len() < max_elements {
-            match rx.try_recv() {
-                Some(e) => fresh.push(Arc::new(e.to_bytes())),
-                None => break,
-            }
-        }
-        let drained = fresh.len() as u64;
-        if drained > 0 {
-            cache.push_encoded(fresh);
-            in_flight.fetch_sub(drained, Ordering::SeqCst);
-        }
-
-        let (batch, end) = cache.serve_batch(req.client_id, max_elements, max_bytes, &in_flight);
-        if !batch.is_empty() {
-            end_of_sequence = end;
-            break batch;
-        }
-        if end {
-            end_of_sequence = true;
-            break Vec::new();
-        }
-        // Not the end: production is pending, or a concurrent handler
-        // still holds popped-but-unpublished elements. Long-poll on the
-        // producer channel instead of bouncing an empty response.
-        let wait = deadline.saturating_duration_since(Instant::now());
-        if wait.is_zero() {
-            break Vec::new(); // empty long-poll window expired
-        }
-        match rx.recv_timeout(wait.min(Duration::from_millis(50))) {
-            Ok(Some(e)) => {
-                cache.push_encoded(vec![Arc::new(e.to_bytes())]);
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-            }
-            Ok(None) => {}
-            Err(_) => {
-                // Channel closed: recv returns instantly, so pace the
-                // loop while a concurrent handler finishes publishing.
-                cache.set_eos();
-                std::thread::sleep(Duration::from_millis(1));
-            }
-        }
+    let p = FetchParams {
+        max_elements: (if req.max_elements == 0 { DEFAULT_BATCH_MAX_ELEMENTS } else { req.max_elements })
+            as usize,
+        max_bytes: (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes })
+            .min(hard_cap as u64) as usize,
+        poll: Duration::from_millis(poll_ms as u64).min(shared.cfg.serve_timeout),
+        hard_cap,
+        chunk_oversized: false,
     };
+    let (batch, end_of_sequence) =
+        match drain_and_serve(&cache, &rx, &in_flight, req.client_id, &p)? {
+            Drained::Batch { batch, eos } => (batch, eos),
+            Drained::Oversized(_) => unreachable!("chunk_oversized = false"),
+        };
 
-    // Assemble the frame in a recycled buffer; compress the whole frame
-    // at once so codec overhead amortizes across the batch. Empty frames
-    // (expired long-polls, bare end-of-sequence) skip the pool: taking a
-    // high-water-sized buffer for a 4-byte count would waste a large
-    // allocation per empty response.
-    let (frame, compressed) = if batch.is_empty() {
-        (0u32.to_le_bytes().to_vec(), false)
-    } else {
-        let mut w = Writer::from_vec(shared.frame_bufs.take());
-        w.put_u32(batch.len() as u32);
-        for bytes in &batch {
-            w.put_bytes(bytes);
-        }
-        let raw_len = w.len();
-        let z = (req.compression == CompressionMode::Deflate)
-            .then(|| crate::wire::compress(w.as_slice()))
-            .filter(|z| z.len() < raw_len);
-        match z {
-            Some(z) => {
-                shared
-                    .metrics
-                    .counter("worker/compression_bytes_saved")
-                    .add((raw_len - z.len()) as u64);
-                // The scratch buffer's job is done: recycle it.
-                shared.frame_bufs.put(w.into_bytes());
-                (z, true)
-            }
-            None => {
-                // Zero-copy: the frame leaves as the response tail and
-                // cannot come back to the pool — record the frame *size*
-                // (not the buffer's possibly-doubled capacity) so future
-                // takes pre-size to real frames and assembly stays one
-                // allocation.
-                shared.frame_bufs.record_capacity(raw_len);
-                (w.into_bytes(), false)
-            }
-        }
-    };
+    let (frame, compressed) =
+        assemble_batch_frame(shared, &batch, req.compression == CompressionMode::Deflate);
 
     let calls = shared.metrics.counter("worker/get_elements_calls");
     calls.inc();
@@ -1050,100 +1341,167 @@ fn get_elements(shared: &Arc<WorkerShared>, req: GetElementsReq) -> ServiceResul
     Ok(RespBody::parts(head, tail))
 }
 
-fn serve_independent(
-    cache: &Arc<SlidingCache>,
-    rx: &chan::Receiver<Element>,
-    in_flight: &Arc<AtomicU64>,
-    client_id: u64,
-    timeout: Duration,
-) -> GetElementResp {
-    let deadline = Instant::now() + timeout;
-    let push_one = |e: Element| {
-        cache.push(e);
-        in_flight.fetch_sub(1, Ordering::SeqCst);
+/// Session-scoped `Fetch`: the canonical data-plane RPC. Independent
+/// sessions drain batches (with continuation frames for oversized
+/// elements); coordinated sessions read one round slot per call (§3.6).
+/// Every response carries backpressure hints for the client's AIMD loop.
+fn fetch(shared: &Arc<WorkerShared>, req: FetchReq) -> ServiceResult<RespBody> {
+    let session = shared
+        .sessions
+        .lock()
+        .unwrap()
+        .get(&req.session_id)
+        .cloned()
+        .ok_or_else(|| {
+            ServiceError::Other(format!(
+                "unknown stream session {} (expired or never opened); re-handshake with OpenStream",
+                req.session_id
+            ))
+        })?;
+    let runner = shared
+        .tasks
+        .lock()
+        .unwrap()
+        .get(&session.job_id)
+        .cloned()
+        .ok_or(ServiceError::UnknownJob(session.job_id))?;
+    let frame_budget = session.frame_budget();
+    let poll_ms = if req.poll_ms == 0 { DEFAULT_BATCH_POLL_MS } else { req.poll_ms };
+    let poll = Duration::from_millis(poll_ms as u64).min(shared.cfg.serve_timeout);
+    let chunked = session.caps & stream_caps::CHUNKED_TRANSFER != 0;
+    let want_compress =
+        req.compression == CompressionMode::Deflate && session.caps & stream_caps::DEFLATE != 0;
+
+    let mut resp = FetchResp {
+        num_elements: 0,
+        compressed: false,
+        end_of_sequence: false,
+        wrong_worker_for_round: false,
+        chunk_seq: 0,
+        chunk_offset: 0,
+        chunk_total_len: 0,
+        ready_elements: 0,
+        window_elements: 0,
+        window_bytes: 0,
+        frame: Vec::new(),
     };
-    loop {
-        match cache.serve(client_id) {
-            CacheServe::Bytes(b) => {
-                return GetElementResp {
-                    element: Some(b.as_ref().clone()),
-                    compressed: false,
-                    end_of_sequence: false,
-                    wrong_worker_for_round: false,
-                }
+
+    // A pending oversized element always goes first: the client drives
+    // delivery by echoing back how much it has (`chunk_seq` +
+    // `chunk_offset`), which makes continuation frames idempotent under
+    // RPC retries. Only once an offset *tagged with the matching seq*
+    // reaches the total length is the element released; an offset tagged
+    // with any other seq is about a previous, already-released element
+    // (a retried ack) and restarts delivery of this one from 0 instead.
+    {
+        let mut pending = session.chunk.lock().unwrap();
+        if let Some((seq, bytes)) = pending.0.as_ref() {
+            let start =
+                if req.chunk_seq == *seq { req.chunk_offset as usize } else { 0 };
+            if start < bytes.len() {
+                let end = (start + frame_budget).min(bytes.len());
+                resp.chunk_seq = *seq;
+                resp.chunk_offset = start as u64;
+                resp.chunk_total_len = bytes.len() as u64;
+                resp.frame = bytes[start..end].to_vec();
+                shared.metrics.counter("worker/chunk_frames_served").inc();
+                return finish_fetch(shared, &session, &runner, resp);
             }
-            CacheServe::Eos => {
-                // The producer sets EOS after its last send; elements may
-                // still be sitting in the channel — drain them first.
-                if let Some(e) = rx.try_recv() {
-                    push_one(e);
-                    continue;
-                }
-                if in_flight.load(Ordering::SeqCst) != 0 {
-                    // A concurrent handler popped but has not published
-                    // yet; declaring EOS now would truncate the stream.
-                    if Instant::now() >= deadline {
-                        return GetElementResp {
-                            element: None,
-                            compressed: false,
-                            end_of_sequence: false,
-                            wrong_worker_for_round: false,
-                        };
+            // Fully delivered and acked: release it and serve normally.
+            shared.metrics.counter("worker/chunked_elements_served").inc();
+            pending.0 = None;
+        }
+    }
+
+    match &runner.state {
+        TaskState::Coordinated(coord) => {
+            let round = req.round.ok_or_else(|| {
+                ServiceError::Other("coordinated Fetch requires a round".into())
+            })?;
+            let ci = session.consumer_index.ok_or_else(|| {
+                ServiceError::Other(
+                    "coordinated session opened without a consumer_index".into(),
+                )
+            })?;
+            let r = coord.take(round, ci as usize, poll)?;
+            resp.wrong_worker_for_round = r.wrong_worker_for_round;
+            resp.end_of_sequence = r.end_of_sequence;
+            if let Some(bytes) = r.element {
+                if bytes.len() > frame_budget {
+                    if !chunked {
+                        return Err(ServiceError::ElementTooLarge {
+                            bytes: bytes.len(),
+                            cap: frame_budget,
+                        });
                     }
-                    std::thread::sleep(Duration::from_millis(1));
-                    continue;
+                    let bytes = Arc::new(bytes);
+                    resp.chunk_seq = session.park_chunk(bytes.clone());
+                    resp.chunk_total_len = bytes.len() as u64;
+                    resp.frame = bytes[..frame_budget.min(bytes.len())].to_vec();
+                    shared.metrics.counter("worker/chunk_frames_served").inc();
+                } else {
+                    let batch = [Arc::new(bytes)];
+                    let (frame, compressed) = assemble_batch_frame(shared, &batch, want_compress);
+                    resp.num_elements = 1;
+                    resp.frame = frame;
+                    resp.compressed = compressed;
                 }
-                // Quiescent (eos observed, nothing unpublished — and no
-                // new elements can appear after eos). The Eos verdict
-                // above may predate a concurrent publish, so take one
-                // authoritative re-look at the final cache state.
-                match cache.serve(client_id) {
-                    CacheServe::Bytes(b) => {
-                        return GetElementResp {
-                            element: Some(b.as_ref().clone()),
-                            compressed: false,
-                            end_of_sequence: false,
-                            wrong_worker_for_round: false,
-                        }
-                    }
-                    _ => {
-                        return GetElementResp {
-                            element: None,
-                            compressed: false,
-                            end_of_sequence: true,
-                            wrong_worker_for_round: false,
-                        }
-                    }
-                }
+            } else {
+                resp.frame = 0u32.to_le_bytes().to_vec();
             }
-            CacheServe::NeedProduce => {
-                // Front client: pull a fresh element from the producer.
-                let wait = deadline.saturating_duration_since(Instant::now());
-                if wait.is_zero() {
-                    return GetElementResp {
-                        element: None,
-                        compressed: false,
-                        end_of_sequence: false,
-                        wrong_worker_for_round: false,
-                    };
+        }
+        TaskState::Independent { cache, rx, in_flight } => {
+            let p = FetchParams {
+                max_elements: (if req.max_elements == 0 {
+                    DEFAULT_BATCH_MAX_ELEMENTS
+                } else {
+                    req.max_elements
+                }) as usize,
+                max_bytes: (if req.max_bytes == 0 { DEFAULT_BATCH_MAX_BYTES } else { req.max_bytes })
+                    .min(frame_budget as u64) as usize,
+                poll,
+                hard_cap: frame_budget,
+                chunk_oversized: chunked,
+            };
+            match drain_and_serve(cache, rx, in_flight, session.client_id, &p)? {
+                Drained::Batch { batch, eos } => {
+                    let (frame, compressed) = assemble_batch_frame(shared, &batch, want_compress);
+                    resp.num_elements = batch.len() as u32;
+                    resp.frame = frame;
+                    resp.compressed = compressed;
+                    resp.end_of_sequence = eos;
+                    let served = shared.metrics.counter("worker/batched_elements_served");
+                    served.add(batch.len() as u64);
                 }
-                match rx.recv_timeout(wait.min(Duration::from_millis(100))) {
-                    Ok(Some(e)) => push_one(e),
-                    Ok(None) => {
-                        if Instant::now() >= deadline {
-                            return GetElementResp {
-                                element: None,
-                                compressed: false,
-                                end_of_sequence: false,
-                                wrong_worker_for_round: false,
-                            };
-                        }
-                    }
-                    Err(_) => cache.set_eos(),
+                Drained::Oversized(bytes) => {
+                    resp.chunk_seq = session.park_chunk(bytes.clone());
+                    resp.chunk_total_len = bytes.len() as u64;
+                    resp.frame = bytes[..frame_budget.min(bytes.len())].to_vec();
+                    shared.metrics.counter("worker/chunk_frames_served").inc();
                 }
             }
         }
     }
+    finish_fetch(shared, &session, &runner, resp)
+}
+
+/// Attach backpressure hints, bump counters, and emit the `(head, frame)`
+/// scatter-gather response body.
+fn finish_fetch(
+    shared: &Arc<WorkerShared>,
+    session: &StreamSession,
+    runner: &TaskRunner,
+    mut resp: FetchResp,
+) -> ServiceResult<RespBody> {
+    if let TaskState::Independent { cache, rx, .. } = &runner.state {
+        let (unread, win, win_bytes) = cache.occupancy(session.client_id);
+        resp.ready_elements = (unread + rx.len()).min(u32::MAX as usize) as u32;
+        resp.window_elements = win.min(u32::MAX as usize) as u32;
+        resp.window_bytes = win_bytes as u64;
+    }
+    shared.metrics.counter("worker/fetch_calls").inc();
+    let (head, tail) = encode_fetch_resp_parts(resp);
+    Ok(RespBody::parts(head, tail))
 }
 
 fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
@@ -1151,14 +1509,21 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
     let mut buffered = 0u64;
     let mut hits = 0u64;
     let mut evictions = 0u64;
-    for t in tasks.values() {
+    let mut window_stats = Vec::new();
+    for (job_id, t) in tasks.iter() {
         if let TaskState::Independent { cache, .. } = &t.state {
             let s = cache.stats();
             hits += s.hits;
             evictions += s.evictions;
             buffered += s.window as u64;
+            window_stats.push(JobWindowStat {
+                job_id: *job_id,
+                elements: s.window as u64,
+                bytes: s.window_bytes as u64,
+            });
         }
     }
+    window_stats.sort_by_key(|s| s.job_id);
     WorkerStatusResp {
         active_tasks: tasks.keys().copied().collect(),
         buffered_elements: buffered,
@@ -1170,6 +1535,7 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
         // unlike the live-cache sums above, which reflect current tasks.
         shared_elements_served: shared.metrics.counter("worker/shared_elements_served").get(),
         relaxed_skips: shared.metrics.counter("worker/relaxed_visitation_skips").get(),
+        window_stats,
     }
 }
 
@@ -1198,11 +1564,26 @@ mod tests {
     /// assert the registry-side ledger the cache feeds.
     fn cache(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
         let m = Registry::new();
-        (SlidingCache::new(capacity, byte_budget, &m), m)
+        (SlidingCache::new(capacity, byte_budget, 0, &m), m)
     }
 
     fn skips_of(m: &Registry) -> u64 {
         m.counter("worker/relaxed_visitation_skips").get()
+    }
+
+    /// serve_batch with no frame cap (the common-case shape most tests
+    /// exercise): panics on the oversize outcomes.
+    fn sb(
+        c: &SlidingCache,
+        client: u64,
+        max_elements: usize,
+        max_bytes: usize,
+        in_flight: &AtomicU64,
+    ) -> (Vec<Arc<Vec<u8>>>, bool) {
+        match c.serve_batch(client, max_elements, max_bytes, usize::MAX, false, in_flight) {
+            BatchServe::Batch(b, eos) => (b, eos),
+            _ => panic!("unexpected oversize outcome with an unbounded cap"),
+        }
     }
 
     #[test]
@@ -1314,7 +1695,7 @@ mod tests {
         c.push_encoded((0..6).map(|i| Arc::new(elem(i).to_bytes())).collect());
         // Window retains {4, 5}; consumer 5 fell off the back and must
         // skip 0..=3 (4 elements) — the relaxed-visitation escape hatch.
-        let (batch, _) = c.serve_batch(5, 64, usize::MAX, &AtomicU64::new(0));
+        let (batch, _) = sb(&c, 5, 64, usize::MAX, &AtomicU64::new(0));
         assert_eq!(batch.len(), 2);
         let e = Element::from_bytes(&batch[0]).unwrap();
         assert_eq!(e.tensors[0].as_i32(), vec![4]);
@@ -1355,14 +1736,14 @@ mod tests {
             c.push(elem(i));
         }
         // Consumer 1 reads two, then releases mid-stream.
-        let (batch, _) = c.serve_batch(1, 2, usize::MAX, &AtomicU64::new(0));
+        let (batch, _) = sb(&c, 1, 2, usize::MAX, &AtomicU64::new(0));
         assert_eq!(batch.len(), 2);
         assert!(c.remove_consumer(1));
         assert!(!c.remove_consumer(1), "double release is a no-op");
         // A straggler RPC racing the detach gets end-of-sequence; it must
         // not resurrect the cursor (a phantom consumer would permanently
         // inflate the sharing ledger).
-        let (batch, end) = c.serve_batch(1, 64, usize::MAX, &AtomicU64::new(0));
+        let (batch, end) = sb(&c, 1, 64, usize::MAX, &AtomicU64::new(0));
         assert!(batch.is_empty() && end);
         assert!(matches!(c.serve(1), CacheServe::Eos));
         c.register_consumer(1);
@@ -1374,7 +1755,7 @@ mod tests {
         let quiet = AtomicU64::new(0);
         let (c, _m) = cache(16, usize::MAX);
         c.push_encoded((0..10).map(|i| Arc::new(elem(i).to_bytes())).collect());
-        let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        let (batch, eos) = sb(&c, 1, 64, usize::MAX, &quiet);
         assert_eq!(batch.len(), 10);
         assert!(!eos, "producer not finished");
         for (i, b) in batch.iter().enumerate() {
@@ -1382,13 +1763,13 @@ mod tests {
             assert_eq!(e.tensors[0].as_i32(), vec![i as i32]);
         }
         // Cursor advanced: nothing left, still not EOS.
-        let (rest, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        let (rest, eos) = sb(&c, 1, 64, usize::MAX, &quiet);
         assert!(rest.is_empty() && !eos);
         c.set_eos();
-        let (_, eos) = c.serve_batch(1, 64, usize::MAX, &quiet);
+        let (_, eos) = sb(&c, 1, 64, usize::MAX, &quiet);
         assert!(eos);
         // A second client replays the shared window independently.
-        let (batch2, _) = c.serve_batch(2, 4, usize::MAX, &quiet);
+        let (batch2, _) = sb(&c, 2, 4, usize::MAX, &quiet);
         assert_eq!(batch2.len(), 4);
     }
 
@@ -1400,11 +1781,11 @@ mod tests {
         let in_flight = AtomicU64::new(1);
         let (c, _m) = cache(4, usize::MAX);
         c.set_eos();
-        let (batch, eos) = c.serve_batch(1, 64, usize::MAX, &in_flight);
+        let (batch, eos) = sb(&c, 1, 64, usize::MAX, &in_flight);
         assert!(batch.is_empty());
         assert!(!eos, "unpublished element must block EOS");
         in_flight.store(0, Ordering::SeqCst);
-        let (_, eos) = c.serve_batch(1, 64, usize::MAX, &in_flight);
+        let (_, eos) = sb(&c, 1, 64, usize::MAX, &in_flight);
         assert!(eos);
     }
 
@@ -1413,14 +1794,14 @@ mod tests {
         let quiet = AtomicU64::new(0);
         let (c, _m) = cache(32, usize::MAX);
         c.push_encoded((0..8).map(|i| Arc::new(elem(i).to_bytes())).collect());
-        let (batch, _) = c.serve_batch(1, 3, usize::MAX, &quiet);
+        let (batch, _) = sb(&c, 1, 3, usize::MAX, &quiet);
         assert_eq!(batch.len(), 3, "element cap");
         let elem_len = batch[0].len();
         // Byte budget allows exactly two more.
-        let (batch, _) = c.serve_batch(1, 64, 2 * elem_len, &quiet);
+        let (batch, _) = sb(&c, 1, 64, 2 * elem_len, &quiet);
         assert_eq!(batch.len(), 2, "byte cap");
         // A budget smaller than one element still returns one (progress).
-        let (batch, _) = c.serve_batch(1, 64, 1, &quiet);
+        let (batch, _) = sb(&c, 1, 64, 1, &quiet);
         assert_eq!(batch.len(), 1);
     }
 
@@ -1430,11 +1811,69 @@ mod tests {
         let (c, m) = cache(2, usize::MAX);
         c.push_encoded((0..5).map(|i| Arc::new(elem(i).to_bytes())).collect());
         // Window retains {3, 4}; a fresh client starts there.
-        let (batch, _) = c.serve_batch(9, 64, usize::MAX, &quiet);
+        let (batch, _) = sb(&c, 9, 64, usize::MAX, &quiet);
         assert_eq!(batch.len(), 2);
         assert_eq!(skips_of(&m), 0, "fresh cursor, not a laggard");
         let e = Element::from_bytes(&batch[0]).unwrap();
         assert_eq!(e.tensors[0].as_i32(), vec![3]);
+    }
+
+    #[test]
+    fn serve_batch_oversized_outcomes() {
+        let quiet = AtomicU64::new(0);
+        let (c, _m) = cache(16, usize::MAX);
+        let small = elem(1).to_bytes();
+        let cap = small.len(); // cap sized so `small` fits but `big` won't
+        let big = vec![0u8; cap * 3];
+        c.push_encoded(vec![Arc::new(big.clone()), Arc::new(small.clone())]);
+
+        // Without chunking the cursor must NOT advance: the error is
+        // explicit and repeatable (the legacy-shim contract).
+        for _ in 0..2 {
+            match c.serve_batch(1, 64, usize::MAX, cap, false, &quiet) {
+                BatchServe::TooLarge(n) => assert_eq!(n, big.len()),
+                _ => panic!("expected TooLarge"),
+            }
+        }
+        // With chunking the element is handed over and the cursor moves
+        // past it; the next call serves the small element normally.
+        match c.serve_batch(1, 64, usize::MAX, cap, true, &quiet) {
+            BatchServe::Oversized(b) => assert_eq!(*b, big),
+            _ => panic!("expected Oversized"),
+        }
+        let (batch, _) = sb(&c, 1, 64, usize::MAX, &quiet);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(*batch[0], small);
+        // An oversized element later in the window stops the batch early
+        // (it is only special when it is the *first* visible element).
+        c.push_encoded(vec![Arc::new(small.clone()), Arc::new(big.clone())]);
+        match c.serve_batch(1, 64, usize::MAX, cap, true, &quiet) {
+            BatchServe::Batch(b, _) => assert_eq!(b.len(), 1, "stops before the big one"),
+            _ => panic!("expected Batch"),
+        }
+        match c.serve_batch(1, 64, usize::MAX, cap, true, &quiet) {
+            BatchServe::Oversized(b) => assert_eq!(*b, big),
+            _ => panic!("expected Oversized"),
+        }
+    }
+
+    #[test]
+    fn occupancy_tracks_cursor_and_window() {
+        let (c, _m) = cache(16, usize::MAX);
+        c.register_consumer(1);
+        c.push_encoded((0..4).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        let sz = elem(0).to_bytes().len();
+        let (unread, win, win_bytes) = c.occupancy(1);
+        assert_eq!((unread, win), (4, 4));
+        assert_eq!(win_bytes, 4 * sz);
+        let _ = sb(&c, 1, 3, usize::MAX, &AtomicU64::new(0));
+        let (unread, win, _) = c.occupancy(1);
+        assert_eq!((unread, win), (1, 4));
+        // An unknown cursor sees the whole window.
+        let (unread, _, _) = c.occupancy(99);
+        assert_eq!(unread, 4);
+        // Stats expose byte occupancy too (the status/gauge satellite).
+        assert_eq!(c.stats().window_bytes, 4 * sz);
     }
 
     #[test]

@@ -477,9 +477,11 @@ fn late_worker_joins_running_job() {
 
 #[test]
 fn batched_path_exactly_once_three_workers_dynamic_sharding() {
-    // The batched GetElements plane must preserve the dynamic-sharding
-    // visitation guarantee: disjoint splits, every sample exactly once,
-    // while actually batching (fewer RPCs than elements).
+    // The legacy batched GetElements plane (an old client that never
+    // handshakes, against a session-enabled worker) must preserve the
+    // dynamic-sharding visitation guarantee: disjoint splits, every
+    // sample exactly once, while actually batching (fewer RPCs than
+    // elements).
     let d = start_dispatcher();
     let store = ObjectStore::in_memory();
     let spec = generate_vision(
@@ -500,6 +502,7 @@ fn batched_path_exactly_once_three_workers_dynamic_sharding() {
             ServiceClientConfig {
                 sharding: ShardingPolicy::Dynamic,
                 batching: true,
+                stream_sessions: false, // old-client <-> new-worker path
                 ..Default::default()
             },
         )
@@ -521,6 +524,160 @@ fn batched_path_exactly_once_three_workers_dynamic_sharding() {
         client.metrics().counter("client/elements_fetched").get() >= elements,
         "fetch accounting"
     );
+}
+
+#[test]
+fn stream_session_path_exactly_once_three_workers() {
+    // The canonical stream-session plane end to end: handshake per
+    // worker, session-scoped Fetch with adaptive batching, exactly-once
+    // under dynamic sharding across three workers.
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: 12, samples_per_shard: 8, ..Default::default() },
+    );
+    let total = spec.total_samples as u64;
+    let _w1 = start_worker(&d, store.clone());
+    let _w2 = start_worker(&d, store.clone());
+    let _w3 = start_worker(&d, store);
+
+    let graph = PipelineBuilder::source_vision(spec).batch(4).build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    let mut tracker = VisitationTracker::new();
+    let mut elements = 0u64;
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+        elements += 1;
+    }
+    assert_eq!(elements, total / 4);
+    let report = tracker.verify(Guarantee::ExactlyOnce, total);
+    assert!(report.ok, "{report:?}");
+    // The session plane was really taken: one negotiated session per
+    // worker, all traffic through Fetch, none through the legacy RPCs.
+    assert_eq!(client.metrics().counter("client/stream_sessions").get(), 3);
+    assert!(client.metrics().counter("client/fetch_rpcs").get() > 0, "expected Fetch traffic");
+    assert_eq!(client.metrics().counter("client/batched_rpcs").get(), 0);
+    assert_eq!(client.metrics().counter("client/stream_handshake_downgrades").get(), 0);
+}
+
+/// Pattern-fill so reassembly errors (wrong order, duplicated or dropped
+/// continuation frames) change the content, not just the length.
+fn chunk_pattern(n: usize) -> Vec<u8> {
+    let mut v = vec![0u8; n];
+    for (i, chunk) in v.chunks_mut(4096).enumerate() {
+        chunk.fill((i % 251) as u8);
+    }
+    v
+}
+
+#[test]
+fn oversized_element_roundtrips_via_chunked_transfer() {
+    // Acceptance: an element whose encoding exceeds the 64 MiB transport
+    // frame cap round-trips losslessly as continuation frames. Before
+    // the stream-session redesign this element was silently skipped
+    // (cursor advanced before the over-cap write killed the connection).
+    use tfdatasvc::data::element::{DType, Tensor};
+
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let udfs = UdfRegistry::with_builtins();
+    // Row 1 inflates to > MAX_FRAME_LEN; rows 0 and 2 stay tiny, so the
+    // stream exercises normal -> chunked -> normal transitions.
+    let big_len: usize = 68 << 20; // 68 MiB > 64 MiB cap
+    udfs.register_fn("test.inflate_middle", move |e| {
+        if e.ids == [1] {
+            Ok(tfdatasvc::data::Element::with_ids(
+                vec![Tensor::new(DType::U8, vec![big_len], chunk_pattern(big_len))],
+                e.ids.clone(),
+            ))
+        } else {
+            Ok(e)
+        }
+    });
+    let mut cfg = WorkerConfig::new(store, udfs);
+    // The oversized element alone exceeds the default 64 MiB window byte
+    // budget; give the window headroom so the two small neighbors are not
+    // evicted (relaxed-visitation skipped) before the fetcher starts.
+    cfg.cache_window_bytes = 256 << 20;
+    let w = Worker::start("127.0.0.1:0", &d.addr(), cfg).unwrap();
+
+    let graph = PipelineBuilder::source_range(3).map("test.inflate_middle").build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig { sharding: ShardingPolicy::Dynamic, ..Default::default() },
+        )
+        .unwrap();
+
+    let mut ids = Vec::new();
+    let mut big_seen = 0;
+    while let Some(e) = it.next().unwrap() {
+        ids.extend(e.ids.clone());
+        if e.ids == [1] {
+            big_seen += 1;
+            assert_eq!(e.tensors[0].data.len(), big_len);
+            assert_eq!(e.tensors[0].data, chunk_pattern(big_len), "lossless reassembly");
+        }
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2], "nothing skipped, nothing duplicated");
+    assert_eq!(big_seen, 1);
+    // It really went through the chunked path, in several frames.
+    assert_eq!(client.metrics().counter("client/chunked_elements_fetched").get(), 1);
+    assert!(client.metrics().counter("client/chunk_frames").get() >= 2);
+    assert_eq!(w.metrics().counter("worker/chunked_elements_served").get(), 1);
+}
+
+#[test]
+fn legacy_batched_client_gets_explicit_too_large_error() {
+    // Satellite: the legacy GetElements plane cannot chunk, so an
+    // over-cap element must surface an explicit `element too large`
+    // error (cursor untouched server-side) instead of silently skipping.
+    use tfdatasvc::data::element::{DType, Tensor};
+
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let udfs = UdfRegistry::with_builtins();
+    let big_len: usize = 33 << 20; // > MAX_FRAME_LEN / 2 legacy budget
+    udfs.register_fn("test.inflate", move |e| {
+        Ok(tfdatasvc::data::Element::with_ids(
+            vec![Tensor::new(DType::U8, vec![big_len], vec![7u8; big_len])],
+            e.ids.clone(),
+        ))
+    });
+    let cfg = WorkerConfig::new(store, udfs);
+    let _w = Worker::start("127.0.0.1:0", &d.addr(), cfg).unwrap();
+
+    let graph = PipelineBuilder::source_range(1).map("test.inflate").build();
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(
+            &graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Dynamic,
+                stream_sessions: false, // legacy client
+                batching: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match it.next() {
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("element too large"), "explicit error, got: {msg}");
+        }
+        other => panic!("expected an explicit element-too-large error, got {other:?}"),
+    }
 }
 
 #[test]
@@ -626,8 +783,11 @@ fn dispatcher_restart_replays_journal_and_named_job_survives() {
 
 #[test]
 fn single_element_path_still_works_for_old_clients() {
-    // Backward compatibility: batching=false forces the legacy
-    // one-element-per-RPC plane, which must deliver the same guarantee.
+    // Backward compatibility: batching=false + stream_sessions=false is
+    // the oldest client shape — one element per GetElement RPC, no
+    // handshake — and must drain a full epoch with the same guarantee
+    // against a session-enabled worker (the RPC is a shim over the same
+    // serve machinery).
     let d = start_dispatcher();
     let store = ObjectStore::in_memory();
     let spec = generate_vision(
@@ -646,6 +806,7 @@ fn single_element_path_still_works_for_old_clients() {
             ServiceClientConfig {
                 sharding: ShardingPolicy::Dynamic,
                 batching: false,
+                stream_sessions: false,
                 ..Default::default()
             },
         )
@@ -657,6 +818,7 @@ fn single_element_path_still_works_for_old_clients() {
     let report = tracker.verify(Guarantee::ExactlyOnce, total);
     assert!(report.ok, "{report:?}");
     assert_eq!(client.metrics().counter("client/batched_rpcs").get(), 0);
+    assert_eq!(client.metrics().counter("client/fetch_rpcs").get(), 0);
 }
 
 #[test]
