@@ -1,0 +1,227 @@
+//! Pipelined coordinated reads (§3.6): round-lease prefetch on vs off
+//! under skewed element sizes — the paper's straggler scenario.
+//!
+//! The trainer spends ~T per step on compute; every round costs F on the
+//! wire (materialize is already overlapped by the worker's multi-round
+//! buffer; F is transfer + decode, with periodic stragglers several
+//! times larger than the median, travelling as continuation frames
+//! against a small negotiated frame budget). Lock-step pays `T + F` per
+//! step; the prefetching client pays `max(T, F)` — the §3.6 software
+//! pipeline applied across the wire.
+//!
+//! Acceptance (full mode): prefetch-on >= 1.5x steps/sec and a lower
+//! p99 round latency than prefetch-off. `--smoke` shrinks the epoch and
+//! relaxes the ratio for shared CI boxes. Results are also emitted
+//! machine-readable to `out/bench_coordinated_rounds.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tfdatasvc::data::element::{DType, Tensor};
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::data::Element;
+use tfdatasvc::metrics::write_json_file;
+use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
+use tfdatasvc::service::proto::{ProcessingMode, ShardingPolicy};
+use tfdatasvc::service::worker::{Worker, WorkerConfig, MIN_STREAM_FRAME_LEN};
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::util::hist::Samples;
+use tfdatasvc::util::json::obj;
+
+/// Median element ~512 KiB; every 4th a ~4 MiB straggler. Against a
+/// 128 KiB negotiated frame budget both travel as continuation frames,
+/// so the fetch cost F is dominated by chunk RPC round-trips and skews
+/// hard at p99.
+const SMALL_BYTES: usize = 512 << 10;
+const BIG_BYTES: usize = 4 << 20;
+
+struct RunStats {
+    steps: u64,
+    secs: f64,
+    mean_ms: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    prefetched: u64,
+}
+
+fn run(
+    dispatcher_addr: &str,
+    graph: &tfdatasvc::data::GraphDef,
+    depth: u32,
+    train_step: Duration,
+) -> RunStats {
+    let client = ServiceClient::new(dispatcher_addr);
+    let mut it = client
+        .distribute(
+            graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Off,
+                mode: ProcessingMode::Coordinated,
+                num_consumers: 1,
+                consumer_index: 0,
+                max_frame_len: MIN_STREAM_FRAME_LEN as u64,
+                round_prefetch_depth: depth,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut lat = Samples::new();
+    let t0 = Instant::now();
+    let mut steps = 0u64;
+    loop {
+        let f0 = Instant::now();
+        match it.next() {
+            Ok(Some(e)) => {
+                lat.push(f0.elapsed().as_secs_f64() * 1e3);
+                std::hint::black_box(&e);
+                steps += 1;
+                // "Train" on the round: spin for the step budget (spin,
+                // not sleep — immune to timer quantization on CI boxes).
+                let s0 = Instant::now();
+                while s0.elapsed() < train_step {
+                    std::hint::black_box(steps);
+                }
+            }
+            Ok(None) => break,
+            Err(e) => panic!("round fetch failed: {e}"),
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let prefetched = client.metrics().counter("client/rounds_prefetched").get();
+    it.release();
+    RunStats {
+        steps,
+        secs,
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(50.0),
+        p95_ms: lat.percentile(95.0),
+        p99_ms: lat.percentile(99.0),
+        prefetched,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let rounds: u64 = if smoke { 96 } else { 384 };
+
+    let store = ObjectStore::in_memory();
+    let udfs = UdfRegistry::with_builtins();
+    // Skewed element sizes: the straggler scenario coordinated reads
+    // exist for (§3.6).
+    udfs.register_fn("bench.skew", move |e| {
+        let n = if e.ids[0] % 4 == 3 { BIG_BYTES } else { SMALL_BYTES };
+        Ok(Element::with_ids(
+            vec![Tensor::new(DType::U8, vec![n], vec![(e.ids[0] % 251) as u8; n])],
+            e.ids.clone(),
+        ))
+    });
+    let d = Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap();
+    let _w = Worker::start("127.0.0.1:0", &d.addr(), WorkerConfig::new(store, udfs)).unwrap();
+    let graph = Arc::new(PipelineBuilder::source_range(rounds).map("bench.skew").build());
+    let calib_graph = PipelineBuilder::source_range(32).map("bench.skew").build();
+
+    // Self-calibrate the trainer's step budget to the *measured* mean
+    // fetch cost on this machine: the software pipeline's win is largest
+    // (2x ideal) when compute and fetch are balanced, and calibrating
+    // keeps the acceptance ratio meaningful on fast and slow boxes
+    // alike.
+    let probe = run(&d.addr(), &calib_graph, 0, Duration::ZERO);
+    let train_step = Duration::from_secs_f64(
+        (probe.mean_ms / 1e3).clamp(0.000_3, 0.02),
+    );
+    println!(
+        "=== coordinated_rounds: round-lease prefetch on vs off ({} rounds{}, fetch ~{:.2} ms, \
+         train step {:.2} ms) ===",
+        rounds,
+        if smoke { ", smoke" } else { "" },
+        probe.mean_ms,
+        train_step.as_secs_f64() * 1e3
+    );
+    println!(
+        "{:<14} {:>8} {:>10} {:>9} {:>9} {:>9} {:>11}",
+        "mode", "steps", "steps/s", "p50 ms", "p95 ms", "p99 ms", "prefetched"
+    );
+    let report = |name: &str, s: &RunStats| {
+        println!(
+            "{:<14} {:>8} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>11}",
+            name,
+            s.steps,
+            s.steps as f64 / s.secs,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms,
+            s.prefetched
+        );
+    };
+    // Off first (cold caches penalize the baseline, not the candidate —
+    // conservative for the assertion below). Each mode drains one full
+    // epoch of the same pipeline.
+    let off = run(&d.addr(), &graph, 0, train_step);
+    report("prefetch-off", &off);
+    let on = run(&d.addr(), &graph, 2, train_step);
+    report("prefetch-on", &on);
+
+    assert_eq!(on.steps, off.steps, "both modes must deliver the same round count");
+    assert_eq!(off.prefetched, 0, "depth 0 is lock-step");
+    assert!(on.prefetched > 0, "depth 2 really prefetched");
+
+    let speedup = (on.steps as f64 / on.secs) / (off.steps as f64 / off.secs);
+    println!(
+        "prefetch speedup: {speedup:.2}x steps/sec, p99 round latency {:.2} ms -> {:.2} ms",
+        off.p99_ms, on.p99_ms
+    );
+    write_json_file(
+        "out/bench_coordinated_rounds.json",
+        &obj([
+            ("bench", "coordinated_rounds".into()),
+            ("smoke", smoke.into()),
+            ("rounds", rounds.into()),
+            ("fetch_mean_ms", probe.mean_ms.into()),
+            ("train_step_ms", (train_step.as_secs_f64() * 1e3).into()),
+            (
+                "prefetch_off",
+                obj([
+                    ("steps_per_sec", (off.steps as f64 / off.secs).into()),
+                    ("p50_ms", off.p50_ms.into()),
+                    ("p95_ms", off.p95_ms.into()),
+                    ("p99_ms", off.p99_ms.into()),
+                ]),
+            ),
+            (
+                "prefetch_on",
+                obj([
+                    ("steps_per_sec", (on.steps as f64 / on.secs).into()),
+                    ("p50_ms", on.p50_ms.into()),
+                    ("p95_ms", on.p95_ms.into()),
+                    ("p99_ms", on.p99_ms.into()),
+                    ("rounds_prefetched", on.prefetched.into()),
+                ]),
+            ),
+            ("speedup", speedup.into()),
+        ]),
+    )
+    .unwrap();
+
+    // Acceptance: the pipeline must beat lock-step decisively under skew
+    // in full mode; smoke (CI) only guards against gross regressions —
+    // shared runners are too noisy for the full bar.
+    let min_speedup = if smoke { 1.1 } else { 1.5 };
+    assert!(
+        speedup >= min_speedup,
+        "acceptance: prefetch-on must sustain >= {min_speedup}x steps/sec vs lock-step \
+         (got {speedup:.2}x)"
+    );
+    if !smoke {
+        assert!(
+            on.p99_ms < off.p99_ms,
+            "acceptance: prefetch must cut p99 round latency ({:.2} ms vs {:.2} ms)",
+            on.p99_ms,
+            off.p99_ms
+        );
+    }
+    println!("coordinated_rounds OK -> out/bench_coordinated_rounds.json");
+}

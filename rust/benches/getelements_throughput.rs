@@ -22,12 +22,14 @@ use std::time::Instant;
 use tfdatasvc::data::exec::ElemIter;
 use tfdatasvc::data::graph::{GraphDef, PipelineBuilder};
 use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::metrics::write_json_file;
 use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::service::dispatcher::DispatcherConfig;
 use tfdatasvc::service::proto::ShardingPolicy;
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
 use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::util::json::{obj, Json};
 
 #[derive(Clone, Copy, PartialEq)]
 enum Path {
@@ -147,6 +149,10 @@ fn main() {
         "{:<18} {:>10} {:>12} {:>8} {:>12}",
         "shape/path", "elements", "elements/s", "rpcs", "rpcs/element"
     );
+    // Machine-readable results (out/bench_getelements_throughput.json):
+    // per shape/path throughput + RPC amortization, for cross-PR
+    // trajectory tracking.
+    let mut json_shapes: Vec<(String, Json)> = Vec::new();
     for (name, graph) in [("small", &small), ("large", &large)] {
         let mut stats = Vec::new();
         for path in [Path::Single, Path::Batched, Path::SessionStatic, Path::SessionAdaptive] {
@@ -173,6 +179,30 @@ fn main() {
         let rpc_drop = (single.rpcs as f64 / single.elements as f64)
             / (batched.rpcs as f64 / batched.elements as f64);
         let adaptive_ratio = stat.secs / adap.secs;
+        json_shapes.push((
+            name.to_string(),
+            Json::Obj(
+                stats
+                    .iter()
+                    .map(|(p, s)| {
+                        (
+                            p.name().to_string(),
+                            obj([
+                                ("elements_per_sec", (s.elements as f64 / s.secs).into()),
+                                ("rpcs", s.rpcs.into()),
+                                ("rpcs_per_element", (s.rpcs as f64 / s.elements as f64).into()),
+                                ("bytes", s.bytes.into()),
+                            ]),
+                        )
+                    })
+                    .chain([
+                        ("batched_speedup".to_string(), speedup.into()),
+                        ("rpc_drop".to_string(), rpc_drop.into()),
+                        ("adaptive_ratio".to_string(), adaptive_ratio.into()),
+                    ])
+                    .collect(),
+            ),
+        ));
         println!(
             "{name}: batched speedup {speedup:.2}x, rpc drop {rpc_drop:.1}x, adaptive/static \
              throughput {adaptive_ratio:.2}x (rpcs {} -> {}), bytes {} -> {}",
@@ -265,5 +295,26 @@ fn main() {
     assert_eq!(chunked, n, "all elements travelled chunked");
     assert!(frames >= n * 2, "each element needed several continuation frames");
 
-    println!("getelements_throughput OK");
+    json_shapes.push((
+        "chunked".to_string(),
+        obj([
+            ("elements", n.into()),
+            ("mib_per_sec", {
+                let mib =
+                    client.metrics().counter("client/bytes_fetched").get() as f64 / (1 << 20) as f64;
+                (mib / secs).into()
+            }),
+            ("continuation_frames", frames.into()),
+        ]),
+    ));
+    write_json_file(
+        "out/bench_getelements_throughput.json",
+        &obj([
+            ("bench", "getelements_throughput".into()),
+            ("smoke", smoke.into()),
+            ("shapes", Json::Obj(json_shapes.into_iter().collect())),
+        ]),
+    )
+    .unwrap();
+    println!("getelements_throughput OK -> out/bench_getelements_throughput.json");
 }

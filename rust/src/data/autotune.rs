@@ -8,7 +8,7 @@
 //! each stage's service rate to the consumer's demand rate.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 /// Per-stage measurement window.
@@ -30,12 +30,24 @@ pub struct AutotuneState {
     /// machine's logical CPUs).
     budget: usize,
     default_parallelism: usize,
+    /// Bumped on every [`AutotuneState::replan`]; elastic stages park
+    /// surplus worker threads on this until the plan changes, so a
+    /// running pipeline reacts to new targets instead of keeping its
+    /// build-time pool size for its whole lifetime.
+    plan_generation: Mutex<u64>,
+    plan_changed: Condvar,
 }
 
 impl Default for AutotuneState {
     fn default() -> Self {
         let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        AutotuneState { stages: Mutex::new(HashMap::new()), budget: cpus, default_parallelism: 4 }
+        AutotuneState {
+            stages: Mutex::new(HashMap::new()),
+            budget: cpus,
+            default_parallelism: 4,
+            plan_generation: Mutex::new(0),
+            plan_changed: Condvar::new(),
+        }
     }
 }
 
@@ -45,7 +57,33 @@ impl AutotuneState {
             stages: Mutex::new(HashMap::new()),
             budget: budget.max(1),
             default_parallelism: 4.min(budget.max(1)),
+            plan_generation: Mutex::new(0),
+            plan_changed: Condvar::new(),
         }
+    }
+
+    /// Current plan generation (bumped by every replan). Elastic stage
+    /// threads snapshot this before checking their activation condition,
+    /// then sleep in [`AutotuneState::wait_replan`] — the classic
+    /// check-then-wait pattern without a missed-wakeup window.
+    pub fn plan_generation(&self) -> u64 {
+        *self.plan_generation.lock().unwrap()
+    }
+
+    /// Block until the plan generation moves past `seen` (a replan
+    /// happened) or `timeout` elapses; returns the current generation.
+    pub fn wait_replan(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut gen = self.plan_generation.lock().unwrap();
+        while *gen == seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, _) = self.plan_changed.wait_timeout(gen, deadline - now).unwrap();
+            gen = next;
+        }
+        *gen
     }
 
     pub fn budget(&self) -> usize {
@@ -101,6 +139,11 @@ impl AutotuneState {
             }
             out.push((idx, t));
         }
+        drop(st);
+        // Wake parked elastic stage threads so scale-ups take effect now,
+        // not at the next pipeline build.
+        *self.plan_generation.lock().unwrap() += 1;
+        self.plan_changed.notify_all();
         out
     }
 }
@@ -142,6 +185,27 @@ mod tests {
         let plan = a.replan(1000.0);
         let total: usize = plan.iter().map(|&(_, t)| t).sum();
         assert!(total <= 8 + 1, "budget respected (±1 for ceil), got {total}");
+    }
+
+    #[test]
+    fn replan_bumps_generation_and_wakes_waiters() {
+        let a = std::sync::Arc::new(AutotuneState::with_budget(8));
+        let gen0 = a.plan_generation();
+        // Timeout path: no replan, generation unchanged.
+        assert_eq!(a.wait_replan(gen0, Duration::from_millis(10)), gen0);
+        // Wakeup path: a replan from another thread unblocks the wait
+        // well before the long timeout.
+        let a2 = a.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            a2.record_work(0, Duration::from_millis(1));
+            a2.replan(100.0);
+        });
+        let t0 = std::time::Instant::now();
+        let gen1 = a.wait_replan(gen0, Duration::from_secs(5));
+        assert!(gen1 > gen0);
+        assert!(t0.elapsed() < Duration::from_secs(2), "woken by replan, not timeout");
+        h.join().unwrap();
     }
 
     #[test]

@@ -169,13 +169,22 @@ fn apply(
             if *parallelism <= 1 && *parallelism != 0 {
                 Box::new(MapIter { upstream, f, name: udf.clone() })
             } else {
-                let workers = if *parallelism == 0 {
+                let elastic = *parallelism == 0;
+                let workers = if elastic {
                     // AUTOTUNE: start from the shared target, default 4.
                     cfg.autotune.target_parallelism(node_idx).max(1)
                 } else {
                     *parallelism as usize
                 };
-                Box::new(ParallelMapIter::new(upstream, f, udf.clone(), workers, cfg.autotune.clone(), node_idx))
+                Box::new(ParallelMapIter::new(
+                    upstream,
+                    f,
+                    udf.clone(),
+                    workers,
+                    elastic,
+                    cfg.autotune.clone(),
+                    node_idx,
+                ))
             }
         }
         Node::Filter { udf } => {
@@ -413,9 +422,17 @@ impl ParallelMapIter {
         f: Arc<dyn Udf>,
         name: String,
         workers: usize,
+        elastic: bool,
         autotune: Arc<super::autotune::AutotuneState>,
         node_idx: usize,
     ) -> ParallelMapIter {
+        // Elastic (AUTOTUNE) stages spawn threads up to the CPU budget so
+        // a later replan can scale *up* past the build-time target;
+        // surplus threads park on the plan-generation condvar and cost
+        // nothing but stack. Explicit-parallelism stages keep the fixed
+        // pool the pipeline author asked for.
+        let pool_size =
+            if elastic { workers.max(autotune.budget().min(16)) } else { workers };
         let (work_tx, work_rx) = chan::bounded::<(u64, Vec<Element>)>(workers * 2);
         let (out_tx, out_rx) = chan::bounded::<(u64, Vec<DataResult<Element>>)>(workers * 2);
         let total = Arc::new(AtomicUsize::new(usize::MAX));
@@ -473,7 +490,7 @@ impl ParallelMapIter {
         }
 
         // Workers.
-        for w in 0..workers {
+        for w in 0..pool_size {
             let rx = work_rx.clone();
             let tx = out_tx.clone();
             let f = f.clone();
@@ -482,7 +499,21 @@ impl ParallelMapIter {
             std::thread::Builder::new()
                 .name(format!("pmap-{w}"))
                 .spawn(move || {
-                    while let Ok((seq, chunk)) = rx.recv() {
+                    loop {
+                        if elastic && w >= autotune.target_parallelism(node_idx).max(1) {
+                            // Above the current plan's target: park until
+                            // the next replan (or bounded re-check, which
+                            // also notices upstream shutdown) instead of
+                            // competing for work the plan says we should
+                            // not take.
+                            if rx.is_closed() {
+                                break;
+                            }
+                            let gen = autotune.plan_generation();
+                            autotune.wait_replan(gen, std::time::Duration::from_millis(50));
+                            continue;
+                        }
+                        let Ok((seq, chunk)) = rx.recv() else { break };
                         let t0 = std::time::Instant::now();
                         let n = chunk.len() as u32;
                         let results: Vec<DataResult<Element>> = chunk

@@ -175,6 +175,19 @@ pub fn write_csv(path: &str, header: &str, rows: &[(f64, f64)]) -> std::io::Resu
     std::fs::write(path, body)
 }
 
+/// Write a machine-readable benchmark/result document (creating parent
+/// directories), so the perf trajectory is trackable across PRs: every
+/// bench emits `out/bench_<name>.json` with throughput + latency
+/// percentiles next to its human-readable stdout table.
+pub fn write_json_file(path: &str, doc: &crate::util::json::Json) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut body = doc.dump();
+    body.push('\n');
+    std::fs::write(path, body)
+}
+
 /// Multi-column CSV variant for tables.
 pub fn write_csv_rows(path: &str, header: &str, rows: &[Vec<String>]) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {

@@ -24,7 +24,7 @@ use crate::util::chan;
 use crate::wire::Decode;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Per-job client configuration (the `distribute(...)` kwargs).
@@ -88,6 +88,16 @@ pub struct ServiceClientConfig {
     /// handshake; elements over the negotiated value arrive as
     /// continuation frames). 0 = the transport cap.
     pub max_frame_len: u64,
+    /// Coordinated mode: how many rounds the fetch engine may run ahead
+    /// of the trainer (§3.6 round prefetch). 2 = double buffering — the
+    /// `Fetch` for round `r+1` is in flight (or done) while the trainer
+    /// consumes round `r`, so the materialize+RPC+decode round-trip
+    /// leaves the step critical path. 0 = today's lock-step behavior
+    /// (fetch a round only when the trainer blocks on it). Requires the
+    /// stream-session plane and workers granting
+    /// [`proto::stream_caps::ROUND_PREFETCH`]; the engine downgrades to
+    /// lock-step automatically when any owner does not.
+    pub round_prefetch_depth: u32,
 }
 
 impl Default for ServiceClientConfig {
@@ -111,6 +121,7 @@ impl Default for ServiceClientConfig {
             stream_sessions: true,
             adaptive_batching: true,
             max_frame_len: 0,
+            round_prefetch_depth: 2,
         }
     }
 }
@@ -252,7 +263,7 @@ pub struct DistributedIter {
     /// mid-stream instead of leaking.
     tx_close: Option<chan::Sender<ServiceResult<Element>>>,
     // Coordinated mode:
-    coord: Option<CoordFetcher>,
+    coord: Option<CoordConsumer>,
     // Common:
     job_id: u64,
     client_id: u64,
@@ -262,26 +273,63 @@ pub struct DistributedIter {
     dispatcher_addr: String,
     pool: Arc<Pool>,
     stop: Arc<AtomicBool>,
+    /// Closing this wakes every fetcher blocked in a backoff wait
+    /// (event-driven wakeup — a release never waits out a sleep).
+    halt_tx: chan::Sender<()>,
     released: bool,
 }
 
-struct CoordFetcher {
-    workers: Arc<Mutex<Vec<String>>>,
-    round: u64,
-    consumer_index: u32,
-    compression: CompressionMode,
+/// State shared between the coordinated fetch engine thread, the
+/// heartbeat thread, and the consuming iterator.
+struct CoordShared {
+    /// Round routing, refreshed by the heartbeat thread: residue-indexed
+    /// lease holders (preferred) plus the plain worker list (fallback
+    /// against a pre-lease dispatcher).
+    owners: Mutex<CoordOwners>,
+    owners_changed: Condvar,
+    /// Rounds the trainer has demanded so far (bumped by `next()`): the
+    /// engine's pacing gate. In lock-step mode the engine fetches round
+    /// `r` only once `demand > r`; with prefetch it runs up to `depth`
+    /// rounds ahead.
+    demand: Mutex<u64>,
+    demand_changed: Condvar,
+}
+
+#[derive(Default)]
+struct CoordOwners {
+    worker_addrs: Vec<String>,
+    round_owner_addrs: Vec<String>,
+}
+
+/// Consumer half of the coordinated round pipeline: `next()` announces
+/// demand, then blocks on the bounded round channel the engine fills.
+struct CoordConsumer {
+    rx: chan::Receiver<crate::data::DataResult<Option<Element>>>,
+    /// Engine-side sender clone, closed on release to unwedge a blocked
+    /// engine.
+    tx_close: chan::Sender<crate::data::DataResult<Option<Element>>>,
+    shared: Arc<CoordShared>,
+    /// Rounds fully delivered to the trainer; reported to the dispatcher
+    /// as `next_round` (the round-lease reassignment floor).
+    delivered: Arc<AtomicU64>,
     timeout: Duration,
-    /// Whether to try the stream-session plane at all.
-    stream_sessions: bool,
-    max_frame_len: u64,
-    /// Per-worker negotiated session; `None` marks a legacy worker that
-    /// rejected the handshake (downgrade is sticky per address).
-    sessions: std::collections::HashMap<String, Option<OpenStreamResp>>,
-    /// Per-worker continuation-frame reassembly + release-ack state for
-    /// chunked round slots (see [`ChunkReassembler`]). Persistent across
-    /// `next()` calls so a transport retry resumes mid-element instead of
-    /// desyncing.
-    chunks: std::collections::HashMap<String, ChunkReassembler>,
+    /// End-of-sequence delivered: further `next()` calls return None
+    /// immediately instead of waiting on a finished engine.
+    finished: bool,
+}
+
+impl CoordConsumer {
+    /// Tell the engine the trainer now wants the round after the last
+    /// delivered one (wakes a lock-step engine; a prefetching engine is
+    /// already ahead).
+    fn announce_demand(&self) {
+        let want = self.delivered.load(Ordering::SeqCst) + 1;
+        let mut d = self.shared.demand.lock().unwrap();
+        if *d < want {
+            *d = want;
+            self.shared.demand_changed.notify_all();
+        }
+    }
 }
 
 struct FetchShared {
@@ -292,6 +340,10 @@ struct FetchShared {
     pool: Arc<Pool>,
     tx: chan::Sender<ServiceResult<Element>>,
     stop: Arc<AtomicBool>,
+    /// Backoff waits block here instead of sleeping: the channel never
+    /// carries items, so `recv_timeout` is a pure interruptible timer
+    /// that returns `Err(Closed)` the instant the iterator releases.
+    halt: chan::Receiver<()>,
     metrics: Registry,
     /// Workers that reported end_of_sequence.
     finished_workers: Mutex<HashSet<String>>,
@@ -307,6 +359,17 @@ struct FetchShared {
     max_frame_len: u64,
 }
 
+impl FetchShared {
+    /// Interruptible backoff: waits `dur` unless the iterator released
+    /// first. Returns false when the fetcher should stop.
+    fn backoff(&self, dur: Duration) -> bool {
+        match self.halt.recv_timeout(dur) {
+            Err(chan::Closed) => false,
+            Ok(_) => !self.stop.load(Ordering::SeqCst),
+        }
+    }
+}
+
 impl DistributedIter {
     fn start(
         dispatcher_addr: String,
@@ -318,52 +381,107 @@ impl DistributedIter {
         metrics: Registry,
     ) -> ServiceResult<DistributedIter> {
         let stop = Arc::new(AtomicBool::new(false));
+        let (halt_tx, halt_rx) = chan::bounded::<()>(1);
         match cfg.mode {
             ProcessingMode::Coordinated => {
-                // Discover workers once (the order is fixed per job); keep
-                // refreshing in the background for late joiners.
-                let workers = Arc::new(Mutex::new(Vec::new()));
-                let w2 = workers.clone();
-                let pool2 = pool.clone();
-                let da = dispatcher_addr.clone();
-                let stop2 = stop.clone();
-                let hb = cfg.heartbeat_interval;
-                std::thread::Builder::new()
-                    .name("svc-client-hb".into())
-                    .spawn(move || {
-                        while !stop2.load(Ordering::SeqCst) {
-                            if let Ok(resp) = heartbeat(&pool2, &da, job_id, client_id) {
-                                *w2.lock().unwrap() = resp.worker_addrs;
+                let shared = Arc::new(CoordShared {
+                    owners: Mutex::new(CoordOwners::default()),
+                    owners_changed: Condvar::new(),
+                    demand: Mutex::new(0),
+                    demand_changed: Condvar::new(),
+                });
+                let delivered = Arc::new(AtomicU64::new(0));
+                // Heartbeat thread: refresh worker + round-owner routing
+                // (lease reassignments propagate here) and report this
+                // consumer's round progress for the reassignment floor.
+                {
+                    let shared = shared.clone();
+                    let delivered = delivered.clone();
+                    let pool2 = pool.clone();
+                    let da = dispatcher_addr.clone();
+                    let stop2 = stop.clone();
+                    let halt = halt_rx.clone();
+                    let hb = cfg.heartbeat_interval;
+                    std::thread::Builder::new()
+                        .name("svc-client-hb".into())
+                        .spawn(move || {
+                            while !stop2.load(Ordering::SeqCst) {
+                                let next_round = delivered.load(Ordering::SeqCst);
+                                if let Ok(resp) =
+                                    heartbeat(&pool2, &da, job_id, client_id, next_round)
+                                {
+                                    let mut o = shared.owners.lock().unwrap();
+                                    o.worker_addrs = resp.worker_addrs;
+                                    o.round_owner_addrs = resp.round_owner_addrs;
+                                    drop(o);
+                                    shared.owners_changed.notify_all();
+                                }
+                                if halt.recv_timeout(hb).is_err() {
+                                    break;
+                                }
                             }
-                            std::thread::sleep(hb);
-                        }
-                    })
-                    .ok();
-                // Wait for at least one worker to appear.
-                let deadline = Instant::now() + Duration::from_secs(10);
-                loop {
-                    if !workers.lock().unwrap().is_empty() {
-                        break;
-                    }
-                    if Instant::now() > deadline {
-                        return Err(ServiceError::Other("no workers for coordinated job".into()));
-                    }
-                    std::thread::sleep(Duration::from_millis(10));
+                        })
+                        .ok();
                 }
+                // Wait for at least one worker to appear (condvar-driven).
+                {
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let mut o = shared.owners.lock().unwrap();
+                    while o.worker_addrs.is_empty() && o.round_owner_addrs.is_empty() {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            return Err(ServiceError::Other(
+                                "no workers for coordinated job".into(),
+                            ));
+                        }
+                        let (next, _) = shared
+                            .owners_changed
+                            .wait_timeout(o, deadline - now)
+                            .unwrap();
+                        o = next;
+                    }
+                }
+                // Round pipeline: the engine thread fetches rounds (up to
+                // `round_prefetch_depth` ahead of trainer demand) into a
+                // bounded channel the iterator drains.
+                let depth = cfg.round_prefetch_depth as usize;
+                let (btx, brx) = chan::bounded::<crate::data::DataResult<Option<Element>>>(
+                    depth.max(1),
+                );
+                let tx_close = btx.clone();
+                let engine = CoordEngine {
+                    pool: pool.clone(),
+                    job_id,
+                    client_id,
+                    consumer_index: cfg.consumer_index,
+                    compression: cfg.compression,
+                    timeout: cfg.request_timeout,
+                    stream_sessions: cfg.stream_sessions,
+                    max_frame_len: cfg.max_frame_len,
+                    prefetch_depth: cfg.round_prefetch_depth as u64,
+                    lockstep: !cfg.stream_sessions || cfg.round_prefetch_depth == 0,
+                    sessions: std::collections::HashMap::new(),
+                    chunks: std::collections::HashMap::new(),
+                    shared: shared.clone(),
+                    stop: stop.clone(),
+                    halt: halt_rx.clone(),
+                    metrics: metrics.clone(),
+                };
+                std::thread::Builder::new()
+                    .name(format!("svc-coord-eng-{job_id}"))
+                    .spawn(move || engine.run(btx))
+                    .ok();
                 Ok(DistributedIter {
                     mode: cfg.mode,
                     rx: None,
                     tx_close: None,
-                    coord: Some(CoordFetcher {
-                        workers,
-                        round: 0,
-                        consumer_index: cfg.consumer_index,
-                        compression: cfg.compression,
+                    coord: Some(CoordConsumer {
+                        rx: brx,
+                        tx_close,
+                        shared,
+                        delivered,
                         timeout: cfg.request_timeout,
-                        stream_sessions: cfg.stream_sessions,
-                        max_frame_len: cfg.max_frame_len,
-                        sessions: std::collections::HashMap::new(),
-                        chunks: std::collections::HashMap::new(),
+                        finished: false,
                     }),
                     job_id,
                     client_id,
@@ -371,6 +489,7 @@ impl DistributedIter {
                     dispatcher_addr,
                     pool,
                     stop,
+                    halt_tx,
                     released: false,
                 })
             }
@@ -385,6 +504,7 @@ impl DistributedIter {
                     pool: pool.clone(),
                     tx,
                     stop: stop.clone(),
+                    halt: halt_rx,
                     metrics: metrics.clone(),
                     finished_workers: Mutex::new(HashSet::new()),
                     active_fetchers: AtomicU64::new(0),
@@ -409,7 +529,7 @@ impl DistributedIter {
                             if shared.stop.load(Ordering::SeqCst) {
                                 break;
                             }
-                            match heartbeat(&shared.pool, &da, job_id, client_id) {
+                            match heartbeat(&shared.pool, &da, job_id, client_id, 0) {
                                 Ok(resp) => {
                                     for addr in resp.worker_addrs {
                                         if known.len() >= max_fetchers {
@@ -436,7 +556,9 @@ impl DistributedIter {
                                     // known workers (§3.4).
                                 }
                             }
-                            std::thread::sleep(hb);
+                            if shared.halt.recv_timeout(hb).is_err() {
+                                break;
+                            }
                         }
                         // Wait for fetchers to drain, then close.
                         while shared.active_fetchers.load(Ordering::SeqCst) > 0 {
@@ -456,6 +578,7 @@ impl DistributedIter {
                     dispatcher_addr,
                     pool,
                     stop,
+                    halt_tx,
                     released: false,
                 })
             }
@@ -487,10 +610,19 @@ impl DistributedIter {
         }
         self.released = true;
         self.stop.store(true, Ordering::SeqCst);
+        // Wake every fetcher parked in a backoff wait (event-driven: a
+        // release never waits out a sleep).
+        self.halt_tx.close();
         // Unwedge fetchers blocked on a full buffer: a consumer stopping
         // mid-stream must not leak fetcher threads.
         if let Some(tx) = &self.tx_close {
             tx.close();
+        }
+        if let Some(coord) = &self.coord {
+            coord.tx_close.close();
+            // Wake a lock-step engine parked on the demand gate.
+            coord.shared.demand_changed.notify_all();
+            coord.shared.owners_changed.notify_all();
         }
         let _: Result<ReleaseJobResp, _> = call_typed(
             &self.pool,
@@ -508,12 +640,18 @@ impl Drop for DistributedIter {
     }
 }
 
-fn heartbeat(pool: &Pool, dispatcher: &str, job_id: u64, client_id: u64) -> ServiceResult<ClientHeartbeatResp> {
+fn heartbeat(
+    pool: &Pool,
+    dispatcher: &str,
+    job_id: u64,
+    client_id: u64,
+    next_round: u64,
+) -> ServiceResult<ClientHeartbeatResp> {
     Ok(call_typed(
         pool,
         dispatcher,
         dispatcher_methods::CLIENT_HEARTBEAT,
-        &ClientHeartbeatReq { job_id, client_id },
+        &ClientHeartbeatReq { job_id, client_id, next_round },
         Duration::from_secs(5),
     )?)
 }
@@ -572,8 +710,10 @@ fn single_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
                         }
                     }
                     None => {
-                        // Worker had nothing ready: brief backoff.
-                        std::thread::sleep(Duration::from_millis(1));
+                        // Worker had nothing ready after its long-poll:
+                        // retry immediately — the next RPC blocks
+                        // worker-side on its condvar, so this loop is
+                        // paced by real events, not a sleep.
                     }
                 }
             }
@@ -600,7 +740,9 @@ fn single_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
                     shared.finished_workers.lock().unwrap().insert(addr.to_string());
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                if !shared.backoff(Duration::from_millis(20)) {
+                    break;
+                }
             }
         }
     }
@@ -699,7 +841,9 @@ fn batched_fetch_loop(shared: &Arc<FetchShared>, addr: &str) {
                                 .insert(req_addr.clone());
                             break;
                         }
-                        std::thread::sleep(Duration::from_millis(20));
+                        if !req_shared.backoff(Duration::from_millis(20)) {
+                            break;
+                        }
                     }
                 }
             }
@@ -755,7 +899,8 @@ enum Handshake {
 /// Open a stream session with retries. The worker may not have received
 /// the task yet (it arrives on its next heartbeat), so "unknown job" and
 /// transport errors retry with backoff; only the protocol-level "unknown
-/// method" answer is a downgrade signal.
+/// method" answer is a downgrade signal. The backoff waits on `halt`
+/// (closed at release), so a stopping client interrupts it instantly.
 #[allow(clippy::too_many_arguments)]
 fn open_stream(
     pool: &Pool,
@@ -766,6 +911,7 @@ fn open_stream(
     consumer_index: Option<u32>,
     timeout: Duration,
     stop: &AtomicBool,
+    halt: &chan::Receiver<()>,
 ) -> Handshake {
     let mut consecutive_errors = 0u32;
     const MAX_CONSECUTIVE_ERRORS: u32 = 25;
@@ -793,7 +939,9 @@ fn open_stream(
                 if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
                     return Handshake::Failed;
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                if halt.recv_timeout(Duration::from_millis(20)).is_err() {
+                    return Handshake::Failed;
+                }
             }
         }
     }
@@ -816,6 +964,7 @@ fn spawn_session_fetcher(shared: Arc<FetchShared>, addr: String) {
                 None,
                 s2.timeout,
                 &s2.stop,
+                &s2.halt,
             ) {
                 Handshake::Session(info) => {
                     s2.metrics.counter("client/stream_sessions").inc();
@@ -1088,6 +1237,7 @@ fn session_request_loop(
                     None,
                     shared.timeout,
                     &shared.stop,
+                    &shared.halt,
                 ) {
                     Handshake::Session(next) => {
                         shared.metrics.counter("client/stream_rehandshakes").inc();
@@ -1118,7 +1268,9 @@ fn session_request_loop(
                     shared.finished_workers.lock().unwrap().insert(addr.to_string());
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                if !shared.backoff(Duration::from_millis(20)) {
+                    break;
+                }
             }
         }
     }
@@ -1174,7 +1326,7 @@ fn decode_batch(resp: GetElementsResp) -> ServiceResult<Vec<Element>> {
 enum CoordOutcome {
     Element(Element),
     /// Nothing this attempt (round not materialized / stale session /
-    /// transient error): retry after a brief backoff.
+    /// transient error): retry.
     Empty,
     Eos,
     /// The owner is a pre-session worker: use the legacy `GetElement`
@@ -1182,16 +1334,185 @@ enum CoordOutcome {
     Legacy,
 }
 
-impl CoordFetcher {
-    /// One attempt to fetch the current round's slot from `owner` via
-    /// `OpenStream`/`Fetch` (§3.6 one-slot-per-call discipline preserved:
-    /// `max_elements` is pinned to 1 by the round read). Advances
-    /// `self.round` on success.
+/// The coordinated round-fetch engine (§3.6 with round prefetch): a
+/// dedicated thread walks rounds 0, 1, 2, …, asking each round's lease
+/// holder for this consumer's slot and feeding decoded rounds into a
+/// bounded channel. With [`ServiceClientConfig::round_prefetch_depth`]
+/// > 0 and every owner granting [`stream_caps::ROUND_PREFETCH`], the
+/// engine runs up to `depth` rounds ahead of trainer demand — the fetch
+/// for round `r+1` overlaps the trainer consuming round `r`, taking the
+/// materialize+RPC+decode round-trip off the step critical path. The
+/// moment any owner turns out not to grant the capability (or to be a
+/// pre-session worker), the engine downgrades to lock-step: it fetches a
+/// round only once the trainer demands it, which is exactly the old
+/// behavior.
+struct CoordEngine {
+    pool: Arc<Pool>,
+    job_id: u64,
+    client_id: u64,
+    consumer_index: u32,
+    compression: CompressionMode,
+    timeout: Duration,
+    stream_sessions: bool,
+    max_frame_len: u64,
+    prefetch_depth: u64,
+    /// Demand-gated mode (no fetch-ahead); sticky once set.
+    lockstep: bool,
+    /// Per-worker negotiated session; `None` marks a legacy worker that
+    /// rejected the handshake (downgrade is sticky per address).
+    sessions: std::collections::HashMap<String, Option<OpenStreamResp>>,
+    /// Per-worker continuation-frame reassembly + release-ack state for
+    /// chunked round slots (see [`ChunkReassembler`]); persistent so a
+    /// transport retry resumes mid-element instead of desyncing.
+    chunks: std::collections::HashMap<String, ChunkReassembler>,
+    shared: Arc<CoordShared>,
+    stop: Arc<AtomicBool>,
+    halt: chan::Receiver<()>,
+    metrics: Registry,
+}
+
+impl CoordEngine {
+    fn run(mut self, tx: chan::Sender<crate::data::DataResult<Option<Element>>>) {
+        let mut round = 0u64;
+        loop {
+            if !self.wait_for_demand(round) {
+                break; // released
+            }
+            // Fetch *started* before the trainer demanded the round = the
+            // engine ran ahead (a round taken off the step critical
+            // path). Snapshot at start: completion-time demand races the
+            // trainer's consumption speed and would under-count.
+            let ahead = *self.shared.demand.lock().unwrap() <= round;
+            match self.fetch_round(round) {
+                Ok(Some(e)) => {
+                    if ahead {
+                        self.metrics.counter("client/rounds_prefetched").inc();
+                    }
+                    if tx.send(Ok(Some(e))).is_err() {
+                        break; // consumer gone
+                    }
+                    round += 1;
+                }
+                Ok(None) => {
+                    let _ = tx.send(Ok(None));
+                    break;
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    break;
+                }
+            }
+        }
+        // Best-effort session teardown (the worker also GCs on release).
+        for (addr, info) in self.sessions.iter() {
+            if let Some(info) = info {
+                let _: Result<CloseStreamResp, _> = call_typed(
+                    &self.pool,
+                    addr,
+                    worker_methods::CLOSE_STREAM,
+                    &CloseStreamReq { session_id: info.session_id },
+                    Duration::from_secs(2),
+                );
+            }
+        }
+    }
+
+    /// Pacing gate: prefetch up to `depth` rounds ahead of trainer
+    /// demand; in lock-step (depth 0 or downgraded) wait for the round
+    /// to be explicitly demanded. Condvar-driven — `next()` notifies on
+    /// every demand bump, release notifies to unblock. Returns false
+    /// when the client released.
+    fn wait_for_demand(&self, round: u64) -> bool {
+        let depth = if self.lockstep { 0 } else { self.prefetch_depth };
+        let mut d = self.shared.demand.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return false;
+            }
+            if round < *d + depth {
+                return true;
+            }
+            let (next, _) = self
+                .shared
+                .demand_changed
+                .wait_timeout(d, Duration::from_millis(250))
+                .unwrap();
+            d = next;
+        }
+    }
+
+    /// Resolve the current lease holder for `round`: the dispatcher's
+    /// residue-indexed owner map when present, else the plain worker
+    /// list (pre-lease fallback). Blocks (condvar) while the map is
+    /// empty; None when the client released.
+    fn resolve_owner(&self, round: u64) -> Option<String> {
+        let mut o = self.shared.owners.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            let addrs = if !o.round_owner_addrs.is_empty() {
+                &o.round_owner_addrs
+            } else {
+                &o.worker_addrs
+            };
+            if !addrs.is_empty() {
+                return Some(addrs[(round % addrs.len() as u64) as usize].clone());
+            }
+            let (next, _) = self
+                .shared
+                .owners_changed
+                .wait_timeout(o, Duration::from_millis(250))
+                .unwrap();
+            o = next;
+        }
+    }
+
+    /// Fetch one round to completion: resolve the owner, attempt the
+    /// session (or legacy) protocol, re-resolve on churn. Empty attempts
+    /// ride the worker-side long-poll; only fast failures (connection
+    /// refused while an owner restarts or a lease moves) take a brief
+    /// halt-interruptible backoff, so round latency is never quantized
+    /// to a sleep.
+    fn fetch_round(&mut self, round: u64) -> crate::data::DataResult<Option<Element>> {
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            let Some(owner) = self.resolve_owner(round) else { return Ok(None) };
+            let t0 = Instant::now();
+            let outcome = if self.stream_sessions {
+                self.try_fetch_session(round, &owner)?
+            } else {
+                CoordOutcome::Legacy
+            };
+            let outcome = match outcome {
+                CoordOutcome::Legacy => self.fetch_round_legacy(round, &owner)?,
+                other => other,
+            };
+            match outcome {
+                CoordOutcome::Element(e) => return Ok(Some(e)),
+                CoordOutcome::Eos => return Ok(None),
+                CoordOutcome::Empty => {
+                    // A slow attempt already waited on the worker's
+                    // long-poll; only pace fast failures.
+                    if t0.elapsed() < Duration::from_millis(5)
+                        && self.halt.recv_timeout(Duration::from_millis(10)).is_err()
+                    {
+                        return Ok(None);
+                    }
+                }
+                CoordOutcome::Legacy => unreachable!("legacy resolved above"),
+            }
+        }
+    }
+
+    /// One attempt to fetch `round`'s slot from `owner` via
+    /// `OpenStream`/`Fetch` (§3.6 one-slot-per-call discipline:
+    /// `max_elements` is pinned to 1 by the round read).
     fn try_fetch_session(
         &mut self,
-        pool: &Pool,
-        job_id: u64,
-        client_id: u64,
+        round: u64,
         owner: &str,
     ) -> Result<CoordOutcome, crate::data::DataError> {
         let info = match self.sessions.get(owner) {
@@ -1199,25 +1520,31 @@ impl CoordFetcher {
             Some(Some(info)) => info.clone(),
             None => {
                 let req = OpenStreamReq {
-                    job_id,
-                    client_id,
+                    job_id: self.job_id,
+                    client_id: self.client_id,
                     protocol_version: STREAM_PROTOCOL_VERSION,
                     capabilities: stream_caps::ALL,
                     max_frame_len: self.max_frame_len,
                     consumer_index: Some(self.consumer_index),
                 };
                 match call_typed::<_, OpenStreamResp>(
-                    pool,
+                    &self.pool,
                     owner,
                     worker_methods::OPEN_STREAM,
                     &req,
                     self.timeout,
                 ) {
                     Ok(resp) => {
+                        self.metrics.counter("client/stream_sessions").inc();
+                        if resp.capabilities & stream_caps::ROUND_PREFETCH == 0 {
+                            self.downgrade_to_lockstep();
+                        }
                         self.sessions.insert(owner.to_string(), Some(resp.clone()));
                         resp
                     }
                     Err(crate::rpc::RpcError::Remote(msg)) if msg.contains("unknown method") => {
+                        self.metrics.counter("client/stream_handshake_downgrades").inc();
+                        self.downgrade_to_lockstep();
                         self.sessions.insert(owner.to_string(), None);
                         return Ok(CoordOutcome::Legacy);
                     }
@@ -1236,28 +1563,35 @@ impl CoordFetcher {
                 max_bytes: 0,
                 poll_ms: 0,
                 compression: self.compression,
-                round: Some(self.round),
+                round: Some(round),
                 chunk_seq,
                 chunk_offset,
             };
-            match call_typed::<_, FetchResp>(pool, owner, worker_methods::FETCH, &req, self.timeout)
-            {
+            match call_typed::<_, FetchResp>(
+                &self.pool,
+                owner,
+                worker_methods::FETCH,
+                &req,
+                self.timeout,
+            ) {
                 Ok(r) => {
+                    self.metrics.counter("client/fetch_rpcs").inc();
                     if r.wrong_worker_for_round {
-                        return Ok(CoordOutcome::Empty); // stale worker list
+                        return Ok(CoordOutcome::Empty); // stale owner map
                     }
                     if r.chunk_total_len > 0 {
+                        self.metrics.counter("client/chunk_frames").inc();
                         match chunks.absorb(&r) {
                             ChunkStep::Partial => continue,
                             ChunkStep::Complete(bytes) => {
+                                self.metrics.counter("client/chunked_elements_fetched").inc();
                                 let e = Element::from_bytes(&bytes)
                                     .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
-                                self.round += 1;
                                 return Ok(CoordOutcome::Element(e));
                             }
                             ChunkStep::Desync(msg) => {
-                                // Clean slate so a caller that retries
-                                // next() can restart the element from 0.
+                                // Clean slate so a retried round can
+                                // restart the element from 0.
                                 chunks.reset();
                                 return Err(crate::data::DataError::Other(msg));
                             }
@@ -1266,7 +1600,6 @@ impl CoordFetcher {
                     if r.num_elements > 0 {
                         let mut elems = decode_frame(r.frame, r.compressed, r.num_elements)
                             .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
-                        self.round += 1;
                         return Ok(CoordOutcome::Element(elems.remove(0)));
                     }
                     if r.end_of_sequence {
@@ -1284,8 +1617,54 @@ impl CoordFetcher {
                     chunks.reset();
                     return Ok(CoordOutcome::Empty);
                 }
+                Err(crate::rpc::RpcError::Remote(msg)) => {
+                    // Protocol-level round error ("already consumed",
+                    // "fetched twice", consumer-index mismatch): terminal
+                    // — retrying would loop forever.
+                    return Err(crate::data::DataError::Other(msg));
+                }
                 Err(_) => return Ok(CoordOutcome::Empty),
             }
+        }
+    }
+
+    /// The legacy `GetElement` round protocol against a pre-session
+    /// worker.
+    fn fetch_round_legacy(
+        &mut self,
+        round: u64,
+        owner: &str,
+    ) -> Result<CoordOutcome, crate::data::DataError> {
+        let req = GetElementReq {
+            job_id: self.job_id,
+            client_id: self.client_id,
+            consumer_index: Some(self.consumer_index),
+            round: Some(round),
+            compression: self.compression,
+        };
+        let resp: Result<GetElementResp, _> =
+            call_typed(&self.pool, owner, worker_methods::GET_ELEMENT, &req, self.timeout);
+        self.metrics.counter("client/rpcs").inc();
+        match resp {
+            Ok(r) if r.end_of_sequence => Ok(CoordOutcome::Eos),
+            Ok(r) => match r.element {
+                Some(bytes) => {
+                    let e = decode_element(&bytes, r.compressed)
+                        .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
+                    Ok(CoordOutcome::Element(e))
+                }
+                None => Ok(CoordOutcome::Empty),
+            },
+            Err(_) => Ok(CoordOutcome::Empty),
+        }
+    }
+
+    /// Sticky downgrade to the lock-step discipline (an owner without
+    /// [`stream_caps::ROUND_PREFETCH`], or a pre-session worker).
+    fn downgrade_to_lockstep(&mut self) {
+        if !self.lockstep {
+            self.lockstep = true;
+            self.metrics.counter("client/round_prefetch_downgrades").inc();
         }
     }
 }
@@ -1314,72 +1693,34 @@ impl ElemIter for DistributedIter {
             }
             ProcessingMode::Coordinated => {
                 let coord = self.coord.as_mut().expect("coordinated iter");
-                let deadline = Instant::now() + coord.timeout;
-                loop {
-                    let workers = coord.workers.lock().unwrap().clone();
-                    if workers.is_empty() {
-                        return Ok(None);
+                if coord.finished {
+                    return Ok(None);
+                }
+                // Announce demand for the next round — wakes a lock-step
+                // engine; a prefetching engine is already ahead and the
+                // round is typically sitting in the channel.
+                coord.announce_demand();
+                match coord.rx.recv_timeout(coord.timeout) {
+                    Ok(Some(Ok(Some(e)))) => {
+                        coord.delivered.fetch_add(1, Ordering::SeqCst);
+                        Ok(Some(e))
                     }
-                    let owner = &workers[(coord.round % workers.len() as u64) as usize];
-                    if coord.stream_sessions {
-                        let owner = owner.clone();
-                        match coord.try_fetch_session(
-                            &self.pool,
-                            self.job_id,
-                            self.client_id,
-                            &owner,
-                        )? {
-                            CoordOutcome::Element(e) => return Ok(Some(e)),
-                            CoordOutcome::Eos => return Ok(None),
-                            CoordOutcome::Empty => {
-                                if Instant::now() > deadline {
-                                    return Err(crate::data::DataError::Other(format!(
-                                        "coordinated round {} timed out",
-                                        coord.round
-                                    )));
-                                }
-                                std::thread::sleep(Duration::from_millis(2));
-                                continue;
-                            }
-                            // Old worker: fall through to the legacy
-                            // GetElement round protocol below.
-                            CoordOutcome::Legacy => {}
-                        }
+                    Ok(Some(Ok(None))) => {
+                        coord.finished = true;
+                        Ok(None)
                     }
-                    let req = GetElementReq {
-                        job_id: self.job_id,
-                        client_id: self.client_id,
-                        consumer_index: Some(coord.consumer_index),
-                        round: Some(coord.round),
-                        compression: coord.compression,
-                    };
-                    let resp: Result<GetElementResp, _> =
-                        call_typed(&self.pool, owner, worker_methods::GET_ELEMENT, &req, coord.timeout);
-                    match resp {
-                        Ok(r) if r.end_of_sequence => return Ok(None),
-                        Ok(r) => match r.element {
-                            Some(bytes) => {
-                                coord.round += 1;
-                                let e = decode_element(&bytes, r.compressed)
-                                    .map_err(|e| crate::data::DataError::Other(e.to_string()))?;
-                                return Ok(Some(e));
-                            }
-                            None => {
-                                if Instant::now() > deadline {
-                                    return Err(crate::data::DataError::Other(format!(
-                                        "coordinated round {} timed out",
-                                        coord.round
-                                    )));
-                                }
-                                std::thread::sleep(Duration::from_millis(2));
-                            }
-                        },
-                        Err(e) => {
-                            if Instant::now() > deadline {
-                                return Err(crate::data::DataError::Other(e.to_string()));
-                            }
-                            std::thread::sleep(Duration::from_millis(10));
-                        }
+                    Ok(Some(Err(e))) => {
+                        coord.finished = true;
+                        Err(e)
+                    }
+                    Ok(None) => Err(crate::data::DataError::Other(format!(
+                        "coordinated round {} timed out",
+                        coord.delivered.load(Ordering::SeqCst)
+                    ))),
+                    // Engine exited (stop/eos already delivered).
+                    Err(_) => {
+                        coord.finished = true;
+                        Ok(None)
                     }
                 }
             }
@@ -1396,7 +1737,8 @@ mod tests {
     fn probe(addr: &str) -> Handshake {
         let pool = Pool::with_defaults();
         let stop = AtomicBool::new(false);
-        open_stream(&pool, addr, 1, 2, 0, None, Duration::from_secs(2), &stop)
+        let (_halt_tx, halt_rx) = chan::bounded::<()>(1);
+        open_stream(&pool, addr, 1, 2, 0, None, Duration::from_secs(2), &stop, &halt_rx)
     }
 
     /// new-client <-> old-worker: a worker that predates the session
@@ -1449,10 +1791,13 @@ mod tests {
                 .unwrap();
         let pool = Pool::with_defaults();
         let stop = Arc::new(AtomicBool::new(false));
+        let (halt_tx, halt_rx) = chan::bounded::<()>(1);
         let s2 = stop.clone();
         std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(60));
             s2.store(true, Ordering::SeqCst);
+            // The halt channel is what interrupts an in-progress backoff.
+            halt_tx.close();
         });
         let t0 = Instant::now();
         let h = open_stream(
@@ -1464,6 +1809,7 @@ mod tests {
             None,
             Duration::from_secs(2),
             &stop,
+            &halt_rx,
         );
         assert!(matches!(h, Handshake::Failed));
         assert!(t0.elapsed() < Duration::from_secs(2), "stop cut the retry loop short");

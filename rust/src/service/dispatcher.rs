@@ -54,9 +54,14 @@ struct WorkerInfo {
     pending_tasks: Vec<TaskDef>,
     /// Consumers that attached to (resp. released from) one of this
     /// worker's jobs since its last heartbeat: the worker registers /
-    /// drops the matching multi-consumer cache cursors (§3.5).
+    /// drops the matching multi-consumer cache cursors (§3.5). (Also
+    /// pushed synchronously via UPDATE_CONSUMERS; this queue is the
+    /// reliable fallback.)
     pending_attach: Vec<ConsumerUpdate>,
     pending_detach: Vec<ConsumerUpdate>,
+    /// Round-lease updates (§3.6) for this worker's coordinated tasks,
+    /// delivered on its next heartbeat.
+    pending_rounds: Vec<RoundAssignment>,
     /// Task (job) ids this worker should currently be running.
     assigned: HashSet<u64>,
     alive: bool,
@@ -70,6 +75,7 @@ impl WorkerInfo {
             pending_tasks: Vec::new(),
             pending_attach: Vec::new(),
             pending_detach: Vec::new(),
+            pending_rounds: Vec::new(),
             assigned,
             alive,
         }
@@ -90,6 +96,16 @@ struct JobState {
     finished: bool,
     /// Worker ordering for coordinated reads, fixed at creation.
     worker_order: Vec<u64>,
+    /// Coordinated reads: current round-lease holder per residue
+    /// (`round % num_workers` -> worker id). Starts as `worker_order`;
+    /// [`Dispatcher::tick`] reassigns a failed owner's residues to
+    /// survivors. The lease is renewed implicitly by worker heartbeats
+    /// (`worker_timeout` is the lease duration).
+    residue_owners: Vec<u64>,
+    /// Coordinated reads: each client's last-reported `next_round` —
+    /// the minimum is the materialization floor handed to a new lease
+    /// holder (no round every consumer has moved past gets re-labeled).
+    client_rounds: HashMap<u64, u64>,
 }
 
 #[derive(Default)]
@@ -109,6 +125,9 @@ struct State {
     journal: Option<Journal>,
     meta: Mutex<Meta>,
     metrics: Registry,
+    /// Connection pool for dispatcher -> worker pushes (UPDATE_CONSUMERS).
+    /// The dispatcher stays off the data path — these carry metadata only.
+    pool: crate::rpc::Pool,
 }
 
 /// A running dispatcher (RPC server + state).
@@ -132,7 +151,13 @@ impl Dispatcher {
             let records = Journal::replay(p).map_err(|e| ServiceError::Journal(e.to_string()))?;
             Self::apply_replay(&mut meta, records, cfg.split_seed);
         }
-        let state = Arc::new(State { cfg, journal, meta: Mutex::new(meta), metrics: Registry::new() });
+        let state = Arc::new(State {
+            cfg,
+            journal,
+            meta: Mutex::new(meta),
+            metrics: Registry::new(),
+            pool: crate::rpc::Pool::with_defaults(),
+        });
 
         let s2 = state.clone();
         let server = Server::bind(addr, move |method: u16, payload: &[u8]| {
@@ -177,6 +202,8 @@ impl Dispatcher {
                             clients: HashSet::new(),
                             finished: false,
                             worker_order: Vec::new(),
+                            residue_owners: Vec::new(),
+                            client_rounds: HashMap::new(),
                         },
                     );
                     meta.next_job_id = meta.next_job_id.max(job_id + 1);
@@ -223,8 +250,12 @@ impl Dispatcher {
     }
 
     /// Declare workers dead whose heartbeat is older than the timeout;
-    /// their in-flight dynamic splits are recorded as lost. Returns the
-    /// failed worker ids. Called by the orchestrator's control loop.
+    /// their in-flight dynamic splits are recorded as lost and their
+    /// coordinated **round leases are reassigned** to surviving owners
+    /// (§3.6 fault tolerance: a lease is renewed by heartbeating, so a
+    /// silent worker forfeits its round residues instead of stalling
+    /// every consumer at its next round forever). Returns the failed
+    /// worker ids. Called by the orchestrator's control loop.
     pub fn tick(&self) -> Vec<u64> {
         let mut meta = self.state.meta.lock().unwrap();
         let timeout = self.state.cfg.worker_timeout;
@@ -242,6 +273,7 @@ impl Dispatcher {
                 w.pending_tasks.clear();
                 w.pending_attach.clear();
                 w.pending_detach.clear();
+                w.pending_rounds.clear();
             }
             for job in meta.jobs.values() {
                 if let Some(t) = &job.tracker {
@@ -249,6 +281,9 @@ impl Dispatcher {
                 }
             }
             self.state.metrics.counter("dispatcher/workers_failed").inc();
+        }
+        if !dead.is_empty() {
+            reassign_round_leases(&mut meta, &self.state.metrics);
         }
         dead
     }
@@ -267,6 +302,71 @@ impl Dispatcher {
         let meta = self.state.meta.lock().unwrap();
         let t = meta.jobs.get(&job_id)?.tracker.as_ref()?;
         Some((t.remaining(), t.completed().len(), t.lost().len()))
+    }
+}
+
+/// Move every dead owner's round residues to surviving lease holders and
+/// queue the updated assignments for delivery on the gaining workers'
+/// next heartbeats. The materialization floor handed to a new owner is
+/// the minimum `next_round` any consumer reported — rounds every
+/// consumer already consumed are never re-labeled, and rounds a slower
+/// consumer still needs get re-materialized from the new owner's own
+/// pipeline (relaxed visitation under failure).
+fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) {
+    // Collect per-job reassignments first (cannot mutate workers while
+    // iterating jobs).
+    let mut grants: Vec<(u64, u64, Vec<u32>, u64)> = Vec::new(); // (worker, job, residues, floor)
+    for (&job_id, job) in meta.jobs.iter_mut() {
+        if job.finished || job.mode != ProcessingMode::Coordinated || job.residue_owners.is_empty()
+        {
+            continue;
+        }
+        let any_dead = job
+            .residue_owners
+            .iter()
+            .any(|w| !meta.workers.get(w).map(|wi| wi.alive).unwrap_or(false));
+        if !any_dead {
+            continue;
+        }
+        // Survivors among the current lease holders, in stable order.
+        let mut survivors: Vec<u64> = job
+            .residue_owners
+            .iter()
+            .copied()
+            .filter(|w| meta.workers.get(w).map(|wi| wi.alive).unwrap_or(false))
+            .collect();
+        survivors.sort_unstable();
+        survivors.dedup();
+        if survivors.is_empty() {
+            continue; // nobody to lease to; clients stall until workers return
+        }
+        let floor = job.client_rounds.values().copied().min().unwrap_or(0);
+        let mut next = 0usize;
+        let mut changed: HashSet<u64> = HashSet::new();
+        for owner in job.residue_owners.iter_mut() {
+            let alive = meta.workers.get(owner).map(|wi| wi.alive).unwrap_or(false);
+            if !alive {
+                *owner = survivors[next % survivors.len()];
+                next += 1;
+                changed.insert(*owner);
+            }
+        }
+        for w in changed {
+            let residues: Vec<u32> = job
+                .residue_owners
+                .iter()
+                .enumerate()
+                .filter(|(_, &o)| o == w)
+                .map(|(i, _)| i as u32)
+                .collect();
+            grants.push((w, job_id, residues, floor));
+            metrics.counter("dispatcher/round_leases_reassigned").inc();
+        }
+    }
+    for (worker_id, job_id, owned_residues, start_round) in grants {
+        if let Some(w) = meta.workers.get_mut(&worker_id) {
+            w.pending_rounds.push(RoundAssignment { job_id, owned_residues, start_round });
+        }
     }
 }
 
@@ -349,6 +449,17 @@ fn make_task(
     let _ = meta;
     let mut consumers: Vec<u64> = job.clients.iter().copied().collect();
     consumers.sort_unstable();
+    // Round residues this worker currently holds the lease for — its
+    // own index at creation; possibly fewer (revived worker whose
+    // residues moved away) or more (survivor that adopted a failed
+    // owner's) later.
+    let owned_residues: Vec<u32> = job
+        .residue_owners
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| w == worker_id)
+        .map(|(i, _)| i as u32)
+        .collect();
     TaskDef {
         job_id,
         dataset_id: job.dataset_id,
@@ -360,6 +471,11 @@ fn make_task(
         worker_index,
         num_workers: job.worker_order.len().max(1) as u32,
         consumers,
+        owned_residues,
+        // Materialization floor: a worker (re-)receiving this task
+        // mid-epoch starts labeling at the minimum round any consumer
+        // still needs, not at round 0.
+        start_round: job.client_rounds.values().copied().min().unwrap_or(0),
     }
 }
 
@@ -413,12 +529,21 @@ fn attach_client(
         _ => return Ok(None), // finished in the gap: caller re-creates
     }
     let update = ConsumerUpdate { job_id, client_id };
+    let mut push_addrs = Vec::new();
     for w in meta.workers.values_mut() {
         if w.assigned.contains(&job_id) {
             w.pending_attach.push(update.clone());
+            if w.alive {
+                push_addrs.push(w.addr.clone());
+            }
         }
     }
     drop(meta);
+    // Synchronous push: register the new cursor on every worker *before*
+    // answering the client, so its first fetch cannot race the eager
+    // window eviction of the cursors already running. Best-effort — the
+    // heartbeat queue above re-delivers (idempotently) if a push fails.
+    push_consumer_updates(state, &push_addrs, vec![update], Vec::new());
     // Fingerprint-matched (auto) attaches and explicit named-job joins
     // are separate signals: only the former measures §3.5 auto sharing.
     if auto {
@@ -427,6 +552,33 @@ fn attach_client(
         state.metrics.counter("dispatcher/named_job_joins").inc();
     }
     Ok(Some(GetOrCreateJobResp { job_id, client_id, attached: true }))
+}
+
+/// Best-effort dispatcher -> worker consumer-update push (the heartbeat
+/// queues remain the reliable, idempotent fallback).
+fn push_consumer_updates(
+    state: &Arc<State>,
+    addrs: &[String],
+    attached: Vec<ConsumerUpdate>,
+    released: Vec<ConsumerUpdate>,
+) {
+    if addrs.is_empty() || (attached.is_empty() && released.is_empty()) {
+        return;
+    }
+    let req = UpdateConsumersReq { attached, released };
+    for addr in addrs {
+        let r: Result<UpdateConsumersResp, _> = crate::rpc::call_typed(
+            &state.pool,
+            addr,
+            worker_methods::UPDATE_CONSUMERS,
+            &req,
+            Duration::from_secs(1),
+        );
+        match r {
+            Ok(_) => state.metrics.counter("dispatcher/consumer_pushes").inc(),
+            Err(_) => state.metrics.counter("dispatcher/consumer_push_failures").inc(),
+        }
+    }
 }
 
 fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResult<GetOrCreateJobResp> {
@@ -488,6 +640,9 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         clients: HashSet::from([client_id]),
         finished: false,
         worker_order: worker_order.clone(),
+        // Round leases start with the fixed round-robin assignment.
+        residue_owners: worker_order.clone(),
+        client_rounds: HashMap::new(),
     };
 
     // Write-ahead, *before* publication: a concurrent sharing attach can
@@ -540,8 +695,14 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
 }
 
 fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResult<ClientHeartbeatResp> {
-    let meta = state.meta.lock().unwrap();
-    let job = meta.jobs.get(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+    let mut meta = state.meta.lock().unwrap();
+    let meta = &mut *meta;
+    let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+    // Coordinated consumers report the next round they will fetch: the
+    // job-wide minimum is the floor for round-lease reassignments.
+    if job.mode == ProcessingMode::Coordinated {
+        job.client_rounds.insert(req.client_id, req.next_round);
+    }
     // Workers serving this job, in the job's fixed coordinated order
     // first, then any later joiners.
     let mut addrs = Vec::new();
@@ -557,7 +718,19 @@ fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResul
             addrs.push(w.addr.clone());
         }
     }
-    Ok(ClientHeartbeatResp { worker_addrs: addrs, job_finished: job.finished })
+    // Residue-indexed round-lease holders: clients route round `r` to
+    // `round_owner_addrs[r % len]`, which tracks reassignments (the
+    // plain `worker_addrs` list shrinks when an owner dies, which would
+    // silently remap every round).
+    let round_owner_addrs: Vec<String> = if job.mode == ProcessingMode::Coordinated {
+        job.residue_owners
+            .iter()
+            .map(|wid| meta.workers.get(wid).map(|w| w.addr.clone()).unwrap_or_default())
+            .collect()
+    } else {
+        Vec::new()
+    };
+    Ok(ClientHeartbeatResp { worker_addrs: addrs, job_finished: job.finished, round_owner_addrs })
 }
 
 fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<RegisterWorkerResp> {
@@ -608,22 +781,54 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         .filter(|t| meta.jobs.get(t).map(|j| !j.finished).unwrap_or(false))
         .collect();
     let w = meta.workers.get_mut(&req.worker_id).ok_or(ServiceError::UnknownWorker(req.worker_id))?;
+    let was_dead = !w.alive;
     w.last_heartbeat = Instant::now();
     w.alive = true;
     w.assigned.extend(live_reported);
     let new_tasks: Vec<TaskDef> = std::mem::take(&mut w.pending_tasks);
     let attached_clients = std::mem::take(&mut w.pending_attach);
     let released_clients = std::mem::take(&mut w.pending_detach);
+    let mut round_assignments = std::mem::take(&mut w.pending_rounds);
     let removed: Vec<u64> =
         req.active_tasks.iter().copied().filter(|t| finished_jobs.contains(t)).collect();
     for t in &removed {
         w.assigned.remove(t);
     }
+    if was_dead {
+        // A worker back from the dead may still believe it owns round
+        // residues that were leased to survivors while it was silent:
+        // hand it the authoritative lease view for every coordinated
+        // job, so a zombie owner stops materializing (and serving)
+        // rounds whose lease moved — split-brain rounds would break the
+        // §3.6 same-batch-per-round guarantee.
+        for (&job_id, job) in meta.jobs.iter() {
+            if job.finished
+                || job.mode != ProcessingMode::Coordinated
+                || job.residue_owners.is_empty()
+            {
+                continue;
+            }
+            let owned_residues: Vec<u32> = job
+                .residue_owners
+                .iter()
+                .enumerate()
+                .filter(|(_, &o)| o == req.worker_id)
+                .map(|(i, _)| i as u32)
+                .collect();
+            round_assignments.push(RoundAssignment { job_id, owned_residues, start_round: 0 });
+        }
+    }
     state
         .metrics
         .gauge("dispatcher/last_worker_cpu_milli")
         .set(req.cpu_util_milli as i64);
-    Ok(WorkerHeartbeatResp { new_tasks, removed_tasks: removed, attached_clients, released_clients })
+    Ok(WorkerHeartbeatResp {
+        new_tasks,
+        removed_tasks: removed,
+        attached_clients,
+        released_clients,
+        round_assignments,
+    })
 }
 
 fn get_split(state: &Arc<State>, req: GetSplitReq) -> ServiceResult<GetSplitResp> {
@@ -638,10 +843,12 @@ fn get_split(state: &Arc<State>, req: GetSplitReq) -> ServiceResult<GetSplitResp
 
 fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJobResp> {
     let mut finished = false;
+    let mut push_addrs = Vec::new();
     {
         let mut meta = state.meta.lock().unwrap();
         let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
         job.clients.remove(&req.client_id);
+        job.client_rounds.remove(&req.client_id);
         if job.clients.is_empty() && !job.finished {
             job.finished = true;
             finished = true;
@@ -658,9 +865,19 @@ fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJ
             for w in meta.workers.values_mut() {
                 if w.assigned.contains(&req.job_id) {
                     w.pending_detach.push(update.clone());
+                    if w.alive {
+                        push_addrs.push(w.addr.clone());
+                    }
                 }
             }
         }
+    }
+    if !finished {
+        // Synchronous push (best-effort): a departed laggard stops
+        // pinning the eagerly-evicted window immediately, not a
+        // heartbeat later.
+        let update = ConsumerUpdate { job_id: req.job_id, client_id: req.client_id };
+        push_consumer_updates(state, &push_addrs, Vec::new(), vec![update]);
     }
     journal_append(state, &JournalRecord::ClientReleased { job_id: req.job_id, client_id: req.client_id })?;
     if finished {
@@ -787,7 +1004,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::CLIENT_HEARTBEAT,
-            &ClientHeartbeatReq { job_id: j.job_id, client_id: j.client_id },
+            &ClientHeartbeatReq { job_id: j.job_id, client_id: j.client_id, next_round: 0 },
             timeout(),
         )
         .unwrap();

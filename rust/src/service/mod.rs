@@ -68,6 +68,51 @@
 //! scatter-gather frame write ([`crate::rpc::Frame::write_parts_to`])
 //! instead of copying the frame into a contiguous response payload.
 //!
+//! ## Coordinated reads (§3.6): round leases + prefetch
+//!
+//! Coordinated mode serves training **rounds**: per round, one worker
+//! hands all `num_consumers` clients same-bucket batches. The round
+//! plane is pipelined end to end:
+//!
+//! * **Worker multi-round buffer** — the coordinated producer
+//!   materializes and *pre-encodes* up to
+//!   `WorkerConfig::round_prefetch_depth` rounds (default 2) ahead of
+//!   consumption, blocking on a condvar at the bound; `Fetch` serves any
+//!   buffered round. Rounds every consumer has moved past (possible only
+//!   after a lease reassignment) are GC'd by consumer watermarks so they
+//!   never pin the buffer.
+//! * **Round leases** — ownership of a residue class
+//!   (`round % num_workers`) is a lease renewed implicitly by worker
+//!   heartbeats; the dispatcher's `worker_timeout` is the lease
+//!   duration. `Dispatcher::tick` moves a silent owner's residues to
+//!   survivors (`RoundAssignment` on their heartbeats, floored at the
+//!   minimum client-reported `next_round`), the new owner
+//!   re-materializes adopted rounds from its own pipeline (relaxed
+//!   visitation under failure), and a revived zombie is handed the
+//!   authoritative (possibly empty) lease view so split-brain rounds
+//!   cannot violate the same-batch-per-round contract. Clients route
+//!   round `r` via the residue-indexed `round_owner_addrs` from their
+//!   heartbeats.
+//! * **Client round prefetch** — a dedicated engine thread fetches up to
+//!   `ServiceClientConfig::round_prefetch_depth` (default 2) rounds
+//!   ahead of trainer demand into a bounded channel: the
+//!   materialize+RPC+decode round-trip for round `r+1` overlaps the
+//!   trainer consuming round `r` instead of sitting on the step critical
+//!   path. The §3.6 contract is untouched: every round slot is still
+//!   fetched exactly once, in order.
+//! * **Capability + downgrade matrix** — prefetch is gated on the
+//!   negotiated [`proto::stream_caps::ROUND_PREFETCH`] bit. New client
+//!   <-> new worker: pipelined (chunk slots keyed by `(round, seq)`
+//!   allow in-flight transfers for several rounds on one session). New
+//!   client <-> worker without the bit: sticky downgrade to lock-step
+//!   demand-driven fetching (`client/round_prefetch_downgrades`). New
+//!   client <-> pre-session worker: lock-step over the legacy
+//!   `GetElement` round protocol. Old clients against new workers see
+//!   the one-slot-per-call behavior unchanged.
+//!
+//! Bench: `cargo bench --bench coordinated_rounds` (prefetch on vs off
+//! under skewed element sizes; `-- --smoke` in CI).
+//!
 //! ## Ephemeral data sharing (§3.5)
 //!
 //! The paper's second headline result: concurrent jobs running the

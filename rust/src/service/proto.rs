@@ -37,6 +37,10 @@ pub mod worker_methods {
     /// Tear down a stream session (best-effort; sessions also die with
     /// their task or a consumer release).
     pub const CLOSE_STREAM: u16 = 37;
+    /// Dispatcher-pushed consumer attach/detach (synchronous counterpart
+    /// of the heartbeat consumer updates): lets the sliding window evict
+    /// eagerly without racing a new consumer's registration.
+    pub const UPDATE_CONSUMERS: u16 = 38;
 }
 
 // ------------------------------------------------- stream-session protocol
@@ -60,8 +64,15 @@ pub mod stream_caps {
     /// Responses carry backpressure hints and the client may vary its
     /// per-fetch budgets (AIMD) instead of using static config.
     pub const ADAPTIVE_BATCHING: u64 = 1 << 2;
+    /// Coordinated reads (§3.6): the worker keeps a bounded multi-round
+    /// buffer and keys in-flight chunked transfers by round, so a client
+    /// may fetch round `r+1` while round `r` is still being consumed
+    /// (pipelined coordinated reads). A client must fall back to
+    /// lock-step (fetch a round only when the trainer demands it)
+    /// against a session that did not grant this bit.
+    pub const ROUND_PREFETCH: u64 = 1 << 3;
     /// Everything this build implements.
-    pub const ALL: u64 = DEFLATE | CHUNKED_TRANSFER | ADAPTIVE_BATCHING;
+    pub const ALL: u64 = DEFLATE | CHUNKED_TRANSFER | ADAPTIVE_BATCHING | ROUND_PREFETCH;
 }
 
 // ------------------------------------------------------------ enum types
@@ -254,16 +265,28 @@ wire_struct!(GetOrCreateJobResp { job_id, client_id, attached });
 pub struct ClientHeartbeatReq {
     pub job_id: u64,
     pub client_id: u64,
+    /// Coordinated mode: the next round this consumer will fetch. The
+    /// dispatcher uses the minimum over a job's consumers as the
+    /// materialization floor when a round lease is reassigned after an
+    /// owner failure (the new owner never labels rounds every consumer
+    /// has already moved past). Independent-mode clients send 0.
+    pub next_round: u64,
 }
-wire_struct!(ClientHeartbeatReq { job_id, client_id });
+wire_struct!(ClientHeartbeatReq { job_id, client_id, next_round });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClientHeartbeatResp {
     /// Addresses of workers currently running this job's task.
     pub worker_addrs: Vec<String>,
     pub job_finished: bool,
+    /// Coordinated mode: current round-lease holders, indexed by residue
+    /// (`round % num_workers`), so clients route round `r` to
+    /// `round_owner_addrs[r % len]` even after a lease was reassigned.
+    /// Empty for independent jobs (and from pre-lease dispatchers, where
+    /// clients fall back to `worker_addrs[r % len]`).
+    pub round_owner_addrs: Vec<String>,
 }
-wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished });
+wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished, round_owner_addrs });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReleaseJobReq {
@@ -313,6 +336,26 @@ pub struct ConsumerUpdate {
 }
 wire_struct!(ConsumerUpdate { job_id, client_id });
 
+/// A round-lease update for one coordinated job (§3.6 fault tolerance):
+/// the complete set of round residues (`round % num_workers`) this worker
+/// now owns, delivered on its heartbeat after the dispatcher reassigned a
+/// failed owner's lease. Round ownership is leased, not fixed: a worker's
+/// heartbeat renews its lease implicitly, and a worker silent past the
+/// dispatcher's `worker_timeout` forfeits its residues to the survivors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAssignment {
+    pub job_id: u64,
+    /// All residues this worker now owns (replaces its previous set).
+    pub owned_residues: Vec<u32>,
+    /// Materialization floor for newly-adopted residues: the new owner
+    /// starts labeling adopted rounds at the smallest round `>= this`
+    /// in the residue class (the minimum round any consumer still
+    /// needs), re-materializing from its own pipeline under the relaxed
+    /// visitation guarantee.
+    pub start_round: u64,
+}
+wire_struct!(RoundAssignment { job_id, owned_residues, start_round });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerHeartbeatResp {
     /// Newly-assigned tasks.
@@ -325,8 +368,16 @@ pub struct WorkerHeartbeatResp {
     /// Clients that released since the last heartbeat: drop their cursors
     /// so a departed consumer cannot pin the sliding window.
     pub released_clients: Vec<ConsumerUpdate>,
+    /// Round-lease reassignments for this worker's coordinated tasks.
+    pub round_assignments: Vec<RoundAssignment>,
 }
-wire_struct!(WorkerHeartbeatResp { new_tasks, removed_tasks, attached_clients, released_clients });
+wire_struct!(WorkerHeartbeatResp {
+    new_tasks,
+    removed_tasks,
+    attached_clients,
+    released_clients,
+    round_assignments
+});
 
 /// A data-processing task: one job's pipeline on one worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -348,6 +399,18 @@ pub struct TaskDef {
     /// cursor set of the multi-consumer cache; later joins/leaves arrive
     /// via [`WorkerHeartbeatResp`] consumer updates).
     pub consumers: Vec<u64>,
+    /// Coordinated mode: round residues this worker currently holds the
+    /// lease for (normally `[worker_index]`; empty for a late joiner or
+    /// a revived worker whose residues were reassigned while it was
+    /// dead). Lease changes after delivery arrive as
+    /// [`RoundAssignment`]s on heartbeats.
+    pub owned_residues: Vec<u32>,
+    /// Coordinated mode: materialization floor — the minimum round any
+    /// consumer still needs (0 for a fresh job). A restarted worker
+    /// re-receiving its task mid-epoch starts labeling here instead of
+    /// crawling from round 0 through thousands of rounds every consumer
+    /// has already moved past.
+    pub start_round: u64,
 }
 wire_struct!(TaskDef {
     job_id,
@@ -359,7 +422,9 @@ wire_struct!(TaskDef {
     static_shards,
     worker_index,
     num_workers,
-    consumers
+    consumers,
+    owned_residues,
+    start_round
 });
 
 #[derive(Debug, Clone, PartialEq)]
@@ -632,6 +697,28 @@ pub struct CloseStreamResp {
 }
 wire_struct!(CloseStreamResp { closed });
 
+/// Dispatcher -> worker push of consumer churn (attaches and releases),
+/// sent best-effort the moment a client joins or leaves a shared job.
+/// The heartbeat consumer updates remain the reliable fallback: applying
+/// an update twice is idempotent (registration re-anchors nothing,
+/// releases tombstone). The push is what makes **eager window eviction**
+/// safe — without it, a new consumer's cursor could register a heartbeat
+/// interval late and miss elements the existing cursors already consumed
+/// (and eagerly evicted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateConsumersReq {
+    pub attached: Vec<ConsumerUpdate>,
+    pub released: Vec<ConsumerUpdate>,
+}
+wire_struct!(UpdateConsumersReq { attached, released });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateConsumersResp {
+    /// Number of updates that landed on a live task (informational).
+    pub applied: u32,
+}
+wire_struct!(UpdateConsumersResp { applied });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStatusReq {}
 wire_struct!(WorkerStatusReq {});
@@ -714,8 +801,12 @@ mod tests {
             sharing: SharingMode::Auto,
         });
         rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true });
-        rt(ClientHeartbeatReq { job_id: 3, client_id: 8 });
-        rt(ClientHeartbeatResp { worker_addrs: vec!["127.0.0.1:1234".into()], job_finished: false });
+        rt(ClientHeartbeatReq { job_id: 3, client_id: 8, next_round: 42 });
+        rt(ClientHeartbeatResp {
+            worker_addrs: vec!["127.0.0.1:1234".into()],
+            job_finished: false,
+            round_owner_addrs: vec!["127.0.0.1:1234".into(), "127.0.0.1:1234".into()],
+        });
         rt(RegisterWorkerReq { addr: "127.0.0.1:9".into() });
         rt(RegisterWorkerResp {
             worker_id: 2,
@@ -730,6 +821,8 @@ mod tests {
                 worker_index: 1,
                 num_workers: 4,
                 consumers: vec![8, 9],
+                owned_residues: vec![1, 3],
+                start_round: 21,
             }],
         });
         rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });
@@ -738,7 +831,17 @@ mod tests {
             removed_tasks: vec![3],
             attached_clients: vec![ConsumerUpdate { job_id: 3, client_id: 11 }],
             released_clients: vec![ConsumerUpdate { job_id: 3, client_id: 8 }],
+            round_assignments: vec![RoundAssignment {
+                job_id: 3,
+                owned_residues: vec![0, 2],
+                start_round: 17,
+            }],
         });
+        rt(UpdateConsumersReq {
+            attached: vec![ConsumerUpdate { job_id: 3, client_id: 11 }],
+            released: vec![],
+        });
+        rt(UpdateConsumersResp { applied: 1 });
         rt(GetSplitReq { job_id: 3, worker_id: 2 });
         rt(GetSplitResp { split: Some(7) });
         rt(GetSplitResp { split: None });

@@ -12,12 +12,15 @@
 //!   cache** ([`SlidingCache`], §3.5) with one cursor per client. Clients
 //!   at the cache front drive production and eviction; laggards that fall
 //!   off the back skip evicted batches (relaxed visitation).
-//! * **Coordinated** ([`CoordinatedState`], §3.6) — the worker serves only
-//!   rounds `r` with `r % num_workers == worker_index`; per round it
-//!   prepares `num_consumers` same-length-bucket batches (the upstream
-//!   graph's `bucket_by_sequence_length` + `group_by_window` produce
-//!   same-bucket runs), one per consumer slot. Coordination never spans
-//!   workers — only rounds do.
+//! * **Coordinated** ([`CoordinatedState`], §3.6) — the worker serves the
+//!   rounds whose residue (`r % num_workers`) it currently holds the
+//!   **lease** for (normally its own `worker_index`; a failed owner's
+//!   residues are re-leased by the dispatcher). Per round it prepares
+//!   `num_consumers` same-length-bucket batches (the upstream graph's
+//!   `bucket_by_sequence_length` + `group_by_window` produce same-bucket
+//!   runs), one per consumer slot, pre-encoded and buffered up to
+//!   [`WorkerConfig::round_prefetch_depth`] rounds ahead of consumption.
+//!   Coordination never spans workers — only rounds do.
 
 use super::proto::*;
 use super::sharding::{DynamicSplitProvider, ShuffledAllSplits};
@@ -56,6 +59,25 @@ pub struct WorkerConfig {
     /// How long GetElement blocks for data before telling the client to
     /// retry; also the upper bound on a GetElements long-poll.
     pub serve_timeout: Duration,
+    /// Coordinated reads (§3.6): how many rounds the producer
+    /// materializes — and pre-encodes — ahead of consumption. 2 means
+    /// the round being consumed plus one fully buffered behind it, the
+    /// round-prefetch pipeline's worker half. The producer blocks on a
+    /// condvar (no polling) when the buffer is full.
+    pub round_prefetch_depth: usize,
+    /// Capability bits this worker grants in stream-session handshakes
+    /// (the negotiated set is the intersection with the client's offer).
+    /// Defaults to everything this build implements; masking bits off
+    /// simulates older peers in tests and supports staged rollouts.
+    pub stream_caps: u64,
+    /// Eagerly evict sliding-window elements already consumed by every
+    /// registered cursor (§3.5 window-sizing follow-up) instead of
+    /// waiting for the capacity/byte-budget trim: steady-state window
+    /// RAM shrinks to the consumer spread. Safe because consumer
+    /// attaches are pushed to workers synchronously (UPDATE_CONSUMERS);
+    /// a late lazy attacher starts at the live frontier instead of
+    /// replaying the retained window.
+    pub eager_window_eviction: bool,
 }
 
 /// GetElements/Fetch defaults applied when a request leaves a knob at 0.
@@ -84,6 +106,9 @@ impl WorkerConfig {
             cache_window_bytes: 64 << 20,
             heartbeat_interval: Duration::from_millis(100),
             serve_timeout: Duration::from_secs(5),
+            round_prefetch_depth: 2,
+            stream_caps: stream_caps::ALL,
+            eager_window_eviction: true,
         }
     }
 }
@@ -103,6 +128,9 @@ struct SlidingCache {
     cond: Condvar,
     capacity: usize,
     byte_budget: usize,
+    /// Eagerly evict elements consumed by every registered cursor (see
+    /// [`WorkerConfig::eager_window_eviction`]).
+    eager: bool,
     /// Registry counters fed directly by the cache (single source of
     /// truth for the §3.5 sharing ledger — call sites cannot forget the
     /// bump and diverge from the cache-internal stats).
@@ -193,7 +221,13 @@ enum BatchServe {
 }
 
 impl SlidingCache {
-    fn new(capacity: usize, byte_budget: usize, job_id: u64, metrics: &Registry) -> SlidingCache {
+    fn new(
+        capacity: usize,
+        byte_budget: usize,
+        eager: bool,
+        job_id: u64,
+        metrics: &Registry,
+    ) -> SlidingCache {
         SlidingCache {
             state: Mutex::new(SlidingCacheState {
                 window: Default::default(),
@@ -211,6 +245,7 @@ impl SlidingCache {
             cond: Condvar::new(),
             capacity: capacity.max(1),
             byte_budget: byte_budget.max(1),
+            eager,
             shared_ctr: metrics.counter("worker/shared_elements_served"),
             skip_ctr: metrics.counter("worker/relaxed_visitation_skips"),
             win_elems_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_elements")),
@@ -219,15 +254,19 @@ impl SlidingCache {
     }
 
     /// Register a consumer's cursor at the oldest retained element. Done
-    /// eagerly when the dispatcher announces the consumer (task creation
-    /// or sharing attach), and lazily on first fetch as a fallback.
-    fn register_consumer(&self, client: u64) {
+    /// eagerly when the dispatcher announces the consumer (task
+    /// creation, sharing attach push, or heartbeat fallback), and lazily
+    /// on first fetch. Returns whether the cursor is newly registered
+    /// (push + heartbeat may deliver the same attach; only one counts).
+    fn register_consumer(&self, client: u64) -> bool {
         let mut st = self.state.lock().unwrap();
         if st.removed.contains(&client) {
-            return;
+            return false;
         }
         let base = st.base_seq;
+        let newly = !st.cursors.contains_key(&client);
         st.cursors.entry(client).or_insert(base);
+        newly
     }
 
     /// Drop a released consumer's cursor (and tombstone the id) so it no
@@ -236,7 +275,38 @@ impl SlidingCache {
     fn remove_consumer(&self, client: u64) -> bool {
         let mut st = self.state.lock().unwrap();
         st.removed.insert(client);
-        st.cursors.remove(&client).is_some()
+        let existed = st.cursors.remove(&client).is_some();
+        // A departing laggard may have been the only cursor pinning the
+        // back of the window.
+        self.trim_consumed(&mut st);
+        existed
+    }
+
+    /// Eager eviction (§3.5 window-sizing follow-up): drop elements
+    /// every registered cursor has already consumed instead of holding
+    /// them until the capacity/byte-budget trim. Steady-state window RAM
+    /// then tracks the consumer spread, not the configured capacity. A
+    /// consumer the dispatcher knows about registers its cursor before
+    /// its first fetch (synchronous UPDATE_CONSUMERS push, task-creation
+    /// consumer list, or the heartbeat fallback), so the minimum below
+    /// cannot run ahead of a known consumer.
+    fn trim_consumed(&self, st: &mut SlidingCacheState) {
+        if !self.eager || st.cursors.is_empty() {
+            return;
+        }
+        let min = st.cursors.values().copied().min().unwrap_or(st.base_seq);
+        let mut evicted = false;
+        while st.base_seq < min && !st.window.is_empty() {
+            let old = st.window.pop_front().expect("non-empty window");
+            st.window_bytes -= old.len();
+            st.base_seq += 1;
+            st.evictions += 1;
+            evicted = true;
+        }
+        if evicted {
+            self.win_elems_gauge.set(st.window.len() as i64);
+            self.win_bytes_gauge.set(st.window_bytes as i64);
+        }
     }
 
     /// Registered consumer count (shared streams have >= 2).
@@ -278,6 +348,7 @@ impl SlidingCache {
             let e = st.window[idx].clone(); // Arc bump, no copy
             st.cursors.insert(client, cursor + 1);
             st.hits += 1;
+            self.trim_consumed(&mut st);
             return CacheServe::Bytes(e);
         }
         if st.eos {
@@ -406,6 +477,7 @@ impl SlidingCache {
                 }
                 st.cursors.insert(client, cursor + 1);
                 st.hits += 1;
+                self.trim_consumed(&mut st);
                 return BatchServe::Oversized(e);
             }
             if !out.is_empty() && bytes + e.len() > max_bytes {
@@ -419,6 +491,7 @@ impl SlidingCache {
         st.cursors.insert(client, cursor);
         let drained = (cursor - base) as usize >= st.window.len();
         let end = st.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
+        self.trim_consumed(&mut st);
         BatchServe::Batch(out, end)
     }
 
@@ -426,6 +499,16 @@ impl SlidingCache {
         let mut st = self.state.lock().unwrap();
         st.eos = true;
         self.cond.notify_all();
+    }
+
+    /// Block briefly until another handler publishes into (or finishes)
+    /// the window — used instead of a polling sleep when the producer
+    /// channel has closed but a concurrent handler still holds
+    /// popped-but-unpublished elements ([`SlidingCache::push_encoded`]
+    /// notifies this condvar).
+    fn wait_for_publish(&self, timeout: Duration) {
+        let st = self.state.lock().unwrap();
+        let _ = self.cond.wait_timeout(st, timeout).unwrap();
     }
 
     fn stats(&self) -> CacheStats {
@@ -442,50 +525,161 @@ impl SlidingCache {
     }
 }
 
-/// Per-round coordinated-read state (§3.6).
+/// Multi-round coordinated-read state (§3.6) with round-lease prefetch.
+///
+/// The producer materializes — and **pre-encodes** — up to `depth`
+/// rounds ahead of consumption, so round `r+1` is already on this worker
+/// (encoded once, served as `Arc` clones) while the consumers are still
+/// draining round `r`: the tf.data `prefetch` insight applied across the
+/// wire. Consumers can read any buffered round.
+///
+/// Round ownership is a **lease** over residue classes
+/// (`round % num_workers`), not a fixed assignment: normally just this
+/// worker's index, renewed implicitly by its dispatcher heartbeats. When
+/// an owner fails (silent past the dispatcher's `worker_timeout`), the
+/// dispatcher reassigns its residues to survivors ([`RoundAssignment`]);
+/// the new owner re-materializes the adopted rounds from its own
+/// pipeline under the relaxed visitation guarantee, so prefetch never
+/// turns an owner crash into a permanent stall.
+///
+/// Consumers asking for round `R` implicitly declare every round `< R`
+/// consumed (their round walk is monotonic); rounds below the minimum
+/// such watermark were abandoned during a reassignment (every consumer
+/// moved past them before this worker materialized its copy) and are
+/// GC'd so they cannot pin the bounded buffer forever.
 struct CoordinatedState {
     inner: Mutex<CoordinatedInner>,
+    /// Signaled when a round materializes, ownership changes, or eos.
     cond: Condvar,
+    /// Signaled when buffer space frees (round consumed / abandoned) or
+    /// ownership changes — the producer's backpressure wait.
+    space: Condvar,
     num_consumers: usize,
-    worker_index: u64,
     num_workers: u64,
+    /// Max rounds buffered ahead ([`WorkerConfig::round_prefetch_depth`]).
+    depth: usize,
 }
 
 struct CoordinatedInner {
-    /// round -> per-consumer slots (None once consumed).
-    rounds: HashMap<u64, Vec<Option<Element>>>,
-    /// Next round this worker will materialize.
-    next_round: u64,
+    /// round -> per-consumer pre-encoded slots (None once consumed).
+    rounds: HashMap<u64, Vec<Option<Arc<Vec<u8>>>>>,
+    /// Round residues this worker currently holds the lease for.
+    owned: std::collections::BTreeSet<u64>,
+    /// Next round label to materialize, per owned residue (invariant:
+    /// every owned residue has an entry).
+    next_by_residue: HashMap<u64, u64>,
+    /// Per-consumer progress: the highest round each consumer has asked
+    /// this worker for (bumped past on a successful take). Feeds the
+    /// abandoned-round GC above.
+    watermarks: Vec<u64>,
     eos: bool,
+    /// Consumer slots dropped unconsumed (abandoned rounds GC'd, or
+    /// buffered rounds of a residue whose lease moved away).
+    abandoned_slots: u64,
+    /// Task removed / worker shutting down: unblock the producer.
+    stopped: bool,
+}
+
+/// Outcome of a coordinated round read ([`CoordinatedState::take`]).
+enum RoundTake {
+    /// The consumer's pre-encoded slot for the round.
+    Bytes(Arc<Vec<u8>>),
+    /// This worker does not hold the round's lease.
+    WrongWorker,
+    Eos,
+    /// Not materialized within the poll window: the client retries.
+    Pending,
 }
 
 impl CoordinatedState {
-    fn new(num_consumers: usize, worker_index: u64, num_workers: u64) -> CoordinatedState {
+    fn new(
+        num_consumers: usize,
+        worker_index: u64,
+        num_workers: u64,
+        owned_residues: &[u32],
+        start_round: u64,
+        depth: usize,
+    ) -> CoordinatedState {
+        let num_workers = num_workers.max(1);
+        let mut owned: std::collections::BTreeSet<u64> =
+            owned_residues.iter().map(|&r| r as u64 % num_workers).collect();
+        if owned.is_empty() && worker_index < num_workers {
+            // Pre-lease dispatchers send no residue set: fall back to the
+            // fixed `worker_index` assignment. A late joiner
+            // (worker_index == num_workers) starts with no lease and its
+            // producer parks until granted one.
+            owned.insert(worker_index);
+        }
+        // Label from the dispatcher's floor (min round any consumer still
+        // needs): a restarted worker rejoining mid-epoch must not crawl
+        // from round 0 through abandoned labels.
+        let next_by_residue = owned
+            .iter()
+            .map(|&r| {
+                let mut aligned = (start_round / num_workers) * num_workers + r;
+                if aligned < start_round {
+                    aligned += num_workers;
+                }
+                (r, aligned)
+            })
+            .collect();
         CoordinatedState {
             inner: Mutex::new(CoordinatedInner {
                 rounds: HashMap::new(),
-                next_round: worker_index,
+                owned,
+                next_by_residue,
+                watermarks: vec![0; num_consumers.max(1)],
                 eos: false,
+                abandoned_slots: 0,
+                stopped: false,
             }),
             cond: Condvar::new(),
+            space: Condvar::new(),
             num_consumers: num_consumers.max(1),
-            worker_index,
-            num_workers: num_workers.max(1),
+            num_workers,
+            depth: depth.max(1),
         }
     }
 
+    #[cfg(test)]
     fn owns_round(&self, round: u64) -> bool {
-        round % self.num_workers == self.worker_index
+        self.inner.lock().unwrap().owned.contains(&(round % self.num_workers))
+    }
+
+    /// Rounds currently buffered (backpressure hint).
+    fn buffered_rounds(&self) -> usize {
+        self.inner.lock().unwrap().rounds.len()
     }
 
     /// Producer side: install the next round's batches (already
-    /// same-bucket thanks to the upstream group_by_window).
-    fn install_round(&self, batches: Vec<Element>) {
+    /// same-bucket thanks to the upstream group_by_window, already
+    /// encoded by the producer). Blocks on the space condvar while the
+    /// buffer holds `depth` rounds or this worker owns no residues; the
+    /// round label is the smallest unmaterialized round among owned
+    /// residues, so output streams in increasing round order. Returns
+    /// false when the task stopped.
+    fn install_round(&self, batches: Vec<Arc<Vec<u8>>>) -> bool {
         let mut st = self.inner.lock().unwrap();
-        let round = st.next_round;
+        loop {
+            if st.stopped {
+                return false;
+            }
+            if !st.owned.is_empty() && st.rounds.len() < self.depth {
+                break;
+            }
+            st = self.space.wait(st).unwrap();
+        }
+        let (residue, round) = st
+            .owned
+            .iter()
+            .map(|&r| (r, st.next_by_residue[&r]))
+            .min_by_key(|&(_, next)| next)
+            .expect("non-empty owned set");
         st.rounds.insert(round, batches.into_iter().map(Some).collect());
-        st.next_round = round + self.num_workers;
+        st.next_by_residue.insert(residue, round + self.num_workers);
+        drop(st);
         self.cond.notify_all();
+        true
     }
 
     fn set_eos(&self) {
@@ -494,17 +688,79 @@ impl CoordinatedState {
         self.cond.notify_all();
     }
 
-    /// Consumer side: take `consumer`'s batch for `round`, blocking up to
-    /// `timeout` for the round to materialize.
-    fn take(&self, round: u64, consumer: usize, timeout: Duration) -> ServiceResult<GetElementResp> {
-        if !self.owns_round(round) {
-            return Ok(GetElementResp {
-                element: None,
-                compressed: false,
-                end_of_sequence: false,
-                wrong_worker_for_round: true,
-            });
+    /// Unblock a producer parked on backpressure (task removal/shutdown).
+    fn halt(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.stopped = true;
+        self.cond.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Apply a round-lease update: `residues` replaces the owned set.
+    /// Newly-adopted residues start materializing at the smallest round
+    /// `>= start_round` in their class (the dispatcher's floor = the
+    /// minimum round any consumer still needs); buffered rounds of
+    /// residues no longer owned are dropped — their consumers now ask
+    /// the new lease holder.
+    fn set_owned(&self, residues: &[u64], start_round: u64) {
+        let mut st = self.inner.lock().unwrap();
+        let new: std::collections::BTreeSet<u64> =
+            residues.iter().map(|&r| r % self.num_workers).collect();
+        for &r in &new {
+            // Smallest round >= start_round with round % num_workers == r.
+            let mut aligned = (start_round / self.num_workers) * self.num_workers + r;
+            if aligned < start_round {
+                aligned += self.num_workers;
+            }
+            if st.owned.contains(&r) {
+                // Residue retained across the update: keep its
+                // materialization progress (resetting would re-label
+                // rounds consumers already took).
+                st.next_by_residue.entry(r).or_insert(aligned);
+            } else {
+                // Newly (re-)adopted: label from the dispatcher's floor —
+                // the minimum round any consumer still needs. A stale
+                // progress marker from a previous tenure must NOT
+                // survive: its buffered rounds were dropped when the
+                // lease moved away, so keeping it would answer consumers
+                // "round already consumed" for rounds never delivered.
+                st.next_by_residue.insert(r, aligned);
+            }
         }
+        let dropped: Vec<u64> = st
+            .rounds
+            .keys()
+            .copied()
+            .filter(|r| !new.contains(&(r % self.num_workers)))
+            .collect();
+        for r in dropped {
+            if let Some(slots) = st.rounds.remove(&r) {
+                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+            }
+        }
+        st.owned = new;
+        drop(st);
+        self.cond.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Drop buffered rounds every consumer has moved past (see the type
+    /// docs). Caller holds the lock and notifies `space` if it needs to.
+    fn gc_abandoned(st: &mut CoordinatedInner) -> bool {
+        let min = st.watermarks.iter().copied().min().unwrap_or(0);
+        let stale: Vec<u64> = st.rounds.keys().copied().filter(|&r| r < min).collect();
+        let any = !stale.is_empty();
+        for r in stale {
+            if let Some(slots) = st.rounds.remove(&r) {
+                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+            }
+        }
+        any
+    }
+
+    /// Consumer side: take `consumer`'s slot for `round`, blocking up to
+    /// `timeout` for the round to materialize.
+    fn take(&self, round: u64, consumer: usize, timeout: Duration) -> ServiceResult<RoundTake> {
         if consumer >= self.num_consumers {
             return Err(ServiceError::Other(format!(
                 "consumer index {consumer} out of range ({})",
@@ -513,51 +769,61 @@ impl CoordinatedState {
         }
         let deadline = Instant::now() + timeout;
         let mut st = self.inner.lock().unwrap();
+        // Asking for `round` implies every earlier round was consumed
+        // (or abandoned) by this consumer: advance its watermark and GC
+        // rounds nobody will ever fetch again.
+        if st.watermarks[consumer] < round {
+            st.watermarks[consumer] = round;
+            if Self::gc_abandoned(&mut st) {
+                self.space.notify_all();
+            }
+        }
         loop {
+            if !st.owned.contains(&(round % self.num_workers)) {
+                return Ok(RoundTake::WrongWorker);
+            }
             if let Some(slots) = st.rounds.get_mut(&round) {
                 let e = slots[consumer].take();
-                let all_taken = slots.iter().all(Option::is_none);
-                if all_taken {
+                if slots.iter().all(Option::is_none) {
                     st.rounds.remove(&round);
+                    self.space.notify_all();
                 }
                 return match e {
-                    Some(elem) => Ok(GetElementResp {
-                        element: Some(elem.to_bytes()),
-                        compressed: false,
-                        end_of_sequence: false,
-                        wrong_worker_for_round: false,
-                    }),
+                    Some(bytes) => {
+                        st.watermarks[consumer] = st.watermarks[consumer].max(round + 1);
+                        Ok(RoundTake::Bytes(bytes))
+                    }
                     None => Err(ServiceError::Other(format!(
                         "consumer {consumer} fetched round {round} twice"
                     ))),
                 };
             }
-            if round < st.next_round {
-                // The round was materialized and fully consumed already —
-                // a client asking again is a protocol violation.
+            let next = st
+                .next_by_residue
+                .get(&(round % self.num_workers))
+                .copied()
+                .unwrap_or(round);
+            if round < next {
+                // Materialized earlier and since fully consumed — a
+                // client asking again is a protocol violation.
                 return Err(ServiceError::Other(format!("round {round} already consumed")));
             }
-            if st.eos && round >= st.next_round {
-                return Ok(GetElementResp {
-                    element: None,
-                    compressed: false,
-                    end_of_sequence: true,
-                    wrong_worker_for_round: false,
-                });
+            if st.eos {
+                return Ok(RoundTake::Eos);
             }
-            if st.eos || Instant::now() >= deadline {
-                // Round will never materialize (or timeout): if eos, it's
-                // the end; otherwise ask the client to retry.
-                return Ok(GetElementResp {
-                    element: None,
-                    compressed: false,
-                    end_of_sequence: st.eos,
-                    wrong_worker_for_round: false,
-                });
+            if Instant::now() >= deadline {
+                return Ok(RoundTake::Pending);
             }
             let wait = deadline.saturating_duration_since(Instant::now());
-            let (next, _) = self.cond.wait_timeout(st, wait).unwrap();
-            st = next;
+            let (next_st, _) = self.cond.wait_timeout(st, wait).unwrap();
+            st = next_st;
+            // A producer catching up after a lease change can install
+            // rounds every consumer already moved past: collect them as
+            // they appear so the bounded buffer never wedges on stale
+            // labels while a consumer is waiting.
+            if Self::gc_abandoned(&mut st) {
+                self.space.notify_all();
+            }
         }
     }
 }
@@ -587,6 +853,25 @@ struct TaskRunner {
     stop: Arc<AtomicBool>,
     /// Nanoseconds of producer busy time (CPU-utilization signal).
     busy_ns: Arc<AtomicU64>,
+    /// This task's AUTOTUNE state: the replan controller in the
+    /// heartbeat loop feeds observed production rate + backpressure into
+    /// per-stage parallelism targets ([`replan_tasks`]).
+    autotune: Arc<crate::data::autotune::AutotuneState>,
+    /// Elements this task's producer has emitted (replan rate window).
+    produced: Arc<AtomicU64>,
+    /// `produced` at the previous replan tick.
+    last_produced: AtomicU64,
+}
+
+impl TaskRunner {
+    /// Stop the producer, including one parked on coordinated-round
+    /// backpressure (the bounded buffer wait must not outlive the task).
+    fn halt(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let TaskState::Coordinated(coord) = &self.state {
+            coord.halt();
+        }
+    }
 }
 
 /// One negotiated client<->worker stream (the tentpole of the versioned
@@ -603,14 +888,24 @@ struct StreamSession {
     max_frame: usize,
     /// Coordinated mode: the consumer slot this session reads for.
     consumer_index: Option<u32>,
-    /// Pending oversized element mid chunked transfer (independent and
-    /// coordinated alike), tagged with its session-unique `chunk_seq`:
-    /// progress lives client-side as the `(chunk_seq, chunk_offset)` it
-    /// sends back, and the seq tag keeps a retried ack from a previous,
-    /// already-released element from touching this one. The second field
-    /// is the next seq to assign.
-    chunk: Mutex<(Option<(u64, Arc<Vec<u8>>)>, u64)>,
+    /// Pending oversized elements mid chunked transfer, keyed by the
+    /// round they came from ([`INDEPENDENT_CHUNK_KEY`] for the
+    /// independent stream, which has no rounds). With round prefetch a
+    /// session may have transfers for several rounds in flight at once —
+    /// so the chunk slot is keyed by `(round, chunk_seq)` rather than
+    /// being a scalar. Each parked element carries a session-unique
+    /// `chunk_seq`: progress lives client-side as the
+    /// `(chunk_seq, chunk_offset)` it echoes back, the seq tag keeps a
+    /// retried ack from a previous, already-released element from
+    /// touching a new one, and release acks are matched by seq across
+    /// all parked rounds (the ack for round `r`'s element rides the
+    /// first request for round `r+1`). The second field is the next seq
+    /// to assign.
+    chunk: Mutex<(HashMap<u64, (u64, Arc<Vec<u8>>)>, u64)>,
 }
+
+/// Chunk-slot key for the (round-less) independent stream.
+const INDEPENDENT_CHUNK_KEY: u64 = u64::MAX;
 
 impl StreamSession {
     /// Largest element-byte payload a response frame may carry.
@@ -618,13 +913,13 @@ impl StreamSession {
         self.max_frame.min(crate::rpc::MAX_FRAME_LEN).saturating_sub(FRAME_HEADROOM)
     }
 
-    /// Park an oversized element for continuation-frame delivery and
-    /// return its freshly-assigned chunk seq.
-    fn park_chunk(&self, bytes: Arc<Vec<u8>>) -> u64 {
+    /// Park an oversized element under `round_key` for
+    /// continuation-frame delivery and return its fresh chunk seq.
+    fn park_chunk(&self, round_key: u64, bytes: Arc<Vec<u8>>) -> u64 {
         let mut st = self.chunk.lock().unwrap();
         let seq = st.1;
         st.1 += 1;
-        st.0 = Some((seq, bytes));
+        st.0.insert(round_key, (seq, bytes));
         seq
     }
 }
@@ -720,7 +1015,7 @@ impl Worker {
     pub fn shutdown(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         for t in self.shared.tasks.lock().unwrap().values() {
-            t.stop.store(true, Ordering::SeqCst);
+            t.halt();
         }
         self.server.shutdown();
     }
@@ -735,13 +1030,106 @@ impl Drop for Worker {
     }
 }
 
+/// Register newly-attached consumers' cursors and drop released ones.
+/// Shared by the heartbeat delivery path and the dispatcher's synchronous
+/// [`worker_methods::UPDATE_CONSUMERS`] push; both may deliver the same
+/// update — registration and tombstoning are idempotent, and the counters
+/// only move on the first application. Returns how many updates landed on
+/// a live independent-mode task.
+fn apply_consumer_updates(
+    shared: &Arc<WorkerShared>,
+    attached: &[ConsumerUpdate],
+    released: &[ConsumerUpdate],
+) -> u32 {
+    let mut applied = 0u32;
+    for cu in attached {
+        if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
+            if let TaskState::Independent { cache, .. } = &t.state {
+                if cache.register_consumer(cu.client_id) {
+                    shared.metrics.counter("worker/consumers_attached").inc();
+                    applied += 1;
+                }
+            }
+        }
+    }
+    for cu in released {
+        if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
+            if let TaskState::Independent { cache, .. } = &t.state {
+                if cache.remove_consumer(cu.client_id) {
+                    shared.metrics.counter("worker/consumers_detached").inc();
+                    applied += 1;
+                }
+            }
+        }
+        // A released consumer's stream sessions die with it; a straggler
+        // Fetch then errors instead of resurrecting chunk state for a
+        // departed client.
+        shared
+            .sessions
+            .lock()
+            .unwrap()
+            .retain(|_, s| !(s.job_id == cu.job_id && s.client_id == cu.client_id));
+    }
+    applied
+}
+
+/// The AUTOTUNE replan controller (§3.2, wired into the worker): feed the
+/// backpressure signals the data plane already collects — producer
+/// ready-queue depth, window occupancy, buffered coordinated rounds —
+/// into per-stage parallelism targets. Producer running ahead of
+/// consumption plans for half the observed rate (freeing CPU for other
+/// tasks on the worker); consumers starving plan for double (scaling the
+/// map stages up within the CPU budget). Elastic stages apply the new
+/// plan immediately (threads park/unpark on the plan generation).
+fn replan_tasks(shared: &Arc<WorkerShared>, dt: f64) {
+    if dt <= 0.0 {
+        return;
+    }
+    let tasks: Vec<Arc<TaskRunner>> = shared.tasks.lock().unwrap().values().cloned().collect();
+    for t in tasks {
+        let produced = t.produced.load(Ordering::Relaxed);
+        let last = t.last_produced.swap(produced, Ordering::Relaxed);
+        if produced == last {
+            // No progress this window: stalled or finished — a replan
+            // would read an empty measurement window and plan blind.
+            continue;
+        }
+        let rate = produced.saturating_sub(last) as f64 / dt;
+        let (backlog, high) = match &t.state {
+            TaskState::Independent { cache, rx, .. } => {
+                let (_, window, _) = cache.occupancy(u64::MAX);
+                (rx.len() + window, shared.cfg.buffer_size.max(1))
+            }
+            TaskState::Coordinated(coord) => {
+                (coord.buffered_rounds(), shared.cfg.round_prefetch_depth.max(1))
+            }
+        };
+        let demand = if backlog >= high {
+            rate * 0.5
+        } else if backlog == 0 {
+            rate * 2.0 + 1.0
+        } else {
+            rate
+        };
+        t.autotune.replan(demand);
+        shared.metrics.counter("worker/autotune_replans").inc();
+    }
+}
+
 fn heartbeat_loop(shared: Arc<WorkerShared>) {
     let mut last_busy = 0u64;
     let mut last_t = Instant::now();
+    let mut last_replan = Instant::now();
     while !shared.stop.load(Ordering::SeqCst) {
         std::thread::sleep(shared.cfg.heartbeat_interval);
         if shared.stop.load(Ordering::SeqCst) {
             break;
+        }
+        // Periodic replan: a ~1s window is long enough for the stage
+        // stats to hold real samples, short enough to track load shifts.
+        if last_replan.elapsed() >= Duration::from_secs(1) {
+            replan_tasks(&shared, last_replan.elapsed().as_secs_f64());
+            last_replan = Instant::now();
         }
         let active: Vec<u64> = shared.tasks.lock().unwrap().keys().copied().collect();
         // CPU utilization signal: producer busy time per wallclock.
@@ -774,42 +1162,32 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                 for task in resp.new_tasks {
                     start_task(&shared, task);
                 }
-                // Consumer churn on shared streams (§3.5): register the
-                // cursors of newly-attached clients, drop those of
-                // released ones so a departed consumer never pins (or
-                // counts toward) the shared window. Tasks were started
-                // above, so an attach delivered alongside its task lands
-                // on a live cache.
-                for cu in &resp.attached_clients {
-                    if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
-                        if let TaskState::Independent { cache, .. } = &t.state {
-                            cache.register_consumer(cu.client_id);
-                            shared.metrics.counter("worker/consumers_attached").inc();
+                // Consumer churn on shared streams (§3.5): tasks were
+                // started above, so an attach delivered alongside its
+                // task lands on a live cache. (The dispatcher also
+                // pushes these synchronously via UPDATE_CONSUMERS; this
+                // is the reliable fallback.)
+                apply_consumer_updates(&shared, &resp.attached_clients, &resp.released_clients);
+                // Round-lease updates (§3.6 fault tolerance): adopt a
+                // failed owner's residues — the producer starts labeling
+                // those rounds from the dispatcher's floor — or drop
+                // residues the dispatcher moved away while this worker
+                // was presumed dead.
+                for ra in &resp.round_assignments {
+                    if let Some(t) = shared.tasks.lock().unwrap().get(&ra.job_id).cloned() {
+                        if let TaskState::Coordinated(coord) = &t.state {
+                            let residues: Vec<u64> =
+                                ra.owned_residues.iter().map(|&r| r as u64).collect();
+                            coord.set_owned(&residues, ra.start_round);
+                            shared.metrics.counter("worker/round_leases_updated").inc();
                         }
                     }
-                }
-                for cu in &resp.released_clients {
-                    if let Some(t) = shared.tasks.lock().unwrap().get(&cu.job_id).cloned() {
-                        if let TaskState::Independent { cache, .. } = &t.state {
-                            if cache.remove_consumer(cu.client_id) {
-                                shared.metrics.counter("worker/consumers_detached").inc();
-                            }
-                        }
-                    }
-                    // A released consumer's stream sessions die with it; a
-                    // straggler Fetch then errors instead of resurrecting
-                    // chunk state for a departed client.
-                    shared
-                        .sessions
-                        .lock()
-                        .unwrap()
-                        .retain(|_, s| !(s.job_id == cu.job_id && s.client_id == cu.client_id));
                 }
                 if !resp.removed_tasks.is_empty() {
                     let mut tasks = shared.tasks.lock().unwrap();
                     for id in &resp.removed_tasks {
                         if let Some(t) = tasks.remove(id) {
-                            t.stop.store(true, Ordering::SeqCst);
+                            t.halt();
                             if let TaskState::Independent { cache, .. } = &t.state {
                                 // The job is gone: zero its occupancy
                                 // gauges so the registry doesn't report a
@@ -836,11 +1214,21 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
 /// Spawn the producer thread(s) for a task and register its serving state.
 fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
     let mut tasks = shared.tasks.lock().unwrap();
-    if tasks.contains_key(&task.job_id) {
-        return; // already running (duplicate delivery is fine)
+    if let Some(existing) = tasks.get(&task.job_id) {
+        // Already running (duplicate delivery is fine). One correction:
+        // a worker that was declared dead and re-registered may get the
+        // task again with a *different* lease set (its residues were
+        // reassigned while it was presumed gone) — apply it so a zombie
+        // owner stops materializing rounds the new lease holder serves.
+        if let TaskState::Coordinated(coord) = &existing.state {
+            let residues: Vec<u64> = task.owned_residues.iter().map(|&r| r as u64).collect();
+            coord.set_owned(&residues, task.start_round);
+        }
+        return;
     }
     let stop = Arc::new(AtomicBool::new(false));
     let busy_ns = Arc::new(AtomicU64::new(0));
+    let produced = Arc::new(AtomicU64::new(0));
     let worker_id = shared.worker_id.load(Ordering::SeqCst);
 
     // Split provider per sharding policy.
@@ -857,12 +1245,13 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
             crate::data::exec::FixedSplits::new(task.static_shards.iter().map(|&s| s as usize).collect())
         }
     };
+    let autotune = Arc::new(crate::data::autotune::AutotuneState::default());
     let exec_cfg = ExecutorConfig {
         store: shared.cfg.store.clone(),
         udfs: shared.cfg.udfs.clone(),
         region: shared.cfg.region.clone(),
         splits,
-        autotune: Arc::new(crate::data::autotune::AutotuneState::default()),
+        autotune: autotune.clone(),
     };
 
     let state = match task.mode {
@@ -870,33 +1259,45 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
             let cache = Arc::new(SlidingCache::new(
                 shared.cfg.cache_window,
                 shared.cfg.cache_window_bytes,
+                shared.cfg.eager_window_eviction,
                 task.job_id,
                 &shared.metrics,
             ));
             // Register the consumers attached at task-creation time so
             // they count toward the stream's consumer set (and anchor at
             // the stream head) before their first fetch arrives; later
-            // joins/leaves come via heartbeat consumer updates.
+            // joins/leaves come via the dispatcher's synchronous push
+            // (UPDATE_CONSUMERS) with heartbeat consumer updates as the
+            // reliable fallback.
             for c in &task.consumers {
                 cache.register_consumer(*c);
             }
             let (tx, rx) = chan::bounded::<Element>(shared.cfg.buffer_size);
             let in_flight = Arc::new(AtomicU64::new(0));
             let inflight_tx = in_flight.clone();
-            spawn_producer(shared, &task, exec_cfg, stop.clone(), busy_ns.clone(), move |e| {
-                // Count before the send so a popped-but-unpublished
-                // element is never unaccounted (see TaskState docs).
-                inflight_tx.fetch_add(1, Ordering::SeqCst);
-                if tx.send(e).is_ok() {
-                    true
-                } else {
-                    inflight_tx.fetch_sub(1, Ordering::SeqCst);
-                    false
-                }
-            }, {
-                let cache = cache.clone();
-                move || cache.set_eos()
-            });
+            spawn_producer(
+                shared,
+                &task,
+                exec_cfg,
+                stop.clone(),
+                busy_ns.clone(),
+                produced.clone(),
+                move |e| {
+                    // Count before the send so a popped-but-unpublished
+                    // element is never unaccounted (see TaskState docs).
+                    inflight_tx.fetch_add(1, Ordering::SeqCst);
+                    if tx.send(e).is_ok() {
+                        true
+                    } else {
+                        inflight_tx.fetch_sub(1, Ordering::SeqCst);
+                        false
+                    }
+                },
+                {
+                    let cache = cache.clone();
+                    move || cache.set_eos()
+                },
+            );
             TaskState::Independent { cache, rx, in_flight }
         }
         ProcessingMode::Coordinated => {
@@ -904,10 +1305,13 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
                 task.num_consumers as usize,
                 task.worker_index as u64,
                 task.num_workers as u64,
+                &task.owned_residues,
+                task.start_round,
+                shared.cfg.round_prefetch_depth,
             ));
             let c2 = coord.clone();
-            let m = task.num_consumers as usize;
-            let pending = Arc::new(Mutex::new(Vec::<Element>::with_capacity(m)));
+            let m = (task.num_consumers as usize).max(1);
+            let pending = Arc::new(Mutex::new(Vec::<Arc<Vec<u8>>>::with_capacity(m)));
             let p2 = pending.clone();
             spawn_producer(
                 shared,
@@ -915,20 +1319,21 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
                 exec_cfg,
                 stop.clone(),
                 busy_ns.clone(),
+                produced.clone(),
                 move |e| {
+                    // Pre-encode at production time (off the serve path):
+                    // each consumer's fetch then hands out an Arc clone
+                    // instead of encoding per request.
+                    let bytes = Arc::new(e.to_bytes());
                     let mut buf = p2.lock().unwrap();
-                    buf.push(e);
+                    buf.push(bytes);
                     if buf.len() == m {
                         let batches = std::mem::take(&mut *buf);
-                        // Block if too many rounds are queued (backpressure).
-                        loop {
-                            let depth = c2.inner.lock().unwrap().rounds.len();
-                            if depth < 8 {
-                                break;
-                            }
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        c2.install_round(batches);
+                        drop(buf);
+                        // Blocks on the bounded multi-round buffer
+                        // (condvar backpressure, no polling); false only
+                        // when the task stopped.
+                        return c2.install_round(batches);
                     }
                     true
                 },
@@ -941,7 +1346,15 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
         }
     };
 
-    let runner = Arc::new(TaskRunner { job_id: task.job_id, state, stop, busy_ns });
+    let runner = Arc::new(TaskRunner {
+        job_id: task.job_id,
+        state,
+        stop,
+        busy_ns,
+        autotune,
+        produced,
+        last_produced: AtomicU64::new(0),
+    });
     tasks.insert(task.job_id, runner);
     shared.metrics.counter("worker/tasks_started").inc();
 }
@@ -954,6 +1367,7 @@ fn spawn_producer(
     exec_cfg: ExecutorConfig,
     stop: Arc<AtomicBool>,
     busy_ns: Arc<AtomicU64>,
+    produced: Arc<AtomicU64>,
     mut sink: impl FnMut(Element) -> bool + Send + 'static,
     on_eos: impl FnOnce() + Send + 'static,
 ) {
@@ -982,6 +1396,7 @@ fn spawn_producer(
                     Ok(Some(e)) => {
                         busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         metrics.counter("worker/elements_produced").inc();
+                        produced.fetch_add(1, Ordering::Relaxed);
                         if !sink(e) {
                             break;
                         }
@@ -1028,6 +1443,11 @@ fn serve(shared: &Arc<WorkerShared>, method: u16, payload: &[u8]) -> ServiceResu
             }
             Ok(CloseStreamResp { closed }.to_bytes().into())
         }
+        worker_methods::UPDATE_CONSUMERS => {
+            let req = UpdateConsumersReq::from_bytes(payload)?;
+            let applied = apply_consumer_updates(shared, &req.attached, &req.released);
+            Ok(UpdateConsumersResp { applied }.to_bytes().into())
+        }
         worker_methods::WORKER_STATUS => {
             let _ = WorkerStatusReq::from_bytes(payload)?;
             Ok(status(shared).to_bytes().into())
@@ -1070,10 +1490,10 @@ fn open_stream(shared: &Arc<WorkerShared>, req: OpenStreamReq) -> ServiceResult<
     let session = Arc::new(StreamSession {
         job_id: req.job_id,
         client_id: req.client_id,
-        caps: req.capabilities & stream_caps::ALL,
+        caps: req.capabilities & shared.cfg.stream_caps & stream_caps::ALL,
         max_frame: client_max.clamp(MIN_STREAM_FRAME_LEN, crate::rpc::MAX_FRAME_LEN),
         consumer_index: req.consumer_index,
-        chunk: Mutex::new((None, 1)),
+        chunk: Mutex::new((HashMap::new(), 1)),
     });
     let session_id = shared.next_session_id.fetch_add(1, Ordering::SeqCst);
     let resp = OpenStreamResp {
@@ -1173,10 +1593,11 @@ fn drain_and_serve(
             }
             Ok(None) => {}
             Err(_) => {
-                // Channel closed: recv returns instantly, so pace the
-                // loop while a concurrent handler finishes publishing.
+                // Channel closed: recv returns instantly. Wait on the
+                // cache condvar — notified by the concurrent handler's
+                // publish — instead of pacing with a fixed sleep.
                 cache.set_eos();
-                std::thread::sleep(Duration::from_millis(1));
+                cache.wait_for_publish(Duration::from_millis(10));
             }
         }
     }
@@ -1193,7 +1614,16 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
 
     let mut resp = match (&runner.state, req.consumer_index, req.round) {
         (TaskState::Coordinated(coord), Some(ci), Some(round)) => {
-            coord.take(round, ci as usize, shared.cfg.serve_timeout)?
+            // Legacy coordinated shim over the multi-round buffer: one
+            // round slot per call, pre-encoded bytes cloned out.
+            let (element, end_of_sequence, wrong_worker_for_round) =
+                match coord.take(round, ci as usize, shared.cfg.serve_timeout)? {
+                    RoundTake::Bytes(b) => (Some(b.as_ref().clone()), false, false),
+                    RoundTake::WrongWorker => (None, false, true),
+                    RoundTake::Eos => (None, true, false),
+                    RoundTake::Pending => (None, false, false),
+                };
+            GetElementResp { element, compressed: false, end_of_sequence, wrong_worker_for_round }
         }
         (TaskState::Coordinated(_), _, _) => {
             return Err(ServiceError::Other(
@@ -1386,30 +1816,45 @@ fn fetch(shared: &Arc<WorkerShared>, req: FetchReq) -> ServiceResult<RespBody> {
         frame: Vec::new(),
     };
 
-    // A pending oversized element always goes first: the client drives
-    // delivery by echoing back how much it has (`chunk_seq` +
-    // `chunk_offset`), which makes continuation frames idempotent under
-    // RPC retries. Only once an offset *tagged with the matching seq*
-    // reaches the total length is the element released; an offset tagged
-    // with any other seq is about a previous, already-released element
-    // (a retried ack) and restarts delivery of this one from 0 instead.
+    // Pending oversized elements go first: the client drives delivery by
+    // echoing back how much it has (`chunk_seq` + `chunk_offset`), which
+    // makes continuation frames idempotent under RPC retries. Only once
+    // an offset *tagged with the matching seq* reaches the total length
+    // is the element released — the ack may ride a request for a
+    // *different* round (the client has moved on), so release matches by
+    // seq across all parked rounds. An offset tagged with a seq no
+    // parked element carries is about an already-released element (a
+    // retried ack): delivery of the requested round's parked element
+    // restarts from 0 instead.
+    let round_key = req.round.unwrap_or(INDEPENDENT_CHUNK_KEY);
     {
         let mut pending = session.chunk.lock().unwrap();
-        if let Some((seq, bytes)) = pending.0.as_ref() {
-            let start =
-                if req.chunk_seq == *seq { req.chunk_offset as usize } else { 0 };
-            if start < bytes.len() {
-                let end = (start + frame_budget).min(bytes.len());
-                resp.chunk_seq = *seq;
-                resp.chunk_offset = start as u64;
-                resp.chunk_total_len = bytes.len() as u64;
-                resp.frame = bytes[start..end].to_vec();
-                shared.metrics.counter("worker/chunk_frames_served").inc();
-                return finish_fetch(shared, &session, &runner, resp);
+        if req.chunk_seq != 0 {
+            let acked: Vec<u64> = pending
+                .0
+                .iter()
+                .filter(|(_, (seq, bytes))| {
+                    *seq == req.chunk_seq && req.chunk_offset as usize >= bytes.len()
+                })
+                .map(|(&k, _)| k)
+                .collect();
+            for k in acked {
+                pending.0.remove(&k);
+                shared.metrics.counter("worker/chunked_elements_served").inc();
             }
-            // Fully delivered and acked: release it and serve normally.
-            shared.metrics.counter("worker/chunked_elements_served").inc();
-            pending.0 = None;
+        }
+        if let Some((seq, bytes)) = pending.0.get(&round_key) {
+            // A fully-acked element was released above, so a matching
+            // seq here implies offset < len (the clamp is belt only).
+            let start = if req.chunk_seq == *seq { req.chunk_offset as usize } else { 0 };
+            let start = start.min(bytes.len().saturating_sub(1));
+            let end = (start + frame_budget).min(bytes.len());
+            resp.chunk_seq = *seq;
+            resp.chunk_offset = start as u64;
+            resp.chunk_total_len = bytes.len() as u64;
+            resp.frame = bytes[start..end].to_vec();
+            shared.metrics.counter("worker/chunk_frames_served").inc();
+            return finish_fetch(shared, &session, &runner, resp);
         }
     }
 
@@ -1423,31 +1868,39 @@ fn fetch(shared: &Arc<WorkerShared>, req: FetchReq) -> ServiceResult<RespBody> {
                     "coordinated session opened without a consumer_index".into(),
                 )
             })?;
-            let r = coord.take(round, ci as usize, poll)?;
-            resp.wrong_worker_for_round = r.wrong_worker_for_round;
-            resp.end_of_sequence = r.end_of_sequence;
-            if let Some(bytes) = r.element {
-                if bytes.len() > frame_budget {
-                    if !chunked {
-                        return Err(ServiceError::ElementTooLarge {
-                            bytes: bytes.len(),
-                            cap: frame_budget,
-                        });
-                    }
-                    let bytes = Arc::new(bytes);
-                    resp.chunk_seq = session.park_chunk(bytes.clone());
-                    resp.chunk_total_len = bytes.len() as u64;
-                    resp.frame = bytes[..frame_budget.min(bytes.len())].to_vec();
-                    shared.metrics.counter("worker/chunk_frames_served").inc();
-                } else {
-                    let batch = [Arc::new(bytes)];
-                    let (frame, compressed) = assemble_batch_frame(shared, &batch, want_compress);
-                    resp.num_elements = 1;
-                    resp.frame = frame;
-                    resp.compressed = compressed;
+            match coord.take(round, ci as usize, poll)? {
+                RoundTake::WrongWorker => {
+                    resp.wrong_worker_for_round = true;
+                    resp.frame = 0u32.to_le_bytes().to_vec();
                 }
-            } else {
-                resp.frame = 0u32.to_le_bytes().to_vec();
+                RoundTake::Eos => {
+                    resp.end_of_sequence = true;
+                    resp.frame = 0u32.to_le_bytes().to_vec();
+                }
+                RoundTake::Pending => {
+                    resp.frame = 0u32.to_le_bytes().to_vec();
+                }
+                RoundTake::Bytes(bytes) => {
+                    if bytes.len() > frame_budget {
+                        if !chunked {
+                            return Err(ServiceError::ElementTooLarge {
+                                bytes: bytes.len(),
+                                cap: frame_budget,
+                            });
+                        }
+                        resp.chunk_seq = session.park_chunk(round_key, bytes.clone());
+                        resp.chunk_total_len = bytes.len() as u64;
+                        resp.frame = bytes[..frame_budget.min(bytes.len())].to_vec();
+                        shared.metrics.counter("worker/chunk_frames_served").inc();
+                    } else {
+                        let batch = [bytes];
+                        let (frame, compressed) =
+                            assemble_batch_frame(shared, &batch, want_compress);
+                        resp.num_elements = 1;
+                        resp.frame = frame;
+                        resp.compressed = compressed;
+                    }
+                }
             }
         }
         TaskState::Independent { cache, rx, in_flight } => {
@@ -1474,7 +1927,7 @@ fn fetch(shared: &Arc<WorkerShared>, req: FetchReq) -> ServiceResult<RespBody> {
                     served.add(batch.len() as u64);
                 }
                 Drained::Oversized(bytes) => {
-                    resp.chunk_seq = session.park_chunk(bytes.clone());
+                    resp.chunk_seq = session.park_chunk(round_key, bytes.clone());
                     resp.chunk_total_len = bytes.len() as u64;
                     resp.frame = bytes[..frame_budget.min(bytes.len())].to_vec();
                     shared.metrics.counter("worker/chunk_frames_served").inc();
@@ -1493,11 +1946,18 @@ fn finish_fetch(
     runner: &TaskRunner,
     mut resp: FetchResp,
 ) -> ServiceResult<RespBody> {
-    if let TaskState::Independent { cache, rx, .. } = &runner.state {
-        let (unread, win, win_bytes) = cache.occupancy(session.client_id);
-        resp.ready_elements = (unread + rx.len()).min(u32::MAX as usize) as u32;
-        resp.window_elements = win.min(u32::MAX as usize) as u32;
-        resp.window_bytes = win_bytes as u64;
+    match &runner.state {
+        TaskState::Independent { cache, rx, .. } => {
+            let (unread, win, win_bytes) = cache.occupancy(session.client_id);
+            resp.ready_elements = (unread + rx.len()).min(u32::MAX as usize) as u32;
+            resp.window_elements = win.min(u32::MAX as usize) as u32;
+            resp.window_bytes = win_bytes as u64;
+        }
+        TaskState::Coordinated(coord) => {
+            // Rounds materialized ahead of consumption: the prefetching
+            // client's signal that fetching further ahead will not block.
+            resp.ready_elements = coord.buffered_rounds().min(u32::MAX as usize) as u32;
+        }
     }
     shared.metrics.counter("worker/fetch_calls").inc();
     let (head, tail) = encode_fetch_resp_parts(resp);
@@ -1561,10 +2021,18 @@ mod tests {
     }
 
     /// Fresh cache over a throwaway registry; returns both so tests can
-    /// assert the registry-side ledger the cache feeds.
+    /// assert the registry-side ledger the cache feeds. Eager eviction
+    /// off: these tests pin the retained-window replay semantics.
     fn cache(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
         let m = Registry::new();
-        (SlidingCache::new(capacity, byte_budget, 0, &m), m)
+        (SlidingCache::new(capacity, byte_budget, false, 0, &m), m)
+    }
+
+    /// Cache with eager consumed-by-all eviction on (the default worker
+    /// configuration).
+    fn cache_eager(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
+        let m = Registry::new();
+        (SlidingCache::new(capacity, byte_budget, true, 0, &m), m)
     }
 
     fn skips_of(m: &Registry) -> u64 {
@@ -1876,25 +2344,34 @@ mod tests {
         assert_eq!(c.stats().window_bytes, 4 * sz);
     }
 
+    /// Encode a round's batches the way the producer now does.
+    fn round_of(vals: &[i32]) -> Vec<Arc<Vec<u8>>> {
+        vals.iter().map(|&v| Arc::new(elem(v).to_bytes())).collect()
+    }
+
+    fn take_bytes(c: &CoordinatedState, round: u64, consumer: usize) -> Element {
+        match c.take(round, consumer, Duration::from_millis(200)).unwrap() {
+            RoundTake::Bytes(b) => Element::from_bytes(&b).unwrap(),
+            _ => panic!("expected round bytes"),
+        }
+    }
+
     #[test]
     fn coordinated_round_ownership() {
-        let c = CoordinatedState::new(2, 1, 4);
+        let c = CoordinatedState::new(2, 1, 4, &[], 0, 2);
         assert!(!c.owns_round(0));
         assert!(c.owns_round(1));
         assert!(c.owns_round(5));
         let r = c.take(0, 0, Duration::from_millis(10)).unwrap();
-        assert!(r.wrong_worker_for_round);
+        assert!(matches!(r, RoundTake::WrongWorker));
     }
 
     #[test]
     fn coordinated_round_serves_each_consumer_once() {
-        let c = CoordinatedState::new(2, 0, 1);
-        c.install_round(vec![elem(10), elem(11)]);
-        let a = c.take(0, 0, Duration::from_millis(100)).unwrap();
-        let b = c.take(0, 1, Duration::from_millis(100)).unwrap();
-        assert!(a.element.is_some() && b.element.is_some());
-        let ea = Element::from_bytes(&a.element.unwrap()).unwrap();
-        let eb = Element::from_bytes(&b.element.unwrap()).unwrap();
+        let c = CoordinatedState::new(2, 0, 1, &[], 0, 2);
+        assert!(c.install_round(round_of(&[10, 11])));
+        let ea = take_bytes(&c, 0, 0);
+        let eb = take_bytes(&c, 0, 1);
         assert_eq!(ea.tensors[0].as_i32(), vec![10]);
         assert_eq!(eb.tensors[0].as_i32(), vec![11]);
         // Double-fetch is an error.
@@ -1903,13 +2380,169 @@ mod tests {
 
     #[test]
     fn coordinated_eos_after_last_round() {
-        let c = CoordinatedState::new(1, 0, 1);
-        c.install_round(vec![elem(1)]);
+        let c = CoordinatedState::new(1, 0, 1, &[], 0, 2);
+        assert!(c.install_round(round_of(&[1])));
         c.set_eos();
-        let r = c.take(0, 0, Duration::from_millis(50)).unwrap();
-        assert!(r.element.is_some());
+        let e = take_bytes(&c, 0, 0);
+        assert_eq!(e.tensors[0].as_i32(), vec![1]);
         let r2 = c.take(1, 0, Duration::from_millis(50)).unwrap();
-        assert!(r2.end_of_sequence);
+        assert!(matches!(r2, RoundTake::Eos));
+    }
+
+    #[test]
+    fn coordinated_buffers_rounds_ahead_with_bounded_depth() {
+        // Depth 2: two rounds buffer ahead of consumption; the third
+        // install blocks (condvar, not polling) until a round drains.
+        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], 0, 2));
+        assert!(c.install_round(round_of(&[0])));
+        assert!(c.install_round(round_of(&[1])));
+        assert_eq!(c.buffered_rounds(), 2);
+        let c2 = c.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            let ok = c2.install_round(round_of(&[2])); // blocks at depth
+            tx.send(()).unwrap();
+            ok
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "third install must block while the buffer is full"
+        );
+        // Consuming round 0 frees a slot and wakes the producer.
+        let e = take_bytes(&c, 0, 0);
+        assert_eq!(e.tensors[0].as_i32(), vec![0]);
+        assert!(rx.recv_timeout(Duration::from_secs(2)).is_ok(), "space wait woke");
+        assert!(h.join().unwrap());
+        // Rounds are served from the buffer in order.
+        assert_eq!(take_bytes(&c, 1, 0).tensors[0].as_i32(), vec![1]);
+        assert_eq!(take_bytes(&c, 2, 0).tensors[0].as_i32(), vec![2]);
+    }
+
+    #[test]
+    fn coordinated_halt_unblocks_parked_producer() {
+        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], 0, 1));
+        assert!(c.install_round(round_of(&[0])));
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.install_round(round_of(&[1])));
+        std::thread::sleep(Duration::from_millis(30));
+        c.halt();
+        assert!(!h.join().unwrap(), "halted install reports stop");
+    }
+
+    #[test]
+    fn coordinated_lease_adoption_labels_from_floor() {
+        // Worker 0 of 2 owns residue 0; it adopts residue 1 (the dead
+        // owner's) with floor 3: the first adopted label is the smallest
+        // round >= 3 in residue 1, i.e. round 3.
+        let c = CoordinatedState::new(1, 0, 2, &[], 0, 8);
+        assert!(c.install_round(round_of(&[0]))); // round 0
+        assert!(c.install_round(round_of(&[2]))); // round 2
+        c.set_owned(&[0, 1], 3);
+        assert!(c.owns_round(1), "residue 1 adopted");
+        assert!(c.install_round(round_of(&[3]))); // round 3 (adopted residue)
+        assert!(c.install_round(round_of(&[4]))); // round 4 (residue 0)
+        assert_eq!(take_bytes(&c, 3, 0).tensors[0].as_i32(), vec![3]);
+        assert_eq!(take_bytes(&c, 4, 0).tensors[0].as_i32(), vec![4]);
+        // Dropping a residue discards its buffered rounds.
+        let c2 = CoordinatedState::new(1, 0, 2, &[], 0, 8);
+        assert!(c2.install_round(round_of(&[0])));
+        c2.set_owned(&[1], 0);
+        assert!(!c2.owns_round(0), "residue 0 released");
+        assert_eq!(c2.buffered_rounds(), 0, "stale rounds dropped with the lease");
+        assert!(matches!(c2.take(0, 0, Duration::from_millis(10)).unwrap(), RoundTake::WrongWorker));
+    }
+
+    #[test]
+    fn coordinated_watermark_gc_drops_abandoned_rounds() {
+        // Rounds every consumer has moved past (possible only after a
+        // lease reassignment) are GC'd so they cannot pin the buffer.
+        let c = CoordinatedState::new(1, 0, 1, &[], 0, 8);
+        for i in 0..3 {
+            assert!(c.install_round(round_of(&[i])));
+        }
+        // The consumer starts at round 2 (it consumed 0 and 1 from the
+        // previous lease holder before it died).
+        assert_eq!(take_bytes(&c, 2, 0).tensors[0].as_i32(), vec![2]);
+        assert_eq!(c.buffered_rounds(), 0, "abandoned rounds 0 and 1 GC'd");
+        assert_eq!(c.inner.lock().unwrap().abandoned_slots, 2);
+        // Re-asking an abandoned round is a protocol violation.
+        assert!(c.take(0, 0, Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn coordinated_regrant_resets_stale_progress() {
+        // A worker materialized ahead, lost the lease (buffered rounds
+        // dropped with it), then got it back: labeling must restart at
+        // the dispatcher floor, not the stale progress marker —
+        // otherwise consumers get "round already consumed" for rounds
+        // that were never delivered.
+        let c = CoordinatedState::new(1, 0, 1, &[], 0, 8);
+        for i in 0..3 {
+            assert!(c.install_round(round_of(&[i])));
+        }
+        c.set_owned(&[], 0); // lease moves away: buffer dropped
+        assert_eq!(c.buffered_rounds(), 0);
+        c.set_owned(&[0], 1); // re-granted, floor 1 (min consumer need)
+        assert!(c.install_round(round_of(&[10]))); // labeled round 1
+        assert_eq!(take_bytes(&c, 1, 0).tensors[0].as_i32(), vec![10]);
+    }
+
+    #[test]
+    fn coordinated_restart_labels_from_task_floor() {
+        // A restarted worker re-receiving its task mid-epoch labels from
+        // the TaskDef floor instead of crawling up from round 0.
+        let c = CoordinatedState::new(1, 0, 2, &[0], 6, 4);
+        assert!(c.install_round(round_of(&[1])));
+        assert_eq!(take_bytes(&c, 6, 0).tensors[0].as_i32(), vec![1]);
+    }
+
+    #[test]
+    fn chunk_slots_keyed_by_round() {
+        let s = StreamSession {
+            job_id: 1,
+            client_id: 1,
+            caps: stream_caps::ALL,
+            max_frame: MIN_STREAM_FRAME_LEN,
+            consumer_index: Some(0),
+            chunk: Mutex::new((HashMap::new(), 1)),
+        };
+        // Transfers for two rounds park side by side with distinct seqs
+        // (the multi-round session slot of the prefetch pipeline).
+        let a = s.park_chunk(4, Arc::new(vec![1u8; 8]));
+        let b = s.park_chunk(5, Arc::new(vec![2u8; 8]));
+        assert_ne!(a, b);
+        let st = s.chunk.lock().unwrap();
+        assert_eq!(st.0.len(), 2);
+        assert_eq!(st.0[&4].0, a);
+        assert_eq!(st.0[&5].0, b);
+    }
+
+    #[test]
+    fn eager_eviction_tracks_slowest_registered_cursor() {
+        let quiet = AtomicU64::new(0);
+        let (c, m) = cache_eager(100, usize::MAX);
+        c.register_consumer(1);
+        c.register_consumer(2);
+        c.push_encoded((0..8).map(|i| Arc::new(elem(i).to_bytes())).collect());
+        // Consumer 1 races ahead: nothing evicts while 2 is at the head.
+        let (b1, _) = sb(&c, 1, 64, usize::MAX, &quiet);
+        assert_eq!(b1.len(), 8);
+        assert_eq!(c.stats().window, 8, "slowest registered cursor pins the window");
+        // Consumer 2 reads 5: the consumed-by-all prefix evicts eagerly.
+        let (b2, _) = sb(&c, 2, 5, usize::MAX, &quiet);
+        assert_eq!(b2.len(), 5);
+        assert_eq!(c.stats().window, 3, "consumed-by-all prefix evicted");
+        // Eager eviction never outruns a registered cursor: no skips.
+        assert_eq!(skips_of(&m), 0);
+        // The laggard departing releases the rest of the tail.
+        assert!(c.remove_consumer(2));
+        assert_eq!(c.stats().window, 0, "departing laggard releases the tail");
+        // A late lazy attacher starts at the live frontier — relaxed
+        // visitation by design, but not *counted* as a laggard skip.
+        c.push(elem(9));
+        let (b3, _) = sb(&c, 3, 64, usize::MAX, &quiet);
+        assert_eq!(b3.len(), 1);
+        assert_eq!(skips_of(&m), 0, "a fresh cursor is not a laggard");
     }
 
     #[test]

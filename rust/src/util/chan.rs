@@ -157,6 +157,15 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// True once the channel is closed *and* drained: `recv` would return
+    /// `Err(Closed)`. Lets a thread that deliberately isn't consuming
+    /// (e.g. a parked elastic worker) notice end-of-stream without
+    /// stealing an item.
+    pub fn is_closed(&self) -> bool {
+        let g = self.0.inner.lock().unwrap();
+        g.closed && g.queue.is_empty()
+    }
+
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
         let mut g = self.0.inner.lock().unwrap();

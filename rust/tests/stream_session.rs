@@ -229,13 +229,16 @@ fn session_fetch_drains_epoch_with_hints_and_window_stats() {
     assert_eq!(elements, 16, "64 rows batched by 4");
 
     // Satellite: per-job window occupancy is exposed in WorkerStatus and
-    // as registry gauges.
+    // as registry gauges. With eager consumed-by-all eviction (the
+    // default), a fully-drained single-consumer window is *empty* —
+    // steady-state window RAM tracks the consumer spread, not the
+    // configured capacity.
     let st: WorkerStatusResp =
         call_typed(&pool, &w.addr(), worker_methods::WORKER_STATUS, &WorkerStatusReq {}, T)
             .unwrap();
     let ws = st.window_stats.iter().find(|s| s.job_id == job_id).expect("job window stat");
-    assert!(ws.elements > 0, "window retains recent elements after the drain");
-    assert!(ws.bytes > 0);
+    assert_eq!(ws.elements, 0, "eager eviction empties a fully-consumed window");
+    assert_eq!(ws.bytes, 0);
     assert_eq!(
         w.metrics().gauge(&format!("worker/job/{job_id}/window_elements")).get(),
         ws.elements as i64,
