@@ -10,9 +10,13 @@
 //! pipeline applied across the wire.
 //!
 //! Acceptance (full mode): prefetch-on >= 1.5x steps/sec and a lower
-//! p99 round latency than prefetch-off. `--smoke` shrinks the epoch and
-//! relaxes the ratio for shared CI boxes. Results are also emitted
-//! machine-readable to `out/bench_coordinated_rounds.json`.
+//! p99 round latency than prefetch-off. A second section compares the
+//! single-thread pipelined engine against **multi-owner concurrent
+//! fetch** on a 3-worker topology (one in-flight round per distinct
+//! owner): >= 1.2x steps/sec required, smoke included. `--smoke`
+//! shrinks the epochs and relaxes the prefetch ratio for shared CI
+//! boxes. Results are also emitted machine-readable to
+//! `out/bench_coordinated_rounds.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -52,6 +56,7 @@ fn run(
     dispatcher_addr: &str,
     graph: &tfdatasvc::data::GraphDef,
     depth: u32,
+    concurrent: bool,
     train_step: Duration,
 ) -> RunStats {
     let client = ServiceClient::new(dispatcher_addr);
@@ -65,6 +70,7 @@ fn run(
                 consumer_index: 0,
                 max_frame_len: MIN_STREAM_FRAME_LEN as u64,
                 round_prefetch_depth: depth,
+                concurrent_round_fetch: concurrent,
                 ..Default::default()
             },
         )
@@ -104,14 +110,10 @@ fn run(
     }
 }
 
-fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let rounds: u64 = if smoke { 96 } else { 384 };
-
-    let store = ObjectStore::in_memory();
+/// Skewed element sizes: the straggler scenario coordinated reads exist
+/// for (§3.6) — every 4th element ~8x the median.
+fn skewed_udfs() -> UdfRegistry {
     let udfs = UdfRegistry::with_builtins();
-    // Skewed element sizes: the straggler scenario coordinated reads
-    // exist for (§3.6).
     udfs.register_fn("bench.skew", move |e| {
         let n = if e.ids[0] % 4 == 3 { BIG_BYTES } else { SMALL_BYTES };
         Ok(Element::with_ids(
@@ -119,8 +121,17 @@ fn main() {
             e.ids.clone(),
         ))
     });
+    udfs
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let rounds: u64 = if smoke { 96 } else { 384 };
+
+    let store = ObjectStore::in_memory();
     let d = Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap();
-    let _w = Worker::start("127.0.0.1:0", &d.addr(), WorkerConfig::new(store, udfs)).unwrap();
+    let _w =
+        Worker::start("127.0.0.1:0", &d.addr(), WorkerConfig::new(store, skewed_udfs())).unwrap();
     let graph = Arc::new(PipelineBuilder::source_range(rounds).map("bench.skew").build());
     let calib_graph = PipelineBuilder::source_range(32).map("bench.skew").build();
 
@@ -129,7 +140,7 @@ fn main() {
     // (2x ideal) when compute and fetch are balanced, and calibrating
     // keeps the acceptance ratio meaningful on fast and slow boxes
     // alike.
-    let probe = run(&d.addr(), &calib_graph, 0, Duration::ZERO);
+    let probe = run(&d.addr(), &calib_graph, 0, false, Duration::ZERO);
     let train_step = Duration::from_secs_f64(
         (probe.mean_ms / 1e3).clamp(0.000_3, 0.02),
     );
@@ -159,10 +170,12 @@ fn main() {
     };
     // Off first (cold caches penalize the baseline, not the candidate —
     // conservative for the assertion below). Each mode drains one full
-    // epoch of the same pipeline.
-    let off = run(&d.addr(), &graph, 0, train_step);
+    // epoch of the same pipeline. Both prefetch modes here use the
+    // single-thread engine: the multi-owner comparison below isolates
+    // concurrency on a 3-worker topology.
+    let off = run(&d.addr(), &graph, 0, false, train_step);
     report("prefetch-off", &off);
-    let on = run(&d.addr(), &graph, 2, train_step);
+    let on = run(&d.addr(), &graph, 2, false, train_step);
     report("prefetch-on", &on);
 
     assert_eq!(on.steps, off.steps, "both modes must deliver the same round count");
@@ -174,6 +187,50 @@ fn main() {
         "prefetch speedup: {speedup:.2}x steps/sec, p99 round latency {:.2} ms -> {:.2} ms",
         off.p99_ms, on.p99_ms
     );
+
+    // --- Multi-owner concurrent fetch on a 3-worker topology (§3.6
+    // across owners). The single-thread pipelined engine serializes wire
+    // transfers even with rounds prefetched; the multi-owner engine
+    // keeps one round in flight per distinct owner, so the round cadence
+    // approaches fetch/3. Both engines run depth 3 over the same
+    // cluster; the trainer step is calibrated to a third of the measured
+    // fetch cost (the fetch-dominated regime the concurrency targets).
+    let rounds3: u64 = if smoke { 40 } else { 128 };
+    let d3 = Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap();
+    let store3 = ObjectStore::in_memory();
+    let _workers3: Vec<Worker> = (0..3)
+        .map(|_| {
+            Worker::start(
+                "127.0.0.1:0",
+                &d3.addr(),
+                WorkerConfig::new(store3.clone(), skewed_udfs()),
+            )
+            .unwrap()
+        })
+        .collect();
+    let graph3 = PipelineBuilder::source_range(rounds3).map("bench.skew").build();
+    let calib3 = PipelineBuilder::source_range(12).map("bench.skew").build();
+    let probe3 = run(&d3.addr(), &calib3, 0, false, Duration::ZERO);
+    let train_step3 =
+        Duration::from_secs_f64((probe3.mean_ms / 1e3 / 3.0).clamp(0.000_1, 0.01));
+    println!(
+        "=== multi-owner concurrent fetch: 3 workers, depth 3 (fetch ~{:.2} ms, train step \
+         {:.2} ms) ===",
+        probe3.mean_ms,
+        train_step3.as_secs_f64() * 1e3
+    );
+    let single = run(&d3.addr(), &graph3, 3, false, train_step3);
+    report("single-thread", &single);
+    let multi = run(&d3.addr(), &graph3, 3, true, train_step3);
+    report("multi-owner", &multi);
+    assert_eq!(
+        multi.steps, single.steps,
+        "both engines must deliver the same round count"
+    );
+    let mo_speedup =
+        (multi.steps as f64 / multi.secs) / (single.steps as f64 / single.secs);
+    println!("multi-owner speedup: {mo_speedup:.2}x steps/sec over the single-thread engine");
+
     write_json_file(
         "out/bench_coordinated_rounds.json",
         &obj([
@@ -202,6 +259,18 @@ fn main() {
                 ]),
             ),
             ("speedup", speedup.into()),
+            (
+                "multi_owner",
+                obj([
+                    ("workers", 3.0.into()),
+                    ("depth", 3.0.into()),
+                    ("single_steps_per_sec", (single.steps as f64 / single.secs).into()),
+                    ("multi_steps_per_sec", (multi.steps as f64 / multi.secs).into()),
+                    ("single_p99_ms", single.p99_ms.into()),
+                    ("multi_p99_ms", multi.p99_ms.into()),
+                    ("speedup", mo_speedup.into()),
+                ]),
+            ),
         ]),
     )
     .unwrap();
@@ -223,5 +292,14 @@ fn main() {
             off.p99_ms
         );
     }
+    // Acceptance (smoke included): multi-owner concurrent fetch must
+    // sustain >= 1.2x steps/sec over the single-thread engine on the
+    // 3-worker topology (theoretical ceiling ~3x in this fetch-bound
+    // regime, so 1.2x leaves headroom for noisy CI boxes).
+    assert!(
+        mo_speedup >= 1.2,
+        "acceptance: multi-owner engine must sustain >= 1.2x steps/sec vs single-thread \
+         (got {mo_speedup:.2}x)"
+    );
     println!("coordinated_rounds OK -> out/bench_coordinated_rounds.json");
 }

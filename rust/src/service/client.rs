@@ -98,6 +98,16 @@ pub struct ServiceClientConfig {
     /// [`proto::stream_caps::ROUND_PREFETCH`]; the engine downgrades to
     /// lock-step automatically when any owner does not.
     pub round_prefetch_depth: u32,
+    /// Coordinated mode: fetch prefetched rounds **concurrently across
+    /// distinct owner workers** (at most one in-flight round per owner,
+    /// up to `round_prefetch_depth` rounds ahead of demand) instead of
+    /// walking the prefetch window with one serial fetch at a time. On a
+    /// k-worker topology the round cadence then approaches `fetch/k`
+    /// because transfers from different owners overlap. Ignored in
+    /// lock-step mode (depth 0, `stream_sessions: false`, or a peer
+    /// without `ROUND_PREFETCH`). Default on; turning it off restores
+    /// the single-threaded pipelined engine.
+    pub concurrent_round_fetch: bool,
 }
 
 impl Default for ServiceClientConfig {
@@ -122,6 +132,7 @@ impl Default for ServiceClientConfig {
             adaptive_batching: true,
             max_frame_len: 0,
             round_prefetch_depth: 2,
+            concurrent_round_fetch: true,
         }
     }
 }
@@ -299,6 +310,10 @@ struct CoordShared {
 struct CoordOwners {
     worker_addrs: Vec<String>,
     round_owner_addrs: Vec<String>,
+    /// Job-wide materialization floor from the last heartbeat: a fresh
+    /// consumer fast-forwards its round walk here (rounds below it were
+    /// consumed by every live consumer and can no longer be fetched).
+    round_floor: u64,
 }
 
 /// Consumer half of the coordinated round pipeline: `next()` announces
@@ -390,7 +405,12 @@ impl DistributedIter {
                     demand: Mutex::new(0),
                     demand_changed: Condvar::new(),
                 });
-                let delivered = Arc::new(AtomicU64::new(0));
+                // Round progress starts at the "unknown" sentinel: until
+                // this consumer learns the job floor, its heartbeats must
+                // not report `next_round: 0` — that would drag the
+                // job-wide floor (the min over consumers) to 0 and defeat
+                // the fast-forward below.
+                let delivered = Arc::new(AtomicU64::new(u64::MAX));
                 // Heartbeat thread: refresh worker + round-owner routing
                 // (lease reassignments propagate here) and report this
                 // consumer's round progress for the reassignment floor.
@@ -402,17 +422,19 @@ impl DistributedIter {
                     let stop2 = stop.clone();
                     let halt = halt_rx.clone();
                     let hb = cfg.heartbeat_interval;
+                    let ci = cfg.consumer_index;
                     std::thread::Builder::new()
                         .name("svc-client-hb".into())
                         .spawn(move || {
                             while !stop2.load(Ordering::SeqCst) {
                                 let next_round = delivered.load(Ordering::SeqCst);
                                 if let Ok(resp) =
-                                    heartbeat(&pool2, &da, job_id, client_id, next_round)
+                                    heartbeat(&pool2, &da, job_id, client_id, ci, next_round)
                                 {
                                     let mut o = shared.owners.lock().unwrap();
                                     o.worker_addrs = resp.worker_addrs;
                                     o.round_owner_addrs = resp.round_owner_addrs;
+                                    o.round_floor = resp.round_floor;
                                     drop(o);
                                     shared.owners_changed.notify_all();
                                 }
@@ -441,7 +463,14 @@ impl DistributedIter {
                         o = next;
                     }
                 }
-                // Round pipeline: the engine thread fetches rounds (up to
+                // Fast-forward a fresh consumer to the job's
+                // materialization floor (client restart / mid-epoch slot
+                // takeover): rounds below it were consumed by every live
+                // consumer, so asking their owners again would only earn
+                // "round already consumed" errors.
+                let start_round = shared.owners.lock().unwrap().round_floor;
+                delivered.store(start_round, Ordering::SeqCst);
+                // Round pipeline: the engine fetches rounds (up to
                 // `round_prefetch_depth` ahead of trainer demand) into a
                 // bounded channel the iterator drains.
                 let depth = cfg.round_prefetch_depth as usize;
@@ -449,7 +478,9 @@ impl DistributedIter {
                     depth.max(1),
                 );
                 let tx_close = btx.clone();
-                let engine = CoordEngine {
+                let lockstep = !cfg.stream_sessions || cfg.round_prefetch_depth == 0;
+                let concurrent = cfg.concurrent_round_fetch && !lockstep;
+                let engine = Arc::new(CoordEngine {
                     pool: pool.clone(),
                     job_id,
                     client_id,
@@ -459,17 +490,21 @@ impl DistributedIter {
                     stream_sessions: cfg.stream_sessions,
                     max_frame_len: cfg.max_frame_len,
                     prefetch_depth: cfg.round_prefetch_depth as u64,
-                    lockstep: !cfg.stream_sessions || cfg.round_prefetch_depth == 0,
-                    sessions: std::collections::HashMap::new(),
-                    chunks: std::collections::HashMap::new(),
+                    lockstep: AtomicBool::new(lockstep),
                     shared: shared.clone(),
                     stop: stop.clone(),
                     halt: halt_rx.clone(),
                     metrics: metrics.clone(),
-                };
+                });
                 std::thread::Builder::new()
                     .name(format!("svc-coord-eng-{job_id}"))
-                    .spawn(move || engine.run(btx))
+                    .spawn(move || {
+                        if concurrent {
+                            run_concurrent(&engine, start_round, btx);
+                        } else {
+                            run_sequential(&engine, start_round, btx);
+                        }
+                    })
                     .ok();
                 Ok(DistributedIter {
                     mode: cfg.mode,
@@ -529,7 +564,7 @@ impl DistributedIter {
                             if shared.stop.load(Ordering::SeqCst) {
                                 break;
                             }
-                            match heartbeat(&shared.pool, &da, job_id, client_id, 0) {
+                            match heartbeat(&shared.pool, &da, job_id, client_id, 0, 0) {
                                 Ok(resp) => {
                                     for addr in resp.worker_addrs {
                                         if known.len() >= max_fetchers {
@@ -645,13 +680,14 @@ fn heartbeat(
     dispatcher: &str,
     job_id: u64,
     client_id: u64,
+    consumer_index: u32,
     next_round: u64,
 ) -> ServiceResult<ClientHeartbeatResp> {
     Ok(call_typed(
         pool,
         dispatcher,
         dispatcher_methods::CLIENT_HEARTBEAT,
-        &ClientHeartbeatReq { job_id, client_id, next_round },
+        &ClientHeartbeatReq { job_id, client_id, next_round, consumer_index },
         Duration::from_secs(5),
     )?)
 }
@@ -1334,18 +1370,27 @@ enum CoordOutcome {
     Legacy,
 }
 
-/// The coordinated round-fetch engine (§3.6 with round prefetch): a
-/// dedicated thread walks rounds 0, 1, 2, …, asking each round's lease
-/// holder for this consumer's slot and feeding decoded rounds into a
-/// bounded channel. With [`ServiceClientConfig::round_prefetch_depth`]
-/// > 0 and every owner granting [`stream_caps::ROUND_PREFETCH`], the
-/// engine runs up to `depth` rounds ahead of trainer demand — the fetch
-/// for round `r+1` overlaps the trainer consuming round `r`, taking the
-/// materialize+RPC+decode round-trip off the step critical path. The
-/// moment any owner turns out not to grant the capability (or to be a
-/// pre-session worker), the engine downgrades to lock-step: it fetches a
-/// round only once the trainer demands it, which is exactly the old
-/// behavior.
+/// The coordinated round-fetch engine (§3.6 with round prefetch): it
+/// walks rounds `floor, floor+1, …`, asking each round's lease holder
+/// for this consumer's slot and feeding decoded rounds — strictly in
+/// order — into a bounded channel. With
+/// [`ServiceClientConfig::round_prefetch_depth`] > 0 and every owner
+/// granting [`stream_caps::ROUND_PREFETCH`], the engine runs up to
+/// `depth` rounds ahead of trainer demand — the fetch for round `r+1`
+/// overlaps the trainer consuming round `r`, taking the
+/// materialize+RPC+decode round-trip off the step critical path; with
+/// [`ServiceClientConfig::concurrent_round_fetch`] the window's rounds
+/// are additionally fetched **concurrently across distinct owner
+/// workers** ([`run_concurrent`]), one in-flight round per owner, so a
+/// k-worker topology overlaps k wire transfers. The moment any owner
+/// turns out not to grant the capability (or to be a pre-session
+/// worker), the engine downgrades to lock-step: it fetches a round only
+/// once the trainer demands it, which is exactly the old behavior.
+///
+/// This struct is the engine's *shared core* (immutable config + shared
+/// gates); the per-connection mutable state lives in [`OwnerLaneState`],
+/// one per fetch lane, so concurrent lanes never contend on session or
+/// chunk state.
 struct CoordEngine {
     pool: Arc<Pool>,
     job_id: u64,
@@ -1357,65 +1402,212 @@ struct CoordEngine {
     max_frame_len: u64,
     prefetch_depth: u64,
     /// Demand-gated mode (no fetch-ahead); sticky once set.
-    lockstep: bool,
-    /// Per-worker negotiated session; `None` marks a legacy worker that
-    /// rejected the handshake (downgrade is sticky per address).
-    sessions: std::collections::HashMap<String, Option<OpenStreamResp>>,
-    /// Per-worker continuation-frame reassembly + release-ack state for
-    /// chunked round slots (see [`ChunkReassembler`]); persistent so a
-    /// transport retry resumes mid-element instead of desyncing.
-    chunks: std::collections::HashMap<String, ChunkReassembler>,
+    lockstep: AtomicBool,
     shared: Arc<CoordShared>,
     stop: Arc<AtomicBool>,
     halt: chan::Receiver<()>,
     metrics: Registry,
 }
 
-impl CoordEngine {
-    fn run(mut self, tx: chan::Sender<crate::data::DataResult<Option<Element>>>) {
-        let mut round = 0u64;
-        loop {
-            if !self.wait_for_demand(round) {
-                break; // released
-            }
-            // Fetch *started* before the trainer demanded the round = the
-            // engine ran ahead (a round taken off the step critical
-            // path). Snapshot at start: completion-time demand races the
-            // trainer's consumption speed and would under-count.
-            let ahead = *self.shared.demand.lock().unwrap() <= round;
-            match self.fetch_round(round) {
-                Ok(Some(e)) => {
-                    if ahead {
-                        self.metrics.counter("client/rounds_prefetched").inc();
-                    }
-                    if tx.send(Ok(Some(e))).is_err() {
-                        break; // consumer gone
-                    }
-                    round += 1;
-                }
-                Ok(None) => {
-                    let _ = tx.send(Ok(None));
-                    break;
-                }
-                Err(e) => {
-                    let _ = tx.send(Err(e));
-                    break;
-                }
-            }
+/// Per-lane mutable fetch state: negotiated sessions (`None` marks a
+/// legacy worker that rejected the handshake — downgrade sticky per
+/// address) and continuation-frame reassembly + release-ack state for
+/// chunked round slots (see [`ChunkReassembler`]; persistent so a
+/// transport retry resumes mid-element instead of desyncing). Keyed by
+/// worker address because a lane follows a round's lease wherever it
+/// moves.
+#[derive(Default)]
+struct OwnerLaneState {
+    sessions: std::collections::HashMap<String, Option<OpenStreamResp>>,
+    chunks: std::collections::HashMap<String, ChunkReassembler>,
+}
+
+/// The single-threaded pipelined engine: walk rounds in order with one
+/// in-flight fetch at a time, up to the prefetch depth ahead of trainer
+/// demand. Also serves as the lock-step engine (depth 0, downgraded, or
+/// legacy round protocol) and as the baseline the multi-owner
+/// [`run_concurrent`] engine is benchmarked against.
+fn run_sequential(
+    engine: &CoordEngine,
+    start_round: u64,
+    tx: chan::Sender<crate::data::DataResult<Option<Element>>>,
+) {
+    let mut st = OwnerLaneState::default();
+    let mut round = start_round;
+    loop {
+        if !engine.wait_for_demand(round) {
+            break; // released
         }
-        // Best-effort session teardown (the worker also GCs on release).
-        for (addr, info) in self.sessions.iter() {
-            if let Some(info) = info {
-                let _: Result<CloseStreamResp, _> = call_typed(
-                    &self.pool,
-                    addr,
-                    worker_methods::CLOSE_STREAM,
-                    &CloseStreamReq { session_id: info.session_id },
-                    Duration::from_secs(2),
-                );
+        // Fetch *started* before the trainer demanded the round = the
+        // engine ran ahead (a round taken off the step critical
+        // path). Snapshot at start: completion-time demand races the
+        // trainer's consumption speed and would under-count.
+        let ahead = *engine.shared.demand.lock().unwrap() <= round;
+        match engine.fetch_round(&mut st, round) {
+            Ok(Some(e)) => {
+                if ahead {
+                    engine.metrics.counter("client/rounds_prefetched").inc();
+                }
+                if tx.send(Ok(Some(e))).is_err() {
+                    break; // consumer gone
+                }
+                round += 1;
+            }
+            Ok(None) => {
+                let _ = tx.send(Ok(None));
+                break;
+            }
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                break;
             }
         }
     }
+    engine.close_sessions(&st);
+}
+
+/// One concurrent fetch lane: serially fetch the rounds the coordinator
+/// assigns (normally one owner's residue stream), keeping per-address
+/// session and chunk state across rounds.
+fn owner_lane_loop(
+    engine: Arc<CoordEngine>,
+    rx: chan::Receiver<u64>,
+    res_tx: chan::Sender<(u64, crate::data::DataResult<Option<Element>>)>,
+) {
+    let mut st = OwnerLaneState::default();
+    while let Ok(round) = rx.recv() {
+        let res = engine.fetch_round(&mut st, round);
+        if res_tx.send((round, res)).is_err() {
+            break; // coordinator gone
+        }
+    }
+    engine.close_sessions(&st);
+}
+
+/// Multi-owner concurrent round fetching: the coordinator issues the
+/// prefetch window's rounds to per-owner fetch lanes (at most one
+/// in-flight round per distinct owner address), reorders completions,
+/// and delivers rounds to the trainer channel strictly in order — the
+/// §3.6 discipline (each slot fetched exactly once, rounds consumed in
+/// order) is untouched; only the *wire transfers* overlap. On a
+/// k-worker topology the round cadence approaches `fetch/k` where the
+/// single-thread engine was pinned at `fetch`.
+fn run_concurrent(
+    engine: &Arc<CoordEngine>,
+    start_round: u64,
+    tx: chan::Sender<crate::data::DataResult<Option<Element>>>,
+) {
+    let (res_tx, res_rx) = chan::bounded::<(u64, crate::data::DataResult<Option<Element>>)>(16);
+    // addr -> (round queue, join handle). Lanes are created on first
+    // contact with an owner and live until teardown.
+    let mut lanes: std::collections::HashMap<String, (chan::Sender<u64>, std::thread::JoinHandle<()>)> =
+        std::collections::HashMap::new();
+    // In-flight round -> the owner address fetching it.
+    let mut busy: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
+    // Completed out-of-order rounds awaiting in-order delivery.
+    let mut ready: std::collections::HashMap<u64, crate::data::DataResult<Option<Element>>> =
+        std::collections::HashMap::new();
+    // Rounds issued before the trainer demanded them (prefetch ledger).
+    let mut issued_ahead: HashSet<u64> = HashSet::new();
+    let mut next_issue = start_round;
+    let mut next_deliver = start_round;
+    let depth = engine.prefetch_depth.max(1);
+    'outer: while !engine.stop.load(Ordering::SeqCst) {
+        // Deliver completed rounds strictly in order.
+        while let Some(res) = ready.remove(&next_deliver) {
+            match res {
+                Ok(Some(e)) => {
+                    if issued_ahead.remove(&next_deliver) {
+                        engine.metrics.counter("client/rounds_prefetched").inc();
+                    }
+                    if tx.send(Ok(Some(e))).is_err() {
+                        break 'outer; // consumer gone
+                    }
+                    next_deliver += 1;
+                }
+                Ok(None) => {
+                    let _ = tx.send(Ok(None));
+                    break 'outer;
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    break 'outer;
+                }
+            }
+        }
+        // Issue new rounds: up to `depth` ahead of trainer demand, one
+        // in-flight round per owner. A mid-flight downgrade (an owner
+        // without ROUND_PREFETCH) shrinks the horizon to demanded rounds
+        // only; rounds already issued still deliver normally.
+        let demand = *engine.shared.demand.lock().unwrap();
+        let horizon =
+            if engine.lockstep.load(Ordering::SeqCst) { demand } else { demand + depth };
+        while next_issue < horizon {
+            let Some(addr) = engine.resolve_owner(next_issue) else { break 'outer };
+            if busy.values().any(|a| *a == addr) {
+                break; // owner busy: its next round waits for this one
+            }
+            if !lanes.contains_key(&addr) {
+                let (ltx, lrx) = chan::bounded::<u64>(1);
+                let eng = engine.clone();
+                let rtx = res_tx.clone();
+                match std::thread::Builder::new()
+                    .name(format!("svc-coord-lane-{addr}"))
+                    .spawn(move || owner_lane_loop(eng, lrx, rtx))
+                {
+                    Ok(h) => {
+                        lanes.insert(addr.clone(), (ltx, h));
+                    }
+                    Err(_) => {
+                        // Cannot spawn a lane: fetch inline (degraded but
+                        // correct — delivery order is unaffected).
+                        let mut st = OwnerLaneState::default();
+                        let res = engine.fetch_round(&mut st, next_issue);
+                        engine.close_sessions(&st);
+                        ready.insert(next_issue, res);
+                        next_issue += 1;
+                        continue;
+                    }
+                }
+            }
+            if demand <= next_issue {
+                issued_ahead.insert(next_issue);
+            }
+            let sent = lanes.get(&addr).map(|(ltx, _)| ltx.send(next_issue).is_ok()).unwrap_or(false);
+            if !sent {
+                // Lane queue closed underneath us: forget it and retry
+                // this round on a fresh lane next iteration.
+                lanes.remove(&addr);
+                issued_ahead.remove(&next_issue);
+                continue;
+            }
+            busy.insert(next_issue, addr);
+            next_issue += 1;
+        }
+        // Wait for a completion; the short timeout doubles as the
+        // demand-change/stop poll (the demand condvar belongs to the
+        // trainer side).
+        match res_rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(Some((round, res))) => {
+                busy.remove(&round);
+                ready.insert(round, res);
+            }
+            Ok(None) => {} // timeout: re-check demand / stop
+            Err(_) => break,
+        }
+    }
+    // Teardown: closing the round queues ends the lane loops (lanes
+    // blocked mid-fetch notice `stop` once the iterator releases); each
+    // lane closes its own sessions on exit.
+    for (ltx, _) in lanes.values() {
+        ltx.close();
+    }
+    for (_, (_, h)) in lanes {
+        let _ = h.join();
+    }
+}
+
+impl CoordEngine {
 
     /// Pacing gate: prefetch up to `depth` rounds ahead of trainer
     /// demand; in lock-step (depth 0 or downgraded) wait for the round
@@ -1423,12 +1615,14 @@ impl CoordEngine {
     /// every demand bump, release notifies to unblock. Returns false
     /// when the client released.
     fn wait_for_demand(&self, round: u64) -> bool {
-        let depth = if self.lockstep { 0 } else { self.prefetch_depth };
         let mut d = self.shared.demand.lock().unwrap();
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 return false;
             }
+            // Re-read per iteration: a downgrade can land mid-wait.
+            let depth =
+                if self.lockstep.load(Ordering::SeqCst) { 0 } else { self.prefetch_depth };
             if round < *d + depth {
                 return true;
             }
@@ -1438,6 +1632,22 @@ impl CoordEngine {
                 .wait_timeout(d, Duration::from_millis(250))
                 .unwrap();
             d = next;
+        }
+    }
+
+    /// Best-effort teardown of one lane's negotiated sessions (the
+    /// worker also GCs them with the consumer's release).
+    fn close_sessions(&self, st: &OwnerLaneState) {
+        for (addr, info) in st.sessions.iter() {
+            if let Some(info) = info {
+                let _: Result<CloseStreamResp, _> = call_typed(
+                    &self.pool,
+                    addr,
+                    worker_methods::CLOSE_STREAM,
+                    &CloseStreamReq { session_id: info.session_id },
+                    Duration::from_secs(2),
+                );
+            }
         }
     }
 
@@ -1474,7 +1684,7 @@ impl CoordEngine {
     /// refused while an owner restarts or a lease moves) take a brief
     /// halt-interruptible backoff, so round latency is never quantized
     /// to a sleep.
-    fn fetch_round(&mut self, round: u64) -> crate::data::DataResult<Option<Element>> {
+    fn fetch_round(&self, st: &mut OwnerLaneState, round: u64) -> crate::data::DataResult<Option<Element>> {
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 return Ok(None);
@@ -1482,7 +1692,7 @@ impl CoordEngine {
             let Some(owner) = self.resolve_owner(round) else { return Ok(None) };
             let t0 = Instant::now();
             let outcome = if self.stream_sessions {
-                self.try_fetch_session(round, &owner)?
+                self.try_fetch_session(st, round, &owner)?
             } else {
                 CoordOutcome::Legacy
             };
@@ -1511,11 +1721,12 @@ impl CoordEngine {
     /// `OpenStream`/`Fetch` (§3.6 one-slot-per-call discipline:
     /// `max_elements` is pinned to 1 by the round read).
     fn try_fetch_session(
-        &mut self,
+        &self,
+        st: &mut OwnerLaneState,
         round: u64,
         owner: &str,
     ) -> Result<CoordOutcome, crate::data::DataError> {
-        let info = match self.sessions.get(owner) {
+        let info = match st.sessions.get(owner) {
             Some(None) => return Ok(CoordOutcome::Legacy),
             Some(Some(info)) => info.clone(),
             None => {
@@ -1539,13 +1750,13 @@ impl CoordEngine {
                         if resp.capabilities & stream_caps::ROUND_PREFETCH == 0 {
                             self.downgrade_to_lockstep();
                         }
-                        self.sessions.insert(owner.to_string(), Some(resp.clone()));
+                        st.sessions.insert(owner.to_string(), Some(resp.clone()));
                         resp
                     }
                     Err(crate::rpc::RpcError::Remote(msg)) if msg.contains("unknown method") => {
                         self.metrics.counter("client/stream_handshake_downgrades").inc();
                         self.downgrade_to_lockstep();
-                        self.sessions.insert(owner.to_string(), None);
+                        st.sessions.insert(owner.to_string(), None);
                         return Ok(CoordOutcome::Legacy);
                     }
                     Err(_) => return Ok(CoordOutcome::Empty), // task not there yet / restarting
@@ -1554,7 +1765,7 @@ impl CoordEngine {
         };
         // Continuation-frame state for this worker: persistent, so a
         // transport retry resumes a chunked round slot mid-element.
-        let chunks = self.chunks.entry(owner.to_string()).or_default();
+        let chunks = st.chunks.entry(owner.to_string()).or_default();
         loop {
             let (chunk_seq, chunk_offset) = chunks.request_fields();
             let req = FetchReq {
@@ -1613,7 +1824,7 @@ impl CoordEngine {
                     // Worker restarted: forget the session (and any
                     // half-rebuilt element that died with it),
                     // re-handshake on the next attempt.
-                    self.sessions.remove(owner);
+                    st.sessions.remove(owner);
                     chunks.reset();
                     return Ok(CoordOutcome::Empty);
                 }
@@ -1631,7 +1842,7 @@ impl CoordEngine {
     /// The legacy `GetElement` round protocol against a pre-session
     /// worker.
     fn fetch_round_legacy(
-        &mut self,
+        &self,
         round: u64,
         owner: &str,
     ) -> Result<CoordOutcome, crate::data::DataError> {
@@ -1661,9 +1872,10 @@ impl CoordEngine {
 
     /// Sticky downgrade to the lock-step discipline (an owner without
     /// [`stream_caps::ROUND_PREFETCH`], or a pre-session worker).
-    fn downgrade_to_lockstep(&mut self) {
-        if !self.lockstep {
-            self.lockstep = true;
+    /// Atomic: concurrent lanes may discover it simultaneously, and the
+    /// counter must move once.
+    fn downgrade_to_lockstep(&self) {
+        if !self.lockstep.swap(true, Ordering::SeqCst) {
             self.metrics.counter("client/round_prefetch_downgrades").inc();
         }
     }

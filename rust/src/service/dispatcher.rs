@@ -33,6 +33,11 @@ pub struct DispatcherConfig {
     pub worker_timeout: Duration,
     /// Shuffle seed for dynamic split handout.
     pub split_seed: u64,
+    /// A revived round-lease owner must stay alive this long before its
+    /// home residues are re-balanced back from the survivors that
+    /// adopted them (§3.6): hysteresis, so a flapping worker cannot
+    /// thrash leases on every heartbeat it manages to land.
+    pub revival_hysteresis: Duration,
 }
 
 impl Default for DispatcherConfig {
@@ -41,6 +46,7 @@ impl Default for DispatcherConfig {
             journal_path: None,
             worker_timeout: Duration::from_secs(10),
             split_seed: 0x5317_d15b,
+            revival_hysteresis: Duration::from_millis(500),
         }
     }
 }
@@ -65,6 +71,19 @@ struct WorkerInfo {
     /// Task (job) ids this worker should currently be running.
     assigned: HashSet<u64>,
     alive: bool,
+    /// When the worker last transitioned dead -> alive (or registered).
+    /// Revival re-balance waits out `revival_hysteresis` from here before
+    /// handing home residues back, so a flapping worker cannot thrash
+    /// round leases.
+    alive_since: Instant,
+    /// Heartbeat/registration evidence from the worker's *current*
+    /// incarnation. Journal-replayed workers start unconfirmed: they are
+    /// optimistically alive (grace before failure detection) but must
+    /// not *gain* leases via revival re-balance until they actually
+    /// heartbeat — otherwise a worker that died during the dispatcher's
+    /// outage would be handed its home residues back and every consumer
+    /// would stall on them until `worker_timeout` re-declares it dead.
+    confirmed: bool,
 }
 
 impl WorkerInfo {
@@ -78,6 +97,8 @@ impl WorkerInfo {
             pending_rounds: Vec::new(),
             assigned,
             alive,
+            alive_since: last_heartbeat,
+            confirmed: true,
         }
     }
 }
@@ -102,10 +123,27 @@ struct JobState {
     /// survivors. The lease is renewed implicitly by worker heartbeats
     /// (`worker_timeout` is the lease duration).
     residue_owners: Vec<u64>,
-    /// Coordinated reads: each client's last-reported `next_round` —
-    /// the minimum is the materialization floor handed to a new lease
-    /// holder (no round every consumer has moved past gets re-labeled).
-    client_rounds: HashMap<u64, u64>,
+    /// Coordinated reads: each consumer **slot**'s last-reported
+    /// `next_round` plus when it reported. Keyed by `consumer_index`,
+    /// not client id — the slot is the durable identity, so a consumer
+    /// replacement (new client id, same slot) inherits its
+    /// predecessor's progress for the fast-forward. Progress reports
+    /// are leases like worker heartbeats: `tick()` prunes entries
+    /// silent past `worker_timeout`, so a crashed consumer cannot pin
+    /// the job floor forever.
+    client_rounds: HashMap<u32, (u64, Instant)>,
+}
+
+impl JobState {
+    /// Materialization floor for lease moves: the minimum round any
+    /// reporting consumer slot still needs (0 before anyone has
+    /// reported — a slot that has not reported yet may still need
+    /// round 0, and an unreported fresh slot reports the `u64::MAX`
+    /// sentinel, never 0, so it cannot be overshot for longer than its
+    /// first real heartbeat).
+    fn floor(&self) -> u64 {
+        self.client_rounds.values().map(|&(r, _)| r).min().unwrap_or(0)
+    }
 }
 
 #[derive(Default)]
@@ -182,6 +220,7 @@ impl Dispatcher {
                     mode,
                     num_consumers,
                     sharing,
+                    worker_order,
                 } => {
                     let shards = meta.datasets.get(&dataset_id).map(graph_num_shards).unwrap_or(1);
                     let tracker = matches!(sharding, ShardingPolicy::Dynamic)
@@ -201,24 +240,32 @@ impl Dispatcher {
                             tracker,
                             clients: HashSet::new(),
                             finished: false,
-                            worker_order: Vec::new(),
-                            residue_owners: Vec::new(),
+                            // The replayed worker order is the lease-table
+                            // baseline; later RoundLeaseChanged records
+                            // overwrite `residue_owners` last-writer-wins.
+                            residue_owners: worker_order.clone(),
+                            worker_order,
                             client_rounds: HashMap::new(),
                         },
                     );
                     meta.next_job_id = meta.next_job_id.max(job_id + 1);
                 }
                 JournalRecord::RegisterWorker { worker_id, addr } => {
-                    // Restored workers are stale until they heartbeat again.
-                    meta.workers.insert(
-                        worker_id,
-                        WorkerInfo::new(
-                            addr,
-                            Instant::now() - Duration::from_secs(3600),
-                            false,
-                            HashSet::new(),
-                        ),
-                    );
+                    // Restored *optimistically*: a dispatcher restart does
+                    // not kill workers, so they keep their round leases
+                    // and get one `worker_timeout` of grace to
+                    // re-heartbeat. `tick()` then declares the truly-dead
+                    // ones and reassigns their residues — without the
+                    // grace-then-timeout, a worker that died during the
+                    // outage would never transition alive -> dead and its
+                    // residues would stay stranded (the restart ×
+                    // worker-crash cell of the failure matrix). Restored
+                    // workers are *unconfirmed* until their first
+                    // heartbeat: they keep what they hold but cannot gain
+                    // leases via revival re-balance.
+                    let mut wi = WorkerInfo::new(addr, Instant::now(), true, HashSet::new());
+                    wi.confirmed = false;
+                    meta.workers.insert(worker_id, wi);
                     meta.next_worker_id = meta.next_worker_id.max(worker_id + 1);
                 }
                 JournalRecord::ClientJoined { job_id, client_id } => {
@@ -235,6 +282,18 @@ impl Dispatcher {
                 JournalRecord::JobFinished { job_id } => {
                     if let Some(j) = meta.jobs.get_mut(&job_id) {
                         j.finished = true;
+                    }
+                }
+                JournalRecord::RoundLeaseChanged { job_id, residue_owners } => {
+                    if let Some(j) = meta.jobs.get_mut(&job_id) {
+                        // Same-length invariant: the lease table always has
+                        // one entry per residue class. A malformed record
+                        // (partial write never survives the CRC framing;
+                        // this is belt) is ignored rather than corrupting
+                        // the table shape.
+                        if residue_owners.len() == j.worker_order.len() {
+                            j.residue_owners = residue_owners;
+                        }
                     }
                 }
             }
@@ -254,8 +313,12 @@ impl Dispatcher {
     /// coordinated **round leases are reassigned** to surviving owners
     /// (§3.6 fault tolerance: a lease is renewed by heartbeating, so a
     /// silent worker forfeits its round residues instead of stalling
-    /// every consumer at its next round forever). Returns the failed
-    /// worker ids. Called by the orchestrator's control loop.
+    /// every consumer at its next round forever). Residues adopted by
+    /// survivors are **re-balanced back** to a revived home owner once it
+    /// has stayed alive past `revival_hysteresis`. Every lease-table
+    /// change is journaled (`RoundLeaseChanged`), so the table survives a
+    /// dispatcher restart. Returns the failed worker ids. Called by the
+    /// orchestrator's control loop.
     pub fn tick(&self) -> Vec<u64> {
         let mut meta = self.state.meta.lock().unwrap();
         let timeout = self.state.cfg.worker_timeout;
@@ -282,8 +345,42 @@ impl Dispatcher {
             }
             self.state.metrics.counter("dispatcher/workers_failed").inc();
         }
-        if !dead.is_empty() {
-            reassign_round_leases(&mut meta, &self.state.metrics);
+        // Consumer progress reports are leases too: an entry silent past
+        // the worker timeout belongs to a crashed consumer — drop it so
+        // it cannot pin the job floor forever (the all-slots gate in
+        // `JobState::floor` keeps the floor conservative until the
+        // replacement re-reports).
+        for job in meta.jobs.values_mut() {
+            job.client_rounds.retain(|_, &mut (_, at)| now.duration_since(at) <= timeout);
+        }
+        let mut lease_changed = Vec::new();
+        // Failure reassignment runs every tick, not just on a death
+        // *transition* (it is idempotent and returns nothing when no
+        // owner is dead): a residue can point at a dead worker without a
+        // fresh transition — e.g. every owner died with no survivor to
+        // lease to, and a later revival brought capacity back — and must
+        // be re-homed as soon as any live owner exists again.
+        lease_changed.extend(reassign_round_leases(&mut meta, &self.state.metrics));
+        lease_changed.extend(rebalance_revived_owners(
+            &mut meta,
+            self.state.cfg.revival_hysteresis,
+            &self.state.metrics,
+        ));
+        lease_changed.sort_unstable();
+        lease_changed.dedup();
+        // Journal the new lease layout. Crash before the append just
+        // restores the previous table on replay: the dead owners are
+        // still dead, so the next tick redoes the (idempotent) move.
+        for job_id in lease_changed {
+            if let Some(j) = meta.jobs.get(&job_id) {
+                let _ = journal_append(
+                    &self.state,
+                    &JournalRecord::RoundLeaseChanged {
+                        job_id,
+                        residue_owners: j.residue_owners.clone(),
+                    },
+                );
+            }
         }
         dead
     }
@@ -305,53 +402,86 @@ impl Dispatcher {
     }
 }
 
+/// Pure lease-table transition behind failure reassignment: move every
+/// residue held by a non-alive owner to a surviving lease holder (stable
+/// round-robin over the sorted survivor set, so concurrent dispatchers
+/// replaying the same inputs converge). Returns the gaining worker ids
+/// (deduped); an empty result means nothing moved (no dead owner, or no
+/// survivor to lease to). Exposed so the property tests drive the exact
+/// policy the dispatcher ships.
+pub fn reassign_dead_residues(owners: &mut [u64], alive: &dyn Fn(u64) -> bool) -> Vec<u64> {
+    let mut survivors: Vec<u64> = owners.iter().copied().filter(|&w| alive(w)).collect();
+    survivors.sort_unstable();
+    survivors.dedup();
+    if survivors.is_empty() {
+        return Vec::new(); // nobody to lease to; clients stall until workers return
+    }
+    let mut next = 0usize;
+    let mut gained = Vec::new();
+    for owner in owners.iter_mut() {
+        if !alive(*owner) {
+            *owner = survivors[next % survivors.len()];
+            next += 1;
+            gained.push(*owner);
+        }
+    }
+    gained.sort_unstable();
+    gained.dedup();
+    gained
+}
+
+/// Pure lease-table transition behind revival re-balance: hand residue
+/// `i` back to its home owner `worker_order[i]` when the home owner is
+/// `eligible` (alive and past the hysteresis window — judged by the
+/// caller) and someone else currently holds it. Returns every worker
+/// whose owned set changed (losers and gainers, deduped). Exposed for
+/// the property tests, like [`reassign_dead_residues`].
+pub fn rebalance_home_residues(
+    owners: &mut [u64],
+    worker_order: &[u64],
+    eligible: &dyn Fn(u64) -> bool,
+) -> Vec<u64> {
+    let mut affected = Vec::new();
+    for (i, owner) in owners.iter_mut().enumerate() {
+        let Some(&home) = worker_order.get(i) else { continue };
+        if *owner != home && eligible(home) {
+            affected.push(*owner);
+            affected.push(home);
+            *owner = home;
+        }
+    }
+    affected.sort_unstable();
+    affected.dedup();
+    affected
+}
+
 /// Move every dead owner's round residues to surviving lease holders and
 /// queue the updated assignments for delivery on the gaining workers'
 /// next heartbeats. The materialization floor handed to a new owner is
 /// the minimum `next_round` any consumer reported — rounds every
 /// consumer already consumed are never re-labeled, and rounds a slower
 /// consumer still needs get re-materialized from the new owner's own
-/// pipeline (relaxed visitation under failure).
-fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) {
+/// pipeline (relaxed visitation under failure). Returns the jobs whose
+/// lease table changed (for journaling).
+fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) -> Vec<u64> {
     // Collect per-job reassignments first (cannot mutate workers while
     // iterating jobs).
     let mut grants: Vec<(u64, u64, Vec<u32>, u64)> = Vec::new(); // (worker, job, residues, floor)
+    let mut changed_jobs = Vec::new();
     for (&job_id, job) in meta.jobs.iter_mut() {
         if job.finished || job.mode != ProcessingMode::Coordinated || job.residue_owners.is_empty()
         {
             continue;
         }
-        let any_dead = job
-            .residue_owners
-            .iter()
-            .any(|w| !meta.workers.get(w).map(|wi| wi.alive).unwrap_or(false));
-        if !any_dead {
+        let workers = &meta.workers;
+        let alive = |w: u64| workers.get(&w).map(|wi| wi.alive).unwrap_or(false);
+        let gained = reassign_dead_residues(&mut job.residue_owners, &alive);
+        if gained.is_empty() {
             continue;
         }
-        // Survivors among the current lease holders, in stable order.
-        let mut survivors: Vec<u64> = job
-            .residue_owners
-            .iter()
-            .copied()
-            .filter(|w| meta.workers.get(w).map(|wi| wi.alive).unwrap_or(false))
-            .collect();
-        survivors.sort_unstable();
-        survivors.dedup();
-        if survivors.is_empty() {
-            continue; // nobody to lease to; clients stall until workers return
-        }
-        let floor = job.client_rounds.values().copied().min().unwrap_or(0);
-        let mut next = 0usize;
-        let mut changed: HashSet<u64> = HashSet::new();
-        for owner in job.residue_owners.iter_mut() {
-            let alive = meta.workers.get(owner).map(|wi| wi.alive).unwrap_or(false);
-            if !alive {
-                *owner = survivors[next % survivors.len()];
-                next += 1;
-                changed.insert(*owner);
-            }
-        }
-        for w in changed {
+        changed_jobs.push(job_id);
+        let floor = job.floor();
+        for w in gained {
             let residues: Vec<u32> = job
                 .residue_owners
                 .iter()
@@ -368,6 +498,66 @@ fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) {
             w.pending_rounds.push(RoundAssignment { job_id, owned_residues, start_round });
         }
     }
+    changed_jobs
+}
+
+/// Revival re-balance (§3.6, ROADMAP PR 4 follow-up): hand residues back
+/// to a home owner that has been alive past the hysteresis window, so a
+/// recovered worker resumes serving its share instead of staying
+/// leaseless until another failure. Both the losing survivor and the
+/// gaining home owner get their full updated owned sets queued for their
+/// next heartbeats, floored at the minimum round any consumer still
+/// needs. Returns the jobs whose lease table changed (for journaling).
+fn rebalance_revived_owners(meta: &mut Meta, hysteresis: Duration, metrics: &Registry) -> Vec<u64> {
+    let now = Instant::now();
+    let mut grants: Vec<(u64, u64, Vec<u32>, u64)> = Vec::new(); // (worker, job, residues, floor)
+    let mut changed_jobs = Vec::new();
+    for (&job_id, job) in meta.jobs.iter_mut() {
+        if job.finished
+            || job.mode != ProcessingMode::Coordinated
+            || job.residue_owners.is_empty()
+            || job.worker_order.is_empty()
+        {
+            continue;
+        }
+        let workers = &meta.workers;
+        // Eligible = alive, *confirmed by a heartbeat of its current
+        // incarnation* (a journal-restored worker may be a corpse under
+        // failure-detection grace), and past the hysteresis window.
+        let eligible = |w: u64| {
+            workers
+                .get(&w)
+                .map(|wi| {
+                    wi.alive && wi.confirmed && now.duration_since(wi.alive_since) >= hysteresis
+                })
+                .unwrap_or(false)
+        };
+        let affected = rebalance_home_residues(&mut job.residue_owners, &job.worker_order, &eligible);
+        if affected.is_empty() {
+            continue;
+        }
+        changed_jobs.push(job_id);
+        metrics.counter("dispatcher/round_leases_rebalanced").inc();
+        let floor = job.floor();
+        for w in affected {
+            let residues: Vec<u32> = job
+                .residue_owners
+                .iter()
+                .enumerate()
+                .filter(|(_, &o)| o == w)
+                .map(|(i, _)| i as u32)
+                .collect();
+            grants.push((w, job_id, residues, floor));
+        }
+    }
+    for (worker_id, job_id, owned_residues, start_round) in grants {
+        if let Some(w) = meta.workers.get_mut(&worker_id) {
+            if w.alive {
+                w.pending_rounds.push(RoundAssignment { job_id, owned_residues, start_round });
+            }
+        }
+    }
+    changed_jobs
 }
 
 fn journal_append(state: &State, rec: &JournalRecord) -> ServiceResult<()> {
@@ -475,7 +665,11 @@ fn make_task(
         // Materialization floor: a worker (re-)receiving this task
         // mid-epoch starts labeling at the minimum round any consumer
         // still needs, not at round 0.
-        start_round: job.client_rounds.values().copied().min().unwrap_or(0),
+        start_round: job.floor(),
+        // This dispatcher always sends the authoritative lease view: an
+        // empty `owned_residues` means leaseless, never "assume your own
+        // worker_index" (the pre-lease fallback).
+        has_lease_view: true,
     }
 }
 
@@ -662,6 +856,10 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
             mode: req.mode,
             num_consumers: req.num_consumers,
             sharing: req.sharing,
+            // The fixed coordinated worker order rides the journal so a
+            // restarted dispatcher rebuilds the round-lease table
+            // (RoundLeaseChanged records then replay over this baseline).
+            worker_order: worker_order.clone(),
         },
     )?;
     journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
@@ -700,8 +898,12 @@ fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResul
     let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
     // Coordinated consumers report the next round they will fetch: the
     // job-wide minimum is the floor for round-lease reassignments.
-    if job.mode == ProcessingMode::Coordinated {
-        job.client_rounds.insert(req.client_id, req.next_round);
+    // `u64::MAX` is the "progress unknown" sentinel a just-started
+    // consumer sends before it has fast-forwarded to the job floor — it
+    // must not enter the minimum (a fresh attacher would otherwise drag
+    // the floor to 0 with its first heartbeat).
+    if job.mode == ProcessingMode::Coordinated && req.next_round != u64::MAX {
+        job.client_rounds.insert(req.consumer_index, (req.next_round, Instant::now()));
     }
     // Workers serving this job, in the job's fixed coordinated order
     // first, then any later joiners.
@@ -730,7 +932,25 @@ fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResul
     } else {
         Vec::new()
     };
-    Ok(ClientHeartbeatResp { worker_addrs: addrs, job_finished: job.finished, round_owner_addrs })
+    // Slot-scoped fast-forward floor: the requesting consumer's *own*
+    // slot's recorded progress — its crashed predecessor's report — or
+    // 0 for a slot nobody has reported for. A fresh consumer in a
+    // staggered startup therefore is never skipped past rounds still
+    // buffered for it, and a replacement resumes exactly where its
+    // predecessor stopped (not at the job-wide minimum, which for a
+    // non-slowest slot would point at a round this slot already
+    // consumed — a terminal protocol error).
+    let round_floor = if job.mode == ProcessingMode::Coordinated {
+        job.client_rounds.get(&req.consumer_index).map(|&(r, _)| r).unwrap_or(0)
+    } else {
+        0
+    };
+    Ok(ClientHeartbeatResp {
+        worker_addrs: addrs,
+        job_finished: job.finished,
+        round_owner_addrs,
+        round_floor,
+    })
 }
 
 fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<RegisterWorkerResp> {
@@ -782,8 +1002,20 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         .collect();
     let w = meta.workers.get_mut(&req.worker_id).ok_or(ServiceError::UnknownWorker(req.worker_id))?;
     let was_dead = !w.alive;
+    // First heartbeat after a journal-backed restore: lease-view
+    // deliveries queued by the previous dispatcher incarnation died with
+    // its in-memory heartbeat queues, so this heartbeat must re-push the
+    // authoritative view (below) or a granted-but-undelivered residue
+    // would answer WrongWorker forever.
+    let was_unconfirmed = !w.confirmed;
     w.last_heartbeat = Instant::now();
     w.alive = true;
+    // Evidence from the current incarnation: re-balance may now trust it.
+    w.confirmed = true;
+    if was_dead {
+        // Revival timestamp: the re-balance hysteresis clock starts now.
+        w.alive_since = w.last_heartbeat;
+    }
     w.assigned.extend(live_reported);
     let new_tasks: Vec<TaskDef> = std::mem::take(&mut w.pending_tasks);
     let attached_clients = std::mem::take(&mut w.pending_attach);
@@ -794,13 +1026,16 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
     for t in &removed {
         w.assigned.remove(t);
     }
-    if was_dead {
+    if was_dead || was_unconfirmed {
         // A worker back from the dead may still believe it owns round
         // residues that were leased to survivors while it was silent:
         // hand it the authoritative lease view for every coordinated
         // job, so a zombie owner stops materializing (and serving)
         // rounds whose lease moved — split-brain rounds would break the
-        // §3.6 same-batch-per-round guarantee.
+        // §3.6 same-batch-per-round guarantee. The same push runs on the
+        // first heartbeat after a dispatcher restart (`was_unconfirmed`):
+        // it replaces any lease-view delivery the previous incarnation
+        // queued but never delivered.
         for (&job_id, job) in meta.jobs.iter() {
             if job.finished
                 || job.mode != ProcessingMode::Coordinated
@@ -815,7 +1050,12 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
                 .filter(|(_, &o)| o == req.worker_id)
                 .map(|(i, _)| i as u32)
                 .collect();
-            round_assignments.push(RoundAssignment { job_id, owned_residues, start_round: 0 });
+            // Floor at the minimum round any consumer still needs: a
+            // worker that kept running keeps its own progress (retained
+            // residues ignore the floor), while one that really
+            // restarted starts labeling where consumers are, not at 0.
+            let start_round = job.floor();
+            round_assignments.push(RoundAssignment { job_id, owned_residues, start_round });
         }
     }
     state
@@ -848,7 +1088,9 @@ fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJ
         let mut meta = state.meta.lock().unwrap();
         let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
         job.clients.remove(&req.client_id);
-        job.client_rounds.remove(&req.client_id);
+        // Slot progress (keyed by consumer index, which the release does
+        // not carry) is left to the tick() lease pruning: a re-occupied
+        // slot overwrites it, a finished job never reads it again.
         if job.clients.is_empty() && !job.finished {
             job.finished = true;
             finished = true;
@@ -1004,7 +1246,12 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::CLIENT_HEARTBEAT,
-            &ClientHeartbeatReq { job_id: j.job_id, client_id: j.client_id, next_round: 0 },
+            &ClientHeartbeatReq {
+                job_id: j.job_id,
+                client_id: j.client_id,
+                next_round: 0,
+                consumer_index: 0,
+            },
             timeout(),
         )
         .unwrap();

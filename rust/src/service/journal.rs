@@ -30,11 +30,23 @@ pub enum JournalRecord {
         /// Ephemeral-sharing policy: replayed so fingerprint-matched
         /// attach keeps working across a dispatcher restart (§3.4 + §3.5).
         sharing: SharingMode,
+        /// Worker ordering fixed at job creation (the coordinated-reads
+        /// round-robin). Replayed so a restarted dispatcher rebuilds the
+        /// round-lease table instead of resetting coordinated jobs to an
+        /// unroutable state (§3.6 fault tolerance).
+        worker_order: Vec<u64>,
     },
     RegisterWorker { worker_id: u64, addr: String },
     ClientJoined { job_id: u64, client_id: u64 },
     ClientReleased { job_id: u64, client_id: u64 },
     JobFinished { job_id: u64 },
+    /// Round-lease table change for one coordinated job: the complete
+    /// residue -> owner map after a failure reassignment or a revival
+    /// re-balance. Replayed last-writer-wins over the `CreateJob`
+    /// baseline, so dispatcher restart resumes the *current* lease
+    /// layout; the materialization floor is deliberately not journaled —
+    /// it is rebuilt from the first post-restart client heartbeats.
+    RoundLeaseChanged { job_id: u64, residue_owners: Vec<u64> },
 }
 
 impl Encode for JournalRecord {
@@ -53,6 +65,7 @@ impl Encode for JournalRecord {
                 mode,
                 num_consumers,
                 sharing,
+                worker_order,
             } => {
                 w.put_u8(1);
                 w.put_u64(*job_id);
@@ -62,6 +75,7 @@ impl Encode for JournalRecord {
                 mode.encode(w);
                 w.put_u32(*num_consumers);
                 sharing.encode(w);
+                worker_order.encode(w);
             }
             JournalRecord::RegisterWorker { worker_id, addr } => {
                 w.put_u8(2);
@@ -82,6 +96,11 @@ impl Encode for JournalRecord {
                 w.put_u8(5);
                 w.put_u64(*job_id);
             }
+            JournalRecord::RoundLeaseChanged { job_id, residue_owners } => {
+                w.put_u8(6);
+                w.put_u64(*job_id);
+                residue_owners.encode(w);
+            }
         }
     }
 }
@@ -98,11 +117,16 @@ impl Decode for JournalRecord {
                 mode: ProcessingMode::decode(r)?,
                 num_consumers: r.get_u32()?,
                 sharing: SharingMode::decode(r)?,
+                worker_order: Vec::<u64>::decode(r)?,
             },
             2 => JournalRecord::RegisterWorker { worker_id: r.get_u64()?, addr: String::decode(r)? },
             3 => JournalRecord::ClientJoined { job_id: r.get_u64()?, client_id: r.get_u64()? },
             4 => JournalRecord::ClientReleased { job_id: r.get_u64()?, client_id: r.get_u64()? },
             5 => JournalRecord::JobFinished { job_id: r.get_u64()? },
+            6 => JournalRecord::RoundLeaseChanged {
+                job_id: r.get_u64()?,
+                residue_owners: Vec::<u64>::decode(r)?,
+            },
             tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
         })
     }
@@ -212,10 +236,12 @@ mod tests {
                 mode: ProcessingMode::Independent,
                 num_consumers: 0,
                 sharing: SharingMode::Auto,
+                worker_order: vec![5, 9],
             },
             JournalRecord::RegisterWorker { worker_id: 5, addr: "127.0.0.1:4000".into() },
             JournalRecord::ClientJoined { job_id: 1, client_id: 2 },
             JournalRecord::ClientReleased { job_id: 1, client_id: 2 },
+            JournalRecord::RoundLeaseChanged { job_id: 1, residue_owners: vec![5, 5] },
             JournalRecord::JobFinished { job_id: 1 },
         ]
     }

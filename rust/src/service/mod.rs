@@ -93,13 +93,85 @@
 //!   cannot violate the same-batch-per-round contract. Clients route
 //!   round `r` via the residue-indexed `round_owner_addrs` from their
 //!   heartbeats.
-//! * **Client round prefetch** — a dedicated engine thread fetches up to
+//! * **Client round prefetch** — the fetch engine runs up to
 //!   `ServiceClientConfig::round_prefetch_depth` (default 2) rounds
 //!   ahead of trainer demand into a bounded channel: the
 //!   materialize+RPC+decode round-trip for round `r+1` overlaps the
 //!   trainer consuming round `r` instead of sitting on the step critical
-//!   path. The §3.6 contract is untouched: every round slot is still
-//!   fetched exactly once, in order.
+//!   path. With `concurrent_round_fetch` (default on) the window's
+//!   rounds are fetched **concurrently across distinct owner workers**
+//!   — one in-flight round per owner, completions reordered and
+//!   delivered strictly in round order — so a k-worker topology overlaps
+//!   k wire transfers and the round cadence approaches `fetch/k`. The
+//!   §3.6 contract is untouched: every round slot is still fetched
+//!   exactly once, delivered in order.
+//!
+//! ### Restart & recovery state machine
+//!
+//! The round plane's failure matrix (worker crash × dispatcher crash ×
+//! client restart) is covered by journaling + leases + floors:
+//!
+//! * **Journal** — `CreateJob` records carry the job's fixed
+//!   `worker_order` (the lease-table baseline) and every lease-table
+//!   change from `Dispatcher::tick` appends a `RoundLeaseChanged`
+//!   record (full residue→owner map, last-writer-wins on replay). The
+//!   materialization *floor* is deliberately not journaled: it is
+//!   rebuilt from the first post-restart client heartbeats
+//!   (`ClientHeartbeatReq.next_round`).
+//! * **Dispatcher restart** — replay rebuilds the lease table; replayed
+//!   workers are restored *optimistically alive* with one
+//!   `worker_timeout` of grace (a dispatcher restart does not kill
+//!   workers), so a worker that truly died during the outage still
+//!   transitions to dead and forfeits its residues — without the grace,
+//!   its residues would be stranded forever. Workers keep producing and
+//!   clients keep fetching through the outage (addresses are cached);
+//!   on reconnect, heartbeats resume routing.
+//! * **Worker crash** — `tick()` moves the dead owner's residues to
+//!   survivors (stable round-robin, floored at the min client
+//!   `next_round`); survivors re-materialize adopted rounds from their
+//!   own pipelines (relaxed visitation under failure).
+//! * **Revival re-balance** — once a revived home owner (same
+//!   advertised address ⇒ same worker id) has stayed alive past
+//!   `DispatcherConfig::revival_hysteresis`, `tick()` hands its home
+//!   residues back (both loser and gainer receive their full updated
+//!   lease views, floored as above) — so a recovered worker resumes
+//!   serving instead of staying leaseless until the next failure, and a
+//!   flapping worker cannot thrash leases inside the hysteresis window.
+//!   `TaskDef.has_lease_view` makes an *empty* residue set
+//!   authoritative: a revived worker never self-assigns its home
+//!   residue while someone else holds the lease (no split-brain
+//!   rounds).
+//! * **Client restart** — round progress is recorded per consumer
+//!   **slot** (`ClientHeartbeatReq.consumer_index`), not per client id,
+//!   so a consumer replacement inherits its crashed predecessor's
+//!   progress: its first heartbeat returns the slot-scoped
+//!   `ClientHeartbeatResp.round_floor` and the round walk fast-forwards
+//!   there instead of asking owners for rounds the slot already
+//!   consumed. A fresh slot (staggered startup) sees floor 0 and is
+//!   never skipped past rounds buffered for it; a just-started consumer
+//!   reports the `u64::MAX` "unknown" sentinel, excluded from floors.
+//!   Slot entries are leases: `tick()` prunes reports silent past
+//!   `worker_timeout`, so a permanently-dead consumer cannot pin the
+//!   lease-move floor forever.
+//! * **Re-balance trust** — leases are only handed *to* workers with
+//!   heartbeat evidence from their current incarnation: a
+//!   journal-restored worker under failure-detection grace keeps what
+//!   it holds but cannot gain residues until it actually heartbeats.
+//!   Lease-view deliveries lost with a crashed dispatcher's in-memory
+//!   queues are re-pushed on each worker's first post-restart heartbeat
+//!   (the authoritative-view push), so a granted-but-undelivered
+//!   residue can never answer WrongWorker forever.
+//!
+//! Accepted relaxations (bounded, documented): a *live-to-live* lease
+//! transfer (revival re-balance) has a ≤ one-heartbeat window where
+//! loser and gainer both hold the residue — the same-batch-per-round
+//! guarantee relaxes across that window exactly as it already does
+//! across an owner crash (see [`visitation::RoundTracker`]); and a
+//! consumer replacement joining after its predecessor's progress entry
+//! expired (crashed consumer + pruned lease, e.g. the predecessor died
+//! during a dispatcher outage) sees floor 0 and surfaces an explicit
+//! "round already consumed" error rather than silently skipping —
+//! client-side skip-forward recovery is a recorded follow-up.
 //! * **Capability + downgrade matrix** — prefetch is gated on the
 //!   negotiated [`proto::stream_caps::ROUND_PREFETCH`] bit. New client
 //!   <-> new worker: pipelined (chunk slots keyed by `(round, seq)`

@@ -266,13 +266,22 @@ pub struct ClientHeartbeatReq {
     pub job_id: u64,
     pub client_id: u64,
     /// Coordinated mode: the next round this consumer will fetch. The
-    /// dispatcher uses the minimum over a job's consumers as the
+    /// dispatcher uses the minimum over a job's consumer slots as the
     /// materialization floor when a round lease is reassigned after an
     /// owner failure (the new owner never labels rounds every consumer
-    /// has already moved past). Independent-mode clients send 0.
+    /// has already moved past). `u64::MAX` = progress unknown (a
+    /// just-started consumer that has not yet fast-forwarded to its
+    /// slot floor) and is excluded from the minimum. Independent-mode
+    /// clients send 0.
     pub next_round: u64,
+    /// Coordinated mode: the consumer slot this client occupies. The
+    /// slot — not the client id — is the durable identity for round
+    /// progress, so a consumer replacement (new client id, same slot)
+    /// inherits its predecessor's floor. Independent-mode clients
+    /// send 0.
+    pub consumer_index: u32,
 }
-wire_struct!(ClientHeartbeatReq { job_id, client_id, next_round });
+wire_struct!(ClientHeartbeatReq { job_id, client_id, next_round, consumer_index });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClientHeartbeatResp {
@@ -285,8 +294,18 @@ pub struct ClientHeartbeatResp {
     /// Empty for independent jobs (and from pre-lease dispatchers, where
     /// clients fall back to `worker_addrs[r % len]`).
     pub round_owner_addrs: Vec<String>,
+    /// Coordinated mode: the requesting consumer's **slot-scoped**
+    /// materialization floor — the slot's last recorded `next_round`
+    /// (its crashed predecessor's report, inherited because slots, not
+    /// client ids, are the durable progress identity), or 0 when the
+    /// slot has no recorded progress. A consumer whose round walk
+    /// starts fresh against a mid-epoch job (restart / slot takeover)
+    /// fast-forwards here instead of asking owners for rounds its slot
+    /// has already consumed; a fresh slot in a staggered startup sees 0
+    /// and is never skipped past rounds still buffered for it.
+    pub round_floor: u64,
 }
-wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished, round_owner_addrs });
+wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished, round_owner_addrs, round_floor });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReleaseJobReq {
@@ -411,6 +430,13 @@ pub struct TaskDef {
     /// crawling from round 0 through thousands of rounds every consumer
     /// has already moved past.
     pub start_round: u64,
+    /// Coordinated mode: true when `owned_residues` is the dispatcher's
+    /// authoritative lease view — an *empty* set then really means
+    /// "leaseless" (a revived worker whose residues moved to survivors
+    /// must not self-assign its home residue and materialize split-brain
+    /// rounds). False only from pre-lease dispatchers, where the worker
+    /// falls back to the fixed `worker_index` assignment.
+    pub has_lease_view: bool,
 }
 wire_struct!(TaskDef {
     job_id,
@@ -424,7 +450,8 @@ wire_struct!(TaskDef {
     num_workers,
     consumers,
     owned_residues,
-    start_round
+    start_round,
+    has_lease_view
 });
 
 #[derive(Debug, Clone, PartialEq)]
@@ -801,11 +828,12 @@ mod tests {
             sharing: SharingMode::Auto,
         });
         rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true });
-        rt(ClientHeartbeatReq { job_id: 3, client_id: 8, next_round: 42 });
+        rt(ClientHeartbeatReq { job_id: 3, client_id: 8, next_round: 42, consumer_index: 1 });
         rt(ClientHeartbeatResp {
             worker_addrs: vec!["127.0.0.1:1234".into()],
             job_finished: false,
             round_owner_addrs: vec!["127.0.0.1:1234".into(), "127.0.0.1:1234".into()],
+            round_floor: 17,
         });
         rt(RegisterWorkerReq { addr: "127.0.0.1:9".into() });
         rt(RegisterWorkerResp {
@@ -823,6 +851,7 @@ mod tests {
                 consumers: vec![8, 9],
                 owned_residues: vec![1, 3],
                 start_round: 21,
+                has_lease_view: true,
             }],
         });
         rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });

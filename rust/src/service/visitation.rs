@@ -88,16 +88,21 @@ impl VisitationTracker {
 /// must see a batch from the same group (same sequence-length bucket —
 /// the "signature"), and each `(consumer, round)` slot is delivered at
 /// most once. Tests feed every consumed round here and assert the
-/// contract, with an explicit allowance for rounds interrupted by an
-/// owner failure (the relaxed guarantee: a round materialized twice —
-/// once by the dead owner, once by the lease inheritor — may hand
+/// contract, with an explicit allowance for rounds interrupted by a
+/// lease change (the relaxed guarantee: a round materialized twice —
+/// once by the previous owner, once by the lease inheritor, whether the
+/// change came from an owner crash or a revival re-balance — may hand
 /// different groups to consumers that fetched on opposite sides of the
-/// crash).
+/// change; the window is bounded by one heartbeat interval).
 #[derive(Debug, Default)]
 pub struct RoundTracker {
     /// round -> (first-seen signature, mismatch flag, consumers seen).
     rounds: HashMap<u64, (u64, bool, Vec<usize>)>,
     duplicate_deliveries: u64,
+    /// Highest recovery floor recorded so far (see
+    /// [`RoundTracker::set_floor`]).
+    floor: u64,
+    below_floor_deliveries: u64,
 }
 
 /// Verification outcome of [`RoundTracker::report`].
@@ -111,6 +116,10 @@ pub struct RoundReport {
     /// (consumer, round) slots delivered more than once (always a
     /// violation — the §3.6 exactly-once-per-slot half).
     pub duplicate_deliveries: u64,
+    /// Deliveries observed for rounds below a recorded recovery floor
+    /// (always a violation — a consumed round was re-labeled and
+    /// re-served after a restart or lease move).
+    pub below_floor_deliveries: u64,
 }
 
 impl RoundTracker {
@@ -118,9 +127,22 @@ impl RoundTracker {
         Self::default()
     }
 
+    /// Record a recovery floor (dispatcher restart, lease re-balance):
+    /// every consumer had consumed all rounds `< floor` when the event
+    /// happened, so a *later* delivery labeled below it means a consumed
+    /// round was re-served — the across-restart half of the §3.6
+    /// exactly-once-per-slot contract. Monotonic (the highest floor
+    /// recorded wins).
+    pub fn set_floor(&mut self, floor: u64) {
+        self.floor = self.floor.max(floor);
+    }
+
     /// Record that `consumer` received a batch with `signature` (e.g.
     /// its bucket id) for `round`.
     pub fn observe(&mut self, round: u64, consumer: usize, signature: u64) {
+        if round < self.floor {
+            self.below_floor_deliveries += 1;
+        }
         let entry = self.rounds.entry(round).or_insert((signature, false, Vec::new()));
         if entry.0 != signature {
             entry.1 = true;
@@ -137,6 +159,7 @@ impl RoundTracker {
             rounds_seen: self.rounds.len(),
             mismatched_rounds: self.rounds.values().filter(|(_, m, _)| *m).count(),
             duplicate_deliveries: self.duplicate_deliveries,
+            below_floor_deliveries: self.below_floor_deliveries,
         }
     }
 }
@@ -157,6 +180,25 @@ mod tests {
         assert_eq!(r.rounds_seen, 2);
         assert_eq!(r.mismatched_rounds, 1);
         assert_eq!(r.duplicate_deliveries, 1);
+        assert_eq!(r.below_floor_deliveries, 0);
+    }
+
+    #[test]
+    fn round_tracker_floor_flags_resurrected_rounds() {
+        let mut t = RoundTracker::new();
+        t.observe(0, 0, 1);
+        t.observe(1, 0, 1);
+        // Restart: everyone had consumed rounds < 2.
+        t.set_floor(2);
+        t.observe(2, 0, 1); // resumes at the floor: fine
+        assert_eq!(t.report().below_floor_deliveries, 0);
+        t.observe(1, 0, 1); // a consumed round re-served: violation
+        let r = t.report();
+        assert_eq!(r.below_floor_deliveries, 1);
+        // The floor is monotonic: a lower later floor cannot relax it.
+        t.set_floor(1);
+        t.observe(1, 1, 1);
+        assert_eq!(t.report().below_floor_deliveries, 2);
     }
 
     #[test]

@@ -78,6 +78,13 @@ pub struct WorkerConfig {
     /// a late lazy attacher starts at the live frontier instead of
     /// replaying the retained window.
     pub eager_window_eviction: bool,
+    /// Address to register with the dispatcher instead of the data
+    /// server's local bind address (a stable VIP / proxy / NAT front).
+    /// Worker identity is keyed by this address, so a worker revived
+    /// behind the same advertised address re-registers as the *same*
+    /// logical worker and its round residues re-balance back to it
+    /// (§3.6 revival). `None` = the local bind address.
+    pub advertise_addr: Option<String>,
 }
 
 /// GetElements/Fetch defaults applied when a request leaves a knob at 0.
@@ -109,6 +116,7 @@ impl WorkerConfig {
             round_prefetch_depth: 2,
             stream_caps: stream_caps::ALL,
             eager_window_eviction: true,
+            advertise_addr: None,
         }
     }
 }
@@ -597,17 +605,22 @@ impl CoordinatedState {
         worker_index: u64,
         num_workers: u64,
         owned_residues: &[u32],
+        lease_view: bool,
         start_round: u64,
         depth: usize,
     ) -> CoordinatedState {
         let num_workers = num_workers.max(1);
         let mut owned: std::collections::BTreeSet<u64> =
             owned_residues.iter().map(|&r| r as u64 % num_workers).collect();
-        if owned.is_empty() && worker_index < num_workers {
+        if owned.is_empty() && !lease_view && worker_index < num_workers {
             // Pre-lease dispatchers send no residue set: fall back to the
             // fixed `worker_index` assignment. A late joiner
             // (worker_index == num_workers) starts with no lease and its
-            // producer parks until granted one.
+            // producer parks until granted one. With an authoritative
+            // lease view (`lease_view`), an empty set really means
+            // leaseless — a revived worker whose residues moved to
+            // survivors must not self-assign its home residue and
+            // materialize split-brain rounds.
             owned.insert(worker_index);
         }
         // Label from the dispatcher's floor (min round any consumer still
@@ -971,13 +984,17 @@ impl Worker {
         })
         .map_err(|e| ServiceError::Other(format!("bind: {e}")))?;
         let my_addr = server.local_addr().to_string();
+        // Register under the advertised (stable) address when configured:
+        // the dispatcher keys worker identity by this, so a revival
+        // behind the same front keeps the same worker id.
+        let reg_addr = shared.cfg.advertise_addr.clone().unwrap_or_else(|| my_addr.clone());
 
         // Register: returns our id plus tasks for all active jobs.
         let resp: RegisterWorkerResp = call_typed(
             &shared.pool,
             dispatcher_addr,
             dispatcher_methods::REGISTER_WORKER,
-            &RegisterWorkerReq { addr: my_addr.clone() },
+            &RegisterWorkerReq { addr: reg_addr },
             Duration::from_secs(10),
         )?;
         shared.worker_id.store(resp.worker_id, Ordering::SeqCst);
@@ -1306,6 +1323,7 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
                 task.worker_index as u64,
                 task.num_workers as u64,
                 &task.owned_residues,
+                task.has_lease_view,
                 task.start_round,
                 shared.cfg.round_prefetch_depth,
             ));
@@ -2358,7 +2376,7 @@ mod tests {
 
     #[test]
     fn coordinated_round_ownership() {
-        let c = CoordinatedState::new(2, 1, 4, &[], 0, 2);
+        let c = CoordinatedState::new(2, 1, 4, &[], false, 0, 2);
         assert!(!c.owns_round(0));
         assert!(c.owns_round(1));
         assert!(c.owns_round(5));
@@ -2368,7 +2386,7 @@ mod tests {
 
     #[test]
     fn coordinated_round_serves_each_consumer_once() {
-        let c = CoordinatedState::new(2, 0, 1, &[], 0, 2);
+        let c = CoordinatedState::new(2, 0, 1, &[], false, 0, 2);
         assert!(c.install_round(round_of(&[10, 11])));
         let ea = take_bytes(&c, 0, 0);
         let eb = take_bytes(&c, 0, 1);
@@ -2380,7 +2398,7 @@ mod tests {
 
     #[test]
     fn coordinated_eos_after_last_round() {
-        let c = CoordinatedState::new(1, 0, 1, &[], 0, 2);
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 2);
         assert!(c.install_round(round_of(&[1])));
         c.set_eos();
         let e = take_bytes(&c, 0, 0);
@@ -2393,7 +2411,7 @@ mod tests {
     fn coordinated_buffers_rounds_ahead_with_bounded_depth() {
         // Depth 2: two rounds buffer ahead of consumption; the third
         // install blocks (condvar, not polling) until a round drains.
-        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], 0, 2));
+        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], false, 0, 2));
         assert!(c.install_round(round_of(&[0])));
         assert!(c.install_round(round_of(&[1])));
         assert_eq!(c.buffered_rounds(), 2);
@@ -2420,7 +2438,7 @@ mod tests {
 
     #[test]
     fn coordinated_halt_unblocks_parked_producer() {
-        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], 0, 1));
+        let c = Arc::new(CoordinatedState::new(1, 0, 1, &[], false, 0, 1));
         assert!(c.install_round(round_of(&[0])));
         let c2 = c.clone();
         let h = std::thread::spawn(move || c2.install_round(round_of(&[1])));
@@ -2434,7 +2452,7 @@ mod tests {
         // Worker 0 of 2 owns residue 0; it adopts residue 1 (the dead
         // owner's) with floor 3: the first adopted label is the smallest
         // round >= 3 in residue 1, i.e. round 3.
-        let c = CoordinatedState::new(1, 0, 2, &[], 0, 8);
+        let c = CoordinatedState::new(1, 0, 2, &[], false, 0, 8);
         assert!(c.install_round(round_of(&[0]))); // round 0
         assert!(c.install_round(round_of(&[2]))); // round 2
         c.set_owned(&[0, 1], 3);
@@ -2444,7 +2462,7 @@ mod tests {
         assert_eq!(take_bytes(&c, 3, 0).tensors[0].as_i32(), vec![3]);
         assert_eq!(take_bytes(&c, 4, 0).tensors[0].as_i32(), vec![4]);
         // Dropping a residue discards its buffered rounds.
-        let c2 = CoordinatedState::new(1, 0, 2, &[], 0, 8);
+        let c2 = CoordinatedState::new(1, 0, 2, &[], false, 0, 8);
         assert!(c2.install_round(round_of(&[0])));
         c2.set_owned(&[1], 0);
         assert!(!c2.owns_round(0), "residue 0 released");
@@ -2456,7 +2474,7 @@ mod tests {
     fn coordinated_watermark_gc_drops_abandoned_rounds() {
         // Rounds every consumer has moved past (possible only after a
         // lease reassignment) are GC'd so they cannot pin the buffer.
-        let c = CoordinatedState::new(1, 0, 1, &[], 0, 8);
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 8);
         for i in 0..3 {
             assert!(c.install_round(round_of(&[i])));
         }
@@ -2476,7 +2494,7 @@ mod tests {
         // the dispatcher floor, not the stale progress marker —
         // otherwise consumers get "round already consumed" for rounds
         // that were never delivered.
-        let c = CoordinatedState::new(1, 0, 1, &[], 0, 8);
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 8);
         for i in 0..3 {
             assert!(c.install_round(round_of(&[i])));
         }
@@ -2491,9 +2509,30 @@ mod tests {
     fn coordinated_restart_labels_from_task_floor() {
         // A restarted worker re-receiving its task mid-epoch labels from
         // the TaskDef floor instead of crawling up from round 0.
-        let c = CoordinatedState::new(1, 0, 2, &[0], 6, 4);
+        let c = CoordinatedState::new(1, 0, 2, &[0], true, 6, 4);
         assert!(c.install_round(round_of(&[1])));
         assert_eq!(take_bytes(&c, 6, 0).tensors[0].as_i32(), vec![1]);
+    }
+
+    #[test]
+    fn coordinated_lease_view_empty_set_means_leaseless() {
+        // Authoritative lease view (post-lease dispatchers): an empty
+        // residue set really is leaseless — a revived worker whose
+        // residues moved to survivors must NOT fall back to its home
+        // worker_index and materialize split-brain rounds. The pre-lease
+        // fallback (lease_view = false) keeps the old behavior.
+        let c = CoordinatedState::new(1, 0, 2, &[], true, 0, 2);
+        assert!(!c.owns_round(0), "no self-assignment under a lease view");
+        assert!(matches!(
+            c.take(0, 0, Duration::from_millis(10)).unwrap(),
+            RoundTake::WrongWorker
+        ));
+        // A later grant (revival re-balance via heartbeat) restores it,
+        // labeling from the dispatcher floor.
+        c.set_owned(&[0], 4);
+        assert!(c.owns_round(0));
+        assert!(c.install_round(round_of(&[7]))); // labeled round 4
+        assert_eq!(take_bytes(&c, 4, 0).tensors[0].as_i32(), vec![7]);
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Shared e2e test harness: cluster spin-up, stable-address endpoints, a
+//! journal-backed dispatcher restart helper, and a deterministic seeded
+//! fault injector. Dedupes the scaffolding previously copy-pasted across
+//! `service_e2e.rs`, `coordinated_prefetch.rs`, `stream_session.rs`, and
+//! `properties.rs`; each integration-test crate pulls it in via
+//! `mod common;`, so not every crate uses every helper.
+#![allow(dead_code)]
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::rpc::{call_typed, Pool};
+use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
+use tfdatasvc::service::proto::{
+    dispatcher_methods, worker_methods, GetOrCreateJobReq, GetOrCreateJobResp, ProcessingMode,
+    RegisterDatasetReq, RegisterDatasetResp, SharingMode, ShardingPolicy, WorkerStatusReq,
+    WorkerStatusResp,
+};
+use tfdatasvc::service::worker::{Worker, WorkerConfig};
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
+use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::util::rng::Rng;
+
+/// Default RPC deadline for raw protocol-level calls in tests.
+pub const T: Duration = Duration::from_secs(5);
+
+// ------------------------------------------------------------ simple spin-up
+
+/// In-memory dispatcher with default config (the pre-harness helper the
+/// e2e files shared by copy-paste).
+pub fn start_dispatcher() -> Dispatcher {
+    Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap()
+}
+
+/// Worker with default config over `store`, registered with `dispatcher`.
+pub fn start_worker(dispatcher: &Dispatcher, store: Arc<ObjectStore>) -> Worker {
+    let cfg = WorkerConfig::new(store, UdfRegistry::with_builtins());
+    Worker::start("127.0.0.1:0", &dispatcher.addr(), cfg).unwrap()
+}
+
+/// Coordinated-reads client config: OFF sharding, named job (coordinated
+/// consumers group explicitly), one slot per consumer.
+pub fn coord_cfg(job_name: &str, num_consumers: u32, consumer_index: u32) -> ServiceClientConfig {
+    ServiceClientConfig {
+        sharding: ShardingPolicy::Off,
+        mode: ProcessingMode::Coordinated,
+        job_name: job_name.into(),
+        num_consumers,
+        consumer_index,
+        ..Default::default()
+    }
+}
+
+/// Fresh per-process temp journal path (removed if it already exists).
+pub fn journal_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tfdatasvc-e2e-journals");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Fault-injection seed: `TFDATASVC_FAULT_SEED` when set (the CI hygiene
+/// job runs the suite under several fixed seeds), else `default`.
+pub fn fault_seed(default: u64) -> u64 {
+    std::env::var("TFDATASVC_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
+/// Register `graph` + an anonymous independent job through raw dispatcher
+/// RPCs (no client fetcher machinery), then wait until the worker has the
+/// task. The protocol-level tests drive the wire surface directly from
+/// here.
+pub fn raw_independent_job(
+    graph: &tfdatasvc::data::graph::GraphDef,
+    udfs: UdfRegistry,
+) -> (Dispatcher, Worker, Pool, u64, u64) {
+    let d = start_dispatcher();
+    let store = ObjectStore::in_memory();
+    let w = Worker::start("127.0.0.1:0", &d.addr(), WorkerConfig::new(store, udfs)).unwrap();
+    let pool = Pool::with_defaults();
+
+    let reg: RegisterDatasetResp = call_typed(
+        &pool,
+        &d.addr(),
+        dispatcher_methods::REGISTER_DATASET,
+        &RegisterDatasetReq { graph: graph.clone(), udf_digests: vec![] },
+        T,
+    )
+    .unwrap();
+    let job: GetOrCreateJobResp = call_typed(
+        &pool,
+        &d.addr(),
+        dispatcher_methods::GET_OR_CREATE_JOB,
+        &GetOrCreateJobReq {
+            dataset_id: reg.dataset_id,
+            job_name: String::new(),
+            sharding: ShardingPolicy::Dynamic,
+            mode: ProcessingMode::Independent,
+            num_consumers: 0,
+            sharing: SharingMode::Off,
+        },
+        T,
+    )
+    .unwrap();
+
+    // The task reaches the worker on its next heartbeat.
+    let deadline = Instant::now() + T;
+    loop {
+        let st: WorkerStatusResp =
+            call_typed(&pool, &w.addr(), worker_methods::WORKER_STATUS, &WorkerStatusReq {}, T)
+                .unwrap();
+        if st.active_tasks.contains(&job.job_id) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "task never reached the worker");
+        thread::sleep(Duration::from_millis(10));
+    }
+    (d, w, pool, job.job_id, job.client_id)
+}
+
+// ------------------------------------------------------- stable addresses
+
+/// A tiny TCP forwarder giving a service endpoint a **stable address**
+/// across process restarts — the test-harness analogue of the VIP /
+/// service name a production deployment puts in front of the dispatcher
+/// and each worker. Restarting a component re-binds an ephemeral port;
+/// pointing the forwarder's backend at the new port keeps every peer's
+/// cached address valid (and avoids re-binding a just-closed port, which
+/// TIME_WAIT makes flaky). While the backend is empty (component down),
+/// incoming connections are accepted and immediately dropped, so peers
+/// observe connection failures exactly as during a real restart.
+pub struct StableAddr {
+    addr: String,
+    backend: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl StableAddr {
+    pub fn start() -> StableAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let backend = Arc::new(Mutex::new(String::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        {
+            let backend = backend.clone();
+            let stop = stop.clone();
+            thread::Builder::new()
+                .name(format!("stable-addr-{addr}"))
+                .spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((down, _)) => {
+                            let target = backend.lock().unwrap().clone();
+                            thread::Builder::new()
+                                .name("stable-addr-conn".into())
+                                .spawn(move || splice(down, &target))
+                                .ok();
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => return,
+                    }
+                })
+                .unwrap();
+        }
+        StableAddr { addr, backend, stop }
+    }
+
+    /// The stable front address peers should dial.
+    pub fn addr(&self) -> String {
+        self.addr.clone()
+    }
+
+    /// Point the front at a (new) live backend.
+    pub fn set_backend(&self, addr: &str) {
+        *self.backend.lock().unwrap() = addr.to_string();
+    }
+
+    /// Take the component "down": connections drop until a new backend is
+    /// set.
+    pub fn clear_backend(&self) {
+        self.backend.lock().unwrap().clear();
+    }
+}
+
+impl Drop for StableAddr {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Bidirectional byte forwarding until either side closes.
+fn splice(down: TcpStream, target: &str) {
+    if target.is_empty() {
+        return; // component down: drop the connection
+    }
+    let Ok(up) = TcpStream::connect(target) else { return };
+    down.set_nodelay(true).ok();
+    up.set_nodelay(true).ok();
+    let (Ok(mut c2s_r), Ok(mut c2s_w)) = (down.try_clone(), up.try_clone()) else { return };
+    let h = thread::Builder::new().name("stable-addr-up".into()).spawn(move || {
+        let _ = std::io::copy(&mut c2s_r, &mut c2s_w);
+        let _ = c2s_w.shutdown(Shutdown::Both);
+        let _ = c2s_r.shutdown(Shutdown::Both);
+    });
+    let mut s2c_r = up;
+    let mut s2c_w = down;
+    let _ = std::io::copy(&mut s2c_r, &mut s2c_w);
+    let _ = s2c_w.shutdown(Shutdown::Both);
+    let _ = s2c_r.shutdown(Shutdown::Both);
+    if let Ok(h) = h {
+        let _ = h.join();
+    }
+}
+
+// ---------------------------------------------------------------- cluster
+
+struct WorkerSlot {
+    front: StableAddr,
+    worker: Option<Worker>,
+}
+
+/// A dispatcher + N workers, each behind a [`StableAddr`], with
+/// kill/revive/restart controls. Interior mutability throughout so a
+/// ticker thread (and the test body) can share one `Arc<Cluster>`.
+pub struct Cluster {
+    pub store: Arc<ObjectStore>,
+    dcfg: DispatcherConfig,
+    dfront: StableAddr,
+    dispatcher: Mutex<Option<Arc<Dispatcher>>>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    /// Template config cloned for every spawned / revived worker.
+    wcfg: Mutex<WorkerConfig>,
+}
+
+impl Cluster {
+    pub fn start(num_workers: usize) -> Arc<Cluster> {
+        Self::with_config(num_workers, DispatcherConfig::default())
+    }
+
+    pub fn with_config(num_workers: usize, dcfg: DispatcherConfig) -> Arc<Cluster> {
+        let store = ObjectStore::in_memory();
+        let udfs = UdfRegistry::with_builtins();
+        Self::with_parts(num_workers, dcfg, store, udfs)
+    }
+
+    pub fn with_parts(
+        num_workers: usize,
+        dcfg: DispatcherConfig,
+        store: Arc<ObjectStore>,
+        udfs: UdfRegistry,
+    ) -> Arc<Cluster> {
+        let dfront = StableAddr::start();
+        let d = Dispatcher::start("127.0.0.1:0", dcfg.clone()).unwrap();
+        dfront.set_backend(&d.addr());
+        let wcfg = WorkerConfig::new(store.clone(), udfs);
+        let cluster = Arc::new(Cluster {
+            store,
+            dcfg,
+            dfront,
+            dispatcher: Mutex::new(Some(Arc::new(d))),
+            workers: Mutex::new(Vec::new()),
+            wcfg: Mutex::new(wcfg),
+        });
+        for _ in 0..num_workers {
+            cluster.add_worker();
+        }
+        cluster
+    }
+
+    /// The stable dispatcher address (valid across restarts).
+    pub fn dispatcher_addr(&self) -> String {
+        self.dfront.addr()
+    }
+
+    pub fn dispatcher(&self) -> Arc<Dispatcher> {
+        self.dispatcher.lock().unwrap().clone().expect("dispatcher is up")
+    }
+
+    /// Mutate the template WorkerConfig used by `add_worker` and
+    /// `revive_worker` (call before adding workers).
+    pub fn set_worker_config(&self, f: impl FnOnce(&mut WorkerConfig)) {
+        f(&mut self.wcfg.lock().unwrap());
+    }
+
+    pub fn add_worker(&self) -> usize {
+        let front = StableAddr::start();
+        let mut cfg = self.wcfg.lock().unwrap().clone();
+        cfg.advertise_addr = Some(front.addr());
+        let w = Worker::start("127.0.0.1:0", &self.dispatcher_addr(), cfg).unwrap();
+        front.set_backend(&w.addr());
+        let mut ws = self.workers.lock().unwrap();
+        ws.push(WorkerSlot { front, worker: Some(w) });
+        ws.len() - 1
+    }
+
+    /// The worker's stable (advertised) address.
+    pub fn worker_addr(&self, i: usize) -> String {
+        self.workers.lock().unwrap()[i].front.addr()
+    }
+
+    /// Run `f` against the live worker handle (metrics assertions).
+    pub fn with_worker<R>(&self, i: usize, f: impl FnOnce(&Worker) -> R) -> Option<R> {
+        self.workers.lock().unwrap()[i].worker.as_ref().map(f)
+    }
+
+    /// Preempt worker `i`: data server severed, heartbeats stop, the
+    /// stable address goes dark.
+    pub fn kill_worker(&self, i: usize) {
+        let mut ws = self.workers.lock().unwrap();
+        ws[i].front.clear_backend();
+        if let Some(w) = ws[i].worker.take() {
+            w.shutdown();
+        }
+    }
+
+    /// Revive worker `i` behind the same stable address: it re-registers
+    /// as the *same* logical worker (identity = advertised address), so
+    /// its round residues re-balance back after the hysteresis window.
+    pub fn revive_worker(&self, i: usize) {
+        let mut ws = self.workers.lock().unwrap();
+        assert!(ws[i].worker.is_none(), "worker {i} is already up");
+        let mut cfg = self.wcfg.lock().unwrap().clone();
+        cfg.advertise_addr = Some(ws[i].front.addr());
+        let w = Worker::start("127.0.0.1:0", &self.dispatcher_addr(), cfg).unwrap();
+        ws[i].front.set_backend(&w.addr());
+        ws[i].worker = Some(w);
+    }
+
+    /// Kill the dispatcher (journal intact) and restart it after
+    /// `downtime`, behind the same stable address. Pointless without a
+    /// `journal_path` in the config — state would not survive.
+    pub fn restart_dispatcher(&self, downtime: Duration) {
+        self.dfront.clear_backend();
+        let old = self.dispatcher.lock().unwrap().take();
+        drop(old); // server shutdown severs live connections
+        thread::sleep(downtime);
+        let d = Dispatcher::start("127.0.0.1:0", self.dcfg.clone()).unwrap();
+        self.dfront.set_backend(&d.addr());
+        *self.dispatcher.lock().unwrap() = Some(Arc::new(d));
+    }
+
+    /// One lease tick (the orchestrator control loop's job in production).
+    pub fn tick(&self) {
+        let d = self.dispatcher.lock().unwrap().clone();
+        if let Some(d) = d {
+            d.tick();
+        }
+    }
+
+    /// A client dialing the stable dispatcher address.
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient::new(&self.dispatcher_addr())
+    }
+}
+
+/// Background lease ticker over the cluster's (possibly restarting)
+/// dispatcher — the orchestrator control loop's job in production.
+/// Stops (and joins) when the guard drops.
+pub fn start_ticker(cluster: &Arc<Cluster>, interval: Duration) -> TickerGuard {
+    let stop = Arc::new(AtomicBool::new(false));
+    let c = cluster.clone();
+    let s = stop.clone();
+    let handle = thread::Builder::new()
+        .name("cluster-ticker".into())
+        .spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                c.tick();
+                thread::sleep(interval);
+            }
+        })
+        .unwrap();
+    TickerGuard { stop, handle: Some(handle) }
+}
+
+pub struct TickerGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Drop for TickerGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// --------------------------------------------------------- fault injector
+
+/// One scripted fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    KillWorker(usize),
+    ReviveWorker(usize),
+    RestartDispatcher,
+}
+
+/// A fault scheduled at a consumer-progress point (apply the event once
+/// the test has consumed `at_step` rounds/elements — progress-keyed, so
+/// the schedule is timing-independent and reproducible).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub at_step: u64,
+    pub event: FaultEvent,
+}
+
+/// Deterministic seeded fault schedule: workers flap (never killing the
+/// last one alive; every kill is eventually paired with a revive), the
+/// dispatcher restarts once mid-run, and everything is back up well
+/// before `steps` so the run can finish. Same seed -> same schedule.
+pub fn seeded_fault_plan(seed: u64, num_workers: usize, steps: u64) -> Vec<FaultPlan> {
+    let mut rng = Rng::new(seed);
+    let mut plan = Vec::new();
+    let mut up: Vec<usize> = (0..num_workers).collect();
+    let mut down: Vec<usize> = Vec::new();
+    let mut step = 2 + rng.below(3);
+    let restart_at = steps / 3 + rng.below((steps / 3).max(1));
+    let mut restarted = false;
+    while step + 6 < steps {
+        if !restarted && step >= restart_at {
+            plan.push(FaultPlan { at_step: step, event: FaultEvent::RestartDispatcher });
+            restarted = true;
+        } else if !down.is_empty() && (up.len() <= 1 || rng.chance(0.6)) {
+            let i = down.remove(rng.below_usize(down.len()));
+            up.push(i);
+            plan.push(FaultPlan { at_step: step, event: FaultEvent::ReviveWorker(i) });
+        } else if up.len() > 1 {
+            let i = up.remove(rng.below_usize(up.len()));
+            down.push(i);
+            plan.push(FaultPlan { at_step: step, event: FaultEvent::KillWorker(i) });
+        }
+        step += 2 + rng.below(5);
+    }
+    // Everything back up before the tail so the epoch can drain.
+    for i in down {
+        plan.push(FaultPlan { at_step: step, event: FaultEvent::ReviveWorker(i) });
+        step += 1;
+    }
+    plan
+}

@@ -1,7 +1,10 @@
 //! Pipelined coordinated reads (§3.6) end to end: round-lease prefetch,
 //! owner failure with lease reassignment, chunked oversized rounds, and
 //! the lock-step downgrade against a peer that does not grant
-//! `ROUND_PREFETCH`.
+//! `ROUND_PREFETCH`. Cluster scaffolding lives in the shared `common`
+//! harness.
+
+mod common;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -13,7 +16,7 @@ use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
 use tfdatasvc::data::Element;
 use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
-use tfdatasvc::service::proto::{stream_caps, ProcessingMode, ShardingPolicy};
+use tfdatasvc::service::proto::stream_caps;
 use tfdatasvc::service::visitation::{Guarantee, RoundTracker, VisitationTracker};
 use tfdatasvc::service::worker::{Worker, WorkerConfig, MIN_STREAM_FRAME_LEN};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
@@ -21,14 +24,7 @@ use tfdatasvc::storage::dataset::{generate_text, TextGenConfig};
 use tfdatasvc::storage::ObjectStore;
 
 fn coord_cfg(num_consumers: u32, ci: u32) -> ServiceClientConfig {
-    ServiceClientConfig {
-        sharding: ShardingPolicy::Off,
-        mode: ProcessingMode::Coordinated,
-        job_name: "coord-prefetch".into(),
-        num_consumers,
-        consumer_index: ci,
-        ..Default::default()
-    }
+    common::coord_cfg("coord-prefetch", num_consumers, ci)
 }
 
 /// Two consumers, two workers, prefetch on (the default): the §3.6

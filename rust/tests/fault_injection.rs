@@ -1,0 +1,203 @@
+//! Deterministic fault-injection e2e suite for the coordinated round
+//! plane (§3.4 × §3.6): dispatcher kill+restore mid-epoch (journaled
+//! round leases), owner kill → lease reassignment → revival re-balance,
+//! and seeded random kill/revive/restart schedules. The CI hygiene job
+//! runs this suite under several fixed seeds (`TFDATASVC_FAULT_SEED`)
+//! with a hard timeout; every blocking wait below also carries its own
+//! deadline so a hang fails fast instead of wedging the runner.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use common::{
+    coord_cfg, fault_seed, journal_path, seeded_fault_plan, start_ticker, Cluster, FaultEvent,
+};
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::service::client::DistributedIter;
+use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::visitation::RoundTracker;
+
+/// Consume `n` rounds, feeding the tracker (signature constant: a single
+/// consumer only checks the exactly-once-per-slot and floor halves).
+fn drain_rounds(it: &mut DistributedIter, tracker: &mut RoundTracker, rounds: &mut u64, n: u64) {
+    for _ in 0..n {
+        let e = it.next().expect("round fetch failed").expect("stream ended early");
+        assert!(!e.tensors.is_empty());
+        tracker.observe(*rounds, 0, 0);
+        *rounds += 1;
+    }
+}
+
+/// Poll `probe` until it returns true or `what` times out.
+fn wait_until(deadline: Instant, what: &str, mut probe: impl FnMut() -> bool) {
+    while !probe() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Acceptance: a coordinated job with 3 workers survives a mid-epoch
+/// dispatcher kill+restore — rounds resume at the journaled floor and
+/// exactly-once-per-slot holds — and a killed-then-revived owner regains
+/// its residues within one heartbeat+hysteresis window (lease counters
+/// asserted on both dispatcher and worker).
+#[test]
+fn coordinated_job_survives_dispatcher_restart_and_owner_revival() {
+    let dcfg = DispatcherConfig {
+        // Generous vs the ~max heartbeat gap across the dispatcher's own
+        // restart (downtime + pool retry budget + interval), so the
+        // restart itself cannot spuriously fail workers.
+        worker_timeout: Duration::from_millis(800),
+        journal_path: Some(journal_path("coord-restart")),
+        revival_hysteresis: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let cluster = Cluster::with_config(3, dcfg);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+
+    // A long source so the epoch cannot end mid-test.
+    let graph = PipelineBuilder::source_range(100_000).build();
+    let client = cluster.client();
+    let mut it = client.distribute(&graph, coord_cfg("coord-restart", 1, 0)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 6);
+
+    // Mid-epoch dispatcher kill + journal-backed restore at the same
+    // (stable) address: worker_order and the lease table replay, so the
+    // job stays routable and rounds resume at the floor the first
+    // post-restart heartbeats report.
+    cluster.restart_dispatcher(Duration::from_millis(300));
+    tracker.set_floor(rounds);
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 6);
+
+    // Kill one owner: after the lease expires, its residues move to the
+    // survivors and rounds keep flowing.
+    cluster.kill_worker(2);
+    wait_until(Instant::now() + Duration::from_secs(10), "lease reassignment", || {
+        cluster.dispatcher().metrics().counter("dispatcher/round_leases_reassigned").get() >= 1
+    });
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 6);
+
+    // Revive the owner behind its stable address: one registration +
+    // hysteresis window later its home residues re-balance back.
+    cluster.revive_worker(2);
+    let revived_at = Instant::now();
+    wait_until(revived_at + Duration::from_secs(10), "revival re-balance", || {
+        cluster.dispatcher().metrics().counter("dispatcher/round_leases_rebalanced").get() >= 1
+    });
+    // Generous sanity bound on "within one heartbeat+hysteresis window":
+    // registration (immediate) + 200 ms hysteresis + 50 ms tick + one
+    // 100 ms heartbeat, with scheduler slack.
+    assert!(
+        revived_at.elapsed() < Duration::from_secs(5),
+        "re-balance took {:?}",
+        revived_at.elapsed()
+    );
+    wait_until(Instant::now() + Duration::from_secs(10), "revived owner lease adoption", || {
+        cluster
+            .with_worker(2, |w| w.metrics().counter("worker/round_leases_updated").get() >= 1)
+            .unwrap_or(false)
+    });
+    // The revived owner serves again: keep draining well past the
+    // prefetch window so rounds of its residue class must flow through it.
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 12);
+
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert_eq!(rounds, 30, "rounds kept flowing through every fault");
+    it.release();
+}
+
+/// Seeded schedule: random kill/revive/dispatcher-restart faults at
+/// scripted consumer-progress points. Invariants: rounds never stall
+/// past the deadline, no (consumer, round) slot is delivered twice, and
+/// nothing below a restart floor is re-served. Reproducible: the
+/// schedule is a pure function of the seed.
+#[test]
+fn seeded_fault_schedule_keeps_round_plane_consistent() {
+    let seed = fault_seed(0x5eed_0001);
+    let num_workers = 3usize;
+    let steps = 48u64;
+    let dcfg = DispatcherConfig {
+        journal_path: Some(journal_path(&format!("fault-sched-{seed}"))),
+        worker_timeout: Duration::from_millis(600),
+        revival_hysteresis: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let cluster = Cluster::with_config(num_workers, dcfg);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(40));
+    let plan = seeded_fault_plan(seed, num_workers, steps);
+    assert!(!plan.is_empty(), "seed {seed} produced an empty schedule");
+
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = cluster.client();
+    let mut it = client.distribute(&graph, coord_cfg(&format!("fault-{seed}"), 1, 0)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let mut next_event = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(180);
+    for round in 0..steps {
+        while next_event < plan.len() && plan[next_event].at_step <= round {
+            match plan[next_event].event {
+                FaultEvent::KillWorker(i) => cluster.kill_worker(i),
+                FaultEvent::ReviveWorker(i) => cluster.revive_worker(i),
+                FaultEvent::RestartDispatcher => {
+                    cluster.restart_dispatcher(Duration::from_millis(200));
+                    tracker.set_floor(round);
+                }
+            }
+            next_event += 1;
+        }
+        let e = it.next().expect("round fetch failed under faults").expect("stream ended early");
+        assert!(!e.tensors.is_empty());
+        tracker.observe(round, 0, 0);
+        assert!(Instant::now() < deadline, "fault schedule run exceeded its deadline");
+    }
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert_eq!(report.rounds_seen as u64, steps);
+    it.release();
+}
+
+/// The schedule generator really is deterministic per seed (the property
+/// the CI seed matrix relies on) and never plans an impossible event
+/// (kill of a down worker, revive of an up one, killing the last worker).
+#[test]
+fn seeded_fault_plan_is_deterministic_and_well_formed() {
+    for seed in [1u64, 17, 42, 0x5eed_0001] {
+        let a = seeded_fault_plan(seed, 3, 64);
+        let b = seeded_fault_plan(seed, 3, 64);
+        assert_eq!(a.len(), b.len(), "seed {seed}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_step, y.at_step);
+            assert_eq!(x.event, y.event);
+        }
+        let mut up = vec![true; 3];
+        let mut restarts = 0;
+        let mut last_step = 0;
+        for f in &a {
+            assert!(f.at_step >= last_step, "schedule is ordered");
+            last_step = f.at_step;
+            match f.event {
+                FaultEvent::KillWorker(i) => {
+                    assert!(up[i], "kill of a down worker");
+                    up[i] = false;
+                    assert!(up.iter().any(|&u| u), "killed the last worker");
+                }
+                FaultEvent::ReviveWorker(i) => {
+                    assert!(!up[i], "revive of an up worker");
+                    up[i] = true;
+                }
+                FaultEvent::RestartDispatcher => restarts += 1,
+            }
+        }
+        assert!(up.iter().all(|&u| u), "every kill is paired with a revive");
+        assert!(restarts <= 1);
+    }
+}

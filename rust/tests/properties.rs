@@ -7,11 +7,16 @@
 //! worker churn, coordinated-round ownership, and optimizer semantic
 //! equivalence.
 
+mod common;
+
 use tfdatasvc::data::element::{DType, Element, Tensor};
 use tfdatasvc::data::exec::{ElemIter, Executor, ExecutorConfig};
 use tfdatasvc::data::graph::{GraphDef, Node, PipelineBuilder};
 use tfdatasvc::data::optimize::{optimize, OptimizeOptions};
 use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::service::dispatcher::{reassign_dead_residues, rebalance_home_residues};
+use tfdatasvc::service::journal::{Journal, JournalRecord};
+use tfdatasvc::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
 use tfdatasvc::service::sharding::{static_assignment, SplitTracker};
 use tfdatasvc::storage::ObjectStore;
 use tfdatasvc::util::rng::Rng;
@@ -267,6 +272,211 @@ fn prop_graph_wire_roundtrip_random() {
         assert_eq!(GraphDef::from_bytes(&g.to_bytes()).unwrap(), g);
         // Fingerprint is stable under re-encode.
         assert_eq!(g.fingerprint(), GraphDef::from_bytes(&g.to_bytes()).unwrap().fingerprint());
+    }
+}
+
+// ----------------------------------------------------- round-lease model
+
+/// Worker-side label model of a lease-table change: residues a worker no
+/// longer owns lose their labels (the buffered rounds died with the
+/// lease); a newly adopted residue labels from the floor, at the
+/// smallest round in its class `>= floor`. Asserts the §3.6 recovery
+/// invariant inline: no label ever drops below the floor — a consumed
+/// round is never re-labeled.
+fn apply_lease_table(
+    owners: &[u64],
+    labels: &mut std::collections::HashMap<(u64, u64), u64>,
+    floor: u64,
+    m: u64,
+) {
+    for (i, &o) in owners.iter().enumerate() {
+        let r = i as u64;
+        for w in 0..m {
+            if w != o {
+                labels.remove(&(w, r));
+            }
+        }
+        let mut a = (floor / m) * m + r;
+        if a < floor {
+            a += m;
+        }
+        let label = *labels.entry((o, r)).or_insert(a);
+        assert!(label >= floor, "consumed round re-labeled below the floor: {label} < {floor}");
+    }
+}
+
+/// Random kill/revive/advance schedules against the *shipped* lease
+/// transitions ([`reassign_dead_residues`] / [`rebalance_home_residues`]
+/// are the exact functions `Dispatcher::tick` runs). Invariants:
+/// residues only ever point at alive workers, every round is served by
+/// exactly one owner, the owner's label equals the consumer's round at
+/// every serve (so nothing below a floor is ever re-served), and every
+/// round up to the final consumer position was eventually served.
+#[test]
+fn prop_round_lease_invariants_under_kill_revive_rebalance() {
+    use std::collections::HashMap;
+    let mut rng = Rng::new(0x9_000b);
+    for trial in 0..TRIALS {
+        let n = rng.below_usize(6) + 1;
+        let m = n as u64;
+        let worker_order: Vec<u64> = (0..m).collect();
+        let mut owners = worker_order.clone();
+        let mut alive = vec![true; n];
+        // (worker, residue) -> next round label, present only while owned.
+        let mut labels: HashMap<(u64, u64), u64> = (0..m).map(|w| ((w, w), w)).collect();
+        let mut consumer_round = 0u64;
+        let mut served: HashMap<u64, u64> = HashMap::new(); // round -> server
+
+        for _step in 0..250 {
+            let dead_count = alive.iter().filter(|&&a| !a).count();
+            let roll = rng.f64();
+            if roll < 0.15 && n - dead_count >= 2 {
+                // Kill an alive worker; its residues move to survivors.
+                let victims: Vec<u64> = (0..m).filter(|&w| alive[w as usize]).collect();
+                let w = *rng.choice(&victims);
+                alive[w as usize] = false;
+                let gained = reassign_dead_residues(&mut owners, &|x: u64| alive[x as usize]);
+                assert!(!gained.is_empty(), "trial {trial}: survivors must adopt");
+                apply_lease_table(&owners, &mut labels, consumer_round, m);
+            } else if roll < 0.30 && dead_count > 0 {
+                // Revive a dead worker; home residues re-balance back.
+                let downs: Vec<u64> = (0..m).filter(|&w| !alive[w as usize]).collect();
+                let w = *rng.choice(&downs);
+                alive[w as usize] = true;
+                let affected = rebalance_home_residues(&mut owners, &worker_order, &|x: u64| {
+                    alive[x as usize]
+                });
+                assert!(
+                    affected.contains(&w),
+                    "trial {trial}: revived worker {w} did not regain its home residue"
+                );
+                apply_lease_table(&owners, &mut labels, consumer_round, m);
+            } else {
+                // Consumer advances one round through the current table.
+                let r = consumer_round % m;
+                let o = owners[r as usize];
+                assert!(
+                    alive[o as usize],
+                    "trial {trial}: residue {r} leased to dead worker {o}"
+                );
+                let label = labels
+                    .get(&(o, r))
+                    .copied()
+                    .unwrap_or_else(|| panic!("trial {trial}: owner {o} has no label for {r}"));
+                // The owner's next label is exactly the round the
+                // consumer needs: never below (a consumed round
+                // re-labeled), never above (an unserved round skipped).
+                assert_eq!(label, consumer_round, "trial {trial}");
+                labels.insert((o, r), consumer_round + m);
+                assert!(
+                    served.insert(consumer_round, o).is_none(),
+                    "trial {trial}: round {consumer_round} served twice"
+                );
+                consumer_round += 1;
+            }
+        }
+        // Eventual service: every round up to the final position was
+        // served exactly once (sequential consumption + the uniqueness
+        // assert above make the count sufficient).
+        assert_eq!(served.len() as u64, consumer_round, "trial {trial}");
+    }
+}
+
+// ----------------------------------------------------------- journal fuzz
+
+fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
+    match rng.below(7) {
+        0 => JournalRecord::RegisterDataset { dataset_id: rng.next_u64(), graph: rand_graph(rng) },
+        1 => JournalRecord::CreateJob {
+            job_id: rng.next_u64(),
+            dataset_id: rng.next_u64(),
+            job_name: if rng.chance(0.5) { String::new() } else { rng.ident(8) },
+            sharding: *rng.choice(&[
+                ShardingPolicy::Off,
+                ShardingPolicy::Dynamic,
+                ShardingPolicy::Static,
+            ]),
+            mode: *rng.choice(&[ProcessingMode::Independent, ProcessingMode::Coordinated]),
+            num_consumers: rng.next_u32() % 8,
+            sharing: *rng.choice(&[SharingMode::Auto, SharingMode::Off]),
+            worker_order: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+        },
+        2 => JournalRecord::RegisterWorker { worker_id: rng.next_u64(), addr: rng.ident(12) },
+        3 => JournalRecord::ClientJoined { job_id: rng.next_u64(), client_id: rng.next_u64() },
+        4 => JournalRecord::ClientReleased { job_id: rng.next_u64(), client_id: rng.next_u64() },
+        5 => JournalRecord::JobFinished { job_id: rng.next_u64() },
+        _ => JournalRecord::RoundLeaseChanged {
+            job_id: rng.next_u64(),
+            residue_owners: (0..rng.below(8)).map(|_| rng.next_u64()).collect(),
+        },
+    }
+}
+
+/// Every `JournalRecord` variant survives encode -> decode -> re-encode
+/// byte-identically (replay determinism: a journal rewritten from its
+/// decoded records is the same journal).
+#[test]
+fn prop_journal_records_roundtrip_byte_identical() {
+    let mut rng = Rng::new(0x9_0009);
+    let mut variants_seen = std::collections::HashSet::new();
+    for trial in 0..TRIALS {
+        let rec = rand_journal_record(&mut rng);
+        variants_seen.insert(std::mem::discriminant(&rec));
+        let bytes = rec.to_bytes();
+        let back = JournalRecord::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("trial {trial}: decode failed: {e}"));
+        assert_eq!(back, rec, "trial {trial}");
+        assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
+    }
+    assert_eq!(variants_seen.len(), 7, "generator covered every record variant");
+}
+
+/// A journal truncated anywhere in its tail (crash mid-append) replays
+/// the longest prefix of whole records instead of erroring — fuzzed over
+/// random and boundary-exact truncation points.
+#[test]
+fn prop_journal_truncated_tail_recovers_longest_prefix() {
+    let mut rng = Rng::new(0x9_000a);
+    for trial in 0..24 {
+        let recs: Vec<JournalRecord> =
+            (0..rng.below(8) + 2).map(|_| rand_journal_record(&mut rng)).collect();
+        let p = common::journal_path(&format!("prop-trunc-{trial}"));
+        {
+            let j = Journal::open(&p).unwrap();
+            for r in &recs {
+                j.append(r).unwrap();
+            }
+        }
+        let bytes = std::fs::read(&p).unwrap();
+        // Frame sizes: 8-byte (len, crc) header + body.
+        let frames: Vec<usize> = recs.iter().map(|r| 8 + r.to_bytes().len()).collect();
+        assert_eq!(frames.iter().sum::<usize>(), bytes.len());
+        // Random truncation points plus every frame boundary (+/- 1).
+        let mut cuts: Vec<usize> = (0..16).map(|_| rng.below_usize(bytes.len() + 1)).collect();
+        let mut acc = 0usize;
+        for f in &frames {
+            acc += f;
+            cuts.push(acc);
+            cuts.push(acc - 1);
+        }
+        for cut in cuts {
+            let cut = cut.min(bytes.len());
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            let replayed = Journal::replay(&p)
+                .unwrap_or_else(|e| panic!("trial {trial} cut {cut}: replay errored: {e}"));
+            let mut fit = 0usize;
+            let mut used = 0usize;
+            for f in &frames {
+                if used + f <= cut {
+                    used += f;
+                    fit += 1;
+                } else {
+                    break;
+                }
+            }
+            assert_eq!(replayed, recs[..fit], "trial {trial} cut {cut}");
+        }
+        std::fs::remove_file(&p).ok();
     }
 }
 

@@ -1,8 +1,12 @@
 //! End-to-end integration: dispatcher + workers + clients over real TCP.
+//! Cluster scaffolding lives in the shared `common` harness.
+
+mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{start_dispatcher, start_worker};
 use tfdatasvc::data::exec::ElemIter;
 use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
@@ -13,15 +17,6 @@ use tfdatasvc::service::worker::{Worker, WorkerConfig};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::dataset::{generate_text, generate_vision, TextGenConfig, VisionGenConfig};
 use tfdatasvc::storage::ObjectStore;
-
-fn start_dispatcher() -> Dispatcher {
-    Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap()
-}
-
-fn start_worker(dispatcher: &Dispatcher, store: Arc<ObjectStore>) -> Worker {
-    let cfg = WorkerConfig::new(store, UdfRegistry::with_builtins());
-    Worker::start("127.0.0.1:0", &dispatcher.addr(), cfg).unwrap()
-}
 
 #[test]
 fn single_worker_dynamic_sharding_exactly_once() {

@@ -7,70 +7,19 @@
 //! `ServiceClient` fetcher machinery — so they pin the contract an
 //! independently-written client would code against.
 
+mod common;
+
 use std::time::{Duration, Instant};
 
+use common::{raw_independent_job as setup_job, T};
 use tfdatasvc::data::element::{DType, Tensor};
 use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
 use tfdatasvc::data::Element;
 use tfdatasvc::rpc::{call_typed, Pool, RpcError, MAX_FRAME_LEN};
-use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
 use tfdatasvc::service::proto::*;
-use tfdatasvc::service::worker::{Worker, WorkerConfig, MIN_STREAM_FRAME_LEN};
-use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::service::worker::MIN_STREAM_FRAME_LEN;
 use tfdatasvc::wire::Decode;
-
-const T: Duration = Duration::from_secs(5);
-
-/// Register a dataset + anonymous independent job through raw dispatcher
-/// RPCs (no client fetchers), then wait until the worker has the task.
-fn setup_job(
-    graph: &tfdatasvc::data::graph::GraphDef,
-    udfs: UdfRegistry,
-) -> (Dispatcher, Worker, Pool, u64, u64) {
-    let d = Dispatcher::start("127.0.0.1:0", DispatcherConfig::default()).unwrap();
-    let store = ObjectStore::in_memory();
-    let w = Worker::start("127.0.0.1:0", &d.addr(), WorkerConfig::new(store, udfs)).unwrap();
-    let pool = Pool::with_defaults();
-
-    let reg: RegisterDatasetResp = call_typed(
-        &pool,
-        &d.addr(),
-        dispatcher_methods::REGISTER_DATASET,
-        &RegisterDatasetReq { graph: graph.clone(), udf_digests: vec![] },
-        T,
-    )
-    .unwrap();
-    let job: GetOrCreateJobResp = call_typed(
-        &pool,
-        &d.addr(),
-        dispatcher_methods::GET_OR_CREATE_JOB,
-        &GetOrCreateJobReq {
-            dataset_id: reg.dataset_id,
-            job_name: String::new(),
-            sharding: ShardingPolicy::Dynamic,
-            mode: ProcessingMode::Independent,
-            num_consumers: 0,
-            sharing: SharingMode::Off,
-        },
-        T,
-    )
-    .unwrap();
-
-    // The task reaches the worker on its next heartbeat.
-    let deadline = Instant::now() + T;
-    loop {
-        let st: WorkerStatusResp =
-            call_typed(&pool, &w.addr(), worker_methods::WORKER_STATUS, &WorkerStatusReq {}, T)
-                .unwrap();
-        if st.active_tasks.contains(&job.job_id) {
-            break;
-        }
-        assert!(Instant::now() < deadline, "task never reached the worker");
-        std::thread::sleep(Duration::from_millis(10));
-    }
-    (d, w, pool, job.job_id, job.client_id)
-}
 
 fn open(
     pool: &Pool,
