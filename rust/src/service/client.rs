@@ -301,9 +301,16 @@ struct CoordShared {
     /// Rounds the trainer has demanded so far (bumped by `next()`): the
     /// engine's pacing gate. In lock-step mode the engine fetches round
     /// `r` only once `demand > r`; with prefetch it runs up to `depth`
-    /// rounds ahead.
+    /// rounds ahead. The condvar also carries fetch-lane completion
+    /// wakeups ([`run_concurrent`]'s event-driven wait).
     demand: Mutex<u64>,
     demand_changed: Condvar,
+    /// First round this consumer's slot no longer exists at — the
+    /// shrink barrier of a membership epoch that dropped this slot,
+    /// learned from the heartbeat. `u64::MAX` while the slot is live.
+    /// The engine drains up to it, then delivers a clean end of
+    /// sequence instead of waiting on rounds it holds no slot in.
+    eos_at: AtomicU64,
 }
 
 #[derive(Default)]
@@ -404,6 +411,7 @@ impl DistributedIter {
                     owners_changed: Condvar::new(),
                     demand: Mutex::new(0),
                     demand_changed: Condvar::new(),
+                    eos_at: AtomicU64::new(u64::MAX),
                 });
                 // Round progress starts at the "unknown" sentinel: until
                 // this consumer learns the job floor, its heartbeats must
@@ -437,6 +445,25 @@ impl DistributedIter {
                                     o.round_floor = resp.round_floor;
                                     drop(o);
                                     shared.owners_changed.notify_all();
+                                    // Membership shrink (§3.6 elasticity):
+                                    // the newest epoch no longer includes
+                                    // this slot — drain to the barrier and
+                                    // end cleanly. (A pre-epoch dispatcher
+                                    // reports num_consumers 0: ignore.)
+                                    if resp.num_consumers > 0
+                                        && ci >= resp.num_consumers
+                                        && shared.eos_at.load(Ordering::SeqCst)
+                                            > resp.width_barrier_round
+                                    {
+                                        shared
+                                            .eos_at
+                                            .store(resp.width_barrier_round, Ordering::SeqCst);
+                                        // Wake engines parked on either gate.
+                                        let _g = shared.demand.lock().unwrap();
+                                        drop(_g);
+                                        shared.demand_changed.notify_all();
+                                        shared.owners_changed.notify_all();
+                                    }
                                 }
                                 if halt.recv_timeout(hb).is_err() {
                                     break;
@@ -492,6 +519,7 @@ impl DistributedIter {
                     prefetch_depth: cfg.round_prefetch_depth as u64,
                     lockstep: AtomicBool::new(lockstep),
                     shared: shared.clone(),
+                    delivered: delivered.clone(),
                     stop: stop.clone(),
                     halt: halt_rx.clone(),
                     metrics: metrics.clone(),
@@ -655,7 +683,11 @@ impl DistributedIter {
         }
         if let Some(coord) = &self.coord {
             coord.tx_close.close();
-            // Wake a lock-step engine parked on the demand gate.
+            // Wake engines parked on the demand gate. Bracketing the
+            // notify with the demand lock orders it after an engine
+            // that observed `stop` unset and is about to wait, so
+            // teardown never rides out the watchdog timeout.
+            drop(coord.shared.demand.lock().unwrap());
             coord.shared.demand_changed.notify_all();
             coord.shared.owners_changed.notify_all();
         }
@@ -666,6 +698,30 @@ impl DistributedIter {
             &ReleaseJobReq { job_id: self.job_id, client_id: self.client_id },
             Duration::from_secs(5),
         );
+    }
+
+    /// Stop this iterator's threads and channels **without** telling
+    /// the dispatcher (no `ReleaseJob`): the consumer simply goes
+    /// silent, exactly like a crashed trainer process. The fault
+    /// harness uses this to exercise slot replacement — the dispatcher
+    /// must notice the silence via lease expiry, and a later client on
+    /// the same consumer slot must be able to take over.
+    pub fn abandon(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        self.stop.store(true, Ordering::SeqCst);
+        self.halt_tx.close();
+        if let Some(tx) = &self.tx_close {
+            tx.close();
+        }
+        if let Some(coord) = &self.coord {
+            coord.tx_close.close();
+            drop(coord.shared.demand.lock().unwrap());
+            coord.shared.demand_changed.notify_all();
+            coord.shared.owners_changed.notify_all();
+        }
     }
 }
 
@@ -1365,9 +1421,31 @@ enum CoordOutcome {
     /// transient error): retry.
     Empty,
     Eos,
+    /// The owner reports the round already consumed for this slot (a
+    /// replaced consumer re-walking its dead predecessor's progress):
+    /// resume the round walk at `next` instead of erroring terminally.
+    Consumed { next: u64 },
     /// The owner is a pre-session worker: use the legacy `GetElement`
     /// round protocol (sticky per address).
     Legacy,
+}
+
+/// Final resolution of one round by [`CoordEngine::fetch_round`].
+enum RoundResolution {
+    Element(Element),
+    Eos,
+    /// Skip forward: the round was consumed by this slot's replaced
+    /// predecessor; the walk resumes at `next`.
+    Skip { next: u64 },
+}
+
+/// Parse the `next round {n}` hint a worker appends to its
+/// round-consumed protocol errors (see
+/// [`crate::service::ROUND_CONSUMED_PREFIX`]).
+fn parse_skip_hint(msg: &str) -> Option<u64> {
+    let tail = &msg[msg.rfind("next round ")? + "next round ".len()..];
+    let digits: String = tail.chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
 }
 
 /// The coordinated round-fetch engine (§3.6 with round prefetch): it
@@ -1404,6 +1482,13 @@ struct CoordEngine {
     /// Demand-gated mode (no fetch-ahead); sticky once set.
     lockstep: AtomicBool,
     shared: Arc<CoordShared>,
+    /// The consumer's round cursor (also the heartbeat's `next_round`
+    /// progress report). The engine bumps it directly when it *skips*
+    /// rounds a replaced predecessor already consumed — the trainer
+    /// never sees those rounds, so `next()` cannot account for them,
+    /// and without the bump the demand gate would wedge `k` rounds
+    /// behind the engine forever.
+    delivered: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     halt: chan::Receiver<()>,
     metrics: Registry,
@@ -1444,7 +1529,7 @@ fn run_sequential(
         // trainer's consumption speed and would under-count.
         let ahead = *engine.shared.demand.lock().unwrap() <= round;
         match engine.fetch_round(&mut st, round) {
-            Ok(Some(e)) => {
+            Ok(RoundResolution::Element(e)) => {
                 if ahead {
                     engine.metrics.counter("client/rounds_prefetched").inc();
                 }
@@ -1453,7 +1538,12 @@ fn run_sequential(
                 }
                 round += 1;
             }
-            Ok(None) => {
+            Ok(RoundResolution::Skip { next }) => {
+                let to = next.max(round + 1);
+                engine.note_skip(round, to);
+                round = to;
+            }
+            Ok(RoundResolution::Eos) => {
                 let _ = tx.send(Ok(None));
                 break;
             }
@@ -1480,6 +1570,12 @@ fn owner_lane_loop(
         if res_tx.send((round, res)).is_err() {
             break; // coordinator gone
         }
+        // Completion wakeup: the coordinator sleeps on the demand
+        // condvar (no completion poll). Taking the demand lock orders
+        // this notify after a coordinator that already drained the
+        // result queue and is about to wait — no lost wakeups.
+        drop(engine.shared.demand.lock().unwrap());
+        engine.shared.demand_changed.notify_all();
     }
     engine.close_sessions(&st);
 }
@@ -1497,7 +1593,7 @@ fn run_concurrent(
     start_round: u64,
     tx: chan::Sender<crate::data::DataResult<Option<Element>>>,
 ) {
-    let (res_tx, res_rx) = chan::bounded::<(u64, crate::data::DataResult<Option<Element>>)>(16);
+    let (res_tx, res_rx) = chan::bounded::<(u64, crate::data::DataResult<RoundResolution>)>(16);
     // addr -> (round queue, join handle). Lanes are created on first
     // contact with an owner and live until teardown.
     let mut lanes: std::collections::HashMap<String, (chan::Sender<u64>, std::thread::JoinHandle<()>)> =
@@ -1505,7 +1601,7 @@ fn run_concurrent(
     // In-flight round -> the owner address fetching it.
     let mut busy: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
     // Completed out-of-order rounds awaiting in-order delivery.
-    let mut ready: std::collections::HashMap<u64, crate::data::DataResult<Option<Element>>> =
+    let mut ready: std::collections::HashMap<u64, crate::data::DataResult<RoundResolution>> =
         std::collections::HashMap::new();
     // Rounds issued before the trainer demanded them (prefetch ledger).
     let mut issued_ahead: HashSet<u64> = HashSet::new();
@@ -1516,7 +1612,7 @@ fn run_concurrent(
         // Deliver completed rounds strictly in order.
         while let Some(res) = ready.remove(&next_deliver) {
             match res {
-                Ok(Some(e)) => {
+                Ok(RoundResolution::Element(e)) => {
                     if issued_ahead.remove(&next_deliver) {
                         engine.metrics.counter("client/rounds_prefetched").inc();
                     }
@@ -1525,7 +1621,21 @@ fn run_concurrent(
                     }
                     next_deliver += 1;
                 }
-                Ok(None) => {
+                Ok(RoundResolution::Skip { next }) => {
+                    // The round was consumed by this slot's replaced
+                    // predecessor: jump the delivery cursor forward.
+                    // Rounds already in flight below the new cursor
+                    // resolve as skips too and are dropped on arrival.
+                    let to = next.max(next_deliver + 1);
+                    engine.note_skip(next_deliver, to);
+                    next_deliver = to;
+                    ready.retain(|&r, _| r >= next_deliver);
+                    issued_ahead.retain(|&r| r >= next_deliver);
+                    if next_issue < next_deliver {
+                        next_issue = next_deliver;
+                    }
+                }
+                Ok(RoundResolution::Eos) => {
                     let _ = tx.send(Ok(None));
                     break 'outer;
                 }
@@ -1584,16 +1694,34 @@ fn run_concurrent(
             busy.insert(next_issue, addr);
             next_issue += 1;
         }
-        // Wait for a completion; the short timeout doubles as the
-        // demand-change/stop poll (the demand condvar belongs to the
-        // trainer side).
-        match res_rx.recv_timeout(Duration::from_millis(10)) {
-            Ok(Some((round, res))) => {
+        // Event-driven wait: lane completions and trainer demand bumps
+        // both land on the demand condvar (a lane notifies after
+        // sending its result, `next()` notifies on every demand bump,
+        // release notifies on stop), so the coordinator sleeps without
+        // a poll tick. Draining under the demand lock closes the race
+        // with a lane that completed between the drain and the wait.
+        // The long timeout is a watchdog only; its firings are metered
+        // and the idle-engine test asserts it stays silent.
+        let mut drained = false;
+        {
+            let d = engine.shared.demand.lock().unwrap();
+            while let Some((round, res)) = res_rx.try_recv() {
                 busy.remove(&round);
-                ready.insert(round, res);
+                if round >= next_deliver {
+                    ready.insert(round, res);
+                }
+                drained = true;
             }
-            Ok(None) => {} // timeout: re-check demand / stop
-            Err(_) => break,
+            if !drained && !engine.stop.load(Ordering::SeqCst) {
+                let (_d, timeout) = engine
+                    .shared
+                    .demand_changed
+                    .wait_timeout(d, Duration::from_secs(5))
+                    .unwrap();
+                if timeout.timed_out() {
+                    engine.metrics.counter("client/round_engine_timer_wakeups").inc();
+                }
+            }
         }
     }
     // Teardown: closing the round queues ends the lane loops (lanes
@@ -1684,12 +1812,24 @@ impl CoordEngine {
     /// refused while an owner restarts or a lease moves) take a brief
     /// halt-interruptible backoff, so round latency is never quantized
     /// to a sleep.
-    fn fetch_round(&self, st: &mut OwnerLaneState, round: u64) -> crate::data::DataResult<Option<Element>> {
+    fn fetch_round(
+        &self,
+        st: &mut OwnerLaneState,
+        round: u64,
+    ) -> crate::data::DataResult<RoundResolution> {
         loop {
             if self.stop.load(Ordering::SeqCst) {
-                return Ok(None);
+                return Ok(RoundResolution::Eos);
             }
-            let Some(owner) = self.resolve_owner(round) else { return Ok(None) };
+            // A shrink epoch dropped this consumer's slot from `round`
+            // on: end cleanly instead of waiting on a round the workers
+            // hold no slot for.
+            if round >= self.shared.eos_at.load(Ordering::SeqCst) {
+                return Ok(RoundResolution::Eos);
+            }
+            let Some(owner) = self.resolve_owner(round) else {
+                return Ok(RoundResolution::Eos);
+            };
             let t0 = Instant::now();
             let outcome = if self.stream_sessions {
                 self.try_fetch_session(st, round, &owner)?
@@ -1701,19 +1841,41 @@ impl CoordEngine {
                 other => other,
             };
             match outcome {
-                CoordOutcome::Element(e) => return Ok(Some(e)),
-                CoordOutcome::Eos => return Ok(None),
+                CoordOutcome::Element(e) => return Ok(RoundResolution::Element(e)),
+                CoordOutcome::Eos => return Ok(RoundResolution::Eos),
+                CoordOutcome::Consumed { next } => {
+                    return Ok(RoundResolution::Skip { next });
+                }
                 CoordOutcome::Empty => {
                     // A slow attempt already waited on the worker's
                     // long-poll; only pace fast failures.
                     if t0.elapsed() < Duration::from_millis(5)
                         && self.halt.recv_timeout(Duration::from_millis(10)).is_err()
                     {
-                        return Ok(None);
+                        return Ok(RoundResolution::Eos);
                     }
                 }
                 CoordOutcome::Legacy => unreachable!("legacy resolved above"),
             }
+        }
+    }
+
+    /// Account a skip-forward: rounds `[from, to)` were consumed by
+    /// this slot's replaced predecessor and will never reach the
+    /// trainer, so the engine advances the shared round cursor itself
+    /// (the demand gate and the heartbeat progress report both read
+    /// it) and wakes anything parked on the gate.
+    fn note_skip(&self, from: u64, to: u64) {
+        let k = to.saturating_sub(from);
+        if k == 0 {
+            return;
+        }
+        self.metrics.counter("client/rounds_skipped_forward").add(k);
+        let want = self.delivered.fetch_add(k, Ordering::SeqCst) + k + 1;
+        let mut d = self.shared.demand.lock().unwrap();
+        if *d < want {
+            *d = want;
+            self.shared.demand_changed.notify_all();
         }
     }
 
@@ -1828,10 +1990,21 @@ impl CoordEngine {
                     chunks.reset();
                     return Ok(CoordOutcome::Empty);
                 }
+                Err(crate::rpc::RpcError::Remote(msg))
+                    if msg.contains(crate::service::ROUND_CONSUMED_PREFIX) =>
+                {
+                    // The round (or this slot in it) was already
+                    // consumed — a replaced consumer re-walking its
+                    // dead predecessor's progress. The worker names the
+                    // resume point; skip forward instead of surfacing a
+                    // terminal error.
+                    let next = parse_skip_hint(&msg).unwrap_or(round + 1);
+                    return Ok(CoordOutcome::Consumed { next });
+                }
                 Err(crate::rpc::RpcError::Remote(msg)) => {
-                    // Protocol-level round error ("already consumed",
-                    // "fetched twice", consumer-index mismatch): terminal
-                    // — retrying would loop forever.
+                    // Other protocol-level round errors (consumer-index
+                    // mismatch, malformed request): terminal — retrying
+                    // would loop forever.
                     return Err(crate::data::DataError::Other(msg));
                 }
                 Err(_) => return Ok(CoordOutcome::Empty),
@@ -1866,6 +2039,13 @@ impl CoordEngine {
                 }
                 None => Ok(CoordOutcome::Empty),
             },
+            Err(crate::rpc::RpcError::Remote(msg))
+                if msg.contains(crate::service::ROUND_CONSUMED_PREFIX) =>
+            {
+                // Same skip-forward protocol on the legacy round path.
+                let next = parse_skip_hint(&msg).unwrap_or(round + 1);
+                Ok(CoordOutcome::Consumed { next })
+            }
             Err(_) => Ok(CoordOutcome::Empty),
         }
     }

@@ -68,6 +68,10 @@ struct WorkerInfo {
     /// Round-lease updates (§3.6) for this worker's coordinated tasks,
     /// delivered on its next heartbeat.
     pending_rounds: Vec<RoundAssignment>,
+    /// Membership-epoch schedules (elastic consumer width) queued for
+    /// this worker's next heartbeat. Each entry carries a job's *full*
+    /// schedule, so duplicate delivery is idempotent.
+    pending_widths: Vec<ConsumerSetUpdate>,
     /// Task (job) ids this worker should currently be running.
     assigned: HashSet<u64>,
     alive: bool,
@@ -95,6 +99,7 @@ impl WorkerInfo {
             pending_attach: Vec::new(),
             pending_detach: Vec::new(),
             pending_rounds: Vec::new(),
+            pending_widths: Vec::new(),
             assigned,
             alive,
             alive_since: last_heartbeat,
@@ -132,6 +137,11 @@ struct JobState {
     /// silent past `worker_timeout`, so a crashed consumer cannot pin
     /// the job floor forever.
     client_rounds: HashMap<u32, (u64, Instant)>,
+    /// Membership-epoch schedule (elastic consumer width): epoch 0 is
+    /// the creation-time width at barrier 0; `set_job_consumers`
+    /// appends one entry per width change. Never empty; barriers are
+    /// monotone. `num_consumers` above always mirrors the last entry.
+    width_epochs: Vec<WidthEpoch>,
 }
 
 impl JobState {
@@ -246,6 +256,11 @@ impl Dispatcher {
                             residue_owners: worker_order.clone(),
                             worker_order,
                             client_rounds: HashMap::new(),
+                            width_epochs: vec![WidthEpoch {
+                                epoch: 0,
+                                barrier_round: 0,
+                                num_consumers,
+                            }],
                         },
                     );
                     meta.next_job_id = meta.next_job_id.max(job_id + 1);
@@ -296,6 +311,17 @@ impl Dispatcher {
                         }
                     }
                 }
+                JournalRecord::ConsumerSetChanged { job_id, epoch, barrier_round, num_consumers } => {
+                    if let Some(j) = meta.jobs.get_mut(&job_id) {
+                        // Monotone append: a duplicate or stale record
+                        // (possible across a crash between append and
+                        // publish) replays as a no-op.
+                        if j.width_epochs.last().map(|e| epoch > e.epoch).unwrap_or(true) {
+                            j.width_epochs.push(WidthEpoch { epoch, barrier_round, num_consumers });
+                            j.num_consumers = num_consumers;
+                        }
+                    }
+                }
             }
         }
     }
@@ -337,6 +363,7 @@ impl Dispatcher {
                 w.pending_attach.clear();
                 w.pending_detach.clear();
                 w.pending_rounds.clear();
+                w.pending_widths.clear();
             }
             for job in meta.jobs.values() {
                 if let Some(t) = &job.tracker {
@@ -400,6 +427,15 @@ impl Dispatcher {
         let t = meta.jobs.get(&job_id)?.tracker.as_ref()?;
         Some((t.remaining(), t.completed().len(), t.lost().len()))
     }
+
+    /// Change a coordinated job's consumer width mid-job (elastic
+    /// membership; also served over RPC as
+    /// [`dispatcher_methods::SET_JOB_CONSUMERS`]). Returns the
+    /// `(epoch, barrier_round)` at which the new width takes effect.
+    pub fn set_job_consumers(&self, job_id: u64, num_consumers: u32) -> ServiceResult<(u32, u64)> {
+        let resp = set_job_consumers(&self.state, SetJobConsumersReq { job_id, num_consumers })?;
+        Ok((resp.epoch, resp.barrier_round))
+    }
 }
 
 /// Pure lease-table transition behind failure reassignment: move every
@@ -455,6 +491,43 @@ pub fn rebalance_home_residues(
     affected
 }
 
+/// Shared grant-building step of the two lease-move paths
+/// ([`reassign_round_leases`] and [`rebalance_revived_owners`]): for each
+/// affected worker, its *full* updated owned-residue set from the job's
+/// lease table, floored at the minimum round any consumer still needs.
+/// One code path builds every lease-view grant, so the two movers cannot
+/// diverge on what a worker is told it owns.
+fn collect_lease_grants(job_id: u64, job: &JobState, affected: &[u64]) -> Vec<(u64, RoundAssignment)> {
+    let floor = job.floor();
+    affected
+        .iter()
+        .map(|&w| {
+            let owned_residues: Vec<u32> = job
+                .residue_owners
+                .iter()
+                .enumerate()
+                .filter(|(_, &o)| o == w)
+                .map(|(i, _)| i as u32)
+                .collect();
+            (w, RoundAssignment { job_id, owned_residues, start_round: floor })
+        })
+        .collect()
+}
+
+/// Queue collected grants for delivery on live workers' next heartbeats
+/// (the other half of the shared grant-queueing path). Dead workers are
+/// skipped: their queues were cleared at death, and their authoritative
+/// view is re-pushed on their first heartbeat back anyway.
+fn queue_lease_grants(meta: &mut Meta, grants: Vec<(u64, RoundAssignment)>) {
+    for (worker_id, grant) in grants {
+        if let Some(w) = meta.workers.get_mut(&worker_id) {
+            if w.alive {
+                w.pending_rounds.push(grant);
+            }
+        }
+    }
+}
+
 /// Move every dead owner's round residues to surviving lease holders and
 /// queue the updated assignments for delivery on the gaining workers'
 /// next heartbeats. The materialization floor handed to a new owner is
@@ -466,7 +539,7 @@ pub fn rebalance_home_residues(
 fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) -> Vec<u64> {
     // Collect per-job reassignments first (cannot mutate workers while
     // iterating jobs).
-    let mut grants: Vec<(u64, u64, Vec<u32>, u64)> = Vec::new(); // (worker, job, residues, floor)
+    let mut grants: Vec<(u64, RoundAssignment)> = Vec::new();
     let mut changed_jobs = Vec::new();
     for (&job_id, job) in meta.jobs.iter_mut() {
         if job.finished || job.mode != ProcessingMode::Coordinated || job.residue_owners.is_empty()
@@ -480,24 +553,12 @@ fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) -> Vec<u64> {
             continue;
         }
         changed_jobs.push(job_id);
-        let floor = job.floor();
-        for w in gained {
-            let residues: Vec<u32> = job
-                .residue_owners
-                .iter()
-                .enumerate()
-                .filter(|(_, &o)| o == w)
-                .map(|(i, _)| i as u32)
-                .collect();
-            grants.push((w, job_id, residues, floor));
+        for _ in &gained {
             metrics.counter("dispatcher/round_leases_reassigned").inc();
         }
+        grants.extend(collect_lease_grants(job_id, job, &gained));
     }
-    for (worker_id, job_id, owned_residues, start_round) in grants {
-        if let Some(w) = meta.workers.get_mut(&worker_id) {
-            w.pending_rounds.push(RoundAssignment { job_id, owned_residues, start_round });
-        }
-    }
+    queue_lease_grants(meta, grants);
     changed_jobs
 }
 
@@ -510,7 +571,7 @@ fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) -> Vec<u64> {
 /// needs. Returns the jobs whose lease table changed (for journaling).
 fn rebalance_revived_owners(meta: &mut Meta, hysteresis: Duration, metrics: &Registry) -> Vec<u64> {
     let now = Instant::now();
-    let mut grants: Vec<(u64, u64, Vec<u32>, u64)> = Vec::new(); // (worker, job, residues, floor)
+    let mut grants: Vec<(u64, RoundAssignment)> = Vec::new();
     let mut changed_jobs = Vec::new();
     for (&job_id, job) in meta.jobs.iter_mut() {
         if job.finished
@@ -538,25 +599,9 @@ fn rebalance_revived_owners(meta: &mut Meta, hysteresis: Duration, metrics: &Reg
         }
         changed_jobs.push(job_id);
         metrics.counter("dispatcher/round_leases_rebalanced").inc();
-        let floor = job.floor();
-        for w in affected {
-            let residues: Vec<u32> = job
-                .residue_owners
-                .iter()
-                .enumerate()
-                .filter(|(_, &o)| o == w)
-                .map(|(i, _)| i as u32)
-                .collect();
-            grants.push((w, job_id, residues, floor));
-        }
+        grants.extend(collect_lease_grants(job_id, job, &affected));
     }
-    for (worker_id, job_id, owned_residues, start_round) in grants {
-        if let Some(w) = meta.workers.get_mut(&worker_id) {
-            if w.alive {
-                w.pending_rounds.push(RoundAssignment { job_id, owned_residues, start_round });
-            }
-        }
-    }
+    queue_lease_grants(meta, grants);
     changed_jobs
 }
 
@@ -598,6 +643,10 @@ fn handle(state: &Arc<State>, method: u16, payload: &[u8]) -> ServiceResult<Vec<
         m::RELEASE_JOB => {
             let req = ReleaseJobReq::from_bytes(payload)?;
             Ok(release_job(state, req)?.to_bytes())
+        }
+        m::SET_JOB_CONSUMERS => {
+            let req = SetJobConsumersReq::from_bytes(payload)?;
+            Ok(set_job_consumers(state, req)?.to_bytes())
         }
         other => Err(ServiceError::Other(format!("dispatcher: unknown method {other}"))),
     }
@@ -670,6 +719,9 @@ fn make_task(
         // empty `owned_residues` means leaseless, never "assume your own
         // worker_index" (the pre-lease fallback).
         has_lease_view: true,
+        // Full membership-epoch history, so a (re)started worker keys
+        // every buffered round at the width its epoch dictates.
+        width_epochs: job.width_epochs.clone(),
     }
 }
 
@@ -837,6 +889,11 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         // Round leases start with the fixed round-robin assignment.
         residue_owners: worker_order.clone(),
         client_rounds: HashMap::new(),
+        width_epochs: vec![WidthEpoch {
+            epoch: 0,
+            barrier_round: 0,
+            num_consumers: req.num_consumers,
+        }],
     };
 
     // Write-ahead, *before* publication: a concurrent sharing attach can
@@ -941,15 +998,40 @@ fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResul
     // non-slowest slot would point at a round this slot already
     // consumed — a terminal protocol error).
     let round_floor = if job.mode == ProcessingMode::Coordinated {
-        job.client_rounds.get(&req.consumer_index).map(|&(r, _)| r).unwrap_or(0)
+        let slot_floor = job.client_rounds.get(&req.consumer_index).map(|&(r, _)| r).unwrap_or(0);
+        // Slot-activation barrier (elastic membership): the earliest
+        // barrier of the contiguous suffix of epochs whose width covers
+        // this slot. A slot grown into existence mid-job starts
+        // fetching at the round its slot first exists — a floor of 0
+        // would have it wait forever on rounds keyed before it was
+        // born. A slot covered since epoch 0 sees activation 0 (no
+        // change); a slot the current epoch shrank away keeps its plain
+        // progress floor and drains up to the barrier.
+        let mut activation = 0u64;
+        for e in job.width_epochs.iter().rev() {
+            if e.num_consumers > req.consumer_index {
+                activation = e.barrier_round;
+            } else {
+                break;
+            }
+        }
+        slot_floor.max(activation)
     } else {
         0
     };
+    let cur = job.width_epochs.last().copied().unwrap_or(WidthEpoch {
+        epoch: 0,
+        barrier_round: 0,
+        num_consumers: job.num_consumers,
+    });
     Ok(ClientHeartbeatResp {
         worker_addrs: addrs,
         job_finished: job.finished,
         round_owner_addrs,
         round_floor,
+        membership_epoch: cur.epoch,
+        num_consumers: cur.num_consumers,
+        width_barrier_round: cur.barrier_round,
     })
 }
 
@@ -1021,6 +1103,7 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
     let attached_clients = std::mem::take(&mut w.pending_attach);
     let released_clients = std::mem::take(&mut w.pending_detach);
     let mut round_assignments = std::mem::take(&mut w.pending_rounds);
+    let mut width_updates = std::mem::take(&mut w.pending_widths);
     let removed: Vec<u64> =
         req.active_tasks.iter().copied().filter(|t| finished_jobs.contains(t)).collect();
     for t in &removed {
@@ -1056,6 +1139,17 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
             // restarted starts labeling where consumers are, not at 0.
             let start_round = job.floor();
             round_assignments.push(RoundAssignment { job_id, owned_residues, start_round });
+            // Same delivery guarantee for the membership-epoch schedule:
+            // a width change queued for (or applied by) the worker's
+            // previous incarnation may be gone — re-push the full
+            // schedule (idempotent application) whenever it is non
+            // -trivial.
+            if job.width_epochs.len() > 1 {
+                width_updates.push(ConsumerSetUpdate {
+                    job_id,
+                    width_epochs: job.width_epochs.clone(),
+                });
+            }
         }
     }
     state
@@ -1068,7 +1162,61 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         attached_clients,
         released_clients,
         round_assignments,
+        width_updates,
     })
+}
+
+/// Elastic consumer membership (§3.6 extension): append a new
+/// membership epoch to a coordinated job. The barrier is the first
+/// round no live consumer slot has fetched yet — `max(` every slot's
+/// reported progress, the previous epoch's barrier, the job floor `)` —
+/// so no round already shaped (or in flight) is ever re-keyed, and
+/// barriers stay monotone across epochs. The `ConsumerSetChanged`
+/// record is journaled *before* the schedule is published to workers or
+/// acknowledged, so a restarted dispatcher never replays a narrower
+/// history than the one workers re-keyed at. Idempotent: asking for the
+/// current width answers the current `(epoch, barrier)` unchanged.
+fn set_job_consumers(state: &Arc<State>, req: SetJobConsumersReq) -> ServiceResult<SetJobConsumersResp> {
+    if req.num_consumers == 0 {
+        return Err(ServiceError::Other("set_job_consumers: num_consumers must be >= 1".into()));
+    }
+    let mut meta = state.meta.lock().unwrap();
+    let meta = &mut *meta;
+    let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+    if job.mode != ProcessingMode::Coordinated {
+        return Err(ServiceError::Other(format!(
+            "set_job_consumers: job {} is not coordinated",
+            req.job_id
+        )));
+    }
+    let cur = *job.width_epochs.last().expect("epoch schedule never empty");
+    if cur.num_consumers == req.num_consumers {
+        return Ok(SetJobConsumersResp { epoch: cur.epoch, barrier_round: cur.barrier_round });
+    }
+    // `client_rounds` never holds the u64::MAX "unknown" sentinel (the
+    // heartbeat handler filters it), so the max is real slot progress.
+    let progress_max = job.client_rounds.values().map(|&(r, _)| r).max().unwrap_or(0);
+    let barrier_round = progress_max.max(cur.barrier_round).max(job.floor());
+    let epoch = cur.epoch + 1;
+    journal_append(
+        state,
+        &JournalRecord::ConsumerSetChanged {
+            job_id: req.job_id,
+            epoch,
+            barrier_round,
+            num_consumers: req.num_consumers,
+        },
+    )?;
+    job.width_epochs.push(WidthEpoch { epoch, barrier_round, num_consumers: req.num_consumers });
+    job.num_consumers = req.num_consumers;
+    let update = ConsumerSetUpdate { job_id: req.job_id, width_epochs: job.width_epochs.clone() };
+    for w in meta.workers.values_mut() {
+        if w.alive && w.assigned.contains(&req.job_id) {
+            w.pending_widths.push(update.clone());
+        }
+    }
+    state.metrics.counter("dispatcher/consumer_set_changes").inc();
+    Ok(SetJobConsumersResp { epoch, barrier_round })
 }
 
 fn get_split(state: &Arc<State>, req: GetSplitReq) -> ServiceResult<GetSplitResp> {
@@ -1603,5 +1751,95 @@ mod tests {
         )
         .unwrap();
         assert_eq!(d.num_live_workers(), 1);
+    }
+
+    #[test]
+    fn set_job_consumers_appends_monotone_epochs() {
+        let (d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7777".into() },
+            timeout(),
+        )
+        .unwrap();
+        let mut req = job_req(ds, "elastic", SharingMode::Off);
+        req.mode = ProcessingMode::Coordinated;
+        req.num_consumers = 2;
+        let j: GetOrCreateJobResp =
+            call_typed(&pool, &addr, dispatcher_methods::GET_OR_CREATE_JOB, &req, timeout())
+                .unwrap();
+        // Record slot progress: slot 0 at round 5, slot 1 at round 3.
+        for (slot, next) in [(0u32, 5u64), (1, 3)] {
+            let _: ClientHeartbeatResp = call_typed(
+                &pool,
+                &addr,
+                dispatcher_methods::CLIENT_HEARTBEAT,
+                &ClientHeartbeatReq {
+                    job_id: j.job_id,
+                    client_id: j.client_id,
+                    next_round: next,
+                    consumer_index: slot,
+                },
+                timeout(),
+            )
+            .unwrap();
+        }
+        // Grow 2 -> 3: the barrier is the first round no slot fetched yet.
+        let r: SetJobConsumersResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::SET_JOB_CONSUMERS,
+            &SetJobConsumersReq { job_id: j.job_id, num_consumers: 3 },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!((r.epoch, r.barrier_round), (1, 5));
+        // Idempotent: asking for the current width changes nothing.
+        assert_eq!(d.set_job_consumers(j.job_id, 3).unwrap(), (1, 5));
+        // A fresh grown slot's heartbeat floor fast-forwards to its
+        // activation barrier (its slot does not exist before round 5).
+        let hb: ClientHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::CLIENT_HEARTBEAT,
+            &ClientHeartbeatReq {
+                job_id: j.job_id,
+                client_id: j.client_id,
+                next_round: u64::MAX,
+                consumer_index: 2,
+            },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb.round_floor, 5, "grown slot activates at its barrier");
+        assert_eq!((hb.membership_epoch, hb.num_consumers, hb.width_barrier_round), (1, 3, 5));
+        // Shrink back 3 -> 2: barriers stay monotone.
+        let (e2, b2) = d.set_job_consumers(j.job_id, 2).unwrap();
+        assert_eq!(e2, 2);
+        assert!(b2 >= 5, "barriers are monotone across epochs");
+        // The worker's heartbeat carries the full (idempotent) schedule.
+        let whb: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![j.job_id],
+                cpu_util_milli: 0,
+            },
+            timeout(),
+        )
+        .unwrap();
+        let upd = whb
+            .width_updates
+            .iter()
+            .rev()
+            .find(|u| u.job_id == j.job_id)
+            .expect("width schedule pushed to the worker");
+        assert_eq!(upd.width_epochs.len(), 3, "epoch 0 plus two changes");
+        assert_eq!(d.metrics().counter("dispatcher/consumer_set_changes").get(), 2);
     }
 }

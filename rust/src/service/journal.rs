@@ -47,6 +47,13 @@ pub enum JournalRecord {
     /// layout; the materialization floor is deliberately not journaled —
     /// it is rebuilt from the first post-restart client heartbeats.
     RoundLeaseChanged { job_id: u64, residue_owners: Vec<u64> },
+    /// Consumer-width change for one coordinated job (elastic
+    /// membership): from `barrier_round` onward, rounds are keyed for
+    /// `num_consumers` slots. Journaled *before* the change is published
+    /// to workers or acknowledged to the caller, so a restarted
+    /// dispatcher replays the full membership-epoch history and a
+    /// heartbeating worker re-receives the schedule it may have missed.
+    ConsumerSetChanged { job_id: u64, epoch: u32, barrier_round: u64, num_consumers: u32 },
 }
 
 impl Encode for JournalRecord {
@@ -101,6 +108,13 @@ impl Encode for JournalRecord {
                 w.put_u64(*job_id);
                 residue_owners.encode(w);
             }
+            JournalRecord::ConsumerSetChanged { job_id, epoch, barrier_round, num_consumers } => {
+                w.put_u8(7);
+                w.put_u64(*job_id);
+                w.put_u32(*epoch);
+                w.put_u64(*barrier_round);
+                w.put_u32(*num_consumers);
+            }
         }
     }
 }
@@ -126,6 +140,12 @@ impl Decode for JournalRecord {
             6 => JournalRecord::RoundLeaseChanged {
                 job_id: r.get_u64()?,
                 residue_owners: Vec::<u64>::decode(r)?,
+            },
+            7 => JournalRecord::ConsumerSetChanged {
+                job_id: r.get_u64()?,
+                epoch: r.get_u32()?,
+                barrier_round: r.get_u64()?,
+                num_consumers: r.get_u32()?,
             },
             tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
         })
@@ -242,6 +262,12 @@ mod tests {
             JournalRecord::ClientJoined { job_id: 1, client_id: 2 },
             JournalRecord::ClientReleased { job_id: 1, client_id: 2 },
             JournalRecord::RoundLeaseChanged { job_id: 1, residue_owners: vec![5, 5] },
+            JournalRecord::ConsumerSetChanged {
+                job_id: 1,
+                epoch: 1,
+                barrier_round: 12,
+                num_consumers: 3,
+            },
             JournalRecord::JobFinished { job_id: 1 },
         ]
     }

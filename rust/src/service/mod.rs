@@ -169,9 +169,46 @@
 //! across an owner crash (see [`visitation::RoundTracker`]); and a
 //! consumer replacement joining after its predecessor's progress entry
 //! expired (crashed consumer + pruned lease, e.g. the predecessor died
-//! during a dispatcher outage) sees floor 0 and surfaces an explicit
-//! "round already consumed" error rather than silently skipping —
-//! client-side skip-forward recovery is a recorded follow-up.
+//! during a dispatcher outage) sees floor 0, asks an owner for a round
+//! already consumed, and **skips forward** to the owner-reported next
+//! available round (the `"round already consumed; next round N"` hint,
+//! matched via [`ROUND_CONSUMED_PREFIX`], counted as
+//! `client/rounds_skipped_forward`) — relaxed visitation, never a
+//! terminal error surfaced to the trainer.
+//!
+//! ### Elastic consumer membership: the epoch state machine
+//!
+//! A coordinated job's consumer width is **epoch-versioned**: the job
+//! starts at epoch 0 with its creation-time `num_consumers`, and each
+//! `SET_JOB_CONSUMERS` call appends a `WidthEpoch` to the job's
+//! schedule. The state machine:
+//!
+//! * **Barrier choice** — the dispatcher picks the new epoch's
+//!   `barrier_round` as the first round no live consumer slot has
+//!   fetched yet: `max(` every slot's recorded `next_round`, the
+//!   previous epoch's barrier, the job's floor `)`. A width change is
+//!   therefore always a *round* barrier: no round already shaped (or in
+//!   flight) is ever re-keyed under a consumer's feet, and barriers are
+//!   monotone across epochs. The record is journaled
+//!   (`ConsumerSetChanged`) before it is published, so the schedule
+//!   survives a dispatcher restart.
+//! * **Worker re-key** — the full schedule is pushed to every worker on
+//!   its next heartbeat (re-pushed to revived/unconfirmed workers, like
+//!   lease views). The worker drops buffered rounds at or past the new
+//!   barrier (`worker/rounds_rekeyed`) and re-materializes them at the
+//!   new width using the existing floor machinery; application is
+//!   idempotent (epochs at or below the last-applied epoch are
+//!   ignored), so a duplicate push is harmless.
+//! * **Client re-sync** — client heartbeats carry the current
+//!   `membership_epoch`, `num_consumers`, and `width_barrier_round`. A
+//!   grown slot (index >= old width) is activated with its floor forced
+//!   up to its activation barrier, so it starts fetching exactly where
+//!   its slot first exists. A shrunk slot (index >= new width) drains
+//!   rounds below the barrier and then observes a clean end-of-sequence
+//!   — never an error. Stale-width windows are bounded by one heartbeat
+//!   interval: a worker that has not yet applied the epoch answers
+//!   out-of-range slots with a *wait* (not an error), and in-order
+//!   delivery on the client keeps the per-slot exactly-once contract.
 //! * **Capability + downgrade matrix** — prefetch is gated on the
 //!   negotiated [`proto::stream_caps::ROUND_PREFETCH`] bit. New client
 //!   <-> new worker: pipelined (chunk slots keyed by `(round, seq)`
@@ -272,6 +309,14 @@ pub enum ServiceError {
 /// string; the client matches on it to surface a terminal error instead
 /// of retrying.
 pub const ELEMENT_TOO_LARGE_PREFIX: &str = "element too large";
+
+/// Stable prefix of the worker's "this round slot was already served /
+/// consumed" remote error string. Part of the wire contract: the client
+/// matches on it and **skips forward** to the `"; next round N"` hint
+/// carried in the same message (relaxed visitation for replacement
+/// consumers, `client/rounds_skipped_forward`) instead of surfacing a
+/// terminal error.
+pub const ROUND_CONSUMED_PREFIX: &str = "round already consumed";
 
 impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {

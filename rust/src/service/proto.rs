@@ -19,6 +19,11 @@ pub mod dispatcher_methods {
     pub const WORKER_HEARTBEAT: u16 = 5;
     pub const GET_SPLIT: u16 = 6;
     pub const RELEASE_JOB: u16 = 7;
+    /// Change a coordinated job's consumer width mid-job (elastic
+    /// membership): journals a `ConsumerSetChanged` record and answers
+    /// with the membership epoch + barrier round where the new width
+    /// takes effect.
+    pub const SET_JOB_CONSUMERS: u16 = 8;
 }
 
 /// Worker-served methods.
@@ -304,8 +309,28 @@ pub struct ClientHeartbeatResp {
     /// has already consumed; a fresh slot in a staggered startup sees 0
     /// and is never skipped past rounds still buffered for it.
     pub round_floor: u64,
+    /// Coordinated mode: the job's current membership epoch (elastic
+    /// consumer width; 0 for a job that never resized). A client
+    /// comparing this against the epoch it last saw knows the consumer
+    /// set changed and re-syncs instead of fetching mis-shaped rounds.
+    pub membership_epoch: u32,
+    /// Coordinated mode: the consumer width of the current epoch. A
+    /// consumer whose slot index is >= this width has been shrunk away:
+    /// it drains up to the barrier and then observes end-of-sequence.
+    pub num_consumers: u32,
+    /// Coordinated mode: the current epoch's barrier round — the first
+    /// round served at `num_consumers` width.
+    pub width_barrier_round: u64,
 }
-wire_struct!(ClientHeartbeatResp { worker_addrs, job_finished, round_owner_addrs, round_floor });
+wire_struct!(ClientHeartbeatResp {
+    worker_addrs,
+    job_finished,
+    round_owner_addrs,
+    round_floor,
+    membership_epoch,
+    num_consumers,
+    width_barrier_round
+});
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReleaseJobReq {
@@ -375,6 +400,51 @@ pub struct RoundAssignment {
 }
 wire_struct!(RoundAssignment { job_id, owned_residues, start_round });
 
+/// One step of a coordinated job's membership-epoch history: from
+/// `barrier_round` (inclusive) onward, rounds are keyed for
+/// `num_consumers` slots. Epoch 0 is the width the job was created with
+/// (`barrier_round` 0); each [`dispatcher_methods::SET_JOB_CONSUMERS`]
+/// call appends one entry with a barrier the dispatcher picks as the
+/// first round no consumer slot has fetched yet, so a width change is a
+/// round barrier and never re-shapes a round already in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WidthEpoch {
+    pub epoch: u32,
+    pub barrier_round: u64,
+    pub num_consumers: u32,
+}
+wire_struct!(WidthEpoch { epoch, barrier_round, num_consumers });
+
+/// The full membership-epoch schedule of one coordinated job, pushed to
+/// workers on their heartbeat after a width change. Carrying the whole
+/// schedule (not a delta) makes application idempotent: a worker applies
+/// only epochs newer than the last one it re-keyed at, so a re-push
+/// after a missed heartbeat or a dispatcher restart is harmless.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConsumerSetUpdate {
+    pub job_id: u64,
+    pub width_epochs: Vec<WidthEpoch>,
+}
+wire_struct!(ConsumerSetUpdate { job_id, width_epochs });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SetJobConsumersReq {
+    pub job_id: u64,
+    /// New consumer width (must be >= 1).
+    pub num_consumers: u32,
+}
+wire_struct!(SetJobConsumersReq { job_id, num_consumers });
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SetJobConsumersResp {
+    /// Membership epoch the change created (or the current epoch when
+    /// the requested width already matched — idempotent no-op).
+    pub epoch: u32,
+    /// First round served at the new width.
+    pub barrier_round: u64,
+}
+wire_struct!(SetJobConsumersResp { epoch, barrier_round });
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerHeartbeatResp {
     /// Newly-assigned tasks.
@@ -389,13 +459,20 @@ pub struct WorkerHeartbeatResp {
     pub released_clients: Vec<ConsumerUpdate>,
     /// Round-lease reassignments for this worker's coordinated tasks.
     pub round_assignments: Vec<RoundAssignment>,
+    /// Membership-epoch schedules for coordinated jobs whose consumer
+    /// width changed (elastic membership): the worker re-keys buffered
+    /// rounds at each new epoch's barrier. Re-pushed until acknowledged
+    /// by a heartbeat from a confirmed-alive worker; application is
+    /// idempotent (see [`ConsumerSetUpdate`]).
+    pub width_updates: Vec<ConsumerSetUpdate>,
 }
 wire_struct!(WorkerHeartbeatResp {
     new_tasks,
     removed_tasks,
     attached_clients,
     released_clients,
-    round_assignments
+    round_assignments,
+    width_updates
 });
 
 /// A data-processing task: one job's pipeline on one worker.
@@ -437,6 +514,12 @@ pub struct TaskDef {
     /// rounds). False only from pre-lease dispatchers, where the worker
     /// falls back to the fixed `worker_index` assignment.
     pub has_lease_view: bool,
+    /// Coordinated mode: the job's membership-epoch schedule at
+    /// task-creation time (always at least the epoch-0 entry). A worker
+    /// (re)starting mid-job keys every round at the width its epoch
+    /// dictates; later width changes arrive as
+    /// [`ConsumerSetUpdate`]s on heartbeats.
+    pub width_epochs: Vec<WidthEpoch>,
 }
 wire_struct!(TaskDef {
     job_id,
@@ -451,7 +534,8 @@ wire_struct!(TaskDef {
     consumers,
     owned_residues,
     start_round,
-    has_lease_view
+    has_lease_view,
+    width_epochs
 });
 
 #[derive(Debug, Clone, PartialEq)]
@@ -834,6 +918,9 @@ mod tests {
             job_finished: false,
             round_owner_addrs: vec!["127.0.0.1:1234".into(), "127.0.0.1:1234".into()],
             round_floor: 17,
+            membership_epoch: 2,
+            num_consumers: 3,
+            width_barrier_round: 12,
         });
         rt(RegisterWorkerReq { addr: "127.0.0.1:9".into() });
         rt(RegisterWorkerResp {
@@ -852,6 +939,7 @@ mod tests {
                 owned_residues: vec![1, 3],
                 start_round: 21,
                 has_lease_view: true,
+                width_epochs: vec![WidthEpoch { epoch: 0, barrier_round: 0, num_consumers: 2 }],
             }],
         });
         rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });
@@ -865,7 +953,16 @@ mod tests {
                 owned_residues: vec![0, 2],
                 start_round: 17,
             }],
+            width_updates: vec![ConsumerSetUpdate {
+                job_id: 3,
+                width_epochs: vec![
+                    WidthEpoch { epoch: 0, barrier_round: 0, num_consumers: 2 },
+                    WidthEpoch { epoch: 1, barrier_round: 9, num_consumers: 3 },
+                ],
+            }],
         });
+        rt(SetJobConsumersReq { job_id: 3, num_consumers: 3 });
+        rt(SetJobConsumersResp { epoch: 1, barrier_round: 9 });
         rt(UpdateConsumersReq {
             attached: vec![ConsumerUpdate { job_id: 3, client_id: 11 }],
             released: vec![],

@@ -562,7 +562,6 @@ struct CoordinatedState {
     /// Signaled when buffer space frees (round consumed / abandoned) or
     /// ownership changes — the producer's backpressure wait.
     space: Condvar,
-    num_consumers: usize,
     num_workers: u64,
     /// Max rounds buffered ahead ([`WorkerConfig::round_prefetch_depth`]).
     depth: usize,
@@ -578,8 +577,20 @@ struct CoordinatedInner {
     next_by_residue: HashMap<u64, u64>,
     /// Per-consumer progress: the highest round each consumer has asked
     /// this worker for (bumped past on a successful take). Feeds the
-    /// abandoned-round GC above.
+    /// abandoned-round GC above. Grows on demand when a membership epoch
+    /// widens the consumer set.
     watermarks: Vec<u64>,
+    /// Membership-epoch width schedule: `(barrier_round, num_consumers)`
+    /// sorted by barrier, never empty. A round's slot count is decided
+    /// by the newest entry whose barrier it has reached
+    /// ([`CoordinatedState::width_for`]).
+    widths: Vec<(u64, u32)>,
+    /// Newest membership epoch applied ([`set_width_schedule`] is
+    /// idempotent over heartbeat redelivery).
+    applied_epoch: u32,
+    /// Elements staged toward the next round by the producer; the round
+    /// installs once the staged prefix fills the round's width.
+    staged: Vec<Arc<Vec<u8>>>,
     eos: bool,
     /// Consumer slots dropped unconsumed (abandoned rounds GC'd, or
     /// buffered rounds of a residue whose lease moved away).
@@ -642,13 +653,15 @@ impl CoordinatedState {
                 owned,
                 next_by_residue,
                 watermarks: vec![0; num_consumers.max(1)],
+                widths: vec![(0, num_consumers.max(1) as u32)],
+                applied_epoch: 0,
+                staged: Vec::new(),
                 eos: false,
                 abandoned_slots: 0,
                 stopped: false,
             }),
             cond: Condvar::new(),
             space: Condvar::new(),
-            num_consumers: num_consumers.max(1),
             num_workers,
             depth: depth.max(1),
         }
@@ -664,13 +677,14 @@ impl CoordinatedState {
         self.inner.lock().unwrap().rounds.len()
     }
 
-    /// Producer side: install the next round's batches (already
-    /// same-bucket thanks to the upstream group_by_window, already
-    /// encoded by the producer). Blocks on the space condvar while the
+    /// Test-only direct install of a pre-grouped round (the production
+    /// path stages elements through [`offer`], which regroups at the
+    /// width-schedule boundary). Blocks on the space condvar while the
     /// buffer holds `depth` rounds or this worker owns no residues; the
     /// round label is the smallest unmaterialized round among owned
     /// residues, so output streams in increasing round order. Returns
     /// false when the task stopped.
+    #[cfg(test)]
     fn install_round(&self, batches: Vec<Arc<Vec<u8>>>) -> bool {
         let mut st = self.inner.lock().unwrap();
         loop {
@@ -693,6 +707,114 @@ impl CoordinatedState {
         drop(st);
         self.cond.notify_all();
         true
+    }
+
+    /// Slot count of `round` under the membership schedule: the newest
+    /// epoch whose barrier `round` has reached.
+    fn width_for(widths: &[(u64, u32)], round: u64) -> usize {
+        widths
+            .iter()
+            .rev()
+            .find(|&&(barrier, _)| barrier <= round)
+            .map(|&(_, w)| (w as usize).max(1))
+            .unwrap_or(1)
+    }
+
+    /// Producer side: stage one pre-encoded element toward the next
+    /// round. Rounds are grouped here — not in the producer — so each
+    /// round's slot count is decided at install time from the width
+    /// schedule, and a membership change between two rounds regroups
+    /// the element stream without restarting the pipeline. Installs
+    /// every round the staged prefix fills, blocking on the space
+    /// condvar while the buffer holds `depth` rounds or this worker
+    /// owns no residues (a leaseless worker cannot label rounds).
+    /// Returns false when the task stopped.
+    fn offer(&self, bytes: Arc<Vec<u8>>) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        st.staged.push(bytes);
+        let mut installed = false;
+        loop {
+            if st.stopped {
+                return false;
+            }
+            if st.owned.is_empty() {
+                st = self.space.wait(st).unwrap();
+                continue;
+            }
+            let (residue, round) = st
+                .owned
+                .iter()
+                .map(|&r| (r, st.next_by_residue[&r]))
+                .min_by_key(|&(_, next)| next)
+                .expect("non-empty owned set");
+            let width = Self::width_for(&st.widths, round);
+            if st.staged.len() < width {
+                break;
+            }
+            if st.rounds.len() >= self.depth {
+                st = self.space.wait(st).unwrap();
+                continue;
+            }
+            let batch: Vec<Option<Arc<Vec<u8>>>> = st.staged.drain(..width).map(Some).collect();
+            st.rounds.insert(round, batch);
+            st.next_by_residue.insert(residue, round + self.num_workers);
+            installed = true;
+        }
+        drop(st);
+        if installed {
+            self.cond.notify_all();
+        }
+        true
+    }
+
+    /// Apply an epoch-versioned consumer-membership schedule (§3.6
+    /// elasticity; see the membership-epoch state machine in the module
+    /// docs). Idempotent over heartbeat redelivery: a schedule applies
+    /// only when its newest epoch is newer than the last one applied.
+    /// Buffered rounds at or past the newest barrier were grouped under
+    /// the previous width — they are dropped and the producer's round
+    /// labels rolled back to the barrier so they re-materialize at the
+    /// new width. Returns the number of rounds re-keyed that way (the
+    /// caller meters `worker/rounds_rekeyed`).
+    fn set_width_schedule(&self, epochs: &[WidthEpoch]) -> u64 {
+        let Some(newest) = epochs.last() else { return 0 };
+        let mut st = self.inner.lock().unwrap();
+        if newest.epoch <= st.applied_epoch {
+            return 0;
+        }
+        st.applied_epoch = newest.epoch;
+        st.widths = epochs.iter().map(|e| (e.barrier_round, e.num_consumers.max(1))).collect();
+        let barrier = newest.barrier_round;
+        let dropped: Vec<u64> = st.rounds.keys().copied().filter(|&r| r >= barrier).collect();
+        let rekeyed = dropped.len() as u64;
+        for r in dropped {
+            if let Some(slots) = st.rounds.remove(&r) {
+                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+            }
+        }
+        // Roll materialization progress back to the barrier: labels the
+        // producer advanced past it belonged to rounds dropped above.
+        let nw = self.num_workers;
+        for (&r, next) in st.next_by_residue.iter_mut() {
+            if *next > barrier {
+                let mut aligned = (barrier / nw) * nw + r;
+                if aligned < barrier {
+                    aligned += nw;
+                }
+                *next = aligned;
+            }
+        }
+        // A partially-staged batch would splice pre-barrier elements
+        // into a re-grouped round: drop it (relaxed visitation).
+        st.staged.clear();
+        let max_w = st.widths.iter().map(|&(_, w)| (w as usize).max(1)).max().unwrap_or(1);
+        if st.watermarks.len() < max_w {
+            st.watermarks.resize(max_w, 0);
+        }
+        drop(st);
+        self.cond.notify_all();
+        self.space.notify_all();
+        rekeyed
     }
 
     fn set_eos(&self) {
@@ -757,11 +879,21 @@ impl CoordinatedState {
         self.space.notify_all();
     }
 
-    /// Drop buffered rounds every consumer has moved past (see the type
-    /// docs). Caller holds the lock and notifies `space` if it needs to.
+    /// Drop buffered rounds every one of *their own* slot holders has
+    /// moved past (see the type docs). Judged per round against the
+    /// round's slot count rather than a global minimum watermark: after
+    /// a shrink epoch a departed consumer's watermark freezes at the
+    /// barrier, and it must not pin post-barrier rounds it holds no
+    /// slot in. Caller holds the lock and notifies `space` if needed.
     fn gc_abandoned(st: &mut CoordinatedInner) -> bool {
-        let min = st.watermarks.iter().copied().min().unwrap_or(0);
-        let stale: Vec<u64> = st.rounds.keys().copied().filter(|&r| r < min).collect();
+        let stale: Vec<u64> = st
+            .rounds
+            .iter()
+            .filter(|(&r, slots)| {
+                (0..slots.len()).all(|c| st.watermarks.get(c).is_some_and(|&w| w > r))
+            })
+            .map(|(&r, _)| r)
+            .collect();
         let any = !stale.is_empty();
         for r in stale {
             if let Some(slots) = st.rounds.remove(&r) {
@@ -773,15 +905,25 @@ impl CoordinatedState {
 
     /// Consumer side: take `consumer`'s slot for `round`, blocking up to
     /// `timeout` for the round to materialize.
+    ///
+    /// A consumer index past the round's width is a *wait*, never an
+    /// error: a slot granted by a grow epoch the schedule hasn't reached
+    /// this worker yet (or a round awaiting re-key) resolves within a
+    /// heartbeat, and a shrunk slot's client stops asking on its own at
+    /// the barrier. The two genuinely-consumed outcomes — the round was
+    /// fully drained, or this slot was already taken (a replaced
+    /// consumer re-walking its predecessor's progress) — answer with a
+    /// [`super::ROUND_CONSUMED_PREFIX`] error carrying a
+    /// `next round {n}` hint so the client can skip forward instead of
+    /// surfacing a terminal failure.
     fn take(&self, round: u64, consumer: usize, timeout: Duration) -> ServiceResult<RoundTake> {
-        if consumer >= self.num_consumers {
-            return Err(ServiceError::Other(format!(
-                "consumer index {consumer} out of range ({})",
-                self.num_consumers
-            )));
-        }
         let deadline = Instant::now() + timeout;
         let mut st = self.inner.lock().unwrap();
+        if consumer >= st.watermarks.len() {
+            // A grow epoch adds slots; track the newcomer's progress
+            // from its first fetch.
+            st.watermarks.resize(consumer + 1, 0);
+        }
         // Asking for `round` implies every earlier round was consumed
         // (or abandoned) by this consumer: advance its watermark and GC
         // rounds nobody will ever fetch again.
@@ -795,7 +937,12 @@ impl CoordinatedState {
             if !st.owned.contains(&(round % self.num_workers)) {
                 return Ok(RoundTake::WrongWorker);
             }
-            if let Some(slots) = st.rounds.get_mut(&round) {
+            // `None` when the round is buffered but narrower than this
+            // consumer's slot (its re-key to a grow epoch is pending):
+            // treated like an unmaterialized round — wait.
+            let buffered_wide_enough = st.rounds.get(&round).map(|s| consumer < s.len());
+            if buffered_wide_enough == Some(true) {
+                let slots = st.rounds.get_mut(&round).expect("round buffered");
                 let e = slots[consumer].take();
                 if slots.iter().all(Option::is_none) {
                     st.rounds.remove(&round);
@@ -807,19 +954,31 @@ impl CoordinatedState {
                         Ok(RoundTake::Bytes(bytes))
                     }
                     None => Err(ServiceError::Other(format!(
-                        "consumer {consumer} fetched round {round} twice"
+                        "{}: consumer {consumer} fetched round {round} twice; next round {}",
+                        super::ROUND_CONSUMED_PREFIX,
+                        round + 1
                     ))),
                 };
             }
-            let next = st
-                .next_by_residue
-                .get(&(round % self.num_workers))
-                .copied()
-                .unwrap_or(round);
-            if round < next {
-                // Materialized earlier and since fully consumed — a
-                // client asking again is a protocol violation.
-                return Err(ServiceError::Other(format!("round {round} already consumed")));
+            if buffered_wide_enough.is_none()
+                && consumer < Self::width_for(&st.widths, round)
+            {
+                let next = st
+                    .next_by_residue
+                    .get(&(round % self.num_workers))
+                    .copied()
+                    .unwrap_or(round);
+                if round < next {
+                    // Materialized earlier and since fully consumed. A
+                    // replacement consumer re-walking its dead
+                    // predecessor's progress lands here: tell it where
+                    // to resume rather than erroring terminally.
+                    return Err(ServiceError::Other(format!(
+                        "{}: round {round} fully consumed; next round {}",
+                        super::ROUND_CONSUMED_PREFIX,
+                        round + 1
+                    )));
+                }
             }
             if st.eos {
                 return Ok(RoundTake::Eos);
@@ -1200,6 +1359,21 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                         }
                     }
                 }
+                // Membership epochs (§3.6 elasticity): apply the
+                // epoch-versioned width schedule. Buffered rounds at or
+                // past the newest barrier re-key — dropped here,
+                // re-materialized by the producer at the new width.
+                for wu in &resp.width_updates {
+                    if let Some(t) = shared.tasks.lock().unwrap().get(&wu.job_id).cloned() {
+                        if let TaskState::Coordinated(coord) = &t.state {
+                            let rekeyed = coord.set_width_schedule(&wu.width_epochs);
+                            if rekeyed > 0 {
+                                shared.metrics.counter("worker/rounds_rekeyed").add(rekeyed);
+                            }
+                            shared.metrics.counter("worker/width_updates_applied").inc();
+                        }
+                    }
+                }
                 if !resp.removed_tasks.is_empty() {
                     let mut tasks = shared.tasks.lock().unwrap();
                     for id in &resp.removed_tasks {
@@ -1240,6 +1414,10 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
         if let TaskState::Coordinated(coord) = &existing.state {
             let residues: Vec<u64> = task.owned_residues.iter().map(|&r| r as u64).collect();
             coord.set_owned(&residues, task.start_round);
+            // Same reasoning for the width schedule: a membership epoch
+            // published while this worker was presumed dead rides the
+            // re-delivered task (idempotent when nothing changed).
+            coord.set_width_schedule(&task.width_epochs);
         }
         return;
     }
@@ -1327,10 +1505,11 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
                 task.start_round,
                 shared.cfg.round_prefetch_depth,
             ));
+            // A task created (or re-delivered) after a membership change
+            // carries the job's full epoch schedule; the initial
+            // single-epoch schedule is a no-op here.
+            coord.set_width_schedule(&task.width_epochs);
             let c2 = coord.clone();
-            let m = (task.num_consumers as usize).max(1);
-            let pending = Arc::new(Mutex::new(Vec::<Arc<Vec<u8>>>::with_capacity(m)));
-            let p2 = pending.clone();
             spawn_producer(
                 shared,
                 &task,
@@ -1341,19 +1520,13 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
                 move |e| {
                     // Pre-encode at production time (off the serve path):
                     // each consumer's fetch then hands out an Arc clone
-                    // instead of encoding per request.
-                    let bytes = Arc::new(e.to_bytes());
-                    let mut buf = p2.lock().unwrap();
-                    buf.push(bytes);
-                    if buf.len() == m {
-                        let batches = std::mem::take(&mut *buf);
-                        drop(buf);
-                        // Blocks on the bounded multi-round buffer
-                        // (condvar backpressure, no polling); false only
-                        // when the task stopped.
-                        return c2.install_round(batches);
-                    }
-                    true
+                    // instead of encoding per request. Round grouping
+                    // happens inside `offer`, where the width schedule
+                    // decides each round's slot count at install time;
+                    // it blocks on the bounded multi-round buffer
+                    // (condvar backpressure, no polling) and returns
+                    // false only when the task stopped.
+                    c2.offer(Arc::new(e.to_bytes()))
                 },
                 {
                     let coord = coord.clone();
@@ -2533,6 +2706,59 @@ mod tests {
         assert!(c.owns_round(0));
         assert!(c.install_round(round_of(&[7]))); // labeled round 4
         assert_eq!(take_bytes(&c, 4, 0).tensors[0].as_i32(), vec![7]);
+    }
+
+    #[test]
+    fn coordinated_width_schedule_rekeys_and_regroups() {
+        let c = CoordinatedState::new(2, 0, 1, &[], false, 0, 8);
+        // Producer staging via `offer`: width 2 groups elements in pairs.
+        for v in [0, 1, 2, 3] {
+            assert!(c.offer(Arc::new(elem(v).to_bytes())));
+        }
+        assert_eq!(c.buffered_rounds(), 2, "rounds 0 and 1 at width 2");
+        assert_eq!(take_bytes(&c, 0, 0).tensors[0].as_i32(), vec![0]);
+        assert_eq!(take_bytes(&c, 0, 1).tensors[0].as_i32(), vec![1]);
+        // Grow to 3 consumers at barrier 1: buffered round 1 was grouped
+        // under the old width and must re-key.
+        let schedule = [
+            WidthEpoch { epoch: 0, barrier_round: 0, num_consumers: 2 },
+            WidthEpoch { epoch: 1, barrier_round: 1, num_consumers: 3 },
+        ];
+        assert_eq!(c.set_width_schedule(&schedule), 1);
+        assert_eq!(c.buffered_rounds(), 0, "post-barrier round dropped for re-key");
+        // Heartbeat redelivery of the same schedule is a no-op.
+        assert_eq!(c.set_width_schedule(&schedule), 0);
+        // The producer regroups from the barrier at the new width.
+        for v in [10, 11, 12] {
+            assert!(c.offer(Arc::new(elem(v).to_bytes())));
+        }
+        assert_eq!(take_bytes(&c, 1, 0).tensors[0].as_i32(), vec![10]);
+        assert_eq!(take_bytes(&c, 1, 1).tensors[0].as_i32(), vec![11]);
+        assert_eq!(take_bytes(&c, 1, 2).tensors[0].as_i32(), vec![12]);
+    }
+
+    #[test]
+    fn coordinated_consumed_errors_carry_skip_hint() {
+        // Both consumed outcomes answer with the stable prefix and a
+        // parseable `next round {n}` hint (the client's skip-forward
+        // protocol), not a terminal free-form error.
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 8);
+        assert!(c.install_round(round_of(&[0])));
+        assert!(c.install_round(round_of(&[1])));
+        // Fully-consumed round: the consumer starts at round 1, so round
+        // 0 is abandoned and GC'd; re-asking names the next round.
+        assert_eq!(take_bytes(&c, 1, 0).tensors[0].as_i32(), vec![1]);
+        let err = c.take(0, 0, Duration::from_millis(10)).unwrap_err().to_string();
+        assert!(err.contains(crate::service::ROUND_CONSUMED_PREFIX), "{err}");
+        assert!(err.contains("next round 1"), "{err}");
+        // Slot-already-taken (a replacement re-walking its predecessor's
+        // progress): same protocol.
+        let c2 = CoordinatedState::new(2, 0, 1, &[], false, 0, 8);
+        assert!(c2.install_round(round_of(&[5, 6])));
+        assert_eq!(take_bytes(&c2, 0, 1).tensors[0].as_i32(), vec![6]);
+        let err2 = c2.take(0, 1, Duration::from_millis(10)).unwrap_err().to_string();
+        assert!(err2.contains(crate::service::ROUND_CONSUMED_PREFIX), "{err2}");
+        assert!(err2.contains("next round 1"), "{err2}");
     }
 
     #[test]

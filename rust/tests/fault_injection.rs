@@ -8,6 +8,8 @@
 
 mod common;
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use common::{
@@ -15,9 +17,14 @@ use common::{
 };
 use tfdatasvc::data::exec::ElemIter;
 use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::orchestrator::failure::{FailureConfig, FailureInjector};
+use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::service::client::DistributedIter;
 use tfdatasvc::service::dispatcher::DispatcherConfig;
 use tfdatasvc::service::visitation::RoundTracker;
+use tfdatasvc::service::ServiceClient;
+use tfdatasvc::storage::ObjectStore;
 
 /// Consume `n` rounds, feeding the tracker (signature constant: a single
 /// consumer only checks the exactly-once-per-slot and floor halves).
@@ -27,6 +34,24 @@ fn drain_rounds(it: &mut DistributedIter, tracker: &mut RoundTracker, rounds: &m
         assert!(!e.tensors.is_empty());
         tracker.observe(*rounds, 0, 0);
         *rounds += 1;
+    }
+}
+
+/// Consume `n` rounds for one consumer slot of a multi-consumer job,
+/// labeling tracker entries with the slot's own round cursor so the
+/// exactly-once-per-(round, slot) half of the report stays meaningful.
+fn drain_slot(
+    it: &mut DistributedIter,
+    tracker: &mut RoundTracker,
+    cursor: &mut u64,
+    slot: usize,
+    n: u64,
+) {
+    for _ in 0..n {
+        let e = it.next().expect("round fetch failed").expect("stream ended early");
+        assert!(!e.tensors.is_empty());
+        tracker.observe(*cursor, slot, 0);
+        *cursor += 1;
     }
 }
 
@@ -200,4 +225,291 @@ fn seeded_fault_plan_is_deterministic_and_well_formed() {
         assert!(up.iter().all(|&u| u), "every kill is paired with a revive");
         assert!(restarts <= 1);
     }
+}
+
+/// Tentpole regression: a consumer slot replaced after its lease expires
+/// skips forward over rounds its crashed predecessor already consumed —
+/// metered on `client/rounds_skipped_forward` — instead of dying on the
+/// formerly-terminal "round already consumed" error. The surviving slot
+/// and the predecessor must never skip.
+#[test]
+fn replacement_consumer_after_lease_expiry_skips_forward() {
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(600),
+        ..Default::default()
+    };
+    let cluster = Cluster::with_config(3, dcfg);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+
+    let client_a = cluster.client();
+    let client_b = cluster.client();
+    let mut it_a = client_a.distribute(&graph, coord_cfg("replace", 2, 0)).unwrap();
+    let mut it_b = client_b.distribute(&graph, coord_cfg("replace", 2, 1)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let (mut a_rounds, mut b_rounds) = (0u64, 0u64);
+    for _ in 0..8 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+    }
+
+    // Trainer B crashes silently: no ReleaseJob, heartbeats just stop.
+    it_b.abandon();
+    // Let the slot's progress entry age out (> worker_timeout + a tick):
+    // the replacement must then activate at the epoch floor — round 0 —
+    // rather than inherit its predecessor's final report, which is the
+    // path that used to surface the terminal error.
+    std::thread::sleep(Duration::from_millis(900));
+
+    let client_b2 = cluster.client();
+    let mut it_b2 = client_b2.distribute(&graph, coord_cfg("replace", 2, 1)).unwrap();
+    // The replacement walks forward from round 0 over the 8 rounds its
+    // predecessor fully consumed (each worker answers with a skip hint);
+    // its first real delivery is round 8, so continuing the inherited
+    // cursor keeps the tracker labels truthful.
+    for _ in 0..6 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b2, &mut tracker, &mut b_rounds, 1, 1);
+    }
+
+    let skipped = client_b2.metrics().counter("client/rounds_skipped_forward").get();
+    assert!(skipped >= 8, "replacement skipped {skipped} rounds, expected >= 8");
+    assert_eq!(client_a.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    assert_eq!(client_b.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert_eq!((a_rounds, b_rounds), (14, 14));
+    it_a.release();
+    it_b2.release();
+}
+
+/// Elastic membership e2e: a live coordinated job is resized 2 -> 3 -> 2.
+/// The third slot activates at the grow barrier, consumes exactly once
+/// per round while it exists, and drains to a clean end-of-stream at the
+/// shrink barrier. No slot ever skips (skip-forward is reserved for the
+/// replacement path) and no (round, slot) is delivered twice.
+#[test]
+fn elastic_width_change_grows_and_shrinks() {
+    let cluster = Cluster::with_config(3, DispatcherConfig::default());
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+
+    let client_a = cluster.client();
+    let client_b = cluster.client();
+    let mut it_a = client_a.distribute(&graph, coord_cfg("elastic", 2, 0)).unwrap();
+    let mut it_b = client_b.distribute(&graph, coord_cfg("elastic", 2, 1)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let (mut a_rounds, mut b_rounds) = (0u64, 0u64);
+    for _ in 0..5 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+    }
+    // Let progress heartbeats land so the grow barrier sits near the
+    // consumption frontier (any barrier is correct; a fresh one keeps the
+    // buffered-round window comfortably inside worker prefetch depth).
+    std::thread::sleep(Duration::from_millis(300));
+
+    let job_id = it_a.job_id();
+    let (epoch1, b1) = cluster.dispatcher().set_job_consumers(job_id, 3).unwrap();
+    assert_eq!(epoch1, 1);
+
+    // Slot 2 joins mid-job and activates at the grow barrier.
+    let client_c = cluster.client();
+    let mut it_c = client_c.distribute(&graph, coord_cfg("elastic", 3, 2)).unwrap();
+    let mut c_rounds = b1;
+    for _ in 0..8 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+        drain_slot(&mut it_c, &mut tracker, &mut c_rounds, 2, 1);
+    }
+    wait_until(Instant::now() + Duration::from_secs(10), "width schedule delivery", || {
+        cluster
+            .with_worker(0, |w| w.metrics().counter("worker/width_updates_applied").get() >= 1)
+            .unwrap_or(false)
+    });
+
+    // Shrink back to 2: the barrier must move strictly forward and slot 2
+    // must drain the rounds it still owns, then end cleanly.
+    std::thread::sleep(Duration::from_millis(300));
+    let (epoch2, b2) = cluster.dispatcher().set_job_consumers(job_id, 2).unwrap();
+    assert_eq!(epoch2, 2);
+    assert!(b2 > b1, "shrink barrier {b2} must advance past grow barrier {b1}");
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut c_done = false;
+    while !c_done {
+        assert!(Instant::now() < deadline, "slot 2 never drained to end-of-stream");
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+        match it_c.next().expect("shrunk slot must end cleanly, not error") {
+            Some(e) => {
+                assert!(!e.tensors.is_empty());
+                tracker.observe(c_rounds, 2, 0);
+                c_rounds += 1;
+            }
+            None => c_done = true,
+        }
+    }
+    // The survivors keep flowing at the post-shrink width.
+    for _ in 0..4 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+    }
+
+    for c in [&client_a, &client_b, &client_c] {
+        assert_eq!(c.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    }
+    assert_eq!(cluster.dispatcher().metrics().counter("dispatcher/consumer_set_changes").get(), 2);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert!(c_rounds > b1, "slot 2 delivered no rounds while it existed");
+    it_a.release();
+    it_b.release();
+    it_c.release();
+}
+
+/// Slow-owner skew: one (seed-chosen) worker runs with a minimal round
+/// prefetch depth, so its residue class materializes late every round.
+/// Lockstep consumers must absorb the skew — no skips, no duplicate
+/// slots, no stall — because rounds gate on the slowest owner by design.
+#[test]
+fn slow_owner_skew_preserves_round_invariants() {
+    let slow = (fault_seed(42) % 3) as usize;
+    let cluster = Cluster::with_config(0, DispatcherConfig::default());
+    for i in 0..3 {
+        cluster.set_worker_config(|c| c.round_prefetch_depth = if i == slow { 1 } else { 4 });
+        cluster.add_worker();
+    }
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+
+    let client_a = cluster.client();
+    let client_b = cluster.client();
+    let mut it_a = client_a.distribute(&graph, coord_cfg("skew", 2, 0)).unwrap();
+    let mut it_b = client_b.distribute(&graph, coord_cfg("skew", 2, 1)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let (mut a_rounds, mut b_rounds) = (0u64, 0u64);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for _ in 0..30 {
+        drain_slot(&mut it_a, &mut tracker, &mut a_rounds, 0, 1);
+        drain_slot(&mut it_b, &mut tracker, &mut b_rounds, 1, 1);
+        assert!(Instant::now() < deadline, "skewed round plane stalled");
+    }
+
+    assert_eq!(client_a.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    assert_eq!(client_b.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert_eq!(report.rounds_seen as u64, 30);
+    it_a.release();
+    it_b.release();
+}
+
+/// Preemption wave (orchestrator failure injector over a [`Cell`]): a
+/// coordinated job rides out a seeded storm of worker kills with delayed
+/// replacements — every replacement is a brand-new identity, so this
+/// exercises lease reassignment to late joiners rather than stable
+/// -address revival. The round plane must keep flowing with every round
+/// delivered exactly once and zero skips.
+#[test]
+fn preemption_wave_keeps_coordinated_rounds_exactly_once() {
+    let store = ObjectStore::in_memory();
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let cell = Arc::new(Cell::new(store, UdfRegistry::with_builtins(), dcfg).unwrap());
+    cell.scale_to(4).unwrap();
+    // Lease ticker for the stretches when the injector is not running.
+    let stop_tick = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let (c, s) = (cell.clone(), stop_tick.clone());
+        std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                c.tick();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = client.distribute(&graph, coord_cfg("wave", 1, 0)).unwrap();
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
+
+    let inj = FailureInjector::start(
+        cell.clone(),
+        FailureConfig {
+            kill_probability: 0.5,
+            tick: Duration::from_millis(120),
+            restart_after: Some(Duration::from_millis(150)),
+            seed: fault_seed(17),
+        },
+    );
+    // Ride the wave until both enough rounds flowed *and* the storm
+    // actually struck at least twice (an unpaced drain could otherwise
+    // outrun the injector's first tick). The per-round pause keeps the
+    // wave several injector ticks long.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while rounds < 25 || inj.kills.load(Ordering::SeqCst) < 2 {
+        drain_rounds(&mut it, &mut tracker, &mut rounds, 1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(Instant::now() < deadline, "round plane stalled under the preemption wave");
+    }
+    // Let pending replacement restarts land before stopping the storm.
+    std::thread::sleep(Duration::from_millis(400));
+    inj.stop();
+    assert!(inj.kills.load(Ordering::SeqCst) >= 2, "the wave never killed a worker");
+    assert!(inj.restarts.load(Ordering::SeqCst) >= 1, "no replacement worker ever started");
+
+    // Calm water: the (partly replaced) pool still serves rounds.
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
+    assert_eq!(client.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert!(rounds >= 30, "expected at least 30 rounds, saw {rounds}");
+    it.release();
+    stop_tick.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+}
+
+/// Satellite regression for the engine-poll removal: an idle concurrent
+/// round engine must sleep on the demand condvar, not a timer. Over a
+/// 1.5 s idle window (well inside the 5 s liveness watchdog) the
+/// `client/round_engine_timer_wakeups` counter must not move, and the
+/// engine must still deliver promptly when demand resumes.
+#[test]
+fn idle_round_engine_takes_no_timer_wakeups() {
+    let cluster = Cluster::start(2);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = cluster.client();
+    // Default config: stream sessions + concurrent round fetch.
+    let mut it = client.distribute(&graph, coord_cfg("idle", 1, 0)).unwrap();
+
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 3);
+    // Give in-flight prefetch lanes a beat to park before sampling.
+    std::thread::sleep(Duration::from_millis(200));
+
+    let wakeups = || client.metrics().counter("client/round_engine_timer_wakeups").get();
+    let before = wakeups();
+    std::thread::sleep(Duration::from_millis(1500));
+    assert_eq!(wakeups() - before, 0, "idle engine woke from the watchdog timer");
+
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 3);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(rounds, 6);
+    it.release();
 }

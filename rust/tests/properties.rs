@@ -385,7 +385,7 @@ fn prop_round_lease_invariants_under_kill_revive_rebalance() {
 // ----------------------------------------------------------- journal fuzz
 
 fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => JournalRecord::RegisterDataset { dataset_id: rng.next_u64(), graph: rand_graph(rng) },
         1 => JournalRecord::CreateJob {
             job_id: rng.next_u64(),
@@ -405,9 +405,15 @@ fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
         3 => JournalRecord::ClientJoined { job_id: rng.next_u64(), client_id: rng.next_u64() },
         4 => JournalRecord::ClientReleased { job_id: rng.next_u64(), client_id: rng.next_u64() },
         5 => JournalRecord::JobFinished { job_id: rng.next_u64() },
-        _ => JournalRecord::RoundLeaseChanged {
+        6 => JournalRecord::RoundLeaseChanged {
             job_id: rng.next_u64(),
             residue_owners: (0..rng.below(8)).map(|_| rng.next_u64()).collect(),
+        },
+        _ => JournalRecord::ConsumerSetChanged {
+            job_id: rng.next_u64(),
+            epoch: rng.next_u32(),
+            barrier_round: rng.next_u64(),
+            num_consumers: rng.next_u32() % 16,
         },
     }
 }
@@ -428,7 +434,7 @@ fn prop_journal_records_roundtrip_byte_identical() {
         assert_eq!(back, rec, "trial {trial}");
         assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
     }
-    assert_eq!(variants_seen.len(), 7, "generator covered every record variant");
+    assert_eq!(variants_seen.len(), 8, "generator covered every record variant");
 }
 
 /// A journal truncated anywhere in its tail (crash mid-append) replays
