@@ -3,19 +3,37 @@
 //! ideal (vs 2.9x in-region); the service reaches ideal anyway by using
 //! extra workers to hide fetch latency.
 //!
-//! Runs both the calibrated DES and a *live* measurement on the real
-//! storage layer's region model.
+//! Three sections:
+//! 1. the calibrated DES reproducing the paper's numbers,
+//! 2. a *live* measurement on the real storage layer's region model, and
+//! 3. the **spill tier as a cross-region read path**: an epoch spilled
+//!    to the store in the producing region is replayed through
+//!    [`tfdatasvc::service::spill::read_segment`] by a same-region and a
+//!    cross-region reader. Segment replay does one store round-trip per
+//!    segment instead of one per source shard, so a remote snapshot
+//!    reader beats remotely re-running the pipeline.
+//!
+//! `--smoke` shrinks the dataset for CI. Results land in
+//! `out/bench_crossregion.json` and the repo-root baseline
+//! `BENCH_crossregion.json`.
 
 use std::sync::Arc;
+use std::time::Instant;
 use tfdatasvc::data::exec::{AllSplits, ElemIter, Executor, ExecutorConfig};
 use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::metrics::{write_json_file, Registry};
+use tfdatasvc::service::spill::{read_segment, JobSpill, SpillConfig, SpillPolicy};
 use tfdatasvc::sim::des::{simulate_job, JobSimConfig};
 use tfdatasvc::sim::models::model;
 use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
 use tfdatasvc::storage::{NetModel, ObjectStore, Region};
+use tfdatasvc::util::json::obj;
+use tfdatasvc::wire::Encode;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
     // ---- DES: the paper's numbers ----
     let m = model("M3");
     let io = 13.3 / m.ideal_bps; // calibrated per-batch cross-region I/O
@@ -41,10 +59,11 @@ fn main() {
         ..Default::default()
     };
     let store = ObjectStore::new(us.clone(), net);
+    let (shards, samples) = if smoke { (8, 8) } else { (16, 8) };
     let spec = generate_vision(
         &store,
         "ds",
-        &VisionGenConfig { num_shards: 16, samples_per_shard: 8, ..Default::default() },
+        &VisionGenConfig { num_shards: shards, samples_per_shard: samples, ..Default::default() },
     );
     let graph = PipelineBuilder::source_vision(spec.clone()).batch(8).build();
 
@@ -65,8 +84,8 @@ fn main() {
         }
         (t0.elapsed(), n)
     };
-    let (t_near, n1) = time_from(us, spec.num_shards());
-    let (t_far, n2) = time_from(eu, spec.num_shards());
+    let (t_near, n1) = time_from(us.clone(), spec.num_shards());
+    let (t_far, n2) = time_from(eu.clone(), spec.num_shards());
     assert_eq!(n1, n2);
     println!(
         "\nlive storage model: in-region read {:?}, cross-region {:?} ({:.1}x slower per reader)",
@@ -75,5 +94,122 @@ fn main() {
         t_far.as_secs_f64() / t_near.as_secs_f64()
     );
     assert!(t_far > t_near * 3, "cross-region reads must be much slower per reader");
-    println!("crossregion OK");
+
+    // ---- Spill tier as a cross-region read path ----
+    // Produce one epoch in-region, spill every element, then replay the
+    // sealed segments from both regions. The far replay pays the
+    // cross-region latency once per *segment*; remotely re-running the
+    // pipeline pays it once per *shard object* (plus decode), so the
+    // snapshot-style read path must come out ahead.
+    let encoded: Vec<Arc<Vec<u8>>> = {
+        let ex = Executor::new(ExecutorConfig {
+            store: store.clone(),
+            udfs: UdfRegistry::with_builtins(),
+            region: us.clone(),
+            splits: AllSplits::new(spec.num_shards()),
+            autotune: Arc::new(tfdatasvc::data::autotune::AutotuneState::default()),
+        });
+        let mut it = ex.iterate(&graph).unwrap();
+        let mut out = Vec::new();
+        while let Ok(Some(e)) = it.next() {
+            out.push(Arc::new(e.to_bytes()));
+        }
+        out
+    };
+    assert_eq!(encoded.len(), n1);
+    let total_bytes: usize = encoded.iter().map(|e| e.len()).sum();
+    // Aim for ~4 segments so the per-segment round-trip cost is visible
+    // but still well below the per-shard cost of re-production.
+    let reg = Registry::new();
+    let sp = JobSpill::new(
+        store.clone(),
+        us.clone(),
+        &SpillConfig { policy: SpillPolicy::All, segment_bytes: (total_bytes / 4).max(1) },
+        9001,
+        42,
+        &reg,
+    );
+    for (seq, e) in encoded.iter().enumerate() {
+        sp.offer(seq as u64, e.clone());
+    }
+    let man = sp.finalize();
+    assert!(man.complete);
+    assert_eq!(man.total_elements, encoded.len() as u64);
+    assert!(man.segments.len() >= 2, "want multiple segments, got {}", man.segments.len());
+
+    let replay = |reader: &Region| {
+        let t0 = Instant::now();
+        let mut n = 0usize;
+        for seg in &man.segments {
+            n += read_segment(&store, reader, seg).unwrap().len();
+        }
+        (t0.elapsed(), n)
+    };
+    let (t_near_replay, r1) = replay(&us);
+    let (t_far_replay, r2) = replay(&eu);
+    assert_eq!(r1, encoded.len(), "near replay must decode the full epoch");
+    assert_eq!(r2, encoded.len(), "far replay must decode the full epoch");
+    assert!(
+        t_far_replay > t_near_replay,
+        "cross-region segment reads must pay the region latency"
+    );
+    assert!(
+        t_far_replay < t_far,
+        "snapshot replay from spill ({t_far_replay:?}) must beat re-producing the pipeline \
+         cross-region ({t_far:?})"
+    );
+    let speedup = t_far.as_secs_f64() / t_far_replay.as_secs_f64();
+    println!(
+        "spill read path: {} elements in {} segments ({} KiB); near replay {:?}, far replay {:?} \
+         vs far re-produce {:?} ({:.1}x faster)",
+        encoded.len(),
+        man.segments.len(),
+        total_bytes >> 10,
+        t_near_replay,
+        t_far_replay,
+        t_far,
+        speedup
+    );
+
+    let bench_json = obj([
+        ("bench", "crossregion".into()),
+        ("smoke", smoke.into()),
+        (
+            "des",
+            obj([
+                ("ideal_bps", m.ideal_bps.into()),
+                ("in_region_bps", in_region.throughput_bps.into()),
+                ("out_region_colocated_bps", out_region_colo.throughput_bps.into()),
+                ("out_region_service_bps", out_region_dis.throughput_bps.into()),
+                ("colocated_slowdown", (m.ideal_bps / out_region_colo.throughput_bps).into()),
+            ]),
+        ),
+        (
+            "live_read",
+            obj([
+                ("batches", (n1 as u64).into()),
+                ("in_region_ms", (t_near.as_secs_f64() * 1e3).into()),
+                ("cross_region_ms", (t_far.as_secs_f64() * 1e3).into()),
+                ("slowdown", (t_far.as_secs_f64() / t_near.as_secs_f64()).into()),
+            ]),
+        ),
+        (
+            "spill_replay",
+            obj([
+                ("elements", (encoded.len() as u64).into()),
+                ("segments", (man.segments.len() as u64).into()),
+                ("bytes", (total_bytes as u64).into()),
+                ("near_replay_ms", (t_near_replay.as_secs_f64() * 1e3).into()),
+                ("far_replay_ms", (t_far_replay.as_secs_f64() * 1e3).into()),
+                ("far_reproduce_ms", (t_far.as_secs_f64() * 1e3).into()),
+                ("replay_vs_reproduce_speedup", speedup.into()),
+            ]),
+        ),
+    ]);
+    write_json_file("out/bench_crossregion.json", &bench_json).unwrap();
+    // Repo-root mirror under the stable name the roadmap tracks (CI
+    // regenerates it every run; the checked-in copy is the latest
+    // accepted baseline).
+    write_json_file("BENCH_crossregion.json", &bench_json).unwrap();
+    println!("crossregion OK -> out/bench_crossregion.json + BENCH_crossregion.json");
 }

@@ -14,9 +14,16 @@
 //!    measured production cost next to the sim prediction so the model
 //!    and the implementation keep each other honest.
 //!
+//! A third section exercises the **spill tier** (§3.5 window backed by
+//! the §4.2 store): a late client attaches mid-epoch and replays the
+//! full epoch from spilled segments with zero relaxed-visitation
+//! skips, and a re-submitted identical pipeline is served from the
+//! committed fingerprint-keyed snapshot with no new production.
+//!
 //! `--smoke` shrinks the dataset and k for CI.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 use tfdatasvc::data::exec::ElemIter;
 use tfdatasvc::data::graph::PipelineBuilder;
 use tfdatasvc::data::udf::UdfRegistry;
@@ -27,6 +34,7 @@ use tfdatasvc::service::dispatcher::DispatcherConfig;
 use tfdatasvc::service::proto::{
     worker_methods, SharingMode, ShardingPolicy, WorkerStatusReq, WorkerStatusResp,
 };
+use tfdatasvc::service::spill::{SpillConfig, SpillPolicy};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::sim::models::model;
 use tfdatasvc::sim::sharing::{mode_a, mode_b, mode_c, sequential_sharing_cost, SharingConfig};
@@ -93,16 +101,118 @@ fn run_real(k: usize, sharing: SharingMode, shards: usize, samples_per_shard: us
     jobs.sort_unstable();
     jobs.dedup();
 
-    let pool = Pool::with_defaults();
-    let status: WorkerStatusResp = call_typed(
-        &pool,
-        &cell.worker_addrs()[0],
-        worker_methods::WORKER_STATUS,
-        &WorkerStatusReq {},
-        std::time::Duration::from_secs(5),
-    )
-    .unwrap();
+    let status = worker_status(&cell.worker_addrs()[0]);
     RealRun { produced: status.elements_produced, consumed, attaches, distinct_jobs: jobs.len() }
+}
+
+fn worker_status(addr: &str) -> WorkerStatusResp {
+    let pool = Pool::with_defaults();
+    call_typed(&pool, addr, worker_methods::WORKER_STATUS, &WorkerStatusReq {}, Duration::from_secs(5))
+        .unwrap()
+}
+
+struct SpillRun {
+    epoch: u64,
+    late_consumed: u64,
+    late_attached: bool,
+    snapshot_consumed: u64,
+    produced_live: u64,
+    produced_after_snapshot: u64,
+    spill_segments: u64,
+    spill_served: u64,
+    snapshot_serves: u64,
+    relaxed_skips: u64,
+}
+
+/// Late attach + snapshot resubmission on a spill-All worker. Client 1
+/// drains half the epoch first (eager eviction archives the consumed
+/// prefix to the store), so the late attacher's replay of sequence 0
+/// onward can only come from the spill tier; after the epoch commits as
+/// a fingerprint-keyed snapshot, a re-submitted identical pipeline is
+/// streamed from the store with no new production.
+fn run_spill_real(shards: usize, samples_per_shard: usize) -> SpillRun {
+    let store = ObjectStore::in_memory();
+    let spec = generate_vision(
+        &store,
+        "ds",
+        &VisionGenConfig { num_shards: shards, samples_per_shard, ..Default::default() },
+    );
+    let cell =
+        Arc::new(Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap());
+    cell.set_worker_config_mutator(|c| {
+        c.spill = SpillConfig { policy: SpillPolicy::All, segment_bytes: 32 << 10 };
+    });
+    cell.scale_to(1).unwrap();
+    let graph = PipelineBuilder::source_vision(spec).batch(8).build();
+    let epoch = (shards * samples_per_shard / 8) as u64;
+    let cfg = || ServiceClientConfig {
+        sharding: ShardingPolicy::Off,
+        sharing: SharingMode::Auto,
+        ..Default::default()
+    };
+
+    let c1 = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it1 = c1.distribute(&graph, cfg()).unwrap();
+    let mut n1 = 0u64;
+    while n1 < epoch / 2 {
+        it1.next().unwrap().expect("producer ended before half the epoch");
+        n1 += 1;
+    }
+
+    let late = {
+        let addr = cell.dispatcher_addr();
+        let graph = graph.clone();
+        let cfg = cfg();
+        std::thread::spawn(move || {
+            let c2 = ServiceClient::new(&addr);
+            let mut it2 = c2.distribute(&graph, cfg).unwrap();
+            let attached = it2.attached();
+            let mut n = 0u64;
+            while let Ok(Some(_)) = it2.next() {
+                n += 1;
+            }
+            (n, attached)
+        })
+    };
+    while let Ok(Some(_)) = it1.next() {
+        n1 += 1;
+    }
+    assert_eq!(n1, epoch, "client 1 drains the epoch");
+    let (late_consumed, late_attached) = late.join().unwrap();
+    drop(it1);
+    let live = worker_status(&cell.worker_addrs()[0]);
+
+    // Epoch drained on every consumer -> the worker finalizes its spill
+    // manifest and the dispatcher commits the fingerprint snapshot on
+    // the next heartbeat.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while cell.dispatcher().metrics().counter("dispatcher/snapshots_committed").get() == 0 {
+        assert!(Instant::now() < deadline, "snapshot never committed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let c3 = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it3 = c3.distribute(&graph, cfg()).unwrap();
+    assert!(it3.snapshot(), "resubmission must attach to the committed snapshot");
+    let mut n3 = 0u64;
+    while let Ok(Some(_)) = it3.next() {
+        n3 += 1;
+    }
+    drop(it3);
+    let after = worker_status(&cell.worker_addrs()[0]);
+
+    SpillRun {
+        epoch,
+        late_consumed,
+        late_attached,
+        snapshot_consumed: n3,
+        produced_live: live.elements_produced,
+        produced_after_snapshot: after.elements_produced,
+        spill_segments: after.spill_segments_written,
+        spill_served: after.spill_elements_served,
+        snapshot_serves: after.snapshot_serves,
+        relaxed_skips: after.relaxed_skips,
+    }
 }
 
 fn main() {
@@ -196,5 +306,50 @@ fn main() {
         (measured_b - sim_b_reads).abs() <= 0.1 * sim_b_reads,
         "sim and implementation agree on mode B production count"
     );
-    println!("fig10 OK -> out/fig10.csv, out/fig10_real.csv");
+
+    // ---- Spill tier: late attach + snapshot resubmission ----
+    let (sshards, ssamples) = if smoke { (4, 16) } else { (8, 32) };
+    let sr = run_spill_real(sshards, ssamples);
+    println!("=== Fig 10 addendum: spill tier (epoch = {} batches) ===", sr.epoch);
+    println!(
+        "late attach: consumed {}/{} from spill ({} segments, {} elements served), {} skips",
+        sr.late_consumed, sr.epoch, sr.spill_segments, sr.spill_served, sr.relaxed_skips
+    );
+    println!(
+        "snapshot resubmission: consumed {}/{}, production {} -> {} ({} snapshot serves)",
+        sr.snapshot_consumed,
+        sr.epoch,
+        sr.produced_live,
+        sr.produced_after_snapshot,
+        sr.snapshot_serves
+    );
+    assert!(sr.late_attached, "late client must attach to the live fingerprint-matched job");
+    assert_eq!(sr.late_consumed, sr.epoch, "late attacher replays the full epoch from spill");
+    assert_eq!(sr.relaxed_skips, 0, "the spill tier leaves nothing to skip");
+    assert!(sr.spill_segments >= 1, "the window must have spilled segments");
+    assert!(sr.spill_served >= 1, "the late attacher must be served from spill");
+    assert_eq!(sr.snapshot_consumed, sr.epoch, "snapshot serve streams the full epoch");
+    assert_eq!(
+        sr.produced_after_snapshot, sr.produced_live,
+        "a snapshot-served resubmission must produce nothing new"
+    );
+    assert!(sr.snapshot_serves >= 1, "the worker must record a snapshot-serve task");
+    write_csv_rows(
+        "out/fig10_spill.csv",
+        "epoch,late_consumed,relaxed_skips,spill_segments,spill_elements_served,\
+         snapshot_consumed,produced_live,produced_after_snapshot,snapshot_serves",
+        &[vec![
+            sr.epoch.to_string(),
+            sr.late_consumed.to_string(),
+            sr.relaxed_skips.to_string(),
+            sr.spill_segments.to_string(),
+            sr.spill_served.to_string(),
+            sr.snapshot_consumed.to_string(),
+            sr.produced_live.to_string(),
+            sr.produced_after_snapshot.to_string(),
+            sr.snapshot_serves.to_string(),
+        ]],
+    )
+    .unwrap();
+    println!("fig10 OK -> out/fig10.csv, out/fig10_real.csv, out/fig10_spill.csv");
 }

@@ -252,12 +252,18 @@ impl ServiceClient {
         if job.attached && cfg.job_name.is_empty() {
             self.metrics.counter("client/shared_attaches").inc();
         }
+        // Snapshot serve: the job streams a committed epoch from the
+        // store (fingerprint-keyed reuse) instead of producing.
+        if job.snapshot {
+            self.metrics.counter("client/snapshot_attaches").inc();
+        }
         DistributedIter::start(
             self.dispatcher_addr.clone(),
             self.pool.clone(),
             job.job_id,
             job.client_id,
             job.attached,
+            job.snapshot,
             cfg,
             self.metrics.clone(),
         )
@@ -281,6 +287,9 @@ pub struct DistributedIter {
     /// Whether this client attached to an already-live job (§3.5 sharing)
     /// instead of creating a new production.
     attached: bool,
+    /// Whether the job serves a committed fingerprint-keyed snapshot
+    /// from the store instead of running the pipeline.
+    snapshot: bool,
     dispatcher_addr: String,
     pool: Arc<Pool>,
     stop: Arc<AtomicBool>,
@@ -399,6 +408,7 @@ impl DistributedIter {
         job_id: u64,
         client_id: u64,
         attached: bool,
+        snapshot: bool,
         cfg: ServiceClientConfig,
         metrics: Registry,
     ) -> ServiceResult<DistributedIter> {
@@ -549,6 +559,7 @@ impl DistributedIter {
                     job_id,
                     client_id,
                     attached,
+                    snapshot,
                     dispatcher_addr,
                     pool,
                     stop,
@@ -638,6 +649,7 @@ impl DistributedIter {
                     job_id,
                     client_id,
                     attached,
+                    snapshot,
                     dispatcher_addr,
                     pool,
                     stop,
@@ -663,6 +675,13 @@ impl DistributedIter {
     /// explicit job-name join — instead of starting a new production.
     pub fn attached(&self) -> bool {
         self.attached
+    }
+
+    /// True when the job serves a committed fingerprint-keyed snapshot:
+    /// workers stream the stored epoch (paying storage read costs)
+    /// instead of re-running the pipeline.
+    pub fn snapshot(&self) -> bool {
+        self.snapshot
     }
 
     /// Tell the dispatcher this client is done (job GC'd when the last

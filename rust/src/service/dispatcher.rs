@@ -14,6 +14,7 @@
 use super::journal::{Journal, JournalRecord};
 use super::proto::*;
 use super::sharding::{static_assignment, SplitTracker};
+use super::spill::{merge_manifests, partition_manifest, SpillManifest};
 use super::{ServiceError, ServiceResult};
 use crate::data::graph::GraphDef;
 use crate::metrics::Registry;
@@ -142,6 +143,17 @@ struct JobState {
     /// appends one entry per width change. Never empty; barriers are
     /// monotone. `num_consumers` above always mirrors the last entry.
     width_epochs: Vec<WidthEpoch>,
+    /// Complete per-worker spill manifests reported via heartbeat
+    /// (worker id -> manifest). Once every worker in `worker_order` has
+    /// reported, the merged snapshot commits.
+    spill_manifests: HashMap<u64, SpillManifest>,
+    /// This job's epoch has been committed as a fingerprint-keyed
+    /// snapshot — further manifest reports are acked without re-merging.
+    snapshot_committed: bool,
+    /// The job was created in snapshot-serve mode: its tasks carry a
+    /// stored-manifest slice and stream the committed epoch instead of
+    /// producing.
+    snapshot_serve: bool,
 }
 
 impl JobState {
@@ -163,6 +175,10 @@ struct Meta {
     jobs: HashMap<u64, JobState>,
     /// (dataset_id, job_name) -> job_id for named (shared) jobs.
     named_jobs: HashMap<(u64, String), u64>,
+    /// Committed snapshots, keyed by pipeline fingerprint (= dataset id).
+    /// One (latest-epoch) snapshot per fingerprint: a re-submitted
+    /// identical pipeline with `sharing: auto` attaches here.
+    snapshots: HashMap<u64, SpillManifest>,
     next_worker_id: u64,
     next_job_id: u64,
     next_client_id: u64,
@@ -231,6 +247,7 @@ impl Dispatcher {
                     num_consumers,
                     sharing,
                     worker_order,
+                    snapshot,
                 } => {
                     let shards = meta.datasets.get(&dataset_id).map(graph_num_shards).unwrap_or(1);
                     let tracker = matches!(sharding, ShardingPolicy::Dynamic)
@@ -261,6 +278,9 @@ impl Dispatcher {
                                 barrier_round: 0,
                                 num_consumers,
                             }],
+                            spill_manifests: HashMap::new(),
+                            snapshot_committed: false,
+                            snapshot_serve: snapshot,
                         },
                     );
                     meta.next_job_id = meta.next_job_id.max(job_id + 1);
@@ -320,6 +340,22 @@ impl Dispatcher {
                             j.width_epochs.push(WidthEpoch { epoch, barrier_round, num_consumers });
                             j.num_consumers = num_consumers;
                         }
+                    }
+                }
+                JournalRecord::SnapshotCommitted { fingerprint, epoch, manifest } => {
+                    // Epoch-monotone last-writer-wins per fingerprint: a
+                    // duplicate (crash between append and publish) or a
+                    // stale record replays as a no-op.
+                    let newer = meta
+                        .snapshots
+                        .get(&fingerprint)
+                        .map(|m| epoch >= m.epoch)
+                        .unwrap_or(true);
+                    if newer {
+                        if let Some(j) = meta.jobs.get_mut(&manifest.job_id) {
+                            j.snapshot_committed = true;
+                        }
+                        meta.snapshots.insert(fingerprint, manifest);
                     }
                 }
             }
@@ -685,7 +721,16 @@ fn make_task(
     static_shards: Vec<u64>,
 ) -> TaskDef {
     let worker_index = job.worker_order.iter().position(|&w| w == worker_id).unwrap_or(job.worker_order.len()) as u32;
-    let _ = meta;
+    // Snapshot-serve jobs carry this worker's stripe of the committed
+    // manifest: the task streams stored segments instead of producing. A
+    // worker past the creation-time order (late registration) gets an
+    // empty slice and serves immediate EOS — no duplicated segments.
+    let snapshot_manifest = (job.snapshot_serve)
+        .then(|| meta.snapshots.get(&job.dataset_id))
+        .flatten()
+        .map(|m| {
+            partition_manifest(m, worker_index as usize, job.worker_order.len().max(1))
+        });
     let mut consumers: Vec<u64> = job.clients.iter().copied().collect();
     consumers.sort_unstable();
     // Round residues this worker currently holds the lease for — its
@@ -722,6 +767,7 @@ fn make_task(
         // Full membership-epoch history, so a (re)started worker keys
         // every buffered round at the width its epoch dictates.
         width_epochs: job.width_epochs.clone(),
+        snapshot_manifest,
     }
 }
 
@@ -768,12 +814,13 @@ fn attach_client(
 ) -> ServiceResult<Option<GetOrCreateJobResp>> {
     journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
     let mut meta = state.meta.lock().unwrap();
-    match meta.jobs.get_mut(&job_id) {
+    let snapshot = match meta.jobs.get_mut(&job_id) {
         Some(job) if !job.finished => {
             job.clients.insert(client_id);
+            job.snapshot_serve
         }
         _ => return Ok(None), // finished in the gap: caller re-creates
-    }
+    };
     let update = ConsumerUpdate { job_id, client_id };
     let mut push_addrs = Vec::new();
     for w in meta.workers.values_mut() {
@@ -797,7 +844,7 @@ fn attach_client(
     } else {
         state.metrics.counter("dispatcher/named_job_joins").inc();
     }
-    Ok(Some(GetOrCreateJobResp { job_id, client_id, attached: true }))
+    Ok(Some(GetOrCreateJobResp { job_id, client_id, attached: true, snapshot }))
 }
 
 /// Best-effort dispatcher -> worker consumer-update push (the heartbeat
@@ -865,6 +912,17 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
     let client_id = meta.next_client_id;
     meta.next_client_id += 1;
 
+    // Fingerprint-keyed snapshot reuse: no live production to share, but
+    // an identical pipeline (same dataset fingerprint) already committed
+    // a full epoch to the store — create the job in snapshot-serve mode
+    // so workers stream stored segments instead of re-running the
+    // pipeline. Opt-in via `sharing: auto`, unnamed independent jobs
+    // only (named jobs and coordinated reads pin live semantics).
+    let snapshot_serve = req.job_name.is_empty()
+        && req.sharing == SharingMode::Auto
+        && req.mode == ProcessingMode::Independent
+        && meta.snapshots.contains_key(&req.dataset_id);
+
     let graph = meta.datasets.get(&req.dataset_id).unwrap().clone();
     let num_shards = graph_num_shards(&graph);
     let tracker = matches!(req.sharding, ShardingPolicy::Dynamic)
@@ -894,6 +952,9 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
             barrier_round: 0,
             num_consumers: req.num_consumers,
         }],
+        spill_manifests: HashMap::new(),
+        snapshot_committed: false,
+        snapshot_serve,
     };
 
     // Write-ahead, *before* publication: a concurrent sharing attach can
@@ -917,6 +978,7 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
             // restarted dispatcher rebuilds the round-lease table
             // (RoundLeaseChanged records then replay over this baseline).
             worker_order: worker_order.clone(),
+            snapshot: snapshot_serve,
         },
     )?;
     journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
@@ -946,7 +1008,10 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
     drop(meta);
 
     state.metrics.counter("dispatcher/jobs_created").inc();
-    Ok(GetOrCreateJobResp { job_id, client_id, attached: false })
+    if snapshot_serve {
+        state.metrics.counter("dispatcher/snapshot_attaches").inc();
+    }
+    Ok(GetOrCreateJobResp { job_id, client_id, attached: false, snapshot: snapshot_serve })
 }
 
 fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResult<ClientHeartbeatResp> {
@@ -1066,6 +1131,73 @@ fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<
     Ok(RegisterWorkerResp { worker_id, tasks })
 }
 
+/// Ingest one worker's completed spill manifests: record each against
+/// its job and, once every worker in the job's creation-time order has
+/// reported, journal the merged snapshot and publish it under the
+/// pipeline fingerprint (§ spill tier & snapshots). Returns the job ids
+/// whose manifests the worker may stop re-reporting — the commit is
+/// durable (or already was), so the ack cannot lose a snapshot.
+fn ingest_spill_manifests(
+    state: &Arc<State>,
+    meta: &mut Meta,
+    worker_id: u64,
+    manifests: &[SpillManifest],
+) -> ServiceResult<Vec<u64>> {
+    let mut acks = Vec::new();
+    // Split borrow: the job table and the snapshot index are touched in
+    // the same commit step.
+    let Meta { jobs, snapshots, .. } = meta;
+    for man in manifests {
+        if !man.complete {
+            continue; // defensive: workers only report complete manifests
+        }
+        let Some(job) = jobs.get_mut(&man.job_id) else {
+            // Unknown (GC'd / pre-restart) job: nothing to commit against,
+            // ack so the worker stops re-reporting.
+            acks.push(man.job_id);
+            continue;
+        };
+        if job.snapshot_committed || job.snapshot_serve {
+            acks.push(man.job_id);
+            continue;
+        }
+        if !job.worker_order.contains(&worker_id) {
+            // Late-registered worker outside the creation-time order: its
+            // task never produced this job's stripe, so its (empty)
+            // manifest is not part of the commit gate.
+            acks.push(man.job_id);
+            continue;
+        }
+        job.spill_manifests.insert(worker_id, man.clone());
+        let all_reported =
+            job.worker_order.iter().all(|w| job.spill_manifests.contains_key(w));
+        if !all_reported {
+            continue; // unacked: the worker re-reports until the commit
+        }
+        let fingerprint = man.fingerprint;
+        let parts: Vec<SpillManifest> = job
+            .worker_order
+            .iter()
+            .map(|w| job.spill_manifests[w].clone())
+            .collect();
+        let epoch = snapshots.get(&fingerprint).map(|m| m.epoch + 1).unwrap_or(0);
+        let merged = merge_manifests(fingerprint, man.job_id, epoch, &parts);
+        // Durable before published (and before the ack): a crash after
+        // the append replays the commit; a crash before it leaves the
+        // workers re-reporting and the commit redone.
+        journal_append(state, &JournalRecord::SnapshotCommitted {
+            fingerprint,
+            epoch,
+            manifest: merged.clone(),
+        })?;
+        job.snapshot_committed = true;
+        snapshots.insert(fingerprint, merged);
+        state.metrics.counter("dispatcher/snapshots_committed").inc();
+        acks.push(man.job_id);
+    }
+    Ok(acks)
+}
+
 fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResult<WorkerHeartbeatResp> {
     let mut meta = state.meta.lock().unwrap();
     let finished_jobs: Vec<u64> =
@@ -1156,6 +1288,8 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         .metrics
         .gauge("dispatcher/last_worker_cpu_milli")
         .set(req.cpu_util_milli as i64);
+    let manifest_acks =
+        ingest_spill_manifests(state, &mut meta, req.worker_id, &req.spill_manifests)?;
     Ok(WorkerHeartbeatResp {
         new_tasks,
         removed_tasks: removed,
@@ -1163,6 +1297,7 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         released_clients,
         round_assignments,
         width_updates,
+        manifest_acks,
     })
 }
 
@@ -1382,7 +1517,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1419,7 +1554,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![j.job_id], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![j.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1577,7 +1712,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1597,7 +1732,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1619,7 +1754,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1746,7 +1881,7 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0 },
+            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
             timeout(),
         )
         .unwrap();
@@ -1829,6 +1964,7 @@ mod tests {
                 worker_id: w.worker_id,
                 active_tasks: vec![j.job_id],
                 cpu_util_milli: 0,
+                spill_manifests: vec![],
             },
             timeout(),
         )
@@ -1841,5 +1977,230 @@ mod tests {
             .expect("width schedule pushed to the worker");
         assert_eq!(upd.width_epochs.len(), 3, "epoch 0 plus two changes");
         assert_eq!(d.metrics().counter("dispatcher/consumer_set_changes").get(), 2);
+    }
+
+    #[test]
+    fn spill_manifests_commit_and_resubmit_serves_snapshot() {
+        use crate::service::spill::{data_key, SegmentMeta};
+        let (d, pool, addr) = disp();
+        let ds = register_range_dataset(&pool, &addr);
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7007".into() },
+            timeout(),
+        )
+        .unwrap();
+        let a: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert!(!a.snapshot, "no snapshot exists yet: live production");
+
+        // The (single) worker reports a complete epoch manifest: the
+        // dispatcher merges, journals, publishes, and acks in one step.
+        let man = SpillManifest {
+            fingerprint: ds,
+            job_id: a.job_id,
+            epoch: 0,
+            total_elements: 4,
+            complete: true,
+            segments: vec![
+                SegmentMeta {
+                    key: data_key(a.job_id),
+                    offset: 0,
+                    len: 40,
+                    start_seq: 0,
+                    num_elements: 2,
+                    crc32: 7,
+                },
+                SegmentMeta {
+                    key: data_key(a.job_id),
+                    offset: 40,
+                    len: 40,
+                    start_seq: 2,
+                    num_elements: 2,
+                    crc32: 8,
+                },
+            ],
+        };
+        let hb: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![a.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![man.clone()],
+            },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb.manifest_acks, vec![a.job_id], "commit acks the manifest");
+        assert_eq!(d.metrics().counter("dispatcher/snapshots_committed").get(), 1);
+        // Re-reporting after the commit is acked without a second merge.
+        let hb2: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![a.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![man],
+            },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb2.manifest_acks, vec![a.job_id]);
+        assert_eq!(d.metrics().counter("dispatcher/snapshots_committed").get(), 1);
+
+        let _: ReleaseJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::RELEASE_JOB,
+            &ReleaseJobReq { job_id: a.job_id, client_id: a.client_id },
+            timeout(),
+        )
+        .unwrap();
+
+        // Re-submitted identical pipeline (same fingerprint, auto
+        // sharing, no live job left): attaches in snapshot-serve mode.
+        let b: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert!(b.snapshot, "re-submission is served from the snapshot");
+        assert_ne!(b.job_id, a.job_id);
+        assert_eq!(d.metrics().counter("dispatcher/snapshot_attaches").get(), 1);
+        // The worker's task carries its stripe of the committed manifest.
+        let hb3: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+            },
+            timeout(),
+        )
+        .unwrap();
+        let task = hb3
+            .new_tasks
+            .iter()
+            .find(|t| t.job_id == b.job_id)
+            .expect("snapshot task delivered");
+        let slice = task.snapshot_manifest.as_ref().expect("manifest slice attached");
+        assert_eq!(slice.total_elements, 4, "single worker serves the whole epoch");
+        assert_eq!(slice.segments.len(), 2);
+        // A second client arriving while the snapshot job is live shares
+        // it (ordinary auto-sharing attach) and learns it is a snapshot.
+        let c: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert!(c.attached && c.snapshot);
+        assert_eq!(c.job_id, b.job_id);
+    }
+
+    #[test]
+    fn snapshot_commit_survives_restart_via_journal() {
+        use crate::service::spill::{data_key, SegmentMeta};
+        let dir =
+            std::env::temp_dir().join(format!("tfdatasvc-disp-snap-{}", std::process::id()));
+        let jpath = dir.join("journal");
+        let _ = std::fs::remove_file(&jpath);
+        let cfg = || DispatcherConfig {
+            journal_path: Some(jpath.clone()),
+            ..DispatcherConfig::default()
+        };
+        let pool = Pool::with_defaults();
+        let d1 = Dispatcher::start("127.0.0.1:0", cfg()).unwrap();
+        let addr = d1.addr();
+        let ds = register_range_dataset(&pool, &addr);
+        let w: RegisterWorkerResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::REGISTER_WORKER,
+            &RegisterWorkerReq { addr: "127.0.0.1:7008".into() },
+            timeout(),
+        )
+        .unwrap();
+        let a: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        let man = SpillManifest {
+            fingerprint: ds,
+            job_id: a.job_id,
+            epoch: 0,
+            total_elements: 2,
+            complete: true,
+            segments: vec![SegmentMeta {
+                key: data_key(a.job_id),
+                offset: 0,
+                len: 40,
+                start_seq: 0,
+                num_elements: 2,
+                crc32: 7,
+            }],
+        };
+        let hb: WorkerHeartbeatResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::WORKER_HEARTBEAT,
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![a.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![man],
+            },
+            timeout(),
+        )
+        .unwrap();
+        assert_eq!(hb.manifest_acks, vec![a.job_id]);
+        let _: ReleaseJobResp = call_typed(
+            &pool,
+            &addr,
+            dispatcher_methods::RELEASE_JOB,
+            &ReleaseJobReq { job_id: a.job_id, client_id: a.client_id },
+            timeout(),
+        )
+        .unwrap();
+        drop(d1);
+
+        // Restart from the journal: the committed snapshot must still be
+        // discoverable by a re-submitted identical pipeline.
+        let d2 = Dispatcher::start("127.0.0.1:0", cfg()).unwrap();
+        let addr2 = d2.addr();
+        let b: GetOrCreateJobResp = call_typed(
+            &pool,
+            &addr2,
+            dispatcher_methods::GET_OR_CREATE_JOB,
+            &job_req(ds, "", SharingMode::Auto),
+            timeout(),
+        )
+        .unwrap();
+        assert!(b.snapshot, "snapshot commit survives the restart");
     }
 }

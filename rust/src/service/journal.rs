@@ -9,6 +9,7 @@
 
 use crate::data::graph::GraphDef;
 use crate::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
+use crate::service::spill::SpillManifest;
 use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
 use crate::util::crc32::Hasher;
 use std::fs::{File, OpenOptions};
@@ -35,6 +36,11 @@ pub enum JournalRecord {
         /// round-lease table instead of resetting coordinated jobs to an
         /// unroutable state (§3.6 fault tolerance).
         worker_order: Vec<u64>,
+        /// True when the job was created in snapshot-serve mode (its
+        /// workers stream a committed snapshot instead of producing);
+        /// replayed so a restarted dispatcher keeps handing snapshot
+        /// tasks to re-registering workers.
+        snapshot: bool,
     },
     RegisterWorker { worker_id: u64, addr: String },
     ClientJoined { job_id: u64, client_id: u64 },
@@ -54,6 +60,13 @@ pub enum JournalRecord {
     /// dispatcher replays the full membership-epoch history and a
     /// heartbeating worker re-receives the schedule it may have missed.
     ConsumerSetChanged { job_id: u64, epoch: u32, barrier_round: u64, num_consumers: u32 },
+    /// A fingerprint's epoch output was fully spilled and the per-worker
+    /// manifests merged: from here on, an identical re-submitted
+    /// pipeline (`sharing: auto`) may be served from storage instead of
+    /// re-produced. Journaled *before* the snapshot is offered to any
+    /// client; replayed last-writer-wins per fingerprint (`epoch` is
+    /// monotone), so a restarted dispatcher keeps serving snapshots.
+    SnapshotCommitted { fingerprint: u64, epoch: u64, manifest: SpillManifest },
 }
 
 impl Encode for JournalRecord {
@@ -73,6 +86,7 @@ impl Encode for JournalRecord {
                 num_consumers,
                 sharing,
                 worker_order,
+                snapshot,
             } => {
                 w.put_u8(1);
                 w.put_u64(*job_id);
@@ -83,6 +97,7 @@ impl Encode for JournalRecord {
                 w.put_u32(*num_consumers);
                 sharing.encode(w);
                 worker_order.encode(w);
+                snapshot.encode(w);
             }
             JournalRecord::RegisterWorker { worker_id, addr } => {
                 w.put_u8(2);
@@ -115,6 +130,12 @@ impl Encode for JournalRecord {
                 w.put_u64(*barrier_round);
                 w.put_u32(*num_consumers);
             }
+            JournalRecord::SnapshotCommitted { fingerprint, epoch, manifest } => {
+                w.put_u8(8);
+                w.put_u64(*fingerprint);
+                w.put_u64(*epoch);
+                manifest.encode(w);
+            }
         }
     }
 }
@@ -132,6 +153,7 @@ impl Decode for JournalRecord {
                 num_consumers: r.get_u32()?,
                 sharing: SharingMode::decode(r)?,
                 worker_order: Vec::<u64>::decode(r)?,
+                snapshot: bool::decode(r)?,
             },
             2 => JournalRecord::RegisterWorker { worker_id: r.get_u64()?, addr: String::decode(r)? },
             3 => JournalRecord::ClientJoined { job_id: r.get_u64()?, client_id: r.get_u64()? },
@@ -146,6 +168,11 @@ impl Decode for JournalRecord {
                 epoch: r.get_u32()?,
                 barrier_round: r.get_u64()?,
                 num_consumers: r.get_u32()?,
+            },
+            8 => JournalRecord::SnapshotCommitted {
+                fingerprint: r.get_u64()?,
+                epoch: r.get_u64()?,
+                manifest: SpillManifest::decode(r)?,
             },
             tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
         })
@@ -257,6 +284,7 @@ mod tests {
                 num_consumers: 0,
                 sharing: SharingMode::Auto,
                 worker_order: vec![5, 9],
+                snapshot: false,
             },
             JournalRecord::RegisterWorker { worker_id: 5, addr: "127.0.0.1:4000".into() },
             JournalRecord::ClientJoined { job_id: 1, client_id: 2 },
@@ -267,6 +295,25 @@ mod tests {
                 epoch: 1,
                 barrier_round: 12,
                 num_consumers: 3,
+            },
+            JournalRecord::SnapshotCommitted {
+                fingerprint: 11,
+                epoch: 0,
+                manifest: crate::service::spill::SpillManifest {
+                    fingerprint: 11,
+                    job_id: 1,
+                    epoch: 0,
+                    total_elements: 4,
+                    complete: true,
+                    segments: vec![crate::service::spill::SegmentMeta {
+                        key: "spill/job-1/data".into(),
+                        offset: 0,
+                        len: 32,
+                        start_seq: 0,
+                        num_elements: 4,
+                        crc32: 0xdead_beef,
+                    }],
+                },
             },
             JournalRecord::JobFinished { job_id: 1 },
         ]

@@ -255,10 +255,72 @@
 //!   relaxed-visitation escape hatch) rather than stalling production;
 //!   skips and shared productions are counted
 //!   (`worker/relaxed_visitation_skips`, `worker/shared_elements_served`).
+//! ## Spill tier & snapshots
+//!
+//! The sliding window is RAM-only in the paper; the [`spill`] subsystem
+//! extends it with a storage-backed tier so eviction becomes tiering
+//! instead of discard, and a completed epoch becomes a reusable
+//! **fingerprint-keyed snapshot**. See [`spill`] for the on-store layout
+//! (one append-only data object + one manifest object per job).
+//!
+//! **State machine (per independent-mode job with spill enabled):**
+//!
+//! * *live* — production fills the RAM window; elements evicted by the
+//!   capacity/byte trim are offered to the job's [`spill::JobSpill`]
+//!   (`policy: wanted` spills only ranges some registered cursor still
+//!   needs; `policy: all` spills everything, enabling snapshots).
+//! * *spilling* — evicted elements accumulate in a pending buffer and
+//!   flush as CRC-checked segments; the per-job manifest is re-persisted
+//!   after every flush, so the flushed prefix is durable ("committed
+//!   prefix") and a replacement worker adopts it
+//!   ([`spill::JobSpill::adopt_existing`]) instead of losing it.
+//! * *snapshot-committed* — at end-of-sequence the worker finalizes its
+//!   manifest (tail flush + `complete` flag) and reports it on
+//!   heartbeats until acknowledged; once **every** worker in the job's
+//!   `worker_order` has reported a complete manifest, the dispatcher
+//!   merges them (worker order, renumbered into one sequence space),
+//!   journals `SnapshotCommitted {fingerprint, epoch, manifest}`, and
+//!   from then on a re-submitted identical pipeline (`sharing: auto`,
+//!   same fingerprint) is created in **snapshot-serve** mode: each
+//!   worker streams its round-robin slice of the snapshot's segments
+//!   from the store (paying [`crate::storage::NetModel`] read costs
+//!   when remote) instead of running the pipeline —
+//!   `worker/elements_produced` stays ~0 for the second job.
+//!
+//! **Fallback matrix (always serve, degrade in cost then in
+//! visitation):**
+//!
+//! | condition | behavior |
+//! |---|---|
+//! | cursor inside RAM window | serve from RAM (unchanged fast path) |
+//! | cursor behind window, range spilled | replay from spill (`worker/spill_elements_served`), hand back to RAM at the window edge |
+//! | cursor behind window, range not spilled | relaxed-visitation skip (the pre-spill behavior; counted) |
+//! | snapshot segment reads clean | stream from store (`worker/snapshot_elements_streamed`) |
+//! | snapshot segment missing/corrupt | CRC/read failure → live-production fallback for the remainder (`worker/snapshot_fallbacks`), skipping the already-streamed prefix |
+//!
+//! **Visitation contract:** spill `off` keeps the paper's relaxed
+//! visitation exactly (late attachers skip the evicted prefix). Spill
+//! `all` upgrades a late attacher to full-epoch replay — zero skips —
+//! because every evicted element is readable from the tier; spill
+//! `wanted` guarantees no *registered* cursor ever skips (its wanted
+//! ranges are always spilled) but late attachers still skip the prefix
+//! from before they registered. Exactly-once per cursor holds across
+//! RAM→spill→RAM hand-backs: the cursor advances only as elements are
+//! delivered, from whichever tier holds them.
+//!
+//! Accepted relaxations: spill *writes* are not charged network cost
+//! (the paper's cost model prices reads; writes happen off the serve
+//! path), snapshot fallback assumes deterministic re-production order
+//! (true for all in-tree sources), and snapshot commit requires every
+//! `worker_order` worker to report — a worker that dies *after* EOS but
+//! *before* its manifest is acked simply means no snapshot for that
+//! epoch (the next identical job re-produces and retries the commit).
+//!
 //! * [`sharding`] — OFF / DYNAMIC / STATIC source-data sharding (§3.3).
 //! * [`journal`] — dispatcher write-ahead journal + replay (§3.4).
 //! * [`visitation`] — data-visitation-guarantee trackers used by tests
 //!   (exactly-once / at-most-once / zero-once-or-more).
+//! * [`spill`] — the storage-backed window tier + snapshot manifests.
 //! * [`proto`] — the RPC schema all of the above speak.
 
 pub mod client;
@@ -266,6 +328,7 @@ pub mod dispatcher;
 pub mod journal;
 pub mod proto;
 pub mod sharding;
+pub mod spill;
 pub mod visitation;
 pub mod worker;
 

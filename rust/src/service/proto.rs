@@ -5,6 +5,7 @@
 //! distribution, and the client-facing `GetElement`.
 
 use crate::data::graph::GraphDef;
+use crate::service::spill::SpillManifest;
 use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
 use crate::wire_struct;
 
@@ -263,8 +264,12 @@ pub struct GetOrCreateJobResp {
     /// True when the client was attached to an already-live job (named or
     /// fingerprint-matched) instead of creating a new production.
     pub attached: bool,
+    /// True when the job serves a committed fingerprint-keyed snapshot
+    /// from storage instead of running the pipeline (spill tier): the
+    /// stream's cost is store reads, not preprocessing CPU.
+    pub snapshot: bool,
 }
-wire_struct!(GetOrCreateJobResp { job_id, client_id, attached });
+wire_struct!(GetOrCreateJobResp { job_id, client_id, attached, snapshot });
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClientHeartbeatReq {
@@ -367,8 +372,14 @@ pub struct WorkerHeartbeatReq {
     pub active_tasks: Vec<u64>,
     /// Mean CPU utilization since last heartbeat, [0, 1] (autoscaler input).
     pub cpu_util_milli: u32,
+    /// Complete per-job spill manifests not yet acknowledged by the
+    /// dispatcher (spill tier): reported when a task with spill enabled
+    /// reaches end-of-sequence with its tail flushed, and re-reported
+    /// every heartbeat until an ack arrives, so a dispatcher restart
+    /// between report and commit cannot lose an epoch's snapshot.
+    pub spill_manifests: Vec<SpillManifest>,
 }
-wire_struct!(WorkerHeartbeatReq { worker_id, active_tasks, cpu_util_milli });
+wire_struct!(WorkerHeartbeatReq { worker_id, active_tasks, cpu_util_milli, spill_manifests });
 
 /// One consumer joining or leaving a job's shared stream, pushed to
 /// workers on their next heartbeat so the multi-consumer cache registers
@@ -465,6 +476,10 @@ pub struct WorkerHeartbeatResp {
     /// by a heartbeat from a confirmed-alive worker; application is
     /// idempotent (see [`ConsumerSetUpdate`]).
     pub width_updates: Vec<ConsumerSetUpdate>,
+    /// Job ids whose reported spill manifests the dispatcher has durably
+    /// recorded (journaled into a snapshot, or discarded for a job it no
+    /// longer tracks): the worker stops re-reporting them.
+    pub manifest_acks: Vec<u64>,
 }
 wire_struct!(WorkerHeartbeatResp {
     new_tasks,
@@ -472,7 +487,8 @@ wire_struct!(WorkerHeartbeatResp {
     attached_clients,
     released_clients,
     round_assignments,
-    width_updates
+    width_updates,
+    manifest_acks
 });
 
 /// A data-processing task: one job's pipeline on one worker.
@@ -520,6 +536,12 @@ pub struct TaskDef {
     /// dictates; later width changes arrive as
     /// [`ConsumerSetUpdate`]s on heartbeats.
     pub width_epochs: Vec<WidthEpoch>,
+    /// Snapshot-serve mode (spill tier): this worker's slice of a
+    /// committed fingerprint-keyed snapshot. When present, the worker
+    /// streams the listed segments from storage instead of running
+    /// `graph` (falling back to live production only on a missing or
+    /// corrupt segment); `None` = normal production.
+    pub snapshot_manifest: Option<SpillManifest>,
 }
 wire_struct!(TaskDef {
     job_id,
@@ -535,7 +557,8 @@ wire_struct!(TaskDef {
     owned_residues,
     start_round,
     has_lease_view,
-    width_epochs
+    width_epochs,
+    snapshot_manifest
 });
 
 #[derive(Debug, Clone, PartialEq)]
@@ -861,6 +884,14 @@ pub struct WorkerStatusResp {
     /// Per-job sliding-window occupancy (elements + bytes) for the
     /// currently-live independent-mode tasks.
     pub window_stats: Vec<JobWindowStat>,
+    /// Spill tier: segments flushed to the store by this worker.
+    pub spill_segments_written: u64,
+    /// Spill tier: elements served to a consumer from spilled segments
+    /// (the RAM → spill fallback) instead of being skipped.
+    pub spill_elements_served: u64,
+    /// Snapshot-serve tasks started (re-submitted pipelines streamed
+    /// from a committed snapshot instead of re-produced).
+    pub snapshot_serves: u64,
 }
 wire_struct!(WorkerStatusResp {
     active_tasks,
@@ -870,7 +901,10 @@ wire_struct!(WorkerStatusResp {
     cache_evictions,
     shared_elements_served,
     relaxed_skips,
-    window_stats
+    window_stats,
+    spill_segments_written,
+    spill_elements_served,
+    snapshot_serves
 });
 
 #[cfg(test)]
@@ -911,7 +945,8 @@ mod tests {
             num_consumers: 4,
             sharing: SharingMode::Auto,
         });
-        rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true });
+        rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true, snapshot: false });
+        rt(GetOrCreateJobResp { job_id: 4, client_id: 9, attached: false, snapshot: true });
         rt(ClientHeartbeatReq { job_id: 3, client_id: 8, next_round: 42, consumer_index: 1 });
         rt(ClientHeartbeatResp {
             worker_addrs: vec!["127.0.0.1:1234".into()],
@@ -940,9 +975,36 @@ mod tests {
                 start_round: 21,
                 has_lease_view: true,
                 width_epochs: vec![WidthEpoch { epoch: 0, barrier_round: 0, num_consumers: 2 }],
+                snapshot_manifest: Some(SpillManifest {
+                    fingerprint: 9,
+                    job_id: 3,
+                    epoch: 1,
+                    total_elements: 6,
+                    complete: true,
+                    segments: vec![crate::service::spill::SegmentMeta {
+                        key: "spill/job-3/data".into(),
+                        offset: 64,
+                        len: 48,
+                        start_seq: 0,
+                        num_elements: 6,
+                        crc32: 0x0102_0304,
+                    }],
+                }),
             }],
         });
-        rt(WorkerHeartbeatReq { worker_id: 2, active_tasks: vec![3], cpu_util_milli: 700 });
+        rt(WorkerHeartbeatReq {
+            worker_id: 2,
+            active_tasks: vec![3],
+            cpu_util_milli: 700,
+            spill_manifests: vec![SpillManifest {
+                fingerprint: 9,
+                job_id: 3,
+                epoch: 0,
+                total_elements: 0,
+                complete: true,
+                segments: vec![],
+            }],
+        });
         rt(WorkerHeartbeatResp {
             new_tasks: vec![],
             removed_tasks: vec![3],
@@ -960,6 +1022,7 @@ mod tests {
                     WidthEpoch { epoch: 1, barrier_round: 9, num_consumers: 3 },
                 ],
             }],
+            manifest_acks: vec![3],
         });
         rt(SetJobConsumersReq { job_id: 3, num_consumers: 3 });
         rt(SetJobConsumersResp { epoch: 1, barrier_round: 9 });
@@ -1003,6 +1066,9 @@ mod tests {
             shared_elements_served: 60,
             relaxed_skips: 3,
             window_stats: vec![JobWindowStat { job_id: 1, elements: 5, bytes: 4096 }],
+            spill_segments_written: 4,
+            spill_elements_served: 9,
+            snapshot_serves: 1,
         });
     }
 

@@ -1,0 +1,833 @@
+//! Spill-to-store sharing tier (§3.5 window × §4.2 cross-region store).
+//!
+//! The RAM sharing window ([`super::worker`]'s `SlidingCache`) is the
+//! paper's ephemeral cache: once an element is evicted it is gone, so a
+//! laggard or late fingerprint attacher can only *skip* (relaxed
+//! visitation). This module makes eviction a tiering decision instead of
+//! a discard: evicted-but-wanted elements are appended as encoded
+//! **segments** to [`ObjectStore`] under a per-job key prefix, described
+//! by a [`SpillManifest`] (fingerprint, epoch, per-segment sequence
+//! range + CRC-32). The worker serve path then falls back
+//! RAM → spill → skip, and a completed epoch's manifest doubles as a
+//! **fingerprint-keyed snapshot** the dispatcher can hand to a
+//! re-submitted identical pipeline, which streams the stored segments
+//! (paying [`crate::storage::NetModel`] read costs when the store is
+//! remote) instead of re-running the pipeline.
+//!
+//! Layout in the store, one data object + one manifest object per job:
+//!
+//! ```text
+//! spill/job-{id}/data       append-only; concatenated segment bodies
+//! spill/job-{id}/manifest   SpillManifest, rewritten after every flush
+//! ```
+//!
+//! A segment body is `u32 element-count` followed by that many
+//! length-prefixed encoded elements; its manifest entry records the
+//! `(offset, len)` range inside the data object, the first sequence
+//! number, and a CRC-32 over the body. Because the manifest is persisted
+//! after every segment flush, a worker crash loses at most the unflushed
+//! pending buffer — the flushed prefix stays readable by a replacement
+//! worker ([`JobSpill::adopt_existing`]) and, after the dispatcher
+//! merges per-worker manifests, by snapshot readers.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{Counter, Registry};
+use crate::storage::{ObjectStore, Region, StorageError, StorageResult};
+use crate::util::crc32::Hasher;
+use crate::wire::{Decode, Encode, Reader, Writer};
+use crate::wire_struct;
+
+/// What the window does with an element it evicts from RAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// No spill tier; eviction discards (the pre-spill behavior).
+    Off,
+    /// Spill only elements some registered cursor has not yet consumed,
+    /// i.e. a laggard's un-replayed range. Cheapest; no snapshots.
+    Wanted,
+    /// Spill every produced element, so a late attacher can replay the
+    /// full epoch and a completed epoch can be committed as a
+    /// fingerprint-keyed snapshot.
+    All,
+}
+
+/// Worker-side spill configuration (carried on `WorkerConfig`).
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    pub policy: SpillPolicy,
+    /// Flush threshold: pending evicted bytes before a segment is cut.
+    pub segment_bytes: usize,
+}
+
+impl Default for SpillConfig {
+    fn default() -> SpillConfig {
+        SpillConfig { policy: SpillPolicy::Off, segment_bytes: 256 << 10 }
+    }
+}
+
+/// One flushed segment: a contiguous run of elements inside the per-job
+/// data object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentMeta {
+    /// Data object this segment lives in (`spill/job-{id}/data`).
+    pub key: String,
+    /// Byte offset of the segment body inside the data object.
+    pub offset: u64,
+    /// Byte length of the segment body.
+    pub len: u64,
+    /// Sequence number of the first element in the segment.
+    pub start_seq: u64,
+    /// Number of elements in the segment (contiguous from `start_seq`).
+    pub num_elements: u32,
+    /// CRC-32 over the segment body; verified on every read.
+    pub crc32: u32,
+}
+
+wire_struct!(SegmentMeta { key, offset, len, start_seq, num_elements, crc32 });
+
+/// The durable description of a job's spilled output. Per-worker while
+/// the job runs; the dispatcher merges worker manifests into one
+/// fingerprint-keyed snapshot manifest at epoch completion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillManifest {
+    /// Structural pipeline fingerprint (= dataset id) the data was
+    /// produced from; the snapshot lookup key.
+    pub fingerprint: u64,
+    /// Producing job (worker manifests) or 0-padded merge parent.
+    pub job_id: u64,
+    /// Snapshot epoch: bumped by the dispatcher each time the same
+    /// fingerprint commits again.
+    pub epoch: u64,
+    /// Total elements across all segments.
+    pub total_elements: u64,
+    /// True once the producing stream reached EOS and the tail was
+    /// flushed; only complete manifests are merged into snapshots.
+    pub complete: bool,
+    pub segments: Vec<SegmentMeta>,
+}
+
+wire_struct!(SpillManifest { fingerprint, job_id, epoch, total_elements, complete, segments });
+
+impl SpillManifest {
+    /// Sequence number one past the last spilled element (0 when empty).
+    pub fn end_seq(&self) -> u64 {
+        self.segments
+            .last()
+            .map(|s| s.start_seq + s.num_elements as u64)
+            .unwrap_or(0)
+    }
+}
+
+/// Result of a spill-tier range read (see [`JobSpill::read_range`]).
+#[derive(Debug)]
+pub enum SpillRead {
+    /// Elements decoded from spill. `next` is the cursor after the
+    /// batch; `skipped` counts sequence numbers inside the requested
+    /// range that are not in the tier (never written under
+    /// [`SpillPolicy::Wanted`], or lost to a failed segment read) and
+    /// were jumped over.
+    Batch { batch: Vec<Arc<Vec<u8>>>, next: u64, skipped: u64 },
+    /// The element at `seq` alone exceeds the session's hard frame cap
+    /// and must go through the chunked path.
+    Oversized { bytes: Arc<Vec<u8>>, seq: u64, skipped: u64 },
+}
+
+#[derive(Default)]
+struct SpillInner {
+    /// Evicted elements not yet flushed as a segment.
+    pending: Vec<Arc<Vec<u8>>>,
+    /// Sequence number of `pending[0]` (meaningless when empty).
+    pending_start: u64,
+    pending_bytes: usize,
+    /// Flushed segments, ordered by `start_seq` (strictly increasing,
+    /// possibly with gaps under [`SpillPolicy::Wanted`]).
+    segments: Vec<SegmentMeta>,
+    total_elements: u64,
+    epoch: u64,
+    complete: bool,
+    /// Decoded elements of the most recently read segment, so a batch
+    /// replay does one store read per segment, not per element. An
+    /// empty Vec marks a segment whose read failed (a real segment is
+    /// never empty), so corrupt segments are not re-fetched per element.
+    read_cache: Option<(usize, Vec<Arc<Vec<u8>>>)>,
+}
+
+/// Per-job spill state: the write path (eviction → pending → segment)
+/// and the read path (sequence → segment → decoded element).
+pub struct JobSpill {
+    store: Arc<ObjectStore>,
+    region: Region,
+    pub policy: SpillPolicy,
+    segment_bytes: usize,
+    job_id: u64,
+    fingerprint: u64,
+    data_key: String,
+    manifest_key: String,
+    state: Mutex<SpillInner>,
+    /// Set once the dispatcher acknowledged this job's complete
+    /// manifest, stopping heartbeat re-reports.
+    pub acked: AtomicBool,
+    segments_ctr: Arc<Counter>,
+    elements_ctr: Arc<Counter>,
+    read_failures_ctr: Arc<Counter>,
+}
+
+impl JobSpill {
+    pub fn new(
+        store: Arc<ObjectStore>,
+        region: Region,
+        cfg: &SpillConfig,
+        job_id: u64,
+        fingerprint: u64,
+        metrics: &Registry,
+    ) -> Arc<JobSpill> {
+        Arc::new(JobSpill {
+            store,
+            region,
+            policy: cfg.policy,
+            segment_bytes: cfg.segment_bytes.max(1),
+            job_id,
+            fingerprint,
+            data_key: data_key(job_id),
+            manifest_key: manifest_key(job_id),
+            state: Mutex::new(SpillInner::default()),
+            acked: AtomicBool::new(false),
+            segments_ctr: metrics.counter("worker/spill_segments_written"),
+            elements_ctr: metrics.counter("worker/spill_elements_written"),
+            read_failures_ctr: metrics.counter("worker/spill_segment_read_failures"),
+        })
+    }
+
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Offer an evicted element to the tier. Sequence numbers at or
+    /// past the current spill end are buffered (a gap closes the open
+    /// segment first, keeping every segment seq-contiguous); numbers
+    /// below it are already durable — a replacement worker re-producing
+    /// an adopted prefix deterministically just skips them.
+    pub fn offer(&self, seq: u64, bytes: Arc<Vec<u8>>) {
+        let mut st = self.state.lock().unwrap();
+        if st.complete || seq < end_of(&st) {
+            return;
+        }
+        if !st.pending.is_empty() && seq != st.pending_start + st.pending.len() as u64 {
+            self.flush_locked(&mut st);
+        }
+        if st.pending.is_empty() {
+            st.pending_start = seq;
+        }
+        st.pending_bytes += bytes.len();
+        st.pending.push(bytes);
+        if st.pending_bytes >= self.segment_bytes {
+            self.flush_locked(&mut st);
+        }
+    }
+
+    fn flush_locked(&self, st: &mut SpillInner) {
+        if st.pending.is_empty() {
+            return;
+        }
+        let mut w = Writer::new();
+        w.put_u32(st.pending.len() as u32);
+        for e in &st.pending {
+            w.put_bytes(e);
+        }
+        let body = w.into_bytes();
+        let mut h = Hasher::new();
+        h.update(&body);
+        let crc32 = h.finalize();
+        let offset = self.store.append(&self.data_key, &body);
+        st.segments.push(SegmentMeta {
+            key: self.data_key.clone(),
+            offset,
+            len: body.len() as u64,
+            start_seq: st.pending_start,
+            num_elements: st.pending.len() as u32,
+            crc32,
+        });
+        st.total_elements += st.pending.len() as u64;
+        self.segments_ctr.inc();
+        self.elements_ctr.add(st.pending.len() as u64);
+        st.pending.clear();
+        st.pending_bytes = 0;
+        // Committed prefix: persist the manifest after every segment so
+        // a crash loses only the pending buffer.
+        self.store.put(&self.manifest_key, self.manifest_locked(st).to_bytes());
+    }
+
+    fn manifest_locked(&self, st: &SpillInner) -> SpillManifest {
+        SpillManifest {
+            fingerprint: self.fingerprint,
+            job_id: self.job_id,
+            epoch: st.epoch,
+            total_elements: st.total_elements,
+            complete: st.complete,
+            segments: st.segments.clone(),
+        }
+    }
+
+    /// Current manifest (flushed segments only).
+    pub fn manifest(&self) -> SpillManifest {
+        self.manifest_locked(&self.state.lock().unwrap())
+    }
+
+    /// Close the stream: flush the pending tail and persist the
+    /// manifest as complete. Idempotent.
+    pub fn finalize(&self) -> SpillManifest {
+        let mut st = self.state.lock().unwrap();
+        if !st.complete {
+            self.flush_locked(&mut st);
+            st.complete = true;
+            let m = self.manifest_locked(&st);
+            self.store.put(&self.manifest_key, m.to_bytes());
+            return m;
+        }
+        self.manifest_locked(&st)
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.state.lock().unwrap().complete
+    }
+
+    /// Lowest spilled sequence number, if any.
+    pub fn floor(&self) -> Option<u64> {
+        let st = self.state.lock().unwrap();
+        st.segments
+            .first()
+            .map(|s| s.start_seq)
+            .or_else(|| (!st.pending.is_empty()).then_some(st.pending_start))
+    }
+
+    /// Whether `seq` falls inside the tier's spilled span. A `true`
+    /// answer is a *maybe* under [`SpillPolicy::Wanted`] (gaps), which
+    /// `read_range` reports as skips.
+    pub fn may_cover(&self, seq: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        let lo = st
+            .segments
+            .first()
+            .map(|s| s.start_seq)
+            .or_else(|| (!st.pending.is_empty()).then_some(st.pending_start));
+        match lo {
+            Some(lo) => seq >= lo && seq < end_of(&st),
+            None => false,
+        }
+    }
+
+    /// Adopt a predecessor's committed prefix: a replacement worker for
+    /// the same job reads the persisted manifest so the flushed
+    /// segments survive the crash. Its own (deterministic) reproduction
+    /// then re-offers sequence numbers below the adopted end, which
+    /// `offer` skips. Returns the number of adopted segments.
+    pub fn adopt_existing(&self) -> usize {
+        let Ok(bytes) = self.store.get_from(&self.region, &self.manifest_key) else {
+            return 0;
+        };
+        let Ok(m) = SpillManifest::from_bytes(&bytes) else {
+            return 0;
+        };
+        let mut st = self.state.lock().unwrap();
+        if !st.segments.is_empty() || !st.pending.is_empty() {
+            return 0;
+        }
+        let n = m.segments.len();
+        st.segments = m.segments;
+        st.total_elements = m.total_elements;
+        st.epoch = m.epoch;
+        st.complete = m.complete;
+        n
+    }
+
+    /// Replay `[from, to)` from the tier, honoring the serve path's
+    /// byte budget (`max_bytes`) and per-frame hard cap. Always makes
+    /// progress when `from < to`: either ≥ 1 element is returned, an
+    /// oversized element is surfaced for the chunked path, or ≥ 1
+    /// missing sequence number is skipped.
+    pub fn read_range(&self, from: u64, to: u64, max_bytes: usize, hard_cap: usize) -> SpillRead {
+        let mut batch: Vec<Arc<Vec<u8>>> = Vec::new();
+        let mut bytes_out = 0usize;
+        let mut skipped = 0u64;
+        let mut seq = from;
+        while seq < to {
+            match self.element_at(seq) {
+                Some(e) => {
+                    if e.len() > hard_cap && batch.is_empty() {
+                        return SpillRead::Oversized { bytes: e, seq, skipped };
+                    }
+                    if !batch.is_empty() && (e.len() > hard_cap || bytes_out + e.len() > max_bytes)
+                    {
+                        break;
+                    }
+                    bytes_out += e.len();
+                    batch.push(e);
+                    seq += 1;
+                }
+                None => {
+                    if !batch.is_empty() {
+                        // Deliver what we have; the gap is the next
+                        // call's first (empty-batch) step.
+                        break;
+                    }
+                    skipped += 1;
+                    seq += 1;
+                }
+            }
+        }
+        SpillRead::Batch { batch, next: seq, skipped }
+    }
+
+    fn element_at(&self, seq: u64) -> Option<Arc<Vec<u8>>> {
+        let mut st = self.state.lock().unwrap();
+        if !st.pending.is_empty() && seq >= st.pending_start {
+            return st.pending.get((seq - st.pending_start) as usize).cloned();
+        }
+        let idx = st
+            .segments
+            .binary_search_by(|s| {
+                if seq < s.start_seq {
+                    std::cmp::Ordering::Greater
+                } else if seq >= s.start_seq + s.num_elements as u64 {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .ok()?;
+        if st.read_cache.as_ref().map(|(i, _)| *i != idx).unwrap_or(true) {
+            let seg = st.segments[idx].clone();
+            let elems = match read_segment(&self.store, &self.region, &seg) {
+                Ok(v) => v,
+                Err(_) => {
+                    self.read_failures_ctr.inc();
+                    Vec::new()
+                }
+            };
+            st.read_cache = Some((idx, elems));
+        }
+        let (_, elems) = st.read_cache.as_ref().unwrap();
+        let off = (seq - st.segments[idx].start_seq) as usize;
+        elems.get(off).cloned()
+    }
+}
+
+fn end_of(st: &SpillInner) -> u64 {
+    let seg_end = st
+        .segments
+        .last()
+        .map(|s| s.start_seq + s.num_elements as u64)
+        .unwrap_or(0);
+    let pend_end = if st.pending.is_empty() {
+        0
+    } else {
+        st.pending_start + st.pending.len() as u64
+    };
+    seg_end.max(pend_end)
+}
+
+/// Store key of a job's append-only segment data object.
+pub fn data_key(job_id: u64) -> String {
+    format!("spill/job-{job_id}/data")
+}
+
+/// Store key of a job's manifest object.
+pub fn manifest_key(job_id: u64) -> String {
+    format!("spill/job-{job_id}/manifest")
+}
+
+/// Read one segment's byte range and decode its elements, verifying
+/// the manifest CRC before trusting the bytes. Shared by the laggard
+/// replay path and the snapshot streamer.
+pub fn read_segment(
+    store: &ObjectStore,
+    reader_region: &Region,
+    seg: &SegmentMeta,
+) -> StorageResult<Vec<Arc<Vec<u8>>>> {
+    let body = store.read_range_from(reader_region, &seg.key, seg.offset, seg.len)?;
+    let mut h = Hasher::new();
+    h.update(&body);
+    let crc = h.finalize();
+    if crc != seg.crc32 {
+        return Err(StorageError::Corrupt(format!(
+            "segment {}@{}+{}: crc {crc:#010x} != manifest {:#010x}",
+            seg.key, seg.offset, seg.len, seg.crc32
+        )));
+    }
+    let mut r = Reader::new(&body);
+    let n = r
+        .get_u32()
+        .map_err(|e| StorageError::Corrupt(format!("segment header: {e}")))?
+        as usize;
+    if n != seg.num_elements as usize {
+        return Err(StorageError::Corrupt(format!(
+            "segment {}@{}: {n} elements != manifest {}",
+            seg.key, seg.offset, seg.num_elements
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Arc::new(
+            r.get_bytes()
+                .map_err(|e| StorageError::Corrupt(format!("segment element: {e}")))?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Merge complete per-worker manifests into one snapshot manifest.
+/// Segments are concatenated in the given (worker-order) sequence and
+/// renumbered into one contiguous snapshot sequence space — the
+/// snapshot's element order interleaves workers in worker order, which
+/// is a valid (deterministic) epoch order for an unordered dataset.
+pub fn merge_manifests(
+    fingerprint: u64,
+    job_id: u64,
+    epoch: u64,
+    parts: &[SpillManifest],
+) -> SpillManifest {
+    let mut segments = Vec::new();
+    let mut next_seq = 0u64;
+    for part in parts {
+        for seg in &part.segments {
+            let mut seg = seg.clone();
+            seg.start_seq = next_seq;
+            next_seq += seg.num_elements as u64;
+            segments.push(seg);
+        }
+    }
+    SpillManifest {
+        fingerprint,
+        job_id,
+        epoch,
+        total_elements: next_seq,
+        complete: true,
+        segments,
+    }
+}
+
+/// The slice of a snapshot manifest one worker serves: segments are
+/// striped round-robin (`i % num_workers == worker_index`) and
+/// renumbered contiguously so the worker's stream is dense from 0. A
+/// worker index past `num_workers` (late registration) gets an empty
+/// manifest and serves immediate EOS — no duplicated segments.
+pub fn partition_manifest(
+    m: &SpillManifest,
+    worker_index: usize,
+    num_workers: usize,
+) -> SpillManifest {
+    let nw = num_workers.max(1);
+    let mut segments = Vec::new();
+    let mut next_seq = 0u64;
+    if worker_index < nw {
+        for (i, seg) in m.segments.iter().enumerate() {
+            if i % nw == worker_index {
+                let mut seg = seg.clone();
+                seg.start_seq = next_seq;
+                next_seq += seg.num_elements as u64;
+                segments.push(seg);
+            }
+        }
+    }
+    SpillManifest {
+        fingerprint: m.fingerprint,
+        job_id: m.job_id,
+        epoch: m.epoch,
+        total_elements: next_seq,
+        complete: true,
+        segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::NetModel;
+
+    fn elem(tag: u8, len: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![tag; len])
+    }
+
+    fn spill_with(policy: SpillPolicy, segment_bytes: usize) -> (Arc<ObjectStore>, Arc<JobSpill>) {
+        let store = ObjectStore::in_memory();
+        let cfg = SpillConfig { policy, segment_bytes };
+        let spill = JobSpill::new(
+            store.clone(),
+            store.region().clone(),
+            &cfg,
+            7,
+            0xfeed,
+            &Registry::new(),
+        );
+        (store, spill)
+    }
+
+    #[test]
+    fn offer_flush_read_roundtrip() {
+        let (_store, sp) = spill_with(SpillPolicy::All, 8);
+        for i in 0..10u64 {
+            sp.offer(i, elem(i as u8, 4));
+        }
+        let m = sp.finalize();
+        assert!(m.complete);
+        assert_eq!(m.total_elements, 10);
+        assert_eq!(m.end_seq(), 10);
+        assert!(m.segments.len() >= 2, "8-byte budget must cut segments");
+        match sp.read_range(0, 10, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                assert_eq!(next, 10);
+                assert_eq!(skipped, 0);
+                assert_eq!(batch.len(), 10);
+                for (i, b) in batch.iter().enumerate() {
+                    assert_eq!(**b, vec![i as u8; 4]);
+                }
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pending_tail_served_before_flush() {
+        let (_store, sp) = spill_with(SpillPolicy::All, 1 << 20);
+        sp.offer(3, elem(3, 4));
+        sp.offer(4, elem(4, 4));
+        assert_eq!(sp.floor(), Some(3));
+        assert!(sp.may_cover(4));
+        assert!(!sp.may_cover(5));
+        match sp.read_range(3, 5, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                assert_eq!((batch.len(), next, skipped), (2, 5, 0));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gap_closes_segment_and_reads_skip() {
+        let (_store, sp) = spill_with(SpillPolicy::Wanted, 1 << 20);
+        sp.offer(0, elem(0, 4));
+        sp.offer(1, elem(1, 4));
+        sp.offer(5, elem(5, 4)); // gap: 2..5 never spilled
+        sp.finalize();
+        let m = sp.manifest();
+        assert_eq!(m.segments.len(), 2);
+        assert_eq!(m.segments[1].start_seq, 5);
+        match sp.read_range(0, 6, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                assert_eq!((batch.len(), next, skipped), (2, 2, 0));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        // Next call starts at the gap: skips 2..5, serves 5.
+        match sp.read_range(2, 6, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                assert_eq!((batch.len(), next, skipped), (1, 6, 3));
+                assert_eq!(*batch[0], vec![5; 4]);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_and_stale_offers_ignored() {
+        let (_store, sp) = spill_with(SpillPolicy::All, 1 << 20);
+        sp.offer(0, elem(0, 4));
+        sp.offer(1, elem(1, 4));
+        sp.offer(0, elem(9, 4)); // re-produced prefix after adoption
+        sp.offer(1, elem(9, 4));
+        sp.offer(2, elem(2, 4));
+        let m = sp.finalize();
+        assert_eq!(m.total_elements, 3);
+        match sp.read_range(0, 3, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, .. } => {
+                assert_eq!(*batch[0], vec![0; 4]);
+                assert_eq!(*batch[1], vec![1; 4]);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_element_surfaced() {
+        let (_store, sp) = spill_with(SpillPolicy::All, 1 << 20);
+        sp.offer(0, elem(1, 100));
+        sp.offer(1, elem(2, 4));
+        sp.finalize();
+        match sp.read_range(0, 2, usize::MAX, 10) {
+            SpillRead::Oversized { bytes, seq, skipped } => {
+                assert_eq!((bytes.len(), seq, skipped), (100, 0, 0));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        // Byte budget caps the batch without stalling.
+        match sp.read_range(1, 2, 2, usize::MAX) {
+            SpillRead::Batch { batch, next, .. } => {
+                assert_eq!((batch.len(), next), (1, 2));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn adopt_existing_recovers_committed_prefix() {
+        let store = ObjectStore::in_memory();
+        let cfg = SpillConfig { policy: SpillPolicy::All, segment_bytes: 8 };
+        let reg = Registry::new();
+        let sp =
+            JobSpill::new(store.clone(), store.region().clone(), &cfg, 9, 0xabc, &reg);
+        for i in 0..6u64 {
+            sp.offer(i, elem(i as u8, 4));
+        }
+        // Crash before finalize: flushed segments + manifest survive,
+        // the pending tail (if any) is lost.
+        let committed = sp.manifest();
+        drop(sp);
+        let sp2 =
+            JobSpill::new(store.clone(), store.region().clone(), &cfg, 9, 0xabc, &reg);
+        let adopted = sp2.adopt_existing();
+        assert_eq!(adopted, committed.segments.len());
+        assert!(adopted > 0);
+        assert_eq!(sp2.manifest().total_elements, committed.total_elements);
+        // Deterministic re-production re-offers the prefix: ignored.
+        for i in 0..8u64 {
+            sp2.offer(i, elem(i as u8, 4));
+        }
+        let m = sp2.finalize();
+        assert_eq!(m.total_elements, 8);
+        match sp2.read_range(0, 8, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                assert_eq!((batch.len(), next, skipped), (8, 8, 0));
+                for (i, b) in batch.iter().enumerate() {
+                    assert_eq!(**b, vec![i as u8; 4]);
+                }
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_segment_detected_and_skipped() {
+        let (store, sp) = spill_with(SpillPolicy::All, 8);
+        for i in 0..4u64 {
+            sp.offer(i, elem(i as u8, 4));
+        }
+        let m = sp.finalize();
+        assert!(m.segments.len() >= 2);
+        // Flip a byte inside the first segment's body.
+        let key = data_key(7);
+        let mut data = (*store.get(&key).unwrap()).clone();
+        let victim = &m.segments[0];
+        data[victim.offset as usize + 4] ^= 0xff;
+        store.put(&key, data);
+        let first_len = victim.num_elements as u64;
+        match sp.read_range(0, 4, usize::MAX, usize::MAX) {
+            SpillRead::Batch { batch, next, skipped } => {
+                // The corrupt segment's span is skipped, the rest served.
+                assert_eq!(skipped, first_len);
+                assert_eq!(next as usize, first_len as usize + batch.len());
+                assert!(!batch.is_empty());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(matches!(
+            read_segment(&store, store.region(), victim),
+            Err(StorageError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn manifest_wire_roundtrip() {
+        let m = SpillManifest {
+            fingerprint: 0xdead_beef,
+            job_id: 3,
+            epoch: 2,
+            total_elements: 11,
+            complete: true,
+            segments: vec![SegmentMeta {
+                key: "spill/job-3/data".into(),
+                offset: 128,
+                len: 64,
+                start_seq: 5,
+                num_elements: 11,
+                crc32: 0x1234_5678,
+            }],
+        };
+        let back = SpillManifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn merge_and_partition_are_inverse_in_coverage() {
+        let seg = |start: u64, n: u32| SegmentMeta {
+            key: "k".into(),
+            offset: 0,
+            len: 8,
+            start_seq: start,
+            num_elements: n,
+            crc32: 0,
+        };
+        let a = SpillManifest {
+            fingerprint: 1,
+            job_id: 1,
+            epoch: 0,
+            total_elements: 5,
+            complete: true,
+            segments: vec![seg(0, 2), seg(2, 3)],
+        };
+        let b = SpillManifest {
+            fingerprint: 1,
+            job_id: 1,
+            epoch: 0,
+            total_elements: 4,
+            complete: true,
+            segments: vec![seg(0, 4)],
+        };
+        let merged = merge_manifests(1, 1, 1, &[a, b]);
+        assert_eq!(merged.total_elements, 9);
+        assert_eq!(merged.end_seq(), 9);
+        assert_eq!(merged.epoch, 1);
+        let starts: Vec<u64> = merged.segments.iter().map(|s| s.start_seq).collect();
+        assert_eq!(starts, vec![0, 2, 5]);
+
+        let p0 = partition_manifest(&merged, 0, 2);
+        let p1 = partition_manifest(&merged, 1, 2);
+        let late = partition_manifest(&merged, 2, 2);
+        assert_eq!(
+            p0.total_elements + p1.total_elements,
+            merged.total_elements
+        );
+        assert_eq!(late.total_elements, 0);
+        assert!(late.segments.is_empty());
+        // Each partition is dense from 0.
+        for p in [&p0, &p1] {
+            let mut next = 0u64;
+            for s in &p.segments {
+                assert_eq!(s.start_seq, next);
+                next += s.num_elements as u64;
+            }
+            assert_eq!(next, p.total_elements);
+        }
+    }
+
+    #[test]
+    fn remote_reads_pay_cross_region_cost() {
+        let store = ObjectStore::new(Region::new("us"), NetModel::default());
+        let cfg = SpillConfig { policy: SpillPolicy::All, segment_bytes: 1 << 20 };
+        let sp = JobSpill::new(
+            store.clone(),
+            Region::new("us"),
+            &cfg,
+            1,
+            1,
+            &Registry::new(),
+        );
+        sp.offer(0, elem(1, 64));
+        let m = sp.finalize();
+        let before = store.stats.cross_region_reads.load(std::sync::atomic::Ordering::Relaxed);
+        read_segment(&store, &Region::new("eu"), &m.segments[0]).unwrap();
+        let after = store.stats.cross_region_reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(after - before, 1);
+    }
+}

@@ -24,6 +24,7 @@
 
 use super::proto::*;
 use super::sharding::{DynamicSplitProvider, ShuffledAllSplits};
+use super::spill::{self, JobSpill, SpillConfig, SpillManifest, SpillPolicy, SpillRead};
 use super::{ServiceError, ServiceResult};
 use crate::data::exec::{Executor, ExecutorConfig, SplitProvider};
 use crate::data::udf::UdfRegistry;
@@ -34,7 +35,7 @@ use crate::storage::{ObjectStore, Region};
 use crate::util::chan;
 use crate::wire::{BufPool, Decode, Encode, Writer};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -85,6 +86,13 @@ pub struct WorkerConfig {
     /// logical worker and its round residues re-balance back to it
     /// (§3.6 revival). `None` = the local bind address.
     pub advertise_addr: Option<String>,
+    /// Spill tier (ROADMAP spill-to-store item): what the sliding window
+    /// does with elements it evicts from RAM. `Off` (the default) keeps
+    /// the paper's pure-ephemeral cache; `Wanted` tiers un-replayed
+    /// ranges to the object store so laggards catch up instead of
+    /// skipping; `All` archives the whole stream, enabling full-epoch
+    /// late-attach replay and fingerprint-keyed snapshot commits.
+    pub spill: SpillConfig,
 }
 
 /// GetElements/Fetch defaults applied when a request leaves a knob at 0.
@@ -117,6 +125,7 @@ impl WorkerConfig {
             stream_caps: stream_caps::ALL,
             eager_window_eviction: true,
             advertise_addr: None,
+            spill: SpillConfig::default(),
         }
     }
 }
@@ -148,6 +157,19 @@ struct SlidingCache {
     /// registry tracks live occupancy, not just status-poll snapshots.
     win_elems_gauge: Arc<crate::metrics::Gauge>,
     win_bytes_gauge: Arc<crate::metrics::Gauge>,
+    /// Spill tier under the RAM window (`None` = eviction discards, the
+    /// paper's pure-ephemeral behavior).
+    spill: Option<Arc<JobSpill>>,
+    /// Adaptive byte target the trim loop enforces (≤ `byte_budget`, the
+    /// configured ceiling). It grows — doubling — only when eviction
+    /// would drop an element a registered cursor still wants (cursor
+    /// spread demands window), and decays whenever eager eviction
+    /// empties the window (consumers in lockstep need almost none), so
+    /// steady-state window RAM tracks demand, not the configured max.
+    target_bytes: AtomicUsize,
+    target_gauge: Arc<crate::metrics::Gauge>,
+    /// Elements served out of the spill tier (the RAM → spill fallback).
+    spill_served_ctr: Arc<crate::metrics::Counter>,
 }
 
 struct SlidingCacheState {
@@ -226,6 +248,12 @@ enum BatchServe {
     /// caller cannot chunk: the cursor is NOT advanced, so the condition
     /// is explicit and repeatable instead of a silent skip.
     TooLarge(usize),
+    /// The cursor points below the RAM window and the spill tier may
+    /// cover the range: the caller replays `[from, to)` via
+    /// [`JobSpill::read_range`] *outside* the cache lock (store reads
+    /// are slow) and then commits progress with
+    /// [`SlidingCache::complete_spill`].
+    Spill { from: u64, to: u64 },
 }
 
 impl SlidingCache {
@@ -234,8 +262,16 @@ impl SlidingCache {
         byte_budget: usize,
         eager: bool,
         job_id: u64,
+        spill: Option<Arc<JobSpill>>,
         metrics: &Registry,
     ) -> SlidingCache {
+        let byte_budget = byte_budget.max(1);
+        // The adaptive target starts at a fraction of the ceiling and
+        // earns its way up: a stream whose consumers move in lockstep
+        // never allocates the full configured window.
+        let target = (byte_budget / 16).max(1);
+        let target_gauge = metrics.gauge(&format!("worker/job/{job_id}/window_target_bytes"));
+        target_gauge.set(target as i64);
         SlidingCache {
             state: Mutex::new(SlidingCacheState {
                 window: Default::default(),
@@ -252,13 +288,94 @@ impl SlidingCache {
             }),
             cond: Condvar::new(),
             capacity: capacity.max(1),
-            byte_budget: byte_budget.max(1),
+            byte_budget,
             eager,
             shared_ctr: metrics.counter("worker/shared_elements_served"),
             skip_ctr: metrics.counter("worker/relaxed_visitation_skips"),
             win_elems_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_elements")),
             win_bytes_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_bytes")),
+            spill,
+            target_bytes: AtomicUsize::new(target),
+            target_gauge,
+            spill_served_ctr: metrics.counter("worker/spill_elements_served"),
         }
+    }
+
+    /// Where a fresh cursor anchors. Without spill (or under
+    /// [`SpillPolicy::Wanted`], whose tier only back-fills ranges some
+    /// *existing* cursor missed) that is the oldest RAM-retained element
+    /// — the paper's late-attacher semantics. Under [`SpillPolicy::All`]
+    /// the whole history is replayable, so a late attacher anchors at
+    /// the spill floor and replays the full epoch with zero skips.
+    fn replay_anchor(&self, base: u64) -> u64 {
+        match &self.spill {
+            Some(sp) if sp.policy == SpillPolicy::All => {
+                sp.floor().map(|f| f.min(base)).unwrap_or(base)
+            }
+            _ => base,
+        }
+    }
+
+    /// Tier an evicted element into the spill store per policy: `All`
+    /// archives everything (the snapshot feed), `Wanted` only elements
+    /// some registered cursor has not consumed yet (laggard catch-up).
+    fn spill_evicted(&self, seq: u64, bytes: &Arc<Vec<u8>>, wanted: bool) {
+        let Some(sp) = &self.spill else { return };
+        let keep = match sp.policy {
+            SpillPolicy::Off => false,
+            SpillPolicy::Wanted => wanted,
+            SpillPolicy::All => true,
+        };
+        if keep {
+            sp.offer(seq, bytes.clone());
+        }
+    }
+
+    fn spill(&self) -> Option<&Arc<JobSpill>> {
+        self.spill.as_ref()
+    }
+
+    fn is_eos(&self) -> bool {
+        self.state.lock().unwrap().eos
+    }
+
+    /// Archive the retained RAM tail into the spill tier (end-of-epoch
+    /// finalize): elements still in the window were never evicted, so
+    /// the spill object is missing them. [`SpillPolicy::All`] only — a
+    /// `Wanted` spill is a laggard catch-up buffer, not an epoch
+    /// archive. Idempotent: `offer` ignores already-durable sequence
+    /// numbers.
+    fn flush_tail_to_spill(&self) {
+        let Some(sp) = &self.spill else { return };
+        if sp.policy != SpillPolicy::All {
+            return;
+        }
+        let st = self.state.lock().unwrap();
+        for (i, bytes) in st.window.iter().enumerate() {
+            sp.offer(st.base_seq + i as u64, bytes.clone());
+        }
+    }
+
+    /// Commit a spill replay's progress: advance the cursor (forward
+    /// only — a concurrent serve may have moved it further), credit
+    /// served elements to the hit ledger and skipped ones (gaps /
+    /// unreadable segments) to the relaxed-visitation ledger.
+    fn complete_spill(&self, client: u64, upto: u64, served: u64, skipped: u64) {
+        let mut st = self.state.lock().unwrap();
+        if st.removed.contains(&client) {
+            return;
+        }
+        let cur = st.cursors.entry(client).or_insert(upto);
+        if *cur < upto {
+            *cur = upto;
+        }
+        st.hits += served;
+        self.spill_served_ctr.add(served);
+        if skipped > 0 {
+            st.skipped += skipped;
+            self.skip_ctr.add(skipped);
+        }
+        self.trim_consumed(&mut st);
     }
 
     /// Register a consumer's cursor at the oldest retained element. Done
@@ -271,9 +388,9 @@ impl SlidingCache {
         if st.removed.contains(&client) {
             return false;
         }
-        let base = st.base_seq;
+        let anchor = self.replay_anchor(st.base_seq);
         let newly = !st.cursors.contains_key(&client);
-        st.cursors.entry(client).or_insert(base);
+        st.cursors.entry(client).or_insert(anchor);
         newly
     }
 
@@ -306,6 +423,9 @@ impl SlidingCache {
         let mut evicted = false;
         while st.base_seq < min && !st.window.is_empty() {
             let old = st.window.pop_front().expect("non-empty window");
+            // Consumed-by-all, so no cursor wants it — only an `All`
+            // spill (epoch archive) keeps it.
+            self.spill_evicted(st.base_seq, &old, false);
             st.window_bytes -= old.len();
             st.base_seq += 1;
             st.evictions += 1;
@@ -314,6 +434,18 @@ impl SlidingCache {
         if evicted {
             self.win_elems_gauge.set(st.window.len() as i64);
             self.win_bytes_gauge.set(st.window_bytes as i64);
+            if st.window.is_empty() {
+                // Adaptive window: the consumed-by-all prefix was the
+                // whole window, so consumers are in lockstep — decay the
+                // byte target toward its floor.
+                let target = self.target_bytes.load(Ordering::Relaxed);
+                let floor = (self.byte_budget / 16).max(1);
+                if target > floor {
+                    let next = (target - target / 4).max(floor);
+                    self.target_bytes.store(next, Ordering::Relaxed);
+                    self.target_gauge.set(next as i64);
+                }
+            }
         }
     }
 
@@ -328,7 +460,8 @@ impl SlidingCache {
     /// Returns the effective cursor.
     fn clamp_cursor(&self, st: &mut SlidingCacheState, client: u64) -> u64 {
         let base = st.base_seq;
-        let cursor = *st.cursors.entry(client).or_insert(base);
+        let anchor = self.replay_anchor(base);
+        let cursor = *st.cursors.entry(client).or_insert(anchor);
         if cursor < base {
             // Evicted range skipped (relaxed visitation escape hatch).
             st.skipped += base - cursor;
@@ -394,18 +527,34 @@ impl SlidingCache {
             if consumers >= 2 {
                 st.shared_produced += 1;
             }
-            // Trim: the window slides forward when it outgrows either
-            // budget. Eviction does not wait for slow cursors — they skip
-            // ahead on their next fetch — but always keeps the newest
-            // element so every consumer can make progress.
-            while st.window.len() > self.capacity
-                || (st.window_bytes > self.byte_budget && st.window.len() > 1)
-            {
-                if let Some(old) = st.window.pop_front() {
-                    st.window_bytes -= old.len();
-                    st.base_seq += 1;
-                    st.evictions += 1;
+            // Trim: the window slides forward when it outgrows the
+            // element capacity or the adaptive byte target. Eviction
+            // does not wait for slow cursors — they replay from the
+            // spill tier or skip ahead on their next fetch — but always
+            // keeps the newest element so every consumer can progress.
+            loop {
+                let target = self.target_bytes.load(Ordering::Relaxed);
+                let over_cap = st.window.len() > self.capacity;
+                let over_bytes = st.window_bytes > target && st.window.len() > 1;
+                if !over_cap && !over_bytes {
+                    break;
                 }
+                let victim_seq = st.base_seq;
+                let wanted = st.cursors.values().any(|&c| c <= victim_seq);
+                if !over_cap && wanted && target < self.byte_budget {
+                    // Adaptive window: a registered cursor still wants
+                    // the victim and the target has headroom under the
+                    // configured ceiling — grow instead of evicting.
+                    let next = target.saturating_mul(2).min(self.byte_budget);
+                    self.target_bytes.store(next, Ordering::Relaxed);
+                    self.target_gauge.set(next as i64);
+                    continue;
+                }
+                let Some(old) = st.window.pop_front() else { break };
+                self.spill_evicted(victim_seq, &old, wanted);
+                st.window_bytes -= old.len();
+                st.base_seq += 1;
+                st.evictions += 1;
             }
         }
         self.win_elems_gauge.set(st.window.len() as i64);
@@ -461,6 +610,16 @@ impl SlidingCache {
         if st.removed.contains(&client) {
             // Straggler RPC from a released consumer: its stream is over.
             return BatchServe::Batch(Vec::new(), true);
+        }
+        // A below-window cursor replays from the spill tier (outside
+        // this lock) before clamping can count the range as skipped.
+        if let Some(sp) = &self.spill {
+            let base = st.base_seq;
+            let anchor = self.replay_anchor(base);
+            let cursor = *st.cursors.entry(client).or_insert(anchor);
+            if cursor < base && sp.may_cover(cursor) {
+                return BatchServe::Spill { from: cursor, to: base };
+            }
         }
         let mut cursor = self.clamp_cursor(&mut st, client);
         let base = st.base_seq;
@@ -1292,6 +1451,46 @@ fn replan_tasks(shared: &Arc<WorkerShared>, dt: f64) {
     }
 }
 
+/// Gather completed spill manifests to report on the next heartbeat.
+///
+/// A full-epoch spill (`SpillPolicy::All`) can only be finalized once the
+/// pipeline hit end-of-sequence AND every produced element reached the
+/// window (in-flight count zero) — otherwise the manifest would certify a
+/// prefix as a whole epoch. The producer channel is drained here so a job
+/// whose consumers stopped fetching early still gets its tail spilled.
+/// Manifests keep being re-reported until the dispatcher acks them, which
+/// makes the commit protocol safe against lost heartbeats.
+fn collect_spill_manifests(shared: &Arc<WorkerShared>) -> Vec<SpillManifest> {
+    let tasks: Vec<Arc<TaskRunner>> =
+        shared.tasks.lock().unwrap().values().cloned().collect();
+    let mut out = Vec::new();
+    for t in tasks {
+        let TaskState::Independent { cache, rx, in_flight } = &t.state else { continue };
+        let Some(sp) = cache.spill() else { continue };
+        if sp.policy == SpillPolicy::All && !sp.is_complete() && cache.is_eos() {
+            // Pull any produced-but-unpublished elements into the window
+            // so the tail flush below sees the complete epoch.
+            let mut fresh = Vec::new();
+            while let Some(e) = rx.try_recv() {
+                fresh.push(Arc::new(e.to_bytes()));
+            }
+            let drained = fresh.len() as u64;
+            if drained > 0 {
+                cache.push_encoded(fresh);
+                in_flight.fetch_sub(drained, Ordering::SeqCst);
+            }
+            if in_flight.load(Ordering::SeqCst) == 0 {
+                cache.flush_tail_to_spill();
+                sp.finalize();
+            }
+        }
+        if sp.is_complete() && !sp.acked.load(Ordering::SeqCst) {
+            out.push(sp.manifest());
+        }
+    }
+    out
+}
+
 fn heartbeat_loop(shared: Arc<WorkerShared>) {
     let mut last_busy = 0u64;
     let mut last_t = Instant::now();
@@ -1325,6 +1524,7 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
             worker_id: shared.worker_id.load(Ordering::SeqCst),
             active_tasks: active,
             cpu_util_milli: util_milli,
+            spill_manifests: collect_spill_manifests(&shared),
         };
         let resp: Result<WorkerHeartbeatResp, _> = call_typed(
             &shared.pool,
@@ -1371,6 +1571,17 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                                 shared.metrics.counter("worker/rounds_rekeyed").add(rekeyed);
                             }
                             shared.metrics.counter("worker/width_updates_applied").inc();
+                        }
+                    }
+                }
+                // Spill-manifest acks: the dispatcher journaled (or already
+                // knew about) these epochs — stop re-reporting them.
+                for id in &resp.manifest_acks {
+                    if let Some(t) = shared.tasks.lock().unwrap().get(id).cloned() {
+                        if let TaskState::Independent { cache, .. } = &t.state {
+                            if let Some(sp) = cache.spill() {
+                                sp.acked.store(true, Ordering::SeqCst);
+                            }
                         }
                     }
                 }
@@ -1451,11 +1662,33 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
 
     let state = match task.mode {
         ProcessingMode::Independent => {
+            // Spill tier (policy-gated): elements evicted from the RAM
+            // window tier into the object store instead of vanishing, so
+            // laggards and late attachers replay instead of skipping. A
+            // snapshot-serve task already reads from the store and never
+            // spills.
+            let spill_tier = (shared.cfg.spill.policy != SpillPolicy::Off
+                && task.snapshot_manifest.is_none())
+            .then(|| {
+                let sp = JobSpill::new(
+                    shared.cfg.store.clone(),
+                    shared.cfg.region.clone(),
+                    &shared.cfg.spill,
+                    task.job_id,
+                    task.dataset_id,
+                    &shared.metrics,
+                );
+                // A replacement worker adopts its predecessor's
+                // committed prefix before producing anything.
+                sp.adopt_existing();
+                sp
+            });
             let cache = Arc::new(SlidingCache::new(
                 shared.cfg.cache_window,
                 shared.cfg.cache_window_bytes,
                 shared.cfg.eager_window_eviction,
                 task.job_id,
+                spill_tier,
                 &shared.metrics,
             ));
             // Register the consumers attached at task-creation time so
@@ -1470,29 +1703,52 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
             let (tx, rx) = chan::bounded::<Element>(shared.cfg.buffer_size);
             let in_flight = Arc::new(AtomicU64::new(0));
             let inflight_tx = in_flight.clone();
-            spawn_producer(
-                shared,
-                &task,
-                exec_cfg,
-                stop.clone(),
-                busy_ns.clone(),
-                produced.clone(),
-                move |e| {
-                    // Count before the send so a popped-but-unpublished
-                    // element is never unaccounted (see TaskState docs).
-                    inflight_tx.fetch_add(1, Ordering::SeqCst);
-                    if tx.send(e).is_ok() {
-                        true
-                    } else {
-                        inflight_tx.fetch_sub(1, Ordering::SeqCst);
-                        false
-                    }
-                },
-                {
-                    let cache = cache.clone();
-                    move || cache.set_eos()
-                },
-            );
+            let sink = move |e: Element| {
+                // Count before the send so a popped-but-unpublished
+                // element is never unaccounted (see TaskState docs).
+                inflight_tx.fetch_add(1, Ordering::SeqCst);
+                if tx.send(e).is_ok() {
+                    true
+                } else {
+                    inflight_tx.fetch_sub(1, Ordering::SeqCst);
+                    false
+                }
+            };
+            let on_eos = {
+                let cache = cache.clone();
+                move || cache.set_eos()
+            };
+            match task.snapshot_manifest.clone() {
+                Some(manifest) => {
+                    // Snapshot serve: stream the committed epoch's
+                    // segments from the store instead of running the
+                    // pipeline (fingerprint-keyed snapshot reuse).
+                    shared.metrics.counter("worker/snapshot_serves").inc();
+                    spawn_snapshot_streamer(
+                        shared,
+                        &task,
+                        exec_cfg,
+                        stop.clone(),
+                        busy_ns.clone(),
+                        produced.clone(),
+                        manifest,
+                        sink,
+                        on_eos,
+                    );
+                }
+                None => {
+                    spawn_producer(
+                        shared,
+                        &task,
+                        exec_cfg,
+                        stop.clone(),
+                        busy_ns.clone(),
+                        produced.clone(),
+                        sink,
+                        on_eos,
+                    );
+                }
+            }
             TaskState::Independent { cache, rx, in_flight }
         }
         ProcessingMode::Coordinated => {
@@ -1596,6 +1852,115 @@ fn spawn_producer(
                     Err(e) => {
                         metrics.counter("worker/pipeline_errors").inc();
                         eprintln!("job {job_id}: pipeline error: {e}");
+                        break;
+                    }
+                }
+            }
+            on_eos();
+        })
+        .ok();
+}
+
+/// Snapshot-serve producer: stream this worker's slice of a committed
+/// fingerprint-keyed snapshot straight out of the object store —
+/// decoding each segment once, paying [`crate::storage::NetModel`] read
+/// costs when the store is remote — instead of re-running the pipeline.
+/// On an integrity failure (missing or corrupt segment) the task falls
+/// back to live production: the pipeline runs from the top and the
+/// already-streamed prefix is skipped, so every element is still
+/// delivered exactly once.
+fn spawn_snapshot_streamer(
+    shared: &Arc<WorkerShared>,
+    task: &TaskDef,
+    exec_cfg: ExecutorConfig,
+    stop: Arc<AtomicBool>,
+    busy_ns: Arc<AtomicU64>,
+    produced: Arc<AtomicU64>,
+    manifest: SpillManifest,
+    mut sink: impl FnMut(Element) -> bool + Send + 'static,
+    on_eos: impl FnOnce() + Send + 'static,
+) {
+    let graph = task.graph.clone();
+    let metrics = shared.metrics.clone();
+    let job_id = task.job_id;
+    let store = shared.cfg.store.clone();
+    let region = shared.cfg.region.clone();
+    std::thread::Builder::new()
+        .name(format!("snapshot-{job_id}"))
+        .spawn(move || {
+            let streamed_ctr = metrics.counter("worker/snapshot_elements_streamed");
+            let mut streamed = 0u64;
+            let mut intact = true;
+            'segments: for seg in &manifest.segments {
+                if stop.load(Ordering::SeqCst) {
+                    on_eos();
+                    return;
+                }
+                let t0 = Instant::now();
+                match spill::read_segment(&store, &region, seg) {
+                    Ok(batch) => {
+                        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        for bytes in batch {
+                            let Ok(e) = Element::from_bytes(&bytes) else {
+                                intact = false;
+                                break 'segments;
+                            };
+                            streamed += 1;
+                            streamed_ctr.inc();
+                            produced.fetch_add(1, Ordering::Relaxed);
+                            if !sink(e) {
+                                on_eos();
+                                return;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("job {job_id}: snapshot segment unreadable: {e}");
+                        intact = false;
+                        break 'segments;
+                    }
+                }
+            }
+            if intact {
+                on_eos();
+                return;
+            }
+            // Live fallback: re-produce the epoch, skipping the prefix
+            // already streamed so consumers see no duplicates.
+            metrics.counter("worker/snapshot_fallbacks").inc();
+            let ex = Executor::new(exec_cfg);
+            let mut it = match ex.iterate(&graph) {
+                Ok(it) => it,
+                Err(e) => {
+                    metrics.counter("worker/pipeline_errors").inc();
+                    eprintln!("job {job_id}: snapshot fallback build failed: {e}");
+                    on_eos();
+                    return;
+                }
+            };
+            let mut to_skip = streamed;
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let t0 = Instant::now();
+                match it.next() {
+                    Ok(Some(e)) => {
+                        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        if to_skip > 0 {
+                            to_skip -= 1;
+                            continue;
+                        }
+                        metrics.counter("worker/elements_produced").inc();
+                        produced.fetch_add(1, Ordering::Relaxed);
+                        if !sink(e) {
+                            break;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        metrics.counter("worker/pipeline_errors").inc();
+                        eprintln!("job {job_id}: snapshot fallback error: {e}");
                         break;
                     }
                 }
@@ -1763,6 +2128,34 @@ fn drain_and_serve(
             BatchServe::Oversized(bytes) => return Ok(Drained::Oversized(bytes)),
             BatchServe::TooLarge(bytes) => {
                 return Err(ServiceError::ElementTooLarge { bytes, cap: p.hard_cap })
+            }
+            BatchServe::Spill { from, to } => {
+                // RAM → spill fallback: replay the evicted range from the
+                // store (no cache lock held), then commit the cursor.
+                let sp = cache.spill().expect("Spill outcome implies a spill tier").clone();
+                match sp.read_range(from, to, p.max_bytes, p.hard_cap) {
+                    SpillRead::Batch { batch, next, skipped } => {
+                        cache.complete_spill(client_id, next, batch.len() as u64, skipped);
+                        if !batch.is_empty() {
+                            return Ok(Drained::Batch { batch, eos: false });
+                        }
+                        // Whole range was gaps/unreadable: the skips are
+                        // booked; retry from RAM.
+                    }
+                    SpillRead::Oversized { bytes, seq, skipped } => {
+                        if !p.chunk_oversized {
+                            // Book progress up to (not past) the element
+                            // so the error is explicit and repeatable.
+                            cache.complete_spill(client_id, seq, 0, skipped);
+                            return Err(ServiceError::ElementTooLarge {
+                                bytes: bytes.len(),
+                                cap: p.hard_cap,
+                            });
+                        }
+                        cache.complete_spill(client_id, seq + 1, 1, skipped);
+                        return Ok(Drained::Oversized(bytes));
+                    }
+                }
             }
             BatchServe::Batch(batch, end) => {
                 if !batch.is_empty() || end {
@@ -2187,6 +2580,9 @@ fn status(shared: &Arc<WorkerShared>) -> WorkerStatusResp {
         shared_elements_served: shared.metrics.counter("worker/shared_elements_served").get(),
         relaxed_skips: shared.metrics.counter("worker/relaxed_visitation_skips").get(),
         window_stats,
+        spill_segments_written: shared.metrics.counter("worker/spill_segments_written").get(),
+        spill_elements_served: shared.metrics.counter("worker/spill_elements_served").get(),
+        snapshot_serves: shared.metrics.counter("worker/snapshot_serves").get(),
     }
 }
 
@@ -2216,14 +2612,14 @@ mod tests {
     /// off: these tests pin the retained-window replay semantics.
     fn cache(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
         let m = Registry::new();
-        (SlidingCache::new(capacity, byte_budget, false, 0, &m), m)
+        (SlidingCache::new(capacity, byte_budget, false, 0, None, &m), m)
     }
 
     /// Cache with eager consumed-by-all eviction on (the default worker
     /// configuration).
     fn cache_eager(capacity: usize, byte_budget: usize) -> (SlidingCache, Registry) {
         let m = Registry::new();
-        (SlidingCache::new(capacity, byte_budget, true, 0, &m), m)
+        (SlidingCache::new(capacity, byte_budget, true, 0, None, &m), m)
     }
 
     fn skips_of(m: &Registry) -> u64 {
@@ -2816,5 +3212,236 @@ mod tests {
         let z = deflate(&data).unwrap();
         assert!(z.len() < data.len() / 2);
         assert_eq!(inflate(&z).unwrap(), data);
+    }
+
+    /// Cache wired to an in-memory spill tier (the storage-backed window).
+    fn cache_spilled(
+        capacity: usize,
+        byte_budget: usize,
+        policy: SpillPolicy,
+    ) -> (SlidingCache, Registry, Arc<JobSpill>) {
+        let m = Registry::new();
+        let store = crate::storage::ObjectStore::in_memory();
+        let cfg = SpillConfig { policy, segment_bytes: 64 };
+        let sp = JobSpill::new(store.clone(), store.region().clone(), &cfg, 0, 1, &m);
+        let c = SlidingCache::new(capacity, byte_budget, false, 0, Some(sp.clone()), &m);
+        (c, m, sp)
+    }
+
+    /// Drain everything currently visible to `client`, following RAM →
+    /// spill fallbacks the way `drain_and_serve` does; returns the
+    /// decoded payload values in delivery order.
+    fn drain_all(c: &SlidingCache, client: u64, step: usize) -> Vec<i32> {
+        let quiet = AtomicU64::new(0);
+        let mut out = Vec::new();
+        loop {
+            match c.serve_batch(client, step, usize::MAX, usize::MAX, false, &quiet) {
+                BatchServe::Spill { from, to } => {
+                    let sp = c.spill().expect("spill outcome implies a tier").clone();
+                    match sp.read_range(from, to, usize::MAX, usize::MAX) {
+                        SpillRead::Batch { batch, next, skipped } => {
+                            c.complete_spill(client, next, batch.len() as u64, skipped);
+                            for b in &batch {
+                                let e = Element::from_bytes(b).unwrap();
+                                out.push(e.tensors[0].as_i32()[0]);
+                            }
+                        }
+                        SpillRead::Oversized { .. } => panic!("no oversized elements here"),
+                    }
+                }
+                BatchServe::Batch(batch, _) => {
+                    if batch.is_empty() {
+                        return out;
+                    }
+                    for b in &batch {
+                        let e = Element::from_bytes(b).unwrap();
+                        out.push(e.tensors[0].as_i32()[0]);
+                    }
+                }
+                _ => panic!("unexpected oversize outcome"),
+            }
+        }
+    }
+
+    #[test]
+    fn spill_late_attacher_replays_full_epoch() {
+        // Full-epoch retention (SpillPolicy::All): a client that attaches
+        // after most of the epoch was evicted from RAM replays everything
+        // from the store — zero relaxed-visitation skips.
+        let (c, m, _sp) = cache_spilled(2, usize::MAX, SpillPolicy::All);
+        for i in 0..10 {
+            c.push(elem(i));
+        }
+        assert!(c.stats().evictions >= 8, "tiny window must have evicted");
+        let got = drain_all(&c, 9, 64);
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert_eq!(skips_of(&m), 0, "spill replay leaves no skips");
+        assert!(m.counter("worker/spill_segments_written").get() > 0);
+        assert!(m.counter("worker/spill_elements_served").get() >= 8);
+    }
+
+    #[test]
+    fn spill_wanted_policy_preserves_laggard_not_attacher() {
+        // SpillPolicy::Wanted spills only elements some registered cursor
+        // still needs: the laggard replays losslessly, while a fresh
+        // attacher still anchors at the retained head (frontier join).
+        let (c, m, _sp) = cache_spilled(2, usize::MAX, SpillPolicy::Wanted);
+        c.register_consumer(1);
+        for i in 0..8 {
+            c.push(elem(i));
+        }
+        let got = drain_all(&c, 1, 3);
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        assert_eq!(skips_of(&m), 0);
+        // Fresh client: no full-epoch anchor under Wanted — it starts at
+        // the oldest *retained* element, same as the RAM-only tier.
+        let base = 8 - c.stats().window as i32;
+        let got2 = drain_all(&c, 2, 64);
+        assert_eq!(got2, (base..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spill_manifest_commits_full_epoch_with_tail_flush() {
+        // Evicted prefix + in-RAM tail: flushing the tail at EOS yields a
+        // complete manifest covering every element exactly once.
+        let (c, _m, sp) = cache_spilled(3, usize::MAX, SpillPolicy::All);
+        for i in 0..9 {
+            c.push(elem(i));
+        }
+        c.set_eos();
+        assert!(!sp.is_complete());
+        c.flush_tail_to_spill();
+        let man = sp.finalize();
+        assert!(man.complete);
+        assert_eq!(man.total_elements, 9);
+        assert_eq!(man.end_seq(), 9);
+    }
+
+    #[test]
+    fn adaptive_window_target_grows_with_demand_and_decays_idle() {
+        // The byte target starts at budget/16 and only climbs toward the
+        // full budget while a registered cursor still wants the prefix;
+        // once eager eviction keeps the window empty it decays back.
+        let quiet = AtomicU64::new(0);
+        let m = Registry::new();
+        let c = SlidingCache::new(100, 1 << 16, true, 7, None, &m);
+        let gauge = m.gauge("worker/job/7/window_target_bytes");
+        assert_eq!(gauge.get(), 4096, "initial target is budget/16");
+        c.register_consumer(1);
+        c.register_consumer(2);
+        // 5 KiB of unconsumed window with a cursor pinned at the head:
+        // the target doubles instead of evicting wanted elements.
+        c.push_encoded((0..5).map(|_| Arc::new(vec![7u8; 1024])).collect());
+        assert_eq!(gauge.get(), 8192, "cursor spread grew the target");
+        assert_eq!(c.stats().evictions, 0, "wanted prefix was not evicted");
+        // Both consumers drain; eager eviction empties the window and the
+        // target decays multiplicatively toward the floor.
+        let _ = sb(&c, 1, 64, usize::MAX, &quiet);
+        let _ = sb(&c, 2, 64, usize::MAX, &quiet);
+        assert_eq!(c.stats().window, 0);
+        assert_eq!(gauge.get(), 6144, "idle window decays the target");
+        assert_eq!(skips_of(&m), 0);
+    }
+
+    #[test]
+    fn adaptive_target_caps_unwanted_backlog() {
+        // No registered cursors: nothing "wants" the prefix, so the window
+        // is bounded by the small initial target instead of the full
+        // budget — eager-writer memory stays modest.
+        let m = Registry::new();
+        let c = SlidingCache::new(1000, 1 << 16, false, 0, None, &m);
+        c.push_encoded((0..16).map(|_| Arc::new(vec![1u8; 1024])).collect());
+        let s = c.stats();
+        assert!(
+            s.window_bytes <= 4096 + 1024,
+            "window {} exceeds the unwanted target",
+            s.window_bytes
+        );
+        assert!(s.evictions > 0);
+    }
+
+    #[test]
+    fn spill_replay_exactly_once_under_random_schedules() {
+        // Property: under SpillPolicy::All, any interleaving of produce /
+        // serve / late-attach sees every client receive the full epoch
+        // exactly once — the RAM → spill → RAM hand-back never skips or
+        // duplicates — and the relaxed-visitation skip counter stays 0.
+        for seed in 0..8u64 {
+            let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ seed);
+            let total = 40 + rng.below(40) as i32;
+            let capacity = 1 + rng.below_usize(4);
+            let (c, m, _sp) = cache_spilled(capacity, usize::MAX, SpillPolicy::All);
+            let quiet = AtomicU64::new(0);
+            let mut clients: Vec<u64> = vec![1];
+            c.register_consumer(1);
+            let mut got: HashMap<u64, Vec<i32>> = HashMap::new();
+            got.insert(1, Vec::new());
+            let mut next_val = 0i32;
+            for _step in 0..100_000 {
+                let done = next_val >= total
+                    && clients.iter().all(|cl| got[cl].len() == total as usize);
+                if done {
+                    break;
+                }
+                match rng.below(4) {
+                    0 if next_val < total => {
+                        for _ in 0..=rng.below(4) {
+                            if next_val >= total {
+                                break;
+                            }
+                            c.push(elem(next_val));
+                            next_val += 1;
+                        }
+                    }
+                    1 if clients.len() < 5 && next_val > total / 2 => {
+                        let id = clients.len() as u64 + 1;
+                        c.register_consumer(id);
+                        clients.push(id);
+                        got.insert(id, Vec::new());
+                    }
+                    _ => {
+                        let cl = *rng.choice(&clients);
+                        let want = 1 + rng.below_usize(8);
+                        match c.serve_batch(cl, want, usize::MAX, usize::MAX, false, &quiet) {
+                            BatchServe::Spill { from, to } => {
+                                let sp = c.spill().unwrap().clone();
+                                match sp.read_range(from, to, usize::MAX, usize::MAX) {
+                                    SpillRead::Batch { batch, next, skipped } => {
+                                        c.complete_spill(
+                                            cl,
+                                            next,
+                                            batch.len() as u64,
+                                            skipped,
+                                        );
+                                        let sink = got.get_mut(&cl).unwrap();
+                                        for b in &batch {
+                                            let e = Element::from_bytes(b).unwrap();
+                                            sink.push(e.tensors[0].as_i32()[0]);
+                                        }
+                                    }
+                                    SpillRead::Oversized { .. } => panic!("tiny elements"),
+                                }
+                            }
+                            BatchServe::Batch(batch, _) => {
+                                let sink = got.get_mut(&cl).unwrap();
+                                for b in &batch {
+                                    let e = Element::from_bytes(b).unwrap();
+                                    sink.push(e.tensors[0].as_i32()[0]);
+                                }
+                            }
+                            _ => panic!("unexpected oversize outcome"),
+                        }
+                    }
+                }
+            }
+            let want: Vec<i32> = (0..total).collect();
+            for cl in &clients {
+                assert_eq!(
+                    got[cl], want,
+                    "seed {seed}: client {cl} must see the epoch exactly once"
+                );
+            }
+            assert_eq!(skips_of(&m), 0, "seed {seed}: no relaxed skips under All");
+        }
     }
 }

@@ -157,6 +157,21 @@ impl ObjectStore {
         self.objects.lock().unwrap().insert(key.to_string(), Arc::new(bytes));
     }
 
+    /// Append `bytes` to the object at `key` (creating it when absent)
+    /// and return the byte offset the appended chunk starts at. The
+    /// spill tier appends encoded segments to one data object per job
+    /// and addresses them by `(offset, len)` via [`ObjectStore::read_range_from`].
+    /// Copy-on-write against concurrent readers: an `Arc` handed out by
+    /// a previous read keeps observing the pre-append bytes.
+    pub fn append(&self, key: &str, bytes: &[u8]) -> u64 {
+        let mut objects = self.objects.lock().unwrap();
+        let entry = objects.entry(key.to_string()).or_insert_with(|| Arc::new(Vec::new()));
+        let buf = Arc::make_mut(entry);
+        let offset = buf.len() as u64;
+        buf.extend_from_slice(bytes);
+        offset
+    }
+
     pub fn delete(&self, key: &str) -> bool {
         self.objects.lock().unwrap().remove(key).is_some()
     }
@@ -201,6 +216,46 @@ impl ObjectStore {
             std::thread::sleep(delay);
         }
         Ok(obj)
+    }
+
+    /// Read `len` bytes at `offset` within the object at `key`, paying
+    /// the modeled network cost for the *range* (not the whole object):
+    /// the spill tier stores many segments in one data object and reads
+    /// them back individually.
+    pub fn read_range_from(
+        &self,
+        reader_region: &Region,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> StorageResult<Vec<u8>> {
+        let obj = self
+            .objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))?;
+        let (off, len) = (offset as usize, len as usize);
+        let end = off.checked_add(len).filter(|&e| e <= obj.len()).ok_or_else(|| {
+            StorageError::Corrupt(format!(
+                "range {off}+{len} past end of {key} ({} bytes)",
+                obj.len()
+            ))
+        })?;
+        self.stats.reads.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        if reader_region != &self.region {
+            self.stats.cross_region_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let delay = self.net.read_delay(reader_region, &self.region, len);
+        self.stats
+            .simulated_delay_us
+            .fetch_add(delay.as_micros() as u64, Ordering::Relaxed);
+        if self.net.inject_delays {
+            std::thread::sleep(delay);
+        }
+        Ok(obj[off..end].to_vec())
     }
 
     /// Convenience in-region read.
@@ -255,6 +310,42 @@ mod tests {
         assert!(s.delete("k"));
         assert!(!s.delete("k"));
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn append_returns_offsets_and_ranges_read_back() {
+        let s = ObjectStore::in_memory();
+        assert_eq!(s.append("seg", b"abcd"), 0);
+        assert_eq!(s.append("seg", b"efg"), 4);
+        assert_eq!(s.read_range_from(s.region(), "seg", 0, 4).unwrap(), b"abcd");
+        assert_eq!(s.read_range_from(s.region(), "seg", 4, 3).unwrap(), b"efg");
+        assert!(matches!(
+            s.read_range_from(s.region(), "seg", 5, 3),
+            Err(StorageError::Corrupt(_))
+        ));
+        assert!(matches!(
+            s.read_range_from(s.region(), "nope", 0, 1),
+            Err(StorageError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn append_preserves_prior_readers() {
+        let s = ObjectStore::in_memory();
+        s.append("seg", b"old");
+        let snapshot = s.get("seg").unwrap();
+        s.append("seg", b"new");
+        assert_eq!(&*snapshot, b"old");
+        assert_eq!(&*s.get("seg").unwrap(), b"oldnew");
+    }
+
+    #[test]
+    fn range_read_charges_range_bytes_only() {
+        let s = ObjectStore::new(Region::new("us"), NetModel::default());
+        s.put("k", vec![0; 1000]);
+        s.read_range_from(&Region::new("eu"), "k", 100, 10).unwrap();
+        assert_eq!(s.stats.bytes_read.load(Ordering::Relaxed), 10);
+        assert_eq!(s.stats.cross_region_reads.load(Ordering::Relaxed), 1);
     }
 
     #[test]

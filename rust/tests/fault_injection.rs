@@ -22,8 +22,10 @@ use tfdatasvc::orchestrator::failure::{FailureConfig, FailureInjector};
 use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::service::client::DistributedIter;
 use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::proto::{SharingMode, ShardingPolicy};
+use tfdatasvc::service::spill::{SpillConfig, SpillPolicy};
 use tfdatasvc::service::visitation::RoundTracker;
-use tfdatasvc::service::ServiceClient;
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::ObjectStore;
 
 /// Consume `n` rounds, feeding the tracker (signature constant: a single
@@ -480,6 +482,196 @@ fn preemption_wave_keeps_coordinated_rounds_exactly_once() {
     it.release();
     stop_tick.store(true, Ordering::SeqCst);
     let _ = ticker.join();
+}
+
+/// Shared-job client config for the spill-tier tests: anonymous
+/// independent job with ephemeral sharing enabled.
+fn share_cfg() -> ServiceClientConfig {
+    ServiceClientConfig {
+        sharding: ShardingPolicy::Off,
+        sharing: SharingMode::Auto,
+        ..Default::default()
+    }
+}
+
+/// Drain an independent-mode iterator to end-of-stream, collecting ids.
+fn drain_ids(it: &mut DistributedIter, ids: &mut Vec<u64>) {
+    while let Some(e) = it.next().expect("element fetch failed") {
+        ids.extend(e.ids);
+    }
+}
+
+/// Spill-tier crash e2e: a worker dies mid-epoch with part of the stream
+/// already tiered to the object store. Its replacement (same advertised
+/// address, same shared store) must adopt the predecessor's committed
+/// manifest and serve that prefix straight from the store — a client
+/// attaching *after* the crash replays the full epoch exactly once with
+/// zero relaxed-visitation skips, and the surviving client loses
+/// nothing (its re-handshake replays, so it sees every id at least
+/// once).
+#[test]
+fn worker_crash_mid_spill_replacement_serves_committed_prefix() {
+    let cluster = Cluster::with_config(0, DispatcherConfig::default());
+    cluster.set_worker_config(|c| {
+        // Small segments so the committed prefix spans many objects;
+        // eager eviction (the default) tiers every consumed element out
+        // of the 16-element RAM window into the store.
+        c.spill = SpillConfig { policy: SpillPolicy::All, segment_bytes: 512 };
+    });
+    cluster.add_worker();
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+
+    // ~1 ms of preprocessing per element keeps the epoch in flight long
+    // enough that the kill usually lands mid-spill (the test is still
+    // correct if production finishes first: the adopted manifest is
+    // simply complete).
+    let total = 400u64;
+    let graph = PipelineBuilder::source_range(total).map("synthetic.burn:1000").build();
+
+    let client_a = cluster.client();
+    let mut it_a = client_a.distribute(&graph, share_cfg()).unwrap();
+    let mut ids_a: Vec<u64> = Vec::new();
+    while ids_a.len() < 60 {
+        let e = it_a.next().expect("element fetch failed").expect("stream ended early");
+        ids_a.extend(e.ids);
+    }
+    wait_until(Instant::now() + Duration::from_secs(10), "first spill segment", || {
+        cluster
+            .with_worker(0, |w| w.metrics().counter("worker/spill_segments_written").get() >= 1)
+            .unwrap_or(false)
+    });
+
+    // Crash: heartbeats stop, the data server dies, the pending spill
+    // buffer is lost. The manifest in the store is the committed prefix.
+    cluster.kill_worker(0);
+    cluster.revive_worker(0);
+
+    // Pump the survivor well past the RAM window so the replacement's
+    // window base has provably moved off zero by the time the attacher
+    // joins (its session re-anchored at the spill floor, so these pulls
+    // start by replaying the committed prefix).
+    while ids_a.len() < 160 {
+        let e = it_a.next().expect("element fetch failed").expect("stream ended early");
+        ids_a.extend(e.ids);
+    }
+
+    // A second trainer submits the identical pipeline after the crash
+    // and attaches to the live job. The replacement worker adopted the
+    // predecessor's manifest, so the attacher anchors at sequence 0 and
+    // replays the committed prefix from the store (RAM only holds the
+    // newest window).
+    let client_c = cluster.client();
+    let mut it_c = client_c.distribute(&graph, share_cfg()).unwrap();
+    assert!(it_c.attached(), "identical pipeline must attach to the live job");
+    assert_eq!(it_c.job_id(), it_a.job_id());
+
+    let mut ids_c: Vec<u64> = Vec::new();
+    drain_ids(&mut it_c, &mut ids_c);
+    ids_c.sort_unstable();
+    assert_eq!(
+        ids_c,
+        (0..total).collect::<Vec<u64>>(),
+        "post-crash attacher replays the full epoch exactly once"
+    );
+
+    // The survivor's session re-handshake re-anchors at the spill floor,
+    // so it sees duplicates but never loses an element.
+    drain_ids(&mut it_a, &mut ids_a);
+    ids_a.sort_unstable();
+    ids_a.dedup();
+    assert_eq!(
+        ids_a,
+        (0..total).collect::<Vec<u64>>(),
+        "surviving client covers the full epoch across the crash"
+    );
+
+    // The committed prefix really came from the store, and nobody was
+    // forced to skip: the spill tier replaces relaxed visitation.
+    cluster
+        .with_worker(0, |w| {
+            assert!(
+                w.metrics().counter("worker/spill_elements_served").get() >= 1,
+                "replacement never served from the adopted spill prefix"
+            );
+            assert_eq!(w.metrics().counter("worker/relaxed_visitation_skips").get(), 0);
+        })
+        .expect("replacement worker is up");
+    it_a.release();
+    it_c.release();
+}
+
+/// Fingerprint-keyed snapshot e2e: a spill-everything job completes its
+/// epoch, the worker's complete manifest is journaled by the dispatcher
+/// (`SnapshotCommitted`), and a *re-submitted identical pipeline* is
+/// served straight out of the store — the worker streams the committed
+/// segments instead of re-running the pipeline, so `elements_produced`
+/// does not move for the second job.
+#[test]
+fn completed_epoch_commits_snapshot_and_resubmission_streams_from_store() {
+    let cluster = Cluster::with_config(0, DispatcherConfig::default());
+    cluster.set_worker_config(|c| {
+        c.spill = SpillConfig { policy: SpillPolicy::All, segment_bytes: 512 };
+    });
+    cluster.add_worker();
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+
+    let total = 300u64;
+    let graph = PipelineBuilder::source_range(total).build();
+
+    // First epoch: live production with the spill tier archiving the
+    // whole stream.
+    let client_a = cluster.client();
+    let mut it_a = client_a.distribute(&graph, share_cfg()).unwrap();
+    assert!(!it_a.snapshot(), "no snapshot exists yet: first job must produce live");
+    let mut ids_a: Vec<u64> = Vec::new();
+    drain_ids(&mut it_a, &mut ids_a);
+    ids_a.sort_unstable();
+    assert_eq!(ids_a, (0..total).collect::<Vec<u64>>(), "first epoch exactly once");
+
+    // The worker finalizes the manifest at end-of-stream and re-reports
+    // it every heartbeat until the dispatcher journals the commit.
+    wait_until(Instant::now() + Duration::from_secs(10), "snapshot commit", || {
+        cluster.dispatcher().metrics().counter("dispatcher/snapshots_committed").get() >= 1
+    });
+    it_a.release();
+
+    let produced_before = cluster
+        .with_worker(0, |w| w.metrics().counter("worker/elements_produced").get())
+        .expect("worker is up");
+
+    // Re-submission: same fingerprint, sharing auto, no live job left —
+    // the dispatcher creates the job in snapshot-serve mode.
+    let client_b = cluster.client();
+    let mut it_b = client_b.distribute(&graph, share_cfg()).unwrap();
+    assert!(it_b.snapshot(), "re-submitted pipeline must attach to the snapshot");
+    assert!(!it_b.attached(), "snapshot serve is a fresh job, not a live attach");
+    let mut ids_b: Vec<u64> = Vec::new();
+    drain_ids(&mut it_b, &mut ids_b);
+    ids_b.sort_unstable();
+    assert_eq!(
+        ids_b,
+        (0..total).collect::<Vec<u64>>(),
+        "snapshot-served epoch is byte-identical to the live one"
+    );
+
+    cluster
+        .with_worker(0, |w| {
+            assert!(
+                w.metrics().counter("worker/snapshot_serves").get() >= 1,
+                "worker never started a snapshot-serve task"
+            );
+            assert_eq!(
+                w.metrics().counter("worker/elements_produced").get(),
+                produced_before,
+                "snapshot serve must not re-run the pipeline"
+            );
+            assert!(w.metrics().counter("worker/spill_segments_written").get() >= 1);
+            assert_eq!(w.metrics().counter("worker/relaxed_visitation_skips").get(), 0);
+        })
+        .expect("worker is up");
+    assert_eq!(client_b.metrics().counter("client/snapshot_attaches").get(), 1);
+    assert_eq!(cluster.dispatcher().metrics().counter("dispatcher/snapshot_attaches").get(), 1);
+    it_b.release();
 }
 
 /// Satellite regression for the engine-poll removal: an idle concurrent

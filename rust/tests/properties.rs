@@ -18,6 +18,7 @@ use tfdatasvc::service::dispatcher::{reassign_dead_residues, rebalance_home_resi
 use tfdatasvc::service::journal::{Journal, JournalRecord};
 use tfdatasvc::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
 use tfdatasvc::service::sharding::{static_assignment, SplitTracker};
+use tfdatasvc::service::spill::{SegmentMeta, SpillManifest};
 use tfdatasvc::storage::ObjectStore;
 use tfdatasvc::util::rng::Rng;
 use tfdatasvc::wire::{Decode, Encode};
@@ -384,8 +385,35 @@ fn prop_round_lease_invariants_under_kill_revive_rebalance() {
 
 // ----------------------------------------------------------- journal fuzz
 
+fn rand_manifest(rng: &mut Rng) -> SpillManifest {
+    let mut start_seq = 0u64;
+    let segments = (0..rng.below(5))
+        .map(|_| {
+            let num_elements = rng.next_u32() % 64 + 1;
+            let seg = SegmentMeta {
+                key: rng.ident(16),
+                offset: rng.next_u64() % (1 << 30),
+                len: rng.next_u64() % (1 << 20),
+                start_seq,
+                num_elements,
+                crc32: rng.next_u32(),
+            };
+            start_seq += num_elements as u64;
+            seg
+        })
+        .collect();
+    SpillManifest {
+        fingerprint: rng.next_u64(),
+        job_id: rng.next_u64(),
+        epoch: rng.next_u64() % 16,
+        total_elements: start_seq,
+        complete: rng.chance(0.8),
+        segments,
+    }
+}
+
 fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
-    match rng.below(8) {
+    match rng.below(9) {
         0 => JournalRecord::RegisterDataset { dataset_id: rng.next_u64(), graph: rand_graph(rng) },
         1 => JournalRecord::CreateJob {
             job_id: rng.next_u64(),
@@ -400,6 +428,7 @@ fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
             num_consumers: rng.next_u32() % 8,
             sharing: *rng.choice(&[SharingMode::Auto, SharingMode::Off]),
             worker_order: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+            snapshot: rng.chance(0.25),
         },
         2 => JournalRecord::RegisterWorker { worker_id: rng.next_u64(), addr: rng.ident(12) },
         3 => JournalRecord::ClientJoined { job_id: rng.next_u64(), client_id: rng.next_u64() },
@@ -408,6 +437,11 @@ fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
         6 => JournalRecord::RoundLeaseChanged {
             job_id: rng.next_u64(),
             residue_owners: (0..rng.below(8)).map(|_| rng.next_u64()).collect(),
+        },
+        7 => JournalRecord::SnapshotCommitted {
+            fingerprint: rng.next_u64(),
+            epoch: rng.next_u64() % 16,
+            manifest: rand_manifest(rng),
         },
         _ => JournalRecord::ConsumerSetChanged {
             job_id: rng.next_u64(),
@@ -434,7 +468,23 @@ fn prop_journal_records_roundtrip_byte_identical() {
         assert_eq!(back, rec, "trial {trial}");
         assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
     }
-    assert_eq!(variants_seen.len(), 8, "generator covered every record variant");
+    assert_eq!(variants_seen.len(), 9, "generator covered every record variant");
+}
+
+/// `SpillManifest` (the snapshot-commit payload) roundtrips
+/// byte-identically on its own wire framing, including the empty and
+/// incomplete shapes.
+#[test]
+fn prop_spill_manifest_roundtrips_byte_identical() {
+    let mut rng = Rng::new(0x9_000b);
+    for trial in 0..TRIALS {
+        let m = rand_manifest(&mut rng);
+        let bytes = m.to_bytes();
+        let back = SpillManifest::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("trial {trial}: decode failed: {e}"));
+        assert_eq!(back, m, "trial {trial}");
+        assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
+    }
 }
 
 /// A journal truncated anywhere in its tail (crash mid-append) replays
