@@ -3,13 +3,34 @@
 //! savings. Paper anchors: 8 workers -> 0.55x (slower than colocated!),
 //! 16 -> 1.14x, 64 -> 4.1x, 128 -> 8.6x, 512 -> 12.3x (ideal), 640 ->
 //! same time, slightly higher cost.
+//!
+//! A live section walks the same worker-count axis on a real cell:
+//! pool resizes go through `Cell::request_scale_to`, so every shrink
+//! runs the two-phase graceful drain (revoke -> flush -> ack -> grant)
+//! while a coordinated consumer keeps stepping. `--smoke` shortens the
+//! sweep for CI; the live results land in
+//! `out/bench_worker_sweep_live.json`.
 
-use tfdatasvc::metrics::write_csv_rows;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tfdatasvc::data::exec::ElemIter;
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::data::udf::UdfRegistry;
+use tfdatasvc::metrics::{write_csv_rows, write_json_file};
+use tfdatasvc::orchestrator::Cell;
+use tfdatasvc::service::dispatcher::DispatcherConfig;
+use tfdatasvc::service::proto::{ProcessingMode, ShardingPolicy};
+use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::sim::cost::CostModel;
 use tfdatasvc::sim::des::{simulate_job, JobSimConfig};
 use tfdatasvc::sim::models::model;
+use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::util::json::{obj, Json};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let m = model("M1");
     let colo = simulate_job(m, &JobSimConfig::default());
     let ideal_speedup = m.ideal_bps / colo.throughput_bps;
@@ -68,5 +89,132 @@ fn main() {
     let (s512, s640) = (at(512), at(640));
     assert!((s640 - s512).abs() / s512 < 0.02, "over-provisioning does not change job time");
     write_csv_rows("out/fig9.csv", "workers,bps,speedup,cost_saving", &rows).unwrap();
-    println!("fig9 OK -> out/fig9.csv");
+
+    // --- Live pool-size sweep (§3.1): the worker-count axis walked on a
+    // real cell. Growth adds workers mid-job; every shrink picks the
+    // least-loaded worker and runs the two-phase graceful drain while a
+    // coordinated consumer keeps stepping — no step may stall longer
+    // than ~one worker heartbeat, and no round may be skipped.
+    let sizes: &[usize] = if smoke { &[1, 2, 1] } else { &[1, 2, 4, 2, 1] };
+    let cell = Arc::new(
+        Cell::new(
+            ObjectStore::in_memory(),
+            UdfRegistry::with_builtins(),
+            DispatcherConfig::default(),
+        )
+        .unwrap(),
+    );
+    cell.scale_to(1).unwrap();
+    // Drive the drain state machine the way the scaling controller does:
+    // tick plans lease handoffs, reap removes workers whose drain
+    // completed.
+    let stop_tick = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let (c, s) = (cell.clone(), stop_tick.clone());
+        std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                c.tick();
+                c.reap_drained();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+    let live_graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = client
+        .distribute(
+            &live_graph,
+            ServiceClientConfig {
+                sharding: ShardingPolicy::Off,
+                mode: ProcessingMode::Coordinated,
+                job_name: "fig9-live".into(),
+                num_consumers: 1,
+                consumer_index: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut max_step = Duration::ZERO;
+    let mut step = |max_step: &mut Duration, timed: bool| {
+        let f0 = Instant::now();
+        let e = it.next().expect("round fetch failed").expect("stream ended early");
+        std::hint::black_box(&e);
+        if timed {
+            *max_step = (*max_step).max(f0.elapsed());
+        }
+    };
+    // Warm up untimed: job registration and the first task attach cost a
+    // couple of heartbeats and are not a resize stall.
+    for _ in 0..5 {
+        step(&mut max_step, false);
+    }
+
+    println!(
+        "\n=== Fig 9 live sweep: pool {:?} via graceful drains{} ===",
+        sizes,
+        if smoke { ", smoke" } else { "" }
+    );
+    let mut resizes: Vec<Json> = Vec::new();
+    let mut expect_drains = 0u64;
+    let mut prev = 1usize;
+    for &n in sizes {
+        if n < prev {
+            expect_drains += (prev - n) as u64;
+        }
+        prev = n;
+        let t0 = Instant::now();
+        cell.request_scale_to(n).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while cell.worker_count() != n {
+            assert!(Instant::now() < deadline, "resize to {n} workers never converged");
+            step(&mut max_step, true);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let converge_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // A few steady rounds at the new size: the plane must flow.
+        for _ in 0..5 {
+            step(&mut max_step, true);
+        }
+        println!("live resize -> {n:>2} workers in {converge_ms:>6.0} ms");
+        resizes.push(obj([("target", (n as u64).into()), ("converge_ms", converge_ms.into())]));
+    }
+
+    let dm = cell.dispatcher().metrics();
+    let drains_started = dm.counter("dispatcher/worker_drains_started").get();
+    let drained = dm.counter("dispatcher/workers_drained").get();
+    let skipped = client.metrics().counter("client/rounds_skipped_forward").get();
+    println!(
+        "live sweep: {drains_started} drains started / {drained} drained, max step {:.1} ms",
+        max_step.as_secs_f64() * 1e3
+    );
+    assert_eq!(drained, expect_drains, "every shrink must go through a graceful drain");
+    assert!(
+        drains_started >= expect_drains,
+        "drains started ({drains_started}) below drains completed"
+    );
+    // One worker heartbeat (100 ms) is the protocol stall bound for a
+    // lease handoff; 5x covers CI scheduler noise.
+    assert!(
+        max_step < Duration::from_millis(500),
+        "a step stalled {max_step:?} during a live resize"
+    );
+    assert_eq!(skipped, 0, "a graceful resize must never trigger skip-forward");
+    it.release();
+    stop_tick.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+
+    write_json_file(
+        "out/bench_worker_sweep_live.json",
+        &obj([
+            ("bench", "fig9_worker_sweep_live".into()),
+            ("smoke", smoke.into()),
+            ("resizes", Json::Arr(resizes)),
+            ("worker_drains_started", drains_started.into()),
+            ("workers_drained", drained.into()),
+            ("max_step_ms", (max_step.as_secs_f64() * 1e3).into()),
+            ("rounds_skipped_forward", skipped.into()),
+        ]),
+    )
+    .unwrap();
+    println!("fig9 OK -> out/fig9.csv + out/bench_worker_sweep_live.json");
 }

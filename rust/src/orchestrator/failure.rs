@@ -20,6 +20,13 @@ pub struct FailureConfig {
     pub tick: Duration,
     /// Restart a replacement this long after each kill (None = never).
     pub restart_after: Option<Duration>,
+    /// Advance preemption notice (spot/maintenance `DrainNotice`): with
+    /// `Some(notice)`, each kill is preceded by a graceful drain begin
+    /// and deferred by `notice` — the kill then fires *regardless* of
+    /// whether the drain completed (real preemption does not wait), but
+    /// a worker whose drain finished in time was already reaped with
+    /// nothing left on it. `None` = plain kill, no warning.
+    pub drain_notice: Option<Duration>,
     pub seed: u64,
 }
 
@@ -29,6 +36,7 @@ impl Default for FailureConfig {
             kill_probability: 0.5,
             tick: Duration::from_millis(100),
             restart_after: Some(Duration::from_millis(200)),
+            drain_notice: None,
             seed: 0xdead_beef,
         }
     }
@@ -39,6 +47,8 @@ pub struct FailureInjector {
     stop: Arc<AtomicBool>,
     pub kills: Arc<AtomicU64>,
     pub restarts: Arc<AtomicU64>,
+    /// Drain-notice (`DrainNotice`) events delivered before kills.
+    pub drains: Arc<AtomicU64>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -48,12 +58,15 @@ impl FailureInjector {
         let stop = Arc::new(AtomicBool::new(false));
         let kills = Arc::new(AtomicU64::new(0));
         let restarts = Arc::new(AtomicU64::new(0));
-        let (s2, k2, r2) = (stop.clone(), kills.clone(), restarts.clone());
+        let drains = Arc::new(AtomicU64::new(0));
+        let (s2, k2, r2, d2) = (stop.clone(), kills.clone(), restarts.clone(), drains.clone());
         let thread = std::thread::Builder::new()
             .name("failure-injector".into())
             .spawn(move || {
                 let mut rng = Rng::new(cfg.seed);
                 let mut pending_restarts: Vec<std::time::Instant> = Vec::new();
+                // Kills deferred by an advance drain notice: (handle, due).
+                let mut pending_kills: Vec<(u64, std::time::Instant)> = Vec::new();
                 while !s2.load(Ordering::SeqCst) {
                     std::thread::sleep(cfg.tick);
                     // Due restarts.
@@ -68,15 +81,50 @@ impl FailureInjector {
                             true
                         }
                     });
-                    // Maybe kill.
+                    // A drain that finished inside the notice window is
+                    // reaped cleanly; the deferred kill below then finds
+                    // the handle gone and is a no-op (the preemption hit
+                    // an already-empty container).
+                    cell.reap_drained();
+                    // Due deferred kills: the preemption fires whether or
+                    // not the drain completed (a cleanly-reaped handle
+                    // makes it a no-op), and the replacement is scheduled
+                    // either way — the machine was preempted regardless.
+                    pending_kills.retain(|&(handle, due)| {
+                        if due <= now {
+                            let _ = cell.kill_worker(handle);
+                            k2.fetch_add(1, Ordering::SeqCst);
+                            if let Some(d) = cfg.restart_after {
+                                pending_restarts.push(now + d);
+                            }
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    // Maybe kill (with advance notice when configured).
                     if rng.chance(cfg.kill_probability) {
                         let handles = cell.worker_handles();
                         if handles.len() > 1 {
                             let victim = *rng.choice(&handles);
-                            if cell.kill_worker(victim) {
-                                k2.fetch_add(1, Ordering::SeqCst);
-                                if let Some(d) = cfg.restart_after {
-                                    pending_restarts.push(now + d);
+                            match cfg.drain_notice {
+                                Some(notice) => {
+                                    // DrainNotice event: begin the graceful
+                                    // drain now, kill after the notice.
+                                    if !pending_kills.iter().any(|&(h, _)| h == victim)
+                                        && cell.drain_worker(victim)
+                                    {
+                                        d2.fetch_add(1, Ordering::SeqCst);
+                                        pending_kills.push((victim, now + notice));
+                                    }
+                                }
+                                None => {
+                                    if cell.kill_worker(victim) {
+                                        k2.fetch_add(1, Ordering::SeqCst);
+                                        if let Some(d) = cfg.restart_after {
+                                            pending_restarts.push(now + d);
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -85,7 +133,7 @@ impl FailureInjector {
                 }
             })
             .ok();
-        FailureInjector { stop, kills, restarts, thread }
+        FailureInjector { stop, kills, restarts, drains, thread }
     }
 
     pub fn stop(&self) {
@@ -122,6 +170,7 @@ mod tests {
                 kill_probability: 1.0,
                 tick: Duration::from_millis(20),
                 restart_after: Some(Duration::from_millis(40)),
+                drain_notice: None,
                 seed: 7,
             },
         );

@@ -77,29 +77,123 @@ impl Cell {
         Ok(handle)
     }
 
-    /// Deploy `n` workers.
-    pub fn scale_to(&self, n: usize) -> ServiceResult<()> {
+    /// Non-blocking scale request: scale-up adds workers immediately;
+    /// scale-down *begins* two-phase graceful drains of the least-loaded
+    /// workers (dispatcher-journaled `Draining` state, revoke-ack-grant
+    /// lease handoffs). The drains complete asynchronously — callers
+    /// drive [`Cell::tick`] and [`Cell::reap_drained`] (the
+    /// [`crate::service::scaling::ScalingController`] loop does both).
+    pub fn request_scale_to(&self, n: usize) -> ServiceResult<()> {
+        while self.worker_count() < n {
+            self.add_worker()?;
+        }
         loop {
-            let count = self.worker_count();
-            if count == n {
+            let candidates: Vec<u64> = {
+                let ws = self.workers.lock().unwrap();
+                ws.values()
+                    .map(|w| w.worker_id())
+                    .filter(|&id| !self.dispatcher.worker_draining(id))
+                    .collect()
+            };
+            if candidates.len() <= n {
                 return Ok(());
             }
-            if count < n {
-                self.add_worker()?;
-            } else {
-                self.remove_any_worker();
+            let Some(victim) = self.dispatcher.least_loaded_worker(&candidates) else {
+                return Ok(());
+            };
+            if !self.dispatcher.begin_worker_drain(victim).unwrap_or(false) {
+                return Ok(()); // cannot make progress (raced drain/removal)
             }
         }
     }
 
-    /// Gracefully remove one worker (scale-down), if any.
-    pub fn remove_any_worker(&self) -> bool {
-        let mut ws = self.workers.lock().unwrap();
-        if let Some(&h) = ws.keys().next() {
-            ws.remove(&h); // Drop shuts the worker down
-            return true;
+    /// Deploy (or gracefully drain down to) `n` workers, blocking until
+    /// the cell holds exactly `n`. Scale-down routes through the
+    /// two-phase drain path; a drain that cannot complete within ~10 s
+    /// (e.g. nobody left to hand a lease to) falls back to hard removal
+    /// so the call cannot wedge.
+    pub fn scale_to(&self, n: usize) -> ServiceResult<()> {
+        self.request_scale_to(n)?;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while self.worker_count() > n {
+            self.tick();
+            self.reap_drained();
+            if self.worker_count() <= n {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                // Preemption semantics as last resort — draining workers
+                // first (they were the chosen victims).
+                let mut ws = self.workers.lock().unwrap();
+                let mut victims: Vec<u64> = ws
+                    .iter()
+                    .filter(|(_, w)| self.dispatcher.worker_draining(w.worker_id()))
+                    .map(|(&h, _)| h)
+                    .collect();
+                victims.extend(ws.keys().copied());
+                for h in victims {
+                    if ws.len() <= n {
+                        break;
+                    }
+                    ws.remove(&h); // Drop shuts the worker down
+                }
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
         }
-        false
+        Ok(())
+    }
+
+    /// Remove workers whose graceful drain has completed (every lease
+    /// handed off and acked, spill flushed, nothing left to lose). The
+    /// `Worker` is dropped (shutting its threads down) *before*
+    /// `finish_worker_drain` journals the drain exit and counts
+    /// `dispatcher/workers_drained`, so no post-removal heartbeat can
+    /// resurrect the entry. Returns the removed cell handles.
+    pub fn reap_drained(&self) -> Vec<u64> {
+        let done: Vec<(u64, u64)> = {
+            let ws = self.workers.lock().unwrap();
+            ws.iter()
+                .map(|(&h, w)| (h, w.worker_id()))
+                .filter(|&(_, id)| {
+                    self.dispatcher.worker_draining(id) && self.dispatcher.drain_complete(id)
+                })
+                .collect()
+        };
+        let mut removed = Vec::new();
+        for (h, id) in done {
+            if self.workers.lock().unwrap().remove(&h).is_some() {
+                let _ = self.dispatcher.finish_worker_drain(id);
+                removed.push(h);
+            }
+        }
+        removed
+    }
+
+    /// Gracefully remove one worker (scale-down), if any: the
+    /// least-loaded worker is drained via the two-phase handoff and only
+    /// removed once nothing is left on it.
+    pub fn remove_any_worker(&self) -> bool {
+        let count = self.worker_count();
+        if count == 0 {
+            return false;
+        }
+        self.scale_to(count - 1).is_ok() && self.worker_count() == count - 1
+    }
+
+    /// Begin a two-phase graceful drain of a specific worker (advance
+    /// preemption notice). Non-blocking: the drain completes via
+    /// [`Cell::tick`] + [`Cell::reap_drained`]. Returns false for an
+    /// unknown handle or one already draining.
+    pub fn drain_worker(&self, handle: u64) -> bool {
+        let id = {
+            let ws = self.workers.lock().unwrap();
+            match ws.get(&handle) {
+                Some(w) => w.worker_id(),
+                None => return false,
+            }
+        };
+        self.dispatcher.begin_worker_drain(id).unwrap_or(false)
     }
 
     /// Preempt a specific worker (abrupt kill, no draining).

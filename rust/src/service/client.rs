@@ -297,6 +297,43 @@ pub struct DistributedIter {
     /// (event-driven wakeup — a release never waits out a sleep).
     halt_tx: chan::Sender<()>,
     released: bool,
+    /// Input-stall accounting shared with the heartbeat thread (the
+    /// autoscaler's client-starvation signal).
+    stall: Arc<StallStats>,
+}
+
+/// Shared input-stall accounting between the trainer-facing iterator and
+/// the heartbeat thread: `next()` records each fetch and whether the
+/// element was already buffered; the heartbeat thread drains the window
+/// and reports the stall fraction in thousandths (the dispatcher
+/// aggregates these into the autoscaler's client-starvation signal,
+/// §3.1 right-sizing).
+#[derive(Default)]
+struct StallStats {
+    fetches: AtomicU64,
+    stalls: AtomicU64,
+}
+
+impl StallStats {
+    fn record(&self, stalled: bool) {
+        self.fetches.fetch_add(1, Ordering::Relaxed);
+        if stalled {
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drain the window: stall fraction in thousandths [0, 1000]. 0 when
+    /// no fetches happened in the window — a busy trainer is not a
+    /// starved one.
+    fn take_fraction_milli(&self) -> u32 {
+        let f = self.fetches.swap(0, Ordering::Relaxed);
+        let s = self.stalls.swap(0, Ordering::Relaxed);
+        if f == 0 {
+            0
+        } else {
+            (s.min(f) * 1000 / f) as u32
+        }
+    }
 }
 
 /// State shared between the coordinated fetch engine thread, the
@@ -414,6 +451,7 @@ impl DistributedIter {
     ) -> ServiceResult<DistributedIter> {
         let stop = Arc::new(AtomicBool::new(false));
         let (halt_tx, halt_rx) = chan::bounded::<()>(1);
+        let stall = Arc::new(StallStats::default());
         match cfg.mode {
             ProcessingMode::Coordinated => {
                 let shared = Arc::new(CoordShared {
@@ -441,14 +479,16 @@ impl DistributedIter {
                     let halt = halt_rx.clone();
                     let hb = cfg.heartbeat_interval;
                     let ci = cfg.consumer_index;
+                    let stall2 = stall.clone();
                     std::thread::Builder::new()
                         .name("svc-client-hb".into())
                         .spawn(move || {
                             while !stop2.load(Ordering::SeqCst) {
                                 let next_round = delivered.load(Ordering::SeqCst);
-                                if let Ok(resp) =
-                                    heartbeat(&pool2, &da, job_id, client_id, ci, next_round)
-                                {
+                                let stall_milli = stall2.take_fraction_milli();
+                                if let Ok(resp) = heartbeat(
+                                    &pool2, &da, job_id, client_id, ci, next_round, stall_milli,
+                                ) {
                                     let mut o = shared.owners.lock().unwrap();
                                     o.worker_addrs = resp.worker_addrs;
                                     o.round_owner_addrs = resp.round_owner_addrs;
@@ -565,6 +605,7 @@ impl DistributedIter {
                     stop,
                     halt_tx,
                     released: false,
+                    stall,
                 })
             }
             ProcessingMode::Independent => {
@@ -595,6 +636,7 @@ impl DistributedIter {
                 let da = dispatcher_addr.clone();
                 let max_fetchers = cfg.max_fetchers;
                 let hb = cfg.heartbeat_interval;
+                let stall2 = stall.clone();
                 std::thread::Builder::new()
                     .name("svc-client-supervisor".into())
                     .spawn(move || {
@@ -603,7 +645,9 @@ impl DistributedIter {
                             if shared.stop.load(Ordering::SeqCst) {
                                 break;
                             }
-                            match heartbeat(&shared.pool, &da, job_id, client_id, 0, 0) {
+                            let stall_milli = stall2.take_fraction_milli();
+                            match heartbeat(&shared.pool, &da, job_id, client_id, 0, 0, stall_milli)
+                            {
                                 Ok(resp) => {
                                     for addr in resp.worker_addrs {
                                         if known.len() >= max_fetchers {
@@ -655,6 +699,7 @@ impl DistributedIter {
                     stop,
                     halt_tx,
                     released: false,
+                    stall,
                 })
             }
         }
@@ -757,12 +802,13 @@ fn heartbeat(
     client_id: u64,
     consumer_index: u32,
     next_round: u64,
+    stall_fraction_milli: u32,
 ) -> ServiceResult<ClientHeartbeatResp> {
     Ok(call_typed(
         pool,
         dispatcher,
         dispatcher_methods::CLIENT_HEARTBEAT,
-        &ClientHeartbeatReq { job_id, client_id, next_round, consumer_index },
+        &ClientHeartbeatReq { job_id, client_id, next_round, consumer_index, stall_fraction_milli },
         Duration::from_secs(5),
     )?)
 }
@@ -2096,7 +2142,16 @@ impl ElemIter for DistributedIter {
         match self.mode {
             ProcessingMode::Independent => {
                 let rx = self.rx.as_ref().expect("independent iter has rx");
-                match rx.recv() {
+                // Stall accounting (autoscaler input): an element already
+                // buffered means the input pipeline kept up; an empty
+                // buffer means this `next()` stalls the training step.
+                let first = rx.try_recv();
+                self.stall.record(first.is_none());
+                let got = match first {
+                    Some(v) => Ok(v),
+                    None => rx.recv(),
+                };
+                match got {
                     Ok(Ok(e)) => Ok(Some(e)),
                     Ok(Err(e)) => Err(crate::data::DataError::Other(e.to_string())),
                     Err(_) => Ok(None),
@@ -2111,7 +2166,15 @@ impl ElemIter for DistributedIter {
                 // engine; a prefetching engine is already ahead and the
                 // round is typically sitting in the channel.
                 coord.announce_demand();
-                match coord.rx.recv_timeout(coord.timeout) {
+                // Stall accounting, as in the independent arm: a round
+                // already prefetched into the channel is a hit.
+                let first = coord.rx.try_recv();
+                self.stall.record(first.is_none());
+                let got = match first {
+                    Some(v) => Ok(v),
+                    None => coord.rx.recv_timeout(coord.timeout),
+                };
+                match got {
                     Ok(Some(Ok(Some(e)))) => {
                         coord.delivered.fetch_add(1, Ordering::SeqCst);
                         Ok(Some(e))

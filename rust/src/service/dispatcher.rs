@@ -89,6 +89,26 @@ struct WorkerInfo {
     /// outage would be handed its home residues back and every consumer
     /// would stall on them until `worker_timeout` re-declares it dead.
     confirmed: bool,
+    /// The worker is in the two-phase graceful-drain state (journaled as
+    /// `WorkerDrainChanged`): no new consumers are routed to it, its
+    /// round residues are being handed off via revoke-ack-grant, and it
+    /// cannot gain leases. It keeps serving what it still owns until
+    /// each handoff's ack lands, so the drain is stall-free.
+    draining: bool,
+    /// The draining worker reported (via heartbeat) that it has applied
+    /// every revocation and flushed its pending spill buffers: nothing
+    /// a removal would lose remains on it. Gate three of
+    /// [`Dispatcher::drain_complete`].
+    drain_ready: bool,
+    /// Phase-one revocations queued for (and re-delivered on) this
+    /// worker's heartbeats until it acks them. The lease table keeps
+    /// pointing at this worker while an entry is outstanding — the
+    /// gainer's grant activates only on the ack, so loser and gainer
+    /// never co-hold a residue.
+    pending_revocations: Vec<LeaseRevoke>,
+    /// Last heartbeat-reported CPU utilization in thousandths
+    /// (autoscaler input; also the least-loaded scale-down victim pick).
+    last_cpu_milli: u32,
 }
 
 impl WorkerInfo {
@@ -105,8 +125,28 @@ impl WorkerInfo {
             alive,
             alive_since: last_heartbeat,
             confirmed: true,
+            draining: false,
+            drain_ready: false,
+            pending_revocations: Vec::new(),
+            last_cpu_milli: 0,
         }
     }
+}
+
+/// One in-flight two-phase lease handoff: residue `residue` moves from
+/// live owner `loser` to `gainer`, but the lease table keeps pointing at
+/// the loser until its revoke ack arrives. Soft state (not journaled):
+/// a dispatcher restart drops it and the next `tick()` re-plans the same
+/// handoff idempotently from the (journaled) drain flags and lease table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PendingHandoff {
+    residue: u32,
+    loser: u64,
+    gainer: u64,
+    /// True when this is a revival re-balance returning the residue to
+    /// its home owner (counts `dispatcher/round_leases_rebalanced` on
+    /// completion); false for drain-driven moves.
+    home: bool,
 }
 
 #[derive(Debug)]
@@ -138,6 +178,17 @@ struct JobState {
     /// silent past `worker_timeout`, so a crashed consumer cannot pin
     /// the job floor forever.
     client_rounds: HashMap<u32, (u64, Instant)>,
+    /// Two-phase lease handoffs in flight for this job (drain or
+    /// live-to-live revival re-balance). While a residue has an entry
+    /// here, neither mover re-plans it; the entry resolves on the
+    /// loser's revoke ack (flip + grant) or cancels if the loser dies
+    /// (failure reassignment then moves the residue — a dead loser
+    /// cannot co-hold).
+    pending_handoffs: Vec<PendingHandoff>,
+    /// Per-client input-stall fractions (thousandths) from client
+    /// heartbeats, with report times. Pruned like `client_rounds`;
+    /// aggregated into the autoscaler's client-starvation signal.
+    client_stalls: HashMap<u64, (u32, Instant)>,
     /// Membership-epoch schedule (elastic consumer width): epoch 0 is
     /// the creation-time width at barrier 0; `set_job_consumers`
     /// appends one entry per width change. Never empty; barriers are
@@ -273,6 +324,8 @@ impl Dispatcher {
                             residue_owners: worker_order.clone(),
                             worker_order,
                             client_rounds: HashMap::new(),
+                            pending_handoffs: Vec::new(),
+                            client_stalls: HashMap::new(),
                             width_epochs: vec![WidthEpoch {
                                 epoch: 0,
                                 barrier_round: 0,
@@ -358,6 +411,18 @@ impl Dispatcher {
                         meta.snapshots.insert(fingerprint, manifest);
                     }
                 }
+                JournalRecord::WorkerDrainChanged { worker_id, draining } => {
+                    // Last-writer-wins per worker. In-flight handoff and
+                    // revocation queues are soft state: the first
+                    // post-restart tick re-plans them from this flag and
+                    // the replayed lease table.
+                    if let Some(w) = meta.workers.get_mut(&worker_id) {
+                        w.draining = draining;
+                        if !draining {
+                            w.drain_ready = false;
+                        }
+                    }
+                }
             }
         }
     }
@@ -400,6 +465,8 @@ impl Dispatcher {
                 w.pending_detach.clear();
                 w.pending_rounds.clear();
                 w.pending_widths.clear();
+                w.pending_revocations.clear();
+                w.drain_ready = false;
             }
             for job in meta.jobs.values() {
                 if let Some(t) = &job.tracker {
@@ -412,9 +479,22 @@ impl Dispatcher {
         // the worker timeout belongs to a crashed consumer — drop it so
         // it cannot pin the job floor forever (the all-slots gate in
         // `JobState::floor` keeps the floor conservative until the
-        // replacement re-reports).
+        // replacement re-reports). Stall reports age out the same way.
         for job in meta.jobs.values_mut() {
             job.client_rounds.retain(|_, &mut (_, at)| now.duration_since(at) <= timeout);
+            job.client_stalls.retain(|_, &mut (_, at)| now.duration_since(at) <= timeout);
+        }
+        // Cancel two-phase handoffs whose loser died mid-handshake —
+        // before failure reassignment, so the residue (still leased to
+        // the now-dead loser) is immediately re-homed by the ordinary
+        // dead-owner path. A dead loser cannot co-hold, so the direct
+        // flip is safe there.
+        {
+            let workers = &meta.workers;
+            let alive = |w: u64| workers.get(&w).map(|wi| wi.alive).unwrap_or(false);
+            for job in meta.jobs.values_mut() {
+                job.pending_handoffs.retain(|h| alive(h.loser));
+            }
         }
         let mut lease_changed = Vec::new();
         // Failure reassignment runs every tick, not just on a death
@@ -424,11 +504,18 @@ impl Dispatcher {
         // lease to, and a later revival brought capacity back — and must
         // be re-homed as soon as any live owner exists again.
         lease_changed.extend(reassign_round_leases(&mut meta, &self.state.metrics));
-        lease_changed.extend(rebalance_revived_owners(
+        // The live-to-live movers (revival re-balance, graceful drain)
+        // only *plan* two-phase handoffs here: the lease table is not
+        // touched until the loser's revoke ack arrives on a heartbeat.
+        // The exception is a *dead* holder blocking a revived home owner
+        // (nothing can co-hold with a corpse): that flips directly and
+        // is journaled below like any dead-owner move.
+        lease_changed.extend(plan_revival_handoffs(
             &mut meta,
             self.state.cfg.revival_hysteresis,
             &self.state.metrics,
         ));
+        plan_drain_lease_handoffs(&mut meta, &self.state.metrics);
         lease_changed.sort_unstable();
         lease_changed.dedup();
         // Journal the new lease layout. Crash before the append just
@@ -472,6 +559,199 @@ impl Dispatcher {
         let resp = set_job_consumers(&self.state, SetJobConsumersReq { job_id, num_consumers })?;
         Ok((resp.epoch, resp.barrier_round))
     }
+
+    // ---- graceful drain (two-phase scale-down) ----
+
+    /// Enter the `Draining` state: journal the transition, stop routing
+    /// new consumers to the worker, and let the next `tick()` plan
+    /// revoke-ack-grant handoffs for every residue it owns. Returns
+    /// `false` when the worker was already draining (idempotent).
+    pub fn begin_worker_drain(&self, worker_id: u64) -> ServiceResult<bool> {
+        {
+            let meta = self.state.meta.lock().unwrap();
+            match meta.workers.get(&worker_id) {
+                None => return Err(ServiceError::UnknownWorker(worker_id)),
+                Some(w) if w.draining => return Ok(false),
+                Some(_) => {}
+            }
+        }
+        // Journaled before applied: a restart mid-drain resumes the
+        // drain (re-plans handoffs from the flag + replayed lease table)
+        // instead of silently re-admitting a half-drained worker.
+        journal_append(
+            &self.state,
+            &JournalRecord::WorkerDrainChanged { worker_id, draining: true },
+        )?;
+        let mut meta = self.state.meta.lock().unwrap();
+        if let Some(w) = meta.workers.get_mut(&worker_id) {
+            w.draining = true;
+            w.drain_ready = false;
+        }
+        drop(meta);
+        self.state.metrics.counter("dispatcher/worker_drains_started").inc();
+        Ok(true)
+    }
+
+    /// True when nothing on `worker_id` remains to hand off: the worker
+    /// is gone (unknown or declared dead — there is nothing left to wait
+    /// for), or it reported drain-ready, every revocation was acked, and
+    /// it holds no residue (and no pending handoff) in any live
+    /// coordinated job. The orchestrator polls this before removing a
+    /// draining worker.
+    pub fn drain_complete(&self, worker_id: u64) -> bool {
+        let meta = self.state.meta.lock().unwrap();
+        let Some(w) = meta.workers.get(&worker_id) else { return true };
+        if !w.alive {
+            return true;
+        }
+        if !w.draining || !w.drain_ready || !w.pending_revocations.is_empty() {
+            return false;
+        }
+        !meta.jobs.values().any(|j| {
+            !j.finished
+                && j.mode == ProcessingMode::Coordinated
+                && (j.residue_owners.contains(&worker_id)
+                    || j.pending_handoffs.iter().any(|h| h.loser == worker_id))
+        })
+    }
+
+    /// Record a completed drain: journal the exit from `Draining`, count
+    /// `dispatcher/workers_drained`, and retire the entry (dead, queues
+    /// cleared) so clients stop resolving it immediately instead of
+    /// after `worker_timeout`. Called by the orchestrator right after it
+    /// removes the (now state-free) worker.
+    pub fn finish_worker_drain(&self, worker_id: u64) -> ServiceResult<()> {
+        let was_draining = {
+            let mut meta = self.state.meta.lock().unwrap();
+            let retired = match meta.workers.get_mut(&worker_id) {
+                Some(w) if w.draining => {
+                    w.draining = false;
+                    w.drain_ready = false;
+                    w.alive = false;
+                    w.confirmed = false;
+                    w.assigned.clear();
+                    w.pending_tasks.clear();
+                    w.pending_attach.clear();
+                    w.pending_detach.clear();
+                    w.pending_rounds.clear();
+                    w.pending_widths.clear();
+                    w.pending_revocations.clear();
+                    true
+                }
+                _ => false,
+            };
+            if retired {
+                for job in meta.jobs.values() {
+                    if let Some(t) = &job.tracker {
+                        t.worker_failed(worker_id);
+                    }
+                }
+            }
+            retired
+        };
+        if was_draining {
+            journal_append(
+                &self.state,
+                &JournalRecord::WorkerDrainChanged { worker_id, draining: false },
+            )?;
+            self.state.metrics.counter("dispatcher/workers_drained").inc();
+        }
+        Ok(())
+    }
+
+    /// Whether `worker_id` is currently held in the `Draining` state.
+    pub fn worker_draining(&self, worker_id: u64) -> bool {
+        self.state
+            .meta
+            .lock()
+            .unwrap()
+            .workers
+            .get(&worker_id)
+            .map(|w| w.draining)
+            .unwrap_or(false)
+    }
+
+    /// Scale-down victim pick: the alive, non-draining worker among
+    /// `candidates` with the lowest heartbeat-reported CPU (ties broken
+    /// by id for determinism).
+    pub fn least_loaded_worker(&self, candidates: &[u64]) -> Option<u64> {
+        let meta = self.state.meta.lock().unwrap();
+        candidates
+            .iter()
+            .copied()
+            .filter_map(|id| meta.workers.get(&id).map(|w| (id, w)))
+            .filter(|(_, w)| w.alive && !w.draining)
+            .min_by_key(|&(id, w)| (w.last_cpu_milli, id))
+            .map(|(id, _)| id)
+    }
+
+    /// Aggregate the closed-loop autoscaling inputs: per-worker CPU from
+    /// worker heartbeats and per-client stall fractions from client
+    /// heartbeats, reduced to one controller evaluation's worth of
+    /// signals. Draining workers are excluded from capacity (they are
+    /// already on their way out) and from the utilization mean.
+    pub fn scaling_snapshot(&self) -> ScalingSnapshot {
+        let meta = self.state.meta.lock().unwrap();
+        let mut live = 0usize;
+        let mut draining = 0usize;
+        let mut util_sum = 0u64;
+        for w in meta.workers.values() {
+            if !w.alive {
+                continue;
+            }
+            if w.draining {
+                draining += 1;
+            } else {
+                live += 1;
+                util_sum += w.last_cpu_milli as u64;
+            }
+        }
+        let mut stall_sum = 0u64;
+        let mut stall_n = 0usize;
+        let mut active_jobs = 0usize;
+        for j in meta.jobs.values() {
+            if j.finished {
+                continue;
+            }
+            active_jobs += 1;
+            for &(milli, _) in j.client_stalls.values() {
+                stall_sum += milli as u64;
+                stall_n += 1;
+            }
+        }
+        ScalingSnapshot {
+            live_workers: live,
+            draining_workers: draining,
+            mean_worker_util: if live > 0 {
+                (util_sum as f64 / live as f64 / 1000.0).min(1.0)
+            } else {
+                0.0
+            },
+            client_starvation: if stall_n > 0 {
+                (stall_sum as f64 / stall_n as f64 / 1000.0).min(1.0)
+            } else {
+                0.0
+            },
+            active_jobs,
+        }
+    }
+}
+
+/// One controller evaluation's worth of aggregated autoscaling inputs
+/// (see [`Dispatcher::scaling_snapshot`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScalingSnapshot {
+    /// Alive, non-draining workers — the capacity the controller sizes.
+    pub live_workers: usize,
+    /// Workers currently in the `Draining` state (scale-down in flight).
+    pub draining_workers: usize,
+    /// Mean heartbeat-reported CPU utilization over live workers, [0, 1].
+    pub mean_worker_util: f64,
+    /// Mean client-reported input-stall fraction over fresh reports,
+    /// [0, 1]; 0 when no client has reported.
+    pub client_starvation: f64,
+    /// Unfinished jobs currently tracked.
+    pub active_jobs: usize,
 }
 
 /// Pure lease-table transition behind failure reassignment: move every
@@ -502,37 +782,77 @@ pub fn reassign_dead_residues(owners: &mut [u64], alive: &dyn Fn(u64) -> bool) -
     gained
 }
 
-/// Pure lease-table transition behind revival re-balance: hand residue
-/// `i` back to its home owner `worker_order[i]` when the home owner is
-/// `eligible` (alive and past the hysteresis window — judged by the
-/// caller) and someone else currently holds it. Returns every worker
-/// whose owned set changed (losers and gainers, deduped). Exposed for
-/// the property tests, like [`reassign_dead_residues`].
-pub fn rebalance_home_residues(
-    owners: &mut [u64],
+/// Pure planning step behind revival re-balance: residue `i` should move
+/// back to its home owner `worker_order[i]` when the home owner is
+/// `eligible` (alive, confirmed, past the hysteresis window — judged by
+/// the caller), someone else currently holds it, and no handoff is
+/// already `pending` for it. Unlike the pre-drain implementation this
+/// does NOT mutate the lease table: it returns `(residue, loser, gainer)`
+/// plans whose flips activate only once the loser acks revocation, so a
+/// residue is never co-held by two live owners. Exposed for the property
+/// tests, like [`reassign_dead_residues`].
+pub fn plan_home_handoffs(
+    owners: &[u64],
     worker_order: &[u64],
     eligible: &dyn Fn(u64) -> bool,
-) -> Vec<u64> {
-    let mut affected = Vec::new();
-    for (i, owner) in owners.iter_mut().enumerate() {
+    pending: &dyn Fn(usize) -> bool,
+) -> Vec<(usize, u64, u64)> {
+    let mut plans = Vec::new();
+    for (i, &owner) in owners.iter().enumerate() {
         let Some(&home) = worker_order.get(i) else { continue };
-        if *owner != home && eligible(home) {
-            affected.push(*owner);
-            affected.push(home);
-            *owner = home;
+        if owner != home && eligible(home) && !pending(i) {
+            plans.push((i, owner, home));
         }
     }
-    affected.sort_unstable();
-    affected.dedup();
-    affected
+    plans
 }
 
-/// Shared grant-building step of the two lease-move paths
-/// ([`reassign_round_leases`] and [`rebalance_revived_owners`]): for each
-/// affected worker, its *full* updated owned-residue set from the job's
-/// lease table, floored at the minimum round any consumer still needs.
-/// One code path builds every lease-view grant, so the two movers cannot
-/// diverge on what a worker is told it owns.
+/// Pure planning step behind graceful drain: every residue whose owner
+/// is `draining` moves to a non-draining gainer — the residue's home
+/// owner `worker_order[i]` when it is among `candidates` (alive,
+/// confirmed, non-draining — judged by the caller), else round-robin
+/// over the sorted candidate set. Residues with a handoff already
+/// `pending` are skipped. Like [`plan_home_handoffs`] this only plans:
+/// the lease table is untouched until the draining loser acks
+/// revocation. Returns `(residue, loser, gainer)` plans.
+pub fn plan_drain_handoffs(
+    owners: &[u64],
+    worker_order: &[u64],
+    draining: &dyn Fn(u64) -> bool,
+    candidates: &[u64],
+    pending: &dyn Fn(usize) -> bool,
+) -> Vec<(usize, u64, u64)> {
+    if candidates.is_empty() {
+        return Vec::new(); // nowhere to drain to; residues stay put
+    }
+    let mut next = 0usize;
+    let mut plans = Vec::new();
+    for (i, &owner) in owners.iter().enumerate() {
+        if !draining(owner) || pending(i) {
+            continue;
+        }
+        let home = worker_order.get(i).copied();
+        let gainer = match home.filter(|h| candidates.contains(h)) {
+            Some(h) => h,
+            None => {
+                let g = candidates[next % candidates.len()];
+                next += 1;
+                g
+            }
+        };
+        if gainer != owner {
+            plans.push((i, owner, gainer));
+        }
+    }
+    plans
+}
+
+/// Shared grant-building step of the lease-move paths
+/// ([`reassign_round_leases`] and [`Dispatcher`]'s handoff completion):
+/// for each affected worker, its *full* updated owned-residue set from
+/// the job's lease table, floored at the minimum round any consumer
+/// still needs. One code path builds every lease-view grant, so the
+/// movers cannot diverge on what a worker is told it owns.
 fn collect_lease_grants(job_id: u64, job: &JobState, affected: &[u64]) -> Vec<(u64, RoundAssignment)> {
     let floor = job.floor();
     affected
@@ -598,15 +918,39 @@ fn reassign_round_leases(meta: &mut Meta, metrics: &Registry) -> Vec<u64> {
     changed_jobs
 }
 
-/// Revival re-balance (§3.6, ROADMAP PR 4 follow-up): hand residues back
-/// to a home owner that has been alive past the hysteresis window, so a
-/// recovered worker resumes serving its share instead of staying
-/// leaseless until another failure. Both the losing survivor and the
-/// gaining home owner get their full updated owned sets queued for their
-/// next heartbeats, floored at the minimum round any consumer still
-/// needs. Returns the jobs whose lease table changed (for journaling).
-fn rebalance_revived_owners(meta: &mut Meta, hysteresis: Duration, metrics: &Registry) -> Vec<u64> {
+/// Merge one residue into the loser's pending revocation queue for
+/// `job_id` (create the entry if absent, skip duplicates). Entries are
+/// re-delivered on every heartbeat until acked, so queueing is
+/// idempotent by construction.
+fn queue_revocation(meta: &mut Meta, loser: u64, job_id: u64, residue: u32) {
+    let Some(w) = meta.workers.get_mut(&loser) else { return };
+    match w.pending_revocations.iter_mut().find(|r| r.job_id == job_id) {
+        Some(r) => {
+            if !r.residues.contains(&residue) {
+                r.residues.push(residue);
+            }
+        }
+        None => {
+            w.pending_revocations.push(LeaseRevoke { job_id, residues: vec![residue] });
+        }
+    }
+}
+
+/// Revival re-balance (§3.6, ROADMAP PR 4 follow-up), two-phase edition:
+/// *plan* handing residues back to a home owner that has been alive past
+/// the hysteresis window, so a recovered worker resumes serving its
+/// share instead of staying leaseless until another failure. Phase 1
+/// queues a revocation on the current (live) holder; the lease table and
+/// the gainer's grant do not move until the holder acks on a heartbeat
+/// ([`complete_lease_handoffs`]), closing the PR 5 relaxation where
+/// loser and gainer briefly co-held a residue. A *dead* holder cannot
+/// ack (and cannot co-hold), so its residues flip directly — covering
+/// the every-owner-died-then-home-revived corner, where failure
+/// reassignment has no surviving holder to lease to. Returns the jobs
+/// whose lease table changed by such direct flips (for journaling).
+fn plan_revival_handoffs(meta: &mut Meta, hysteresis: Duration, metrics: &Registry) -> Vec<u64> {
     let now = Instant::now();
+    let mut revocations: Vec<(u64, u64, u32)> = Vec::new(); // (loser, job, residue)
     let mut grants: Vec<(u64, RoundAssignment)> = Vec::new();
     let mut changed_jobs = Vec::new();
     for (&job_id, job) in meta.jobs.iter_mut() {
@@ -618,27 +962,219 @@ fn rebalance_revived_owners(meta: &mut Meta, hysteresis: Duration, metrics: &Reg
             continue;
         }
         let workers = &meta.workers;
+        let alive = |w: u64| workers.get(&w).map(|wi| wi.alive).unwrap_or(false);
         // Eligible = alive, *confirmed by a heartbeat of its current
         // incarnation* (a journal-restored worker may be a corpse under
-        // failure-detection grace), and past the hysteresis window.
+        // failure-detection grace), not draining (a worker on its way
+        // out must not gain leases), and past the hysteresis window.
         let eligible = |w: u64| {
             workers
                 .get(&w)
                 .map(|wi| {
-                    wi.alive && wi.confirmed && now.duration_since(wi.alive_since) >= hysteresis
+                    wi.alive
+                        && wi.confirmed
+                        && !wi.draining
+                        && now.duration_since(wi.alive_since) >= hysteresis
                 })
                 .unwrap_or(false)
         };
-        let affected = rebalance_home_residues(&mut job.residue_owners, &job.worker_order, &eligible);
-        if affected.is_empty() {
-            continue;
+        let handoffs = &job.pending_handoffs;
+        let pending = |i: usize| handoffs.iter().any(|h| h.residue == i as u32);
+        let plans = plan_home_handoffs(&job.residue_owners, &job.worker_order, &eligible, &pending);
+        let mut direct_gainers: Vec<u64> = Vec::new();
+        for (residue, loser, gainer) in plans {
+            if !alive(loser) {
+                job.residue_owners[residue] = gainer;
+                direct_gainers.push(gainer);
+                metrics.counter("dispatcher/round_leases_rebalanced").inc();
+                continue;
+            }
+            job.pending_handoffs.push(PendingHandoff {
+                residue: residue as u32,
+                loser,
+                gainer,
+                home: true,
+            });
+            revocations.push((loser, job_id, residue as u32));
+            metrics.counter("dispatcher/lease_handoffs_planned").inc();
         }
-        changed_jobs.push(job_id);
-        metrics.counter("dispatcher/round_leases_rebalanced").inc();
-        grants.extend(collect_lease_grants(job_id, job, &affected));
+        if !direct_gainers.is_empty() {
+            direct_gainers.sort_unstable();
+            direct_gainers.dedup();
+            changed_jobs.push(job_id);
+            grants.extend(collect_lease_grants(job_id, job, &direct_gainers));
+        }
+    }
+    for (loser, job_id, residue) in revocations {
+        queue_revocation(meta, loser, job_id, residue);
     }
     queue_lease_grants(meta, grants);
     changed_jobs
+}
+
+/// Graceful-drain lease planning: for every draining worker, plan moving
+/// each residue it owns to a fit (alive, confirmed, non-draining) gainer
+/// via the same two-phase revoke-ack-grant path as revival re-balance.
+/// The draining worker keeps serving its residues until it acks — new
+/// round data just stops being routed its way — so clients never observe
+/// an ownerless residue during scale-down.
+fn plan_drain_lease_handoffs(meta: &mut Meta, metrics: &Registry) {
+    let any_draining = meta.workers.values().any(|w| w.alive && w.draining);
+    if !any_draining {
+        return;
+    }
+    let mut candidates: Vec<u64> = meta
+        .workers
+        .iter()
+        .filter(|(_, w)| w.alive && w.confirmed && !w.draining)
+        .map(|(&id, _)| id)
+        .collect();
+    candidates.sort_unstable();
+    let mut revocations: Vec<(u64, u64, u32)> = Vec::new();
+    for (&job_id, job) in meta.jobs.iter_mut() {
+        if job.finished || job.mode != ProcessingMode::Coordinated || job.residue_owners.is_empty()
+        {
+            continue;
+        }
+        let workers = &meta.workers;
+        let draining = |w: u64| {
+            workers.get(&w).map(|wi| wi.alive && wi.draining).unwrap_or(false)
+        };
+        let handoffs = &job.pending_handoffs;
+        let pending = |i: usize| handoffs.iter().any(|h| h.residue == i as u32);
+        let plans = plan_drain_handoffs(
+            &job.residue_owners,
+            &job.worker_order,
+            &draining,
+            &candidates,
+            &pending,
+        );
+        for (residue, loser, gainer) in plans {
+            job.pending_handoffs.push(PendingHandoff {
+                residue: residue as u32,
+                loser,
+                gainer,
+                home: false,
+            });
+            revocations.push((loser, job_id, residue as u32));
+            metrics.counter("dispatcher/lease_handoffs_planned").inc();
+        }
+    }
+    for (loser, job_id, residue) in revocations {
+        queue_revocation(meta, loser, job_id, residue);
+    }
+}
+
+/// Phase 2 of the revoke-ack-grant handoff, driven by the loser's
+/// heartbeat acks: clear acked residues from the loser's revocation
+/// queue, flip the lease table to the planned gainer (re-picked if the
+/// planned one died or started draining since), journal the change, and
+/// queue full lease-view grants for the gainers. Because the flip
+/// happens strictly after the loser stopped serving (it acks only after
+/// applying the revocation and flushing spill), no residue is ever
+/// co-held by two live owners.
+fn complete_lease_handoffs(
+    state: &State,
+    meta: &mut Meta,
+    worker_id: u64,
+    acks: &[LeaseRevoke],
+) -> ServiceResult<()> {
+    if acks.is_empty() {
+        return Ok(());
+    }
+    if let Some(w) = meta.workers.get_mut(&worker_id) {
+        for ack in acks {
+            if let Some(pending) =
+                w.pending_revocations.iter_mut().find(|r| r.job_id == ack.job_id)
+            {
+                pending.residues.retain(|r| !ack.residues.contains(r));
+            }
+        }
+        w.pending_revocations.retain(|r| !r.residues.is_empty());
+    }
+    let mut changed_jobs: Vec<u64> = Vec::new();
+    let mut affected: Vec<(u64, u64)> = Vec::new(); // (job, gainer)
+    for ack in acks {
+        let Some(job) = meta.jobs.get(&ack.job_id) else { continue };
+        if job.finished {
+            continue;
+        }
+        for &residue in &ack.residues {
+            // Re-borrow per residue: the fitness check needs `meta.workers`
+            // while the flip needs `meta.jobs` mutably.
+            let Some(job) = meta.jobs.get_mut(&ack.job_id) else { break };
+            let Some(pos) = job
+                .pending_handoffs
+                .iter()
+                .position(|h| h.residue == residue && h.loser == worker_id)
+            else {
+                // No matching plan: the handoff was canceled (loser died
+                // and failure reassignment already re-homed the residue)
+                // — the ack only needed to clear the revocation above.
+                continue;
+            };
+            let h = job.pending_handoffs.remove(pos);
+            let workers = &meta.workers;
+            let fit = |w: u64| {
+                workers
+                    .get(&w)
+                    .map(|wi| wi.alive && wi.confirmed && !wi.draining)
+                    .unwrap_or(false)
+            };
+            let gainer = if fit(h.gainer) {
+                h.gainer
+            } else {
+                // Planned gainer became unfit while the revocation was in
+                // flight: fall back to the first fit worker (sorted, for
+                // determinism), else back to the loser itself — the next
+                // tick() will re-plan the move.
+                let mut ids: Vec<u64> = workers
+                    .iter()
+                    .filter(|(_, wi)| wi.alive && wi.confirmed && !wi.draining)
+                    .map(|(&id, _)| id)
+                    .collect();
+                ids.sort_unstable();
+                ids.first().copied().unwrap_or(h.loser)
+            };
+            if let Some(slot) = job.residue_owners.get_mut(residue as usize) {
+                *slot = gainer;
+            }
+            changed_jobs.push(ack.job_id);
+            affected.push((ack.job_id, gainer));
+            state.metrics.counter("dispatcher/lease_handoffs_completed").inc();
+            if h.home {
+                state.metrics.counter("dispatcher/round_leases_rebalanced").inc();
+            }
+        }
+    }
+    changed_jobs.sort_unstable();
+    changed_jobs.dedup();
+    affected.sort_unstable();
+    affected.dedup();
+    let mut grants: Vec<(u64, RoundAssignment)> = Vec::new();
+    for &job_id in &changed_jobs {
+        if let Some(job) = meta.jobs.get(&job_id) {
+            let gainers: Vec<u64> = affected
+                .iter()
+                .filter(|(j, _)| *j == job_id)
+                .map(|&(_, g)| g)
+                .collect();
+            grants.extend(collect_lease_grants(job_id, job, &gainers));
+        }
+    }
+    queue_lease_grants(meta, grants);
+    for job_id in changed_jobs {
+        if let Some(job) = meta.jobs.get(&job_id) {
+            journal_append(
+                state,
+                &JournalRecord::RoundLeaseChanged {
+                    job_id,
+                    residue_owners: job.residue_owners.clone(),
+                },
+            )?;
+        }
+    }
+    Ok(())
 }
 
 fn journal_append(state: &State, rec: &JournalRecord) -> ServiceResult<()> {
@@ -929,8 +1465,13 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         .then(|| Arc::new(SplitTracker::new(num_shards, state.cfg.split_seed ^ job_id)));
 
     // Fix the worker order now (coordinated reads round-robin is stable).
-    let mut worker_order: Vec<u64> =
-        meta.workers.iter().filter(|(_, w)| w.alive).map(|(&id, _)| id).collect();
+    // Draining workers are on their way out and take no new jobs.
+    let mut worker_order: Vec<u64> = meta
+        .workers
+        .iter()
+        .filter(|(_, w)| w.alive && !w.draining)
+        .map(|(&id, _)| id)
+        .collect();
     worker_order.sort_unstable();
 
     let job = JobState {
@@ -947,6 +1488,8 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         // Round leases start with the fixed round-robin assignment.
         residue_owners: worker_order.clone(),
         client_rounds: HashMap::new(),
+        pending_handoffs: Vec::new(),
+        client_stalls: HashMap::new(),
         width_epochs: vec![WidthEpoch {
             epoch: 0,
             barrier_round: 0,
@@ -1027,18 +1570,28 @@ fn client_heartbeat(state: &Arc<State>, req: ClientHeartbeatReq) -> ServiceResul
     if job.mode == ProcessingMode::Coordinated && req.next_round != u64::MAX {
         job.client_rounds.insert(req.consumer_index, (req.next_round, Instant::now()));
     }
+    // Input-stall signal for the closed-loop autoscaler: the fraction of
+    // this trainer's next() calls since its last heartbeat that found no
+    // element ready, in thousandths.
+    job.client_stalls.insert(req.client_id, (req.stall_fraction_milli, Instant::now()));
     // Workers serving this job, in the job's fixed coordinated order
-    // first, then any later joiners.
+    // first, then any later joiners. Draining workers are excluded: new
+    // consumer routing stops at drain start (existing round leases still
+    // resolve through `round_owner_addrs` below until handed off).
     let mut addrs = Vec::new();
     for wid in &job.worker_order {
         if let Some(w) = meta.workers.get(wid) {
-            if w.alive {
+            if w.alive && !w.draining {
                 addrs.push(w.addr.clone());
             }
         }
     }
     for (wid, w) in meta.workers.iter() {
-        if w.alive && w.assigned.contains(&req.job_id) && !job.worker_order.contains(wid) {
+        if w.alive
+            && !w.draining
+            && w.assigned.contains(&req.job_id)
+            && !job.worker_order.contains(wid)
+        {
             addrs.push(w.addr.clone());
         }
     }
@@ -1121,9 +1674,17 @@ fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<
     }
     let assigned: HashSet<u64> = job_ids.iter().copied().collect();
 
+    // A re-registering worker comes back state-free: any previous drain
+    // is over (WorkerInfo::new defaults to not draining). Journal the
+    // exit so a replayed drain flag does not survive the re-admission.
+    let was_draining =
+        existing.is_some() && meta.workers.get(&worker_id).map(|w| w.draining).unwrap_or(false);
     meta.workers.insert(worker_id, WorkerInfo::new(req.addr.clone(), Instant::now(), true, assigned));
     drop(meta);
 
+    if was_draining {
+        journal_append(state, &JournalRecord::WorkerDrainChanged { worker_id, draining: false })?;
+    }
     if existing.is_none() {
         journal_append(state, &JournalRecord::RegisterWorker { worker_id, addr: req.addr })?;
         state.metrics.counter("dispatcher/workers_registered").inc();
@@ -1200,6 +1761,14 @@ fn ingest_spill_manifests(
 
 fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResult<WorkerHeartbeatResp> {
     let mut meta = state.meta.lock().unwrap();
+    if !meta.workers.contains_key(&req.worker_id) {
+        return Err(ServiceError::UnknownWorker(req.worker_id));
+    }
+    // Phase 2 of any in-flight lease handoffs runs *before* the response
+    // is assembled: an acked revocation must not be re-delivered below,
+    // and the gainer's grant queues here so it rides the gainer's very
+    // next heartbeat.
+    complete_lease_handoffs(state, &mut meta, req.worker_id, &req.revoke_acks)?;
     let finished_jobs: Vec<u64> =
         meta.jobs.iter().filter(|(_, j)| j.finished).map(|(&id, _)| id).collect();
     // The worker's own task report is authoritative for live jobs: after
@@ -1231,6 +1800,13 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         w.alive_since = w.last_heartbeat;
     }
     w.assigned.extend(live_reported);
+    w.last_cpu_milli = req.cpu_util_milli;
+    w.drain_ready = req.drain_ready;
+    let draining = w.draining;
+    // Cloned, not taken: revocations are re-delivered on every heartbeat
+    // until the worker acks them (at-least-once; applying a revocation
+    // twice is a no-op on the worker).
+    let round_revocations = w.pending_revocations.clone();
     let new_tasks: Vec<TaskDef> = std::mem::take(&mut w.pending_tasks);
     let attached_clients = std::mem::take(&mut w.pending_attach);
     let released_clients = std::mem::take(&mut w.pending_detach);
@@ -1298,6 +1874,8 @@ fn worker_heartbeat(state: &Arc<State>, req: WorkerHeartbeatReq) -> ServiceResul
         round_assignments,
         width_updates,
         manifest_acks,
+        round_revocations,
+        drain: draining,
     })
 }
 
@@ -1517,7 +2095,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1534,6 +2119,7 @@ mod tests {
                 client_id: j.client_id,
                 next_round: 0,
                 consumer_index: 0,
+                stall_fraction_milli: 0,
             },
             timeout(),
         )
@@ -1554,7 +2140,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![j.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![j.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1712,7 +2305,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1732,7 +2332,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![a.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1754,7 +2361,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![a.job_id], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![a.job_id],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1881,7 +2495,14 @@ mod tests {
             &pool,
             &addr,
             dispatcher_methods::WORKER_HEARTBEAT,
-            &WorkerHeartbeatReq { worker_id: w.worker_id, active_tasks: vec![], cpu_util_milli: 0, spill_manifests: vec![] },
+            &WorkerHeartbeatReq {
+                worker_id: w.worker_id,
+                active_tasks: vec![],
+                cpu_util_milli: 0,
+                spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
+            },
             timeout(),
         )
         .unwrap();
@@ -1917,6 +2538,7 @@ mod tests {
                     client_id: j.client_id,
                     next_round: next,
                     consumer_index: slot,
+                    stall_fraction_milli: 0,
                 },
                 timeout(),
             )
@@ -1945,6 +2567,7 @@ mod tests {
                 client_id: j.client_id,
                 next_round: u64::MAX,
                 consumer_index: 2,
+                stall_fraction_milli: 0,
             },
             timeout(),
         )
@@ -1965,6 +2588,8 @@ mod tests {
                 active_tasks: vec![j.job_id],
                 cpu_util_milli: 0,
                 spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
             },
             timeout(),
         )
@@ -2038,6 +2663,8 @@ mod tests {
                 active_tasks: vec![a.job_id],
                 cpu_util_milli: 0,
                 spill_manifests: vec![man.clone()],
+                revoke_acks: vec![],
+                drain_ready: false,
             },
             timeout(),
         )
@@ -2054,6 +2681,8 @@ mod tests {
                 active_tasks: vec![a.job_id],
                 cpu_util_milli: 0,
                 spill_manifests: vec![man],
+                revoke_acks: vec![],
+                drain_ready: false,
             },
             timeout(),
         )
@@ -2093,6 +2722,8 @@ mod tests {
                 active_tasks: vec![],
                 cpu_util_milli: 0,
                 spill_manifests: vec![],
+                revoke_acks: vec![],
+                drain_ready: false,
             },
             timeout(),
         )
@@ -2174,6 +2805,8 @@ mod tests {
                 active_tasks: vec![a.job_id],
                 cpu_util_milli: 0,
                 spill_manifests: vec![man],
+                revoke_acks: vec![],
+                drain_ready: false,
             },
             timeout(),
         )

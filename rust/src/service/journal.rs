@@ -67,6 +67,12 @@ pub enum JournalRecord {
     /// client; replayed last-writer-wins per fingerprint (`epoch` is
     /// monotone), so a restarted dispatcher keeps serving snapshots.
     SnapshotCommitted { fingerprint: u64, epoch: u64, manifest: SpillManifest },
+    /// A worker entered (`draining: true`) or left (`false`) the
+    /// two-phase graceful-drain state. Journaled *before* the state is
+    /// acted on, so a restarted dispatcher resumes the drain — keeps the
+    /// worker out of new-consumer routing and re-initiates pending lease
+    /// handoffs — instead of silently re-admitting a half-drained worker.
+    WorkerDrainChanged { worker_id: u64, draining: bool },
 }
 
 impl Encode for JournalRecord {
@@ -136,6 +142,11 @@ impl Encode for JournalRecord {
                 w.put_u64(*epoch);
                 manifest.encode(w);
             }
+            JournalRecord::WorkerDrainChanged { worker_id, draining } => {
+                w.put_u8(9);
+                w.put_u64(*worker_id);
+                draining.encode(w);
+            }
         }
     }
 }
@@ -173,6 +184,10 @@ impl Decode for JournalRecord {
                 fingerprint: r.get_u64()?,
                 epoch: r.get_u64()?,
                 manifest: SpillManifest::decode(r)?,
+            },
+            9 => JournalRecord::WorkerDrainChanged {
+                worker_id: r.get_u64()?,
+                draining: bool::decode(r)?,
             },
             tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
         })
@@ -315,6 +330,8 @@ mod tests {
                     }],
                 },
             },
+            JournalRecord::WorkerDrainChanged { worker_id: 5, draining: true },
+            JournalRecord::WorkerDrainChanged { worker_id: 5, draining: false },
             JournalRecord::JobFinished { job_id: 1 },
         ]
     }

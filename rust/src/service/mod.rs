@@ -162,11 +162,68 @@
 //!   (the authoritative-view push), so a granted-but-undelivered
 //!   residue can never answer WrongWorker forever.
 //!
-//! Accepted relaxations (bounded, documented): a *live-to-live* lease
-//! transfer (revival re-balance) has a ≤ one-heartbeat window where
-//! loser and gainer both hold the residue — the same-batch-per-round
-//! guarantee relaxes across that window exactly as it already does
-//! across an owner crash (see [`visitation::RoundTracker`]); and a
+//! * **Two-phase live-to-live transfers** — a lease move between two
+//!   *live* workers (revival re-balance, graceful drain) never flips the
+//!   table directly. `tick()` only *plans* a handoff: a revocation for
+//!   the residue is queued on (and re-delivered to) the loser's
+//!   heartbeats while the lease keeps pointing at it. The loser applies
+//!   the revocation — dropping its buffered rounds for that residue and
+//!   refusing new ones — and **acks** on its next heartbeat; only that
+//!   ack flips `residue_owners`, journals `RoundLeaseChanged`, and
+//!   queues the gainer's grant. The loser therefore stops serving
+//!   strictly before the gainer starts: no residue is ever co-held by
+//!   two live owners (the former ≤ one-heartbeat co-hold relaxation is
+//!   closed). A loser that dies mid-handshake cancels the handoff and
+//!   falls back to the ordinary dead-owner flip, which is safe because a
+//!   dead loser cannot serve.
+//!
+//! ### Closed-loop autoscaling & graceful drain (§3.1)
+//!
+//! The [`scaling::ScalingController`] closes Autopilot's loop over live
+//! signals. Sensor path: worker heartbeats report CPU
+//! (`cpu_util_milli`), client heartbeats report the fraction of fetches
+//! that found nothing buffered (`stall_fraction_milli`, maintained by
+//! the client's fetch engine); `Dispatcher::scaling_snapshot` folds both
+//! into one reading. Decide: the [`crate::orchestrator::Autoscaler`]
+//! policy (hi/lo utilization band, starvation threshold, cooldown,
+//! min/max bounds) at ~1 Hz. Actuate: scale-up adds workers
+//! immediately; scale-down picks the least-loaded workers and walks each
+//! through the **`Draining` state machine**:
+//!
+//! ```text
+//! begin_worker_drain           worker heartbeat            orchestrator
+//!  (journaled, counted)             loop                     reap loop
+//!        |                           |                           |
+//!  Draining: no new consumers   drain:true + revocations     drain_complete?
+//!  routed, cannot gain leases,  -> revoke owned residues,    (ready + acks in
+//!  tick() plans handoffs for    flush pending spill,         + no residue or
+//!  every residue it owns        set drain_ready, ack     ->  pending handoff)
+//!        |                           |                           |
+//!        +--- revoke --- flush/handoff --- ack --- grant ---> remove worker,
+//!                                                  finish_worker_drain
+//! ```
+//!
+//! Each drain handoff is a two-phase transfer as above — the gainer's
+//! grant activates only on the draining worker's ack — so scale-down is
+//! stall-free for clients: rounds keep serving from the loser until the
+//! instant the gainer owns them, and independent-mode consumers are
+//! simply routed away from the draining worker on their next heartbeat.
+//! Only after every lease is handed off, every revocation acked, and the
+//! spill tier flushed does the orchestrator remove the worker and
+//! journal the drain exit (`dispatcher/workers_drained`). A preemption
+//! with advance notice ([`crate::orchestrator::failure`]'s
+//! `DrainNotice`) runs the same machine and kills when the notice
+//! expires whether or not the drain finished — a drain that completed in
+//! time makes the kill a no-op.
+//!
+//! Accepted relaxations (bounded, documented): a consumer can address a
+//! worker one to two heartbeats stale (route learned before a drain or
+//! handoff landed) and sees `WrongWorker`/wait answers absorbed by the
+//! client's round-prefetch depth, never an error; a drain that cannot
+//! complete within ~10 s in the *blocking* [`crate::orchestrator::Cell`]
+//! scale path (e.g. no eligible gainer remains) falls back to hard
+//! removal with the §3.4 crash-recovery guarantees; a spot preemption
+//! may still fire mid-drain (the notice is best-effort by nature); and a
 //! consumer replacement joining after its predecessor's progress entry
 //! expired (crashed consumer + pruned lease, e.g. the predecessor died
 //! during a dispatcher outage) sees floor 0, asks an owner for a round
@@ -316,6 +373,7 @@
 //! *before* its manifest is acked simply means no snapshot for that
 //! epoch (the next identical job re-produces and retries the commit).
 //!
+//! * [`scaling`] — the closed-loop autoscaling controller (§3.1).
 //! * [`sharding`] — OFF / DYNAMIC / STATIC source-data sharding (§3.3).
 //! * [`journal`] — dispatcher write-ahead journal + replay (§3.4).
 //! * [`visitation`] — data-visitation-guarantee trackers used by tests
@@ -327,6 +385,7 @@ pub mod client;
 pub mod dispatcher;
 pub mod journal;
 pub mod proto;
+pub mod scaling;
 pub mod sharding;
 pub mod spill;
 pub mod visitation;
@@ -334,6 +393,7 @@ pub mod worker;
 
 pub use client::{ServiceClient, ServiceClientConfig};
 pub use dispatcher::Dispatcher;
+pub use scaling::{ScalingConfig, ScalingController};
 pub use proto::{CompressionMode, ProcessingMode, SharingMode, ShardingPolicy};
 pub use worker::Worker;
 

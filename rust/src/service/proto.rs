@@ -290,8 +290,21 @@ pub struct ClientHeartbeatReq {
     /// inherits its predecessor's floor. Independent-mode clients
     /// send 0.
     pub consumer_index: u32,
+    /// Fraction of trainer `next()` calls since the last heartbeat that
+    /// found no element ready (the trainer stalled on input), in
+    /// thousandths [0, 1000]. 0 when no fetches happened in the window
+    /// (a busy trainer is not a starved one). Autoscaler input: the
+    /// dispatcher aggregates these into the job-level client-starvation
+    /// signal (§3.1 right-sizing).
+    pub stall_fraction_milli: u32,
 }
-wire_struct!(ClientHeartbeatReq { job_id, client_id, next_round, consumer_index });
+wire_struct!(ClientHeartbeatReq {
+    job_id,
+    client_id,
+    next_round,
+    consumer_index,
+    stall_fraction_milli
+});
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClientHeartbeatResp {
@@ -378,8 +391,41 @@ pub struct WorkerHeartbeatReq {
     /// every heartbeat until an ack arrives, so a dispatcher restart
     /// between report and commit cannot lose an epoch's snapshot.
     pub spill_manifests: Vec<SpillManifest>,
+    /// Acknowledged lease revocations (two-phase drain / re-balance):
+    /// residues from [`WorkerHeartbeatResp::round_revocations`] this
+    /// worker has fully released — buffered rounds dropped, pending
+    /// spill flushed. Only after the ack does the dispatcher commit the
+    /// gainer's grant, so loser and gainer never co-hold a residue.
+    pub revoke_acks: Vec<LeaseRevoke>,
+    /// Draining handshake: true once a worker told to drain
+    /// ([`WorkerHeartbeatResp::drain`]) has applied every revocation and
+    /// flushed its spill buffers — it holds no state a removal would
+    /// lose. The dispatcher will not report a drain complete before this.
+    pub drain_ready: bool,
 }
-wire_struct!(WorkerHeartbeatReq { worker_id, active_tasks, cpu_util_milli, spill_manifests });
+wire_struct!(WorkerHeartbeatReq {
+    worker_id,
+    active_tasks,
+    cpu_util_milli,
+    spill_manifests,
+    revoke_acks,
+    drain_ready
+});
+
+/// One round-lease revocation (or its acknowledgment, same shape both
+/// directions): the residues of one coordinated job being taken *from* a
+/// worker. Phase one of the two-phase revoke-ack-grant handoff: the
+/// dispatcher sends the revocation while the lease table still points at
+/// the loser, the loser stops serving and acks on its next heartbeat, and
+/// only then is the gainer's [`RoundAssignment`] granted — so, unlike the
+/// old direct-flip path, no residue is ever co-held by two live owners.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseRevoke {
+    pub job_id: u64,
+    /// Residues being revoked (acked), a subset of the worker's owned set.
+    pub residues: Vec<u32>,
+}
+wire_struct!(LeaseRevoke { job_id, residues });
 
 /// One consumer joining or leaving a job's shared stream, pushed to
 /// workers on their next heartbeat so the multi-consumer cache registers
@@ -480,6 +526,19 @@ pub struct WorkerHeartbeatResp {
     /// recorded (journaled into a snapshot, or discarded for a job it no
     /// longer tracks): the worker stops re-reporting them.
     pub manifest_acks: Vec<u64>,
+    /// Round-lease revocations (phase one of a drain or live-to-live
+    /// re-balance handoff): residues this worker must stop serving. The
+    /// worker drops the matching buffered rounds, flushes pending spill,
+    /// and echoes each entry back in
+    /// [`WorkerHeartbeatReq::revoke_acks`]; the gainer's grant activates
+    /// only after that ack. Re-pushed until acked (idempotent: revoking
+    /// an already-released residue is a no-op that still acks).
+    pub round_revocations: Vec<LeaseRevoke>,
+    /// True while the dispatcher holds this worker in the `Draining`
+    /// state: it should flush spill buffers eagerly and report
+    /// [`WorkerHeartbeatReq::drain_ready`] once it holds nothing a
+    /// removal would lose. New consumers are no longer routed to it.
+    pub drain: bool,
 }
 wire_struct!(WorkerHeartbeatResp {
     new_tasks,
@@ -488,7 +547,9 @@ wire_struct!(WorkerHeartbeatResp {
     released_clients,
     round_assignments,
     width_updates,
-    manifest_acks
+    manifest_acks,
+    round_revocations,
+    drain
 });
 
 /// A data-processing task: one job's pipeline on one worker.
@@ -947,7 +1008,13 @@ mod tests {
         });
         rt(GetOrCreateJobResp { job_id: 3, client_id: 8, attached: true, snapshot: false });
         rt(GetOrCreateJobResp { job_id: 4, client_id: 9, attached: false, snapshot: true });
-        rt(ClientHeartbeatReq { job_id: 3, client_id: 8, next_round: 42, consumer_index: 1 });
+        rt(ClientHeartbeatReq {
+            job_id: 3,
+            client_id: 8,
+            next_round: 42,
+            consumer_index: 1,
+            stall_fraction_milli: 125,
+        });
         rt(ClientHeartbeatResp {
             worker_addrs: vec!["127.0.0.1:1234".into()],
             job_finished: false,
@@ -1004,6 +1071,8 @@ mod tests {
                 complete: true,
                 segments: vec![],
             }],
+            revoke_acks: vec![LeaseRevoke { job_id: 3, residues: vec![1] }],
+            drain_ready: true,
         });
         rt(WorkerHeartbeatResp {
             new_tasks: vec![],
@@ -1023,6 +1092,8 @@ mod tests {
                 ],
             }],
             manifest_acks: vec![3],
+            round_revocations: vec![LeaseRevoke { job_id: 3, residues: vec![0, 2] }],
+            drain: true,
         });
         rt(SetJobConsumersReq { job_id: 3, num_consumers: 3 });
         rt(SetJobConsumersResp { epoch: 1, barrier_round: 9 });

@@ -1,0 +1,195 @@
+//! Closed-loop autoscaling: the control loop that closes §3.1's
+//! Autopilot over live service signals.
+//!
+//! The paper scales worker pools from "user hints and CPU utilization";
+//! Cachew-style policies additionally watch client batch times. The
+//! [`crate::orchestrator::Autoscaler`] holds that *policy*; this module
+//! supplies the *plant and sensor loop* around it:
+//!
+//! 1. **Sense** — worker heartbeats carry `cpu_util_milli`, client
+//!    heartbeats carry `stall_fraction_milli` (the fraction of fetches
+//!    that found no element buffered). The dispatcher folds both into a
+//!    [`crate::service::dispatcher::ScalingSnapshot`].
+//! 2. **Decide** — at ~1 Hz the controller turns the snapshot into
+//!    [`Signals`] and asks the autoscaler for a [`Decision`]; cooldown
+//!    and min/max bounds live in the policy, not here.
+//! 3. **Actuate** — `ScaleTo(n)` routes through
+//!    [`Cell::request_scale_to`]: scale-up adds workers immediately,
+//!    scale-down *begins* two-phase graceful drains of the least-loaded
+//!    workers. The loop also drives [`Cell::tick`] +
+//!    [`Cell::reap_drained`] every interval, so planned drains make
+//!    progress and drained workers are removed — mid-job, without a
+//!    client-visible stall.
+//!
+//! Telemetry (on [`ScalingController::metrics`]): counters
+//! `scaling/evaluations`, `scaling/scale_ups`, `scaling/scale_downs`;
+//! gauge `scaling/target_workers`; time series `scaling/workers`,
+//! `scaling/util`, `scaling/starvation` (the closed-loop bench plots the
+//! worker-count trajectory against offered load from these).
+
+use crate::metrics::Registry;
+use crate::orchestrator::autoscaler::{Decision, Signals};
+use crate::orchestrator::{Autoscaler, AutoscalerConfig, Cell};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Control-loop knobs (policy knobs live in [`AutoscalerConfig`]).
+#[derive(Debug, Clone)]
+pub struct ScalingConfig {
+    /// Sense/decide/actuate period (~1 Hz by default).
+    pub interval: Duration,
+    pub autoscaler: AutoscalerConfig,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig { interval: Duration::from_secs(1), autoscaler: AutoscalerConfig::default() }
+    }
+}
+
+/// Handle to a running control loop; dropping stops (and joins) it.
+pub struct ScalingController {
+    stop: Arc<AtomicBool>,
+    /// Controller telemetry (see module docs for the metric names).
+    pub metrics: Registry,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScalingController {
+    /// Start the closed loop against `cell`.
+    pub fn start(cell: Arc<Cell>, cfg: ScalingConfig) -> ScalingController {
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Registry::new();
+        let (s2, m2) = (stop.clone(), metrics.clone());
+        let thread = std::thread::Builder::new()
+            .name("scaling-controller".into())
+            .spawn(move || {
+                let mut scaler = Autoscaler::new(cfg.autoscaler.clone());
+                while !s2.load(Ordering::SeqCst) {
+                    // Interruptible sleep: the interval is long (~1 s), so
+                    // wake in small steps to keep stop()/Drop responsive.
+                    let mut waited = Duration::ZERO;
+                    while waited < cfg.interval && !s2.load(Ordering::SeqCst) {
+                        let step = (cfg.interval - waited).min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        waited += step;
+                    }
+                    if s2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Drive drains forward and reap the finished ones
+                    // before sensing, so capacity reflects this instant.
+                    cell.tick();
+                    cell.reap_drained();
+                    let snap = cell.dispatcher().scaling_snapshot();
+                    let signals = Signals {
+                        current_workers: snap.live_workers,
+                        mean_worker_util: snap.mean_worker_util,
+                        client_starvation: snap.client_starvation,
+                    };
+                    m2.counter("scaling/evaluations").inc();
+                    m2.series("scaling/workers").record(snap.live_workers as f64);
+                    m2.series("scaling/util").record(snap.mean_worker_util);
+                    m2.series("scaling/starvation").record(snap.client_starvation);
+                    match scaler.evaluate(signals) {
+                        Decision::Hold => {}
+                        Decision::ScaleTo(n) => {
+                            if n > snap.live_workers {
+                                m2.counter("scaling/scale_ups").inc();
+                            } else {
+                                m2.counter("scaling/scale_downs").inc();
+                            }
+                            m2.gauge("scaling/target_workers").set(n as i64);
+                            // Non-blocking: adds run now, drains begin now
+                            // and complete via the tick/reap above.
+                            let _ = cell.request_scale_to(n);
+                        }
+                    }
+                }
+            })
+            .ok();
+        ScalingController { stop, metrics, thread }
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ScalingController {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::udf::UdfRegistry;
+    use crate::service::dispatcher::DispatcherConfig;
+    use crate::storage::ObjectStore;
+    use std::time::Instant;
+
+    fn mk_cell() -> Arc<Cell> {
+        let store = ObjectStore::in_memory();
+        Arc::new(
+            Cell::new(store, UdfRegistry::with_builtins(), DispatcherConfig::default()).unwrap(),
+        )
+    }
+
+    #[test]
+    fn controller_enforces_min_workers() {
+        let cell = mk_cell();
+        let ctl = ScalingController::start(
+            cell.clone(),
+            ScalingConfig {
+                interval: Duration::from_millis(50),
+                autoscaler: AutoscalerConfig {
+                    min_workers: 2,
+                    cooldown: Duration::ZERO,
+                    ..Default::default()
+                },
+            },
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while cell.worker_count() < 2 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        ctl.stop();
+        assert!(cell.worker_count() >= 2, "scaled up to the floor");
+        assert!(ctl.metrics.counter("scaling/evaluations").get() >= 1);
+        assert!(ctl.metrics.counter("scaling/scale_ups").get() >= 1);
+    }
+
+    #[test]
+    fn controller_drains_idle_workers_down() {
+        let cell = mk_cell();
+        cell.scale_to(4).unwrap();
+        let ctl = ScalingController::start(
+            cell.clone(),
+            ScalingConfig {
+                interval: Duration::from_millis(50),
+                autoscaler: AutoscalerConfig {
+                    min_workers: 1,
+                    cooldown: Duration::ZERO,
+                    ..Default::default()
+                },
+            },
+        );
+        // Idle workers report ~0 CPU: the loop shrinks 4 -> 3 -> 2 -> 1
+        // through the graceful-drain path.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while cell.worker_count() > 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        ctl.stop();
+        assert_eq!(cell.worker_count(), 1, "drained down to the floor");
+        assert!(ctl.metrics.counter("scaling/scale_downs").get() >= 1);
+        let drained = cell.dispatcher().metrics().counter("dispatcher/workers_drained").get();
+        assert!(drained >= 3, "scale-down went through graceful drains (got {drained})");
+    }
+}

@@ -275,6 +275,19 @@ impl JobSpill {
         self.manifest_locked(&self.state.lock().unwrap())
     }
 
+    /// Force-flush the pending buffer as a segment (and persist the
+    /// manifest) without closing the stream. A draining worker calls
+    /// this before acking a round-lease revocation: everything it
+    /// buffered becomes durable, so nothing is lost when the worker is
+    /// removed mid-stream. No-op when the buffer is empty or the stream
+    /// already finalized.
+    pub fn flush_pending(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !st.complete {
+            self.flush_locked(&mut st);
+        }
+    }
+
     /// Close the stream: flush the pending tail and persist the
     /// manifest as complete. Idempotent.
     pub fn finalize(&self) -> SpillManifest {

@@ -1038,6 +1038,45 @@ impl CoordinatedState {
         self.space.notify_all();
     }
 
+    /// Apply a phase-1 lease revocation (graceful drain / two-phase
+    /// re-balance): drop `residues` from the owned set and discard their
+    /// buffered rounds — consumers ask the gainer once the dispatcher
+    /// flips the lease on our ack. Residues not currently owned are
+    /// ignored (revocations are re-delivered at-least-once, so a
+    /// duplicate must be a no-op that still acks). Returns how many
+    /// residues were actually dropped.
+    fn revoke(&self, residues: &[u64]) -> usize {
+        let mut st = self.inner.lock().unwrap();
+        let revoked: std::collections::BTreeSet<u64> =
+            residues.iter().map(|&r| r % self.num_workers).collect();
+        let before = st.owned.len();
+        st.owned.retain(|r| !revoked.contains(r));
+        let n = before - st.owned.len();
+        if n == 0 {
+            return 0;
+        }
+        for r in &revoked {
+            // A stale progress marker must not survive a revocation: a
+            // later re-grant labels from the dispatcher's floor.
+            st.next_by_residue.remove(r);
+        }
+        let dropped: Vec<u64> = st
+            .rounds
+            .keys()
+            .copied()
+            .filter(|r| revoked.contains(&(r % self.num_workers)))
+            .collect();
+        for r in dropped {
+            if let Some(slots) = st.rounds.remove(&r) {
+                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+            }
+        }
+        drop(st);
+        self.cond.notify_all();
+        self.space.notify_all();
+        n
+    }
+
     /// Drop buffered rounds every one of *their own* slot holders has
     /// moved past (see the type docs). Judged per round against the
     /// round's slot count rather than a global minimum watermark: after
@@ -1267,6 +1306,19 @@ struct WorkerShared {
     dispatcher_addr: String,
     worker_id: AtomicU64,
     stop: AtomicBool,
+    /// The dispatcher marked this worker `Draining` (two-phase graceful
+    /// scale-down); mirrored from the last heartbeat response.
+    draining: AtomicBool,
+    /// Set once a `drain: true` heartbeat response has been fully
+    /// processed (revocations applied, pending spill buffers flushed);
+    /// reported back as `drain_ready` on the next heartbeat.
+    drain_ready: AtomicBool,
+    /// Revocation acks accumulated while processing heartbeat responses,
+    /// delivered on the next heartbeat request. Acks fire on *every*
+    /// receipt of a revocation — the dispatcher re-delivers until an ack
+    /// lands, and revoking an already-released residue is a no-op that
+    /// must still ack.
+    revoke_acks: Mutex<Vec<LeaseRevoke>>,
     /// Recycled encode buffers for GetElements/Fetch frame assembly.
     frame_bufs: BufPool,
 }
@@ -1293,6 +1345,9 @@ impl Worker {
             dispatcher_addr: dispatcher_addr.to_string(),
             worker_id: AtomicU64::new(0),
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            drain_ready: AtomicBool::new(false),
+            revoke_acks: Mutex::new(Vec::new()),
             frame_bufs: BufPool::new(8),
         });
 
@@ -1336,6 +1391,12 @@ impl Worker {
 
     pub fn worker_id(&self) -> u64 {
         self.shared.worker_id.load(Ordering::SeqCst)
+    }
+
+    /// Whether the dispatcher has marked this worker draining (mirrored
+    /// from the last heartbeat response).
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
     }
 
     pub fn metrics(&self) -> &Registry {
@@ -1525,6 +1586,12 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
             active_tasks: active,
             cpu_util_milli: util_milli,
             spill_manifests: collect_spill_manifests(&shared),
+            // Acks for revocations applied while processing the previous
+            // response. Losing this request is safe: the dispatcher
+            // re-delivers the revocation and the re-application is a
+            // no-op that re-acks.
+            revoke_acks: std::mem::take(&mut *shared.revoke_acks.lock().unwrap()),
+            drain_ready: shared.drain_ready.load(Ordering::SeqCst),
         };
         let resp: Result<WorkerHeartbeatResp, _> = call_typed(
             &shared.pool,
@@ -1573,6 +1640,53 @@ fn heartbeat_loop(shared: Arc<WorkerShared>) {
                             shared.metrics.counter("worker/width_updates_applied").inc();
                         }
                     }
+                }
+                // Phase-1 lease revocations (graceful drain / two-phase
+                // revival re-balance): stop serving the residues *now*,
+                // then ack on the next heartbeat — the dispatcher flips
+                // the lease to the gainer only on the ack, so loser and
+                // gainer never co-hold a residue.
+                if !resp.round_revocations.is_empty() {
+                    for rv in &resp.round_revocations {
+                        if let Some(t) = shared.tasks.lock().unwrap().get(&rv.job_id).cloned() {
+                            if let TaskState::Coordinated(coord) = &t.state {
+                                let residues: Vec<u64> =
+                                    rv.residues.iter().map(|&r| r as u64).collect();
+                                let n = coord.revoke(&residues);
+                                if n > 0 {
+                                    shared
+                                        .metrics
+                                        .counter("worker/round_leases_revoked")
+                                        .add(n as u64);
+                                }
+                            }
+                        }
+                        shared.revoke_acks.lock().unwrap().push(rv.clone());
+                    }
+                }
+                // Draining: make everything buffered durable — force-
+                // flush every job's pending spill buffer — then report
+                // drain-ready on the next heartbeat. Re-run every
+                // heartbeat while the flag holds (idempotent), so spill
+                // produced after the first flush still lands.
+                let was_draining = shared.draining.swap(resp.drain, Ordering::SeqCst);
+                if resp.drain {
+                    let drain_tasks: Vec<Arc<TaskRunner>> =
+                        shared.tasks.lock().unwrap().values().cloned().collect();
+                    for t in &drain_tasks {
+                        if let TaskState::Independent { cache, .. } = &t.state {
+                            if let Some(sp) = cache.spill() {
+                                sp.flush_pending();
+                            }
+                        }
+                    }
+                    if !was_draining {
+                        shared.metrics.counter("worker/drains_started").inc();
+                    }
+                    shared.drain_ready.store(true, Ordering::SeqCst);
+                } else if was_draining {
+                    // Drain canceled (or this incarnation re-admitted).
+                    shared.drain_ready.store(false, Ordering::SeqCst);
                 }
                 // Spill-manifest acks: the dispatcher journaled (or already
                 // knew about) these epochs — stop re-reporting them.

@@ -453,6 +453,7 @@ fn preemption_wave_keeps_coordinated_rounds_exactly_once() {
             kill_probability: 0.5,
             tick: Duration::from_millis(120),
             restart_after: Some(Duration::from_millis(150)),
+            drain_notice: None,
             seed: fault_seed(17),
         },
     );
@@ -473,6 +474,158 @@ fn preemption_wave_keeps_coordinated_rounds_exactly_once() {
     assert!(inj.restarts.load(Ordering::SeqCst) >= 1, "no replacement worker ever started");
 
     // Calm water: the (partly replaced) pool still serves rounds.
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
+    assert_eq!(client.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    assert!(rounds >= 30, "expected at least 30 rounds, saw {rounds}");
+    it.release();
+    stop_tick.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+}
+
+/// Graceful scale-down mid-coordinated-epoch: a worker holding round
+/// leases is drained via the two-phase revoke-ack-grant handoff while a
+/// consumer keeps stepping. The drain must complete (worker removed,
+/// `dispatcher/workers_drained` counted, handoffs completed), every
+/// round must still be delivered exactly once with zero skips, and no
+/// client step may stall longer than ~one heartbeat — the draining
+/// owner keeps serving its residues until the instant the gainer owns
+/// them.
+#[test]
+fn graceful_scale_down_mid_epoch_is_exactly_once_and_stall_free() {
+    let store = ObjectStore::in_memory();
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(800),
+        ..Default::default()
+    };
+    let cell = Arc::new(Cell::new(store, UdfRegistry::with_builtins(), dcfg).unwrap());
+    cell.scale_to(4).unwrap();
+    // Drive the drain state machine like the scaling controller does:
+    // tick plans handoffs, reap removes workers whose drain completed.
+    let stop_tick = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let (c, s) = (cell.clone(), stop_tick.clone());
+        std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                c.tick();
+                c.reap_drained();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = client.distribute(&graph, coord_cfg("drain", 1, 0)).unwrap();
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 8);
+
+    // Begin the graceful drain of one (least-loaded) worker and keep
+    // stepping right through it, timing every step.
+    let drained_counter = cell.dispatcher().metrics().counter("dispatcher/workers_drained");
+    cell.request_scale_to(3).unwrap();
+    let mut max_gap = Duration::ZERO;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while drained_counter.get() < 1 || rounds < 40 {
+        let t0 = Instant::now();
+        drain_rounds(&mut it, &mut tracker, &mut rounds, 1);
+        max_gap = max_gap.max(t0.elapsed());
+        assert!(Instant::now() < deadline, "drain never completed while rounds flowed");
+    }
+
+    // The drain was graceful and complete: worker gone, leases handed
+    // off through the two-phase path, nothing force-killed.
+    assert_eq!(cell.worker_count(), 3);
+    let m = cell.dispatcher().metrics();
+    assert!(m.counter("dispatcher/worker_drains_started").get() >= 1);
+    assert_eq!(drained_counter.get(), 1, "exactly the requested worker drained");
+    assert!(
+        m.counter("dispatcher/lease_handoffs_completed").get() >= 1,
+        "the draining owner's residue moved via revoke-ack-grant"
+    );
+    // Stall bound: the §3.6 contract is that the loser serves until the
+    // gainer's grant activates, so a step never waits out a lease the
+    // way a crash does. One worker heartbeat (100 ms) is the protocol
+    // bound; 5x covers CI scheduler noise.
+    assert!(
+        max_gap < Duration::from_millis(500),
+        "a step stalled {max_gap:?} during the graceful drain"
+    );
+
+    // Calm water: the shrunken pool keeps serving.
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
+    assert_eq!(client.metrics().counter("client/rounds_skipped_forward").get(), 0);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    it.release();
+    stop_tick.store(true, Ordering::SeqCst);
+    let _ = ticker.join();
+}
+
+/// Preemption *with advance notice* (`DrainNotice`): the injector begins
+/// a graceful drain, waits out the notice, then kills regardless — a
+/// drain that finished in time makes the kill a no-op. Versus the plain
+/// -kill wave above, the round plane sees strictly gentler faults, and
+/// the same exactly-once/zero-skip invariants must hold.
+#[test]
+fn preemption_with_drain_notice_keeps_rounds_exactly_once() {
+    let store = ObjectStore::in_memory();
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let cell = Arc::new(Cell::new(store, UdfRegistry::with_builtins(), dcfg).unwrap());
+    cell.scale_to(4).unwrap();
+    let stop_tick = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let (c, s) = (cell.clone(), stop_tick.clone());
+        std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                c.tick();
+                c.reap_drained();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+
+    let graph = PipelineBuilder::source_range(1_000_000).build();
+    let client = ServiceClient::new(&cell.dispatcher_addr());
+    let mut it = client.distribute(&graph, coord_cfg("notice", 1, 0)).unwrap();
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
+
+    let inj = FailureInjector::start(
+        cell.clone(),
+        FailureConfig {
+            kill_probability: 0.5,
+            tick: Duration::from_millis(120),
+            restart_after: Some(Duration::from_millis(150)),
+            // ~3 worker heartbeats of warning: enough for a quiet worker
+            // to hand its leases off before the axe falls.
+            drain_notice: Some(Duration::from_millis(350)),
+            seed: fault_seed(23),
+        },
+    );
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while rounds < 25 || inj.drains.load(Ordering::SeqCst) < 2 {
+        drain_rounds(&mut it, &mut tracker, &mut rounds, 1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(Instant::now() < deadline, "round plane stalled under noticed preemptions");
+    }
+    std::thread::sleep(Duration::from_millis(400));
+    inj.stop();
+    assert!(inj.drains.load(Ordering::SeqCst) >= 2, "no advance notice was ever delivered");
+    assert!(inj.kills.load(Ordering::SeqCst) >= 2, "deferred kills never fired");
+    assert!(
+        cell.dispatcher().metrics().counter("dispatcher/worker_drains_started").get() >= 2,
+        "notices did not reach the dispatcher's drain state machine"
+    );
+
     drain_rounds(&mut it, &mut tracker, &mut rounds, 5);
     assert_eq!(client.metrics().counter("client/rounds_skipped_forward").get(), 0);
     let report = tracker.report();

@@ -14,7 +14,9 @@ use tfdatasvc::data::exec::{ElemIter, Executor, ExecutorConfig};
 use tfdatasvc::data::graph::{GraphDef, Node, PipelineBuilder};
 use tfdatasvc::data::optimize::{optimize, OptimizeOptions};
 use tfdatasvc::data::udf::UdfRegistry;
-use tfdatasvc::service::dispatcher::{reassign_dead_residues, rebalance_home_residues};
+use tfdatasvc::service::dispatcher::{
+    plan_drain_handoffs, plan_home_handoffs, reassign_dead_residues,
+};
 use tfdatasvc::service::journal::{Journal, JournalRecord};
 use tfdatasvc::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
 use tfdatasvc::service::sharding::{static_assignment, SplitTracker};
@@ -306,61 +308,200 @@ fn apply_lease_table(
     }
 }
 
-/// Random kill/revive/advance schedules against the *shipped* lease
-/// transitions ([`reassign_dead_residues`] / [`rebalance_home_residues`]
-/// are the exact functions `Dispatcher::tick` runs). Invariants:
-/// residues only ever point at alive workers, every round is served by
-/// exactly one owner, the owner's label equals the consumer's round at
-/// every serve (so nothing below a floor is ever re-served), and every
-/// round up to the final consumer position was eventually served.
+/// Model of the dispatcher's lease plane: the dead-owner flip plus the
+/// *two-phase* live-to-live movers (revival re-balance, graceful drain),
+/// driven by the exact pure transitions `Dispatcher::tick` ships
+/// ([`reassign_dead_residues`], [`plan_home_handoffs`],
+/// [`plan_drain_handoffs`]). A planned handoff only marks the residue
+/// pending; the flip happens when the loser's heartbeat *acks* — after
+/// the loser dropped its labels — mirroring `complete_lease_handoffs`
+/// (including the gainer-fitness fallback at ack time).
+struct LeaseModel {
+    m: u64,
+    worker_order: Vec<u64>,
+    owners: Vec<u64>,
+    alive: Vec<bool>,
+    draining: Vec<bool>,
+    /// Per-residue planned handoff `(loser, gainer)` awaiting the
+    /// loser's revoke ack.
+    pending: Vec<Option<(u64, u64)>>,
+    labels: std::collections::HashMap<(u64, u64), u64>,
+}
+
+impl LeaseModel {
+    fn new(m: u64) -> LeaseModel {
+        LeaseModel {
+            m,
+            worker_order: (0..m).collect(),
+            owners: (0..m).collect(),
+            alive: vec![true; m as usize],
+            draining: vec![false; m as usize],
+            pending: vec![None; m as usize],
+            labels: (0..m).map(|w| ((w, w), w)).collect(),
+        }
+    }
+
+    /// Alive, non-draining: may gain leases.
+    fn fit(&self, w: u64) -> bool {
+        self.alive[w as usize] && !self.draining[w as usize]
+    }
+
+    /// One `Dispatcher::tick`: cancel dead-loser handoffs, flip dead
+    /// owners directly (safe: a dead loser cannot co-hold), plan the
+    /// two-phase moves, reap drained workers that hold nothing.
+    fn tick(&mut self, floor: u64, trial: usize) {
+        for p in self.pending.iter_mut() {
+            if let Some((l, _)) = *p {
+                if !self.alive[l as usize] {
+                    *p = None;
+                }
+            }
+        }
+        let alive_v = self.alive.clone();
+        reassign_dead_residues(&mut self.owners, &|w: u64| alive_v[w as usize]);
+        let drain_v = self.draining.clone();
+        let eligible = |w: u64| alive_v[w as usize] && !drain_v[w as usize];
+        let pending_now: Vec<bool> = self.pending.iter().map(|p| p.is_some()).collect();
+        for (i, l, g) in
+            plan_home_handoffs(&self.owners, &self.worker_order, &eligible, &|i| pending_now[i])
+        {
+            if !self.alive[l as usize] {
+                // Dead holder: the dispatcher flips directly (a corpse
+                // cannot ack — and cannot co-hold).
+                self.owners[i] = g;
+            } else {
+                self.pending[i] = Some((l, g));
+            }
+        }
+        apply_lease_table(&self.owners, &mut self.labels, floor, self.m);
+        let candidates: Vec<u64> = (0..self.m).filter(|&w| eligible(w)).collect();
+        let pending_now: Vec<bool> = self.pending.iter().map(|p| p.is_some()).collect();
+        for (i, l, g) in plan_drain_handoffs(
+            &self.owners,
+            &self.worker_order,
+            &|w: u64| drain_v[w as usize],
+            &candidates,
+            &|i| pending_now[i],
+        ) {
+            self.pending[i] = Some((l, g));
+        }
+        // Reap: a draining worker that owns nothing and has no ack
+        // outstanding is `drain_complete` — removed with nothing on it.
+        for w in 0..self.m {
+            if self.alive[w as usize]
+                && self.draining[w as usize]
+                && !self.owners.contains(&w)
+                && !self.pending.iter().any(|p| matches!(p, Some((l, _)) if *l == w))
+            {
+                self.alive[w as usize] = false;
+                self.draining[w as usize] = false;
+                assert!(
+                    !self.labels.keys().any(|&(lw, _)| lw == w),
+                    "trial {trial}: reaped worker {w} still held labels"
+                );
+            }
+        }
+    }
+
+    /// The loser's heartbeat: apply every queued revocation (drop the
+    /// label — buffered rounds die with it) and ack, which flips the
+    /// lease to the gainer (re-checking its fitness, as
+    /// `complete_lease_handoffs` does).
+    fn ack(&mut self, w: u64, floor: u64) {
+        let mut completed = false;
+        for i in 0..self.pending.len() {
+            let Some((l, g)) = self.pending[i] else { continue };
+            if l != w {
+                continue;
+            }
+            // Revoke strictly before the flip: the loser stops serving
+            // before the gainer starts.
+            self.labels.remove(&(w, i as u64));
+            let gainer = if self.fit(g) {
+                g
+            } else {
+                (0..self.m).find(|&x| self.fit(x)).unwrap_or(l)
+            };
+            self.owners[i] = gainer;
+            self.pending[i] = None;
+            completed = true;
+        }
+        if completed {
+            apply_lease_table(&self.owners, &mut self.labels, floor, self.m);
+        }
+    }
+
+    /// The headline invariants, checked after every step: every residue
+    /// is leased to an alive worker, and **no residue is ever co-held**
+    /// — only its current owner may hold a serving label for it.
+    fn assert_invariants(&self, trial: usize) {
+        for (i, &o) in self.owners.iter().enumerate() {
+            assert!(self.alive[o as usize], "trial {trial}: residue {i} leased to dead {o}");
+            for w in 0..self.m {
+                if w != o {
+                    assert!(
+                        !self.labels.contains_key(&(w, i as u64)),
+                        "trial {trial}: residue {i} co-held by {w} and owner {o}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Random kill / revive / drain / heartbeat / advance schedules against
+/// the shipped lease transitions. Invariants: residues only ever point
+/// at alive workers, **no residue is ever co-held by two live owners**
+/// (the two-phase revoke-ack-grant guarantee), the owner's label equals
+/// the consumer's round at every serve (nothing below a floor is ever
+/// re-served), every round up to the final consumer position was served
+/// exactly once, and after quiescing every eligible home owner holds its
+/// home residue while drained workers hold nothing.
 #[test]
-fn prop_round_lease_invariants_under_kill_revive_rebalance() {
+fn prop_round_lease_invariants_under_kill_revive_drain() {
     use std::collections::HashMap;
     let mut rng = Rng::new(0x9_000b);
     for trial in 0..TRIALS {
-        let n = rng.below_usize(6) + 1;
-        let m = n as u64;
-        let worker_order: Vec<u64> = (0..m).collect();
-        let mut owners = worker_order.clone();
-        let mut alive = vec![true; n];
-        // (worker, residue) -> next round label, present only while owned.
-        let mut labels: HashMap<(u64, u64), u64> = (0..m).map(|w| ((w, w), w)).collect();
+        let m = rng.below(6) + 1;
+        let mut model = LeaseModel::new(m);
         let mut consumer_round = 0u64;
         let mut served: HashMap<u64, u64> = HashMap::new(); // round -> server
 
         for _step in 0..250 {
-            let dead_count = alive.iter().filter(|&&a| !a).count();
+            let alive_count = model.alive.iter().filter(|&&a| a).count();
+            let fit_count = (0..m).filter(|&w| model.fit(w)).count();
             let roll = rng.f64();
-            if roll < 0.15 && n - dead_count >= 2 {
-                // Kill an alive worker; its residues move to survivors.
-                let victims: Vec<u64> = (0..m).filter(|&w| alive[w as usize]).collect();
-                let w = *rng.choice(&victims);
-                alive[w as usize] = false;
-                let gained = reassign_dead_residues(&mut owners, &|x: u64| alive[x as usize]);
-                assert!(!gained.is_empty(), "trial {trial}: survivors must adopt");
-                apply_lease_table(&owners, &mut labels, consumer_round, m);
-            } else if roll < 0.30 && dead_count > 0 {
-                // Revive a dead worker; home residues re-balance back.
-                let downs: Vec<u64> = (0..m).filter(|&w| !alive[w as usize]).collect();
+            if roll < 0.12 && alive_count >= 2 {
+                // Kill an alive worker (preemption without notice).
+                let ups: Vec<u64> = (0..m).filter(|&w| model.alive[w as usize]).collect();
+                let w = *rng.choice(&ups);
+                model.alive[w as usize] = false;
+            } else if roll < 0.24 && alive_count < m as usize {
+                // Revive: re-registration resets any half-finished drain.
+                let downs: Vec<u64> = (0..m).filter(|&w| !model.alive[w as usize]).collect();
                 let w = *rng.choice(&downs);
-                alive[w as usize] = true;
-                let affected = rebalance_home_residues(&mut owners, &worker_order, &|x: u64| {
-                    alive[x as usize]
-                });
-                assert!(
-                    affected.contains(&w),
-                    "trial {trial}: revived worker {w} did not regain its home residue"
-                );
-                apply_lease_table(&owners, &mut labels, consumer_round, m);
+                model.alive[w as usize] = true;
+                model.draining[w as usize] = false;
+            } else if roll < 0.32 && fit_count >= 2 {
+                // Begin a graceful drain (scale-down victim).
+                let fits: Vec<u64> = (0..m).filter(|&w| model.fit(w)).collect();
+                let w = *rng.choice(&fits);
+                model.draining[w as usize] = true;
+            } else if roll < 0.55 && alive_count > 0 {
+                // A random worker heartbeats: revokes + acks its pendings.
+                let ups: Vec<u64> = (0..m).filter(|&w| model.alive[w as usize]).collect();
+                let w = *rng.choice(&ups);
+                model.ack(w, consumer_round);
             } else {
                 // Consumer advances one round through the current table.
                 let r = consumer_round % m;
-                let o = owners[r as usize];
+                let o = model.owners[r as usize];
                 assert!(
-                    alive[o as usize],
+                    model.alive[o as usize],
                     "trial {trial}: residue {r} leased to dead worker {o}"
                 );
-                let label = labels
+                let label = model
+                    .labels
                     .get(&(o, r))
                     .copied()
                     .unwrap_or_else(|| panic!("trial {trial}: owner {o} has no label for {r}"));
@@ -368,12 +509,42 @@ fn prop_round_lease_invariants_under_kill_revive_rebalance() {
                 // consumer needs: never below (a consumed round
                 // re-labeled), never above (an unserved round skipped).
                 assert_eq!(label, consumer_round, "trial {trial}");
-                labels.insert((o, r), consumer_round + m);
+                model.labels.insert((o, r), consumer_round + m);
                 assert!(
                     served.insert(consumer_round, o).is_none(),
                     "trial {trial}: round {consumer_round} served twice"
                 );
                 consumer_round += 1;
+            }
+            model.tick(consumer_round, trial);
+            model.assert_invariants(trial);
+        }
+        // Quiesce: keep ticking and heartbeating until every planned
+        // handoff has acked and flipped.
+        for _ in 0..8 {
+            model.tick(consumer_round, trial);
+            for w in 0..m {
+                if model.alive[w as usize] {
+                    model.ack(w, consumer_round);
+                }
+            }
+            model.assert_invariants(trial);
+        }
+        assert!(
+            model.pending.iter().all(|p| p.is_none()),
+            "trial {trial}: handoffs left pending after quiesce"
+        );
+        let any_fit = (0..m).any(|w| model.fit(w));
+        for (i, &o) in model.owners.iter().enumerate() {
+            let home = model.worker_order[i];
+            if model.fit(home) {
+                assert_eq!(o, home, "trial {trial}: eligible home {home} lost residue {i} to {o}");
+            }
+            if any_fit {
+                assert!(
+                    !model.draining[o as usize],
+                    "trial {trial}: residue {i} stuck on draining worker {o}"
+                );
             }
         }
         // Eventual service: every round up to the final position was
@@ -413,7 +584,7 @@ fn rand_manifest(rng: &mut Rng) -> SpillManifest {
 }
 
 fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
-    match rng.below(9) {
+    match rng.below(10) {
         0 => JournalRecord::RegisterDataset { dataset_id: rng.next_u64(), graph: rand_graph(rng) },
         1 => JournalRecord::CreateJob {
             job_id: rng.next_u64(),
@@ -443,11 +614,15 @@ fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
             epoch: rng.next_u64() % 16,
             manifest: rand_manifest(rng),
         },
-        _ => JournalRecord::ConsumerSetChanged {
+        8 => JournalRecord::ConsumerSetChanged {
             job_id: rng.next_u64(),
             epoch: rng.next_u32(),
             barrier_round: rng.next_u64(),
             num_consumers: rng.next_u32() % 16,
+        },
+        _ => JournalRecord::WorkerDrainChanged {
+            worker_id: rng.next_u64(),
+            draining: rng.chance(0.5),
         },
     }
 }
@@ -468,7 +643,7 @@ fn prop_journal_records_roundtrip_byte_identical() {
         assert_eq!(back, rec, "trial {trial}");
         assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
     }
-    assert_eq!(variants_seen.len(), 9, "generator covered every record variant");
+    assert_eq!(variants_seen.len(), 10, "generator covered every record variant");
 }
 
 /// `SpillManifest` (the snapshot-commit payload) roundtrips
