@@ -1,0 +1,211 @@
+//! Durable control plane restore path (§3.4): dispatcher restart cost as
+//! journal history grows, with and without snapshot compaction, plus the
+//! cost of shedding `GetOrCreateJob` under admission control.
+//!
+//! Three sections:
+//! 1. **Full replay**: a dispatcher restarted over a long churn history
+//!    (job create/join/release/finish cycles) replays every record.
+//! 2. **Snapshot-compacted restore**: after `compact_now()` the same
+//!    restart decodes one snapshot plus a fresh suffix — the replayed
+//!    record count must drop by >= 10x (the acceptance bar).
+//! 3. **Overload shed**: with the admission budget spent, rejected job
+//!    creations are measured round-trip; sheds journal nothing, so the
+//!    rejection path stays cheap under overload.
+//!
+//! `--smoke` shrinks the history for CI. Results land in
+//! `out/bench_restore.json` and the repo-root baseline `BENCH_restore.json`.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tfdatasvc::data::graph::PipelineBuilder;
+use tfdatasvc::metrics::write_json_file;
+use tfdatasvc::rpc::{call_typed, Pool, RpcError};
+use tfdatasvc::service::dispatcher::{Dispatcher, DispatcherConfig};
+use tfdatasvc::service::journal::{Journal, JournalRecord};
+use tfdatasvc::service::proto::{
+    dispatcher_methods, GetOrCreateJobReq, GetOrCreateJobResp, ProcessingMode,
+    RegisterDatasetReq, RegisterDatasetResp, ShardingPolicy, SharingMode,
+};
+use tfdatasvc::service::OVERLOADED_PREFIX;
+use tfdatasvc::util::json::obj;
+
+const T: Duration = Duration::from_secs(5);
+
+/// Fresh journal path in the bench temp dir; removes the base file *and*
+/// every `{base}.snap-N` / `{base}.suffix-N` sibling a previous run left.
+fn journal_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tfdatasvc-bench-journals");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fname = format!("{name}-{}", std::process::id());
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for e in entries.flatten() {
+            if e.file_name().to_string_lossy().starts_with(&fname) {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+    dir.join(fname)
+}
+
+/// Write a churn history: `jobs` full create/join/release/finish cycles
+/// (5 records each) over one registered dataset and worker, then one job
+/// left live so the compacted snapshot is non-trivial.
+fn write_churn_history(path: &PathBuf, jobs: u64) -> u64 {
+    let j = Journal::open(path).unwrap();
+    let mut n = 0u64;
+    let mut put = |rec: &JournalRecord| {
+        j.append(rec).unwrap();
+        n += 1;
+    };
+    put(&JournalRecord::RegisterWorker { worker_id: 1, addr: "127.0.0.1:1".into() });
+    put(&JournalRecord::RegisterDataset {
+        dataset_id: 7,
+        graph: PipelineBuilder::source_range(64).build(),
+    });
+    for i in 0..jobs {
+        let job_id = i + 1;
+        put(&JournalRecord::CreateJob {
+            job_id,
+            dataset_id: 7,
+            job_name: String::new(),
+            sharding: ShardingPolicy::Dynamic,
+            mode: ProcessingMode::Independent,
+            num_consumers: 0,
+            sharing: SharingMode::Off,
+            worker_order: vec![1],
+            snapshot: false,
+        });
+        put(&JournalRecord::ClientJoined { job_id, client_id: i + 1 });
+        put(&JournalRecord::ClientReleased { job_id, client_id: i + 1 });
+        put(&JournalRecord::JobFinished { job_id });
+    }
+    // One live job survives into the snapshot.
+    put(&JournalRecord::CreateJob {
+        job_id: jobs + 1,
+        dataset_id: 7,
+        job_name: "live".into(),
+        sharding: ShardingPolicy::Dynamic,
+        mode: ProcessingMode::Independent,
+        num_consumers: 0,
+        sharing: SharingMode::Off,
+        worker_order: vec![1],
+        snapshot: false,
+    });
+    put(&JournalRecord::ClientJoined { job_id: jobs + 1, client_id: jobs + 1 });
+    n
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---- 1 + 2: restore latency, full replay vs compacted ----
+    let jobs = if smoke { 500 } else { 2500 };
+    let jpath = journal_path("restore-path");
+    let history = write_churn_history(&jpath, jobs);
+    println!("=== Restore path ({history} journal records, {jobs} churned jobs) ===");
+    if !smoke {
+        assert!(history >= 10_000, "full run must exercise a >=10k-record history");
+    }
+
+    let cfg = DispatcherConfig { journal_path: Some(jpath.clone()), ..Default::default() };
+    let t0 = Instant::now();
+    let d = Dispatcher::start("127.0.0.1:0", cfg.clone()).unwrap();
+    let t_full = t0.elapsed();
+    let replayed_full = d.metrics().counter("dispatcher/restore_records_replayed").get();
+    assert_eq!(replayed_full, history, "full replay must visit every record");
+    let seq = d.compact_now().expect("compaction must install a snapshot");
+    assert!(d.metrics().counter("dispatcher/snapshots_written").get() >= 1);
+    drop(d); // server shutdown; journal released
+
+    let t1 = Instant::now();
+    let d2 = Dispatcher::start("127.0.0.1:0", cfg).unwrap();
+    let t_snap = t1.elapsed();
+    let replayed_snap = d2.metrics().counter("dispatcher/restore_records_replayed").get();
+    assert_eq!(
+        d2.metrics().counter("dispatcher/restore_fallbacks").get(),
+        0,
+        "pristine snapshot restore must not fall back"
+    );
+    assert!(
+        replayed_snap * 10 <= replayed_full,
+        "compaction must cut replayed records >=10x ({replayed_snap} vs {replayed_full})"
+    );
+    let reduction = replayed_full as f64 / (replayed_snap.max(1)) as f64;
+    println!(
+        "full replay:      {t_full:?} ({replayed_full} records)\n\
+         compacted (seq {seq}): {t_snap:?} ({replayed_snap} records replayed, {reduction:.0}x fewer)"
+    );
+    drop(d2);
+
+    // ---- 3: overload shed round-trip cost ----
+    let d = Dispatcher::start(
+        "127.0.0.1:0",
+        DispatcherConfig { admission_max_jobs: 1, admission_retry_ms: 25, ..Default::default() },
+    )
+    .unwrap();
+    let pool = Pool::with_defaults();
+    let reg: RegisterDatasetResp = call_typed(
+        &pool,
+        &d.addr(),
+        dispatcher_methods::REGISTER_DATASET,
+        &RegisterDatasetReq { graph: PipelineBuilder::source_range(16).build(), udf_digests: Vec::new() },
+        T,
+    )
+    .unwrap();
+    let job_req = GetOrCreateJobReq {
+        dataset_id: reg.dataset_id,
+        job_name: String::new(),
+        sharding: ShardingPolicy::Off,
+        mode: ProcessingMode::Independent,
+        num_consumers: 0,
+        sharing: SharingMode::Off,
+    };
+    // Spend the one-job budget, then hammer the shed path.
+    let _admitted: GetOrCreateJobResp =
+        call_typed(&pool, &d.addr(), dispatcher_methods::GET_OR_CREATE_JOB, &job_req, T).unwrap();
+    let sheds: u64 = if smoke { 50 } else { 500 };
+    let t2 = Instant::now();
+    for _ in 0..sheds {
+        let r: Result<GetOrCreateJobResp, RpcError> =
+            call_typed(&pool, &d.addr(), dispatcher_methods::GET_OR_CREATE_JOB, &job_req, T);
+        match r {
+            Err(RpcError::Remote(msg)) if msg.contains(OVERLOADED_PREFIX) => {}
+            other => panic!("expected overload shed, got {other:?}"),
+        }
+    }
+    let t_shed = t2.elapsed();
+    assert_eq!(d.metrics().counter("dispatcher/jobs_shed").get(), sheds);
+    let shed_us = t_shed.as_secs_f64() * 1e6 / sheds as f64;
+    println!("overload shed:    {sheds} rejections in {t_shed:?} ({shed_us:.0} us/call round-trip)");
+
+    let bench_json = obj([
+        ("bench", "restore_path".into()),
+        ("smoke", smoke.into()),
+        (
+            "restore",
+            obj([
+                ("history_records", history.into()),
+                ("full_replay_ms", (t_full.as_secs_f64() * 1e3).into()),
+                ("full_replay_records", replayed_full.into()),
+                ("snapshot_restore_ms", (t_snap.as_secs_f64() * 1e3).into()),
+                ("snapshot_restore_records", replayed_snap.into()),
+                ("replay_reduction_x", reduction.into()),
+            ]),
+        ),
+        (
+            "overload_shed",
+            obj([
+                ("sheds", sheds.into()),
+                ("total_ms", (t_shed.as_secs_f64() * 1e3).into()),
+                ("shed_us_per_call", shed_us.into()),
+            ]),
+        ),
+    ]);
+    write_json_file("out/bench_restore.json", &bench_json).unwrap();
+    // Repo-root mirror under the stable name the roadmap tracks (CI
+    // regenerates it every run; the checked-in copy is the latest
+    // accepted baseline).
+    write_json_file("BENCH_restore.json", &bench_json).unwrap();
+    println!("restore_path OK -> out/bench_restore.json + BENCH_restore.json");
+}

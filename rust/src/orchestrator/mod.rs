@@ -38,7 +38,13 @@ pub struct Cell {
 
 impl Cell {
     /// Deploy a dispatcher and return the cell.
-    pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry, cfg: DispatcherConfig) -> ServiceResult<Cell> {
+    pub fn new(store: Arc<ObjectStore>, udfs: UdfRegistry, mut cfg: DispatcherConfig) -> ServiceResult<Cell> {
+        // The cell's store doubles as the spill/snapshot tier: hand it
+        // to the dispatcher so superseded-snapshot GC can delete the
+        // objects it journals as collected.
+        if cfg.store.is_none() {
+            cfg.store = Some(store.clone());
+        }
         let dispatcher = Dispatcher::start("127.0.0.1:0", cfg)?;
         Ok(Cell {
             store,

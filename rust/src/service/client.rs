@@ -227,26 +227,57 @@ impl ServiceClient {
         self.distribute_dataset(dataset_id, cfg)
     }
 
-    /// Join (or create) a job over an already-registered dataset.
+    /// Join (or create) a job over an already-registered dataset. An
+    /// [`OVERLOADED_PREFIX`](super::OVERLOADED_PREFIX) shed from the
+    /// dispatcher's admission control is retried here with jittered
+    /// backoff around the server's `retry after N ms` hint
+    /// (`client/admission_retries`) — the shed is flow control, not
+    /// failure — up to a bounded attempt budget before surfacing.
     pub fn distribute_dataset(
         &self,
         dataset_id: u64,
         cfg: ServiceClientConfig,
     ) -> ServiceResult<DistributedIter> {
-        let job: GetOrCreateJobResp = call_typed(
-            &self.pool,
-            &self.dispatcher_addr,
-            dispatcher_methods::GET_OR_CREATE_JOB,
-            &GetOrCreateJobReq {
-                dataset_id,
-                job_name: cfg.job_name.clone(),
-                sharding: cfg.sharding,
-                mode: cfg.mode,
-                num_consumers: cfg.num_consumers,
-                sharing: cfg.sharing,
-            },
-            Duration::from_secs(10),
-        )?;
+        let req = GetOrCreateJobReq {
+            dataset_id,
+            job_name: cfg.job_name.clone(),
+            sharding: cfg.sharding,
+            mode: cfg.mode,
+            num_consumers: cfg.num_consumers,
+            sharing: cfg.sharing,
+        };
+        const ADMISSION_ATTEMPTS: u32 = 32;
+        let mut jitter = crate::util::rng::Rng::new(
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+                .unwrap_or(0x5eed)
+                ^ dataset_id,
+        );
+        let mut attempt = 0u32;
+        let job: GetOrCreateJobResp = loop {
+            match call_typed(
+                &self.pool,
+                &self.dispatcher_addr,
+                dispatcher_methods::GET_OR_CREATE_JOB,
+                &req,
+                Duration::from_secs(10),
+            ) {
+                Ok(resp) => break resp,
+                Err(crate::rpc::RpcError::Remote(msg))
+                    if msg.contains(super::OVERLOADED_PREFIX) && attempt + 1 < ADMISSION_ATTEMPTS =>
+                {
+                    attempt += 1;
+                    self.metrics.counter("client/admission_retries").inc();
+                    // Hinted delay ±50% jitter: a storm of shed clients
+                    // must not re-arrive in lockstep and be shed again.
+                    let hint = parse_retry_hint(&msg).unwrap_or(25).max(1);
+                    let wait = jitter.range_u64(hint / 2, hint + hint / 2);
+                    std::thread::sleep(Duration::from_millis(wait));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
         // Anonymous attaches are fingerprint (§3.5) sharing; named joins
         // are explicit grouping — mirror the dispatcher's counter split.
         if job.attached && cfg.job_name.is_empty() {
@@ -1509,6 +1540,14 @@ enum RoundResolution {
 /// [`crate::service::ROUND_CONSUMED_PREFIX`]).
 fn parse_skip_hint(msg: &str) -> Option<u64> {
     let tail = &msg[msg.rfind("next round ")? + "next round ".len()..];
+    let digits: String = tail.chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+/// Parse the `retry after {n} ms` hint from the dispatcher's admission
+/// shed (see [`crate::service::OVERLOADED_PREFIX`]).
+fn parse_retry_hint(msg: &str) -> Option<u64> {
+    let tail = &msg[msg.rfind("retry after ")? + "retry after ".len()..];
     let digits: String = tail.chars().take_while(char::is_ascii_digit).collect();
     digits.parse().ok()
 }

@@ -11,14 +11,17 @@
 //! declared failed and its in-flight splits are recorded lost
 //! (at-most-once visitation).
 
-use super::journal::{Journal, JournalRecord};
+use super::journal::{
+    DispatcherSnapshot, Journal, JournalRecord, SnapshotJob, SnapshotNamedJob, SnapshotWorker,
+};
 use super::proto::*;
 use super::sharding::{static_assignment, SplitTracker};
-use super::spill::{merge_manifests, partition_manifest, SpillManifest};
+use super::spill::{data_key, manifest_key, merge_manifests, partition_manifest, SpillManifest};
 use super::{ServiceError, ServiceResult};
 use crate::data::graph::GraphDef;
 use crate::metrics::Registry;
 use crate::rpc::{RespBody, Server};
+use crate::storage::ObjectStore;
 use crate::wire::{Decode, Encode};
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -26,7 +29,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Dispatcher tuning knobs.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct DispatcherConfig {
     /// Write-ahead journal path; `None` = in-memory only (tests).
     pub journal_path: Option<PathBuf>,
@@ -39,6 +42,27 @@ pub struct DispatcherConfig {
     /// adopted them (§3.6): hysteresis, so a flapping worker cannot
     /// thrash leases on every heartbeat it manages to land.
     pub revival_hysteresis: Duration,
+    /// Compaction trigger: once the live journal suffix exceeds this many
+    /// bytes, the next `tick()` cuts a [`DispatcherSnapshot`] checkpoint
+    /// and swaps to a fresh suffix — off the RPC hot path. 0 disables
+    /// automatic compaction (checkpoints can still be cut via
+    /// [`Dispatcher::compact_now`]).
+    pub journal_compact_bytes: u64,
+    /// Admission budget: the maximum unfinished jobs the dispatcher will
+    /// track. Past it, `GetOrCreateJob` requests that would *create* a
+    /// job are shed with a retryable [`ServiceError::Overloaded`]
+    /// (attaches to existing jobs stay admitted — they add a cursor, not
+    /// a production). 0 disables admission control.
+    pub admission_max_jobs: usize,
+    /// Retry hint handed to shed clients (`Overloaded::retry_after_ms`);
+    /// the service client backs off this long (jittered) before
+    /// retrying.
+    pub admission_retry_ms: u64,
+    /// Object store for journal-driven spill-snapshot GC: when a newer
+    /// epoch snapshot commits for a fingerprint, the superseded
+    /// snapshot's `spill/job-{id}/*` objects are deleted here. `None`
+    /// disables GC (superseded data then lives until external cleanup).
+    pub store: Option<Arc<ObjectStore>>,
 }
 
 impl Default for DispatcherConfig {
@@ -48,7 +72,27 @@ impl Default for DispatcherConfig {
             worker_timeout: Duration::from_secs(10),
             split_seed: 0x5317_d15b,
             revival_hysteresis: Duration::from_millis(500),
+            journal_compact_bytes: 4 << 20,
+            admission_max_jobs: 4096,
+            admission_retry_ms: 25,
+            store: None,
         }
+    }
+}
+
+// Hand-written: `ObjectStore` holds live net/region state with no Debug.
+impl std::fmt::Debug for DispatcherConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DispatcherConfig")
+            .field("journal_path", &self.journal_path)
+            .field("worker_timeout", &self.worker_timeout)
+            .field("split_seed", &self.split_seed)
+            .field("revival_hysteresis", &self.revival_hysteresis)
+            .field("journal_compact_bytes", &self.journal_compact_bytes)
+            .field("admission_max_jobs", &self.admission_max_jobs)
+            .field("admission_retry_ms", &self.admission_retry_ms)
+            .field("store", &self.store.as_ref().map(|_| "ObjectStore"))
+            .finish()
     }
 }
 
@@ -254,18 +298,41 @@ pub struct Dispatcher {
 use super::graph_num_shards;
 
 impl Dispatcher {
-    /// Start a dispatcher on `addr` (port 0 = ephemeral), replaying the
-    /// journal if one is configured and present.
+    /// Start a dispatcher on `addr` (port 0 = ephemeral), restoring from
+    /// the newest valid journal snapshot + suffix if one is configured
+    /// and present. Restore is corruption-tolerant ([`Journal::restore`]
+    /// walks the fallback ladder); degraded steps surface as
+    /// `dispatcher/restore_fallbacks`.
     pub fn start(addr: &str, cfg: DispatcherConfig) -> ServiceResult<Dispatcher> {
+        let mut meta = Meta { next_worker_id: 1, next_job_id: 1, next_client_id: 1, ..Default::default() };
+        let mut replayed = 0u64;
+        let mut fallbacks = 0u64;
+        let mut gc_replays: Vec<u64> = Vec::new();
+        if let Some(p) = &cfg.journal_path {
+            // Restore *before* opening the writer: `Journal::open` repairs
+            // (truncates) a corrupt suffix tail, and restore must see —
+            // and count — the corruption first.
+            let outcome = Journal::restore(p).map_err(|e| ServiceError::Journal(e.to_string()))?;
+            replayed = outcome.records.len() as u64;
+            fallbacks = outcome.fallbacks;
+            if let Some(snap) = outcome.snapshot {
+                Self::apply_snapshot(&mut meta, snap, cfg.split_seed);
+            }
+            gc_replays = Self::apply_replay(&mut meta, outcome.records, cfg.split_seed);
+        }
+        // Replayed GC records re-issue their store deletes: the delete is
+        // idempotent, so a crash landed between the append and the
+        // deletes cannot leak the superseded snapshot's objects.
+        if let Some(store) = &cfg.store {
+            for &job_id in &gc_replays {
+                store.delete(&data_key(job_id));
+                store.delete(&manifest_key(job_id));
+            }
+        }
         let journal = match &cfg.journal_path {
             Some(p) => Some(Journal::open(p).map_err(|e| ServiceError::Journal(e.to_string()))?),
             None => None,
         };
-        let mut meta = Meta { next_worker_id: 1, next_job_id: 1, next_client_id: 1, ..Default::default() };
-        if let Some(p) = &cfg.journal_path {
-            let records = Journal::replay(p).map_err(|e| ServiceError::Journal(e.to_string()))?;
-            Self::apply_replay(&mut meta, records, cfg.split_seed);
-        }
         let state = Arc::new(State {
             cfg,
             journal,
@@ -273,6 +340,9 @@ impl Dispatcher {
             metrics: Registry::new(),
             pool: crate::rpc::Pool::with_defaults(),
         });
+        // Restore ran before the registry existed; publish its stats now.
+        state.metrics.counter("dispatcher/restore_records_replayed").add(replayed);
+        state.metrics.counter("dispatcher/restore_fallbacks").add(fallbacks);
 
         let s2 = state.clone();
         let server = Server::bind(addr, move |method: u16, payload: &[u8]| {
@@ -283,7 +353,69 @@ impl Dispatcher {
         Ok(Dispatcher { state, server })
     }
 
-    fn apply_replay(meta: &mut Meta, records: Vec<JournalRecord>, split_seed: u64) {
+    /// Load a checkpoint into `meta` — the fast path of restore. Soft
+    /// state (client progress, in-flight handoffs, partial spill
+    /// manifests, pending delivery queues) is absent from snapshots by
+    /// design and rebuilt from post-restart heartbeats, exactly as
+    /// full-journal replay rebuilds it. Workers restore the same way
+    /// `RegisterWorker` replays: optimistically alive with one
+    /// `worker_timeout` of grace, unconfirmed until they heartbeat.
+    fn apply_snapshot(meta: &mut Meta, snap: DispatcherSnapshot, split_seed: u64) {
+        for (dataset_id, graph) in snap.datasets {
+            meta.datasets.insert(dataset_id, graph);
+        }
+        for sj in snap.jobs {
+            let shards = meta.datasets.get(&sj.dataset_id).map(graph_num_shards).unwrap_or(1);
+            let tracker = matches!(sj.sharding, ShardingPolicy::Dynamic)
+                .then(|| Arc::new(SplitTracker::new(shards, split_seed ^ sj.job_id)));
+            meta.jobs.insert(
+                sj.job_id,
+                JobState {
+                    dataset_id: sj.dataset_id,
+                    job_name: sj.job_name,
+                    sharding: sj.sharding,
+                    mode: sj.mode,
+                    num_consumers: sj.num_consumers,
+                    sharing: sj.sharing,
+                    tracker,
+                    clients: sj.clients.into_iter().collect(),
+                    finished: sj.finished,
+                    worker_order: sj.worker_order,
+                    residue_owners: sj.residue_owners,
+                    client_rounds: HashMap::new(),
+                    pending_handoffs: Vec::new(),
+                    client_stalls: HashMap::new(),
+                    width_epochs: sj.width_epochs,
+                    spill_manifests: HashMap::new(),
+                    snapshot_committed: sj.snapshot_committed,
+                    snapshot_serve: sj.snapshot_serve,
+                },
+            );
+        }
+        for nj in snap.named_jobs {
+            meta.named_jobs.insert((nj.dataset_id, nj.job_name), nj.job_id);
+        }
+        for sw in snap.workers {
+            let mut wi = WorkerInfo::new(sw.addr, Instant::now(), true, HashSet::new());
+            wi.confirmed = false;
+            wi.draining = sw.draining;
+            meta.workers.insert(sw.worker_id, wi);
+        }
+        for (fingerprint, manifest) in snap.spill_snapshots {
+            meta.snapshots.insert(fingerprint, manifest);
+        }
+        meta.next_worker_id = meta.next_worker_id.max(snap.next_worker_id);
+        meta.next_job_id = meta.next_job_id.max(snap.next_job_id);
+        meta.next_client_id = meta.next_client_id.max(snap.next_client_id);
+    }
+
+    /// Replay journal records over `meta` (either from genesis or on top
+    /// of a restored snapshot — replay is deterministic and every record
+    /// applies idempotently, so both paths converge). Returns the job
+    /// ids of replayed [`JournalRecord::SpillSnapshotGced`] records,
+    /// whose store deletes the caller re-issues.
+    fn apply_replay(meta: &mut Meta, records: Vec<JournalRecord>, split_seed: u64) -> Vec<u64> {
+        let mut gced = Vec::new();
         for rec in records {
             match rec {
                 JournalRecord::RegisterDataset { dataset_id, graph } => {
@@ -423,6 +555,53 @@ impl Dispatcher {
                         }
                     }
                 }
+                JournalRecord::SpillSnapshotGced { job_id } => {
+                    // No meta change: the superseding SnapshotCommitted
+                    // that preceded this record already replaced the
+                    // fingerprint's manifest. The caller re-issues the
+                    // (idempotent) store deletes.
+                    gced.push(job_id);
+                }
+            }
+        }
+        gced
+    }
+
+    /// Serialize the full replayable dispatcher state into one
+    /// [`DispatcherSnapshot`] — what a complete journal replay up to this
+    /// instant would rebuild. Also the compaction cut
+    /// ([`Dispatcher::compact_now`] / the `tick()` threshold).
+    pub fn snapshot_state(&self) -> DispatcherSnapshot {
+        snapshot_from_meta(&self.state.meta.lock().unwrap())
+    }
+
+    /// Cut a checkpoint *now*: snapshot the current meta and install it
+    /// via [`Journal::install_snapshot`] (temp-file + atomic rename +
+    /// fresh suffix + retention). Holds the meta lock across cut and
+    /// install: every journaled record is applied to meta before the
+    /// cut (all append sites hold this lock), and none lands between
+    /// the cut and the suffix swap — the write-ahead ordering is exact.
+    /// Returns the new snapshot sequence, or `None` without a journal
+    /// (or on a write failure, which leaves the old suffix growing —
+    /// durability is unaffected, only boundedness, and the next trigger
+    /// retries).
+    pub fn compact_now(&self) -> Option<u64> {
+        let meta = self.state.meta.lock().unwrap();
+        self.compact_locked(&meta)
+    }
+
+    fn compact_locked(&self, meta: &Meta) -> Option<u64> {
+        let journal = self.state.journal.as_ref()?;
+        let snap = snapshot_from_meta(meta);
+        match journal.install_snapshot(&snap) {
+            Ok(seq) => {
+                self.state.metrics.counter("dispatcher/snapshots_written").inc();
+                self.state.metrics.counter("dispatcher/journal_compactions").inc();
+                Some(seq)
+            }
+            Err(_) => {
+                self.state.metrics.counter("dispatcher/snapshot_write_failures").inc();
+                None
             }
         }
     }
@@ -532,6 +711,18 @@ impl Dispatcher {
                 );
             }
         }
+        // Automatic compaction, off the RPC hot path: when the live
+        // suffix outgrew the byte threshold, cut a checkpoint while
+        // `meta` is still held — every append site holds this lock, so
+        // the journal's contents and the applied meta agree exactly at
+        // the cut, and no record can land between cut and suffix swap.
+        if self.state.cfg.journal_compact_bytes > 0 {
+            if let Some(j) = &self.state.journal {
+                if j.suffix_bytes() >= self.state.cfg.journal_compact_bytes {
+                    self.compact_locked(&meta);
+                }
+            }
+        }
         dead
     }
 
@@ -568,26 +759,26 @@ impl Dispatcher {
     /// `false` when the worker was already draining (idempotent).
     pub fn begin_worker_drain(&self, worker_id: u64) -> ServiceResult<bool> {
         {
-            let meta = self.state.meta.lock().unwrap();
+            let mut meta = self.state.meta.lock().unwrap();
             match meta.workers.get(&worker_id) {
                 None => return Err(ServiceError::UnknownWorker(worker_id)),
                 Some(w) if w.draining => return Ok(false),
                 Some(_) => {}
             }
+            // Journaled before applied, under one continuous `meta`
+            // section (see `journal_append`'s invariant): a restart
+            // mid-drain resumes the drain (re-plans handoffs from the
+            // flag + replayed lease table) instead of silently
+            // re-admitting a half-drained worker.
+            journal_append(
+                &self.state,
+                &JournalRecord::WorkerDrainChanged { worker_id, draining: true },
+            )?;
+            if let Some(w) = meta.workers.get_mut(&worker_id) {
+                w.draining = true;
+                w.drain_ready = false;
+            }
         }
-        // Journaled before applied: a restart mid-drain resumes the
-        // drain (re-plans handoffs from the flag + replayed lease table)
-        // instead of silently re-admitting a half-drained worker.
-        journal_append(
-            &self.state,
-            &JournalRecord::WorkerDrainChanged { worker_id, draining: true },
-        )?;
-        let mut meta = self.state.meta.lock().unwrap();
-        if let Some(w) = meta.workers.get_mut(&worker_id) {
-            w.draining = true;
-            w.drain_ready = false;
-        }
-        drop(meta);
         self.state.metrics.counter("dispatcher/worker_drains_started").inc();
         Ok(true)
     }
@@ -623,6 +814,17 @@ impl Dispatcher {
     pub fn finish_worker_drain(&self, worker_id: u64) -> ServiceResult<()> {
         let was_draining = {
             let mut meta = self.state.meta.lock().unwrap();
+            // Write-ahead under the same `meta` section (see
+            // `journal_append`'s invariant): the drain-exit record must
+            // be durable before the retirement it describes is applied,
+            // or a snapshot cut between apply and append would disagree
+            // with the journal.
+            if matches!(meta.workers.get(&worker_id), Some(w) if w.draining) {
+                journal_append(
+                    &self.state,
+                    &JournalRecord::WorkerDrainChanged { worker_id, draining: false },
+                )?;
+            }
             let retired = match meta.workers.get_mut(&worker_id) {
                 Some(w) if w.draining => {
                     w.draining = false;
@@ -650,10 +852,6 @@ impl Dispatcher {
             retired
         };
         if was_draining {
-            journal_append(
-                &self.state,
-                &JournalRecord::WorkerDrainChanged { worker_id, draining: false },
-            )?;
             self.state.metrics.counter("dispatcher/workers_drained").inc();
         }
         Ok(())
@@ -1177,11 +1375,88 @@ fn complete_lease_handoffs(
     Ok(())
 }
 
+/// Append one record under write-ahead semantics. **Invariant: every
+/// caller holds the `meta` lock across the append *and* the matching
+/// meta mutation.** Compaction (which also holds `meta`) therefore
+/// always cuts a snapshot that agrees byte-for-byte with the journal's
+/// applied contents — a record can never be durable-but-unapplied (it
+/// would be deleted with the retiring suffix yet absent from the
+/// snapshot) or applied-but-undurable (it would be captured by the
+/// snapshot, which is fine, or lost with a crash like any un-acked
+/// write-ahead record). The journal has its own lock and never takes
+/// `meta`, so appending under `meta` cannot deadlock.
 fn journal_append(state: &State, rec: &JournalRecord) -> ServiceResult<()> {
     if let Some(j) = &state.journal {
         j.append(rec).map_err(|e| ServiceError::Journal(e.to_string()))?;
     }
     Ok(())
+}
+
+/// Canonical-order serialization of the journal-derivable meta fields
+/// (the compaction cut and the restore-equivalence test's comparison
+/// key). Maps become key-sorted vectors; soft state is excluded.
+fn snapshot_from_meta(meta: &Meta) -> DispatcherSnapshot {
+    let mut datasets: Vec<(u64, GraphDef)> =
+        meta.datasets.iter().map(|(&id, g)| (id, g.clone())).collect();
+    datasets.sort_by_key(|&(id, _)| id);
+    let mut jobs: Vec<SnapshotJob> = meta
+        .jobs
+        .iter()
+        .map(|(&job_id, j)| {
+            let mut clients: Vec<u64> = j.clients.iter().copied().collect();
+            clients.sort_unstable();
+            SnapshotJob {
+                job_id,
+                dataset_id: j.dataset_id,
+                job_name: j.job_name.clone(),
+                sharding: j.sharding,
+                mode: j.mode,
+                num_consumers: j.num_consumers,
+                sharing: j.sharing,
+                worker_order: j.worker_order.clone(),
+                residue_owners: j.residue_owners.clone(),
+                clients,
+                finished: j.finished,
+                width_epochs: j.width_epochs.clone(),
+                snapshot_serve: j.snapshot_serve,
+                snapshot_committed: j.snapshot_committed,
+            }
+        })
+        .collect();
+    jobs.sort_by_key(|j| j.job_id);
+    let mut named_jobs: Vec<SnapshotNamedJob> = meta
+        .named_jobs
+        .iter()
+        .map(|((dataset_id, job_name), &job_id)| SnapshotNamedJob {
+            dataset_id: *dataset_id,
+            job_name: job_name.clone(),
+            job_id,
+        })
+        .collect();
+    named_jobs.sort_by(|a, b| (a.dataset_id, &a.job_name).cmp(&(b.dataset_id, &b.job_name)));
+    let mut workers: Vec<SnapshotWorker> = meta
+        .workers
+        .iter()
+        .map(|(&worker_id, w)| SnapshotWorker {
+            worker_id,
+            addr: w.addr.clone(),
+            draining: w.draining,
+        })
+        .collect();
+    workers.sort_by_key(|w| w.worker_id);
+    let mut spill_snapshots: Vec<(u64, SpillManifest)> =
+        meta.snapshots.iter().map(|(&fp, m)| (fp, m.clone())).collect();
+    spill_snapshots.sort_by_key(|&(fp, _)| fp);
+    DispatcherSnapshot {
+        datasets,
+        jobs,
+        named_jobs,
+        workers,
+        spill_snapshots,
+        next_worker_id: meta.next_worker_id,
+        next_job_id: meta.next_job_id,
+        next_client_id: meta.next_client_id,
+    }
 }
 
 /// RPC demux.
@@ -1236,14 +1511,19 @@ fn register_dataset(state: &Arc<State>, req: RegisterDatasetReq) -> ServiceResul
     let full = req.graph.fingerprint_full(&digest_of);
     let dataset_id = u64::from_le_bytes(full[..8].try_into().unwrap());
     {
-        let meta = state.meta.lock().unwrap();
+        // Check + journal + apply under one continuous `meta` section
+        // (see `journal_append`'s invariant).
+        let mut meta = state.meta.lock().unwrap();
         if meta.datasets.contains_key(&dataset_id) {
             // Identical pipeline already registered (fingerprint match).
             return Ok(RegisterDatasetResp { dataset_id, fingerprint: full.to_vec() });
         }
+        journal_append(
+            state,
+            &JournalRecord::RegisterDataset { dataset_id, graph: req.graph.clone() },
+        )?;
+        meta.datasets.insert(dataset_id, req.graph);
     }
-    journal_append(state, &JournalRecord::RegisterDataset { dataset_id, graph: req.graph.clone() })?;
-    state.meta.lock().unwrap().datasets.insert(dataset_id, req.graph);
     state.metrics.counter("dispatcher/datasets_registered").inc();
     Ok(RegisterDatasetResp { dataset_id, fingerprint: full.to_vec() })
 }
@@ -1331,27 +1611,28 @@ fn find_shareable_job(meta: &Meta, req: &GetOrCreateJobReq) -> Option<u64> {
         .min()
 }
 
-/// Attach `client_id` to the live job `job_id`: journal the join, then —
-/// under one lock, re-validating that the job is still live — record the
-/// membership and queue a consumer update for every worker running the
-/// job so the multi-consumer cache registers the new cursor.
+/// Attach `client_id` to the live job `job_id`: under one lock,
+/// re-validating that the job is still live, journal the join, record
+/// the membership, and queue a consumer update for every worker running
+/// the job so the multi-consumer cache registers the new cursor.
 ///
 /// Returns `None` if the job finished between the caller's lookup and
 /// this call (its last client released in the gap): the caller must fall
 /// back to creating a fresh job instead of joining a dead one, which
-/// would silently end the new client's stream with zero elements. The
-/// already-journaled `ClientJoined` replays harmlessly against the
-/// finished job.
+/// would silently end the new client's stream with zero elements —
+/// nothing is journaled on that path.
 fn attach_client(
     state: &Arc<State>,
     job_id: u64,
     client_id: u64,
     auto: bool,
 ) -> ServiceResult<Option<GetOrCreateJobResp>> {
-    journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
     let mut meta = state.meta.lock().unwrap();
     let snapshot = match meta.jobs.get_mut(&job_id) {
         Some(job) if !job.finished => {
+            // Journal + apply inside the same `meta` section (see
+            // `journal_append`'s invariant), write-ahead first.
+            journal_append(state, &JournalRecord::ClientJoined { job_id, client_id })?;
             job.clients.insert(client_id);
             job.snapshot_serve
         }
@@ -1441,6 +1722,21 @@ fn get_or_create_job(state: &Arc<State>, req: GetOrCreateJobReq) -> ServiceResul
         }
         // Job finished in the gap: create a fresh one below.
         meta = state.meta.lock().unwrap();
+    }
+
+    // Admission control: shed job *creation* (not attaches — joining an
+    // existing production adds no new pipeline) once the unfinished-job
+    // budget is spent. Shed requests carry a retry hint the client
+    // honors with jittered backoff; nothing is journaled for them.
+    if state.cfg.admission_max_jobs > 0 {
+        let active = meta.jobs.values().filter(|j| !j.finished).count();
+        if active >= state.cfg.admission_max_jobs {
+            drop(meta);
+            state.metrics.counter("dispatcher/jobs_shed").inc();
+            return Err(ServiceError::Overloaded {
+                retry_after_ms: state.cfg.admission_retry_ms,
+            });
+        }
     }
 
     let job_id = meta.next_job_id;
@@ -1677,16 +1973,23 @@ fn register_worker(state: &Arc<State>, req: RegisterWorkerReq) -> ServiceResult<
     // A re-registering worker comes back state-free: any previous drain
     // is over (WorkerInfo::new defaults to not draining). Journal the
     // exit so a replayed drain flag does not survive the re-admission.
+    // Both records land before the table mutation, under the same
+    // `meta` section (see `journal_append`'s invariant).
     let was_draining =
         existing.is_some() && meta.workers.get(&worker_id).map(|w| w.draining).unwrap_or(false);
-    meta.workers.insert(worker_id, WorkerInfo::new(req.addr.clone(), Instant::now(), true, assigned));
-    drop(meta);
-
     if was_draining {
         journal_append(state, &JournalRecord::WorkerDrainChanged { worker_id, draining: false })?;
     }
     if existing.is_none() {
-        journal_append(state, &JournalRecord::RegisterWorker { worker_id, addr: req.addr })?;
+        journal_append(
+            state,
+            &JournalRecord::RegisterWorker { worker_id, addr: req.addr.clone() },
+        )?;
+    }
+    meta.workers.insert(worker_id, WorkerInfo::new(req.addr, Instant::now(), true, assigned));
+    drop(meta);
+
+    if existing.is_none() {
         state.metrics.counter("dispatcher/workers_registered").inc();
     }
     Ok(RegisterWorkerResp { worker_id, tasks })
@@ -1743,6 +2046,14 @@ fn ingest_spill_manifests(
             .collect();
         let epoch = snapshots.get(&fingerprint).map(|m| m.epoch + 1).unwrap_or(0);
         let merged = merge_manifests(fingerprint, man.job_id, epoch, &parts);
+        // Superseded-snapshot GC: this commit replaces the fingerprint's
+        // previous snapshot, whose segments live under the *old* job's
+        // `spill/job-{id}/*` keys — journal the GC first (so replay
+        // re-issues the idempotent deletes), then drop the objects.
+        let superseded = snapshots
+            .get(&fingerprint)
+            .map(|old| old.job_id)
+            .filter(|&old_job| old_job != man.job_id);
         // Durable before published (and before the ack): a crash after
         // the append replays the commit; a crash before it leaves the
         // workers re-reporting and the commit redone.
@@ -1751,6 +2062,14 @@ fn ingest_spill_manifests(
             epoch,
             manifest: merged.clone(),
         })?;
+        if let Some(old_job) = superseded {
+            journal_append(state, &JournalRecord::SpillSnapshotGced { job_id: old_job })?;
+            if let Some(store) = &state.cfg.store {
+                store.delete(&data_key(old_job));
+                store.delete(&manifest_key(old_job));
+            }
+            state.metrics.counter("dispatcher/spill_snapshots_gced").inc();
+        }
         job.snapshot_committed = true;
         snapshots.insert(fingerprint, merged);
         state.metrics.counter("dispatcher/snapshots_committed").inc();
@@ -1948,6 +2267,17 @@ fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJ
     {
         let mut meta = state.meta.lock().unwrap();
         let job = meta.jobs.get_mut(&req.job_id).ok_or(ServiceError::UnknownJob(req.job_id))?;
+        // Write-ahead under the same `meta` section (see
+        // `journal_append`'s invariant): the release — and, when it
+        // empties the membership, the finish — are journaled before the
+        // tables they describe change.
+        journal_append(
+            state,
+            &JournalRecord::ClientReleased { job_id: req.job_id, client_id: req.client_id },
+        )?;
+        if !job.finished && job.clients.iter().all(|c| *c == req.client_id) {
+            journal_append(state, &JournalRecord::JobFinished { job_id: req.job_id })?;
+        }
         job.clients.remove(&req.client_id);
         // Slot progress (keyed by consumer index, which the release does
         // not carry) is left to the tick() lease pruning: a re-occupied
@@ -1982,9 +2312,7 @@ fn release_job(state: &Arc<State>, req: ReleaseJobReq) -> ServiceResult<ReleaseJ
         let update = ConsumerUpdate { job_id: req.job_id, client_id: req.client_id };
         push_consumer_updates(state, &push_addrs, Vec::new(), vec![update]);
     }
-    journal_append(state, &JournalRecord::ClientReleased { job_id: req.job_id, client_id: req.client_id })?;
     if finished {
-        journal_append(state, &JournalRecord::JobFinished { job_id: req.job_id })?;
         state.metrics.counter("dispatcher/jobs_finished").inc();
     }
     Ok(ReleaseJobResp { released: true })

@@ -1,17 +1,56 @@
-//! Dispatcher write-ahead journal (§3.4).
+//! Dispatcher write-ahead journal (§3.4) with snapshot compaction.
 //!
 //! Every dispatcher state change — dataset registration, job creation,
 //! worker registration, client joins/releases — appends a CRC-framed
 //! record before the change is acknowledged. On restart the dispatcher
-//! replays the journal to restore its metadata. Split-assignment progress
-//! is deliberately *not* journaled: the paper relaxes visitation to
-//! at-most-once, so an epoch's in-flight splits may be lost on recovery.
+//! restores its metadata from the newest *valid* [`DispatcherSnapshot`]
+//! plus the journal suffix written after it, so restore cost is bounded
+//! by live state + churn since the last checkpoint instead of the full
+//! history. Split-assignment progress is deliberately *not* journaled:
+//! the paper relaxes visitation to at-most-once, so an epoch's in-flight
+//! splits may be lost on recovery.
+//!
+//! ## On-disk layout
+//!
+//! For a configured journal path `base`:
+//!
+//! ```text
+//! base                 genesis suffix (records before the 1st snapshot)
+//! base.snap-{N}        snapshot N: one CRC-framed DispatcherSnapshot
+//! base.suffix-{N}      records appended after snapshot N was cut
+//! base.snap-{N}.tmp    in-flight snapshot write (ignored; swept on open)
+//! ```
+//!
+//! [`Journal::install_snapshot`] writes `snap-{N}` via temp-file +
+//! atomic rename, then swaps the writer to a fresh `suffix-{N}` — all
+//! under the writer lock, so no record is acknowledged between the
+//! snapshot cut and the suffix open. The last **two** (snapshot, suffix)
+//! pairs are retained; older files are deleted. That retention is what
+//! makes the fallback ladder in [`Journal::restore`] complete: if
+//! `snap-{N}` fails its CRC, `snap-{N-1}` + `suffix-{N-1}` + `suffix-{N}`
+//! rebuild the identical state (suffix replay is deterministic).
+//!
+//! ## Corruption tolerance
+//!
+//! * A snapshot failing CRC/decode falls back to the previous snapshot,
+//!   or to full-suffix replay from genesis if none is valid.
+//! * A mid-suffix CRC mismatch keeps the longest valid record prefix
+//!   instead of aborting recovery (the strict [`Journal::replay`] is
+//!   kept for callers that want corruption to be loud).
+//! * [`Journal::open`] *repairs* a corrupt suffix tail by truncating to
+//!   the last valid record boundary before appending — otherwise records
+//!   appended after the corrupt region would be unreachable by the very
+//!   salvaged-prefix replay that tolerated it.
+//!
+//! Every degraded step is counted in [`RestoreOutcome::fallbacks`] so
+//! the dispatcher can surface it (`dispatcher/restore_fallbacks`).
 
 use crate::data::graph::GraphDef;
-use crate::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
+use crate::service::proto::{ProcessingMode, SharingMode, ShardingPolicy, WidthEpoch};
 use crate::service::spill::SpillManifest;
-use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
 use crate::util::crc32::Hasher;
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+use crate::wire_struct;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -73,6 +112,13 @@ pub enum JournalRecord {
     /// worker out of new-consumer routing and re-initiates pending lease
     /// handoffs — instead of silently re-admitting a half-drained worker.
     WorkerDrainChanged { worker_id: u64, draining: bool },
+    /// A superseded spill snapshot's store objects
+    /// (`spill/job-{job_id}/*`) were garbage-collected after a newer
+    /// epoch snapshot committed for the same fingerprint. Journaled
+    /// *before* the store deletes, and replayed by re-issuing them
+    /// (`ObjectStore::delete` is idempotent), so a crash between append
+    /// and delete cannot leak the objects.
+    SpillSnapshotGced { job_id: u64 },
 }
 
 impl Encode for JournalRecord {
@@ -147,6 +193,10 @@ impl Encode for JournalRecord {
                 w.put_u64(*worker_id);
                 draining.encode(w);
             }
+            JournalRecord::SpillSnapshotGced { job_id } => {
+                w.put_u8(10);
+                w.put_u64(*job_id);
+            }
         }
     }
 }
@@ -189,45 +239,369 @@ impl Decode for JournalRecord {
                 worker_id: r.get_u64()?,
                 draining: bool::decode(r)?,
             },
+            10 => JournalRecord::SpillSnapshotGced { job_id: r.get_u64()? },
             tag => return Err(WireError::BadTag { tag, ty: "JournalRecord" }),
         })
     }
 }
 
-/// Append-only journal file. Thread-safe; every append is flushed before
-/// returning (write-ahead semantics).
+/// One job's journal-derivable state inside a [`DispatcherSnapshot`].
+/// Soft state (client round progress, in-flight handoffs, partial spill
+/// manifests, pending delivery queues) is deliberately excluded — it is
+/// rebuilt from post-restart heartbeats exactly as full-journal replay
+/// rebuilds it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotJob {
+    pub job_id: u64,
+    pub dataset_id: u64,
+    pub job_name: String,
+    pub sharding: ShardingPolicy,
+    pub mode: ProcessingMode,
+    pub num_consumers: u32,
+    pub sharing: SharingMode,
+    pub worker_order: Vec<u64>,
+    pub residue_owners: Vec<u64>,
+    /// Sorted, so encoding is canonical (HashSet order is not).
+    pub clients: Vec<u64>,
+    pub finished: bool,
+    pub width_epochs: Vec<WidthEpoch>,
+    pub snapshot_serve: bool,
+    pub snapshot_committed: bool,
+}
+wire_struct!(SnapshotJob {
+    job_id,
+    dataset_id,
+    job_name,
+    sharding,
+    mode,
+    num_consumers,
+    sharing,
+    worker_order,
+    residue_owners,
+    clients,
+    finished,
+    width_epochs,
+    snapshot_serve,
+    snapshot_committed,
+});
+
+/// One worker's journal-derivable state inside a [`DispatcherSnapshot`].
+/// Restored the same way `RegisterWorker` replays: optimistically alive,
+/// unconfirmed until its first post-restart heartbeat.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotWorker {
+    pub worker_id: u64,
+    pub addr: String,
+    pub draining: bool,
+}
+wire_struct!(SnapshotWorker { worker_id, addr, draining });
+
+/// A `(dataset_id, job_name) -> job_id` named-job binding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotNamedJob {
+    pub dataset_id: u64,
+    pub job_name: String,
+    pub job_id: u64,
+}
+wire_struct!(SnapshotNamedJob { dataset_id, job_name, job_id });
+
+/// The dispatcher's full replayable state at one point in time: what a
+/// complete journal replay up to the cut would have rebuilt. All maps
+/// are serialized as key-sorted vectors so the encoding is canonical —
+/// the restore-equivalence property test relies on
+/// `snapshot(meta_a) == snapshot(meta_b)` being byte-comparable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatcherSnapshot {
+    /// Sorted by dataset id.
+    pub datasets: Vec<(u64, GraphDef)>,
+    /// Sorted by job id.
+    pub jobs: Vec<SnapshotJob>,
+    /// Sorted by (dataset_id, job_name).
+    pub named_jobs: Vec<SnapshotNamedJob>,
+    /// Sorted by worker id.
+    pub workers: Vec<SnapshotWorker>,
+    /// Committed fingerprint-keyed spill snapshots, sorted by fingerprint.
+    pub spill_snapshots: Vec<(u64, SpillManifest)>,
+    pub next_worker_id: u64,
+    pub next_job_id: u64,
+    pub next_client_id: u64,
+}
+wire_struct!(DispatcherSnapshot {
+    datasets,
+    jobs,
+    named_jobs,
+    workers,
+    spill_snapshots,
+    next_worker_id,
+    next_job_id,
+    next_client_id,
+});
+
+/// What [`Journal::restore`] recovered: the newest valid snapshot (if
+/// any) plus the journal records appended after its cut, and how many
+/// degraded steps (corrupt snapshot skipped, corrupt suffix truncated to
+/// its valid prefix) the fallback ladder took.
+#[derive(Debug, Default)]
+pub struct RestoreOutcome {
+    pub snapshot: Option<DispatcherSnapshot>,
+    /// Sequence number of the snapshot restored from (0 = none; replay
+    /// started from the genesis file).
+    pub snapshot_seq: u64,
+    /// Records to replay on top of the snapshot, oldest first.
+    pub records: Vec<JournalRecord>,
+    /// Count of corrupt snapshots skipped + corrupt suffixes truncated.
+    pub fallbacks: u64,
+}
+
+fn crc_of(body: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(body);
+    h.finalize()
+}
+
+/// How a frame scan over one file ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScanEnd {
+    /// Every byte belonged to a valid frame.
+    Clean,
+    /// Partial final frame (crash mid-append): normal, not corruption.
+    TornTail,
+    /// CRC or decode failure mid-file.
+    Corrupt,
+}
+
+/// Walk `bytes` frame by frame. Returns the decoded records, the byte
+/// length of the valid prefix (a record boundary), and how the scan
+/// ended.
+fn scan_frames(bytes: &[u8]) -> (Vec<JournalRecord>, usize, ScanEnd) {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        if bytes.len() - pos < 8 {
+            return (out, pos, ScanEnd::TornTail);
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            return (out, pos, ScanEnd::TornTail);
+        }
+        let body = &bytes[pos + 8..pos + 8 + len];
+        if crc_of(body) != crc {
+            return (out, pos, ScanEnd::Corrupt);
+        }
+        match JournalRecord::from_bytes(body) {
+            Ok(rec) => out.push(rec),
+            Err(_) => return (out, pos, ScanEnd::Corrupt),
+        }
+        pos += 8 + len;
+    }
+    (out, pos, ScanEnd::Clean)
+}
+
+fn with_suffix_name(base: &Path, ext: &str) -> PathBuf {
+    let mut name = base.file_name().unwrap_or_default().to_os_string();
+    name.push(ext);
+    base.with_file_name(name)
+}
+
+fn snap_path(base: &Path, seq: u64) -> PathBuf {
+    with_suffix_name(base, &format!(".snap-{seq}"))
+}
+
+/// Suffix file holding the records appended after snapshot `seq` was
+/// cut. Sequence 0 is the genesis file — the base path itself — so a
+/// never-compacted journal is laid out exactly as before compaction
+/// existed.
+fn suffix_path(base: &Path, seq: u64) -> PathBuf {
+    if seq == 0 {
+        base.to_path_buf()
+    } else {
+        with_suffix_name(base, &format!(".suffix-{seq}"))
+    }
+}
+
+/// Sequence numbers present on disk for `prefix` files
+/// (`{base}.{kind}-{seq}`), ignoring `.tmp` leftovers.
+fn list_seqs(base: &Path, kind: &str) -> Vec<u64> {
+    let dir = match base.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let fname = match base.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n.to_string(),
+        None => return vec![],
+    };
+    let prefix = format!("{fname}.{kind}-");
+    let mut seqs = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for e in entries.flatten() {
+            if let Some(name) = e.file_name().to_str() {
+                if let Some(rest) = name.strip_prefix(&prefix) {
+                    if let Ok(seq) = rest.parse::<u64>() {
+                        seqs.push(seq);
+                    }
+                }
+            }
+        }
+    }
+    seqs.sort_unstable();
+    seqs
+}
+
+/// Append-only journal with snapshot compaction. Thread-safe; every
+/// append is flushed before returning (write-ahead semantics).
 pub struct Journal {
-    path: PathBuf,
-    writer: Mutex<BufWriter<File>>,
+    base: PathBuf,
+    inner: Mutex<Active>,
+}
+
+struct Active {
+    writer: BufWriter<File>,
+    /// Snapshot sequence the current suffix belongs to (0 = genesis).
+    seq: u64,
+    suffix_bytes: u64,
+    suffix_records: u64,
 }
 
 impl Journal {
-    /// Open (creating if missing) the journal at `path`.
+    /// Open (creating if missing) the journal rooted at `path`. Appends
+    /// go to the suffix of the newest on-disk snapshot (genesis if
+    /// none). A corrupt suffix tail is **repaired** — truncated back to
+    /// the last valid record boundary — so records appended from here
+    /// on land exactly where a salvaged-prefix restore replays to;
+    /// without the repair they would sit behind the corrupt region,
+    /// unreachable forever. Stale `.tmp` snapshot files are swept.
     pub fn open(path: impl AsRef<Path>) -> std::io::Result<Journal> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+        let base = path.as_ref().to_path_buf();
+        if let Some(parent) = base.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
         }
-        let file = OpenOptions::new().create(true).append(true).open(&path)?;
-        Ok(Journal { path, writer: Mutex::new(BufWriter::new(file)) })
+        // Sweep snapshot temp files from a crash mid-install: the rename
+        // never happened, so they are invisible to restore and dead weight.
+        if let Some(dir) = base.parent() {
+            if let (Some(fname), Ok(entries)) =
+                (base.file_name().and_then(|n| n.to_str()), std::fs::read_dir(dir))
+            {
+                for e in entries.flatten() {
+                    if let Some(name) = e.file_name().to_str() {
+                        if name.starts_with(&format!("{fname}.snap-")) && name.ends_with(".tmp") {
+                            let _ = std::fs::remove_file(e.path());
+                        }
+                    }
+                }
+            }
+        }
+        let seq = list_seqs(&base, "snap").into_iter().max().unwrap_or(0);
+        let sp = suffix_path(&base, seq);
+        let (suffix_bytes, suffix_records) = match std::fs::read(&sp) {
+            Ok(bytes) => {
+                let (recs, valid_len, _) = scan_frames(&bytes);
+                if valid_len < bytes.len() {
+                    let f = OpenOptions::new().write(true).open(&sp)?;
+                    f.set_len(valid_len as u64)?;
+                    f.sync_all()?;
+                }
+                (valid_len as u64, recs.len() as u64)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => (0, 0),
+            Err(e) => return Err(e),
+        };
+        let file = OpenOptions::new().create(true).append(true).open(&sp)?;
+        Ok(Journal {
+            base,
+            inner: Mutex::new(Active {
+                writer: BufWriter::new(file),
+                seq,
+                suffix_bytes,
+                suffix_records,
+            }),
+        })
     }
 
     /// Append one record (length + crc framed) and flush.
     pub fn append(&self, rec: &JournalRecord) -> std::io::Result<()> {
         let body = rec.to_bytes();
-        let mut h = Hasher::new();
-        h.update(&body);
-        let crc = h.finalize();
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(&(body.len() as u32).to_le_bytes())?;
-        w.write_all(&crc.to_le_bytes())?;
-        w.write_all(&body)?;
-        w.flush()
+        let crc = crc_of(&body);
+        let mut a = self.inner.lock().unwrap();
+        a.writer.write_all(&(body.len() as u32).to_le_bytes())?;
+        a.writer.write_all(&crc.to_le_bytes())?;
+        a.writer.write_all(&body)?;
+        a.writer.flush()?;
+        a.suffix_bytes += 8 + body.len() as u64;
+        a.suffix_records += 1;
+        Ok(())
     }
 
-    /// Replay all intact records. A torn tail (partial final record, e.g.
-    /// crash mid-append) is tolerated and ignored; corruption in the
-    /// middle is an error.
+    /// Bytes appended to the current suffix since the last snapshot —
+    /// the compaction trigger input.
+    pub fn suffix_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().suffix_bytes
+    }
+
+    /// Records appended to the current suffix since the last snapshot.
+    pub fn suffix_records(&self) -> u64 {
+        self.inner.lock().unwrap().suffix_records
+    }
+
+    /// Sequence of the newest installed snapshot (0 = none yet).
+    pub fn snapshot_seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Install `snap` as the next checkpoint: write it CRC-framed to
+    /// `snap-{seq+1}` via temp-file + atomic rename, swap the writer to
+    /// a fresh `suffix-{seq+1}`, and delete files older than the
+    /// previous (snapshot, suffix) pair. Holds the writer lock
+    /// throughout, so concurrent `append`s serialize either entirely
+    /// before the cut (captured by `snap` — the caller cuts it under
+    /// the same state lock its appenders hold) or entirely after (into
+    /// the new suffix): no record is ever acknowledged into a file the
+    /// install is about to retire. Returns the new sequence.
+    pub fn install_snapshot(&self, snap: &DispatcherSnapshot) -> std::io::Result<u64> {
+        let mut a = self.inner.lock().unwrap();
+        let new_seq = a.seq + 1;
+        let body = snap.to_bytes();
+        let crc = crc_of(&body);
+        let tmp = with_suffix_name(&self.base, &format!(".snap-{new_seq}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&(body.len() as u32).to_le_bytes())?;
+            f.write_all(&crc.to_le_bytes())?;
+            f.write_all(&body)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, snap_path(&self.base, new_seq))?;
+        let sp = suffix_path(&self.base, new_seq);
+        // Truncate-create (a crashed earlier install may have left one),
+        // then reopen in append mode for the writer.
+        File::create(&sp)?;
+        a.writer = BufWriter::new(OpenOptions::new().append(true).open(&sp)?);
+        a.seq = new_seq;
+        a.suffix_bytes = 0;
+        a.suffix_records = 0;
+        // Retention: keep (new_seq, new_seq-1); anything older can no
+        // longer be reached by the fallback ladder's one-step-back.
+        if new_seq >= 2 {
+            for s in list_seqs(&self.base, "snap") {
+                if s <= new_seq - 2 {
+                    let _ = std::fs::remove_file(snap_path(&self.base, s));
+                }
+            }
+            for s in 0..=new_seq - 2 {
+                let p = suffix_path(&self.base, s);
+                let _ = std::fs::remove_file(p);
+            }
+        }
+        Ok(new_seq)
+    }
+
+    /// Replay all intact records of one plain journal file. A torn tail
+    /// (partial final record, e.g. crash mid-append) is tolerated and
+    /// ignored; corruption in the middle is an error. This is the
+    /// strict, pre-compaction entry point — the dispatcher's tolerant
+    /// path is [`Journal::restore`].
     pub fn replay(path: impl AsRef<Path>) -> std::io::Result<Vec<JournalRecord>> {
         let mut bytes = Vec::new();
         match File::open(path.as_ref()) {
@@ -237,37 +611,101 @@ impl Journal {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(vec![]),
             Err(e) => return Err(e),
         }
-        let mut out = Vec::new();
-        let mut pos = 0usize;
-        while pos < bytes.len() {
-            if bytes.len() - pos < 8 {
-                break; // torn header at tail
+        let (out, pos, end) = scan_frames(&bytes);
+        if end == ScanEnd::Corrupt {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("journal crc mismatch at byte {pos}"),
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Load and CRC-check one snapshot file.
+    fn load_snapshot(path: &Path) -> std::io::Result<DispatcherSnapshot> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 8 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "snapshot shorter than its frame header",
+            ));
+        }
+        let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if bytes.len() - 8 < len {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "snapshot body truncated",
+            ));
+        }
+        let body = &bytes[8..8 + len];
+        if crc_of(body) != crc {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "snapshot crc mismatch",
+            ));
+        }
+        DispatcherSnapshot::from_bytes(body).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("snapshot decode: {e}"))
+        })
+    }
+
+    /// Corruption-tolerant restore: walk the fallback ladder.
+    ///
+    /// 1. Try snapshots newest-first; a snapshot failing CRC/decode is
+    ///    skipped (counted as a fallback).
+    /// 2. From the chosen snapshot `S` (or genesis if none validated),
+    ///    replay the suffix chain `S, S+1, …` ascending — replay is
+    ///    deterministic, so replaying `suffix-{S}` on top of snapshot
+    ///    `S` re-derives exactly the state snapshot `S+1` captured.
+    /// 3. A mid-suffix CRC mismatch keeps the longest valid prefix and
+    ///    stops the chain there (counted as a fallback) instead of
+    ///    aborting recovery.
+    ///
+    /// Never returns an error for corruption — only for real I/O
+    /// failures reading an existing file.
+    pub fn restore(path: impl AsRef<Path>) -> std::io::Result<RestoreOutcome> {
+        let base = path.as_ref();
+        let mut out = RestoreOutcome::default();
+        let snap_seqs = list_seqs(base, "snap");
+        for &seq in snap_seqs.iter().rev() {
+            match Self::load_snapshot(&snap_path(base, seq)) {
+                Ok(s) => {
+                    out.snapshot = Some(s);
+                    out.snapshot_seq = seq;
+                    break;
+                }
+                Err(_) => out.fallbacks += 1,
             }
-            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
-            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
-            if bytes.len() - pos - 8 < len {
-                break; // torn body at tail
+        }
+        let start = out.snapshot_seq;
+        let end = snap_seqs
+            .last()
+            .copied()
+            .unwrap_or(0)
+            .max(list_seqs(base, "suffix").last().copied().unwrap_or(0))
+            .max(start);
+        for seq in start..=end {
+            let bytes = match std::fs::read(suffix_path(base, seq)) {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e),
+            };
+            let (recs, _, scan_end) = scan_frames(&bytes);
+            out.records.extend(recs);
+            if scan_end == ScanEnd::Corrupt {
+                // Records past the corrupt region (including any later
+                // suffix, written strictly after them) can no longer be
+                // applied in order: keep the longest consistent prefix.
+                out.fallbacks += 1;
+                break;
             }
-            let body = &bytes[pos + 8..pos + 8 + len];
-            let mut h = Hasher::new();
-            h.update(body);
-            if h.finalize() != crc {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::InvalidData,
-                    format!("journal crc mismatch at byte {pos}"),
-                ));
-            }
-            let rec = JournalRecord::from_bytes(body).map_err(|e| {
-                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("journal decode: {e}"))
-            })?;
-            out.push(rec);
-            pos += 8 + len;
         }
         Ok(out)
     }
 
     pub fn path(&self) -> &Path {
-        &self.path
+        &self.base
     }
 }
 
@@ -280,8 +718,18 @@ mod tests {
         let dir = std::env::temp_dir().join("tfdatasvc-journal-tests");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join(format!("{name}-{}", std::process::id()));
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
         p
+    }
+
+    /// Remove the base file and every snapshot/suffix sibling.
+    fn cleanup(p: &Path) {
+        let _ = std::fs::remove_file(p);
+        for kind in ["snap", "suffix"] {
+            for seq in list_seqs(p, kind) {
+                let _ = std::fs::remove_file(with_suffix_name(p, &format!(".{kind}-{seq}")));
+            }
+        }
     }
 
     fn sample_records() -> Vec<JournalRecord> {
@@ -332,8 +780,41 @@ mod tests {
             },
             JournalRecord::WorkerDrainChanged { worker_id: 5, draining: true },
             JournalRecord::WorkerDrainChanged { worker_id: 5, draining: false },
+            JournalRecord::SpillSnapshotGced { job_id: 1 },
             JournalRecord::JobFinished { job_id: 1 },
         ]
+    }
+
+    fn sample_snapshot() -> DispatcherSnapshot {
+        DispatcherSnapshot {
+            datasets: vec![(11, PipelineBuilder::source_range(5).batch(2).build())],
+            jobs: vec![SnapshotJob {
+                job_id: 1,
+                dataset_id: 11,
+                job_name: "shared".into(),
+                sharding: ShardingPolicy::Dynamic,
+                mode: ProcessingMode::Coordinated,
+                num_consumers: 2,
+                sharing: SharingMode::Auto,
+                worker_order: vec![5, 9],
+                residue_owners: vec![5, 5],
+                clients: vec![2, 3],
+                finished: false,
+                width_epochs: vec![WidthEpoch { epoch: 0, barrier_round: 0, num_consumers: 2 }],
+                snapshot_serve: false,
+                snapshot_committed: false,
+            }],
+            named_jobs: vec![SnapshotNamedJob {
+                dataset_id: 11,
+                job_name: "shared".into(),
+                job_id: 1,
+            }],
+            workers: vec![SnapshotWorker { worker_id: 5, addr: "127.0.0.1:4000".into(), draining: false }],
+            spill_snapshots: vec![],
+            next_worker_id: 6,
+            next_job_id: 2,
+            next_client_id: 4,
+        }
     }
 
     #[test]
@@ -346,7 +827,7 @@ mod tests {
         }
         drop(j);
         assert_eq!(Journal::replay(&p).unwrap(), recs);
-        std::fs::remove_file(&p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -368,7 +849,7 @@ mod tests {
         std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
         let replayed = Journal::replay(&p).unwrap();
         assert_eq!(replayed, recs[..recs.len() - 1]);
-        std::fs::remove_file(&p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -383,7 +864,7 @@ mod tests {
         bytes[10] ^= 0xff; // flip a byte in the first record's body
         std::fs::write(&p, &bytes).unwrap();
         assert!(Journal::replay(&p).is_err());
-        std::fs::remove_file(&p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -402,6 +883,187 @@ mod tests {
             recs,
             vec![JournalRecord::JobFinished { job_id: 1 }, JournalRecord::JobFinished { job_id: 2 }]
         );
-        std::fs::remove_file(&p).ok();
+        cleanup(&p);
+    }
+
+    #[test]
+    fn snapshot_wire_roundtrip() {
+        let s = sample_snapshot();
+        let b = s.to_bytes();
+        assert_eq!(DispatcherSnapshot::from_bytes(&b).unwrap(), s);
+    }
+
+    #[test]
+    fn restore_without_snapshot_replays_genesis() {
+        let p = tmpfile("restore-genesis");
+        let j = Journal::open(&p).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            j.append(r).unwrap();
+        }
+        drop(j);
+        let out = Journal::restore(&p).unwrap();
+        assert!(out.snapshot.is_none());
+        assert_eq!(out.snapshot_seq, 0);
+        assert_eq!(out.records, recs);
+        assert_eq!(out.fallbacks, 0);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn snapshot_bounds_restore_to_suffix() {
+        let p = tmpfile("restore-suffix");
+        let j = Journal::open(&p).unwrap();
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        assert!(j.suffix_bytes() > 0);
+        let seq = j.install_snapshot(&sample_snapshot()).unwrap();
+        assert_eq!(seq, 1);
+        assert_eq!(j.suffix_bytes(), 0);
+        j.append(&JournalRecord::JobFinished { job_id: 7 }).unwrap();
+        drop(j);
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(out.snapshot, Some(sample_snapshot()));
+        assert_eq!(out.snapshot_seq, 1);
+        assert_eq!(out.records, vec![JournalRecord::JobFinished { job_id: 7 }]);
+        assert_eq!(out.fallbacks, 0);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn corrupt_newest_snapshot_falls_back_to_previous() {
+        let p = tmpfile("restore-fallback");
+        let j = Journal::open(&p).unwrap();
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        j.install_snapshot(&sample_snapshot()).unwrap();
+        // Records between snapshot 1 and 2 — captured by snapshot 2, but
+        // also replayable from suffix-1 when snapshot 2 is corrupt.
+        j.append(&JournalRecord::JobFinished { job_id: 8 }).unwrap();
+        let mut snap2 = sample_snapshot();
+        snap2.next_job_id = 9;
+        j.install_snapshot(&snap2).unwrap();
+        j.append(&JournalRecord::JobFinished { job_id: 9 }).unwrap();
+        drop(j);
+        // Corrupt snapshot 2's body.
+        let sp2 = snap_path(&p, 2);
+        let mut bytes = std::fs::read(&sp2).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&sp2, &bytes).unwrap();
+
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(out.snapshot, Some(sample_snapshot()), "must fall back to snapshot 1");
+        assert_eq!(out.snapshot_seq, 1);
+        // suffix-1 (the records snapshot 2 had absorbed) + suffix-2.
+        assert_eq!(
+            out.records,
+            vec![
+                JournalRecord::JobFinished { job_id: 8 },
+                JournalRecord::JobFinished { job_id: 9 }
+            ]
+        );
+        assert_eq!(out.fallbacks, 1);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn mid_suffix_corruption_keeps_longest_valid_prefix() {
+        let p = tmpfile("restore-prefix");
+        let j = Journal::open(&p).unwrap();
+        for id in 1..=5u64 {
+            j.append(&JournalRecord::JobFinished { job_id: id }).unwrap();
+        }
+        drop(j);
+        let mut bytes = std::fs::read(&p).unwrap();
+        // One JobFinished frame is 8 (header) + 9 (body) bytes; corrupt
+        // the third record's body.
+        bytes[2 * 17 + 8] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(
+            out.records,
+            vec![JournalRecord::JobFinished { job_id: 1 }, JournalRecord::JobFinished { job_id: 2 }]
+        );
+        assert_eq!(out.fallbacks, 1);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn open_repairs_corrupt_tail_before_appending() {
+        let p = tmpfile("repair");
+        {
+            let j = Journal::open(&p).unwrap();
+            for id in 1..=3u64 {
+                j.append(&JournalRecord::JobFinished { job_id: id }).unwrap();
+            }
+        }
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[2 * 17 + 8] ^= 0xff; // corrupt record 3's body
+        std::fs::write(&p, &bytes).unwrap();
+        // Reopen: the corrupt tail must be truncated, so this append
+        // lands at the salvaged-prefix boundary and is replayable.
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JournalRecord::JobFinished { job_id: 4 }).unwrap();
+        }
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(
+            out.records,
+            vec![
+                JournalRecord::JobFinished { job_id: 1 },
+                JournalRecord::JobFinished { job_id: 2 },
+                JournalRecord::JobFinished { job_id: 4 }
+            ]
+        );
+        assert_eq!(out.fallbacks, 0, "repair happened at open, restore sees a clean file");
+        cleanup(&p);
+    }
+
+    #[test]
+    fn retention_keeps_two_pairs() {
+        let p = tmpfile("retention");
+        let j = Journal::open(&p).unwrap();
+        for seq in 1..=4u64 {
+            j.append(&JournalRecord::JobFinished { job_id: seq }).unwrap();
+            let mut s = sample_snapshot();
+            s.next_job_id = seq + 1;
+            assert_eq!(j.install_snapshot(&s).unwrap(), seq);
+        }
+        drop(j);
+        assert_eq!(list_seqs(&p, "snap"), vec![3, 4]);
+        assert_eq!(list_seqs(&p, "suffix"), vec![3, 4]);
+        assert!(!p.exists(), "genesis file retired by retention");
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(out.snapshot_seq, 4);
+        assert_eq!(out.snapshot.unwrap().next_job_id, 5);
+        assert!(out.records.is_empty());
+        cleanup(&p);
+    }
+
+    #[test]
+    fn reopen_after_snapshot_appends_to_newest_suffix() {
+        let p = tmpfile("reopen-snap");
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JournalRecord::JobFinished { job_id: 1 }).unwrap();
+            j.install_snapshot(&sample_snapshot()).unwrap();
+            j.append(&JournalRecord::JobFinished { job_id: 2 }).unwrap();
+        }
+        {
+            let j = Journal::open(&p).unwrap();
+            assert_eq!(j.snapshot_seq(), 1);
+            assert_eq!(j.suffix_records(), 1);
+            j.append(&JournalRecord::JobFinished { job_id: 3 }).unwrap();
+        }
+        let out = Journal::restore(&p).unwrap();
+        assert_eq!(out.snapshot_seq, 1);
+        assert_eq!(
+            out.records,
+            vec![JournalRecord::JobFinished { job_id: 2 }, JournalRecord::JobFinished { job_id: 3 }]
+        );
+        cleanup(&p);
     }
 }

@@ -177,6 +177,51 @@
 //!   falls back to the ordinary dead-owner flip, which is safe because a
 //!   dead loser cannot serve.
 //!
+//! ### Durable control plane: snapshots, compaction, admission
+//!
+//! The journal alone makes restart cost proportional to the
+//! dispatcher's *lifetime*; snapshots make it proportional to its
+//! *state*. On disk the journal is a chain of CRC-framed segments:
+//!
+//! ```text
+//! journal            genesis suffix (seq 0)
+//! journal.snap-N     full-state checkpoint, one CRC-framed record
+//! journal.suffix-N   records appended after snapshot N
+//! ```
+//!
+//! * **Checkpoint** — `Dispatcher::snapshot_state()` serializes the
+//!   replayable state (datasets, jobs, named jobs, workers, spill
+//!   snapshots, id counters — canonical key-sorted order, soft/derived
+//!   state excluded) into one `DispatcherSnapshot`.
+//!   `Journal::install_snapshot` writes it temp-file + fsync + atomic
+//!   rename, then starts a fresh empty suffix: records never straddle a
+//!   checkpoint. Two (snapshot, suffix) generations are retained; older
+//!   ones are deleted.
+//! * **Compaction** — `tick()` (off the RPC hot path) cuts a checkpoint
+//!   whenever the live suffix exceeds
+//!   `DispatcherConfig::journal_compact_bytes` (default 4 MiB). Every
+//!   journal append happens under the meta lock (write-ahead: journal
+//!   first, then apply), so the checkpoint the compactor cuts agrees
+//!   exactly with the journal position it supersedes.
+//! * **Fallback ladder** — restore tries the newest snapshot first; a
+//!   snapshot failing its CRC falls back to the previous one, then to
+//!   full genesis replay (`dispatcher/restore_fallbacks` counts each
+//!   rung). A mid-suffix CRC mismatch or torn tail keeps the longest
+//!   valid prefix and stops that chain — corruption degrades recovery
+//!   freshness, never availability.
+//! * **Admission control** — the dispatcher sheds `GetOrCreateJob` (and
+//!   only that: existing jobs keep running) once unfinished jobs reach
+//!   `DispatcherConfig::admission_max_jobs`, answering a retryable
+//!   [`ServiceError::Overloaded`] with a `retry_after_ms` hint
+//!   (`DispatcherConfig::admission_retry_ms`). The client backs off
+//!   with jitter around the hint and retries
+//!   (`client/admission_retries`); the shed is lossless — no accepted
+//!   job loses data.
+//! * **Post-revoke grace** — a revoked residue's buffered rounds stay
+//!   servable read-only for one heartbeat (`RoundTake::Grace`, counted
+//!   as `worker/post_revoke_serves`) so a fetch racing the two-phase
+//!   lease flip gets data instead of a `WrongWorker` bounce.
+//!
 //! ### Closed-loop autoscaling & graceful drain (§3.1)
 //!
 //! The [`scaling::ScalingController`] closes Autopilot's loop over live
@@ -425,6 +470,13 @@ pub enum ServiceError {
     /// contract: clients recognize the condition by the
     /// `"element too large"` prefix in the remote error string.
     ElementTooLarge { bytes: usize, cap: usize },
+    /// The dispatcher's admission budget is spent: job *creation* is shed
+    /// (attaches to existing jobs are still admitted) and the caller
+    /// should retry after roughly `retry_after_ms` with jitter. The
+    /// `Display` text is part of the wire contract: clients recognize the
+    /// condition by the [`OVERLOADED_PREFIX`] in the remote error string
+    /// and parse the hint from `"; retry after N ms"`.
+    Overloaded { retry_after_ms: u64 },
     Other(String),
 }
 
@@ -441,6 +493,13 @@ pub const ELEMENT_TOO_LARGE_PREFIX: &str = "element too large";
 /// terminal error.
 pub const ROUND_CONSUMED_PREFIX: &str = "round already consumed";
 
+/// Stable prefix of [`ServiceError::Overloaded`]'s remote error string.
+/// Part of the wire contract: the client matches on it, parses the
+/// `"; retry after N ms"` hint, and retries `GetOrCreateJob` with
+/// jittered backoff (`client/admission_retries`) instead of surfacing a
+/// terminal error.
+pub const OVERLOADED_PREFIX: &str = "dispatcher overloaded";
+
 impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -455,6 +514,10 @@ impl std::fmt::Display for ServiceError {
                 f,
                 "{ELEMENT_TOO_LARGE_PREFIX}: {bytes} byte element exceeds the {cap} byte frame \
                  budget; use a chunked stream session (OpenStream with CHUNKED_TRANSFER)"
+            ),
+            ServiceError::Overloaded { retry_after_ms } => write!(
+                f,
+                "{OVERLOADED_PREFIX}: job admission budget spent; retry after {retry_after_ms} ms"
             ),
             ServiceError::Other(msg) => write!(f, "{msg}"),
         }

@@ -239,6 +239,11 @@ pub struct RegisterDatasetResp {
 }
 wire_struct!(RegisterDatasetResp { dataset_id, fingerprint });
 
+/// Job creation request. Under overload (the dispatcher's unfinished-job
+/// budget `DispatcherConfig::admission_max_jobs` is spent) the dispatcher
+/// sheds this RPC — and only this RPC; existing jobs keep running — with
+/// a retryable [`super::ServiceError::Overloaded`] carrying a
+/// `retry_after_ms` hint the client honors with jittered backoff.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetOrCreateJobReq {
     pub dataset_id: u64,

@@ -754,6 +754,15 @@ struct CoordinatedInner {
     /// Consumer slots dropped unconsumed (abandoned rounds GC'd, or
     /// buffered rounds of a residue whose lease moved away).
     abandoned_slots: u64,
+    /// Post-revoke grace: buffered rounds of residues just revoked, kept
+    /// servable read-only until their deadline so consumers whose fetch
+    /// raced the two-phase handoff get data instead of a `WrongWorker`
+    /// bounce. Separate from `rounds` so grace entries neither count
+    /// against the producer's prefetch depth nor get re-served as owned.
+    grace: HashMap<u64, (Vec<Option<Arc<Vec<u8>>>>, Instant)>,
+    /// How long revoked rounds stay in `grace` (zero disables the
+    /// window; production tasks set one heartbeat interval).
+    grace_ttl: Duration,
     /// Task removed / worker shutting down: unblock the producer.
     stopped: bool,
 }
@@ -762,6 +771,10 @@ struct CoordinatedInner {
 enum RoundTake {
     /// The consumer's pre-encoded slot for the round.
     Bytes(Arc<Vec<u8>>),
+    /// A revoked residue's buffered slot, served read-only within the
+    /// post-revoke grace window (the slot is not consumed: the gainer
+    /// owns the round's lifecycle now, we only absorb the race).
+    Grace(Arc<Vec<u8>>),
     /// This worker does not hold the round's lease.
     WrongWorker,
     Eos,
@@ -817,6 +830,8 @@ impl CoordinatedState {
                 staged: Vec::new(),
                 eos: false,
                 abandoned_slots: 0,
+                grace: HashMap::new(),
+                grace_ttl: Duration::ZERO,
                 stopped: false,
             }),
             cond: Condvar::new(),
@@ -1032,6 +1047,20 @@ impl CoordinatedState {
                 st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
             }
         }
+        // A re-granted residue invalidates its grace copies: the lease
+        // is authoritative again and grace data may lag what this
+        // producer re-materializes.
+        let regained: Vec<u64> = st
+            .grace
+            .keys()
+            .copied()
+            .filter(|r| new.contains(&(r % self.num_workers)))
+            .collect();
+        for r in regained {
+            if let Some((slots, _)) = st.grace.remove(&r) {
+                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+            }
+        }
         st.owned = new;
         drop(st);
         self.cond.notify_all();
@@ -1066,15 +1095,53 @@ impl CoordinatedState {
             .copied()
             .filter(|r| revoked.contains(&(r % self.num_workers)))
             .collect();
+        let ttl = st.grace_ttl;
+        let expires = Instant::now() + ttl;
         for r in dropped {
             if let Some(slots) = st.rounds.remove(&r) {
-                st.abandoned_slots += slots.iter().filter(|s| s.is_some()).count() as u64;
+                if ttl > Duration::ZERO {
+                    // Keep the buffered rounds servable read-only for one
+                    // grace window: a consumer whose fetch raced the
+                    // handoff still gets its slot instead of bouncing off
+                    // `WrongWorker` while the dispatcher flips the lease.
+                    st.grace.insert(r, (slots, expires));
+                } else {
+                    st.abandoned_slots +=
+                        slots.iter().filter(|s| s.is_some()).count() as u64;
+                }
             }
         }
         drop(st);
         self.cond.notify_all();
         self.space.notify_all();
         n
+    }
+
+    /// Set how long buffered rounds of a revoked residue stay servable
+    /// read-only ([`RoundTake::Grace`]). Zero (the default) disables the
+    /// window; production tasks set one heartbeat interval — the longest
+    /// a consumer's routing table can lag the lease flip.
+    fn set_revoke_grace(&self, ttl: Duration) {
+        self.inner.lock().unwrap().grace_ttl = ttl;
+    }
+
+    /// Drop grace entries past their deadline, folding their unserved
+    /// slots into the abandoned count. Caller holds the lock.
+    fn expire_grace(st: &mut CoordinatedInner) {
+        if st.grace.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut freed = 0u64;
+        st.grace.retain(|_, (slots, expires)| {
+            if now >= *expires {
+                freed += slots.iter().filter(|s| s.is_some()).count() as u64;
+                false
+            } else {
+                true
+            }
+        });
+        st.abandoned_slots += freed;
     }
 
     /// Drop buffered rounds every one of *their own* slot holders has
@@ -1133,6 +1200,16 @@ impl CoordinatedState {
         }
         loop {
             if !st.owned.contains(&(round % self.num_workers)) {
+                // Post-revoke grace: a fetch that raced the two-phase
+                // handoff still finds its slot here for one window. The
+                // slot is cloned, not consumed — the gainer owns the
+                // round now and grace only absorbs the routing race.
+                Self::expire_grace(&mut st);
+                if let Some((slots, _)) = st.grace.get(&round) {
+                    if let Some(Some(bytes)) = slots.get(consumer) {
+                        return Ok(RoundTake::Grace(bytes.clone()));
+                    }
+                }
                 return Ok(RoundTake::WrongWorker);
             }
             // `None` when the round is buffered but narrower than this
@@ -1879,6 +1956,9 @@ fn start_task(shared: &Arc<WorkerShared>, task: TaskDef) {
             // carries the job's full epoch schedule; the initial
             // single-epoch schedule is a no-op here.
             coord.set_width_schedule(&task.width_epochs);
+            // One heartbeat of post-revoke grace: the longest a
+            // consumer's routing table can lag a two-phase lease flip.
+            coord.set_revoke_grace(shared.cfg.heartbeat_interval);
             let c2 = coord.clone();
             spawn_producer(
                 shared,
@@ -2317,6 +2397,10 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
             let (element, end_of_sequence, wrong_worker_for_round) =
                 match coord.take(round, ci as usize, shared.cfg.serve_timeout)? {
                     RoundTake::Bytes(b) => (Some(b.as_ref().clone()), false, false),
+                    RoundTake::Grace(b) => {
+                        shared.metrics.counter("worker/post_revoke_serves").inc();
+                        (Some(b.as_ref().clone()), false, false)
+                    }
                     RoundTake::WrongWorker => (None, false, true),
                     RoundTake::Eos => (None, true, false),
                     RoundTake::Pending => (None, false, false),
@@ -2566,7 +2650,17 @@ fn fetch(shared: &Arc<WorkerShared>, req: FetchReq) -> ServiceResult<RespBody> {
                     "coordinated session opened without a consumer_index".into(),
                 )
             })?;
-            match coord.take(round, ci as usize, poll)? {
+            let taken = match coord.take(round, ci as usize, poll)? {
+                RoundTake::Grace(b) => {
+                    // Served from the post-revoke grace window: same
+                    // delivery path as an owned round, just counted.
+                    shared.metrics.counter("worker/post_revoke_serves").inc();
+                    RoundTake::Bytes(b)
+                }
+                other => other,
+            };
+            match taken {
+                RoundTake::Grace(_) => unreachable!("folded into Bytes above"),
                 RoundTake::WrongWorker => {
                     resp.wrong_worker_for_round = true;
                     resp.frame = 0u32.to_le_bytes().to_vec();
@@ -3186,6 +3280,53 @@ mod tests {
         c.set_owned(&[0], 1); // re-granted, floor 1 (min consumer need)
         assert!(c.install_round(round_of(&[10]))); // labeled round 1
         assert_eq!(take_bytes(&c, 1, 0).tensors[0].as_i32(), vec![10]);
+    }
+
+    #[test]
+    fn coordinated_post_revoke_grace_serves_buffered_rounds() {
+        // With a grace window armed, a fetch racing the two-phase
+        // handoff is served read-only from the revoked buffer instead
+        // of bouncing off WrongWorker.
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 8);
+        c.set_revoke_grace(Duration::from_secs(30));
+        assert!(c.install_round(round_of(&[7])));
+        assert_eq!(c.revoke(&[0]), 1);
+        match c.take(0, 0, Duration::from_millis(10)).unwrap() {
+            RoundTake::Grace(b) => {
+                assert_eq!(Element::from_bytes(&b).unwrap().tensors[0].as_i32(), vec![7]);
+            }
+            _ => panic!("expected a grace serve"),
+        }
+        // Read-only: a retried fetch is served again, not consumed.
+        assert!(matches!(
+            c.take(0, 0, Duration::from_millis(10)).unwrap(),
+            RoundTake::Grace(_)
+        ));
+        // A consumer with no slot in the grace round still bounces.
+        assert!(matches!(
+            c.take(0, 5, Duration::from_millis(10)).unwrap(),
+            RoundTake::WrongWorker
+        ));
+        // A re-grant invalidates grace copies: the lease is
+        // authoritative again and the producer re-materializes.
+        c.set_owned(&[0], 0);
+        assert!(c.inner.lock().unwrap().grace.is_empty(), "grace dropped on re-grant");
+    }
+
+    #[test]
+    fn coordinated_revoke_grace_expires() {
+        let c = CoordinatedState::new(1, 0, 1, &[], false, 0, 8);
+        c.set_revoke_grace(Duration::from_millis(1));
+        assert!(c.install_round(round_of(&[7])));
+        assert_eq!(c.revoke(&[0]), 1);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(matches!(
+            c.take(0, 0, Duration::from_millis(5)).unwrap(),
+            RoundTake::WrongWorker
+        ));
+        let st = c.inner.lock().unwrap();
+        assert!(st.grace.is_empty(), "expired entry dropped");
+        assert_eq!(st.abandoned_slots, 1, "unserved grace slot booked as abandoned");
     }
 
     #[test]

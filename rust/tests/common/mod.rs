@@ -258,11 +258,17 @@ impl Cluster {
 
     pub fn with_parts(
         num_workers: usize,
-        dcfg: DispatcherConfig,
+        mut dcfg: DispatcherConfig,
         store: Arc<ObjectStore>,
         udfs: UdfRegistry,
     ) -> Arc<Cluster> {
         let dfront = StableAddr::start();
+        // Mirror the production orchestrator wiring: the cluster store is
+        // also the spill tier, so the dispatcher can GC superseded
+        // snapshots' objects.
+        if dcfg.store.is_none() {
+            dcfg.store = Some(store.clone());
+        }
         let d = Dispatcher::start("127.0.0.1:0", dcfg.clone()).unwrap();
         dfront.set_backend(&d.addr());
         let wcfg = WorkerConfig::new(store.clone(), udfs);

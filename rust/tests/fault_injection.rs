@@ -23,7 +23,8 @@ use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::service::client::DistributedIter;
 use tfdatasvc::service::dispatcher::DispatcherConfig;
 use tfdatasvc::service::proto::{SharingMode, ShardingPolicy};
-use tfdatasvc::service::spill::{SpillConfig, SpillPolicy};
+use tfdatasvc::service::journal::Journal;
+use tfdatasvc::service::spill::{data_key, manifest_key, SpillConfig, SpillPolicy};
 use tfdatasvc::service::visitation::RoundTracker;
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::ObjectStore;
@@ -825,6 +826,27 @@ fn completed_epoch_commits_snapshot_and_resubmission_streams_from_store() {
     assert_eq!(client_b.metrics().counter("client/snapshot_attaches").get(), 1);
     assert_eq!(cluster.dispatcher().metrics().counter("dispatcher/snapshot_attaches").get(), 1);
     it_b.release();
+
+    // Third phase — superseded-snapshot GC: a new *live* production of
+    // the same fingerprint (sharing off never attaches) commits a newer
+    // epoch; the dispatcher journals the hand-over and deletes the
+    // replaced job's spill objects from the store.
+    let old_job = it_a.job_id();
+    assert!(cluster.store.contains(&data_key(old_job)), "first epoch's spill data present");
+    let client_c = cluster.client();
+    let mut cfg_c = share_cfg();
+    cfg_c.sharing = SharingMode::Off;
+    let mut it_c = client_c.distribute(&graph, cfg_c).unwrap();
+    let mut ids_c: Vec<u64> = Vec::new();
+    drain_ids(&mut it_c, &mut ids_c);
+    assert_eq!(ids_c.len() as u64, total, "superseding epoch produced live");
+    wait_until(Instant::now() + Duration::from_secs(10), "superseded spill GC", || {
+        cluster.dispatcher().metrics().counter("dispatcher/spill_snapshots_gced").get() >= 1
+    });
+    assert!(!cluster.store.contains(&data_key(old_job)), "replaced spill data deleted");
+    assert!(!cluster.store.contains(&manifest_key(old_job)), "replaced spill manifest deleted");
+    assert!(cluster.store.contains(&data_key(it_c.job_id())), "superseding snapshot kept");
+    it_c.release();
 }
 
 /// Satellite regression for the engine-poll removal: an idle concurrent
@@ -856,5 +878,123 @@ fn idle_round_engine_takes_no_timer_wakeups() {
     let report = tracker.report();
     assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
     assert_eq!(rounds, 6);
+    it.release();
+}
+
+/// Acceptance: checkpoint compaction bounds restart replay cost. After a
+/// long job-churn history is folded into a snapshot, a restart replays
+/// only the (near-empty) suffix instead of the whole history; a stale
+/// snapshot temp file from a crash mid-install is swept; and the
+/// restored dispatcher still routes the live coordinated job.
+#[test]
+fn journal_compaction_bounds_restart_replay() {
+    let jpath = journal_path("compact-replay");
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(800),
+        journal_path: Some(jpath.clone()),
+        ..Default::default()
+    };
+    let cluster = Cluster::with_config(1, dcfg);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+
+    // A live coordinated job that must stay routable across the restart.
+    let graph = PipelineBuilder::source_range(100_000).build();
+    let client = cluster.client();
+    let mut it = client.distribute(&graph, coord_cfg("compact-live", 1, 0)).unwrap();
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 4);
+
+    // Churn history: short-lived anonymous jobs, several records each.
+    let churn = cluster.client();
+    for i in 0..40u64 {
+        let g = PipelineBuilder::source_range(10 + i).build();
+        let mut j = churn.distribute(&g, ServiceClientConfig::default()).unwrap();
+        j.release();
+    }
+    let history = Journal::replay(&jpath).unwrap().len();
+    assert!(history >= 100, "churn built a real history ({history} records)");
+
+    // Checkpoint, then fake a crash mid-*next*-install: the temp file
+    // must be invisible to restore and swept on reopen.
+    assert_eq!(cluster.dispatcher().compact_now(), Some(1));
+    let tmp = jpath.with_file_name(format!(
+        "{}.snap-2.tmp",
+        jpath.file_name().unwrap().to_str().unwrap()
+    ));
+    std::fs::write(&tmp, b"torn half-written snapshot").unwrap();
+
+    cluster.restart_dispatcher(Duration::from_millis(200));
+    let d = cluster.dispatcher();
+    let replayed = d.metrics().counter("dispatcher/restore_records_replayed").get();
+    assert!(
+        replayed * 10 <= history as u64,
+        "restart replayed {replayed} records against a {history}-record history"
+    );
+    assert_eq!(d.metrics().counter("dispatcher/restore_fallbacks").get(), 0);
+    wait_until(Instant::now() + Duration::from_secs(5), "tmp snapshot sweep", || {
+        !tmp.exists()
+    });
+
+    // The live job replays out of the snapshot and keeps serving.
+    tracker.set_floor(rounds);
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 4);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
+    it.release();
+}
+
+/// Acceptance: a CRC-corrupted newest snapshot does not take the control
+/// plane down — restore falls back (here: to full genesis replay, which
+/// retention guarantees is still possible one step back) and live jobs
+/// stay routable.
+#[test]
+fn corrupted_newest_snapshot_falls_back_and_keeps_jobs_routable() {
+    let jpath = journal_path("corrupt-snap");
+    let dcfg = DispatcherConfig {
+        worker_timeout: Duration::from_millis(800),
+        journal_path: Some(jpath.clone()),
+        ..Default::default()
+    };
+    let cluster = Cluster::with_config(1, dcfg);
+    let _ticker = start_ticker(&cluster, Duration::from_millis(50));
+
+    let graph = PipelineBuilder::source_range(100_000).build();
+    let client = cluster.client();
+    let mut it = client.distribute(&graph, coord_cfg("corrupt-live", 1, 0)).unwrap();
+    let mut tracker = RoundTracker::new();
+    let mut rounds = 0u64;
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 4);
+
+    assert_eq!(cluster.dispatcher().compact_now(), Some(1));
+    // Flip one snapshot body byte: the frame CRC rejects the whole file.
+    let snap = jpath.with_file_name(format!(
+        "{}.snap-1",
+        jpath.file_name().unwrap().to_str().unwrap()
+    ));
+    let mut bytes = std::fs::read(&snap).unwrap();
+    assert!(bytes.len() > 8, "snapshot has a body");
+    bytes[8] ^= 0xff;
+    std::fs::write(&snap, &bytes).unwrap();
+
+    cluster.restart_dispatcher(Duration::from_millis(200));
+    let d = cluster.dispatcher();
+    assert!(
+        d.metrics().counter("dispatcher/restore_fallbacks").get() >= 1,
+        "corrupt snapshot must be counted as a fallback"
+    );
+    assert!(
+        d.metrics().counter("dispatcher/restore_records_replayed").get() >= 1,
+        "fallback restore replays the journal instead"
+    );
+
+    // Degraded recovery freshness, full availability: the job replays
+    // from genesis and keeps serving rounds exactly once.
+    tracker.set_floor(rounds);
+    drain_rounds(&mut it, &mut tracker, &mut rounds, 6);
+    let report = tracker.report();
+    assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
+    assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
     it.release();
 }

@@ -15,10 +15,12 @@ use tfdatasvc::data::graph::{GraphDef, Node, PipelineBuilder};
 use tfdatasvc::data::optimize::{optimize, OptimizeOptions};
 use tfdatasvc::data::udf::UdfRegistry;
 use tfdatasvc::service::dispatcher::{
-    plan_drain_handoffs, plan_home_handoffs, reassign_dead_residues,
+    plan_drain_handoffs, plan_home_handoffs, reassign_dead_residues, Dispatcher, DispatcherConfig,
 };
-use tfdatasvc::service::journal::{Journal, JournalRecord};
-use tfdatasvc::service::proto::{ProcessingMode, SharingMode, ShardingPolicy};
+use tfdatasvc::service::journal::{
+    DispatcherSnapshot, Journal, JournalRecord, SnapshotJob, SnapshotNamedJob, SnapshotWorker,
+};
+use tfdatasvc::service::proto::{ProcessingMode, SharingMode, ShardingPolicy, WidthEpoch};
 use tfdatasvc::service::sharding::{static_assignment, SplitTracker};
 use tfdatasvc::service::spill::{SegmentMeta, SpillManifest};
 use tfdatasvc::storage::ObjectStore;
@@ -584,7 +586,7 @@ fn rand_manifest(rng: &mut Rng) -> SpillManifest {
 }
 
 fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
-    match rng.below(10) {
+    match rng.below(11) {
         0 => JournalRecord::RegisterDataset { dataset_id: rng.next_u64(), graph: rand_graph(rng) },
         1 => JournalRecord::CreateJob {
             job_id: rng.next_u64(),
@@ -620,6 +622,7 @@ fn rand_journal_record(rng: &mut Rng) -> JournalRecord {
             barrier_round: rng.next_u64(),
             num_consumers: rng.next_u32() % 16,
         },
+        9 => JournalRecord::SpillSnapshotGced { job_id: rng.next_u64() },
         _ => JournalRecord::WorkerDrainChanged {
             worker_id: rng.next_u64(),
             draining: rng.chance(0.5),
@@ -643,7 +646,7 @@ fn prop_journal_records_roundtrip_byte_identical() {
         assert_eq!(back, rec, "trial {trial}");
         assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
     }
-    assert_eq!(variants_seen.len(), 10, "generator covered every record variant");
+    assert_eq!(variants_seen.len(), 11, "generator covered every record variant");
 }
 
 /// `SpillManifest` (the snapshot-commit payload) roundtrips
@@ -708,6 +711,248 @@ fn prop_journal_truncated_tail_recovers_longest_prefix() {
             assert_eq!(replayed, recs[..fit], "trial {trial} cut {cut}");
         }
         std::fs::remove_file(&p).ok();
+    }
+}
+
+// ------------------------------------------ snapshot / restore properties
+
+/// Remove the journal base file and every sibling segment
+/// (`{base}.snap-*`, `{base}.suffix-*`, stale `.tmp`s).
+fn remove_journal_files(base: &std::path::Path) {
+    let _ = std::fs::remove_file(base);
+    if let (Some(dir), Some(name)) = (base.parent(), base.file_name().and_then(|n| n.to_str())) {
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                if let Some(f) = e.file_name().to_str() {
+                    if f.starts_with(&format!("{name}.")) {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn rand_snapshot(rng: &mut Rng) -> DispatcherSnapshot {
+    DispatcherSnapshot {
+        datasets: (0..rng.below(3)).map(|i| (i, rand_graph(rng))).collect(),
+        jobs: (0..rng.below(4))
+            .map(|i| SnapshotJob {
+                job_id: i + 1,
+                dataset_id: rng.next_u64(),
+                job_name: if rng.chance(0.5) { String::new() } else { rng.ident(6) },
+                sharding: *rng.choice(&[
+                    ShardingPolicy::Off,
+                    ShardingPolicy::Dynamic,
+                    ShardingPolicy::Static,
+                ]),
+                mode: *rng.choice(&[ProcessingMode::Independent, ProcessingMode::Coordinated]),
+                num_consumers: rng.next_u32() % 8,
+                sharing: *rng.choice(&[SharingMode::Auto, SharingMode::Off]),
+                worker_order: (0..rng.below(5)).map(|_| rng.next_u64()).collect(),
+                residue_owners: (0..rng.below(5)).map(|_| rng.next_u64()).collect(),
+                clients: {
+                    let mut v: Vec<u64> = (0..rng.below(4)).map(|_| rng.next_u64()).collect();
+                    v.sort_unstable();
+                    v
+                },
+                finished: rng.chance(0.2),
+                width_epochs: (0..rng.below(3) + 1)
+                    .map(|e| WidthEpoch {
+                        epoch: e as u32,
+                        barrier_round: rng.next_u64() % 1000,
+                        num_consumers: rng.next_u32() % 8,
+                    })
+                    .collect(),
+                snapshot_serve: rng.chance(0.3),
+                snapshot_committed: rng.chance(0.3),
+            })
+            .collect(),
+        named_jobs: (0..rng.below(3))
+            .map(|_| SnapshotNamedJob {
+                dataset_id: rng.next_u64(),
+                job_name: rng.ident(5),
+                job_id: rng.next_u64(),
+            })
+            .collect(),
+        workers: (0..rng.below(4))
+            .map(|i| SnapshotWorker {
+                worker_id: i + 1,
+                addr: rng.ident(10),
+                draining: rng.chance(0.3),
+            })
+            .collect(),
+        spill_snapshots: (0..rng.below(3)).map(|_| (rng.next_u64(), rand_manifest(rng))).collect(),
+        next_worker_id: rng.next_u64(),
+        next_job_id: rng.next_u64(),
+        next_client_id: rng.next_u64(),
+    }
+}
+
+/// `DispatcherSnapshot` (the checkpoint payload) roundtrips
+/// byte-identically — the restore-equivalence property below depends on
+/// the encoding being canonical.
+#[test]
+fn prop_dispatcher_snapshot_roundtrips_byte_identical() {
+    let mut rng = Rng::new(0x9_000c);
+    for trial in 0..50 {
+        let snap = rand_snapshot(&mut rng);
+        let bytes = snap.to_bytes();
+        let back = DispatcherSnapshot::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("trial {trial}: decode failed: {e}"));
+        assert_eq!(back, snap, "trial {trial}");
+        assert_eq!(back.to_bytes(), bytes, "trial {trial}: re-encode byte-identical");
+    }
+}
+
+/// Restoring from (snapshot + suffix) rebuilds **byte-identical**
+/// dispatcher state to replaying the full journal from genesis — over
+/// random record histories and random compaction cuts. This is the
+/// correctness contract of compaction: a checkpoint may change how the
+/// history is stored, never what it rebuilds.
+#[test]
+fn prop_restore_equivalence_snapshot_plus_suffix_matches_full_replay() {
+    let mut rng = Rng::new(0x9_000d);
+    for trial in 0..6 {
+        let recs: Vec<JournalRecord> =
+            (0..rng.below(30) + 10).map(|_| rand_journal_record(&mut rng)).collect();
+        let cut = rng.below_usize(recs.len() - 1) + 1; // 1..len: both sides non-trivial
+        let cfg = |p: &std::path::Path| DispatcherConfig {
+            journal_path: Some(p.to_path_buf()),
+            ..DispatcherConfig::default()
+        };
+
+        // Path A: full genesis replay.
+        let pa = common::journal_path(&format!("prop-equiv-a-{trial}"));
+        remove_journal_files(&pa);
+        {
+            let j = Journal::open(&pa).unwrap();
+            for r in &recs {
+                j.append(r).unwrap();
+            }
+        }
+        let full = {
+            let d = Dispatcher::start("127.0.0.1:0", cfg(&pa)).unwrap();
+            d.snapshot_state().to_bytes()
+        };
+
+        // Path B: replay a prefix, cut a checkpoint, append the rest,
+        // restart (restore = snapshot + suffix replay).
+        let pb = common::journal_path(&format!("prop-equiv-b-{trial}"));
+        remove_journal_files(&pb);
+        {
+            let j = Journal::open(&pb).unwrap();
+            for r in &recs[..cut] {
+                j.append(r).unwrap();
+            }
+        }
+        {
+            let d = Dispatcher::start("127.0.0.1:0", cfg(&pb)).unwrap();
+            assert_eq!(d.compact_now(), Some(1), "trial {trial}: checkpoint cut");
+        }
+        {
+            let j = Journal::open(&pb).unwrap();
+            assert_eq!(j.snapshot_seq(), 1, "trial {trial}: appends land past the checkpoint");
+            for r in &recs[cut..] {
+                j.append(r).unwrap();
+            }
+        }
+        let compacted = {
+            let d = Dispatcher::start("127.0.0.1:0", cfg(&pb)).unwrap();
+            d.snapshot_state().to_bytes()
+        };
+        assert_eq!(compacted, full, "trial {trial} cut {cut}: restore equivalence");
+        remove_journal_files(&pa);
+        remove_journal_files(&pb);
+    }
+}
+
+/// Corruption never makes `Journal::restore` error — a CRC-bad snapshot
+/// falls back down the ladder to full genesis replay, and a corrupt or
+/// torn suffix keeps its longest valid record prefix — fuzzed over
+/// random histories and corruption points.
+#[test]
+fn prop_restore_survives_snapshot_and_suffix_corruption() {
+    let mut rng = Rng::new(0x9_000e);
+    for trial in 0..10 {
+        let pre: Vec<JournalRecord> =
+            (0..rng.below(6) + 2).map(|_| rand_journal_record(&mut rng)).collect();
+        let post: Vec<JournalRecord> =
+            (0..rng.below(6) + 2).map(|_| rand_journal_record(&mut rng)).collect();
+        let snap = rand_snapshot(&mut rng);
+        let p = common::journal_path(&format!("prop-corrupt-{trial}"));
+        remove_journal_files(&p);
+        {
+            let j = Journal::open(&p).unwrap();
+            for r in &pre {
+                j.append(r).unwrap();
+            }
+            assert_eq!(j.install_snapshot(&snap).unwrap(), 1);
+            for r in &post {
+                j.append(r).unwrap();
+            }
+        }
+        let side = |ext: &str| {
+            let mut name = p.file_name().unwrap().to_os_string();
+            name.push(ext);
+            p.with_file_name(name)
+        };
+
+        // Pristine: newest snapshot + its suffix; genesis superseded.
+        let ok = Journal::restore(&p).unwrap();
+        assert_eq!(ok.snapshot.as_ref(), Some(&snap), "trial {trial}");
+        assert_eq!(ok.records, post, "trial {trial}");
+        assert_eq!(ok.fallbacks, 0, "trial {trial}");
+
+        // Flip a snapshot *body* byte: CRC rejects it, restore falls
+        // back to full genesis replay and loses nothing.
+        let snap_file = side(".snap-1");
+        let snap_bytes = std::fs::read(&snap_file).unwrap();
+        let mut bad = snap_bytes.clone();
+        let i = 8 + rng.below_usize(bad.len() - 8);
+        bad[i] ^= 0xff;
+        std::fs::write(&snap_file, &bad).unwrap();
+        let r = Journal::restore(&p).unwrap();
+        assert!(r.snapshot.is_none(), "trial {trial}: corrupt snapshot skipped");
+        assert!(r.fallbacks >= 1, "trial {trial}: fallback counted");
+        let all: Vec<JournalRecord> = pre.iter().chain(post.iter()).cloned().collect();
+        assert_eq!(r.records, all, "trial {trial}: genesis replay covers the history");
+        std::fs::write(&snap_file, &snap_bytes).unwrap();
+
+        // Flip a suffix body byte: the longest valid prefix survives on
+        // top of the (intact) snapshot, and the corruption is counted.
+        let suffix_file = side(".suffix-1");
+        let sbytes = std::fs::read(&suffix_file).unwrap();
+        let frames: Vec<usize> = post.iter().map(|r| 8 + r.to_bytes().len()).collect();
+        let k = rng.below_usize(post.len());
+        let frame_start: usize = frames[..k].iter().sum();
+        let body_len = frames[k] - 8;
+        let mut bad = sbytes.clone();
+        bad[frame_start + 8 + rng.below_usize(body_len)] ^= 0xff;
+        std::fs::write(&suffix_file, &bad).unwrap();
+        let r = Journal::restore(&p).unwrap();
+        assert_eq!(r.snapshot.as_ref(), Some(&snap), "trial {trial}");
+        assert_eq!(r.records, post[..k], "trial {trial}: longest valid prefix");
+        assert!(r.fallbacks >= 1, "trial {trial}: suffix corruption counted");
+
+        // Truncate the suffix mid-frame (crash torn tail): whole records
+        // before the cut survive; a torn tail is repair, not corruption.
+        let cut = rng.below_usize(sbytes.len());
+        std::fs::write(&suffix_file, &sbytes[..cut]).unwrap();
+        let r = Journal::restore(&p).unwrap();
+        assert_eq!(r.snapshot.as_ref(), Some(&snap), "trial {trial}");
+        let mut fit = 0usize;
+        let mut used = 0usize;
+        for f in &frames {
+            if used + f <= cut {
+                used += f;
+                fit += 1;
+            } else {
+                break;
+            }
+        }
+        assert_eq!(r.records, post[..fit], "trial {trial} cut {cut}");
+        remove_journal_files(&p);
     }
 }
 

@@ -845,3 +845,90 @@ fn dispatcher_is_not_on_the_data_path() {
         other => panic!("dispatcher must reject data-path RPCs, got {other:?}"),
     }
 }
+
+#[test]
+fn overload_shed_is_retryable_and_lossless() {
+    // Admission control: once the unfinished-job budget is spent, job
+    // *creation* is shed with a retryable error carrying a backoff hint;
+    // the client-side retry loop absorbs the shed window losslessly.
+    use tfdatasvc::rpc::{call_typed, Pool, RpcError};
+    use tfdatasvc::service::proto::{
+        dispatcher_methods, GetOrCreateJobReq, GetOrCreateJobResp, RegisterDatasetReq,
+        RegisterDatasetResp,
+    };
+    use tfdatasvc::service::OVERLOADED_PREFIX;
+
+    let d = Dispatcher::start(
+        "127.0.0.1:0",
+        DispatcherConfig { admission_max_jobs: 1, admission_retry_ms: 20, ..Default::default() },
+    )
+    .unwrap();
+    let _w = start_worker(&d, ObjectStore::in_memory());
+
+    // First anonymous job spends the whole budget while it stays live.
+    let holder = ServiceClient::new(&d.addr());
+    let mut hold = holder
+        .distribute(&PipelineBuilder::source_range(8).build(), ServiceClientConfig::default())
+        .unwrap();
+
+    // A raw GetOrCreateJob for a different pipeline must be shed with the
+    // configured retry hint (attaches are exempt; creation is not).
+    let pool = Pool::with_defaults();
+    let reg: RegisterDatasetResp = call_typed(
+        &pool,
+        &d.addr(),
+        dispatcher_methods::REGISTER_DATASET,
+        &RegisterDatasetReq {
+            graph: PipelineBuilder::source_range(9).build(),
+            udf_digests: Vec::new(),
+        },
+        common::T,
+    )
+    .unwrap();
+    let shed: Result<GetOrCreateJobResp, RpcError> = call_typed(
+        &pool,
+        &d.addr(),
+        dispatcher_methods::GET_OR_CREATE_JOB,
+        &GetOrCreateJobReq {
+            dataset_id: reg.dataset_id,
+            job_name: String::new(),
+            sharding: ShardingPolicy::Off,
+            mode: ProcessingMode::Independent,
+            num_consumers: 0,
+            sharing: SharingMode::Off,
+        },
+        common::T,
+    );
+    match shed {
+        Err(RpcError::Remote(msg)) => {
+            assert!(msg.contains(OVERLOADED_PREFIX), "{msg}");
+            assert!(msg.contains("retry after 20 ms"), "{msg}");
+        }
+        other => panic!("expected overload shed, got {other:?}"),
+    }
+    assert!(d.metrics().counter("dispatcher/jobs_shed").get() >= 1);
+
+    // Free the budget shortly after the retry loop starts spinning.
+    let freer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(250));
+        hold.release();
+    });
+
+    // distribute() blocks through jittered retries until admitted, then
+    // the job must still see every element exactly once.
+    let client = ServiceClient::new(&d.addr());
+    let mut it = client
+        .distribute(&PipelineBuilder::source_range(9).build(), ServiceClientConfig::default())
+        .unwrap();
+    let mut tracker = VisitationTracker::new();
+    while let Some(e) = it.next().unwrap() {
+        tracker.observe(&e.ids);
+    }
+    let report = tracker.verify(Guarantee::ExactlyOnce, 9);
+    assert!(report.ok, "{report:?}");
+    assert!(
+        client.metrics().counter("client/admission_retries").get() >= 1,
+        "expected at least one client-side admission retry"
+    );
+    freer.join().unwrap();
+}
