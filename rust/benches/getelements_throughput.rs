@@ -25,7 +25,7 @@ use tfdatasvc::data::udf::UdfRegistry;
 use tfdatasvc::metrics::write_json_file;
 use tfdatasvc::orchestrator::Cell;
 use tfdatasvc::service::dispatcher::DispatcherConfig;
-use tfdatasvc::service::proto::ShardingPolicy;
+use tfdatasvc::service::proto::{CompressionMode, ShardingPolicy};
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::dataset::{generate_vision, VisionGenConfig};
 use tfdatasvc::storage::ObjectStore;
@@ -179,6 +179,15 @@ fn main() {
         let rpc_drop = (single.rpcs as f64 / single.elements as f64)
             / (batched.rpcs as f64 / batched.elements as f64);
         let adaptive_ratio = stat.secs / adap.secs;
+        // Sustained bytes/sec gate: the best amortizing path (batched or
+        // either session flavor) against the one-element-per-RPC
+        // pre-change baseline.
+        let single_bps = single.bytes as f64 / single.secs;
+        let best_bps = [batched, stat, adap]
+            .iter()
+            .map(|s| s.bytes as f64 / s.secs)
+            .fold(0.0f64, f64::max);
+        let bytes_speedup = best_bps / single_bps;
         json_shapes.push((
             name.to_string(),
             Json::Obj(
@@ -199,6 +208,8 @@ fn main() {
                         ("batched_speedup".to_string(), speedup.into()),
                         ("rpc_drop".to_string(), rpc_drop.into()),
                         ("adaptive_ratio".to_string(), adaptive_ratio.into()),
+                        ("bytes_speedup".to_string(), bytes_speedup.into()),
+                        ("best_bytes_per_sec".to_string(), best_bps.into()),
                     ])
                     .collect(),
             ),
@@ -209,6 +220,16 @@ fn main() {
             stat.rpcs, adap.rpcs, single.bytes, batched.bytes
         );
         if name == "small" {
+            // Acceptance (raw-speed data plane): sustained bytes/sec on
+            // small elements must be >= 2x the single-element baseline,
+            // in smoke mode too — this is the per-worker serve-rate
+            // denominator of the paper's §5 cost claims, so it gets a
+            // hard gate rather than a relaxed smoke floor.
+            assert!(
+                bytes_speedup >= 2.0,
+                "acceptance: best data-plane path must sustain >= 2x single-element bytes/sec \
+                 on small elements (got {bytes_speedup:.2}x, {best_bps:.0} vs {single_bps:.0} B/s)"
+            );
             let (min_speedup, min_drop) = if smoke { (1.5, 4.0) } else { (2.0, 8.0) };
             assert!(
                 speedup >= min_speedup,
@@ -305,6 +326,79 @@ fn main() {
                 (mib / secs).into()
             }),
             ("continuation_frames", frames.into()),
+        ]),
+    ));
+
+    // Mixed-class codec shape: compressible small frames (range rows are
+    // zero-heavy little-endian integers) and incompressible large frames
+    // (random vision pixels) through the same worker with compression
+    // requested. The worker's observed-ratio chooser must settle per
+    // size class — LZ for the range frames (`compression_bytes_saved`
+    // grows) and Skip for the vision frames (`codec_skips` grows) —
+    // while delivery stays lossless on both.
+    let mix_rows = if smoke { 2048u64 } else { 8192 };
+    let mix_range = PipelineBuilder::source_range(mix_rows).batch(8).build();
+    let (mix_shards, mix_samples) = if smoke { (2usize, 256usize) } else { (2, 512) };
+    let mix_spec = generate_vision(
+        &store,
+        "bench-mixed",
+        &VisionGenConfig {
+            num_shards: mix_shards,
+            samples_per_shard: mix_samples,
+            ..Default::default()
+        },
+    );
+    let mix_vision = PipelineBuilder::source_vision(mix_spec).batch(4).build();
+    let skips0 = cell.worker_counter_sum("worker/codec_skips");
+    let saved0 = cell.worker_counter_sum("worker/compression_bytes_saved");
+    let mut delivered = 0u64;
+    let t0 = Instant::now();
+    for graph in [&mix_range, &mix_vision] {
+        let client = ServiceClient::new(&cell.dispatcher_addr());
+        let mut it = client
+            .distribute(
+                graph,
+                ServiceClientConfig {
+                    sharding: ShardingPolicy::Off,
+                    compression: CompressionMode::Deflate,
+                    adaptive_batching: false,
+                    batch_max_elements: 4,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        while let Ok(Some(_)) = it.next() {
+            delivered += 1;
+        }
+        it.release();
+    }
+    let mix_secs = t0.elapsed().as_secs_f64();
+    let expected_mix = mix_rows / 8 + (mix_shards * mix_samples / 4) as u64;
+    assert_eq!(
+        delivered, expected_mix,
+        "mixed-class shape must deliver losslessly under the adaptive codec"
+    );
+    let codec_skips = cell.worker_counter_sum("worker/codec_skips") - skips0;
+    let lz_saved = cell.worker_counter_sum("worker/compression_bytes_saved") - saved0;
+    println!(
+        "mixed: {delivered} elements in {mix_secs:.2}s, codec skip plans {codec_skips}, \
+         LZ bytes saved {lz_saved}"
+    );
+    assert!(
+        lz_saved > 0,
+        "compressible range frames must settle on LZ (no compression savings observed)"
+    );
+    assert!(
+        codec_skips > 0,
+        "incompressible vision frames must settle on Skip (no skip plans observed)"
+    );
+    json_shapes.push((
+        "mixed".to_string(),
+        obj([
+            ("elements", delivered.into()),
+            ("elements_per_sec", (delivered as f64 / mix_secs).into()),
+            ("codec_skips", codec_skips.into()),
+            ("lz_bytes_saved", lz_saved.into()),
         ]),
     ));
     let bench_json = obj([

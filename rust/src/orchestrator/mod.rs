@@ -220,6 +220,14 @@ impl Cell {
         self.workers.lock().unwrap().values().map(|w| w.addr()).collect()
     }
 
+    /// Sum a counter across every live worker's metrics registry —
+    /// bench/test observability for worker-side data-plane counters
+    /// (e.g. `worker/codec_skips`, `worker/compression_bytes_saved`)
+    /// that are not part of any RPC status response.
+    pub fn worker_counter_sum(&self, name: &str) -> u64 {
+        self.workers.lock().unwrap().values().map(|w| w.metrics().counter(name).get()).sum()
+    }
+
     /// Drive dispatcher liveness checks.
     pub fn tick(&self) -> Vec<u64> {
         self.dispatcher.tick()

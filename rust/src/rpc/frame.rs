@@ -115,20 +115,28 @@ impl Frame {
     }
 
     /// Blocking read of one complete frame.
+    ///
+    /// The length word and fixed header are gathered in a single
+    /// `read_vectored` scatter read (the request-side mirror of the
+    /// gathered [`Frame::write_parts_to`] response path), and the payload
+    /// is then read straight into its final, exactly-sized buffer. The
+    /// previous shape read `len` bytes into a scratch `body` buffer and
+    /// copied the payload back out of it — one full extra copy of every
+    /// multi-megabyte batch frame.
     pub fn read_from<R: Read>(r: &mut R) -> io::Result<Frame> {
         let mut len4 = [0u8; 4];
-        r.read_exact(&mut len4)?;
+        let mut hdr = [0u8; HEADER_LEN];
+        read_exact_vectored(r, &mut len4, &mut hdr)?;
         let len = u32::from_le_bytes(len4) as usize;
         if len < HEADER_LEN || len > MAX_FRAME_LEN {
             return Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad frame length {len}")));
         }
-        let mut body = vec![0u8; len];
-        r.read_exact(&mut body)?;
-        let mut rd = Reader::new(&body);
+        let mut rd = Reader::new(&hdr);
         let call_id = rd.get_u64().map_err(to_io)?;
         let kind = FrameKind::from_u8(rd.get_u8().map_err(to_io)?)?;
         let method = rd.get_u16().map_err(to_io)?;
-        let payload = body[rd.position()..].to_vec();
+        let mut payload = vec![0u8; len - HEADER_LEN];
+        r.read_exact(&mut payload)?;
         Ok(Frame { call_id, kind, method, payload })
     }
 }
@@ -172,6 +180,35 @@ fn write_all_vectored<W: Write>(w: &mut W, slices: &[&[u8]]) -> io::Result<()> {
                 off = 0;
             }
         }
+    }
+    Ok(())
+}
+
+/// `read_exact` across two buffers via `read_vectored`, tracking partial
+/// progress across the buffer boundary (the read-side dual of
+/// [`write_all_vectored`]). Falls back gracefully on readers whose
+/// `read_vectored` only fills the first buffer (the default impl): the
+/// loop simply re-enters with the remainder.
+fn read_exact_vectored<R: Read>(r: &mut R, a: &mut [u8], b: &mut [u8]) -> io::Result<()> {
+    let mut done_a = 0usize;
+    let mut done_b = 0usize;
+    while done_a < a.len() || done_b < b.len() {
+        let mut bufs =
+            [io::IoSliceMut::new(&mut a[done_a..]), io::IoSliceMut::new(&mut b[done_b..])];
+        let n = match r.read_vectored(&mut bufs) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame header",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        let take_a = n.min(a.len() - done_a);
+        done_a += take_a;
+        done_b += n - take_a;
     }
     Ok(())
 }
@@ -308,6 +345,39 @@ mod tests {
         // Exactly at the cap minus header is fine.
         let ok_parts: Vec<&[u8]> = (0..63).map(|_| chunk.as_slice()).collect();
         Frame::write_parts_to(&mut NullSink, 1, FrameKind::Response, 2, &ok_parts).unwrap();
+    }
+
+    /// A reader that returns at most 3 bytes per call and only fills the
+    /// first buffer of a vectored read — the worst legal behavior — must
+    /// still produce the complete frame through the scatter-read path.
+    #[test]
+    fn read_survives_short_vectored_reads() {
+        struct Dribble<'a>(&'a [u8]);
+        impl Read for Dribble<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                let n = buf.len().min(3).min(self.0.len());
+                buf[..n].copy_from_slice(&self.0[..n]);
+                self.0 = &self.0[n..];
+                Ok(n)
+            }
+        }
+        let f = Frame::request(11, 4, (0..37u8).collect());
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        assert_eq!(Frame::read_from(&mut Dribble(&buf)).unwrap(), f);
+    }
+
+    /// Truncation inside the gathered length+header read is clean EOF,
+    /// whether the cut lands in the length word or the header proper.
+    #[test]
+    fn eof_inside_header_is_eof() {
+        let f = Frame::request(1, 1, b"xyz".to_vec());
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        for cut in [2usize, 9] {
+            let err = Frame::read_from(&mut &buf[..cut]).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "cut {cut}");
+        }
     }
 
     #[test]

@@ -68,6 +68,49 @@
 //! scatter-gather frame write ([`crate::rpc::Frame::write_parts_to`])
 //! instead of copying the frame into a contiguous response payload.
 //!
+//! ## Raw-speed data plane
+//!
+//! The paper's §5 economics divide cluster cost by per-worker serve
+//! rate, so the serve hot path is engineered, not just correct. Four
+//! mechanisms, each locked in by a differential test battery
+//! (`serve_batch_differential_*` in [`worker`], the seeded CRC/codec
+//! suites in `tests/fault_injection.rs`) and gated by the
+//! `micro_hotpath`/`getelements_throughput` smoke benches in CI:
+//!
+//! * **Sharded sliding cache** — the multi-consumer window splits into
+//!   one `RwLock` element ring (append/trim, read-mostly under serve)
+//!   plus 8 cursor shards (`client & 7`), each its own mutex, so k
+//!   concurrent `Fetch`es from distinct consumers advance cursors
+//!   without serializing on one cache lock. A `min_hint` atomic
+//!   (invariant: hint <= true slowest cursor; refreshed exactly on
+//!   trim, `fetch_min`-ed on registration) gates eager trims: a serve
+//!   only pays the full all-shards min scan + ring write lock when its
+//!   cursor *was* the slowest, which is sequentially identical to
+//!   trimming after every op (the property the single-lock reference
+//!   model in the differential test asserts). Lock order is
+//!   meta -> shard -> ring; the publish condvar pairs only with meta.
+//! * **Adaptive per-shape compression** — [`crate::wire::AdaptiveCodec`]
+//!   buckets response frames by size class (log2), spends a few trial
+//!   compressions per class, then settles a sticky per-class verdict:
+//!   LZ for frames that compress >= 10% (`Compress`), straight bytes
+//!   for ones that don't (`Skip`, counted as `worker/codec_skips`) —
+//!   so incompressible image batches stop paying the compressor while
+//!   zero-heavy record batches keep the wire savings. Classes re-probe
+//!   every ~512 uses and flip (`worker/codec_switches`) on content
+//!   drift. `assemble_batch_frame` consults the codec only when the
+//!   session negotiated `DEFLATE` *and* the client asked for it.
+//! * **Slice-by-16 CRC-32** — frame checksums
+//!   ([`crate::util::crc32`]) fold 16 bytes per step through 16
+//!   precomputed tables instead of byte-at-a-time; the scalar oracle
+//!   stays compiled and the differential property test (plus the
+//!   seeded suite in the CI fault matrix) pins bit-for-bit equality on
+//!   one-shot, streaming, and misaligned inputs.
+//! * **Vectored request reads** — the RPC server reads the 4-byte
+//!   length prefix and the fixed header in one `read_vectored` syscall
+//!   ([`crate::rpc`]'s frame reader) instead of two sequential
+//!   `read_exact`s, trimming a syscall off every request on the serve
+//!   path.
+//!
 //! ## Coordinated reads (§3.6): round leases + prefetch
 //!
 //! Coordinated mode serves training **rounds**: per round, one worker

@@ -36,7 +36,7 @@ use crate::util::chan;
 use crate::wire::{BufPool, Decode, Encode, Writer};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Worker tuning knobs.
@@ -140,14 +140,66 @@ impl WorkerConfig {
 /// oldest retained element instead of stalling production — the paper's
 /// relaxed-visitation escape hatch — and every skipped element is
 /// counted.
+///
+/// Concurrency layout (the ROADMAP raw-speed item): per-consumer cursor
+/// **shards** over an epoch-sequenced element **ring**, instead of one
+/// cache-wide mutex. See the field docs and `service/mod.rs` for the
+/// shard/ring/meta lock discipline.
+/// Cursor-shard count (power of two; client ids map to shards by low
+/// bits). Contention is per *job*: a handful of concurrently fetching
+/// sessions is the common case, so eight shards already makes cross-
+/// session collisions rare — the win is that distinct sessions stop
+/// serializing on one cache-wide mutex at all.
+const CURSOR_SHARDS: usize = 8;
+
 struct SlidingCache {
-    state: Mutex<SlidingCacheState>,
+    /// The epoch-sequenced element ring itself. Serve paths share it via
+    /// `read`; the producer (push) and the trimmer take `write`.
+    /// Splitting the ring from the cursor state is what lets
+    /// independent-mode fetches from distinct sessions run in parallel:
+    /// a fetch holds only its own cursor shard plus a shared ring read
+    /// lock, so two sessions copy bytes out of the window concurrently.
+    ring: RwLock<RingState>,
+    /// Per-consumer cursor state, sharded by client-id low bits so
+    /// distinct sessions lock distinct shards.
+    shards: [Mutex<CursorShard>; CURSOR_SHARDS],
+    /// Small meta lock serializing the producer's accounting and the
+    /// eviction scan (the only paths that read *all* shards). Lock order
+    /// is `meta` → shard → `ring`; nothing acquires a shard or `meta`
+    /// while holding the ring, so serve/push/trim cannot deadlock.
+    meta: Mutex<()>,
+    /// Paired with `meta` (publish/EOS wakeups — see `wait_for_publish`).
     cond: Condvar,
     capacity: usize,
     byte_budget: usize,
     /// Eagerly evict elements consumed by every registered cursor (see
     /// [`WorkerConfig::eager_window_eviction`]).
     eager: bool,
+    /// Cumulative ledgers (formerly fields of the single locked state):
+    /// atomics so serve paths on different shards bump them without
+    /// rendezvous. Snapshot via [`SlidingCache::stats`].
+    hits: AtomicU64,
+    evictions: AtomicU64,
+    produced: AtomicU64,
+    /// Elements produced while >= 2 consumers were registered (the "1x
+    /// production" half of the §3.5 sharing ledger).
+    shared_produced: AtomicU64,
+    /// Elements consumers skipped because they were evicted before being
+    /// read (relaxed visitation).
+    skipped: AtomicU64,
+    /// Registered-cursor census (the producer reads it for the sharing
+    /// ledger without scanning shards).
+    num_cursors: AtomicUsize,
+    /// Cached lower bound on the slowest registered cursor — the
+    /// eager-trim gate. A serve pays the full shard scan + ring write
+    /// only when the cursor it advanced sat at this watermark (its move
+    /// may shift the trim frontier); everyone else skips trimming.
+    /// `u64::MAX` means "unknown: recompute at the next opportunity".
+    /// Soundness: the hint must never exceed the true minimum (a
+    /// stale-high hint costs a spurious rescan; a stale-low one would
+    /// strand evictable elements), hence `fetch_min` on registration and
+    /// an exact store under `meta` in [`SlidingCache::trim_locked`].
+    min_hint: AtomicU64,
     /// Registry counters fed directly by the cache (single source of
     /// truth for the §3.5 sharing ledger — call sites cannot forget the
     /// bump and diverge from the cache-internal stats).
@@ -172,7 +224,10 @@ struct SlidingCache {
     spill_served_ctr: Arc<crate::metrics::Counter>,
 }
 
-struct SlidingCacheState {
+/// The produced stream's retained window (everything the producer and
+/// trimmer edit under the ring write lock, and serves read under the
+/// read lock).
+struct RingState {
     /// `window[i]` holds sequence number `base_seq + i`, pre-encoded:
     /// encoding happens once at production time, so serving the same
     /// batch to k sharing clients costs k memcpys instead of k deep
@@ -181,6 +236,13 @@ struct SlidingCacheState {
     /// Total payload bytes currently retained in `window`.
     window_bytes: usize,
     base_seq: u64,
+    /// Producer finished (end of dataset).
+    eos: bool,
+}
+
+/// One cursor shard: the consumers whose client-id low bits land here.
+#[derive(Default)]
+struct CursorShard {
     /// Consumer -> next sequence number it will read. Entries appear via
     /// explicit registration (task creation / sharing attach) or lazily
     /// on first fetch, and leave when the dispatcher reports a release.
@@ -191,17 +253,6 @@ struct SlidingCacheState {
     /// consumers are answered with end-of-sequence instead. Client ids
     /// are never reused, so tombstones never block a real newcomer.
     removed: std::collections::HashSet<u64>,
-    /// Producer finished (end of dataset).
-    eos: bool,
-    hits: u64,
-    evictions: u64,
-    produced: u64,
-    /// Elements produced while >= 2 consumers were registered (the "1x
-    /// production" half of the §3.5 sharing ledger).
-    shared_produced: u64,
-    /// Elements consumers skipped because they were evicted before being
-    /// read (relaxed visitation).
-    skipped: u64,
 }
 
 /// Counter snapshot for status reporting and tests. The per-cache
@@ -273,23 +324,25 @@ impl SlidingCache {
         let target_gauge = metrics.gauge(&format!("worker/job/{job_id}/window_target_bytes"));
         target_gauge.set(target as i64);
         SlidingCache {
-            state: Mutex::new(SlidingCacheState {
+            ring: RwLock::new(RingState {
                 window: Default::default(),
                 window_bytes: 0,
                 base_seq: 0,
-                cursors: HashMap::new(),
-                removed: Default::default(),
                 eos: false,
-                hits: 0,
-                evictions: 0,
-                produced: 0,
-                shared_produced: 0,
-                skipped: 0,
             }),
+            shards: std::array::from_fn(|_| Mutex::new(CursorShard::default())),
+            meta: Mutex::new(()),
             cond: Condvar::new(),
             capacity: capacity.max(1),
             byte_budget,
             eager,
+            hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            produced: AtomicU64::new(0),
+            shared_produced: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+            num_cursors: AtomicUsize::new(0),
+            min_hint: AtomicU64::new(u64::MAX),
             shared_ctr: metrics.counter("worker/shared_elements_served"),
             skip_ctr: metrics.counter("worker/relaxed_visitation_skips"),
             win_elems_gauge: metrics.gauge(&format!("worker/job/{job_id}/window_elements")),
@@ -336,7 +389,39 @@ impl SlidingCache {
     }
 
     fn is_eos(&self) -> bool {
-        self.state.lock().unwrap().eos
+        self.ring.read().unwrap().eos
+    }
+
+    /// The cursor shard owning `client` (low bits of the id).
+    fn shard(&self, client: u64) -> &Mutex<CursorShard> {
+        &self.shards[client as usize & (CURSOR_SHARDS - 1)]
+    }
+
+    /// Bookkeeping for a cursor just inserted at `anchor` (explicit
+    /// registration, lazy first fetch, or a spill commit racing its
+    /// registration): the census feeds the sharing ledger and the
+    /// `fetch_min` keeps the eager-trim gate sound — the hint may only
+    /// ever sit at or below the true minimum cursor.
+    fn note_new_cursor(&self, anchor: u64) {
+        self.num_cursors.fetch_add(1, Ordering::SeqCst);
+        self.min_hint.fetch_min(anchor, Ordering::SeqCst);
+    }
+
+    /// Minimum registered cursor across every shard (`None` with no
+    /// cursors). Locks shards one at a time, scan only — never called
+    /// with the ring held.
+    fn min_cursor_scan(&self) -> Option<u64> {
+        let mut min: Option<u64> = None;
+        for sh in &self.shards {
+            let g = sh.lock().unwrap();
+            for &c in g.cursors.values() {
+                min = Some(match min {
+                    Some(m) => m.min(c),
+                    None => c,
+                });
+            }
+        }
+        min
     }
 
     /// Archive the retained RAM tail into the spill tier (end-of-epoch
@@ -350,9 +435,9 @@ impl SlidingCache {
         if sp.policy != SpillPolicy::All {
             return;
         }
-        let st = self.state.lock().unwrap();
-        for (i, bytes) in st.window.iter().enumerate() {
-            sp.offer(st.base_seq + i as u64, bytes.clone());
+        let ring = self.ring.read().unwrap();
+        for (i, bytes) in ring.window.iter().enumerate() {
+            sp.offer(ring.base_seq + i as u64, bytes.clone());
         }
     }
 
@@ -361,21 +446,32 @@ impl SlidingCache {
     /// served elements to the hit ledger and skipped ones (gaps /
     /// unreadable segments) to the relaxed-visitation ledger.
     fn complete_spill(&self, client: u64, upto: u64, served: u64, skipped: u64) {
-        let mut st = self.state.lock().unwrap();
-        if st.removed.contains(&client) {
-            return;
-        }
-        let cur = st.cursors.entry(client).or_insert(upto);
-        if *cur < upto {
-            *cur = upto;
-        }
-        st.hits += served;
+        let prev = {
+            let mut sh = self.shard(client).lock().unwrap();
+            if sh.removed.contains(&client) {
+                return;
+            }
+            match sh.cursors.get(&client).copied() {
+                Some(cur) => {
+                    if cur < upto {
+                        sh.cursors.insert(client, upto);
+                    }
+                    cur
+                }
+                None => {
+                    sh.cursors.insert(client, upto);
+                    self.note_new_cursor(upto);
+                    upto
+                }
+            }
+        };
+        self.hits.fetch_add(served, Ordering::SeqCst);
         self.spill_served_ctr.add(served);
         if skipped > 0 {
-            st.skipped += skipped;
+            self.skipped.fetch_add(skipped, Ordering::SeqCst);
             self.skip_ctr.add(skipped);
         }
-        self.trim_consumed(&mut st);
+        self.maybe_trim(prev);
     }
 
     /// Register a consumer's cursor at the oldest retained element. Done
@@ -384,26 +480,35 @@ impl SlidingCache {
     /// on first fetch. Returns whether the cursor is newly registered
     /// (push + heartbeat may deliver the same attach; only one counts).
     fn register_consumer(&self, client: u64) -> bool {
-        let mut st = self.state.lock().unwrap();
-        if st.removed.contains(&client) {
+        let mut sh = self.shard(client).lock().unwrap();
+        if sh.removed.contains(&client) || sh.cursors.contains_key(&client) {
             return false;
         }
-        let anchor = self.replay_anchor(st.base_seq);
-        let newly = !st.cursors.contains_key(&client);
-        st.cursors.entry(client).or_insert(anchor);
-        newly
+        let anchor = {
+            let ring = self.ring.read().unwrap();
+            self.replay_anchor(ring.base_seq)
+        };
+        sh.cursors.insert(client, anchor);
+        self.note_new_cursor(anchor);
+        true
     }
 
     /// Drop a released consumer's cursor (and tombstone the id) so it no
     /// longer counts toward the stream's consumer set. Returns whether
     /// the cursor existed.
     fn remove_consumer(&self, client: u64) -> bool {
-        let mut st = self.state.lock().unwrap();
-        st.removed.insert(client);
-        let existed = st.cursors.remove(&client).is_some();
+        let meta = self.meta.lock().unwrap();
+        let existed = {
+            let mut sh = self.shard(client).lock().unwrap();
+            sh.removed.insert(client);
+            sh.cursors.remove(&client).is_some()
+        };
+        if existed {
+            self.num_cursors.fetch_sub(1, Ordering::SeqCst);
+        }
         // A departing laggard may have been the only cursor pinning the
         // back of the window.
-        self.trim_consumed(&mut st);
+        self.trim_locked(&meta);
         existed
     }
 
@@ -415,87 +520,93 @@ impl SlidingCache {
     /// its first fetch (synchronous UPDATE_CONSUMERS push, task-creation
     /// consumer list, or the heartbeat fallback), so the minimum below
     /// cannot run ahead of a known consumer.
-    fn trim_consumed(&self, st: &mut SlidingCacheState) {
-        if !self.eager || st.cursors.is_empty() {
+    /// Recompute the slowest-cursor watermark and (in eager mode) evict
+    /// the consumed-by-all prefix. The caller must hold the meta lock —
+    /// the guard parameter proves it — so concurrent trims cannot
+    /// interleave their shard scans with the ring edit. Shards are
+    /// locked one at a time (scan only); the ring write lock is taken
+    /// with no shard lock held.
+    fn trim_locked(&self, _meta: &std::sync::MutexGuard<'_, ()>) {
+        let min = self.min_cursor_scan();
+        self.min_hint.store(min.unwrap_or(u64::MAX), Ordering::SeqCst);
+        let Some(min) = min else { return };
+        if !self.eager {
             return;
         }
-        let min = st.cursors.values().copied().min().unwrap_or(st.base_seq);
-        let mut evicted = false;
-        while st.base_seq < min && !st.window.is_empty() {
-            let old = st.window.pop_front().expect("non-empty window");
+        let mut ring = self.ring.write().unwrap();
+        if ring.base_seq >= min || ring.window.is_empty() {
+            return;
+        }
+        while ring.base_seq < min && !ring.window.is_empty() {
+            let old = ring.window.pop_front().expect("non-empty window");
             // Consumed-by-all, so no cursor wants it — only an `All`
             // spill (epoch archive) keeps it.
-            self.spill_evicted(st.base_seq, &old, false);
-            st.window_bytes -= old.len();
-            st.base_seq += 1;
-            st.evictions += 1;
-            evicted = true;
+            let seq = ring.base_seq;
+            self.spill_evicted(seq, &old, false);
+            ring.window_bytes -= old.len();
+            ring.base_seq += 1;
+            self.evictions.fetch_add(1, Ordering::SeqCst);
         }
-        if evicted {
-            self.win_elems_gauge.set(st.window.len() as i64);
-            self.win_bytes_gauge.set(st.window_bytes as i64);
-            if st.window.is_empty() {
-                // Adaptive window: the consumed-by-all prefix was the
-                // whole window, so consumers are in lockstep — decay the
-                // byte target toward its floor.
-                let target = self.target_bytes.load(Ordering::Relaxed);
-                let floor = (self.byte_budget / 16).max(1);
-                if target > floor {
-                    let next = (target - target / 4).max(floor);
-                    self.target_bytes.store(next, Ordering::Relaxed);
-                    self.target_gauge.set(next as i64);
-                }
+        self.win_elems_gauge.set(ring.window.len() as i64);
+        self.win_bytes_gauge.set(ring.window_bytes as i64);
+        if ring.window.is_empty() {
+            // Adaptive window: the consumed-by-all prefix was the
+            // whole window, so consumers are in lockstep — decay the
+            // byte target toward its floor.
+            let target = self.target_bytes.load(Ordering::Relaxed);
+            let floor = (self.byte_budget / 16).max(1);
+            if target > floor {
+                let next = (target - target / 4).max(floor);
+                self.target_bytes.store(next, Ordering::Relaxed);
+                self.target_gauge.set(next as i64);
             }
+        }
+    }
+
+    /// Post-serve trim gate. `prev` is the advanced cursor's value
+    /// *before* the operation: only the watermark holder's advance can
+    /// move the trim frontier, so a serve whose `prev` sits above the
+    /// hint skips the shard scan and ring write entirely. Sequentially
+    /// this evicts exactly when the old single-lock `trim_consumed`
+    /// would have (the hint tracks the true minimum between trims), so
+    /// the differential stress tests see identical eviction/skip
+    /// ledgers; under concurrency a stale-high hint only costs a
+    /// spurious rescan, never a missed trim.
+    fn maybe_trim(&self, prev: u64) {
+        if !self.eager {
+            return;
+        }
+        if prev <= self.min_hint.load(Ordering::SeqCst) {
+            let meta = self.meta.lock().unwrap();
+            self.trim_locked(&meta);
         }
     }
 
     /// Registered consumer count (shared streams have >= 2).
     #[cfg(test)]
     fn num_consumers(&self) -> usize {
-        self.state.lock().unwrap().cursors.len()
-    }
-
-    /// Clamp a cursor into the retained window, counting skipped
-    /// elements in both the cache stats and the registry counter.
-    /// Returns the effective cursor.
-    fn clamp_cursor(&self, st: &mut SlidingCacheState, client: u64) -> u64 {
-        let base = st.base_seq;
-        let anchor = self.replay_anchor(base);
-        let cursor = *st.cursors.entry(client).or_insert(anchor);
-        if cursor < base {
-            // Evicted range skipped (relaxed visitation escape hatch).
-            st.skipped += base - cursor;
-            self.skip_ctr.add(base - cursor);
-            st.cursors.insert(client, base);
-            return base;
-        }
-        cursor
+        let n: usize = self.shards.iter().map(|s| s.lock().unwrap().cursors.len()).sum();
+        debug_assert_eq!(n, self.num_cursors.load(Ordering::SeqCst));
+        n
     }
 
     /// Try to serve `client` from the cache. Cursor semantics: a new
     /// client starts at the oldest retained batch; a laggard whose cursor
-    /// was evicted implicitly skips to the oldest retained batch (counted
-    /// by [`SlidingCache::clamp_cursor`]).
+    /// was evicted implicitly skips to the oldest retained batch (the
+    /// clamp inside [`SlidingCache::serve_batch`] counts the skips).
     #[cfg(test)]
     fn serve(&self, client: u64) -> CacheServe {
-        let mut st = self.state.lock().unwrap();
-        if st.removed.contains(&client) {
-            // Straggler RPC from a released consumer: its stream is over.
-            return CacheServe::Eos;
+        static NO_INFLIGHT: AtomicU64 = AtomicU64::new(0);
+        match self.serve_batch(client, 1, usize::MAX, usize::MAX, false, &NO_INFLIGHT) {
+            BatchServe::Batch(mut v, end) => match v.pop() {
+                Some(e) => CacheServe::Bytes(e),
+                None if end => CacheServe::Eos,
+                None => CacheServe::NeedProduce,
+            },
+            BatchServe::Spill { .. } | BatchServe::Oversized(_) | BatchServe::TooLarge(_) => {
+                unreachable!("single-element test serve hits no spill/chunk path")
+            }
         }
-        let cursor = self.clamp_cursor(&mut st, client);
-        let idx = (cursor - st.base_seq) as usize;
-        if idx < st.window.len() {
-            let e = st.window[idx].clone(); // Arc bump, no copy
-            st.cursors.insert(client, cursor + 1);
-            st.hits += 1;
-            self.trim_consumed(&mut st);
-            return CacheServe::Bytes(e);
-        }
-        if st.eos {
-            return CacheServe::Eos;
-        }
-        CacheServe::NeedProduce
     }
 
     /// Front-driven production: append a fresh element (already encoded
@@ -512,21 +623,27 @@ impl SlidingCache {
     /// pre-encoded elements under one lock acquisition (the GetElements
     /// drain path encodes outside the lock, then bulk-inserts).
     fn push_encoded(&self, encoded: Vec<Arc<Vec<u8>>>) -> usize {
-        let mut st = self.state.lock().unwrap();
-        let consumers = st.cursors.len();
+        let _meta = self.meta.lock().unwrap();
+        let consumers = self.num_cursors.load(Ordering::SeqCst);
         if encoded.is_empty() {
             return consumers;
         }
         if consumers >= 2 {
             self.shared_ctr.add(encoded.len() as u64);
+            self.shared_produced.fetch_add(encoded.len() as u64, Ordering::SeqCst);
         }
+        self.produced.fetch_add(encoded.len() as u64, Ordering::SeqCst);
+        // One slowest-cursor snapshot covers the whole batch's `wanted`
+        // decisions (the single-lock code rescanned the cursor map per
+        // victim, but under the same lock serves couldn't move cursors
+        // mid-push anyway; here a cursor advancing mid-push can only
+        // turn a wanted victim unwanted, so the snapshot errs toward
+        // retaining bytes).
+        let min_cursor = self.min_cursor_scan();
+        let mut ring = self.ring.write().unwrap();
         for bytes in encoded {
-            st.window_bytes += bytes.len();
-            st.window.push_back(bytes);
-            st.produced += 1;
-            if consumers >= 2 {
-                st.shared_produced += 1;
-            }
+            ring.window_bytes += bytes.len();
+            ring.window.push_back(bytes);
             // Trim: the window slides forward when it outgrows the
             // element capacity or the adaptive byte target. Eviction
             // does not wait for slow cursors — they replay from the
@@ -534,13 +651,13 @@ impl SlidingCache {
             // keeps the newest element so every consumer can progress.
             loop {
                 let target = self.target_bytes.load(Ordering::Relaxed);
-                let over_cap = st.window.len() > self.capacity;
-                let over_bytes = st.window_bytes > target && st.window.len() > 1;
+                let over_cap = ring.window.len() > self.capacity;
+                let over_bytes = ring.window_bytes > target && ring.window.len() > 1;
                 if !over_cap && !over_bytes {
                     break;
                 }
-                let victim_seq = st.base_seq;
-                let wanted = st.cursors.values().any(|&c| c <= victim_seq);
+                let victim_seq = ring.base_seq;
+                let wanted = min_cursor.is_some_and(|m| m <= victim_seq);
                 if !over_cap && wanted && target < self.byte_budget {
                     // Adaptive window: a registered cursor still wants
                     // the victim and the target has headroom under the
@@ -550,15 +667,16 @@ impl SlidingCache {
                     self.target_gauge.set(next as i64);
                     continue;
                 }
-                let Some(old) = st.window.pop_front() else { break };
+                let Some(old) = ring.window.pop_front() else { break };
                 self.spill_evicted(victim_seq, &old, wanted);
-                st.window_bytes -= old.len();
-                st.base_seq += 1;
-                st.evictions += 1;
+                ring.window_bytes -= old.len();
+                ring.base_seq += 1;
+                self.evictions.fetch_add(1, Ordering::SeqCst);
             }
         }
-        self.win_elems_gauge.set(st.window.len() as i64);
-        self.win_bytes_gauge.set(st.window_bytes as i64);
+        self.win_elems_gauge.set(ring.window.len() as i64);
+        self.win_bytes_gauge.set(ring.window_bytes as i64);
+        drop(ring);
         self.cond.notify_all();
         consumers
     }
@@ -566,37 +684,40 @@ impl SlidingCache {
     /// Occupancy snapshot for backpressure hints: elements still unread
     /// by `client`'s cursor, plus total window occupancy.
     fn occupancy(&self, client: u64) -> (usize, usize, usize) {
-        let st = self.state.lock().unwrap();
-        let unread = match st.cursors.get(&client) {
-            Some(&cursor) => {
-                let idx = cursor.saturating_sub(st.base_seq) as usize;
-                st.window.len().saturating_sub(idx)
+        let cursor = self.shard(client).lock().unwrap().cursors.get(&client).copied();
+        let ring = self.ring.read().unwrap();
+        let unread = match cursor {
+            Some(cursor) => {
+                let idx = cursor.saturating_sub(ring.base_seq) as usize;
+                ring.window.len().saturating_sub(idx)
             }
-            None => st.window.len(),
+            None => ring.window.len(),
         };
-        (unread, st.window.len(), st.window_bytes)
+        (unread, ring.window.len(), ring.window_bytes)
     }
 
-    /// Batched variant of [`SlidingCache::serve`]: advance `client`'s
-    /// cursor through up to `max_elements` / `max_bytes` of retained
-    /// window in a single lock acquisition. Always returns at least one
-    /// element if any is visible to the cursor, even when it alone
-    /// exceeds the soft byte budget — *unless* it also exceeds
-    /// `hard_cap` (the response-frame ceiling), in which case the
-    /// outcome depends on `chunk_oversized`: the element is handed to
-    /// the caller for continuation-frame delivery (cursor advanced), or
-    /// reported [`BatchServe::TooLarge`] with the cursor untouched.
+    /// Advance `client`'s cursor through up to `max_elements` /
+    /// `max_bytes` of retained window holding only the client's cursor
+    /// shard plus a shared ring *read* lock — distinct sessions serve
+    /// concurrently. Always returns at least one element if any is
+    /// visible to the cursor, even when it alone exceeds the soft byte
+    /// budget — *unless* it also exceeds `hard_cap` (the response-frame
+    /// ceiling), in which case the outcome depends on `chunk_oversized`:
+    /// the element is handed to the caller for continuation-frame
+    /// delivery (cursor advanced), or reported [`BatchServe::TooLarge`]
+    /// with the cursor untouched. Laggard skips are counted by the clamp
+    /// at the top of the serve.
     ///
-    /// The end-of-sequence verdict is decided inside the critical
-    /// section: producer finished (`eos`), cursor consumed the whole
+    /// The end-of-sequence verdict is decided while the ring read lock
+    /// is held: producer finished (`eos`), cursor consumed the whole
     /// window, *and* `in_flight` is zero. The last condition is what
     /// makes the verdict safe under sharing: a concurrent handler that
     /// popped the producer channel keeps `in_flight` non-zero until its
-    /// `push_encoded` (which serializes with this lock) completes, so a
-    /// true verdict can never race past an unpublished element. Once
-    /// `eos` is set no new increments happen, so a zero reading inside
-    /// the lock is terminal. (Laggard skips are counted by
-    /// [`SlidingCache::clamp_cursor`].)
+    /// `push_encoded` — whose ring *write* lock excludes this read —
+    /// completes, so a zero reading here means the publish is visible
+    /// and a true verdict can never race past an unpublished element.
+    /// Once `eos` is set no new increments happen, so a zero reading
+    /// under the read lock is terminal.
     fn serve_batch(
         &self,
         client: u64,
@@ -606,31 +727,45 @@ impl SlidingCache {
         chunk_oversized: bool,
         in_flight: &AtomicU64,
     ) -> BatchServe {
-        let mut st = self.state.lock().unwrap();
-        if st.removed.contains(&client) {
+        let mut sh = self.shard(client).lock().unwrap();
+        if sh.removed.contains(&client) {
             // Straggler RPC from a released consumer: its stream is over.
             return BatchServe::Batch(Vec::new(), true);
         }
+        let ring = self.ring.read().unwrap();
+        let base = ring.base_seq;
+        let prev = match sh.cursors.get(&client).copied() {
+            Some(c) => c,
+            None => {
+                let anchor = self.replay_anchor(base);
+                sh.cursors.insert(client, anchor);
+                self.note_new_cursor(anchor);
+                anchor
+            }
+        };
         // A below-window cursor replays from the spill tier (outside
-        // this lock) before clamping can count the range as skipped.
+        // every cache lock) before clamping can count the range skipped.
         if let Some(sp) = &self.spill {
-            let base = st.base_seq;
-            let anchor = self.replay_anchor(base);
-            let cursor = *st.cursors.entry(client).or_insert(anchor);
-            if cursor < base && sp.may_cover(cursor) {
-                return BatchServe::Spill { from: cursor, to: base };
+            if prev < base && sp.may_cover(prev) {
+                return BatchServe::Spill { from: prev, to: base };
             }
         }
-        let mut cursor = self.clamp_cursor(&mut st, client);
-        let base = st.base_seq;
+        let mut cursor = prev;
+        if cursor < base {
+            // Evicted range skipped (relaxed visitation escape hatch).
+            self.skipped.fetch_add(base - cursor, Ordering::SeqCst);
+            self.skip_ctr.add(base - cursor);
+            sh.cursors.insert(client, base);
+            cursor = base;
+        }
         let mut out = Vec::new();
         let mut bytes = 0usize;
         while out.len() < max_elements {
             let idx = (cursor - base) as usize;
-            if idx >= st.window.len() {
+            if idx >= ring.window.len() {
                 break;
             }
-            let e = st.window[idx].clone(); // Arc bump, no copy
+            let e = ring.window[idx].clone(); // Arc bump, no copy
             if e.len() > hard_cap {
                 // A single element no response frame can carry.
                 if !out.is_empty() {
@@ -640,11 +775,21 @@ impl SlidingCache {
                     break;
                 }
                 if !chunk_oversized {
+                    // The cursor stays put, but the clamp above may have
+                    // raised it off an evicted range without a trim: mark
+                    // the watermark unknown so the next operation
+                    // recomputes it (the single-lock code likewise left
+                    // the trim to the next call on this path).
+                    drop(ring);
+                    drop(sh);
+                    self.min_hint.store(u64::MAX, Ordering::SeqCst);
                     return BatchServe::TooLarge(e.len());
                 }
-                st.cursors.insert(client, cursor + 1);
-                st.hits += 1;
-                self.trim_consumed(&mut st);
+                sh.cursors.insert(client, cursor + 1);
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                drop(ring);
+                drop(sh);
+                self.maybe_trim(prev);
                 return BatchServe::Oversized(e);
             }
             if !out.is_empty() && bytes + e.len() > max_bytes {
@@ -652,19 +797,24 @@ impl SlidingCache {
             }
             bytes += e.len();
             cursor += 1;
-            st.hits += 1;
             out.push(e);
         }
-        st.cursors.insert(client, cursor);
-        let drained = (cursor - base) as usize >= st.window.len();
-        let end = st.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
-        self.trim_consumed(&mut st);
+        self.hits.fetch_add(out.len() as u64, Ordering::SeqCst);
+        sh.cursors.insert(client, cursor);
+        let drained = (cursor - base) as usize >= ring.window.len();
+        let end = ring.eos && drained && in_flight.load(Ordering::SeqCst) == 0;
+        drop(ring);
+        drop(sh);
+        self.maybe_trim(prev);
         BatchServe::Batch(out, end)
     }
 
     fn set_eos(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.eos = true;
+        self.ring.write().unwrap().eos = true;
+        // Touch the meta lock before notifying so a reader that just
+        // checked its predicate and is entering `wait_for_publish`
+        // cannot miss the wakeup.
+        drop(self.meta.lock().unwrap());
         self.cond.notify_all();
     }
 
@@ -674,20 +824,20 @@ impl SlidingCache {
     /// popped-but-unpublished elements ([`SlidingCache::push_encoded`]
     /// notifies this condvar).
     fn wait_for_publish(&self, timeout: Duration) {
-        let st = self.state.lock().unwrap();
-        let _ = self.cond.wait_timeout(st, timeout).unwrap();
+        let guard = self.meta.lock().unwrap();
+        let _ = self.cond.wait_timeout(guard, timeout).unwrap();
     }
 
     fn stats(&self) -> CacheStats {
-        let st = self.state.lock().unwrap();
+        let ring = self.ring.read().unwrap();
         CacheStats {
-            hits: st.hits,
-            evictions: st.evictions,
-            produced: st.produced,
-            window: st.window.len(),
-            window_bytes: st.window_bytes,
-            shared_produced: st.shared_produced,
-            skipped: st.skipped,
+            hits: self.hits.load(Ordering::SeqCst),
+            evictions: self.evictions.load(Ordering::SeqCst),
+            produced: self.produced.load(Ordering::SeqCst),
+            window: ring.window.len(),
+            window_bytes: ring.window_bytes,
+            shared_produced: self.shared_produced.load(Ordering::SeqCst),
+            skipped: self.skipped.load(Ordering::SeqCst),
         }
     }
 }
@@ -1398,6 +1548,11 @@ struct WorkerShared {
     revoke_acks: Mutex<Vec<LeaseRevoke>>,
     /// Recycled encode buffers for GetElements/Fetch frame assembly.
     frame_bufs: BufPool,
+    /// Observed-ratio compression chooser for batch response frames
+    /// (shared across tasks: the shape classes are payload-size buckets,
+    /// so one task's probe verdicts carry to the next task of the same
+    /// pipeline). See [`crate::wire::AdaptiveCodec`].
+    codec: crate::wire::AdaptiveCodec,
 }
 
 /// A running worker: data server + heartbeat loop.
@@ -1426,6 +1581,7 @@ impl Worker {
             drain_ready: AtomicBool::new(false),
             revoke_acks: Mutex::new(Vec::new()),
             frame_bufs: BufPool::new(8),
+            codec: crate::wire::AdaptiveCodec::new(),
         });
 
         let s2 = shared.clone();
@@ -2456,6 +2612,14 @@ fn get_element(shared: &Arc<WorkerShared>, req: GetElementReq) -> ServiceResult<
 /// so codec overhead amortizes across the batch. Empty frames skip the
 /// pool: taking a high-water-sized buffer for a 4-byte count would waste
 /// a large allocation per empty response. Returns `(frame, compressed)`.
+///
+/// A client asking for compression opts into the worker's observed-ratio
+/// chooser ([`crate::wire::AdaptiveCodec`]) rather than an unconditional
+/// deflate: frames whose shape class has settled on Skip ship raw at
+/// memcpy speed (`worker/codec_skips`), and a re-probe that flips a
+/// class's verdict is metered as `worker/codec_switches`. The
+/// per-response `compressed` flag keeps every decision transparent to
+/// the client.
 fn assemble_batch_frame(
     shared: &Arc<WorkerShared>,
     batch: &[Arc<Vec<u8>>],
@@ -2470,7 +2634,26 @@ fn assemble_batch_frame(
         w.put_bytes(bytes);
     }
     let raw_len = w.len();
-    let z = want_compress.then(|| crate::wire::compress(w.as_slice())).filter(|z| z.len() < raw_len);
+    let z = if want_compress {
+        match shared.codec.plan(raw_len) {
+            crate::wire::CodecAction::Trial => {
+                let z = crate::wire::compress(w.as_slice());
+                if shared.codec.record_trial(raw_len, z.len()) {
+                    shared.metrics.counter("worker/codec_switches").inc();
+                }
+                Some(z).filter(|z| z.len() < raw_len)
+            }
+            crate::wire::CodecAction::Compress => {
+                Some(crate::wire::compress(w.as_slice())).filter(|z| z.len() < raw_len)
+            }
+            crate::wire::CodecAction::Skip => {
+                shared.metrics.counter("worker/codec_skips").inc();
+                None
+            }
+        }
+    } else {
+        None
+    };
     match z {
         Some(z) => {
             shared.metrics.counter("worker/compression_bytes_saved").add((raw_len - z.len()) as u64);
@@ -3698,5 +3881,441 @@ mod tests {
             }
             assert_eq!(skips_of(&m), 0, "seed {seed}: no relaxed skips under All");
         }
+    }
+
+    use crate::util::rng::Rng;
+
+    /// Single-lock reference model of the sliding cache: the pre-sharding
+    /// implementation (one big critical section around cursors + window +
+    /// ledgers), including the adaptive byte-target state machine. The
+    /// differential tests below replay one recorded schedule against this
+    /// model and against the sharded implementation and demand identical
+    /// deliveries, EOS verdicts, and ledger totals.
+    #[derive(Default)]
+    struct RefCache {
+        capacity: usize,
+        byte_budget: usize,
+        eager: bool,
+        target_bytes: usize,
+        window: VecDeque<Arc<Vec<u8>>>,
+        window_bytes: usize,
+        base_seq: u64,
+        eos: bool,
+        cursors: HashMap<u64, u64>,
+        removed: std::collections::HashSet<u64>,
+        hits: u64,
+        evictions: u64,
+        produced: u64,
+        shared_produced: u64,
+        skipped: u64,
+    }
+
+    impl RefCache {
+        fn new(capacity: usize, byte_budget: usize, eager: bool) -> RefCache {
+            let byte_budget = byte_budget.max(1);
+            RefCache {
+                capacity: capacity.max(1),
+                byte_budget,
+                eager,
+                target_bytes: (byte_budget / 16).max(1),
+                ..Default::default()
+            }
+        }
+
+        fn min_cursor(&self) -> Option<u64> {
+            self.cursors.values().copied().min()
+        }
+
+        fn register(&mut self, client: u64) {
+            if self.removed.contains(&client) || self.cursors.contains_key(&client) {
+                return;
+            }
+            self.cursors.insert(client, self.base_seq);
+        }
+
+        fn remove(&mut self, client: u64) {
+            self.removed.insert(client);
+            self.cursors.remove(&client);
+            self.trim();
+        }
+
+        fn push_encoded(&mut self, encoded: &[Arc<Vec<u8>>]) {
+            if encoded.is_empty() {
+                return;
+            }
+            if self.cursors.len() >= 2 {
+                self.shared_produced += encoded.len() as u64;
+            }
+            self.produced += encoded.len() as u64;
+            let min_cursor = self.min_cursor();
+            for bytes in encoded {
+                self.window_bytes += bytes.len();
+                self.window.push_back(bytes.clone());
+                loop {
+                    let over_cap = self.window.len() > self.capacity;
+                    let over_bytes =
+                        self.window_bytes > self.target_bytes && self.window.len() > 1;
+                    if !over_cap && !over_bytes {
+                        break;
+                    }
+                    let wanted = min_cursor.is_some_and(|m| m <= self.base_seq);
+                    if !over_cap && wanted && self.target_bytes < self.byte_budget {
+                        self.target_bytes =
+                            self.target_bytes.saturating_mul(2).min(self.byte_budget);
+                        continue;
+                    }
+                    let Some(old) = self.window.pop_front() else { break };
+                    self.window_bytes -= old.len();
+                    self.base_seq += 1;
+                    self.evictions += 1;
+                }
+            }
+        }
+
+        /// Consumed-by-all eviction plus idle target decay. The sharded
+        /// implementation gates this behind the `min_hint` watermark;
+        /// unconditional re-trimming is sequentially equivalent because a
+        /// trim below an unchanged minimum is a no-op.
+        fn trim(&mut self) {
+            let Some(min) = self.min_cursor() else { return };
+            if !self.eager || self.base_seq >= min || self.window.is_empty() {
+                return;
+            }
+            while self.base_seq < min && !self.window.is_empty() {
+                let old = self.window.pop_front().expect("non-empty window");
+                self.window_bytes -= old.len();
+                self.base_seq += 1;
+                self.evictions += 1;
+            }
+            if self.window.is_empty() {
+                let floor = (self.byte_budget / 16).max(1);
+                if self.target_bytes > floor {
+                    self.target_bytes = (self.target_bytes - self.target_bytes / 4).max(floor);
+                }
+            }
+        }
+
+        fn serve_batch(&mut self, client: u64, max_elements: usize) -> (Vec<Arc<Vec<u8>>>, bool) {
+            if self.removed.contains(&client) {
+                return (Vec::new(), true);
+            }
+            let base = self.base_seq;
+            let mut cursor = *self.cursors.entry(client).or_insert(base);
+            if cursor < base {
+                self.skipped += base - cursor;
+                cursor = base;
+            }
+            let mut out = Vec::new();
+            while out.len() < max_elements {
+                let idx = (cursor - base) as usize;
+                if idx >= self.window.len() {
+                    break;
+                }
+                out.push(self.window[idx].clone());
+                cursor += 1;
+            }
+            self.hits += out.len() as u64;
+            self.cursors.insert(client, cursor);
+            let drained = (cursor - base) as usize >= self.window.len();
+            let end = self.eos && drained;
+            self.trim();
+            (out, end)
+        }
+    }
+
+    /// One step of a recorded cache schedule. `Push`/`Register`/`Remove`/
+    /// `Eos` belong to the producer/control thread, `Serve` to the owning
+    /// consumer thread.
+    #[derive(Clone)]
+    enum DiffOp {
+        Push(Vec<Arc<Vec<u8>>>),
+        Register(u64),
+        Remove(u64),
+        Serve { client: u64, max: usize },
+        Eos,
+    }
+
+    /// Seeds for the differential battery: two fixed plus the CI fault
+    /// seed (the 3-seed matrix reruns this suite under fresh schedules).
+    fn diff_seeds() -> [u64; 3] {
+        let env = std::env::var("TFDATASVC_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20260728);
+        [17, 42, env]
+    }
+
+    fn gen_diff_schedule(rng: &mut Rng, clients: &[u64], ops: usize) -> Vec<DiffOp> {
+        let mut sched = Vec::with_capacity(ops + clients.len() + 1);
+        let mut next = 0i32;
+        for _ in 0..ops {
+            match rng.below(10) {
+                0..=3 => {
+                    let n = 1 + rng.below(4);
+                    let batch = (0..n)
+                        .map(|_| {
+                            let v = next;
+                            next += 1;
+                            Arc::new(elem(v).to_bytes())
+                        })
+                        .collect();
+                    sched.push(DiffOp::Push(batch));
+                }
+                4 => sched.push(DiffOp::Register(*rng.choice(clients))),
+                5 if rng.below(4) == 0 => sched.push(DiffOp::Remove(*rng.choice(clients))),
+                _ => sched.push(DiffOp::Serve {
+                    client: *rng.choice(clients),
+                    max: 1 + rng.below_usize(6),
+                }),
+            }
+        }
+        sched.push(DiffOp::Eos);
+        // Drain serves so every surviving cursor reaches an EOS verdict.
+        for &c in clients {
+            sched.push(DiffOp::Serve { client: c, max: usize::MAX });
+        }
+        sched
+    }
+
+    fn decode_vals(batch: &[Arc<Vec<u8>>]) -> Vec<i32> {
+        batch
+            .iter()
+            .map(|b| Element::from_bytes(b).unwrap().tensors[0].as_i32()[0])
+            .collect()
+    }
+
+    /// Tentpole lock-in: replay a recorded schedule (a) sequentially
+    /// against the single-lock reference model and (b) across real
+    /// threads against the sharded cache, with a turnstile (a shared op
+    /// index each thread spins on) forcing the exact recorded order. Per
+    /// the shard rewrite's sequential-equivalence argument, every serve's
+    /// delivered elements, every EOS verdict, and every ledger total
+    /// (hits / evictions / skips / shared) must match the reference —
+    /// any divergence in cursor clamping, eager-trim gating, or the
+    /// adaptive byte target shows up as a transcript mismatch here.
+    #[test]
+    fn serve_batch_differential_matches_single_lock_reference() {
+        let sz = elem(0).to_bytes().len();
+        // (capacity, byte_budget, eager): plain bounded window, eager
+        // consumed-by-all eviction, and a tight byte budget that drives
+        // the adaptive target through grow + decay.
+        let configs = [(8usize, usize::MAX, false), (8, usize::MAX, true), (100, 6 * sz, true)];
+        let clients: Vec<u64> = vec![1, 2, 3, 4, 5];
+        for seed in diff_seeds() {
+            for &(cap, budget, eager) in &configs {
+                let mut rng = Rng::new(0xD1FF_0000 ^ seed ^ (cap as u64) ^ (budget as u64));
+                let sched = gen_diff_schedule(&mut rng, &clients, 600);
+
+                // (a) Sequential replay against the reference model.
+                let mut reference = RefCache::new(cap, budget, eager);
+                let mut want: Vec<(usize, Vec<i32>, bool)> = Vec::new();
+                for (idx, op) in sched.iter().enumerate() {
+                    match op {
+                        DiffOp::Push(batch) => reference.push_encoded(batch),
+                        DiffOp::Register(c) => reference.register(*c),
+                        DiffOp::Remove(c) => {
+                            reference.remove(*c);
+                        }
+                        DiffOp::Serve { client, max } => {
+                            let (batch, end) = reference.serve_batch(*client, *max);
+                            want.push((idx, decode_vals(&batch), end));
+                        }
+                        DiffOp::Eos => reference.eos = true,
+                    }
+                }
+
+                // (b) Turnstile replay against the sharded cache: thread 0
+                // owns production/control ops, consumer threads own the
+                // serves for their clients — same global order, but every
+                // hand-off crosses a real thread boundary.
+                let m = Registry::new();
+                let c = SlidingCache::new(cap, budget, eager, 0, None, &m);
+                let quiet = AtomicU64::new(0);
+                let turnstile = AtomicUsize::new(0);
+                let n_serve_threads = 3usize;
+                let owner = |op: &DiffOp| -> usize {
+                    match op {
+                        DiffOp::Serve { client, .. } => 1 + (*client as usize % n_serve_threads),
+                        _ => 0,
+                    }
+                };
+                let mut got: Vec<(usize, Vec<i32>, bool)> = Vec::new();
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for t in 0..=n_serve_threads {
+                        let my_ops: Vec<(usize, DiffOp)> = sched
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, op)| owner(op) == t)
+                            .map(|(i, op)| (i, op.clone()))
+                            .collect();
+                        let (c, quiet, turnstile) = (&c, &quiet, &turnstile);
+                        handles.push(s.spawn(move || {
+                            let mut serves = Vec::new();
+                            for (idx, op) in my_ops {
+                                while turnstile.load(Ordering::Acquire) != idx {
+                                    std::thread::yield_now();
+                                }
+                                match op {
+                                    DiffOp::Push(batch) => {
+                                        c.push_encoded(batch);
+                                    }
+                                    DiffOp::Register(cl) => {
+                                        c.register_consumer(cl);
+                                    }
+                                    DiffOp::Remove(cl) => {
+                                        c.remove_consumer(cl);
+                                    }
+                                    DiffOp::Serve { client, max } => {
+                                        let (batch, end) = match c.serve_batch(
+                                            client,
+                                            max,
+                                            usize::MAX,
+                                            usize::MAX,
+                                            false,
+                                            quiet,
+                                        ) {
+                                            BatchServe::Batch(b, e) => (b, e),
+                                            _ => panic!("no spill/oversize in this schedule"),
+                                        };
+                                        serves.push((idx, decode_vals(&batch), end));
+                                    }
+                                    DiffOp::Eos => c.set_eos(),
+                                }
+                                turnstile.store(idx + 1, Ordering::Release);
+                            }
+                            serves
+                        }));
+                    }
+                    for h in handles {
+                        got.extend(h.join().expect("replay thread"));
+                    }
+                });
+                got.sort_by_key(|(idx, _, _)| *idx);
+
+                let tag = format!("seed {seed} cap {cap} budget {budget} eager {eager}");
+                assert_eq!(got, want, "serve transcript diverged: {tag}");
+                let s = c.stats();
+                assert_eq!(s.hits, reference.hits, "hits: {tag}");
+                assert_eq!(s.evictions, reference.evictions, "evictions: {tag}");
+                assert_eq!(s.produced, reference.produced, "produced: {tag}");
+                assert_eq!(s.skipped, reference.skipped, "skips: {tag}");
+                assert_eq!(
+                    s.shared_produced, reference.shared_produced,
+                    "shared ledger: {tag}"
+                );
+                assert_eq!(s.window, reference.window.len(), "window: {tag}");
+                assert_eq!(s.window_bytes, reference.window_bytes, "window bytes: {tag}");
+                assert_eq!(skips_of(&m), reference.skipped, "registry skips: {tag}");
+            }
+        }
+    }
+
+    /// Unsynchronized counterpart of the turnstile test: one producer and
+    /// four consumers hammer the sharded cache with no schedule at all,
+    /// then the accounting invariants are checked.
+    ///
+    /// Phase 1 (lossless config: capacity covers the epoch, eager): every
+    /// consumer must see the full stream exactly once, in order, with
+    /// zero relaxed-visitation skips. Phase 2 (tiny bounded window,
+    /// laggard consumers): deliveries stay strictly increasing per
+    /// consumer (no duplicate, no reorder) and every cursor unit is
+    /// accounted as exactly one hit or one skip:
+    /// `hits + skipped == consumers * produced`.
+    #[test]
+    fn serve_batch_chaos_preserves_exactly_once_and_ledgers() {
+        let total = 400i32;
+        let consumers = 4u64;
+        let run = |capacity: usize, eager: bool, lag: bool| -> (Vec<Vec<i32>>, CacheStats, Registry) {
+            let m = Registry::new();
+            let c = SlidingCache::new(capacity, usize::MAX, eager, 0, None, &m);
+            for cl in 1..=consumers {
+                c.register_consumer(cl);
+            }
+            let quiet = AtomicU64::new(0);
+            let mut per_client: Vec<Vec<i32>> = Vec::new();
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let mut rng = Rng::new(0xCAFE ^ capacity as u64);
+                    let mut next = 0i32;
+                    while next < total {
+                        let n = (1 + rng.below(8) as i32).min(total - next);
+                        let batch = (0..n)
+                            .map(|i| Arc::new(elem(next + i).to_bytes()))
+                            .collect();
+                        next += n;
+                        c.push_encoded(batch);
+                        if rng.below(4) == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    c.set_eos();
+                });
+                let handles: Vec<_> = (1..=consumers)
+                    .map(|cl| {
+                        let (c, quiet) = (&c, &quiet);
+                        s.spawn(move || {
+                            let mut rng = Rng::new(0xFEED ^ cl);
+                            let mut got = Vec::new();
+                            loop {
+                                let want = 1 + rng.below_usize(7);
+                                match c.serve_batch(cl, want, usize::MAX, usize::MAX, false, quiet)
+                                {
+                                    BatchServe::Batch(batch, end) => {
+                                        for b in &batch {
+                                            got.push(
+                                                Element::from_bytes(b).unwrap().tensors[0]
+                                                    .as_i32()[0],
+                                            );
+                                        }
+                                        if end {
+                                            break;
+                                        }
+                                        if batch.is_empty() {
+                                            c.wait_for_publish(Duration::from_millis(1));
+                                        }
+                                    }
+                                    _ => panic!("no spill/oversize in this run"),
+                                }
+                                if lag && rng.below(8) == 0 {
+                                    std::thread::sleep(Duration::from_micros(rng.below(200)));
+                                }
+                            }
+                            got
+                        })
+                    })
+                    .collect();
+                per_client = handles.into_iter().map(|h| h.join().expect("consumer")).collect();
+            });
+            let stats = c.stats();
+            (per_client, stats, m)
+        };
+
+        // Phase 1: nothing can be evicted from under a cursor.
+        let (per, s, m) = run(total as usize + 1, true, false);
+        let want: Vec<i32> = (0..total).collect();
+        for (i, got) in per.iter().enumerate() {
+            assert_eq!(got, &want, "consumer {i} must see the epoch exactly once");
+        }
+        assert_eq!(s.produced, total as u64);
+        assert_eq!(s.hits, consumers * total as u64);
+        assert_eq!(s.skipped, 0);
+        assert_eq!(skips_of(&m), 0);
+
+        // Phase 2: tiny window forces relaxed-visitation skips; the
+        // hit/skip split must still account for every cursor step.
+        let (per, s, m) = run(4, false, true);
+        for (i, got) in per.iter().enumerate() {
+            assert!(
+                got.windows(2).all(|w| w[0] < w[1]),
+                "consumer {i}: deliveries must be strictly increasing (exactly-once)"
+            );
+        }
+        let delivered: u64 = per.iter().map(|v| v.len() as u64).sum();
+        assert_eq!(s.produced, total as u64);
+        assert_eq!(s.hits, delivered);
+        assert_eq!(s.skipped, consumers * total as u64 - delivered);
+        assert_eq!(skips_of(&m), s.skipped);
+        assert_eq!(s.evictions as usize + s.window, total as usize);
     }
 }

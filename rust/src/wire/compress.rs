@@ -18,6 +18,8 @@
 //! makes constant-filled tensors collapse to a few tokens.
 
 use super::{WireError, WireResult};
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Shortest match worth a 5-byte token.
 const MIN_MATCH: usize = 6;
@@ -146,6 +148,184 @@ pub fn decompress(bytes: &[u8]) -> WireResult<Vec<u8>> {
     Ok(out)
 }
 
+/// Payloads below this never win: literal-token framing plus the 4-byte
+/// raw-length header eats any plausible saving, so the chooser sends
+/// them raw without spending a trial compression.
+pub const CODEC_MIN_LEN: usize = 64;
+
+/// What [`AdaptiveCodec::plan`] tells the caller to do with a payload.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CodecAction {
+    /// Probe: compress this payload and report the observed ratio via
+    /// [`AdaptiveCodec::record_trial`] (the caller keeps the compressed
+    /// bytes if they won — a trial is never wasted work).
+    Trial,
+    /// Sticky decision for this shape class: compress.
+    Compress,
+    /// Sticky decision for this shape class: send raw.
+    Skip,
+}
+
+/// Per-shape-class chooser state. `decision` is the sticky verdict
+/// (`None` while the probe window is still open).
+#[derive(Default)]
+struct ClassState {
+    probes_left: u32,
+    /// Trials in the current probe window whose compressed output beat
+    /// the worthwhile threshold.
+    wins: u32,
+    /// `Some(true)` = compress, `Some(false)` = skip.
+    decision: Option<bool>,
+    /// Payloads served since the class settled (re-probe clock).
+    uses: u64,
+}
+
+/// Observed-ratio compression chooser (ROADMAP raw-speed item: "skip/LZ
+/// chosen by observed ratio, not config").
+///
+/// The wire codec used to be config-frozen: a client asking for
+/// `Deflate` bought a trial compression of *every* response frame, and
+/// incompressible tensors (random augmentation output, already-encoded
+/// images) paid the full LZ pass just to discover the raw bytes were
+/// smaller. The chooser amortizes that discovery per **element-shape
+/// class** (payload size bucketed by power of two — batches of one
+/// pipeline shape land in one bucket, a mid-stream shape change lands
+/// in a fresh one):
+///
+/// ```text
+///            plan() == Trial                 plan() == Compress/Skip
+///   [probing: probes_left > 0] --settle--> [settled: sticky decision]
+///            ^     record_trial majority        |
+///            |                                  | every reprobe_every
+///            +-------- fresh class              v uses: one Trial
+///                                        [re-probe sample] --flip?-->
+///                                          switched (counted)
+/// ```
+///
+/// * **Probe phase** — the first `probe_samples` payloads of a class are
+///   trial-compressed (the caller still ships the winner, so probing
+///   costs nothing extra over the old behavior). A majority of
+///   worthwhile ratios settles the class on LZ, otherwise on Skip.
+/// * **Sticky phase** — settled classes answer `plan` without touching
+///   the codec: a Skip class serves raw bytes at memcpy speed.
+/// * **Re-probe** — every `reprobe_every` settled uses, one payload is
+///   trial-compressed again so content drift (same shape, new
+///   compressibility) flips the decision; flips are reported so the
+///   worker can meter `worker/codec_switches`.
+///
+/// Decisions only pick which bytes ride the wire; the per-response
+/// `compressed` flag keeps every mix of decisions byte-identical after
+/// decode.
+pub struct AdaptiveCodec {
+    classes: Mutex<HashMap<u32, ClassState>>,
+    probe_samples: u32,
+    reprobe_every: u64,
+}
+
+impl Default for AdaptiveCodec {
+    fn default() -> Self {
+        AdaptiveCodec::new()
+    }
+}
+
+impl AdaptiveCodec {
+    pub fn new() -> AdaptiveCodec {
+        AdaptiveCodec::with_config(4, 512)
+    }
+
+    /// `probe_samples`: trials before a fresh class settles.
+    /// `reprobe_every`: settled uses between single-sample re-probes.
+    pub fn with_config(probe_samples: u32, reprobe_every: u64) -> AdaptiveCodec {
+        AdaptiveCodec {
+            classes: Mutex::new(HashMap::new()),
+            probe_samples: probe_samples.max(1),
+            reprobe_every: reprobe_every.max(1),
+        }
+    }
+
+    /// Shape class of a payload: size bucketed by power of two. Batches
+    /// of one element shape produce near-identical frame sizes, so they
+    /// share a bucket; a mid-stream shape change moves to a fresh bucket
+    /// and re-enters the probe phase.
+    fn class_of(len: usize) -> u32 {
+        usize::BITS - (len | 1).leading_zeros()
+    }
+
+    /// A trial is worthwhile when compression saves at least 10% — below
+    /// that the decode cost on the client outweighs the wire saving.
+    fn worthwhile(raw_len: usize, compressed_len: usize) -> bool {
+        compressed_len.saturating_mul(10) <= raw_len.saturating_mul(9)
+    }
+
+    /// Decide what to do with a payload of `len` bytes.
+    pub fn plan(&self, len: usize) -> CodecAction {
+        if len < CODEC_MIN_LEN {
+            return CodecAction::Skip;
+        }
+        let mut classes = self.classes.lock().unwrap();
+        let st = classes.entry(Self::class_of(len)).or_insert_with(|| ClassState {
+            probes_left: self.probe_samples,
+            ..Default::default()
+        });
+        match st.decision {
+            None => CodecAction::Trial,
+            Some(d) => {
+                st.uses += 1;
+                if st.uses >= self.reprobe_every {
+                    st.uses = 0;
+                    CodecAction::Trial
+                } else if d {
+                    CodecAction::Compress
+                } else {
+                    CodecAction::Skip
+                }
+            }
+        }
+    }
+
+    /// Report a trial compression's outcome. Returns `true` when the
+    /// class's sticky decision *flipped* (re-probe detected content
+    /// drift) — the caller meters switches; the initial settle of a
+    /// fresh class is not a switch.
+    pub fn record_trial(&self, raw_len: usize, compressed_len: usize) -> bool {
+        let worthwhile = Self::worthwhile(raw_len, compressed_len);
+        let mut classes = self.classes.lock().unwrap();
+        let st = classes.entry(Self::class_of(raw_len)).or_insert_with(|| ClassState {
+            probes_left: self.probe_samples,
+            ..Default::default()
+        });
+        match st.decision {
+            None => {
+                if worthwhile {
+                    st.wins += 1;
+                }
+                st.probes_left = st.probes_left.saturating_sub(1);
+                if st.probes_left == 0 {
+                    st.decision = Some(st.wins * 2 >= self.probe_samples);
+                    st.wins = 0;
+                    st.uses = 0;
+                }
+                false
+            }
+            Some(prev) => {
+                st.wins = 0;
+                st.uses = 0;
+                if worthwhile != prev {
+                    st.decision = Some(worthwhile);
+                    return true;
+                }
+                false
+            }
+        }
+    }
+
+    /// Settled decision for a payload length (`Some(true)` = compress),
+    /// `None` while its class is still probing. Test/bench hook.
+    pub fn decision_for_len(&self, len: usize) -> Option<bool> {
+        self.classes.lock().unwrap().get(&Self::class_of(len)).and_then(|st| st.decision)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +370,155 @@ mod tests {
         let z = compress(&data);
         assert!(z.len() < data.len() + data.len() / 100 + 64);
         assert_eq!(decompress(&z).unwrap(), data);
+    }
+
+    /// Pseudo-random bytes the LZ pass cannot shrink.
+    fn incompressible(n: usize, seed: u32) -> Vec<u8> {
+        (0..n as u32)
+            .map(|i| {
+                let x = i
+                    .wrapping_mul(0x9E37_79B9)
+                    .rotate_left(11)
+                    .wrapping_add(i)
+                    .wrapping_add(seed.wrapping_mul(0x85EB_CA6B));
+                (x ^ (x >> 7)) as u8
+            })
+            .collect()
+    }
+
+    /// Repetitive text the LZ pass shrinks hard.
+    fn compressible(n: usize) -> Vec<u8> {
+        b"the quick brown fox jumps over the lazy dog; "
+            .iter()
+            .cycle()
+            .take(n)
+            .copied()
+            .collect()
+    }
+
+    /// Drive one payload through the chooser exactly like the worker
+    /// does, returning the bytes that would ride the wire.
+    fn drive(codec: &AdaptiveCodec, data: &[u8]) -> (Vec<u8>, bool, bool) {
+        match codec.plan(data.len()) {
+            CodecAction::Trial => {
+                let z = compress(data);
+                let switched = codec.record_trial(data.len(), z.len());
+                if z.len() < data.len() {
+                    (z, true, switched)
+                } else {
+                    (data.to_vec(), false, switched)
+                }
+            }
+            CodecAction::Compress => {
+                let z = compress(data);
+                if z.len() < data.len() {
+                    (z, true, false)
+                } else {
+                    (data.to_vec(), false, false)
+                }
+            }
+            CodecAction::Skip => (data.to_vec(), false, false),
+        }
+    }
+
+    #[test]
+    fn incompressible_settles_on_skip_within_probe_budget() {
+        let codec = AdaptiveCodec::with_config(4, 512);
+        let data = incompressible(4096, 1);
+        for i in 0..4 {
+            assert_eq!(codec.plan(data.len()), CodecAction::Trial, "probe {i}");
+            let z = compress(&data);
+            assert!(!codec.record_trial(data.len(), z.len()), "initial settle is not a switch");
+        }
+        assert_eq!(codec.decision_for_len(data.len()), Some(false));
+        for _ in 0..16 {
+            assert_eq!(codec.plan(data.len()), CodecAction::Skip);
+        }
+    }
+
+    #[test]
+    fn compressible_settles_on_lz() {
+        let codec = AdaptiveCodec::with_config(4, 512);
+        let data = compressible(4096);
+        for _ in 0..4 {
+            assert_eq!(codec.plan(data.len()), CodecAction::Trial);
+            let z = compress(&data);
+            codec.record_trial(data.len(), z.len());
+        }
+        assert_eq!(codec.decision_for_len(data.len()), Some(true));
+        for _ in 0..16 {
+            assert_eq!(codec.plan(data.len()), CodecAction::Compress);
+        }
+    }
+
+    #[test]
+    fn shape_change_triggers_fresh_probe() {
+        let codec = AdaptiveCodec::with_config(2, 512);
+        // Settle the ~4 KiB class on Skip.
+        let small = incompressible(4096, 2);
+        for _ in 0..2 {
+            codec.plan(small.len());
+            codec.record_trial(small.len(), compress(&small).len());
+        }
+        assert_eq!(codec.decision_for_len(small.len()), Some(false));
+        // A mid-stream shape change lands in a fresh size bucket: the
+        // chooser must probe again rather than inherit the old verdict.
+        let big = compressible(64 << 10);
+        assert_eq!(codec.plan(big.len()), CodecAction::Trial);
+        codec.record_trial(big.len(), compress(&big).len());
+        assert_eq!(codec.plan(big.len()), CodecAction::Trial);
+        codec.record_trial(big.len(), compress(&big).len());
+        assert_eq!(codec.decision_for_len(big.len()), Some(true));
+        // The first class's sticky decision is untouched.
+        assert_eq!(codec.decision_for_len(small.len()), Some(false));
+        assert_eq!(codec.plan(small.len()), CodecAction::Skip);
+    }
+
+    #[test]
+    fn reprobe_flips_on_content_drift_and_counts_switch() {
+        let codec = AdaptiveCodec::with_config(2, 8);
+        let raw = incompressible(4096, 3);
+        for _ in 0..2 {
+            codec.plan(raw.len());
+            codec.record_trial(raw.len(), compress(&raw).len());
+        }
+        assert_eq!(codec.decision_for_len(raw.len()), Some(false));
+        // Seven settled uses, then the eighth triggers the re-probe.
+        for i in 0..7 {
+            assert_eq!(codec.plan(raw.len()), CodecAction::Skip, "use {i}");
+        }
+        assert_eq!(codec.plan(raw.len()), CodecAction::Trial, "re-probe slot");
+        // Same shape, new content: the stream turned compressible. The
+        // re-probe sample must flip the decision and report the switch.
+        let text = compressible(4096);
+        let z = compress(&text);
+        assert!(codec.record_trial(text.len(), z.len()), "flip reported as a switch");
+        assert_eq!(codec.decision_for_len(raw.len()), Some(true));
+        assert_eq!(codec.plan(raw.len()), CodecAction::Compress);
+    }
+
+    #[test]
+    fn tiny_payloads_skip_without_probing() {
+        let codec = AdaptiveCodec::new();
+        for _ in 0..8 {
+            assert_eq!(codec.plan(CODEC_MIN_LEN - 1), CodecAction::Skip);
+        }
+        assert_eq!(codec.decision_for_len(CODEC_MIN_LEN - 1), None, "no class state spent");
+    }
+
+    /// Byte identity across every decision the chooser can make — a
+    /// same-size stream alternating compressible and incompressible
+    /// content is the worst case (one class, flapping ratios): whatever
+    /// the chooser decides, decode must return the exact input.
+    #[test]
+    fn round_trip_identity_across_all_decisions() {
+        let codec = AdaptiveCodec::with_config(3, 4);
+        for i in 0..64usize {
+            let data = if i % 2 == 0 { compressible(4096) } else { incompressible(4096, i as u32) };
+            let (wire, compressed, _switched) = drive(&codec, &data);
+            let back = if compressed { decompress(&wire).unwrap() } else { wire };
+            assert_eq!(back, data, "iteration {i}");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ mod buf;
 pub mod compress;
 
 pub use buf::{BufPool, Reader, Writer};
-pub use compress::{compress, decompress};
+pub use compress::{compress, decompress, AdaptiveCodec, CodecAction, CODEC_MIN_LEN};
 
 use std::io;
 

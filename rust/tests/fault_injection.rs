@@ -28,6 +28,9 @@ use tfdatasvc::service::spill::{data_key, manifest_key, SpillConfig, SpillPolicy
 use tfdatasvc::service::visitation::RoundTracker;
 use tfdatasvc::service::{ServiceClient, ServiceClientConfig};
 use tfdatasvc::storage::ObjectStore;
+use tfdatasvc::util::crc32::{crc32, crc32_scalar, Hasher};
+use tfdatasvc::util::rng::Rng;
+use tfdatasvc::wire::{compress, decompress, AdaptiveCodec, CodecAction};
 
 /// Consume `n` rounds, feeding the tracker (signature constant: a single
 /// consumer only checks the exactly-once-per-slot and floor halves).
@@ -997,4 +1000,165 @@ fn corrupted_newest_snapshot_falls_back_and_keeps_jobs_routable() {
     assert_eq!(report.duplicate_deliveries, 0, "{report:?}");
     assert_eq!(report.below_floor_deliveries, 0, "{report:?}");
     it.release();
+}
+
+/// Seeded differential battery for the slice-by-16 CRC against the
+/// byte-at-a-time scalar oracle: random buffers, random streaming split
+/// points, and misaligned sub-slices must agree bit-for-bit. The CI seed
+/// matrix (`TFDATASVC_FAULT_SEED`) varies the buffer population, so each
+/// hygiene run exercises a different corner of the 16-lane fold.
+#[test]
+fn crc32_slice16_matches_scalar_oracle_on_seeded_buffers() {
+    let seed = fault_seed(20260728);
+    let mut rng = Rng::new(0xC12C ^ seed);
+    for round in 0..200u32 {
+        let len = rng.below(8192) as usize;
+        let mut buf = vec![0u8; len];
+        for b in buf.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let want = crc32_scalar(&buf);
+        assert_eq!(crc32(&buf), want, "one-shot mismatch (round {round}, len {len})");
+        // Streaming over random split points must match the one-shot
+        // digest no matter how the 16-byte main loop gets sliced up.
+        let mut h = Hasher::new();
+        let mut off = 0;
+        while off < len {
+            let take = (rng.below(64) as usize + 1).min(len - off);
+            h.update(&buf[off..off + take]);
+            off += take;
+        }
+        assert_eq!(h.finalize(), want, "streaming mismatch (round {round}, len {len})");
+        // Misaligned view: the accelerated path may not assume any
+        // particular start alignment for the slice it is handed.
+        if len > 4 {
+            let skip = rng.below(3) as usize + 1;
+            assert_eq!(
+                crc32(&buf[skip..]),
+                crc32_scalar(&buf[skip..]),
+                "misaligned mismatch (round {round}, len {len}, skip {skip})"
+            );
+        }
+    }
+}
+
+/// Seeded adaptive-codec decision property: interleaved compressible
+/// (zero-heavy) and incompressible (random-byte) frame classes through
+/// one codec must settle to per-class verdicts — LZ for the former, Skip
+/// for the latter — and every frame the codec does compress must
+/// round-trip losslessly through the wire codec. Mirrors exactly what
+/// `assemble_batch_frame` does with the planner's verdicts.
+#[test]
+fn adaptive_codec_settles_per_class_under_seeded_interleaving() {
+    let seed = fault_seed(20260728);
+    let mut rng = Rng::new(0xC0DE ^ seed);
+    let codec = AdaptiveCodec::new();
+    let (mut lz_frames, mut skip_plans) = (0u64, 0u64);
+    for _ in 0..256 {
+        let incompressible = rng.chance(0.5);
+        let frame = if incompressible {
+            // Random bytes, 16-32 KiB: LZ cannot reach the worthwhile bar.
+            let len = 16_384 + rng.below(16_384) as usize;
+            let mut v = vec![0u8; len];
+            for b in v.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            v
+        } else {
+            // Zero-heavy rows, 1-2 KiB (a different size class): LZ wins.
+            let len = 1024 + rng.below(1024) as usize;
+            let mut v = vec![0u8; len];
+            for b in v.iter_mut().step_by(37) {
+                *b = rng.next_u32() as u8;
+            }
+            v
+        };
+        match codec.plan(frame.len()) {
+            CodecAction::Trial => {
+                let z = compress(&frame);
+                codec.record_trial(frame.len(), z.len());
+                assert_eq!(decompress(&z).unwrap(), frame, "trial frame must round-trip");
+            }
+            CodecAction::Compress => {
+                assert!(!incompressible, "random frames must never settle on LZ");
+                let z = compress(&frame);
+                assert!(z.len() < frame.len(), "settled LZ class stopped compressing");
+                assert_eq!(decompress(&z).unwrap(), frame, "settled frame must round-trip");
+                lz_frames += 1;
+            }
+            CodecAction::Skip => {
+                assert!(incompressible, "zero-heavy frames must never settle on Skip");
+                skip_plans += 1;
+            }
+        }
+    }
+    assert!(lz_frames > 0, "compressible class never settled on Compress");
+    assert!(skip_plans > 0, "incompressible class never settled on Skip");
+    assert_eq!(codec.decision_for_len(20_000), Some(false), "16-32 KiB class verdict");
+    assert_eq!(codec.decision_for_len(1500), Some(true), "1-2 KiB class verdict");
+}
+
+/// Concurrent shared-fetch e2e over the public client API: k anonymous
+/// clients attach to one structurally-fingerprinted job (join all, then
+/// drain concurrently) against a single deep-windowed worker with eager
+/// eviction off, so no cursor can ever fall off the sliding window.
+/// Sharing must then be exactly-once per client — every client sees the
+/// complete id stream in order, with zero relaxed-visitation skips —
+/// while the pool produces the epoch exactly once (§3.5's sharded
+/// sliding cache serving k cursors from one production run).
+#[test]
+fn concurrent_shared_fetch_is_exactly_once_per_client() {
+    let cluster = Cluster::with_config(0, DispatcherConfig::default());
+    cluster.set_worker_config(|c| {
+        c.cache_window = 1 << 16;
+        c.cache_window_bytes = 256 << 20;
+        c.eager_window_eviction = false;
+    });
+    cluster.add_worker();
+
+    let total = 1024u64;
+    let graph = PipelineBuilder::source_range(total).batch(8).build();
+    let k = 4;
+    // Join all k clients first, so every attach targets the live job…
+    let iters: Vec<DistributedIter> = (0..k)
+        .map(|_| cluster.client().distribute(&graph, share_cfg()).unwrap())
+        .collect();
+    // …then drain concurrently from real threads.
+    let handles: Vec<_> = iters
+        .into_iter()
+        .map(|mut it| {
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                drain_ids(&mut it, &mut ids);
+                (ids, it.job_id(), it.attached())
+            })
+        })
+        .collect();
+    let results: Vec<(Vec<u64>, u64, bool)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let mut jobs: Vec<u64> = results.iter().map(|r| r.1).collect();
+    jobs.sort_unstable();
+    jobs.dedup();
+    assert_eq!(jobs.len(), 1, "all clients must share one fingerprinted job");
+    assert_eq!(
+        results.iter().filter(|r| r.2).count(),
+        k - 1,
+        "every client after the first must attach to the existing job"
+    );
+    let want: Vec<u64> = (0..total).collect();
+    for (i, (ids, _, _)) in results.iter().enumerate() {
+        assert_eq!(
+            ids, &want,
+            "client {i} must see the whole epoch in order, exactly once"
+        );
+    }
+    let produced = cluster
+        .with_worker(0, |w| w.metrics().counter("worker/elements_produced").get())
+        .unwrap();
+    assert_eq!(produced, total / 8, "the shared epoch is produced exactly once");
+    let skips = cluster
+        .with_worker(0, |w| w.metrics().counter("worker/relaxed_visitation_skips").get())
+        .unwrap();
+    assert_eq!(skips, 0, "nothing evicted under a deep window, so nothing skipped");
 }
